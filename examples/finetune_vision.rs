@@ -1,0 +1,62 @@
+//! Fine-tuning scenario (the Table-3 workload at laptop scale): compare
+//! every BP-optimization method on the synthetic vision task, including
+//! HOT+LoRA, and print a Table-3-shaped summary.
+//!
+//! Run: `cargo run --release --example finetune_vision -- [--steps 60]`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use hot::config::RunConfig;
+use hot::coordinator::{LoraTrainer, Trainer};
+use hot::runtime::Runtime;
+use hot::util::args::Args;
+use hot::util::timer::Table;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.usize_or("steps", 60);
+    let rt = Arc::new(Runtime::new(&args.str_or("artifacts", "artifacts"))?);
+
+    let mut table = Table::new(&["method", "final loss", "eval acc",
+                                 "steps/s"]);
+
+    for variant in ["fp", "lora", "luq", "lbp", "hot", "hot+lora"] {
+        let mut cfg = RunConfig::default();
+        cfg.preset = "small".into();
+        cfg.steps = steps;
+        cfg.lr = 1e-3;
+        cfg.warmup_steps = steps / 10 + 1;
+        cfg.eval_every = 0;
+        let (loss, acc, sps) = match variant {
+            "lora" | "hot+lora" => {
+                let key = if variant == "lora" { "lora_fp_small" }
+                          else { "lora_hotfrozen_small" };
+                let mut tr = LoraTrainer::new(rt.clone(), cfg, key)?;
+                for _ in 0..steps {
+                    tr.step_once()?;
+                }
+                (tr.metrics.smoothed_loss(8).unwrap(),
+                 tr.metrics.records.last().unwrap().acc,
+                 tr.metrics.throughput_steps_per_s())
+            }
+            v => {
+                cfg.variant = v.into();
+                cfg.calib_batches = if v == "hot" { 2 } else { 0 };
+                let mut tr = Trainer::new(rt.clone(), cfg)?;
+                tr.calibrate()?;
+                for _ in 0..steps {
+                    tr.step_once(hot::coordinator::Mode::Fused)?;
+                }
+                let (_, ea) = tr.eval(4)?;
+                (tr.metrics.smoothed_loss(8).unwrap(), ea,
+                 tr.metrics.throughput_steps_per_s())
+            }
+        };
+        table.row(&[variant.into(), format!("{loss:.4}"),
+                    format!("{acc:.4}"), format!("{sps:.2}")]);
+    }
+    table.print(&format!(
+        "fine-tuning comparison, {steps} steps (Table 3 at synthetic scale)"));
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! LQS calibration walkthrough (paper §5.2.2, Fig 6/9).
+//!
+//! Runs the calibration artifact over clean data and over data with an
+//! injected token outlier, prints the per-layer MSE statistics, the
+//! outlier rankings, and the resulting per-token/per-tensor selection.
+//!
+//! Run: `cargo run --release --example lqs_calibration`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use hot::config::RunConfig;
+use hot::coordinator::lqs::CalibReport;
+use hot::coordinator::Trainer;
+use hot::data::VisionDataset;
+use hot::runtime::Runtime;
+use hot::util::timer::Table;
+
+fn calib_with(rt: &Arc<Runtime>, tr: &Trainer, ds: &VisionDataset,
+              outlier: Option<(usize, f32)>) -> Result<CalibReport> {
+    let batch = tr.batch_size();
+    let mut per_batch = Vec::new();
+    for b in 0..2u64 {
+        let (x, y) = match outlier {
+            None => ds.batch(2, b, batch),
+            Some((tok, gain)) => ds.batch_with_outlier(2, b, batch, tok, gain),
+        };
+        let mut args = tr.params.clone();
+        args.push(x);
+        args.push(y);
+        let outs = rt.execute(&format!("calib_{}", tr.cfg.preset), &args)?;
+        per_batch.push(
+            outs.iter()
+                .map(|v| v.as_f32().map(|s| s.to_vec()))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        );
+    }
+    CalibReport::from_batches(&tr.preset.qlinears, &per_batch, 0.5)
+}
+
+fn main() -> Result<()> {
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let mut cfg = RunConfig::default();
+    cfg.preset = "small".into();
+    let tr = Trainer::new(rt.clone(), cfg)?;
+    let model = &tr.preset.model;
+    let ds = VisionDataset::new(model.seq, model.in_dim, model.n_classes, 7);
+
+    let clean = calib_with(&rt, &tr, &ds, None)?;
+    let spiky = calib_with(&rt, &tr, &ds, Some((5, 40.0)))?;
+
+    let mut t = Table::new(&["layer", "outlier(clean)", "outlier(spiky)",
+                             "mse_tensor", "mse_token", "LQS choice"]);
+    for (lc, ls) in clean.layers.iter().zip(&spiky.layers) {
+        let per_token = {
+            let rel = (ls.mse_tensor - ls.mse_token)
+                / ls.mse_tensor.max(1e-12);
+            rel >= 0.5
+        };
+        t.row(&[
+            lc.name.clone(),
+            format!("{:.2}", lc.outlier_ratio),
+            format!("{:.2}", ls.outlier_ratio),
+            format!("{:.2e}", ls.mse_tensor),
+            format!("{:.2e}", ls.mse_token),
+            if per_token { "per-token".into() } else { "per-tensor".into() },
+        ]);
+    }
+    t.print("LQS calibration: clean vs token-outlier data (Fig 6/9)");
+
+    println!("\nper-token layers, clean data : {}", clean.n_per_token());
+    println!("per-token layers, spiky data : {}", spiky.n_per_token());
+    println!("top-3 outlier layers (spiky):");
+    for (name, ratio) in spiky.outlier_ranking().into_iter().take(3) {
+        println!("  {name}: {ratio:.2}");
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Memory planner: given a zoo architecture and a device budget, find the
+//! largest feasible batch per method and print the Fig-1 style sweep —
+//! the practical "can I train this on my 24 GB card?" tool the paper's
+//! intro motivates.
+//!
+//! Run: `cargo run --release --example memory_planner -- \
+//!        [--model vit_b] [--budget-gb 24]`
+
+use anyhow::{bail, Result};
+use hot::costmodel::{breakdown, max_feasible_batch, zoo, MemMethod};
+use hot::util::args::Args;
+use hot::util::timer::Table;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.str_or("model", "vit_b");
+    let budget = args.f64_or("budget-gb", 24.0);
+    let spec = match model.as_str() {
+        "vit_b" => zoo::vit_b(),
+        "vit_s" => zoo::vit_s(),
+        "resnet50" => zoo::resnet50(),
+        "resnet18" => zoo::resnet18(),
+        "efficientformer_l7" => zoo::efficientformer_l7(),
+        "efficientformer_l1" => zoo::efficientformer_l1(),
+        m => bail!("unknown model {m}"),
+    };
+    let methods: [(&str, MemMethod); 5] = [
+        ("FP", MemMethod::Fp32),
+        ("LBP-WHT/LUQ", MemMethod::FpActivations),
+        ("LoRA", MemMethod::Lora { r_lora: 8 }),
+        ("HOT", MemMethod::Hot { rank: 8, abc: true }),
+        ("HOT+LoRA", MemMethod::HotLora { rank: 8, r_lora: 8 }),
+    ];
+    let batches = [32, 64, 128, 256, 512, 1024, 2048];
+
+    let mut t = Table::new(&["method", "b=64", "b=256", "b=1024",
+                             "max batch @ budget"]);
+    for (name, m) in methods {
+        let gb = |b: usize| format!("{:.1}", breakdown(&spec, b, m).gb());
+        let max = max_feasible_batch(&spec, &batches, m, budget)
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "none".into());
+        t.row(&[name.into(), gb(64), gb(256), gb(1024), max]);
+    }
+    t.print(&format!("{} memory (GB) vs batch — budget {budget} GB (Fig 1)",
+                     spec.name));
+
+    println!("\nparams: {:.1}M, backward MACs/sample: {:.2}G",
+             spec.params() as f64 / 1e6,
+             2.0 * spec.total_macs() as f64 / 1e9);
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: the whole three-layer stack in one page.
+//!
+//! 1. loads the AOT artifacts (python/jax/Pallas authored, `make artifacts`)
+//! 2. runs the Pallas HQ kernel demo through PJRT from rust
+//! 3. fine-tunes the `small` ViT for a handful of steps with HOT
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use hot::config::RunConfig;
+use hot::coordinator::{Mode, Trainer};
+use hot::runtime::{Runtime, Value};
+use hot::util::prng::Pcg32;
+
+fn main() -> Result<()> {
+    // --- 1. runtime + artifacts -------------------------------------------
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    println!("loaded {} artifacts", rt.manifest.artifacts.len());
+
+    // --- 2. the L1 Pallas kernel, executed from rust ----------------------
+    // kernel_hq_demo is pl.pallas_call(...) lowered into the same HLO the
+    // CPU PJRT client runs: g_x = dequant(Q4(HT(g_y)) @ Q4(HT(w))).
+    let mut rng = Pcg32::seeded(0);
+    let gy: Vec<f32> = (0..64 * 64).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..64 * 48).map(|_| rng.normal()).collect();
+    let out = rt.execute(
+        "kernel_hq_demo",
+        &[
+            Value::F32 { shape: vec![64, 64], data: gy },
+            Value::F32 { shape: vec![64, 48], data: w },
+        ],
+    )?;
+    println!("HQ kernel: g_x shape {:?}, g_x[0..4] = {:?}",
+             out[0].shape(), &out[0].as_f32()?[..4]);
+
+    // --- 3. a short HOT fine-tune -----------------------------------------
+    let mut cfg = RunConfig::default();
+    cfg.preset = "small".into();
+    cfg.variant = "hot".into();
+    cfg.steps = 12;
+    cfg.calib_batches = 1;
+    cfg.warmup_steps = 2;
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.calibrate()?; // LQS: pick per-token vs per-tensor per layer
+    for _ in 0..12 {
+        tr.step_once(Mode::Fused)?;
+    }
+    println!("loss curve: {}", tr.metrics.curve_string(3));
+    let (el, ea) = tr.eval(4)?;
+    println!("eval after 12 steps: loss {el:.4} acc {ea:.3}");
+    Ok(())
+}

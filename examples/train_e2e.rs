@@ -1,0 +1,84 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation).
+//!
+//! Trains the ViT-style transformer on the synthetic vision corpus for a
+//! few hundred steps, HOT vs FP side by side, and reports:
+//!   * both loss curves (logged for EXPERIMENTS.md)
+//!   * final eval accuracy for both
+//!   * ABC context-buffer stats from a split-mode segment (the rust-held
+//!     compressed CTX of the paper's Fig 5)
+//!   * throughput
+//!
+//! Run: `cargo run --release --example train_e2e -- [--steps 200]
+//!       [--preset small] [--variant hot] [--csv out.csv]`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use hot::config::RunConfig;
+use hot::coordinator::{Mode, Trainer};
+use hot::runtime::Runtime;
+use hot::util::args::Args;
+
+fn run(rt: Arc<Runtime>, preset: &str, variant: &str, steps: usize,
+       seed: u64) -> Result<Trainer> {
+    let mut cfg = RunConfig::default();
+    cfg.preset = preset.into();
+    cfg.variant = variant.into();
+    cfg.steps = steps;
+    cfg.seed = seed;
+    cfg.lr = 1e-3;
+    cfg.warmup_steps = steps / 20 + 1;
+    cfg.calib_batches = if variant == "hot" { 2 } else { 0 };
+    cfg.eval_every = (steps / 4).max(1);
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.train()?;
+    Ok(tr)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)); // skip `--example x`
+    let steps = args.usize_or("steps", 200);
+    let preset = args.str_or("preset", "small");
+    let seed = args.u64_or("seed", 0);
+    let rt = Arc::new(Runtime::new(&args.str_or("artifacts", "artifacts"))?);
+
+    println!("== end-to-end: {preset} for {steps} steps, HOT vs FP ==");
+    let hot_tr = run(rt.clone(), &preset, "hot", steps, seed)?;
+    let fp_tr = run(rt.clone(), &preset, "fp", steps, seed)?;
+
+    println!("\nHOT loss curve: {}", hot_tr.metrics.curve_string(steps / 10 + 1));
+    println!("FP  loss curve: {}", fp_tr.metrics.curve_string(steps / 10 + 1));
+    let (hl, ha) = (hot_tr.metrics.evals.last().unwrap().1,
+                    hot_tr.metrics.evals.last().unwrap().2);
+    let (fl, fa) = (fp_tr.metrics.evals.last().unwrap().1,
+                    fp_tr.metrics.evals.last().unwrap().2);
+    println!("\nfinal eval  HOT: loss {hl:.4} acc {ha:.4}");
+    println!("final eval  FP : loss {fl:.4} acc {fa:.4}");
+    println!("acc gap (FP - HOT): {:+.4}  (paper: <1% on fine-tuning)",
+             fa - ha);
+    println!("throughput  HOT: {:.2} steps/s, FP: {:.2} steps/s",
+             hot_tr.metrics.throughput_steps_per_s(),
+             fp_tr.metrics.throughput_steps_per_s());
+
+    // --- split-mode segment: rust-owned ABC buffers ------------------------
+    let mut cfg = RunConfig::default();
+    cfg.preset = preset.clone();
+    cfg.variant = "hot".into();
+    cfg.steps = 8;
+    cfg.calib_batches = 0;
+    let mut sp = Trainer::new(rt.clone(), cfg)?;
+    for _ in 0..8 {
+        sp.step_once(Mode::Split)?;
+    }
+    let st = sp.ctx.stats();
+    println!("\nABC ctx (split mode, 8 steps): peak {} KiB, \
+              fp32-equivalent {} KiB, compression {:.2}x",
+             st.peak_bytes / 1024, st.fp32_equiv_bytes / 1024 / 8,
+             sp.ctx.compression_ratio());
+
+    if let Some(csv) = args.get("csv") {
+        hot_tr.metrics.save_csv(csv)?;
+        println!("HOT metrics -> {csv}");
+    }
+    Ok(())
+}

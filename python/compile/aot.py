@@ -1,0 +1,488 @@
+"""AOT artifact emitter: lower L2 graphs to HLO *text* + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Usage (from python/):  python -m compile.aot --suite default --out ../artifacts
+
+Every artifact's calling convention (flat input/output lists with names,
+shapes, dtypes) is recorded in manifest.json; initial parameters are
+dumped as raw little-endian f32 blobs so the rust coordinator starts from
+the exact same state pytest verified.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import lora as LR
+from compile import model as M
+from compile import train as T
+from compile.config import BackwardConfig, ModelConfig, OptimizerConfig, PRESETS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides non-scalar constants as "{...}",
+    # which xla_extension 0.5.1's text parser silently materializes as
+    # ZEROS — every Hadamard matrix in the graphs would vanish. Print
+    # large constants in full, and strip source metadata (the old parser
+    # rejects the newer `source_end_line` attribute).
+    po = xc._xla.HloPrintOptions()
+    po.print_large_constants = True
+    po.print_metadata = False
+    text = comp.as_hlo_module().to_string(po)
+    assert "{...}" not in text, "constant elision leaked into HLO text"
+    return text
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def anchor(first_out, args):
+    """Tie a zero-valued function of EVERY input into ``first_out``.
+
+    jax.jit silently drops unused arguments at trace time (e.g. the FP
+    variant never reads lqs_mask), which would desynchronize the HLO
+    parameter list from the manifest calling convention. Entry parameters
+    are never removed once they exist in the module, so a 0-weighted sum
+    is enough to pin them."""
+    z = jnp.float32(0.0)
+    for a in args:
+        s = jnp.sum(a)
+        z = z + 0.0 * s.astype(jnp.float32)
+    return first_out + z
+
+
+def _sd(name, s):
+    return {"name": name, "shape": [int(d) for d in s.shape],
+            "dtype": str(s.dtype)}
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"presets": {}, "artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add_preset(self, name: str, cfg: ModelConfig, seed: int = 0):
+        params = M.init_params(cfg, seed=seed)
+        names = M.param_names(cfg)
+        blob = b"".join(np.asarray(params[k], np.float32).tobytes()
+                        for k in names)
+        path = f"params_init_{name}.bin"
+        with open(os.path.join(self.out_dir, path), "wb") as f:
+            f.write(blob)
+        self.manifest["presets"][name] = {
+            "model": {
+                "arch": cfg.arch, "d_model": cfg.d_model, "depth": cfg.depth,
+                "heads": cfg.heads, "seq": cfg.seq, "in_dim": cfg.in_dim,
+                "n_classes": cfg.n_classes, "mlp_ratio": cfg.mlp_ratio,
+            },
+            "params": [{"name": k, "shape": [int(d) for d in params[k].shape],
+                        "dtype": "float32"} for k in names],
+            "qlinears": M.qlinear_names(cfg),
+            "init_blob": path,
+            "init_seed": seed,
+        }
+        return params, names
+
+    def emit(self, key: str, fn, in_specs, in_names, out_names,
+             meta: dict):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = f"{key}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["file"] = path
+        entry["inputs"] = [_sd(n, s) for n, s in zip(in_names, in_specs)]
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        flat, _ = jax.tree_util.tree_flatten(out_shapes)
+        assert len(flat) == len(out_names), (key, len(flat), len(out_names))
+        entry["outputs"] = [_sd(n, s) for n, s in zip(out_names, flat)]
+        self.manifest["artifacts"][key] = entry
+        print(f"  {key}: {len(text) / 1e6:.2f} MB HLO in "
+              f"{time.time() - t0:.1f}s")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote manifest with {len(self.manifest['artifacts'])} artifacts")
+
+
+# ---------------------------------------------------------------------------
+# Flat-arg wrappers (HLO parameters are positional; dicts flatten in
+# model.param_names order)
+# ---------------------------------------------------------------------------
+
+
+def _x_spec(cfg: ModelConfig, batch: int):
+    if cfg.arch == "lm":
+        return spec((batch, cfg.seq), jnp.int32)
+    return spec((batch, cfg.seq, cfg.in_dim))
+
+
+def _y_spec(cfg: ModelConfig, batch: int):
+    if cfg.arch == "lm":
+        return spec((batch, cfg.seq), jnp.int32)
+    return spec((batch,), jnp.int32)
+
+
+def build_train_step(cfg, bcfg, ocfg, batch):
+    names = M.param_names(cfg)
+    params0 = M.init_params(cfg)
+    p_specs = [spec(params0[k].shape) for k in names]
+    np_ = len(names)
+    step_fn = T.make_train_step(cfg, bcfg, ocfg)
+
+    def flat(*args):
+        p = dict(zip(names, args[:np_]))
+        m = dict(zip(names, args[np_:2 * np_]))
+        v = dict(zip(names, args[2 * np_:3 * np_]))
+        step, lr, mask, x, y = args[3 * np_:]
+        new_p, new_m, new_v, loss, acc = step_fn(p, m, v, step, lr, mask, x, y)
+        return (*[new_p[k] for k in names], *[new_m[k] for k in names],
+                *[new_v[k] for k in names], anchor(loss, args), acc)
+
+    in_specs = (p_specs + p_specs + p_specs
+                + [spec(()), spec(()), spec((cfg.n_qlinears(),)),
+                   _x_spec(cfg, batch), _y_spec(cfg, batch)])
+    in_names = ([f"param.{k}" for k in names] + [f"m.{k}" for k in names]
+                + [f"v.{k}" for k in names]
+                + ["step", "lr", "lqs_mask", "x", "y"])
+    out_names = ([f"param.{k}" for k in names] + [f"m.{k}" for k in names]
+                 + [f"v.{k}" for k in names] + ["loss", "acc"])
+    return flat, in_specs, in_names, out_names
+
+
+def build_eval_step(cfg, batch):
+    names = M.param_names(cfg)
+    params0 = M.init_params(cfg)
+    p_specs = [spec(params0[k].shape) for k in names]
+    ev = T.make_eval_step(cfg, BackwardConfig(variant="fp"))
+
+    def flat(*args):
+        p = dict(zip(names, args[:len(names)]))
+        x, y = args[len(names):]
+        loss, acc = ev(p, x, y)
+        return (anchor(loss, args), acc)
+
+    in_specs = p_specs + [_x_spec(cfg, batch), _y_spec(cfg, batch)]
+    in_names = [f"param.{k}" for k in names] + ["x", "y"]
+    return flat, in_specs, in_names, ["loss", "acc"]
+
+
+def build_grad_step(cfg, bcfg, batch):
+    names = M.param_names(cfg)
+    params0 = M.init_params(cfg)
+    p_specs = [spec(params0[k].shape) for k in names]
+    gf = T.make_grad_step(cfg, bcfg)
+
+    def flat(*args):
+        p = dict(zip(names, args[:len(names)]))
+        mask, x, y = args[len(names):]
+        grads, loss, acc = gf(p, mask, x, y)
+        return (*[grads[k] for k in names], anchor(loss, args), acc)
+
+    in_specs = p_specs + [spec((cfg.n_qlinears(),)),
+                          _x_spec(cfg, batch), _y_spec(cfg, batch)]
+    in_names = [f"param.{k}" for k in names] + ["lqs_mask", "x", "y"]
+    out_names = [f"grad.{k}" for k in names] + ["loss", "acc"]
+    return flat, in_specs, in_names, out_names
+
+
+def build_opt_step(cfg, ocfg):
+    names = M.param_names(cfg)
+    params0 = M.init_params(cfg)
+    p_specs = [spec(params0[k].shape) for k in names]
+    np_ = len(names)
+    of = T.make_opt_step(cfg, ocfg)
+
+    def flat(*args):
+        p = dict(zip(names, args[:np_]))
+        g = dict(zip(names, args[np_:2 * np_]))
+        m = dict(zip(names, args[2 * np_:3 * np_]))
+        v = dict(zip(names, args[3 * np_:4 * np_]))
+        step, lr = args[4 * np_:]
+        new_p, new_m, new_v = of(p, g, m, v, step, lr)
+        first = anchor(new_p[names[0]], args)
+        rest = [new_p[k] for k in names[1:]]
+        return (first, *rest, *[new_m[k] for k in names],
+                *[new_v[k] for k in names])
+
+    in_specs = p_specs * 4 + [spec(()), spec(())]
+    in_names = ([f"param.{k}" for k in names] + [f"grad.{k}" for k in names]
+                + [f"m.{k}" for k in names] + [f"v.{k}" for k in names]
+                + ["step", "lr"])
+    out_names = ([f"param.{k}" for k in names] + [f"m.{k}" for k in names]
+                 + [f"v.{k}" for k in names])
+    return flat, in_specs, in_names, out_names
+
+
+def build_split_steps(cfg, bcfg, batch):
+    names = M.param_names(cfg)
+    params0 = M.init_params(cfg)
+    p_specs = [spec(params0[k].shape) for k in names]
+    fwd, bwd, schema = T.make_split_steps(cfg, bcfg, batch)
+
+    ctx_names, ctx_meta = [], []
+    idx = 0
+    for kind, name, keys, has_flag in schema:
+        for k, shp, dt in keys:
+            ctx_names.append(f"ctx.{name}.{k}")
+            ctx_meta.append({"module": name, "kind": kind, "key": k,
+                             "shape": [int(d) for d in shp], "dtype": dt,
+                             "index": idx})
+            idx += 1
+
+    def fwd_flat(*args):
+        p = dict(zip(names, args[:len(names)]))
+        mask, x, y = args[len(names):]
+        loss, acc, *flat = fwd(p, mask, x, y)
+        return (anchor(loss, args), acc, *flat)
+
+    fwd_specs = p_specs + [spec((cfg.n_qlinears(),)),
+                           _x_spec(cfg, batch), _y_spec(cfg, batch)]
+    fwd_in = [f"param.{k}" for k in names] + ["lqs_mask", "x", "y"]
+    fwd_out = ["loss", "acc"] + ctx_names
+
+    ctx_specs = [spec(m["shape"], jnp.dtype(m["dtype"])) for m in ctx_meta]
+
+    def bwd_flat(*args):
+        p = dict(zip(names, args[:len(names)]))
+        rest = args[len(names):]
+        mask, x = rest[0], rest[1]
+        ctx = rest[2:]
+        g0, *gs = bwd(p, mask, x, *ctx)
+        return (anchor(g0, args), *gs)
+
+    bwd_specs = p_specs + [spec((cfg.n_qlinears(),)), _x_spec(cfg, batch)] \
+        + ctx_specs
+    bwd_in = [f"param.{k}" for k in names] + ["lqs_mask", "x"] + ctx_names
+    bwd_out = [f"grad.{k}" for k in names]
+    return ((fwd_flat, fwd_specs, fwd_in, fwd_out),
+            (bwd_flat, bwd_specs, bwd_in, bwd_out), ctx_meta)
+
+
+def build_calib_step(cfg, bcfg, batch):
+    names = M.param_names(cfg)
+    params0 = M.init_params(cfg)
+    p_specs = [spec(params0[k].shape) for k in names]
+    cf = T.make_calib_step(cfg, bcfg)
+
+    def flat(*args):
+        p = dict(zip(names, args[:len(names)]))
+        x, y = args[len(names):]
+        o0, *rest = cf(p, x, y)
+        return (anchor(o0, args), *rest)
+
+    in_specs = p_specs + [_x_spec(cfg, batch), _y_spec(cfg, batch)]
+    in_names = [f"param.{k}" for k in names] + ["x", "y"]
+    out_names = ["mse_tensor", "mse_token", "outlier", "gx_err_hq",
+                 "gx_err_hla", "gw_err_hq", "gw_err_hla"]
+    return flat, in_specs, in_names, out_names
+
+
+def build_lora_step(cfg, bcfg, ocfg, batch, hot_frozen, hot_decomposed,
+                    r_lora=8):
+    names = M.param_names(cfg)
+    params0 = M.init_params(cfg)
+    p_specs = [spec(params0[k].shape) for k in names]
+    t_names = sorted(list(LR.lora_names(cfg, r_lora))
+                     + ["embed.w", "embed.b", "head.w", "head.b"])
+    t_shapes = dict(LR.lora_param_specs(cfg, r_lora))
+    for k in ("embed.w", "embed.b", "head.w", "head.b"):
+        t_shapes[k] = tuple(params0[k].shape)
+    t_specs = [spec(t_shapes[k]) for k in t_names]
+    nt = len(t_names)
+    step_fn = LR.make_lora_train_step(cfg, bcfg, ocfg, r_lora=r_lora,
+                                      hot_frozen=hot_frozen,
+                                      hot_decomposed=hot_decomposed)
+
+    def flat(*args):
+        base = dict(zip(names, args[:len(names)]))
+        off = len(names)
+        t = dict(zip(t_names, args[off:off + nt]))
+        m = dict(zip(t_names, args[off + nt:off + 2 * nt]))
+        v = dict(zip(t_names, args[off + 2 * nt:off + 3 * nt]))
+        step, lr, mask, x, y = args[off + 3 * nt:]
+        new_t, new_m, new_v, loss, acc = step_fn(base, t, m, v, step, lr,
+                                                 mask, x, y)
+        return (*[new_t[k] for k in t_names], *[new_m[k] for k in t_names],
+                *[new_v[k] for k in t_names], anchor(loss, args), acc)
+
+    in_specs = (p_specs + t_specs * 3
+                + [spec(()), spec(()), spec((cfg.n_qlinears(),)),
+                   _x_spec(cfg, batch), _y_spec(cfg, batch)])
+    in_names = ([f"param.{k}" for k in names]
+                + [f"t.{k}" for k in t_names] + [f"m.{k}" for k in t_names]
+                + [f"v.{k}" for k in t_names]
+                + ["step", "lr", "lqs_mask", "x", "y"])
+    out_names = ([f"t.{k}" for k in t_names] + [f"m.{k}" for k in t_names]
+                 + [f"v.{k}" for k in t_names] + ["loss", "acc"])
+    meta_t = [{"name": k, "shape": [int(d) for d in t_shapes[k]],
+               "dtype": "float32"} for k in t_names]
+    return flat, in_specs, in_names, out_names, meta_t
+
+
+def build_kernel_demo(kind: str, l=64, o=64, i=48, rank=8):
+    """Pallas-kernel-bearing artifacts: prove L1 lowers into HLO the rust
+    runtime can execute (interpret=True -> plain HLO ops)."""
+    if kind == "hq":
+        from compile.kernels import hq_matmul
+
+        def fn(gy, w):
+            return (hq_matmul.hq_matmul(gy, w, bits=4),)
+
+        in_specs = [spec((l, o)), spec((o, i))]
+        return fn, in_specs, ["gy", "w"], ["gx"]
+    if kind == "hla":
+        from compile.kernels import hla_matmul
+
+        def fn(gy, x):
+            return (hla_matmul.hla_matmul(gy, x, rank=rank, bits=8),)
+
+        in_specs = [spec((l, o)), spec((l, i))]
+        return fn, in_specs, ["gy", "x"], ["gw"]
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Suites
+# ---------------------------------------------------------------------------
+
+
+def emit_training_family(em: Emitter, preset: str, batch: int,
+                         variants, ocfg, include_infra: bool):
+    cfg = PRESETS[preset]
+    em.add_preset(preset, cfg)
+    for variant in variants:
+        bcfg = BackwardConfig(variant=variant)
+        fn, ins, inn, outn = build_train_step(cfg, bcfg, ocfg, batch)
+        em.emit(f"train_{variant}_{preset}", fn, ins, inn, outn,
+                {"kind": "train_step", "preset": preset, "variant": variant,
+                 "batch": batch, "rank": bcfg.rank})
+    if include_infra:
+        fn, ins, inn, outn = build_eval_step(cfg, batch)
+        em.emit(f"eval_{preset}", fn, ins, inn, outn,
+                {"kind": "eval_step", "preset": preset, "batch": batch})
+        bcfg = BackwardConfig(variant="hot")
+        fn, ins, inn, outn = build_grad_step(cfg, bcfg, batch)
+        em.emit(f"grad_hot_{preset}", fn, ins, inn, outn,
+                {"kind": "grad_step", "preset": preset, "variant": "hot",
+                 "batch": batch})
+        fn, ins, inn, outn = build_opt_step(cfg, ocfg)
+        em.emit(f"opt_{preset}", fn, ins, inn, outn,
+                {"kind": "opt_step", "preset": preset})
+        fn, ins, inn, outn = build_calib_step(cfg, BackwardConfig(variant="hot"),
+                                              batch)
+        em.emit(f"calib_{preset}", fn, ins, inn, outn,
+                {"kind": "calib_step", "preset": preset, "batch": batch})
+        for variant in ("hot", "fp"):
+            bcfg = BackwardConfig(variant=variant)
+            (fwd, bwd, ctx_meta) = build_split_steps(cfg, bcfg, batch)
+            em.emit(f"fwd_{variant}_{preset}", *fwd,
+                    {"kind": "fwd_step", "preset": preset, "variant": variant,
+                     "batch": batch, "ctx": ctx_meta})
+            em.emit(f"bwd_{variant}_{preset}", *bwd,
+                    {"kind": "bwd_step", "preset": preset, "variant": variant,
+                     "batch": batch})
+
+
+def emit_default(em: Emitter, batch: int):
+    ocfg = OptimizerConfig()
+    emit_training_family(em, "small", batch,
+                         ["fp", "hot", "lbp", "luq", "int4"], ocfg,
+                         include_infra=True)
+    # Pallas-kernel demos (L1 inside rust-executable HLO)
+    for kind in ("hq", "hla"):
+        fn, ins, inn, outn = build_kernel_demo(kind)
+        em.emit(f"kernel_{kind}_demo", fn, ins, inn, outn,
+                {"kind": "kernel_demo", "demo": kind})
+    # LoRA (vision): fp-LoRA and the paper's winning HOT-on-frozen recipe
+    cfg = PRESETS["small"]
+    for tag, hf, hdec, variant in (
+            ("lora_fp", False, False, "fp"),
+            ("lora_hotfrozen", True, False, "hot")):
+        fn, ins, inn, outn, meta_t = build_lora_step(
+            cfg, BackwardConfig(variant=variant), ocfg, batch, hf, hdec)
+        em.emit(f"{tag}_small", fn, ins, inn, outn,
+                {"kind": "lora_step", "preset": "small", "variant": variant,
+                 "hot_frozen": hf, "hot_decomposed": hdec, "batch": batch,
+                 "trainable": meta_t})
+
+
+def emit_full(em: Emitter, batch: int):
+    ocfg = OptimizerConfig()
+    emit_default(em, batch)
+    # Table 2 path-sensitivity family at tiny scale
+    emit_training_family(em, "tiny", batch,
+                         ["gx_hq4", "gx_q4", "gx_ext_hla", "gx_int_hla",
+                          "gw_hq4", "gw_hla", "gw_hot", "fp", "hot", "lbp",
+                          "luq", "int4"],
+                         ocfg, include_infra=True)
+    # Table 8 rank sweep (hot with r != 8)
+    cfg = PRESETS["tiny"]
+    for r in (1, 2, 4, 16):
+        bcfg = BackwardConfig(variant="hot", rank=r)
+        fn, ins, inn, outn = build_train_step(cfg, bcfg, ocfg, batch)
+        em.emit(f"train_hot_r{r}_tiny", fn, ins, inn, outn,
+                {"kind": "train_step", "preset": "tiny", "variant": "hot",
+                 "batch": batch, "rank": r})
+    # Table 9 remaining LoRA combos
+    cfg_s = PRESETS["small"]
+    for tag, hf, hdec in (("lora_hotdec", False, True),
+                          ("lora_hotboth", True, True)):
+        fn, ins, inn, outn, meta_t = build_lora_step(
+            cfg_s, BackwardConfig(variant="hot"), ocfg, batch, hf, hdec)
+        em.emit(f"{tag}_small", fn, ins, inn, outn,
+                {"kind": "lora_step", "preset": "small", "variant": "hot",
+                 "hot_frozen": hf, "hot_decomposed": hdec, "batch": batch,
+                 "trainable": meta_t})
+    # LM family (Table 4 analog)
+    emit_training_family(em, "lm_tiny", batch,
+                         ["fp", "hot", "lbp", "luq"], ocfg,
+                         include_infra=False)
+    # MLP family (CNN stand-in for Tables 3/10)
+    emit_training_family(em, "mlp_small", batch,
+                         ["fp", "hot", "lbp", "luq", "int4"], ocfg,
+                         include_infra=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=("default", "full"), default="default")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+    em = Emitter(args.out)
+    em.manifest["suite"] = args.suite
+    em.manifest["batch"] = args.batch
+    t0 = time.time()
+    if args.suite == "default":
+        emit_default(em, args.batch)
+    else:
+        emit_full(em, args.batch)
+    em.finish()
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

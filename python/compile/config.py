@@ -1,0 +1,144 @@
+"""Model / backward-path configuration shared by L2 graphs, aot.py and tests.
+
+The ``variant`` string selects the backward implementation for every
+quantized linear (qlinear) in the model — this is the axis all the paper's
+comparisons move along:
+
+  fp          exact FP32 backprop (paper's "FP" column)
+  hot         HOT: g_x = HT+INT4 pseudo-stochastic quant (HQ),
+              g_w = internal-HLA(rank) + INT8, LQS mask selects per-token
+              vs per-tensor scales per layer, ABC compresses the stored x
+  lbp         LBP-WHT [46]: g_x = external HLA on L, g_w = internal HLA,
+              FP arithmetic (no quantization)
+  luq         LUQ [7]: logarithmic FP4 stochastic quant of g_y on both
+              paths, INT4 min-max quant of w / x operands
+  int4        plain INT4 min-max quant on both paths (no HT) — the
+              "INT4" column of Table 10
+  --- single-path ablations (Table 2) ---
+  gx_hq4      g_x = HT+INT4, g_w exact
+  gx_q4       g_x = INT4 without HT, g_w exact
+  gx_ext_hla  g_x = external HLA, g_w exact
+  gx_int_hla  g_x = internal HLA (rank over O), g_w exact
+  gw_hq4      g_w = HT+INT4 quant, g_x exact
+  gw_hla      g_w = internal HLA only (no quant), g_x exact
+  gw_hot      g_w = HLA+INT8 (HOT's g_w), g_x exact
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+VARIANTS = (
+    "fp", "hot", "lbp", "luq", "int4",
+    "gx_hq4", "gx_q4", "gx_ext_hla", "gx_int_hla",
+    "gw_hq4", "gw_hla", "gw_hot",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackwardConfig:
+    """How gradients are computed for every qlinear layer."""
+
+    variant: str = "hot"
+    rank: int = 8            # HLA low-pass rank r out of `block`
+    block: int = 16          # Hadamard tile (paper: order-4 block-diag, n=16)
+    gx_bits: int = 4         # HQ precision on the activation-gradient path
+    gw_bits: int = 8         # quant precision on the weight-gradient path
+    criterion: str = "sequency"  # low-pass selection: sequency | lp_l1
+    abc: bool = True         # compress x at forward time (ABC) vs at bwd
+    use_pallas: bool = False  # route qlinear bwd through the L1 Pallas kernels
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}")
+        if not 1 <= self.rank <= self.block:
+            raise ValueError(f"rank {self.rank} outside [1, {self.block}]")
+
+    def tag(self) -> str:
+        """Artifact-name suffix (stable across runs)."""
+        parts = [self.variant]
+        if self.variant in ("hot", "lbp", "gw_hot", "gw_hla",
+                            "gx_ext_hla", "gx_int_hla") and self.rank != 8:
+            parts.append(f"r{self.rank}")
+        if not self.abc and self.variant == "hot":
+            parts.append("noabc")
+        if self.use_pallas:
+            parts.append("pallas")
+        return "_".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A ViT-style transformer encoder (the paper's main testbed family).
+
+    arch:
+      vit  — patch-embed -> encoder blocks -> mean-pool -> classifier
+      lm   — token-embed -> causal encoder blocks -> per-position LM head
+      mlp  — patch-embed -> (fc1, gelu, fc2) blocks -> pool -> classifier
+             (conv-as-matmul stand-in for the CNN families in the paper)
+    """
+
+    arch: str = "vit"
+    d_model: int = 64
+    depth: int = 2
+    heads: int = 2
+    seq: int = 32            # L; must be a multiple of block (16)
+    in_dim: int = 48         # patch feature dim (vision) / vocab (lm)
+    n_classes: int = 10
+    mlp_ratio: int = 4
+
+    def __post_init__(self):
+        if self.arch not in ("vit", "lm", "mlp"):
+            raise ValueError(f"unknown arch {self.arch!r}")
+        if self.seq % 16:
+            raise ValueError("seq must be a multiple of 16 (Hadamard tiles)")
+        if self.d_model % 16:
+            raise ValueError("d_model must be a multiple of 16")
+        if self.d_model % self.heads:
+            raise ValueError("d_model must divide evenly into heads")
+
+    @property
+    def d_mlp(self) -> int:
+        return self.d_model * self.mlp_ratio
+
+    def n_qlinears(self) -> int:
+        """Number of quantized linears == length of the LQS mask.
+
+        vit/lm blocks carry (qkv, proj, fc1, fc2); mlp blocks (fc1, fc2);
+        plus embed and head."""
+        per_block = 4 if self.arch in ("vit", "lm") else 2
+        return 2 + per_block * self.depth
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 1e-3          # base LR; the per-step LR is a graph input
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+PRESETS = {
+    # unit-test scale: fast to lower, fast to run under pytest
+    "tiny": ModelConfig(arch="vit", d_model=32, depth=2, heads=2, seq=16,
+                        in_dim=16, n_classes=4, mlp_ratio=2),
+    # default artifact scale: what `make artifacts` ships and the rust
+    # examples/benches consume (~0.45M params)
+    "small": ModelConfig(arch="vit", d_model=96, depth=4, heads=4, seq=32,
+                         in_dim=48, n_classes=16, mlp_ratio=4),
+    # e2e driver --large scale (~7M params)
+    "base": ModelConfig(arch="vit", d_model=256, depth=8, heads=8, seq=64,
+                        in_dim=96, n_classes=32, mlp_ratio=4),
+    "lm_tiny": ModelConfig(arch="lm", d_model=64, depth=2, heads=2, seq=32,
+                           in_dim=128, n_classes=128, mlp_ratio=2),
+    "lm_small": ModelConfig(arch="lm", d_model=128, depth=4, heads=4, seq=64,
+                            in_dim=256, n_classes=256, mlp_ratio=4),
+    "mlp_small": ModelConfig(arch="mlp", d_model=96, depth=4, heads=1, seq=32,
+                             in_dim=48, n_classes=16, mlp_ratio=4),
+}

@@ -1,0 +1,169 @@
+"""Walsh-Hadamard utilities shared by the L1 kernels and the L2 graphs.
+
+The paper (HOT, §3.1) uses the *block-diagonal* Hadamard transform of
+order n=16 ("order-4 2D HT" in Xi et al. [43]'s terminology): a dimension
+of size D (multiple of 16) is split into D/16 independent tiles and each
+tile is multiplied by the normalized 16x16 Walsh-Hadamard matrix. All of
+HOT's machinery — HQ on the g_x path, HLA on the g_w path, ABC's
+forward-time activation compression — is built from this one primitive.
+
+Everything here is pure numpy/jnp and used at trace time; the Pallas
+kernels in kernels/ re-express the same math with explicit tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+# Default Hadamard block size used throughout the paper (n = 16).
+BLOCK = 16
+
+
+@functools.lru_cache(maxsize=None)
+def hadamard_matrix(n: int, normalized: bool = True) -> np.ndarray:
+    """Sylvester (natural-order) Walsh-Hadamard matrix of size n (power of 2).
+
+    When ``normalized``, rows are scaled by 1/sqrt(n) so H @ H.T == I.
+    """
+    if n & (n - 1) or n <= 0:
+        raise ValueError(f"Hadamard order must be a power of two, got {n}")
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    if normalized:
+        h = h / np.sqrt(n)
+    return h.astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def sequency_order(n: int) -> tuple:
+    """Permutation mapping sequency rank -> natural (Sylvester) row index.
+
+    Sequency of a Walsh basis vector = number of sign changes; low sequency
+    == low "frequency". ``sequency_order(n)[k]`` is the natural-order row
+    holding the k-th lowest-frequency basis vector. Computed by direct
+    sign-change counting (robust, n is tiny).
+    """
+    h = hadamard_matrix(n, normalized=False)
+    changes = (np.diff(np.sign(h), axis=1) != 0).sum(axis=1)
+    # stable argsort so ties (there are none for true Walsh rows) keep order
+    return tuple(int(i) for i in np.argsort(changes, kind="stable"))
+
+
+@functools.lru_cache(maxsize=None)
+def lp_l1_order_2d(bh: int, bw: int) -> tuple:
+    """LP_L1 low-pass ordering for a 2D (bh x bw) Hadamard basis.
+
+    LBP-WHT's LP_L1 criterion ranks the 2D basis kron(v_row, v_col) by the
+    L1 norm of its (vertical, horizontal) sequency pair, so low-pass
+    vectors that are smooth in *both* image directions come first. Returns
+    a permutation of range(bh*bw) into natural-order flat indices.
+    """
+    sv = {nat: seq for seq, nat in enumerate(sequency_order(bh))}
+    sh = {nat: seq for seq, nat in enumerate(sequency_order(bw))}
+    flat = []
+    for r in range(bh):
+        for c in range(bw):
+            flat.append((sv[r] + sh[c], sv[r], sh[c], r * bw + c))
+    flat.sort()
+    return tuple(f[-1] for f in flat)
+
+
+def lowpass_indices(rank: int, block: int = BLOCK, criterion: str = "sequency") -> tuple:
+    """Natural-order indices of the ``rank`` lowest-frequency components.
+
+    criterion:
+      * "sequency" — 1D sequency order (used for transformer L dims).
+      * "lp_l1"    — LBP-WHT's 2D LP_L1 order over a 4x4 spatial tile
+                     (used when L = H*W image patches; block must be 16).
+    """
+    if not 1 <= rank <= block:
+        raise ValueError(f"rank must be in [1, {block}], got {rank}")
+    if criterion == "sequency":
+        order = sequency_order(block)
+    elif criterion == "lp_l1":
+        side = int(np.sqrt(block))
+        if side * side != block:
+            raise ValueError("lp_l1 needs a square block")
+        order = lp_l1_order_2d(side, side)
+    else:
+        raise ValueError(f"unknown criterion {criterion!r}")
+    return tuple(order[:rank])
+
+
+@functools.lru_cache(maxsize=None)
+def reduced_hadamard(rank: int, block: int = BLOCK, criterion: str = "sequency") -> np.ndarray:
+    """The (rank x block) reduced matrix H-hat of HOT Eq. (5)/(6):
+    the ``rank`` lowest-frequency rows of the normalized Walsh matrix."""
+    h = hadamard_matrix(block)
+    sel = np.asarray(lowpass_indices(rank, block, criterion), dtype=np.int64)
+    return h[sel, :]
+
+
+# ---------------------------------------------------------------------------
+# jnp transforms (trace-time building blocks for the L2 graphs and ref.py)
+# ---------------------------------------------------------------------------
+
+
+def block_ht(x: jnp.ndarray, axis: int = -1, block: int = BLOCK) -> jnp.ndarray:
+    """Block-diagonal Hadamard transform along ``axis``.
+
+    Splits the axis into tiles of ``block`` and multiplies each by H. The
+    transform is orthonormal: block_ht(block_ht(x)) == x (H is symmetric
+    for Sylvester order after normalization... H @ H == I since H == H.T).
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    d = x.shape[-1]
+    if d % block:
+        raise ValueError(f"axis size {d} not a multiple of block {block}")
+    h = jnp.asarray(hadamard_matrix(block))
+    y = x.reshape(*x.shape[:-1], d // block, block) @ h.T
+    y = y.reshape(*x.shape)
+    return jnp.moveaxis(y, -1, axis)
+
+
+def block_hla(
+    x: jnp.ndarray,
+    rank: int,
+    axis: int = -1,
+    block: int = BLOCK,
+    criterion: str = "sequency",
+) -> jnp.ndarray:
+    """Hadamard low-rank projection: HT along ``axis`` then keep the ``rank``
+    lowest-frequency components of every tile. Output axis size D*rank/block.
+
+    This is HOT's internal-HLA operand compression (Eq. 5): the returned
+    tensor is (H-hat @ x) laid out tile-major.
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    d = x.shape[-1]
+    if d % block:
+        raise ValueError(f"axis size {d} not a multiple of block {block}")
+    hh = jnp.asarray(reduced_hadamard(rank, block, criterion))
+    y = x.reshape(*x.shape[:-1], d // block, block) @ hh.T
+    y = y.reshape(*x.shape[:-1], (d // block) * rank)
+    return jnp.moveaxis(y, -1, axis)
+
+
+def block_hla_expand(
+    x: jnp.ndarray,
+    rank: int,
+    axis: int = -1,
+    block: int = BLOCK,
+    criterion: str = "sequency",
+) -> jnp.ndarray:
+    """Adjoint of block_hla: H-hat.T @ x, expanding D*rank/block back to D.
+
+    Used by *external* HLA (Eq. 6), where the approximated product is
+    H-hat.T @ (H-hat @ P) @ S — compress, multiply, then expand."""
+    x = jnp.moveaxis(x, axis, -1)
+    d = x.shape[-1]
+    if d % rank:
+        raise ValueError(f"axis size {d} not a multiple of rank {rank}")
+    hh = jnp.asarray(reduced_hadamard(rank, block, criterion))
+    y = x.reshape(*x.shape[:-1], d // rank, rank) @ hh
+    y = y.reshape(*x.shape[:-1], (d // rank) * block)
+    return jnp.moveaxis(y, -1, axis)

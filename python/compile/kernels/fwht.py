@@ -1,0 +1,150 @@
+"""Pallas kernel: block-diagonal (Fast) Walsh-Hadamard transform.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+FWHT stages butterflies through GPU shared memory. On TPU the natural
+formulation of an order-16 block transform is a dense (.., 16) x (16, 16)
+matmul on the MXU — the 16x16 Walsh matrix lives in VMEM once and every
+(rows_tile, 16) operand tile streams through the systolic array. We ship
+both formulations:
+
+  * ``block_fwht``      — MXU form: reshape to (bm, D/16, 16) @ H16.
+  * ``block_fwht_bfly`` — butterfly form: log2(16)=4 stages of add/sub on
+    strided halves (the VPU-friendly variant; exercises the same
+    schedule the CUDA kernel used, adapted to lane-parallel vectors).
+
+Both run under ``interpret=True`` (CPU has no Mosaic backend); they lower
+to identical HLO-visible semantics and are verified against
+``hadamard.block_ht`` / each other in pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import hadamard as hd
+
+# Target row-tile: sized so a (TILE_ROWS, 1024) f32 operand + result fit
+# comfortably in ~16 MB VMEM with double buffering (2 * 2 * 512KB).
+TILE_ROWS = 128
+
+
+def _row_tiles(n_rows: int) -> int:
+    return min(TILE_ROWS, n_rows)
+
+
+def _fwht_mxu_kernel(x_ref, h_ref, o_ref, *, block: int):
+    """One row-tile: (bm, D) -> (bm, D/block, block) @ H^T -> (bm, D)."""
+    x = x_ref[...]
+    bm, d = x.shape
+    h = h_ref[...]
+    y = x.reshape(bm, d // block, block) @ h.T
+    o_ref[...] = y.reshape(bm, d)
+
+
+def block_fwht(x: jnp.ndarray, block: int = hd.BLOCK) -> jnp.ndarray:
+    """Block-diag HT along the last axis of a 2-D array (MXU formulation)."""
+    m, d = x.shape
+    if d % block:
+        raise ValueError(f"last dim {d} not a multiple of {block}")
+    bm = _row_tiles(m)
+    if m % bm:
+        raise ValueError(f"rows {m} not a multiple of tile {bm}")
+    h = jnp.asarray(hd.hadamard_matrix(block))
+    return pl.pallas_call(
+        functools.partial(_fwht_mxu_kernel, block=block),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, block), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), h)
+
+
+def _fwht_bfly_kernel(x_ref, o_ref, *, block: int):
+    """Butterfly formulation: stages of add/sub over the tile axis.
+
+    The (bm, D) tile is viewed as (bm, D/block, block); each stage s
+    pairs lanes differing in bit 2^s. All adds/subs are lane-parallel
+    (VPU), no MXU involvement, matching FWHT's O(n log n) op count."""
+    x = x_ref[...]
+    bm, d = x.shape
+    v = x.reshape(bm, d // block, block)
+    size = 1
+    while size < block:
+        v = v.reshape(bm, d // block, block // (2 * size), 2, size)
+        a = v[:, :, :, 0, :]
+        b = v[:, :, :, 1, :]
+        v = jnp.stack([a + b, a - b], axis=3)
+        size *= 2
+    v = v.reshape(bm, d // block, block) * (1.0 / jnp.sqrt(float(block)))
+    o_ref[...] = v.reshape(bm, d)
+
+
+def block_fwht_bfly(x: jnp.ndarray, block: int = hd.BLOCK) -> jnp.ndarray:
+    """Butterfly (true-FWHT) variant of :func:`block_fwht`.
+
+    Note: stage ordering produces the same *set* of Walsh coefficients in
+    Sylvester (natural) order, identical to the matmul form.
+    """
+    m, d = x.shape
+    if d % block:
+        raise ValueError(f"last dim {d} not a multiple of {block}")
+    bm = _row_tiles(m)
+    if m % bm:
+        raise ValueError(f"rows {m} not a multiple of tile {bm}")
+    return pl.pallas_call(
+        functools.partial(_fwht_bfly_kernel, block=block),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+def _fwht_amax_kernel(x_ref, h_ref, o_ref, amax_ref, *, block: int):
+    """Fused HT + per-tile abs-max (first half of the HQ pipeline).
+
+    Emitting the running amax alongside the transform saves one full
+    memory pass: the quantizer's min-max scale needs max|HT(x)| and
+    computing it in the epilogue of the transform kernel keeps the
+    transformed tile in VMEM."""
+    x = x_ref[...]
+    bm, d = x.shape
+    y = (x.reshape(bm, d // block, block) @ h_ref[...].T).reshape(bm, d)
+    o_ref[...] = y
+    amax_ref[0] = jnp.max(jnp.abs(y))
+
+
+def block_fwht_amax(x: jnp.ndarray, block: int = hd.BLOCK):
+    """Returns (HT(x), amax) where amax = max|HT(x)| (scalar f32)."""
+    m, d = x.shape
+    bm = _row_tiles(m)
+    if d % block or m % bm:
+        raise ValueError(f"bad shape {(m, d)} for block {block}, tile {bm}")
+    h = jnp.asarray(hd.hadamard_matrix(block))
+    y, part = pl.pallas_call(
+        functools.partial(_fwht_amax_kernel, block=block),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, block), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct((m // bm,), jnp.float32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.float32), h)
+    return y, jnp.max(part)

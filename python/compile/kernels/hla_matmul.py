@@ -1,0 +1,175 @@
+"""Pallas kernels: HLA compression + fused INT8 GEMM — the g_w path (§5.2).
+
+Two kernels:
+
+  ``hla_project_amax``  internal-HLA operand compression along the L dim:
+      view (L, D) as (L/16, 16, D), contract the 16-axis with the reduced
+      Walsh matrix H-hat (rank r rows, LP-ordered), emit the (L*r/16, D)
+      compressed tensor + fused abs-max. This is also ABC's forward-time
+      compression kernel — the same op runs right after the forward
+      matmul and its int8 output is what gets *stored* for backward.
+
+  ``hla_gemm``          pseudo-stochastic INT8 quant of both compressed
+      operands + integer GEMM contracting the compressed-L dim (int32
+      accumulate) + FP32 dequant. ``per_token=True`` switches the g_y
+      operand to row-wise scales (LQS per-token mode); those scales sit
+      on the contracted dim, so that branch dequantizes g_y rows first —
+      matching the semantics the paper needs while the per-tensor branch
+      stays a pure INT8 MXU GEMM.
+
+TPU mapping: H-hat is an (r, 16) constant in VMEM; the projection is an
+MXU matmul over the tile axis. Compressed operands are r/16 the size of
+the originals, so GEMM tiles shrink accordingly (the source of HLA's
+speedup before quantization even starts).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import hadamard as hd
+from compile.kernels import ref
+
+TILE_COLS = 256
+TILE_M = 128
+TILE_N = 128
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    t = min(target, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _hla_project_kernel(x_ref, hh_ref, o_ref, amax_ref, *, block: int, rank: int):
+    """(L, bc) column tile -> (L*r/block, bc) compressed + tile abs-max."""
+    x = x_ref[...]
+    l, bc = x.shape
+    hh = hh_ref[...]  # (rank, block)
+    xt = x.reshape(l // block, block, bc)
+    # contract the 16-axis with H-hat: (L/b, r, bc)
+    y = jax.lax.dot_general(
+        hh, xt, (((1,), (1,)), ((), ()))
+    )  # -> (rank, L/b, bc) with batch on neither: dims (r, L/b, bc)? see below
+    # dot_general(hh (r,b), xt (L/b, b, bc)) contracting b: result (r, L/b, bc)
+    y = jnp.swapaxes(y, 0, 1).reshape(l // block * rank, bc)
+    o_ref[...] = y
+    amax_ref[0] = jnp.max(jnp.abs(y))
+
+
+def hla_project_amax(x: jnp.ndarray, rank: int, block: int = hd.BLOCK,
+                     criterion: str = "sequency"):
+    """Compress (L, D) along L to (L*rank/block, D); returns (y, amax)."""
+    l, d = x.shape
+    if l % block:
+        raise ValueError(f"L={l} not a multiple of block {block}")
+    bc = _pick_tile(d, TILE_COLS)
+    hh = jnp.asarray(hd.reduced_hadamard(rank, block, criterion))
+    lc = l // block * rank
+    y, part = pl.pallas_call(
+        functools.partial(_hla_project_kernel, block=block, rank=rank),
+        grid=(d // bc,),
+        in_specs=[
+            pl.BlockSpec((l, bc), lambda j: (0, j)),
+            pl.BlockSpec((rank, block), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((lc, bc), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lc, d), jnp.float32),
+            jax.ShapeDtypeStruct((d // bc,), jnp.float32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.float32), hh)
+    return y, jnp.max(part)
+
+
+def _hla_gemm_kernel(g_ref, x_ref, sg_ref, sx_ref, o_ref, *,
+                     bits: int, per_token: bool):
+    """Contract compressed-L: (Lc, bo)ᵀ x (Lc, bi) -> (bo, bi)."""
+    qmax = ref.QMAX[bits]
+    g = g_ref[...]
+    x = x_ref[...]
+    sx = sx_ref[0, 0]
+
+    def q(t, s):
+        v = t / s
+        u_bits = jax.lax.bitcast_convert_type(t, jnp.uint32)
+        u = (u_bits & jnp.uint32(0x7FF)).astype(jnp.float32) / 2048.0
+        f = jnp.floor(v)
+        r = f + (v - f > u).astype(jnp.float32)
+        return jnp.clip(r, -qmax, qmax)
+
+    qx = q(x, sx).astype(jnp.int8)
+    if per_token:
+        sg = sg_ref[...]  # (Lc, 1) row scales on the contracted dim
+        g_deq = q(g, sg) * sg
+        acc = jax.lax.dot_general(
+            g_deq, qx.astype(jnp.float32), (((0,), (0,)), ((), ()))
+        )
+        o_ref[...] = acc * sx
+    else:
+        sg = sg_ref[0, 0]
+        qg = q(g, sg).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            qg, qx, (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        o_ref[...] = acc.astype(jnp.float32) * (sg * sx)
+
+
+def hla_gemm(gc: jnp.ndarray, xc: jnp.ndarray, s_g: jnp.ndarray,
+             s_x: jnp.ndarray, bits: int = 8,
+             per_token: bool = False) -> jnp.ndarray:
+    """Quant + integer GEMM + dequant over compressed operands.
+
+    gc: (Lc, O), xc: (Lc, I), output g_w: (O, I)."""
+    lc, o = gc.shape
+    lc2, i = xc.shape
+    assert lc == lc2, (gc.shape, xc.shape)
+    bo = _pick_tile(o, TILE_M)
+    bi = _pick_tile(i, TILE_N)
+    if per_token:
+        sg = s_g.reshape(lc, 1).astype(jnp.float32)
+        sg_spec = pl.BlockSpec((lc, 1), lambda i2, j: (0, 0))
+    else:
+        sg = jnp.asarray(s_g, jnp.float32).reshape(1, 1)
+        sg_spec = pl.BlockSpec((1, 1), lambda i2, j: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_hla_gemm_kernel, bits=bits, per_token=per_token),
+        grid=(o // bo, i // bi),
+        in_specs=[
+            pl.BlockSpec((lc, bo), lambda i2, j: (0, i2)),
+            pl.BlockSpec((lc, bi), lambda i2, j: (0, j)),
+            sg_spec,
+            pl.BlockSpec((1, 1), lambda i2, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bo, bi), lambda i2, j: (i2, j)),
+        out_shape=jax.ShapeDtypeStruct((o, i), jnp.float32),
+        interpret=True,
+    )(gc.astype(jnp.float32), xc.astype(jnp.float32), sg,
+      jnp.asarray(s_x, jnp.float32).reshape(1, 1))
+
+
+def hla_matmul(gy: jnp.ndarray, x: jnp.ndarray, rank: int, bits: int = 8,
+               block: int = hd.BLOCK, per_token: bool = False,
+               criterion: str = "sequency") -> jnp.ndarray:
+    """Full g_w path: internal HLA(L) on both operands -> INT8 quant ->
+    integer GEMM -> dequant. gy: (L, O), x: (L, I) -> g_w: (O, I).
+
+    Matches :func:`compile.kernels.ref.hla_matmul_ref` exactly."""
+    qmax = ref.QMAX[bits]
+    gc, amax_g = hla_project_amax(gy, rank, block, criterion)
+    xc, amax_x = hla_project_amax(x, rank, block, criterion)
+    s_x = jnp.maximum(amax_x, 1e-8) / qmax
+    if per_token:
+        s_g = jnp.maximum(jnp.max(jnp.abs(gc), axis=1, keepdims=True), 1e-8) / qmax
+    else:
+        s_g = jnp.maximum(amax_g, 1e-8) / qmax
+    return hla_gemm(gc, xc, s_g, s_x, bits=bits, per_token=per_token)

@@ -1,0 +1,109 @@
+"""Pallas kernel: fused HQ matmul — the g_x backward path (HOT §5.1).
+
+    g_x = dequant( Q4(g_y · Hᵀ) ·int· Q4(H · w) )
+
+Pipeline (mirrors the paper's CUDA module split, adapted to TPU):
+
+  phase 1  ``fwht.block_fwht_amax``   HT along the contracted O dim with a
+           fused abs-max epilogue (scale source for min-max quant).
+  phase 2  ``hq_gemm``                fused pseudo-stochastic INT4 quant of
+           both tiles + integer GEMM (int8 container, int32 accumulate ==
+           the INT4 tensor-core path) + FP32 dequant epilogue.
+
+TPU mapping: the quantized operands are MXU-native int8; accumulation in
+int32 matches the MXU integer pipeline; the dequant epilogue is one
+scalar multiply on the (bm, bn) output tile while it is still in VMEM.
+Grid is (M/bm, N/bn) with the full K dim resident per tile — for HOT's
+layer shapes (K = O ≤ 4608) a (128, K) int8 tile is ≤ 0.6 MB of VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import hadamard as hd
+from compile.kernels import fwht, ref
+
+TILE_M = 128
+TILE_N = 128
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``target`` (keeps the grid
+    exact for the small test shapes; production shapes hit ``target``)."""
+    t = min(target, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _hq_gemm_kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, *, bits: int):
+    """Quantize (bm,K) x (K,bn) tiles pseudo-stochastically and contract.
+
+    Integer math throughout: products of values in [-7,7] accumulated in
+    int32 — bit-identical to an INT4 tensor-core GEMM with int32 accum."""
+    qmax = ref.QMAX[bits]
+    sa = sa_ref[0, 0]
+    sb = sb_ref[0, 0]
+
+    def q(x, s):
+        v = x / s
+        u_bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        u = (u_bits & jnp.uint32(0x7FF)).astype(jnp.float32) / 2048.0
+        f = jnp.floor(v)
+        r = f + (v - f > u).astype(jnp.float32)
+        return jnp.clip(r, -qmax, qmax).astype(jnp.int8)
+
+    qa = q(a_ref[...], sa)
+    qb = q(b_ref[...], sb)
+    acc = jax.lax.dot_general(
+        qa, qb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    o_ref[...] = acc.astype(jnp.float32) * (sa * sb)
+
+
+def hq_gemm(a: jnp.ndarray, b: jnp.ndarray, s_a: jnp.ndarray,
+            s_b: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Fused quant + integer GEMM + dequant: (M,K) x (K,N) -> (M,N) f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = _pick_tile(m, TILE_M)
+    bn = _pick_tile(n, TILE_N)
+    return pl.pallas_call(
+        functools.partial(_hq_gemm_kernel, bits=bits),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32),
+      jnp.asarray(s_a, jnp.float32).reshape(1, 1),
+      jnp.asarray(s_b, jnp.float32).reshape(1, 1))
+
+
+def hq_matmul(gy: jnp.ndarray, w: jnp.ndarray, bits: int = 4,
+              block: int = hd.BLOCK) -> jnp.ndarray:
+    """Full g_x path: HT(O) -> INT4 pseudo-stochastic quant -> integer GEMM
+    -> FP32 dequant. gy: (L, O), w: (O, I) -> g_x: (L, I).
+
+    Must match :func:`compile.kernels.ref.hq_matmul_ref` exactly (same
+    rounding decisions: both quantize the same HT output bits)."""
+    qmax = ref.QMAX[bits]
+    gy_t, amax_g = fwht.block_fwht_amax(gy, block=block)
+    # w's contracted dim (O) is axis 0: transform its transpose. On TPU the
+    # production kernel uses a column-major BlockSpec instead of an explicit
+    # transpose; numerics are identical.
+    wt_t, amax_w = fwht.block_fwht_amax(w.T, block=block)
+    s_g = jnp.maximum(amax_g, 1e-8) / qmax
+    s_w = jnp.maximum(amax_w, 1e-8) / qmax
+    return hq_gemm(gy_t, wt_t.T, s_g, s_w, bits=bits)

@@ -1,0 +1,124 @@
+"""Pallas kernel: pseudo-stochastic min-max quantizer (HOT §5.1).
+
+The paper replaces true stochastic rounding with a *pseudo*-stochastic
+variant (NITI [39]): the lower 11 bits of the FP32 input are reinterpreted
+as the uniform sample that decides round-up vs round-down. This keeps the
+estimator unbiased in practice while making the op a pure elementwise
+function of its input — no RNG state, no extra memory traffic, trivially
+fusable into a transform epilogue or a GEMM prologue.
+
+Kernels here quantize given a precomputed scale (scales come from the
+fused amax epilogues in fwht.py / hla_matmul.py, mirroring the paper's
+two-phase CUDA pipeline). Per-tensor and per-token (row-wise) scales are
+both supported; INT4 values are carried in an int8 container in [-7, 7]
+(see also ``pack_int4``/``unpack_int4`` for the 2-nibbles-per-byte storage
+format used by the rust ABC buffer manager).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels import ref
+
+TILE_ROWS = 128
+
+
+def _quant_kernel(x_ref, s_ref, o_ref, *, bits: int, per_token: bool):
+    x = x_ref[...]
+    s = s_ref[...]
+    scale = s if per_token else s[0, 0]
+    qmax = ref.QMAX[bits]
+    v = x / scale
+    u_bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    u = (u_bits & jnp.uint32(0x7FF)).astype(jnp.float32) / 2048.0
+    f = jnp.floor(v)
+    q = f + (v - f > u).astype(jnp.float32)
+    o_ref[...] = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def quantize_ps(x: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                per_token: bool = False) -> jnp.ndarray:
+    """Pseudo-stochastic quantize (L, D) f32 -> int8 grid values.
+
+    scale: scalar () or (1,1) for per-tensor; (L, 1) for per-token."""
+    m, d = x.shape
+    bm = min(TILE_ROWS, m)
+    if m % bm:
+        raise ValueError(f"rows {m} not a multiple of tile {bm}")
+    if per_token:
+        s = scale.reshape(m, 1).astype(jnp.float32)
+        s_spec = pl.BlockSpec((bm, 1), lambda i: (i, 0))
+    else:
+        s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+        s_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits, per_token=per_token),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)), s_spec],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.int8),
+        interpret=True,
+    )(x.astype(jnp.float32), s)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, per_token: bool):
+    q = q_ref[...]
+    s = s_ref[...]
+    scale = s if per_token else s[0, 0]
+    o_ref[...] = q.astype(jnp.float32) * scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               per_token: bool = False) -> jnp.ndarray:
+    """int8 grid values * scale -> f32 (the CUBLAS-FP32 stage in Fig 8)."""
+    m, d = q.shape
+    bm = min(TILE_ROWS, m)
+    if m % bm:
+        raise ValueError(f"rows {m} not a multiple of tile {bm}")
+    if per_token:
+        s = scale.reshape(m, 1).astype(jnp.float32)
+        s_spec = pl.BlockSpec((bm, 1), lambda i: (i, 0))
+    else:
+        s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+        s_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, per_token=per_token),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)), s_spec],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(q, s)
+
+
+# ---------------------------------------------------------------------------
+# INT4 nibble packing (storage format; PyTorch has no int4 dtype and
+# neither does HLO — the paper packs two INT4 values per INT8 byte).
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """(..., 2k) int8 values in [-8,7] -> (..., k) int8 with two nibbles.
+
+    Low nibble = even index, high nibble = odd index (two's complement)."""
+    if q.shape[-1] % 2:
+        raise ValueError("last dim must be even to pack nibbles")
+    lo = q[..., 0::2].astype(jnp.int32) & 0xF
+    hi = q[..., 1::2].astype(jnp.int32) & 0xF
+    return ((hi << 4) | lo).astype(jnp.uint8).view(jnp.int8)
+
+
+def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4` (sign-extends each nibble)."""
+    b = p.view(jnp.uint8).astype(jnp.int32)
+    lo = b & 0xF
+    hi = (b >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2).astype(jnp.int8)

@@ -1,0 +1,192 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness contracts: pytest (and hypothesis sweeps) assert
+that each Pallas kernel reproduces the corresponding function here, and
+the rust `quant`/`hadamard` modules mirror the same bit-level semantics so
+host-side buffer handling agrees with what the HLO graphs produce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import hadamard as hd
+
+# Integer ranges. INT4 is carried in an int8 container clamped to [-7, 7]
+# (the paper packs two INT4 nibbles per INT8 for storage; value range is
+# symmetric so the dequant scale has no zero-point).
+QMAX = {4: 7, 8: 127}
+
+
+# ---------------------------------------------------------------------------
+# Pseudo-stochastic quantization (NITI-style, HOT §5.1)
+# ---------------------------------------------------------------------------
+
+
+def pseudo_random_unit(x: jnp.ndarray) -> jnp.ndarray:
+    """The paper's zero-cost randomness: the lower 11 mantissa bits of the
+    FP32 input reinterpreted as a uniform sample in [0, 1)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return (bits & jnp.uint32(0x7FF)).astype(jnp.float32) / 2048.0
+
+
+def ps_round(v: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Stochastic rounding of v given uniform sample u in [0,1):
+    round up iff frac(v) > u. Unbiased: E[ps_round(v)] == v for uniform u."""
+    f = jnp.floor(v)
+    return f + (v - f > u).astype(v.dtype)
+
+
+def minmax_scale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Min-max symmetric scale: max|x| over ``axis`` mapped to qmax.
+    axis=None -> per-tensor scalar; axis=1 on (L, D) -> per-token (row)."""
+    qmax = QMAX[bits]
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize_ps(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pseudo-stochastic quantize to a signed integer grid (int8 container).
+
+    The random source is derived from the *input* float's low mantissa
+    bits, so the op is deterministic and fuses into a single elementwise
+    pass (no RNG state, no extra memory traffic) — exactly the property
+    the paper's CUDA kernel exploits."""
+    qmax = QMAX[bits]
+    v = x / scale
+    q = ps_round(v, pseudo_random_unit(x))
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant_ps(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """quantize -> dequantize in one go (the L2 graphs' form)."""
+    s = minmax_scale(x, bits, axis)
+    return dequantize(quantize_ps(x, s, bits), s)
+
+
+# ---------------------------------------------------------------------------
+# LUQ baseline quantizer (Chmiel et al. [7]): logarithmic (power-of-two)
+# stochastic quantization with stochastic underflow pruning.
+# ---------------------------------------------------------------------------
+
+
+def quantize_luq(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Fake-quant LUQ: values snap stochastically to signed powers of two.
+
+    With b bits: 1 sign bit, the rest select one of 2^(b-1)-1 exponent
+    levels below max|x| (plus zero). Underflow (|x| < smallest level) is
+    pruned stochastically to keep the estimate unbiased."""
+    levels = 2 ** (bits - 1) - 1
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20)
+    e_hi = jnp.floor(jnp.log2(amax))
+    e_lo = e_hi - (levels - 1)
+    mag = jnp.abs(x)
+    sgn = jnp.sign(x)
+    # log-domain stochastic rounding between adjacent powers of two
+    e = jnp.clip(jnp.log2(jnp.maximum(mag, 2.0 ** (e_lo - 40))), e_lo, e_hi)
+    ef = jnp.floor(e)
+    pl, ph = 2.0**ef, 2.0 ** (ef + 1.0)
+    ph = jnp.minimum(ph, 2.0**e_hi)
+    p_up = jnp.where(ph > pl, (mag - pl) / jnp.maximum(ph - pl, 1e-20), 0.0)
+    u = pseudo_random_unit(x)
+    snapped = jnp.where(u < p_up, ph, pl)
+    # stochastic underflow: keep w.p. mag/2^e_lo at value 2^e_lo, else 0
+    under = mag < 2.0**e_lo
+    keep = u < mag / 2.0**e_lo
+    out = jnp.where(under, jnp.where(keep, 2.0**e_lo, 0.0), snapped)
+    return sgn * jnp.where(mag == 0.0, 0.0, out)
+
+
+# ---------------------------------------------------------------------------
+# g_x path oracle: HQ matmul (HT along contraction dim + INT4, HOT §5.1)
+# ---------------------------------------------------------------------------
+
+
+def hq_matmul_ref(gy: jnp.ndarray, w: jnp.ndarray, bits: int = 4,
+                  block: int = hd.BLOCK) -> jnp.ndarray:
+    """g_x = Q(g_y Hᵀ) · Q(H w) with pseudo-stochastic INT quant.
+
+    gy: (L, O), w: (O, I)  ->  (L, I). The HT is applied along the shared
+    O dimension so orthogonality cancels: exact in the absence of
+    quantization. Integer GEMM accumulates in int32; the returned value is
+    the dequantized FP32 product."""
+    gy_t = hd.block_ht(gy, axis=1, block=block)
+    w_t = hd.block_ht(w, axis=0, block=block)
+    s_g = minmax_scale(gy_t, bits)
+    s_w = minmax_scale(w_t, bits)
+    q_g = quantize_ps(gy_t, s_g, bits)
+    q_w = quantize_ps(w_t, s_w, bits)
+    acc = jax.lax.dot_general(
+        q_g, q_w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * (s_g * s_w)
+
+
+# ---------------------------------------------------------------------------
+# g_w path oracle: HLA matmul (internal HLA along L + INT8, HOT §5.2)
+# ---------------------------------------------------------------------------
+
+
+def hla_compress_ref(x: jnp.ndarray, rank: int, bits: int = 8,
+                     block: int = hd.BLOCK, criterion: str = "sequency"):
+    """ABC's forward-time compression: HLA along axis 0 (the L dim) then
+    INT8 quantize. Returns (q:int8 (L*rank/block, D), scale: scalar).
+    This pair is exactly what crosses the fwd->bwd boundary (the rust
+    coordinator stores it)."""
+    xc = hd.block_hla(x, rank, axis=0, block=block, criterion=criterion)
+    s = minmax_scale(xc, bits)
+    return quantize_ps(xc, s, bits), s
+
+
+def hla_matmul_ref(gy: jnp.ndarray, x: jnp.ndarray, rank: int,
+                   bits: int = 8, block: int = hd.BLOCK,
+                   per_token: bool = False,
+                   criterion: str = "sequency") -> jnp.ndarray:
+    """g_w = (H-hat g_y)ᵀ · (H-hat x), both INT8-quantized.
+
+    gy: (L, O), x: (L, I) -> (O, I). ``per_token`` selects row-wise scales
+    for the compressed g_y (LQS per-token mode); row scales live on the
+    *contracted* dim so that branch dequantizes before the GEMM — the
+    per-tensor branch stays a pure INT8 GEMM."""
+    gc = hd.block_hla(gy, rank, axis=0, block=block, criterion=criterion)
+    xq, s_x = hla_compress_ref(x, rank, bits, block, criterion)
+    if per_token:
+        s_g = minmax_scale(gc, bits, axis=1)  # (Lc, 1)
+        g_deq = dequantize(quantize_ps(gc, s_g, bits), s_g)
+        acc = jax.lax.dot_general(
+            g_deq, xq.astype(jnp.float32), (((0,), (0,)), ((), ()))
+        )
+        return acc * s_x
+    s_g = minmax_scale(gc, bits)
+    q_g = quantize_ps(gc, s_g, bits)
+    acc = jax.lax.dot_general(
+        q_g, xq, (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * (s_g * s_x)
+
+
+# ---------------------------------------------------------------------------
+# LBP-WHT baseline oracles (Yang et al. [46])
+# ---------------------------------------------------------------------------
+
+
+def lbp_gx_ref(gy: jnp.ndarray, w: jnp.ndarray, rank: int,
+               block: int = hd.BLOCK) -> jnp.ndarray:
+    """LBP-WHT's g_x: *external* HLA on the L dim of g_y —
+    g_x ≈ H-hatᵀ (H-hat g_y) w. FP arithmetic (their kernels are FP16)."""
+    gc = hd.block_hla(gy, rank, axis=0, block=block)
+    out = gc @ w
+    return hd.block_hla_expand(out, rank, axis=0, block=block)
+
+
+def lbp_gw_ref(gy: jnp.ndarray, x: jnp.ndarray, rank: int,
+               block: int = hd.BLOCK) -> jnp.ndarray:
+    """LBP-WHT's g_w: internal HLA along L (same as HOT) but FP, no quant."""
+    gc = hd.block_hla(gy, rank, axis=0, block=block)
+    xc = hd.block_hla(x, rank, axis=0, block=block)
+    return gc.T @ xc

@@ -1,0 +1,342 @@
+"""L2 layer primitives with *explicit* forward/backward.
+
+HOT's contribution is what happens between the forward and backward pass
+of every linear layer: which tensors are saved (ABC), in what format
+(HLA+INT8), and how each gradient GEMM is approximated (HQ vs HLA). To
+make that first-class — and to let the rust coordinator own the saved
+buffers (the red "CTX" in the paper's Fig 5) — backprop here is written
+*manually*: every primitive is a (forward -> ctx, backward(ctx, g) ->
+grads) pair instead of relying on jax autodiff. pytest verifies the fp
+variant against ``jax.grad`` to machine precision.
+
+All qlinears operate on flattened (N = B*L, D) operands. Because L is a
+multiple of the Hadamard tile (16), flattening never mixes samples within
+a tile, so per-sample HLA along L equals block-HLA along N.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import hadamard as hd
+from compile.config import BackwardConfig
+from compile.kernels import ref
+
+Ctx = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# qlinear: y = x @ w.T + b — the paper's object of study
+# ---------------------------------------------------------------------------
+
+
+def qlinear_fwd(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                cfg: BackwardConfig) -> Tuple[jnp.ndarray, Ctx]:
+    """Forward (always exact FP32) + build the saved ctx for backward.
+
+    x: (N, I), w: (O, I), b: (O,) -> y: (N, O).
+
+    What goes into ctx is *the* memory story of the paper:
+      - fp / lbp / luq / int4 / all gx_* ablations: raw x (these methods
+        keep FP activations, Fig 2);
+      - hot & gw_hot with ABC: HLA+INT8-compressed x + one scale — 1/8 of
+        the bytes (Fig 5's CTX);
+      - hot with abc=False (Table 7's first row): raw x is kept and the
+        same compression runs at backward time (numerically identical,
+        memory savings forfeited).
+    """
+    y = x @ w.T + b
+    # Layers whose N (flattened L) dim doesn't tile into Hadamard blocks —
+    # e.g. the pooled classifier head when B % 16 != 0 — keep raw FP
+    # residuals and exact backward, matching the paper's practice of
+    # leaving the final head un-optimized.
+    needs_compressed = (cfg.variant in ("hot", "gw_hot") and cfg.abc
+                        and x.shape[0] % cfg.block == 0)
+    if needs_compressed:
+        xq, sx = ref.hla_compress_ref(x, cfg.rank, cfg.gw_bits, cfg.block,
+                                      cfg.criterion)
+        ctx = {"xq": xq, "sx": sx}
+    else:
+        ctx = {"x": x}
+    return y, ctx
+
+
+def _gx_exact(gy, w):
+    return gy @ w
+
+
+def _gw_exact(gy, x):
+    return gy.T @ x
+
+
+def _gx_hq(gy, w, cfg, bits):
+    """HQ: HT along the contracted O dim + pseudo-stochastic INT quant."""
+    if cfg.use_pallas:
+        from compile.kernels import hq_matmul
+        return hq_matmul.hq_matmul(gy, w, bits=bits, block=cfg.block)
+    return ref.hq_matmul_ref(gy, w, bits=bits, block=cfg.block)
+
+
+def _gx_q4_noht(gy, w, cfg):
+    """Plain INT4 on g_x (Table 2's '4-bit Q' row): no HT protection."""
+    s_g = ref.minmax_scale(gy, cfg.gx_bits)
+    s_w = ref.minmax_scale(w, cfg.gx_bits)
+    q_g = ref.quantize_ps(gy, s_g, cfg.gx_bits)
+    q_w = ref.quantize_ps(w, s_w, cfg.gx_bits)
+    acc = jax.lax.dot_general(q_g, q_w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (s_g * s_w)
+
+
+def _gx_ext_hla(gy, w, cfg):
+    """External HLA on L (LBP-WHT's g_x): compress rows, GEMM, expand."""
+    return ref.lbp_gx_ref(gy, w, cfg.rank, cfg.block)
+
+
+def _gx_int_hla(gy, w, cfg):
+    """Internal HLA over the contracted O dim (Table 2's worst row)."""
+    gc = hd.block_hla(gy, cfg.rank, axis=1, block=cfg.block)
+    wc = hd.block_hla(w, cfg.rank, axis=0, block=cfg.block)
+    return gc @ wc
+
+
+def _gw_hot(gy, ctx, cfg, pt_flag):
+    """HOT's g_w: internal HLA along L + INT8, LQS-selected scale scheme.
+
+    ``pt_flag`` is a traced f32 scalar in {0,1}: 1 -> per-token scales for
+    the compressed g_y, 0 -> per-tensor. Carrying it as data (rather than
+    a static) lets one HLO artifact serve any LQS selection — the rust
+    calibration controller just feeds a different mask."""
+    gc = hd.block_hla(gy, cfg.rank, axis=0, block=cfg.block, criterion=cfg.criterion)
+    if "xq" in ctx:
+        xq, sx = ctx["xq"], ctx["sx"]
+    else:
+        xq, sx = ref.hla_compress_ref(ctx["x"], cfg.rank, cfg.gw_bits,
+                                      cfg.block, cfg.criterion)
+    bits = cfg.gw_bits
+    # per-tensor branch (pure INT8 GEMM)
+    s_t = ref.minmax_scale(gc, bits)
+    q_t = ref.quantize_ps(gc, s_t, bits)
+    out_t = jax.lax.dot_general(q_t, xq, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32
+                                ).astype(jnp.float32) * (s_t * sx)
+    # per-token branch (row scales on the contracted dim -> dequant first)
+    s_k = ref.minmax_scale(gc, bits, axis=1)
+    g_deq = ref.dequantize(ref.quantize_ps(gc, s_k, bits), s_k)
+    out_k = jax.lax.dot_general(g_deq, xq.astype(jnp.float32),
+                                (((0,), (0,)), ((), ()))) * sx
+    return pt_flag * out_k + (1.0 - pt_flag) * out_t
+
+
+def _gw_hla_only(gy, ctx, cfg):
+    """Internal HLA, FP arithmetic (LBP-WHT's g_w / Table 2 row 3)."""
+    x = ctx["x"]
+    gc = hd.block_hla(gy, cfg.rank, axis=0, block=cfg.block)
+    xc = hd.block_hla(x, cfg.rank, axis=0, block=cfg.block)
+    return gc.T @ xc
+
+
+def _gw_hq4(gy, ctx, cfg):
+    """HT+INT4 on g_w (Table 2 row 2 — the configuration that *fails*)."""
+    x = ctx["x"]
+    gy_t = hd.block_ht(gy, axis=0, block=cfg.block)
+    x_t = hd.block_ht(x, axis=0, block=cfg.block)
+    s_g = ref.minmax_scale(gy_t, 4)
+    s_x = ref.minmax_scale(x_t, 4)
+    q_g = ref.quantize_ps(gy_t, s_g, 4)
+    q_x = ref.quantize_ps(x_t, s_x, 4)
+    acc = jax.lax.dot_general(q_g, q_x, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (s_g * s_x)
+
+
+def _luq_pair(gy, other, bits_other=4):
+    """LUQ: log-quantize g_y (FP4-style), min-max INT4 the other operand."""
+    g_q = ref.quantize_luq(gy, 4)
+    s_o = ref.minmax_scale(other, bits_other)
+    o_q = ref.dequantize(ref.quantize_ps(other, s_o, bits_other), s_o)
+    return g_q, o_q
+
+
+def qlinear_bwd(gy: jnp.ndarray, w: jnp.ndarray, ctx: Ctx,
+                cfg: BackwardConfig, pt_flag: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Backward for y = x w.T + b: returns (g_x, g_w, g_b).
+
+    gy: (N, O). Every variant keeps g_b exact (a column sum — the paper
+    never quantizes bias gradients)."""
+    v = cfg.variant
+    g_b = jnp.sum(gy, axis=0)
+    n, o = gy.shape
+    # static shape gates: the HQ path transforms the contracted O dim, the
+    # HLA/L paths tile the flattened N dim. Layers that don't tile (the
+    # classifier head, odd patch dims) silently fall back to exact BP.
+    can_o = o % cfg.block == 0
+    can_n = n % cfg.block == 0
+
+    # --- g_x (needs w) ------------------------------------------------
+    if v in ("hot", "gx_hq4") and not can_o:
+        g_x = _gx_exact(gy, w)
+    elif v in ("lbp", "gx_ext_hla", "gx_int_hla") and not (can_n if v != "gx_int_hla" else can_o):
+        g_x = _gx_exact(gy, w)
+    elif v in ("hot", "gx_hq4"):
+        g_x = _gx_hq(gy, w, cfg, cfg.gx_bits)
+    elif v == "gx_q4":
+        g_x = _gx_q4_noht(gy, w, cfg)
+    elif v in ("lbp", "gx_ext_hla"):
+        g_x = _gx_ext_hla(gy, w, cfg)
+    elif v == "gx_int_hla":
+        g_x = _gx_int_hla(gy, w, cfg)
+    elif v == "luq":
+        g_q, w_q = _luq_pair(gy, w)
+        g_x = g_q @ w_q
+    elif v == "int4":
+        g_x = _gx_q4_noht(gy, w, cfg)
+    else:  # fp, gw_*
+        g_x = _gx_exact(gy, w)
+
+    # --- g_w (needs saved x / compressed x) ----------------------------
+    if v in ("hot", "gw_hot", "lbp", "gw_hla", "gw_hq4") and not can_n:
+        g_w = _gw_exact(gy, ctx["x"])
+    elif v in ("hot", "gw_hot"):
+        g_w = _gw_hot(gy, ctx, cfg, pt_flag)
+    elif v in ("lbp", "gw_hla"):
+        g_w = _gw_hla_only(gy, ctx, cfg)
+    elif v == "gw_hq4":
+        g_w = _gw_hq4(gy, ctx, cfg)
+    elif v == "luq":
+        g_q, x_q = _luq_pair(gy, ctx["x"])
+        g_w = g_q.T @ x_q
+    elif v == "int4":
+        x = ctx["x"]
+        s_g = ref.minmax_scale(gy, 4)
+        s_x = ref.minmax_scale(x, 4)
+        q_g = ref.quantize_ps(gy, s_g, 4)
+        q_x = ref.quantize_ps(x, s_x, 4)
+        g_w = jax.lax.dot_general(q_g, q_x, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32
+                                  ).astype(jnp.float32) * (s_g * s_x)
+    else:  # fp, gx_*
+        g_w = _gw_exact(gy, ctx["x"])
+
+    # g_w is (O, I): gy.T @ x with gy (N,O), x (N,I) — matches w's layout.
+    return g_x, g_w, g_b
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (FP; HOT leaves normalization layers untouched)
+# ---------------------------------------------------------------------------
+
+
+def layernorm_fwd(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  eps: float = 1e-5) -> Tuple[jnp.ndarray, Ctx]:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = xc * rstd
+    return xhat * gamma + beta, {"xhat": xhat, "rstd": rstd}
+
+
+def layernorm_bwd(gy: jnp.ndarray, gamma: jnp.ndarray, ctx: Ctx
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    xhat, rstd = ctx["xhat"], ctx["rstd"]
+    d = xhat.shape[-1]
+    g_gamma = jnp.sum(gy * xhat, axis=tuple(range(gy.ndim - 1)))
+    g_beta = jnp.sum(gy, axis=tuple(range(gy.ndim - 1)))
+    gh = gy * gamma
+    g_x = (gh - jnp.mean(gh, axis=-1, keepdims=True)
+           - xhat * jnp.mean(gh * xhat, axis=-1, keepdims=True)) * rstd
+    _ = d
+    return g_x, g_gamma, g_beta
+
+
+# ---------------------------------------------------------------------------
+# GELU (tanh approximation, as in ViT/timm)
+# ---------------------------------------------------------------------------
+
+_K0 = 0.7978845608028654  # sqrt(2/pi)
+_K1 = 0.044715
+
+
+def gelu_fwd(x: jnp.ndarray) -> Tuple[jnp.ndarray, Ctx]:
+    t = jnp.tanh(_K0 * (x + _K1 * x ** 3))
+    return 0.5 * x * (1.0 + t), {"x": x, "t": t}
+
+
+def gelu_bwd(gy: jnp.ndarray, ctx: Ctx) -> jnp.ndarray:
+    x, t = ctx["x"], ctx["t"]
+    dt = (1.0 - t * t) * _K0 * (1.0 + 3.0 * _K1 * x * x)
+    return gy * (0.5 * (1.0 + t) + 0.5 * x * dt)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head self-attention core (FP; the qkv/proj linears around it are
+# qlinears and carry HOT's machinery — the score/context matmuls stay FP,
+# matching the paper which only rewires nn.Linear/conv backward)
+# ---------------------------------------------------------------------------
+
+
+def attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  heads: int, causal: bool) -> Tuple[jnp.ndarray, Ctx]:
+    """q, k, v: (B, L, D) -> out (B, L, D)."""
+    b, l, d = q.shape
+    dh = d // heads
+
+    def split(t):
+        return t.reshape(b, l, heads, dh).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = (qh @ kh.transpose(0, 1, 3, 2)) / jnp.sqrt(float(dh))
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), jnp.float32))
+        scores = jnp.where(mask[None, None] > 0, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = (p @ vh).transpose(0, 2, 1, 3).reshape(b, l, d)
+    return out, {"qh": qh, "kh": kh, "vh": vh, "p": p}
+
+
+def attention_bwd(gy: jnp.ndarray, ctx: Ctx, heads: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    qh, kh, vh, p = ctx["qh"], ctx["kh"], ctx["vh"], ctx["p"]
+    b, h, l, dh = qh.shape
+    d = h * dh
+    go = gy.reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+    g_v = p.transpose(0, 1, 3, 2) @ go
+    g_p = go @ vh.transpose(0, 1, 3, 2)
+    # softmax backward: g_s = p * (g_p - sum(g_p * p))
+    g_s = p * (g_p - jnp.sum(g_p * p, axis=-1, keepdims=True))
+    g_s = g_s / jnp.sqrt(float(dh))
+    g_q = g_s @ kh
+    g_k = g_s.transpose(0, 1, 3, 2) @ qh
+
+    def merge(t):
+        return t.transpose(0, 2, 1, 3).reshape(b, l, d)
+
+    return merge(g_q), merge(g_k), merge(g_v)
+
+
+# ---------------------------------------------------------------------------
+# Softmax cross-entropy (mean over all label positions)
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent_fwd(logits: jnp.ndarray, labels: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, Ctx]:
+    """logits (N, C), labels (N,) int32 -> (loss, acc, ctx)."""
+    lse = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - lse
+    n, c = logits.shape
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    _ = n
+    return loss, acc, {"p": jnp.exp(logp), "onehot": onehot}
+
+
+def softmax_xent_bwd(ctx: Ctx) -> jnp.ndarray:
+    """d loss / d logits (for unit upstream gradient)."""
+    return (ctx["p"] - ctx["onehot"]) / float(ctx["p"].shape[0])

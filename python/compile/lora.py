@@ -1,0 +1,288 @@
+"""HOT + LoRA joint optimization (paper §5.3, Tables 3/4/9).
+
+LoRA freezes the base weight w and learns a low-rank update B·A (rank
+``r_lora``). HOT composes with it per the paper's ablation (Table 9):
+
+  * frozen path:    w never updates, so **g_w is skipped entirely**; only
+    g_x flows through w. ``hot_frozen=True`` computes that g_x with HOT's
+    HQ-INT4 (the winning configuration).
+  * decomposed path: A/B gradients. ``hot_decomposed=True`` applies
+    HLA+INT8 to them (the configuration the paper shows *fails* —
+    57.96% vs 92.51%); default is exact BP, the paper's recommendation.
+
+Only LoRA-adapted qlinears differ from model.py; everything else
+(layernorm, attention core, gelu, loss) is reused. Adapted layers:
+qkv, proj, fc1, fc2 (vit/lm blocks). embed/head stay trainable in full
+(standard practice for small heads).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import layers as L
+from compile import model as M
+from compile.config import BackwardConfig, ModelConfig, OptimizerConfig
+from compile.train import adamw_update
+
+Params = Dict[str, jnp.ndarray]
+
+LORA_TARGETS = ("attn.wqkv", "attn.wo", "fc1.w", "fc2.w")
+
+
+def lora_param_specs(cfg: ModelConfig, r_lora: int) -> List[Tuple[str, tuple]]:
+    """(name, shape) for every LoRA tensor, sorted by name."""
+    base = M.init_params(cfg, seed=0)
+    specs = []
+    for k, v in base.items():
+        if any(k.endswith(t) for t in LORA_TARGETS):
+            o, i = v.shape
+            specs.append((k + ".lora_a", (r_lora, i)))
+            specs.append((k + ".lora_b", (o, r_lora)))
+    return sorted(specs)
+
+
+def init_lora(cfg: ModelConfig, r_lora: int = 8, seed: int = 1) -> Params:
+    """A ~ N(0, 1/r); B = 0 (standard LoRA init: adapter starts as a no-op)."""
+    rng = np.random.default_rng(seed)
+    out: Params = {}
+    for name, shape in lora_param_specs(cfg, r_lora):
+        if name.endswith(".lora_a"):
+            out[name] = jnp.asarray(rng.normal(0, 1.0 / shape[0], shape),
+                                    jnp.float32)
+        else:
+            out[name] = jnp.zeros(shape, jnp.float32)
+    return out
+
+
+def lora_names(cfg: ModelConfig, r_lora: int = 8) -> List[str]:
+    return [n for n, _ in lora_param_specs(cfg, r_lora)]
+
+
+# ---------------------------------------------------------------------------
+# LoRA-adapted qlinear
+# ---------------------------------------------------------------------------
+
+
+def qlinear_lora_fwd(x, w, b, a_mat, b_mat, scale: float,
+                     bcfg: BackwardConfig, hot_decomposed: bool):
+    """y = x wᵀ + scale · (x Aᵀ) Bᵀ + b.
+
+    ctx keeps u = x Aᵀ (tiny: N×r) and x — compressed iff the decomposed
+    path runs under HOT (otherwise FP, per the paper's winning recipe).
+    The frozen path never needs x at all (g_w skipped)."""
+    u = x @ a_mat.T
+    y = x @ w.T + scale * (u @ b_mat.T) + b
+    from compile.kernels import ref
+    if hot_decomposed and x.shape[0] % bcfg.block == 0:
+        xq, sx = ref.hla_compress_ref(x, bcfg.rank, bcfg.gw_bits, bcfg.block,
+                                      bcfg.criterion)
+        ctx = {"u": u, "xq": xq, "sx": sx}
+    else:
+        ctx = {"u": u, "x": x}
+    return y, ctx
+
+
+def qlinear_lora_bwd(gy, w, a_mat, b_mat, scale: float, ctx,
+                     bcfg: BackwardConfig, hot_frozen: bool,
+                     hot_decomposed: bool, pt_flag):
+    """Returns (g_x, g_a, g_b_mat, g_bias). No g_w — w is frozen."""
+    from compile import hadamard as hd
+    from compile.kernels import ref
+    from compile.layers import _gx_hq
+
+    n, o = gy.shape
+    g_bias = jnp.sum(gy, axis=0)
+    # frozen-path g_x
+    if hot_frozen and o % bcfg.block == 0:
+        g_x = _gx_hq(gy, w, bcfg, bcfg.gx_bits)
+    else:
+        g_x = gy @ w
+    # decomposed-path gradients
+    u = ctx["u"]
+    g_u = scale * (gy @ b_mat)  # (N, r)
+    if hot_decomposed and "xq" in ctx:
+        # HLA+INT8 on the decomposed g_w-like products (Table 9 ablation)
+        gc_u = hd.block_hla(g_u, bcfg.rank, axis=0, block=bcfg.block)
+        s_gu = ref.minmax_scale(gc_u, bcfg.gw_bits)
+        q_gu = ref.quantize_ps(gc_u, s_gu, bcfg.gw_bits)
+        import jax
+        g_a = jax.lax.dot_general(
+            q_gu, ctx["xq"], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32
+        ).astype(jnp.float32) * (s_gu * ctx["sx"])
+        gc_y = hd.block_hla(gy, bcfg.rank, axis=0, block=bcfg.block)
+        uc = hd.block_hla(u, bcfg.rank, axis=0, block=bcfg.block)
+        s_gy = ref.minmax_scale(gc_y, bcfg.gw_bits)
+        s_u = ref.minmax_scale(uc, bcfg.gw_bits)
+        g_bm = scale * (ref.dequantize(ref.quantize_ps(gc_y, s_gy, bcfg.gw_bits), s_gy).T
+                        @ ref.dequantize(ref.quantize_ps(uc, s_u, bcfg.gw_bits), s_u))
+    else:
+        x = ctx["x"]
+        g_a = g_u.T @ x                      # (r, I)
+        g_bm = scale * (gy.T @ u)            # (O, r)
+    g_x = g_x + g_u @ a_mat
+    _ = pt_flag
+    return g_x, g_a, g_bm, g_bias
+
+
+# ---------------------------------------------------------------------------
+# Full LoRA model forward/backward (reuses model.py non-linear pieces)
+# ---------------------------------------------------------------------------
+
+
+def forward_lora(params: Params, lparams: Params, x, labels,
+                 cfg: ModelConfig, bcfg: BackwardConfig, scale: float,
+                 hot_decomposed: bool, lqs_mask):
+    b, l, d = x.shape[0], cfg.seq, cfg.d_model
+    xf = M._embed_input(params, x, cfg)
+    ctxs: list = []
+    qi = 0
+
+    def ql_plain(name, t2d, w, bias):
+        nonlocal qi
+        y, ctx = L.qlinear_fwd(t2d, w, bias, bcfg)
+        ctxs.append(("ql", name, ctx, lqs_mask[qi]))
+        qi += 1
+        return y
+
+    def ql_lora(wname, bname, t2d):
+        nonlocal qi
+        y, ctx = qlinear_lora_fwd(t2d, params[wname], params[bname],
+                                  lparams[wname + ".lora_a"],
+                                  lparams[wname + ".lora_b"],
+                                  scale, bcfg, hot_decomposed)
+        ctxs.append(("qlora", wname, ctx, lqs_mask[qi]))
+        qi += 1
+        return y
+
+    h = ql_plain("embed", xf.reshape(b * l, -1), params["embed.w"],
+                 params["embed.b"])
+    h = h.reshape(b, l, d) + params["pos"][None]
+    for i in range(cfg.depth):
+        pre = f"blk{i}."
+        hn, c1 = L.layernorm_fwd(h, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        ctxs.append(("ln", pre + "ln1", c1, None))
+        qkv = ql_lora(pre + "attn.wqkv", pre + "attn.bqkv",
+                      hn.reshape(b * l, d)).reshape(b, l, 3 * d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        att, ca = L.attention_fwd(q, k, v, cfg.heads, causal=(cfg.arch == "lm"))
+        ctxs.append(("attn", pre + "attn", ca, None))
+        proj = ql_lora(pre + "attn.wo", pre + "attn.bo",
+                       att.reshape(b * l, d))
+        h = h + proj.reshape(b, l, d)
+        hn, c2 = L.layernorm_fwd(h, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        ctxs.append(("ln", pre + "ln2", c2, None))
+        f1 = ql_lora(pre + "fc1.w", pre + "fc1.b", hn.reshape(b * l, d))
+        g1, cg = L.gelu_fwd(f1)
+        ctxs.append(("gelu", pre + "gelu", cg, None))
+        f2 = ql_lora(pre + "fc2.w", pre + "fc2.b", g1)
+        h = h + f2.reshape(b, l, d)
+    hn, cf = L.layernorm_fwd(h, params["lnf.g"], params["lnf.b"])
+    ctxs.append(("ln", "lnf", cf, None))
+    pooled = jnp.mean(hn, axis=1)
+    logits = ql_plain("head", pooled, params["head.w"], params["head.b"])
+    loss, acc, cce = L.softmax_xent_fwd(logits, labels)
+    ctxs.append(("ce", "loss", cce, None))
+    return loss, acc, ctxs
+
+
+def backward_lora(params: Params, lparams: Params, x, cfg: ModelConfig,
+                  bcfg: BackwardConfig, scale: float, hot_frozen: bool,
+                  hot_decomposed: bool, ctxs: list) -> Params:
+    """Gradients for LoRA params + embed/head (the trainable set)."""
+    b, l, d = x.shape[0], cfg.seq, cfg.d_model
+    grads: Params = {}
+    it = list(ctxs)[::-1]
+    pos = 0
+
+    def take(kind):
+        nonlocal pos
+        k, name, ctx, flag = it[pos]
+        assert k == kind, (k, kind, name)
+        pos += 1
+        return name, ctx, flag
+
+    _, cce, _ = take("ce")
+    g_logits = L.softmax_xent_bwd(cce)
+    name, ch, fh = take("ql")
+    g_pooled, grads["head.w"], grads["head.b"] = L.qlinear_bwd(
+        g_logits, params["head.w"], ch, bcfg, fh)
+    _, cf, _ = take("ln")
+    g_hn = jnp.broadcast_to(g_pooled[:, None, :] / float(l), (b, l, d))
+    g_h, _, _ = L.layernorm_bwd(g_hn, params["lnf.g"], cf)
+
+    def lora_bwd(gy, wname, ctx, flag):
+        g_x, g_a, g_bm, g_bias = qlinear_lora_bwd(
+            gy, params[wname], lparams[wname + ".lora_a"],
+            lparams[wname + ".lora_b"], scale, ctx, bcfg,
+            hot_frozen, hot_decomposed, flag)
+        grads[wname + ".lora_a"] = g_a
+        grads[wname + ".lora_b"] = g_bm
+        _ = g_bias  # biases frozen alongside w
+        return g_x
+
+    for i in reversed(range(cfg.depth)):
+        pre = f"blk{i}."
+        name, cfc2, ff2 = take("qlora")
+        g_f2in = lora_bwd(g_h.reshape(b * l, d), pre + "fc2.w", cfc2, ff2)
+        _, cg, _ = take("gelu")
+        g_f1 = L.gelu_bwd(g_f2in, cg)
+        name, cfc1, ff1 = take("qlora")
+        g_hn2 = lora_bwd(g_f1, pre + "fc1.w", cfc1, ff1)
+        _, c2, _ = take("ln")
+        g_res, _, _ = L.layernorm_bwd(g_hn2.reshape(b, l, d),
+                                      params[pre + "ln2.g"], c2)
+        g_h = g_h + g_res
+        name, cproj, fp_ = take("qlora")
+        g_att = lora_bwd(g_h.reshape(b * l, d), pre + "attn.wo", cproj, fp_)
+        _, ca, _ = take("attn")
+        g_q, g_k, g_v = L.attention_bwd(g_att.reshape(b, l, d), ca, cfg.heads)
+        g_qkv = jnp.concatenate([g_q, g_k, g_v], axis=-1)
+        name, cqkv, fq = take("qlora")
+        g_hn1 = lora_bwd(g_qkv.reshape(b * l, 3 * d), pre + "attn.wqkv",
+                         cqkv, fq)
+        _, c1, _ = take("ln")
+        g_res, _, _ = L.layernorm_bwd(g_hn1.reshape(b, l, d),
+                                      params[pre + "ln1.g"], c1)
+        g_h = g_h + g_res
+
+    _, cemb, fe = take("ql")
+    _, grads["embed.w"], grads["embed.b"] = L.qlinear_bwd(
+        g_h.reshape(b * l, d), params["embed.w"], cemb, bcfg, fe)
+    assert pos == len(it)
+    return grads
+
+
+def make_lora_train_step(cfg: ModelConfig, bcfg: BackwardConfig,
+                         ocfg: OptimizerConfig, r_lora: int = 8,
+                         scale: float = 2.0, hot_frozen: bool = True,
+                         hot_decomposed: bool = False):
+    """f(base_params, trainable, m, v, step, lr, lqs_mask, x, y) ->
+    (new_trainable, new_m, new_v, loss, acc).
+
+    ``trainable`` = LoRA tensors + embed/head (+biases), flattened in
+    sorted-name order by aot.py."""
+    _ = r_lora
+
+    def split(trainable):
+        lp = {k: v for k, v in trainable.items() if ".lora_" in k}
+        extra = {k: v for k, v in trainable.items() if ".lora_" not in k}
+        return lp, extra
+
+    def step_fn(base, trainable, m, v, step, lr, lqs_mask, x, y):
+        lp, extra = split(trainable)
+        merged = dict(base)
+        merged.update(extra)  # embed/head live updates
+        loss, acc, ctxs = forward_lora(merged, lp, x, y, cfg, bcfg, scale,
+                                       hot_decomposed, lqs_mask)
+        grads = backward_lora(merged, lp, x, cfg, bcfg, scale,
+                              hot_frozen, hot_decomposed, ctxs)
+        new_t, new_m, new_v = adamw_update(trainable, grads, m, v, step,
+                                           lr, ocfg)
+        return new_t, new_m, new_v, loss, acc
+
+    return step_fn

@@ -1,0 +1,282 @@
+"""L2 model: ViT-style transformer / MLP with explicit manual backprop.
+
+``forward`` returns (logits, ctx-list); ``backward`` consumes the ctx-list
+and produces the full gradient pytree. The fp variant is verified against
+``jax.grad`` in pytest. The ctx-list is the paper's Fig-5 "CTX": in the
+split fwd/bwd artifacts its qlinear entries (int8 + scale under HOT's
+ABC) literally cross the HLO boundary into the rust coordinator's buffer
+manager.
+
+Parameter pytree layout (dict; flattened in sorted-key order by aot.py):
+
+  embed.w (D, P)  embed.b (D,)  pos (L, D)
+  blk{i}.ln1.g/.b          blk{i}.attn.wqkv (3D, D) / .bqkv
+  blk{i}.attn.wo (D, D) / .bo
+  blk{i}.ln2.g/.b          blk{i}.fc1.w (M, D)/.b   blk{i}.fc2.w (D, M)/.b
+  lnf.g/.b      head.w (C, D)   head.b (C,)
+
+qlinear order for the LQS mask: embed, then per block [qkv, proj, fc1,
+fc2] (vit/lm) or [fc1, fc2] (mlp), then head — matching
+``ModelConfig.n_qlinears``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import layers as L
+from compile.config import BackwardConfig, ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """truncated-normal-ish init (numpy: artifacts must be reproducible
+    without jax RNG-version drift; rust re-reads these exact bytes)."""
+    rng = np.random.default_rng(seed)
+
+    def dense(o, i, scale=None):
+        s = scale if scale is not None else (2.0 / (o + i)) ** 0.5
+        return jnp.asarray(rng.normal(0.0, s, size=(o, i)), jnp.float32)
+
+    def zeros(*shape):
+        return jnp.zeros(shape, jnp.float32)
+
+    def ones(*shape):
+        return jnp.ones(shape, jnp.float32)
+
+    d, m, l = cfg.d_model, cfg.d_mlp, cfg.seq
+    p: Params = {
+        "embed.w": dense(d, cfg.in_dim),
+        "embed.b": zeros(d),
+        "pos": jnp.asarray(rng.normal(0, 0.02, size=(l, d)), jnp.float32),
+        "lnf.g": ones(d), "lnf.b": zeros(d),
+        "head.w": dense(cfg.n_classes, d), "head.b": zeros(cfg.n_classes),
+    }
+    for i in range(cfg.depth):
+        pre = f"blk{i}."
+        p[pre + "ln2.g"] = ones(d)
+        p[pre + "ln2.b"] = zeros(d)
+        p[pre + "fc1.w"] = dense(m, d)
+        p[pre + "fc1.b"] = zeros(m)
+        p[pre + "fc2.w"] = dense(d, m)
+        p[pre + "fc2.b"] = zeros(d)
+        if cfg.arch in ("vit", "lm"):
+            p[pre + "ln1.g"] = ones(d)
+            p[pre + "ln1.b"] = zeros(d)
+            p[pre + "attn.wqkv"] = dense(3 * d, d)
+            p[pre + "attn.bqkv"] = zeros(3 * d)
+            p[pre + "attn.wo"] = dense(d, d)
+            p[pre + "attn.bo"] = zeros(d)
+    return p
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    return sorted(init_params(cfg, seed=0).keys())
+
+
+def qlinear_names(cfg: ModelConfig) -> List[str]:
+    """LQS-mask ordering of the quantized linears."""
+    names = ["embed"]
+    for i in range(cfg.depth):
+        if cfg.arch in ("vit", "lm"):
+            names += [f"blk{i}.qkv", f"blk{i}.proj"]
+        names += [f"blk{i}.fc1", f"blk{i}.fc2"]
+    names.append("head")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_input(params: Params, x, cfg: ModelConfig):
+    """vision/mlp: x (B, L, P) patch features; lm: x (B, L) int32 tokens
+    are one-hot embedded through the same qlinear (keeps every trainable
+    matmul on the HOT path)."""
+    if cfg.arch == "lm":
+        x = jax.nn.one_hot(x, cfg.in_dim, dtype=jnp.float32)
+    return x
+
+
+def forward(params: Params, x, labels, cfg: ModelConfig,
+            bcfg: BackwardConfig, lqs_mask: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, list]:
+    """Returns (loss, acc, ctxs). ctxs[k] aligns with the backward walk."""
+    b = x.shape[0]
+    l, d = cfg.seq, cfg.d_model
+    xf = _embed_input(params, x, cfg)
+    ctxs: list = []
+    qi = 0  # qlinear index into lqs_mask
+
+    def ql(name, t2d, w, bias):
+        nonlocal qi
+        y, ctx = L.qlinear_fwd(t2d, w, bias, bcfg)
+        ctxs.append(("ql", name, ctx, lqs_mask[qi]))
+        qi += 1
+        return y
+
+    h = ql("embed", xf.reshape(b * l, -1), params["embed.w"], params["embed.b"])
+    h = h.reshape(b, l, d) + params["pos"][None]
+
+    for i in range(cfg.depth):
+        pre = f"blk{i}."
+        if cfg.arch in ("vit", "lm"):
+            hn, ctx_ln1 = L.layernorm_fwd(h, params[pre + "ln1.g"],
+                                          params[pre + "ln1.b"])
+            ctxs.append(("ln", pre + "ln1", ctx_ln1, None))
+            qkv = ql(pre + "qkv", hn.reshape(b * l, d),
+                     params[pre + "attn.wqkv"], params[pre + "attn.bqkv"])
+            qkv = qkv.reshape(b, l, 3 * d)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            att, ctx_att = L.attention_fwd(q, k, v, cfg.heads,
+                                           causal=(cfg.arch == "lm"))
+            ctxs.append(("attn", pre + "attn", ctx_att, None))
+            proj = ql(pre + "proj", att.reshape(b * l, d),
+                      params[pre + "attn.wo"], params[pre + "attn.bo"])
+            h = h + proj.reshape(b, l, d)
+
+        hn, ctx_ln2 = L.layernorm_fwd(h, params[pre + "ln2.g"],
+                                      params[pre + "ln2.b"])
+        ctxs.append(("ln", pre + "ln2", ctx_ln2, None))
+        f1 = ql(pre + "fc1", hn.reshape(b * l, d),
+                params[pre + "fc1.w"], params[pre + "fc1.b"])
+        g1, ctx_gelu = L.gelu_fwd(f1)
+        ctxs.append(("gelu", pre + "gelu", ctx_gelu, None))
+        f2 = ql(pre + "fc2", g1, params[pre + "fc2.w"], params[pre + "fc2.b"])
+        h = h + f2.reshape(b, l, d)
+
+    hn, ctx_lnf = L.layernorm_fwd(h, params["lnf.g"], params["lnf.b"])
+    ctxs.append(("ln", "lnf", ctx_lnf, None))
+
+    if cfg.arch == "lm":
+        logits = ql("head", hn.reshape(b * l, d),
+                    params["head.w"], params["head.b"])
+        loss, acc, ctx_ce = L.softmax_xent_fwd(logits, labels.reshape(b * l))
+    else:
+        pooled = jnp.mean(hn, axis=1)  # (B, D)
+        logits = ql("head", pooled, params["head.w"], params["head.b"])
+        loss, acc, ctx_ce = L.softmax_xent_fwd(logits, labels)
+    ctxs.append(("ce", "loss", ctx_ce, None))
+    return loss, acc, ctxs
+
+
+# ---------------------------------------------------------------------------
+# Backward (walks ctxs in reverse; mirrors forward exactly)
+# ---------------------------------------------------------------------------
+
+
+def backward(params: Params, x, cfg: ModelConfig, bcfg: BackwardConfig,
+             ctxs: list, diag_sink: list = None) -> Params:
+    """Full-model manual backprop. Returns grads keyed like params.
+
+    ``diag_sink``: optional list; when given, every qlinear appends
+    (qlinear_name, g_y, ctx, weight_name) in *reverse* model order — the
+    raw material for the LQS calibration step and the Fig-4/Fig-6
+    diagnostics. (The extra retention is why calibration runs on a small
+    set before training, exactly as in the paper §5.2.2.)"""
+    b = (x.shape[0])
+    l, d = cfg.seq, cfg.d_model
+    grads: Params = {}
+    it = list(ctxs)[::-1]
+    pos = 0
+
+    def take(kind):
+        nonlocal pos
+        k, name, ctx, flag = it[pos]
+        assert k == kind, (k, kind, name)
+        pos += 1
+        return name, ctx, flag
+
+    # --- loss & head ----------------------------------------------------
+    _, ctx_ce, _ = take("ce")
+    g_logits = L.softmax_xent_bwd(ctx_ce)
+
+    def ql_bwd(gy, wname, bname, ctx, flag):
+        if diag_sink is not None:
+            diag_sink.append((wname, gy, ctx, flag))
+        g_x, g_w, g_b = L.qlinear_bwd(gy, params[wname], ctx, bcfg, flag)
+        grads[wname] = g_w
+        grads[bname] = g_b
+        return g_x
+
+    name, ctx_head, flag_head = take("ql")
+    g_pooled_or_seq = ql_bwd(g_logits, "head.w", "head.b", ctx_head, flag_head)
+
+    _, ctx_lnf, _ = take("ln")
+    if cfg.arch == "lm":
+        g_hn = g_pooled_or_seq.reshape(b, l, d)
+    else:
+        g_hn = jnp.broadcast_to(g_pooled_or_seq[:, None, :] / float(l),
+                                (b, l, d))
+    g_h, grads["lnf.g"], grads["lnf.b"] = L.layernorm_bwd(g_hn, params["lnf.g"],
+                                                          ctx_lnf)
+
+    # --- blocks in reverse ----------------------------------------------
+    for i in reversed(range(cfg.depth)):
+        pre = f"blk{i}."
+        # MLP sub-block
+        _, ctx_fc2, flag_fc2 = take("ql")
+        g_f2in = ql_bwd(g_h.reshape(b * l, d), pre + "fc2.w", pre + "fc2.b",
+                        ctx_fc2, flag_fc2)
+        _, ctx_gelu, _ = take("gelu")
+        g_f1 = L.gelu_bwd(g_f2in, ctx_gelu)
+        _, ctx_fc1, flag_fc1 = take("ql")
+        g_hn2 = ql_bwd(g_f1, pre + "fc1.w", pre + "fc1.b", ctx_fc1, flag_fc1)
+        _, ctx_ln2, _ = take("ln")
+        g_res, grads[pre + "ln2.g"], grads[pre + "ln2.b"] = L.layernorm_bwd(
+            g_hn2.reshape(b, l, d), params[pre + "ln2.g"], ctx_ln2)
+        g_h = g_h + g_res
+
+        if cfg.arch in ("vit", "lm"):
+            _, ctx_proj, flag_proj = take("ql")
+            g_att = ql_bwd(g_h.reshape(b * l, d), pre + "attn.wo",
+                           pre + "attn.bo", ctx_proj, flag_proj)
+            _, ctx_att, _ = take("attn")
+            g_q, g_k, g_v = L.attention_bwd(g_att.reshape(b, l, d), ctx_att,
+                                            cfg.heads)
+            g_qkv = jnp.concatenate([g_q, g_k, g_v], axis=-1)
+            _, ctx_qkv, flag_qkv = take("ql")
+            g_hn1 = ql_bwd(g_qkv.reshape(b * l, 3 * d), pre + "attn.wqkv",
+                           pre + "attn.bqkv", ctx_qkv, flag_qkv)
+            _, ctx_ln1, _ = take("ln")
+            g_res, grads[pre + "ln1.g"], grads[pre + "ln1.b"] = L.layernorm_bwd(
+                g_hn1.reshape(b, l, d), params[pre + "ln1.g"], ctx_ln1)
+            g_h = g_h + g_res
+
+    # --- embed ------------------------------------------------------------
+    grads["pos"] = jnp.sum(g_h, axis=0)
+    _, ctx_embed, flag_embed = take("ql")
+    ql_bwd(g_h.reshape(b * l, d), "embed.w", "embed.b", ctx_embed, flag_embed)
+    assert pos == len(it), (pos, len(it))
+    return grads
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrappers
+# ---------------------------------------------------------------------------
+
+
+def loss_and_grads(params: Params, x, labels, cfg: ModelConfig,
+                   bcfg: BackwardConfig, lqs_mask: jnp.ndarray):
+    loss, acc, ctxs = forward(params, x, labels, cfg, bcfg, lqs_mask)
+    grads = backward(params, x, cfg, bcfg, ctxs)
+    return loss, acc, grads
+
+
+def loss_fp_autodiff(params: Params, x, labels, cfg: ModelConfig):
+    """Reference loss via the same forward, for jax.grad cross-checks."""
+    mask = jnp.zeros((cfg.n_qlinears(),), jnp.float32)
+    loss, _, _ = forward(params, x, labels, cfg,
+                         BackwardConfig(variant="fp"), mask)
+    return loss

@@ -1,0 +1,287 @@
+"""L2 training graphs: fused train step, split fwd/bwd, eval, calibration.
+
+Every function here is lowered to an HLO-text artifact by aot.py and then
+driven from rust. Calling conventions are flat lists of arrays (pytrees
+flattened in ``model.param_names`` order) — the manifest records the
+ordering so the rust side never guesses.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import hadamard as hd
+from compile import model as M
+from compile.config import BackwardConfig, ModelConfig, OptimizerConfig
+from compile.kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# AdamW (decoupled weight decay; the paper's fine-tuning optimizer)
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(params: Params, grads: Params, m: Params, v: Params,
+                 step: jnp.ndarray, lr: jnp.ndarray, ocfg: OptimizerConfig
+                 ) -> Tuple[Params, Params, Params]:
+    """One AdamW step. ``step`` is the 1-based step counter (f32 scalar),
+    ``lr`` the scheduled learning rate (rust owns the schedule)."""
+    b1, b2, eps, wd = ocfg.beta1, ocfg.beta2, ocfg.eps, ocfg.weight_decay
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        nm = b1 * m[k] + (1.0 - b1) * g
+        nv = b2 * v[k] + (1.0 - b2) * (g * g)
+        upd = (nm / bc1) / (jnp.sqrt(nv / bc2) + eps)
+        # no weight decay on norms/biases/pos (standard practice)
+        decay = 0.0 if (k.endswith(".b") or k.endswith(".g")
+                        or k == "pos") else wd
+        new_p[k] = params[k] - lr * (upd + decay * params[k])
+        new_m[k] = nm
+        new_v[k] = nv
+    return new_p, new_m, new_v
+
+
+def sgd_update(params: Params, grads: Params, m: Params, lr: jnp.ndarray,
+               momentum: float = 0.9, wd: float = 5e-4
+               ) -> Tuple[Params, Params]:
+    """SGD+momentum (the paper's pre-training optimizer for CNNs)."""
+    new_p, new_m = {}, {}
+    for k in params:
+        decay = 0.0 if (k.endswith(".b") or k.endswith(".g")
+                        or k == "pos") else wd
+        g = grads[k] + decay * params[k]
+        nm = momentum * m[k] + g
+        new_p[k] = params[k] - lr * nm
+        new_m[k] = nm
+    return new_p, new_m
+
+
+# ---------------------------------------------------------------------------
+# Fused step (fwd + bwd + optimizer in one HLO module)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, bcfg: BackwardConfig,
+                    ocfg: OptimizerConfig):
+    """Returns f(params, m, v, step, lr, lqs_mask, x, y) ->
+    (new_params, new_m, new_v, loss, acc)."""
+
+    def train_step(params, m, v, step, lr, lqs_mask, x, y):
+        loss, acc, ctxs = M.forward(params, x, y, cfg, bcfg, lqs_mask)
+        grads = M.backward(params, x, cfg, bcfg, ctxs)
+        new_p, new_m, new_v = adamw_update(params, grads, m, v, step, lr, ocfg)
+        return new_p, new_m, new_v, loss, acc
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, bcfg: BackwardConfig):
+    def eval_step(params, x, y):
+        mask = jnp.zeros((cfg.n_qlinears(),), jnp.float32)
+        loss, acc, _ = M.forward(params, x, y, cfg,
+                                 BackwardConfig(variant="fp"), mask)
+        return loss, acc
+
+    _ = bcfg
+    return eval_step
+
+
+def make_grad_step(cfg: ModelConfig, bcfg: BackwardConfig):
+    """Gradients only (no optimizer) — used for microbatch accumulation:
+    the rust coordinator sums these across microbatches then calls the
+    separate opt_step artifact once."""
+
+    def grad_step(params, lqs_mask, x, y):
+        loss, acc, ctxs = M.forward(params, x, y, cfg, bcfg, lqs_mask)
+        grads = M.backward(params, x, cfg, bcfg, ctxs)
+        return grads, loss, acc
+
+    return grad_step
+
+
+def make_opt_step(cfg: ModelConfig, ocfg: OptimizerConfig):
+    def opt_step(params, grads, m, v, step, lr):
+        return adamw_update(params, grads, m, v, step, lr, ocfg)
+
+    _ = cfg
+    return opt_step
+
+
+# ---------------------------------------------------------------------------
+# Split fwd / bwd (the ABC story: compressed ctx crosses the HLO boundary
+# and lives in the rust coordinator's buffer manager between the calls)
+# ---------------------------------------------------------------------------
+
+
+def ctx_to_flat(ctxs: list) -> Tuple[List[jnp.ndarray], list]:
+    """Flatten the ctx list to arrays + a static schema.
+
+    Schema entries: (kind, name, [(key, shape, dtype), ...], has_flag)."""
+    flat, schema = [], []
+    for kind, name, ctx, flag in ctxs:
+        keys = sorted(ctx.keys())
+        schema.append((kind, name,
+                       [(k, tuple(ctx[k].shape), str(ctx[k].dtype))
+                        for k in keys],
+                       flag is not None))
+        for k in keys:
+            flat.append(ctx[k])
+    return flat, schema
+
+
+def flat_to_ctx(flat: List[jnp.ndarray], schema: list,
+                lqs_mask: jnp.ndarray) -> list:
+    ctxs, i, qi = [], 0, 0
+    for kind, name, keys, has_flag in schema:
+        ctx = {}
+        for k, _, _ in keys:
+            ctx[k] = flat[i]
+            i += 1
+        flag = None
+        if has_flag:
+            flag = lqs_mask[qi]
+            qi += 1
+        ctxs.append((kind, name, ctx, flag))
+    assert i == len(flat)
+    return ctxs
+
+
+def make_split_steps(cfg: ModelConfig, bcfg: BackwardConfig,
+                     batch: int, seq_or_none=None):
+    """Build (fwd_fn, bwd_fn, ctx_schema).
+
+    fwd: (params, lqs_mask, x, y) -> (loss, acc, *ctx_flat)
+    bwd: (params, lqs_mask, x, *ctx_flat) -> (grads..., in param order)
+
+    The schema is produced by tracing fwd once with abstract values, so
+    aot.py can describe every ctx tensor (shape/dtype — int8 ctx entries
+    are HOT's compressed activations) in the manifest."""
+    import numpy as np
+
+    params = M.init_params(cfg, seed=0)
+    if cfg.arch == "lm":
+        x_spec = jnp.zeros((batch, cfg.seq), jnp.int32)
+    else:
+        x_spec = jnp.zeros((batch, cfg.seq, cfg.in_dim), jnp.float32)
+    y_spec = (jnp.zeros((batch, cfg.seq), jnp.int32) if cfg.arch == "lm"
+              else jnp.zeros((batch,), jnp.int32))
+    mask = jnp.zeros((cfg.n_qlinears(),), jnp.float32)
+    # trace once abstractly to learn the ctx schema (names/kinds are
+    # static python, so they leave eval_shape via a side channel)
+    schema_box = []
+
+    def _probe(p, xx, yy):
+        _, _, ctxs = M.forward(p, xx, yy, cfg, bcfg, mask)
+        flat, schema = ctx_to_flat(ctxs)
+        schema_box.append(schema)
+        return tuple(flat)
+
+    jax.eval_shape(_probe, params, x_spec, y_spec)
+    schema = schema_box[0]
+    _ = np
+
+    def fwd(params, lqs_mask, x, y):
+        loss, acc, ctxs = M.forward(params, x, y, cfg, bcfg, lqs_mask)
+        flat, _ = ctx_to_flat(ctxs)
+        return (loss, acc, *flat)
+
+    def bwd(params, lqs_mask, x, *ctx_flat):
+        ctxs = flat_to_ctx(list(ctx_flat), schema, lqs_mask)
+        grads = M.backward(params, x, cfg, bcfg, ctxs)
+        return tuple(grads[k] for k in M.param_names(cfg))
+
+    return fwd, bwd, schema
+
+
+# ---------------------------------------------------------------------------
+# LQS calibration step (paper §5.2.2) + Fig-4 / Fig-6 diagnostics
+# ---------------------------------------------------------------------------
+
+
+def make_calib_step(cfg: ModelConfig, bcfg: BackwardConfig):
+    """f(params, x, y) -> per-qlinear diagnostic vectors (model order):
+
+      mse_tensor   MSE(FP gc, per-tensor-INT8 gc)   } LQS inputs
+      mse_token    MSE(FP gc, per-token-INT8 gc)    } (gc = HLA(g_y))
+      outlier      max-token |g_y| / mean-token |g_y|     (Fig 6/9)
+      gx_err_hq    rel-MSE of HT+INT4 g_x vs exact        (Fig 4 top)
+      gx_err_hla   rel-MSE of external-HLA g_x vs exact   (Fig 4 top)
+      gw_err_hq    rel-MSE of HT+INT4 g_w vs exact        (Fig 4 bottom)
+      gw_err_hla   rel-MSE of HLA-r g_w vs exact          (Fig 4 bottom)
+
+    Runs FP backward (calibration happens before training, paper: "a
+    small calibration set prior to training")."""
+    fp = BackwardConfig(variant="fp")
+    nq = cfg.n_qlinears()
+
+    def calib_step(params, x, y):
+        mask = jnp.zeros((nq,), jnp.float32)
+        _, _, ctxs = M.forward(params, x, y, cfg, fp, mask)
+        sink: list = []
+        M.backward(params, x, cfg, fp, ctxs, diag_sink=sink)
+        sink = sink[::-1]  # model order
+        outs = {k: [] for k in ("mse_tensor", "mse_token", "outlier",
+                                "gx_err_hq", "gx_err_hla",
+                                "gw_err_hq", "gw_err_hla")}
+        for wname, gy, ctx, _ in sink:
+            xx = ctx["x"]
+            w = params[wname]
+            n, o = gy.shape
+            exact_gx = gy @ w
+            exact_gw = gy.T @ xx
+            gx_norm = jnp.mean(exact_gx * exact_gx) + 1e-12
+            gw_norm = jnp.mean(exact_gw * exact_gw) + 1e-12
+            if n % bcfg.block == 0:
+                gc = hd.block_hla(gy, bcfg.rank, axis=0, block=bcfg.block)
+                e_t = gc - ref.fake_quant_ps(gc, bcfg.gw_bits)
+                e_k = gc - ref.dequantize(
+                    ref.quantize_ps(gc, ref.minmax_scale(gc, bcfg.gw_bits, axis=1),
+                                    bcfg.gw_bits),
+                    ref.minmax_scale(gc, bcfg.gw_bits, axis=1))
+                outs["mse_tensor"].append(jnp.mean(e_t * e_t))
+                outs["mse_token"].append(jnp.mean(e_k * e_k))
+                ghla = ref.lbp_gw_ref(gy, xx, bcfg.rank, bcfg.block)
+                outs["gw_err_hla"].append(
+                    jnp.mean((ghla - exact_gw) ** 2) / gw_norm)
+                gx_hla = ref.lbp_gx_ref(gy, w, bcfg.rank, bcfg.block)
+                outs["gx_err_hla"].append(
+                    jnp.mean((gx_hla - exact_gx) ** 2) / gx_norm)
+                gy_t = hd.block_ht(gy, axis=0, block=bcfg.block)
+                x_t = hd.block_ht(xx, axis=0, block=bcfg.block)
+                gw_hq = (ref.fake_quant_ps(gy_t, 4).T @ ref.fake_quant_ps(x_t, 4))
+                outs["gw_err_hq"].append(
+                    jnp.mean((gw_hq - exact_gw) ** 2) / gw_norm)
+            else:
+                for k in ("mse_tensor", "mse_token", "gw_err_hla",
+                          "gx_err_hla", "gw_err_hq"):
+                    outs[k].append(jnp.float32(0.0))
+            if o % bcfg.block == 0:
+                gx_hq = ref.hq_matmul_ref(gy, w, bcfg.gx_bits, bcfg.block)
+                outs["gx_err_hq"].append(
+                    jnp.mean((gx_hq - exact_gx) ** 2) / gx_norm)
+            else:
+                outs["gx_err_hq"].append(jnp.float32(0.0))
+            row_amax = jnp.max(jnp.abs(gy), axis=1)
+            outs["outlier"].append(jnp.max(row_amax)
+                                   / (jnp.mean(row_amax) + 1e-12))
+        return tuple(jnp.stack(outs[k]) for k in
+                     ("mse_tensor", "mse_token", "outlier", "gx_err_hq",
+                      "gx_err_hla", "gw_err_hq", "gw_err_hla"))
+
+    return calib_step
+
+
+def lqs_select(mse_tensor, mse_token, threshold: float = 0.5):
+    """The paper's rule: per-token iff the error difference is >= 50%.
+
+    Returns the {0,1} mask in qlinear (model) order."""
+    rel = (mse_tensor - mse_token) / jnp.maximum(mse_tensor, 1e-12)
+    return (rel >= threshold).astype(jnp.float32)

@@ -1,0 +1,101 @@
+"""aot.py: manifest correctness, calling-convention stability, HLO text
+hygiene (the constant-elision regression is guarded here)."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.config import BackwardConfig, OptimizerConfig, PRESETS
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    em = aot.Emitter(out)
+    cfg = PRESETS["tiny"]
+    em.add_preset("tiny", cfg)
+    ocfg = OptimizerConfig()
+    fn, ins, inn, outn = aot.build_train_step(
+        cfg, BackwardConfig(variant="fp"), ocfg, batch=16)
+    em.emit("train_fp_tiny", fn, ins, inn, outn,
+            {"kind": "train_step", "preset": "tiny", "variant": "fp",
+             "batch": 16})
+    (fwd, bwd, ctx_meta) = aot.build_split_steps(
+        cfg, BackwardConfig(variant="hot"), batch=16)
+    em.emit("fwd_hot_tiny", *fwd,
+            {"kind": "fwd_step", "preset": "tiny", "variant": "hot",
+             "batch": 16, "ctx": ctx_meta})
+    em.finish()
+    with open(os.path.join(out, "manifest.json")) as f:
+        return out, json.load(f)
+
+
+class TestHloHygiene:
+    def test_no_elided_constants(self, emitted):
+        out, manifest = emitted
+        for key, meta in manifest["artifacts"].items():
+            text = open(os.path.join(out, meta["file"])).read()
+            assert "{...}" not in text, f"{key} has elided constants"
+
+    def test_no_new_metadata_attrs(self, emitted):
+        out, manifest = emitted
+        for key, meta in manifest["artifacts"].items():
+            text = open(os.path.join(out, meta["file"])).read()
+            assert "source_end_line" not in text, key
+
+    def test_entry_exists(self, emitted):
+        out, manifest = emitted
+        for meta in manifest["artifacts"].values():
+            text = open(os.path.join(out, meta["file"])).read()
+            assert "ENTRY" in text
+
+
+class TestCallingConvention:
+    def test_param_count_stable(self, emitted):
+        _, manifest = emitted
+        cfg = PRESETS["tiny"]
+        names = M.param_names(cfg)
+        meta = manifest["artifacts"]["train_fp_tiny"]
+        # 3*P state + step + lr + mask + x + y
+        assert len(meta["inputs"]) == 3 * len(names) + 5
+        assert len(meta["outputs"]) == 3 * len(names) + 2
+
+    def test_unused_args_pinned(self, emitted):
+        """The fp variant never reads lqs_mask; anchor() must keep it in
+        the HLO parameter list (the jit-drops-args regression)."""
+        out, manifest = emitted
+        meta = manifest["artifacts"]["train_fp_tiny"]
+        text = open(os.path.join(out, meta["file"])).read()
+        entry = text[text.index("ENTRY"):]
+        n_params = entry.count(" parameter(")
+        assert n_params == len(meta["inputs"]), \
+            f"HLO has {n_params} params, manifest {len(meta['inputs'])}"
+
+    def test_fwd_ctx_schema_matches_outputs(self, emitted):
+        _, manifest = emitted
+        meta = manifest["artifacts"]["fwd_hot_tiny"]
+        assert len(meta["outputs"]) == 2 + len(meta["ctx"])
+        # hot+abc ctx must include int8 compressed activations
+        dts = {c["dtype"] for c in meta["ctx"]}
+        assert "int8" in dts
+
+    def test_init_blob_size(self, emitted):
+        out, manifest = emitted
+        preset = manifest["presets"]["tiny"]
+        want = sum(
+            4 * int(jax.numpy.prod(jax.numpy.asarray(p["shape"])))
+            for p in preset["params"])
+        got = os.path.getsize(os.path.join(out, preset["init_blob"]))
+        assert got == want
+
+
+class TestAnchor:
+    def test_anchor_preserves_value(self):
+        import jax.numpy as jnp
+        args = (jnp.ones((3, 3)), jnp.asarray([1, 2], jnp.int32))
+        out = aot.anchor(jnp.float32(2.5), args)
+        assert float(out) == 2.5

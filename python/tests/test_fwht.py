@@ -1,0 +1,73 @@
+"""Pallas FWHT kernels vs the pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import hadamard as hd
+from compile.kernels import fwht
+
+
+def _rand(m, d, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(m, d)) * 3,
+                       jnp.float32)
+
+
+class TestMxuForm:
+    def test_matches_ref_small(self):
+        x = _rand(8, 32)
+        got = fwht.block_fwht(x)
+        want = hd.block_ht(x, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_multi_tile_rows(self):
+        # 256 rows => two grid steps at TILE_ROWS=128
+        x = _rand(256, 16, seed=1)
+        got = fwht.block_fwht(x)
+        want = hd.block_ht(x, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(deadline=None, max_examples=10)
+    @given(m=st.sampled_from([1, 2, 4, 8]), tiles=st.integers(1, 4),
+           seed=st.integers(0, 100))
+    def test_hypothesis_shapes(self, m, tiles, seed):
+        x = _rand(m, 16 * tiles, seed)
+        got = fwht.block_fwht(x)
+        want = hd.block_ht(x, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestButterflyForm:
+    def test_matches_mxu_form(self):
+        x = _rand(4, 64, seed=2)
+        a = fwht.block_fwht(x)
+        b = fwht.block_fwht_bfly(x)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_involution(self):
+        x = _rand(4, 32, seed=3)
+        y = fwht.block_fwht_bfly(fwht.block_fwht_bfly(x))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFusedAmax:
+    def test_amax_correct(self):
+        x = _rand(8, 48, seed=4)
+        y, amax = fwht.block_fwht_amax(x)
+        want = hd.block_ht(x, axis=1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(amax),
+                                   float(jnp.max(jnp.abs(want))), rtol=1e-5)
+
+    def test_amax_multi_tile(self):
+        x = _rand(256, 16, seed=5)
+        _, amax = fwht.block_fwht_amax(x)
+        want = hd.block_ht(x, axis=1)
+        np.testing.assert_allclose(float(amax),
+                                   float(jnp.max(jnp.abs(want))), rtol=1e-5)

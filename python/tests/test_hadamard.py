@@ -1,0 +1,148 @@
+"""Unit tests for the trace-time Walsh-Hadamard utilities."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hadamard as hd
+
+
+class TestHadamardMatrix:
+    def test_orthonormal(self):
+        for n in (2, 4, 16, 64):
+            h = hd.hadamard_matrix(n)
+            np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-6)
+
+    def test_symmetric_sylvester(self):
+        h = hd.hadamard_matrix(16)
+        np.testing.assert_allclose(h, h.T)
+
+    def test_entries_pm_one(self):
+        h = hd.hadamard_matrix(16, normalized=False)
+        assert set(np.unique(h)) == {-1.0, 1.0}
+
+    def test_bad_order_raises(self):
+        with pytest.raises(ValueError):
+            hd.hadamard_matrix(12)
+
+
+class TestOrders:
+    def test_sequency_is_permutation(self):
+        for n in (4, 16, 32):
+            assert sorted(hd.sequency_order(n)) == list(range(n))
+
+    def test_sequency_monotone_sign_changes(self):
+        h = hd.hadamard_matrix(16, normalized=False)
+        order = hd.sequency_order(16)
+        changes = [
+            int((np.diff(np.sign(h[i])) != 0).sum()) for i in order
+        ]
+        assert changes == sorted(changes)
+        assert changes[0] == 0  # DC first
+
+    def test_lp_l1_is_permutation(self):
+        assert sorted(hd.lp_l1_order_2d(4, 4)) == list(range(16))
+
+    def test_lp_l1_dc_first(self):
+        # the (0,0)-sequency basis is the all-ones (DC) vector = natural row 0
+        assert hd.lp_l1_order_2d(4, 4)[0] == 0
+
+    def test_lowpass_indices_prefix(self):
+        full = hd.lowpass_indices(16)
+        for r in (1, 2, 4, 8):
+            assert hd.lowpass_indices(r) == full[:r]
+
+    def test_lowpass_bad_rank(self):
+        with pytest.raises(ValueError):
+            hd.lowpass_indices(0)
+        with pytest.raises(ValueError):
+            hd.lowpass_indices(17)
+
+
+class TestBlockHT:
+    def test_involution(self):
+        # normalized Sylvester H is symmetric => H @ H == I
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
+        y = hd.block_ht(hd.block_ht(x, axis=1), axis=1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+    def test_orthogonality_cancels_in_product(self):
+        # (P Hᵀ)(H S) == P S — the identity HQ relies on (Eq. 3)
+        rng = np.random.default_rng(1)
+        p = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        s = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+        pt = hd.block_ht(p, axis=1)
+        st_ = hd.block_ht(s, axis=0)
+        np.testing.assert_allclose(np.asarray(pt @ st_), np.asarray(p @ s),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_axis0(self):
+        x = jnp.asarray(np.random.default_rng(2).normal(size=(32, 5)), jnp.float32)
+        y = hd.block_ht(x, axis=0)
+        y2 = hd.block_ht(x.T, axis=1).T
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-5)
+
+    def test_energy_preserved(self):
+        x = jnp.asarray(np.random.default_rng(3).normal(size=(16, 48)), jnp.float32)
+        y = hd.block_ht(x, axis=1)
+        np.testing.assert_allclose(float(jnp.sum(x * x)), float(jnp.sum(y * y)),
+                                   rtol=1e-5)
+
+    def test_bad_dim(self):
+        with pytest.raises(ValueError):
+            hd.block_ht(jnp.zeros((4, 10)), axis=1)
+
+
+class TestHLA:
+    def test_full_rank_is_ht(self):
+        x = jnp.asarray(np.random.default_rng(4).normal(size=(8, 32)), jnp.float32)
+        y = hd.block_hla(x, rank=16, axis=1)
+        # rank 16 keeps everything, permuted into sequency order per tile
+        z = hd.block_ht(x, axis=1)
+        assert y.shape == z.shape
+        np.testing.assert_allclose(np.sort(np.asarray(y)), np.sort(np.asarray(z)),
+                                   atol=1e-5)
+
+    def test_shapes(self):
+        x = jnp.zeros((64, 24))
+        for r in (1, 2, 4, 8):
+            assert hd.block_hla(x, r, axis=0).shape == (64 // 16 * r, 24)
+
+    def test_projection_idempotent(self):
+        # expand(compress(x)) is an orthogonal projection: applying
+        # compress again is lossless
+        x = jnp.asarray(np.random.default_rng(5).normal(size=(32, 8)), jnp.float32)
+        c = hd.block_hla(x, 8, axis=0)
+        e = hd.block_hla_expand(c, 8, axis=0)
+        c2 = hd.block_hla(e, 8, axis=0)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c2), atol=1e-5)
+
+    def test_dc_component_preserved(self):
+        # constant-along-L signals are pure DC: HLA with any rank is exact
+        x = jnp.ones((32, 6), jnp.float32) * 3.0
+        e = hd.block_hla_expand(hd.block_hla(x, 1, axis=0), 1, axis=0)
+        np.testing.assert_allclose(np.asarray(e), np.asarray(x), atol=1e-5)
+
+    @settings(deadline=None, max_examples=20)
+    @given(r=st.sampled_from([1, 2, 4, 8, 16]),
+           tiles=st.integers(1, 4), d=st.integers(1, 9))
+    def test_error_decreases_with_rank_dc_heavy(self, r, tiles, d):
+        # smooth (low-frequency) signals reconstruct with small error
+        l = 16 * tiles
+        t = np.linspace(0, 1, l)[:, None]
+        x = jnp.asarray(np.cos(np.pi * t) @ np.ones((1, d)), jnp.float32)
+        e = hd.block_hla_expand(hd.block_hla(x, r, axis=0), r, axis=0)
+        err = float(jnp.mean((e - x) ** 2))
+        full = hd.block_hla_expand(hd.block_hla(x, 16, axis=0), 16, axis=0)
+        err_full = float(jnp.mean((full - x) ** 2))
+        assert err_full <= err + 1e-6
+
+    def test_reduced_hadamard_rows_orthonormal(self):
+        hh = hd.reduced_hadamard(8)
+        np.testing.assert_allclose(hh @ hh.T, np.eye(8), atol=1e-6)
+
+    def test_lp_l1_criterion_variant(self):
+        hh = hd.reduced_hadamard(8, criterion="lp_l1")
+        assert hh.shape == (8, 16)
+        np.testing.assert_allclose(hh @ hh.T, np.eye(8), atol=1e-6)

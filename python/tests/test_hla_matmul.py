@@ -1,0 +1,159 @@
+"""Fused HLA (g_w) kernel vs oracle + ABC compression + LQS semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import hadamard as hd
+from compile.kernels import hla_matmul, ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape) * scale,
+                       jnp.float32)
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12)
+
+
+class TestProjectKernel:
+    def test_matches_block_hla(self):
+        x = _rand((64, 32), 0)
+        got, amax = hla_matmul.hla_project_amax(x, rank=8)
+        want = hd.block_hla(x, 8, axis=0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(amax),
+                                   float(jnp.max(jnp.abs(want))), rtol=1e-5)
+
+    @settings(deadline=None, max_examples=10)
+    @given(tiles=st.integers(1, 4), d=st.sampled_from([8, 16, 96]),
+           r=st.sampled_from([1, 2, 4, 8, 16]), seed=st.integers(0, 30))
+    def test_hypothesis(self, tiles, d, r, seed):
+        x = _rand((16 * tiles, d), seed)
+        got, _ = hla_matmul.hla_project_amax(x, rank=r)
+        want = hd.block_hla(x, r, axis=0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_lp_l1_criterion(self):
+        x = _rand((32, 16), 1)
+        got, _ = hla_matmul.hla_project_amax(x, rank=4, criterion="lp_l1")
+        want = hd.block_hla(x, 4, axis=0, criterion="lp_l1")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFusedGw:
+    def test_matches_ref_per_tensor(self):
+        gy = _rand((64, 32), 2)
+        x = _rand((64, 16), 3)
+        got = hla_matmul.hla_matmul(gy, x, rank=8)
+        want = ref.hla_matmul_ref(gy, x, rank=8)
+        assert _rel_err(got, want) < 8e-3
+
+    def test_matches_ref_per_token(self):
+        gy = _rand((64, 32), 4)
+        x = _rand((64, 16), 5)
+        got = hla_matmul.hla_matmul(gy, x, rank=8, per_token=True)
+        want = ref.hla_matmul_ref(gy, x, rank=8, per_token=True)
+        assert _rel_err(got, want) < 8e-3
+
+    @settings(deadline=None, max_examples=8)
+    @given(tiles=st.integers(1, 3), o=st.sampled_from([16, 32]),
+           i=st.sampled_from([16, 48]), r=st.sampled_from([2, 4, 8]),
+           seed=st.integers(0, 30))
+    def test_hypothesis(self, tiles, o, i, r, seed):
+        gy = _rand((16 * tiles, o), seed)
+        x = _rand((16 * tiles, i), seed + 1)
+        got = hla_matmul.hla_matmul(gy, x, rank=r)
+        want = ref.hla_matmul_ref(gy, x, rank=r)
+        assert _rel_err(got, want) < 2e-2
+
+
+class TestABCCompression:
+    def test_compressed_sizes(self):
+        """ABC's memory claim: r=8/16 HLA halves L; INT8 quarters bytes —
+        the stored buffer is 1/8 the FP32 original (paper: 'up to 12.5%')."""
+        x = _rand((128, 64), 6)
+        q, s = ref.hla_compress_ref(x, rank=8)
+        assert q.shape == (64, 64) and q.dtype == jnp.int8
+        orig_bytes = 128 * 64 * 4
+        comp_bytes = 64 * 64 * 1 + 4
+        # 12.5% + the 4-byte scale (paper: "up to 12.5%")
+        assert comp_bytes / orig_bytes <= 0.126
+
+    def test_compress_then_gw_consistent(self):
+        """Splitting compression (fwd-time, ABC) from the GEMM (bwd-time)
+        gives the same g_w as the fused op — the invariant that lets the
+        rust coordinator hold the compressed buffer across the boundary."""
+        gy = _rand((64, 32), 7)
+        x = _rand((64, 16), 8)
+        xq, s_x = ref.hla_compress_ref(x, rank=8)
+        gc = hd.block_hla(gy, 8, axis=0)
+        s_g = ref.minmax_scale(gc, 8)
+        q_g = ref.quantize_ps(gc, s_g, 8)
+        manual = (np.asarray(q_g).astype(np.int32).T
+                  @ np.asarray(xq).astype(np.int32)).astype(np.float32) \
+            * float(s_g) * float(s_x)
+        fused = np.asarray(ref.hla_matmul_ref(gy, x, rank=8))
+        np.testing.assert_allclose(manual, fused, rtol=1e-5, atol=1e-5)
+
+
+class TestApproximationQuality:
+    def test_hla_on_gw_beats_quant_on_gw(self):
+        """§4.3: the L-averaged g_w path tolerates HLA but is hurt by
+        aggressive (4-bit) quantization — reproduce the ordering with
+        smooth-gradient synthetic data."""
+        rng = np.random.default_rng(9)
+        l, o, i = 128, 32, 32
+        t = np.linspace(0, 1, l)[:, None]
+        smooth = np.cos(np.pi * t)
+        gy = jnp.asarray((smooth @ rng.normal(size=(1, o))
+                          + 0.05 * rng.normal(size=(l, o))), jnp.float32)
+        x = jnp.asarray((smooth @ rng.normal(size=(1, i))
+                         + 0.05 * rng.normal(size=(l, i))), jnp.float32)
+        exact = np.asarray(gy.T @ x)
+
+        via_hla = np.asarray(ref.hla_matmul_ref(gy, x, rank=8))
+        # HT + INT4 on the same path (what Table 2 shows fails)
+        gy_t = hd.block_ht(gy, axis=0)
+        x_t = hd.block_ht(x, axis=0)
+        via_q4 = np.asarray(ref.fake_quant_ps(gy_t, 4).T @ ref.fake_quant_ps(x_t, 4))
+
+        assert _rel_err(via_hla, exact) < _rel_err(via_q4, exact)
+
+    def test_rank_monotonicity(self):
+        """Table 8's trend: g_w error shrinks as rank grows."""
+        rng = np.random.default_rng(10)
+        l = 64
+        t = np.linspace(0, 1, l)[:, None]
+        gy = jnp.asarray(np.cos(np.pi * t) @ rng.normal(size=(1, 32))
+                         + 0.1 * rng.normal(size=(l, 32)), jnp.float32)
+        x = jnp.asarray(np.cos(2 * np.pi * t) @ rng.normal(size=(1, 32))
+                        + 0.1 * rng.normal(size=(l, 32)), jnp.float32)
+        exact = np.asarray(gy.T @ x)
+        errs = [
+            _rel_err(ref.lbp_gw_ref(gy, x, rank=r), exact)
+            for r in (1, 4, 16)
+        ]
+        assert errs[2] <= errs[1] <= errs[0] + 1e-6
+
+
+class TestLbpBaseline:
+    def test_lbp_gx_shape_and_fullrank_exact(self):
+        gy = _rand((32, 16), 11)
+        w = _rand((16, 8), 12)
+        out = ref.lbp_gx_ref(gy, w, rank=16)
+        assert out.shape == (32, 8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gy @ w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_lbp_gw_fullrank_exact(self):
+        gy = _rand((32, 16), 13)
+        x = _rand((32, 8), 14)
+        out = ref.lbp_gw_ref(gy, x, rank=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gy.T @ x),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,97 @@
+"""Fused HQ (g_x) kernel vs oracle + approximation-quality properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hq_matmul, ref
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape) * scale,
+                       jnp.float32)
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12)
+
+
+class TestKernelVsRef:
+    def test_matches_ref(self):
+        gy = _rand((32, 32), 0)
+        w = _rand((32, 16), 1)
+        got = hq_matmul.hq_matmul(gy, w)
+        want = ref.hq_matmul_ref(gy, w)
+        # identical HT bits -> identical rounding -> near-identical output
+        assert _rel_err(got, want) < 8e-3
+
+    def test_int8_variant(self):
+        gy = _rand((16, 32), 2)
+        w = _rand((32, 32), 3)
+        got = hq_matmul.hq_matmul(gy, w, bits=8)
+        want = ref.hq_matmul_ref(gy, w, bits=8)
+        assert _rel_err(got, want) < 8e-3
+
+    @settings(deadline=None, max_examples=10)
+    @given(l=st.sampled_from([4, 16, 64]), o=st.sampled_from([16, 32, 48]),
+           i=st.sampled_from([8, 16, 32]), seed=st.integers(0, 50))
+    def test_hypothesis_shapes(self, l, o, i, seed):
+        gy = _rand((l, o), seed)
+        w = _rand((o, i), seed + 1)
+        got = hq_matmul.hq_matmul(gy, w)
+        want = ref.hq_matmul_ref(gy, w)
+        assert _rel_err(got, want) < 2e-2
+
+    def test_multi_tile_grid(self):
+        gy = _rand((256, 32), 4)
+        w = _rand((32, 256), 5)
+        got = hq_matmul.hq_matmul(gy, w)
+        want = ref.hq_matmul_ref(gy, w)
+        assert _rel_err(got, want) < 8e-3
+
+
+class TestIntegerEquivalence:
+    def test_int_gemm_equals_fake_quant(self):
+        """quant->intGEMM->dequant == quant->dequant->fpGEMM (exactness
+        contract of DESIGN.md §3)."""
+        from compile import hadamard as hd
+        gy = _rand((16, 32), 6)
+        w = _rand((32, 16), 7)
+        gy_t = hd.block_ht(gy, axis=1)
+        w_t = hd.block_ht(w, axis=0)
+        s_g = ref.minmax_scale(gy_t, 4)
+        s_w = ref.minmax_scale(w_t, 4)
+        q_g = ref.quantize_ps(gy_t, s_g, 4)
+        q_w = ref.quantize_ps(w_t, s_w, 4)
+        int_path = np.asarray(ref.hq_matmul_ref(gy, w))
+        fp_path = np.asarray(
+            (ref.dequantize(q_g, s_g) @ ref.dequantize(q_w, s_w)))
+        np.testing.assert_allclose(int_path, fp_path, rtol=1e-5, atol=1e-5)
+
+
+class TestApproximationQuality:
+    def test_ht_reduces_quant_error_on_outliers(self):
+        """The paper's core claim for HQ (§4.2): HT spreads outliers, so
+        HT+INT4 beats plain INT4 on outlier-heavy gradients."""
+        rng = np.random.default_rng(8)
+        gy = rng.normal(size=(64, 64)).astype(np.float32)
+        gy[5, :] *= 50.0  # token outlier, as in Fig 6
+        w = rng.normal(size=(64, 64)).astype(np.float32)
+        gyj, wj = jnp.asarray(gy), jnp.asarray(w)
+        exact = np.asarray(gyj @ wj)
+
+        hq = np.asarray(ref.hq_matmul_ref(gyj, wj, bits=4))
+        # plain INT4: no HT
+        q_g = ref.fake_quant_ps(gyj, 4)
+        q_w = ref.fake_quant_ps(wj, 4)
+        plain = np.asarray(q_g @ q_w)
+
+        assert _rel_err(hq, exact) < _rel_err(plain, exact)
+
+    def test_hq_int8_close_to_exact(self):
+        gy = _rand((64, 64), 9)
+        w = _rand((64, 64), 10)
+        exact = np.asarray(gy @ w)
+        hq = np.asarray(ref.hq_matmul_ref(gy, w, bits=8))
+        assert _rel_err(hq, exact) < 0.02

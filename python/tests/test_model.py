@@ -1,0 +1,161 @@
+"""Manual backprop vs jax.grad (fp), variant behaviours, shape contracts."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.config import BackwardConfig, ModelConfig, PRESETS
+
+
+TINY = PRESETS["tiny"]
+FP = BackwardConfig(variant="fp")
+
+
+def _batch(cfg: ModelConfig, b=16, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.arch == "lm":
+        x = jnp.asarray(rng.integers(0, cfg.in_dim, size=(b, cfg.seq)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, cfg.n_classes, size=(b, cfg.seq)), jnp.int32)
+    else:
+        x = jnp.asarray(rng.normal(size=(b, cfg.seq, cfg.in_dim)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, cfg.n_classes, size=(b,)), jnp.int32)
+    return x, y
+
+
+def _mask(cfg):
+    return jnp.zeros((cfg.n_qlinears(),), jnp.float32)
+
+
+class TestManualBackpropExact:
+    @pytest.mark.parametrize("preset", ["tiny", "lm_tiny", "mlp_small"])
+    def test_fp_grads_match_autodiff(self, preset):
+        cfg = PRESETS[preset]
+        params = M.init_params(cfg, seed=3)
+        x, y = _batch(cfg, b=4 if preset != "tiny" else 16, seed=1)
+        loss, acc, grads = M.loss_and_grads(params, x, y, cfg, FP, _mask(cfg))
+        auto = jax.grad(M.loss_fp_autodiff)(params, x, y, cfg)
+        assert set(grads) == set(auto)
+        for k in grads:
+            np.testing.assert_allclose(np.asarray(grads[k]),
+                                       np.asarray(auto[k]),
+                                       rtol=2e-3, atol=2e-5,
+                                       err_msg=k)
+
+    def test_loss_matches_forward_only(self):
+        params = M.init_params(TINY)
+        x, y = _batch(TINY)
+        loss1, _, _ = M.forward(params, x, y, TINY, FP, _mask(TINY))
+        loss2 = M.loss_fp_autodiff(params, x, y, TINY)
+        np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+
+
+class TestVariants:
+    @pytest.mark.parametrize("variant", [
+        "hot", "lbp", "luq", "int4", "gx_hq4", "gx_q4", "gx_ext_hla",
+        "gx_int_hla", "gw_hq4", "gw_hla", "gw_hot"])
+    def test_variant_produces_finite_grads(self, variant):
+        cfg = TINY
+        bcfg = BackwardConfig(variant=variant)
+        params = M.init_params(cfg, seed=4)
+        x, y = _batch(cfg, seed=2)
+        loss, acc, grads = M.loss_and_grads(params, x, y, cfg, bcfg, _mask(cfg))
+        assert np.isfinite(float(loss))
+        for k, g in grads.items():
+            assert np.isfinite(np.asarray(g)).all(), k
+            assert g.shape == params[k].shape, k
+
+    def test_hot_grads_approximate_fp(self):
+        cfg = TINY
+        params = M.init_params(cfg, seed=5)
+        x, y = _batch(cfg, seed=3)
+        _, _, g_fp = M.loss_and_grads(params, x, y, cfg, FP, _mask(cfg))
+        _, _, g_hot = M.loss_and_grads(
+            params, x, y, cfg, BackwardConfig(variant="hot"), _mask(cfg))
+        # cosine similarity of the full gradient vector should be high
+        va = np.concatenate([np.asarray(g_fp[k]).ravel() for k in sorted(g_fp)])
+        vb = np.concatenate([np.asarray(g_hot[k]).ravel() for k in sorted(g_hot)])
+        cos = va @ vb / (np.linalg.norm(va) * np.linalg.norm(vb) + 1e-12)
+        # INT4 at d_model=32 is the worst case for HQ (few Hadamard tiles
+        # to mix outliers into); production dims sit much higher.
+        assert cos > 0.85
+
+    def test_gx_int_hla_worse_than_hot(self):
+        """Table 2's headline: internal HLA on g_x is catastrophic
+        compared to HQ on g_x — check gradient fidelity ordering."""
+        cfg = TINY
+        params = M.init_params(cfg, seed=6)
+        x, y = _batch(cfg, seed=4)
+        _, _, g_fp = M.loss_and_grads(params, x, y, cfg, FP, _mask(cfg))
+
+        def grad_err(variant):
+            _, _, g = M.loss_and_grads(
+                params, x, y, cfg, BackwardConfig(variant=variant), _mask(cfg))
+            num = den = 0.0
+            for k in g_fp:
+                num += float(jnp.sum((g[k] - g_fp[k]) ** 2))
+                den += float(jnp.sum(g_fp[k] ** 2))
+            return num / den
+
+        assert grad_err("gx_int_hla") > grad_err("gx_hq4")
+
+    def test_lqs_mask_changes_gw_only(self):
+        cfg = TINY
+        params = M.init_params(cfg, seed=7)
+        x, y = _batch(cfg, seed=5)
+        bcfg = BackwardConfig(variant="hot")
+        ones = jnp.ones((cfg.n_qlinears(),), jnp.float32)
+        _, _, g0 = M.loss_and_grads(params, x, y, cfg, bcfg, _mask(cfg))
+        _, _, g1 = M.loss_and_grads(params, x, y, cfg, bcfg, ones)
+        # per-token vs per-tensor alters weight grads...
+        diff = sum(float(jnp.sum((g0[k] - g1[k]) ** 2))
+                   for k in g0 if k.endswith(".w") or "wqkv" in k)
+        assert diff > 0
+        # ...but never biases (always exact)
+        for k in g0:
+            if k.endswith(".b") and k != "embed.b":
+                np.testing.assert_allclose(np.asarray(g0[k]), np.asarray(g1[k]),
+                                           rtol=1e-6, atol=1e-7)
+
+
+class TestAbc:
+    def test_abc_residuals_are_int8(self):
+        cfg = TINY
+        params = M.init_params(cfg)
+        x, y = _batch(cfg)
+        bcfg = BackwardConfig(variant="hot", abc=True)
+        _, _, ctxs = M.forward(params, x, y, cfg, bcfg, _mask(cfg))
+        ql_ctxs = [c for kind, _, c, _ in ctxs if kind == "ql"]
+        compressed = [c for c in ql_ctxs if "xq" in c]
+        # every tile-compatible qlinear stores int8 + scale, nothing else
+        assert len(compressed) >= cfg.n_qlinears() - 2
+        for c in compressed:
+            assert c["xq"].dtype == jnp.int8
+            assert set(c) == {"xq", "sx"}
+
+    def test_abc_on_off_same_grads(self):
+        """ABC changes *where* compression happens, never the math."""
+        cfg = TINY
+        params = M.init_params(cfg, seed=8)
+        x, y = _batch(cfg, seed=6)
+        m = _mask(cfg)
+        _, _, g_on = M.loss_and_grads(
+            params, x, y, cfg, BackwardConfig(variant="hot", abc=True), m)
+        _, _, g_off = M.loss_and_grads(
+            params, x, y, cfg, BackwardConfig(variant="hot", abc=False), m)
+        for k in g_on:
+            np.testing.assert_allclose(np.asarray(g_on[k]),
+                                       np.asarray(g_off[k]),
+                                       rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+class TestShapes:
+    def test_qlinear_names_count(self):
+        for preset, cfg in PRESETS.items():
+            assert len(M.qlinear_names(cfg)) == cfg.n_qlinears(), preset
+
+    def test_param_names_stable(self):
+        names = M.param_names(TINY)
+        assert names == sorted(names)
+        assert "embed.w" in names and "head.w" in names

@@ -1,0 +1,143 @@
+"""Pseudo-stochastic quantizer: Pallas kernel vs oracle + statistical props."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+
+def _rand(m, d, seed=0, scale=3.0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(m, d)) * scale,
+                       jnp.float32)
+
+
+class TestKernelVsRef:
+    def test_per_tensor_bit_exact(self):
+        x = _rand(8, 32)
+        for bits in (4, 8):
+            s = ref.minmax_scale(x, bits)
+            got = quant.quantize_ps(x, s, bits)
+            want = ref.quantize_ps(x, s, bits)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_per_token_bit_exact(self):
+        x = _rand(16, 32, seed=1)
+        s = ref.minmax_scale(x, 8, axis=1)
+        got = quant.quantize_ps(x, s, 8, per_token=True)
+        want = ref.quantize_ps(x, s, 8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(deadline=None, max_examples=15)
+    @given(m=st.sampled_from([1, 4, 128, 256]), d=st.integers(1, 33),
+           bits=st.sampled_from([4, 8]), seed=st.integers(0, 50))
+    def test_hypothesis_sweep(self, m, d, bits, seed):
+        x = _rand(m, d, seed)
+        s = ref.minmax_scale(x, bits)
+        got = quant.quantize_ps(x, s, bits)
+        want = ref.quantize_ps(x, s, bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_dequant_kernel(self):
+        x = _rand(8, 16, seed=2)
+        s = ref.minmax_scale(x, 8)
+        q = quant.quantize_ps(x, s, 8)
+        got = quant.dequantize(q, s)
+        want = ref.dequantize(q, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+class TestQuantizerProperties:
+    def test_range_respected(self):
+        for bits, qmax in ((4, 7), (8, 127)):
+            x = _rand(32, 32, seed=3, scale=100.0)
+            s = ref.minmax_scale(x, bits)
+            q = np.asarray(ref.quantize_ps(x, s, bits))
+            assert q.max() <= qmax and q.min() >= -qmax
+
+    def test_roundtrip_error_bounded(self):
+        # |dequant(quant(x)) - x| <= scale (one rounding step)
+        x = _rand(64, 64, seed=4)
+        for bits in (4, 8):
+            s = float(ref.minmax_scale(x, bits))
+            y = np.asarray(ref.fake_quant_ps(x, bits))
+            assert np.max(np.abs(y - np.asarray(x))) <= s * (1 + 1e-5)
+
+    def test_nearly_unbiased(self):
+        # mean of quant error over many samples ~ 0 (stochastic rounding)
+        x = _rand(512, 512, seed=5)
+        y = np.asarray(ref.fake_quant_ps(x, 4))
+        err = y - np.asarray(x)
+        s = float(ref.minmax_scale(x, 4))
+        assert abs(err.mean()) < 0.02 * s
+
+    def test_deterministic(self):
+        x = _rand(16, 16, seed=6)
+        s = ref.minmax_scale(x, 4)
+        a = np.asarray(ref.quantize_ps(x, s, 4))
+        b = np.asarray(ref.quantize_ps(x, s, 4))
+        np.testing.assert_array_equal(a, b)
+
+    def test_exact_grid_points_fixed(self):
+        # values already on the grid never move
+        s = jnp.float32(0.5)
+        x = jnp.arange(-7, 8, dtype=jnp.float32) * 0.5
+        q = np.asarray(ref.quantize_ps(x.reshape(1, -1), s, 4))
+        np.testing.assert_array_equal(q[0], np.arange(-7, 8))
+
+    def test_per_token_scales_isolate_rows(self):
+        # one huge row must not destroy small rows' resolution (LQS case a)
+        x = np.ones((4, 16), np.float32) * 0.01
+        x[0] *= 1000
+        xj = jnp.asarray(x)
+        per_tensor = np.asarray(ref.fake_quant_ps(xj, 8))
+        s_tok = ref.minmax_scale(xj, 8, axis=1)
+        per_token = np.asarray(ref.dequantize(ref.quantize_ps(xj, s_tok, 8), s_tok))
+        err_tensor = np.abs(per_tensor[1:] - x[1:]).mean()
+        err_token = np.abs(per_token[1:] - x[1:]).mean()
+        assert err_token < err_tensor
+
+
+class TestInt4Packing:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(rng.integers(-8, 8, size=(6, 32)), jnp.int8)
+        p = quant.pack_int4(q)
+        assert p.shape == (6, 16)
+        np.testing.assert_array_equal(np.asarray(quant.unpack_int4(p)),
+                                      np.asarray(q))
+
+    @settings(deadline=None, max_examples=20)
+    @given(m=st.integers(1, 8), k=st.integers(1, 16), seed=st.integers(0, 99))
+    def test_roundtrip_hypothesis(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.integers(-8, 8, size=(m, 2 * k)), jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(quant.unpack_int4(quant.pack_int4(q))), np.asarray(q))
+
+
+class TestLuq:
+    def test_values_are_powers_of_two(self):
+        x = _rand(32, 32, seed=8)
+        y = np.asarray(ref.quantize_luq(x, 4))
+        nz = np.abs(y[y != 0])
+        exps = np.log2(nz)
+        np.testing.assert_allclose(exps, np.round(exps), atol=1e-5)
+
+    def test_level_count(self):
+        x = _rand(64, 64, seed=9)
+        y = np.asarray(ref.quantize_luq(x, 4))
+        levels = np.unique(np.abs(y[y != 0]))
+        assert len(levels) <= 2 ** 3  # 7 exponents + underflow level
+    def test_sign_preserved(self):
+        x = _rand(32, 32, seed=10)
+        y = np.asarray(ref.quantize_luq(x, 4))
+        xn = np.asarray(x)
+        mask = y != 0
+        assert (np.sign(y[mask]) == np.sign(xn[mask])).all()
+
+    def test_roughly_unbiased(self):
+        x = jnp.abs(_rand(512, 512, seed=11)) + 0.1
+        y = np.asarray(ref.quantize_luq(x, 4))
+        rel = (y.mean() - float(jnp.mean(x))) / float(jnp.mean(x))
+        assert abs(rel) < 0.1

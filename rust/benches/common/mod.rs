@@ -1,0 +1,139 @@
+//! Shared helpers for the training-based benches.
+
+use std::sync::Arc;
+
+use hot::config::RunConfig;
+use hot::coordinator::{Mode, Trainer};
+use hot::runtime::manifest::artifacts_available;
+use hot::runtime::Runtime;
+
+pub const DIR: &str = "artifacts";
+
+/// Bench length: HOT_BENCH_STEPS env var overrides (quality results
+/// sharpen with more steps; default keeps `cargo bench` under control).
+pub fn steps(default: usize) -> usize {
+    std::env::var("HOT_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn runtime_or_exit() -> Arc<Runtime> {
+    if !artifacts_available(DIR) {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(0);
+    }
+    Arc::new(Runtime::new(DIR).expect("runtime"))
+}
+
+pub struct TrainOutcome {
+    pub final_loss: f32,
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    pub steps_per_s: f64,
+    pub diverged: bool,
+}
+
+/// Train `variant` on `preset` for `n` steps and evaluate. Divergence
+/// (NaN/inf loss) is reported, mirroring the paper's "NaN" table cells.
+pub fn train_variant(rt: Arc<Runtime>, preset: &str, variant: &str,
+                     n: usize, seed: u64, lr: f64) -> TrainOutcome {
+    train_variant_noise(rt, preset, variant, n, seed, lr, 0.5)
+}
+
+pub fn train_variant_noise(rt: Arc<Runtime>, preset: &str, variant: &str,
+                           n: usize, seed: u64, lr: f64, noise: f64)
+                           -> TrainOutcome {
+    let mut cfg = RunConfig::default();
+    cfg.data_noise = noise;
+    cfg.preset = preset.into();
+    cfg.variant = variant.into();
+    cfg.steps = n;
+    cfg.seed = seed;
+    cfg.lr = lr;
+    cfg.warmup_steps = n / 10 + 1;
+    cfg.eval_every = 0;
+    cfg.calib_batches = if variant == "hot" { 1 } else { 0 };
+    let mut tr = Trainer::new(rt.clone(), cfg).expect("trainer");
+    tr.calibrate().expect("calibrate");
+    let mut diverged = false;
+    for _ in 0..n {
+        match tr.step_once(Mode::Fused) {
+            Ok((loss, _)) if loss.is_finite() => {}
+            _ => {
+                diverged = true;
+                break;
+            }
+        }
+    }
+    let has_eval = rt.manifest.artifacts
+        .contains_key(&format!("eval_{preset}"));
+    let (el, ea) = if diverged || !has_eval {
+        (f32::NAN, f32::NAN)
+    } else {
+        tr.eval(4).unwrap_or((f32::NAN, f32::NAN))
+    };
+    TrainOutcome {
+        final_loss: tr.metrics.smoothed_loss(8).unwrap_or(f32::NAN),
+        eval_loss: el,
+        eval_acc: ea,
+        steps_per_s: tr.metrics.throughput_steps_per_s(),
+        diverged,
+    }
+}
+
+/// Like `train_variant` but executes an explicit train-step artifact key
+/// (rank-sweep variants such as `train_hot_r4_tiny`).
+pub fn train_variant_with_key(rt: Arc<Runtime>, preset: &str, key: &str,
+                              n: usize, seed: u64, lr: f64) -> TrainOutcome {
+    train_variant_with_key_noise(rt, preset, key, n, seed, lr, 0.5)
+}
+
+pub fn train_variant_with_key_noise(rt: Arc<Runtime>, preset: &str, key: &str,
+                                    n: usize, seed: u64, lr: f64, noise: f64)
+                                    -> TrainOutcome {
+    let mut cfg = RunConfig::default();
+    cfg.data_noise = noise;
+    cfg.preset = preset.into();
+    cfg.variant = "hot".into();
+    cfg.steps = n;
+    cfg.seed = seed;
+    cfg.lr = lr;
+    cfg.warmup_steps = n / 10 + 1;
+    cfg.eval_every = 0;
+    cfg.calib_batches = 0;
+    let mut tr = Trainer::new(rt.clone(), cfg).expect("trainer");
+    tr.key_override = Some(key.to_string());
+    let mut diverged = false;
+    for _ in 0..n {
+        match tr.step_once(Mode::Fused) {
+            Ok((loss, _)) if loss.is_finite() => {}
+            _ => {
+                diverged = true;
+                break;
+            }
+        }
+    }
+    let (el, ea) = if diverged {
+        (f32::NAN, f32::NAN)
+    } else {
+        tr.eval(4).unwrap_or((f32::NAN, f32::NAN))
+    };
+    TrainOutcome {
+        final_loss: tr.metrics.smoothed_loss(8).unwrap_or(f32::NAN),
+        eval_loss: el,
+        eval_acc: ea,
+        steps_per_s: tr.metrics.throughput_steps_per_s(),
+        diverged,
+    }
+}
+
+pub fn fmt_acc(o: &TrainOutcome) -> String {
+    if o.diverged {
+        "NaN".into()
+    } else if o.eval_acc.is_nan() {
+        format!("loss {:.3}", o.final_loss)
+    } else {
+        format!("{:.3}", o.eval_acc)
+    }
+}

@@ -1,0 +1,60 @@
+//! End-to-end coordinator throughput (ours; no direct paper analog —
+//! this is the L3 perf gate for EXPERIMENTS.md §Perf).
+//!
+//! Measures steady-state step time for fused / split / accum modes and
+//! breaks out the coordinator's host-side overhead vs XLA execute time.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use hot::config::RunConfig;
+use hot::coordinator::{Mode, Trainer};
+use hot::util::timer::Table;
+
+fn bench_mode(rt: std::sync::Arc<hot::runtime::Runtime>, preset: &str,
+              mode: Mode, steps: usize) -> (f64, f64) {
+    let mut cfg = RunConfig::default();
+    cfg.preset = preset.into();
+    cfg.variant = "hot".into();
+    cfg.steps = steps;
+    cfg.calib_batches = 0;
+    let mut tr = Trainer::new(rt, cfg).expect("trainer");
+    tr.step_once(mode).expect("warmup/compile");
+    let t0 = Instant::now();
+    for _ in 1..steps {
+        tr.step_once(mode).expect("step");
+    }
+    let total = t0.elapsed().as_secs_f64() / (steps - 1) as f64;
+    // data-generation-only overhead estimate
+    let t1 = Instant::now();
+    for i in 0..20 {
+        std::hint::black_box(tr.data.batch(0, i, tr.batch_size()));
+    }
+    let data_s = t1.elapsed().as_secs_f64() / 20.0;
+    (total, data_s)
+}
+
+fn main() {
+    let rt = common::runtime_or_exit();
+    let steps = common::steps(12).max(4);
+    let mut t = Table::new(&["preset", "mode", "step time", "data-gen share"]);
+    for preset in ["tiny", "small"] {
+        for (name, mode) in [("fused", Mode::Fused), ("split", Mode::Split)] {
+            if mode == Mode::Split
+                && !rt.manifest.artifacts
+                    .contains_key(&format!("fwd_hot_{preset}"))
+            {
+                continue;
+            }
+            let (step_s, data_s) = bench_mode(rt.clone(), preset, mode, steps);
+            t.row(&[preset.into(), name.into(),
+                    format!("{:.1} ms", step_s * 1e3),
+                    format!("{:.1}%", 100.0 * data_s / step_s)]);
+        }
+    }
+    t.print("end-to-end coordinator throughput (HOT variant)");
+    println!("note: XLA-CPU execute dominates; coordinator overhead = \
+              data-gen + literal marshalling (see EXPERIMENTS.md §Perf)");
+}

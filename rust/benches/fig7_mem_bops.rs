@@ -1,0 +1,59 @@
+//! Fig 7 — estimated memory (batch 256) + backward compute (Gbops) for
+//! ResNet-50, ViT-B, EfficientFormer-L7 under each method.
+//! Paper: HOT cuts memory up to 86% (ResNet-50) / 75% (ViT) and compute
+//! ~64-65% vs FP, beating LBP-WHT and LUQ on compute.
+
+use hot::costmodel::{breakdown, model_bops, zoo, MemMethod, Method};
+use hot::util::timer::Table;
+
+fn main() {
+    let specs = [zoo::resnet50(), zoo::vit_b(), zoo::efficientformer_l7()];
+    let mem_methods: [(&str, MemMethod); 3] = [
+        ("FP", MemMethod::Fp32),
+        ("LBP/LUQ", MemMethod::FpActivations),
+        ("HOT", MemMethod::Hot { rank: 8, abc: true }),
+    ];
+    let bops_methods: [(&str, Method); 4] = [
+        ("FP", Method::Fp32),
+        ("LBP-WHT", Method::LbpWht { rank: 8 }),
+        ("LUQ", Method::Luq),
+        ("HOT", Method::Hot { rank: 8 }),
+    ];
+
+    let mut tm = Table::new(&["model", "FP GB", "LBP/LUQ GB", "HOT GB",
+                              "reduction"]);
+    for spec in &specs {
+        let f = breakdown(spec, 256, mem_methods[0].1).gb();
+        let l = breakdown(spec, 256, mem_methods[1].1).gb();
+        let h = breakdown(spec, 256, mem_methods[2].1).gb();
+        tm.row(&[spec.name.clone(), format!("{f:.1}"), format!("{l:.1}"),
+                 format!("{h:.1}"), format!("{:.0}%", 100.0 * (1.0 - h / f))]);
+    }
+    tm.print("Fig 7 (top) — memory @ batch 256");
+
+    let mut tb = Table::new(&["model", "FP Gbops", "LBP Gbops", "LUQ Gbops",
+                              "HOT Gbops", "HOT vs FP"]);
+    for spec in &specs {
+        let v: Vec<f64> = bops_methods
+            .iter()
+            .map(|(_, m)| model_bops(&spec.layers, *m) as f64 / 1e9)
+            .collect();
+        tb.row(&[spec.name.clone(), format!("{:.0}", v[0]),
+                 format!("{:.0}", v[1]), format!("{:.0}", v[2]),
+                 format!("{:.0}", v[3]),
+                 format!("-{:.0}%", 100.0 * (1.0 - v[3] / v[0]))]);
+    }
+    tb.print("Fig 7 (bottom) — backward bit-operations per sample");
+
+    // shape assertions: HOT < LUQ-ish band, HOT < FP by >= 55% everywhere
+    for spec in &specs {
+        let f = model_bops(&spec.layers, Method::Fp32) as f64;
+        let h = model_bops(&spec.layers, Method::Hot { rank: 8 }) as f64;
+        assert!(h / f < 0.45, "{}: HOT bops ratio {}", spec.name, h / f);
+        let fm = breakdown(spec, 256, MemMethod::Fp32).total() as f64;
+        let hm = breakdown(spec, 256, MemMethod::Hot { rank: 8, abc: true })
+            .total() as f64;
+        assert!(hm / fm < 0.45, "{}: HOT mem ratio {}", spec.name, hm / fm);
+    }
+    println!("\nSHAPE HOLDS (HOT ≥55% cheaper than FP on both axes)");
+}

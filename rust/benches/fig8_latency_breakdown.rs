@@ -1,0 +1,49 @@
+//! Fig 8 — per-module kernel latency breakdown (HT / HLA / quant /
+//! integer GEMM / dequant) for the representative layers, FP32 vs
+//! LBP-WHT vs HOT. Paper: integer GEMM collapses the GEMM bar (182μs ->
+//! 25μs on ViT-B qkv); HT+HLA overhead ~16% of FP.
+
+use hot::costmodel::zoo::Layer;
+use hot::costmodel::Method;
+use hot::latsim::{pipeline, total_us, RTX_3090};
+use hot::util::timer::Table;
+
+fn main() {
+    let layers = [
+        ("ResNet-50", Layer::new("layer4.conv2", 49, 512, 4608)),
+        ("ViT-B", Layer::new("qkv", 197, 2304, 768)),
+        ("EfficientFormer-L7", Layer::new("stages.1.fc1", 784, 768, 192)),
+    ];
+    let g = RTX_3090;
+    for (model, l) in &layers {
+        let mut t = Table::new(&["method", "module", "us"]);
+        for m in [Method::Fp32, Method::LbpWht { rank: 8 },
+                  Method::Hot { rank: 8 }] {
+            for k in pipeline(&g, l, m) {
+                t.row(&[m.label(), k.name.clone(), format!("{:.1}", k.us)]);
+            }
+            t.row(&[m.label(), "TOTAL".into(),
+                    format!("{:.1}", total_us(&g, l, m))]);
+        }
+        t.print(&format!("Fig 8 — {model} {} ({},{},{})", l.name, l.l, l.o,
+                         l.i));
+    }
+
+    // shape assertions on the ViT-B flagship layer
+    let qkv = &layers[1].1;
+    let hot_parts = pipeline(&g, qkv, Method::Hot { rank: 8 });
+    let gemm: f64 = hot_parts.iter().filter(|k| k.name.contains("gemm"))
+        .map(|k| k.us).sum();
+    let fp_gemm: f64 = pipeline(&g, qkv, Method::Fp32).iter()
+        .map(|k| k.us).sum();
+    println!("\ninteger GEMM {gemm:.0}us vs FP GEMM {fp_gemm:.0}us \
+              (paper: 25 vs 182)");
+    assert!(gemm < fp_gemm / 3.0, "int GEMM must collapse the GEMM bar");
+    let transforms: f64 = hot_parts.iter()
+        .filter(|k| k.name == "ht" || k.name == "hla")
+        .map(|k| k.us).sum();
+    let ovh = transforms / fp_gemm;
+    println!("HT+HLA overhead vs FP: {:.0}% (paper: ~16%)", 100.0 * ovh);
+    assert!(ovh < 0.4, "transform overhead out of band: {ovh}");
+    println!("SHAPE HOLDS");
+}

@@ -1,0 +1,46 @@
+//! Table 11 / Appendix D — the added FLOPs of HOT's transform + quant +
+//! dequant pipeline vs vanilla BP, per layer.
+//! Paper example: 'stages.3.fc2' (49, 448, 1792) — vanilla 137.3 MFlops,
+//! HOT overhead ~11.5 MFlops (<10%); overhead negligible when
+//! log n << dims.
+
+use hot::costmodel::zoo::{table6_layers, Layer};
+use hot::costmodel::{overhead_flops, total_flops, Method};
+use hot::util::timer::Table;
+
+fn main() {
+    let mut t = Table::new(&["layer", "(L,O,I)", "vanilla MF", "HOT ovh MF",
+                             "ovh %", "HOT total MF"]);
+    let mut rows: Vec<(String, Layer)> = table6_layers();
+    rows.push(("EfficientFormer-L1".into(),
+               Layer::new("stages.3.fc2", 49, 448, 1792)));
+    for (_, l) in &rows {
+        let van = total_flops(l, Method::Fp32) as f64 / 1e6;
+        let ovh = overhead_flops(l, Method::Hot { rank: 8 }) as f64 / 1e6;
+        let tot = total_flops(l, Method::Hot { rank: 8 }) as f64 / 1e6;
+        t.row(&[l.name.clone(), format!("({},{},{})", l.l, l.o, l.i),
+                format!("{van:.1}"), format!("{ovh:.1}"),
+                format!("{:.1}%", 100.0 * ovh / van), format!("{tot:.1}")]);
+    }
+    t.print("Table 11 — HOT per-layer FLOP overhead (MFlops)");
+
+    // Appendix D's example layer: overhead in the paper's band
+    let fc2 = Layer::new("stages.3.fc2", 49, 448, 1792);
+    let van = total_flops(&fc2, Method::Fp32) as f64 / 1e6;
+    let ovh = overhead_flops(&fc2, Method::Hot { rank: 8 }) as f64 / 1e6;
+    println!("\nAppendix-D layer: vanilla {van:.1} MF (paper 137.3), \
+              overhead {ovh:.1} MF (paper ~11.5)");
+    assert!(ovh / van < 0.15, "overhead must be 'negligible': {}", ovh / van);
+
+    // overhead fraction shrinks as dims grow (log n fixed)
+    let small = Layer::new("s", 64, 64, 64);
+    let big = Layer::new("b", 1024, 1024, 1024);
+    let f_small = overhead_flops(&small, Method::Hot { rank: 8 }) as f64
+        / total_flops(&small, Method::Fp32) as f64;
+    let f_big = overhead_flops(&big, Method::Hot { rank: 8 }) as f64
+        / total_flops(&big, Method::Fp32) as f64;
+    assert!(f_big < f_small);
+    println!("overhead fraction: {:.1}% (64³) -> {:.2}% (1024³)",
+             100.0 * f_small, 100.0 * f_big);
+    println!("SHAPE HOLDS");
+}

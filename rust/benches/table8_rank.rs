@@ -1,0 +1,60 @@
+//! Table 8 — HLA low-pass rank ablation (r ∈ {16, 8, 4, 2, 1}).
+//! Paper (EfficientFormer-L1 / CIFAR100 pretrain): accuracy plateaus at
+//! r=8 (76.25 vs 76.35 full-rank) and collapses below r=4; backward
+//! compute shrinks with r.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hot::costmodel::zoo::efficientformer_l1;
+use hot::costmodel::{model_bops, Method};
+use hot::util::timer::Table;
+
+fn main() {
+    let rt = common::runtime_or_exit();
+    let n = common::steps(120);
+    let spec = efficientformer_l1();
+    let paper: &[(usize, f64, f64)] = &[
+        (16, 1647.48, 76.35),
+        (8, 1383.54, 76.25),
+        (4, 1251.56, 73.09),
+        (2, 1185.58, 68.46),
+        (1, 1152.59, 47.28),
+    ];
+    let mut t = Table::new(&["r", "Gbops (ours)", "Gbops (paper)",
+                             "acc (ours)", "acc (paper)"]);
+    let mut accs = Vec::new();
+    for (r, p_cost, p_acc) in paper {
+        let key = if *r == 8 { "train_hot_tiny".to_string() }
+                  else { format!("train_hot_r{r}_tiny") };
+        assert!(rt.manifest.artifacts.contains_key(&key), "missing {key}");
+        let variant_steps = common::train_variant_with_key_noise(
+            rt.clone(), "tiny", &key, n, 5, 3e-3, 6.0);
+        let bops = model_bops(&spec.layers, Method::Hot { rank: *r }) as f64
+            / 1e9;
+        accs.push((*r, variant_steps.eval_acc));
+        t.row(&[r.to_string(), format!("{bops:.0}"), format!("{p_cost:.0}"),
+                common::fmt_acc(&variant_steps), format!("{p_acc:.2}")]);
+    }
+    t.print(&format!("Table 8 — HLA rank ablation (tiny pretrain, {n} steps)"));
+
+    // shape: cost strictly monotone in r; all ranks train stably.
+    let cost = |r: usize| model_bops(&spec.layers, Method::Hot { rank: r });
+    assert!(cost(1) < cost(4) && cost(4) < cost(8) && cost(8) < cost(16));
+    let acc8 = accs.iter().find(|(r, _)| *r == 8).unwrap().1;
+    let acc1 = accs.iter().find(|(r, _)| *r == 1).unwrap().1;
+    println!("\nacc r=8 {acc8:.3} vs r=1 {acc1:.3} (paper: 76.25 vs 47.28)");
+    for (r, a) in &accs {
+        assert!(a.is_finite(), "r={r} diverged");
+    }
+    assert!(acc8 + 0.05 >= acc1,
+            "higher rank must never lose materially to rank 1");
+    // Scale caveat (EXPERIMENTS.md): the paper's rank-1 accuracy collapse
+    // needs 200-epoch CIFAR100 training; at laptop scale the residual
+    // stream compresses end-task differences. The rank-error monotonicity
+    // that drives it is asserted on real tensors in
+    // python/tests/test_hla_matmul.py::test_rank_monotonicity and
+    // rust hadamard::tests::prop_hla_error_monotone_in_rank.
+    println!("SHAPE HOLDS (cost monotone; stability; error-monotonicity \
+              in unit tests)");
+}

@@ -1,0 +1,75 @@
+//! Table 9 — where may HOT be applied inside a LoRA fine-tune?
+//! Configurations: HOT on {frozen, decomposed} weight paths.
+//!
+//! Paper: HOT-on-frozen-only wins (92.51 vs 92.61 exact LoRA); applying
+//! HOT to the decomposed (adapter) path collapses accuracy (57.96 /
+//! 58.68).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hot::config::RunConfig;
+use hot::coordinator::LoraTrainer;
+use hot::util::timer::Table;
+
+fn run(rt: std::sync::Arc<hot::runtime::Runtime>, key: &str, n: usize)
+       -> (f32, bool) {
+    let mut cfg = RunConfig::default();
+    cfg.preset = "small".into();
+    cfg.steps = n;
+    cfg.lr = 2e-3;
+    cfg.warmup_steps = n / 10 + 1;
+    let mut tr = LoraTrainer::new(rt, cfg, key).expect("lora trainer");
+    let mut diverged = false;
+    for _ in 0..n {
+        match tr.step_once() {
+            Ok((l, _)) if l.is_finite() => {}
+            _ => {
+                diverged = true;
+                break;
+            }
+        }
+    }
+    (tr.metrics.smoothed_loss(8).unwrap_or(f32::NAN), diverged)
+}
+
+fn main() {
+    let rt = common::runtime_or_exit();
+    let n = common::steps(80);
+    let rows: &[(&str, &str, &str, f64)] = &[
+        ("lora_fp_small", "x", "x", 92.61),
+        ("lora_hotdec_small", "x", "v", 57.96),
+        ("lora_hotfrozen_small", "v", "x", 92.51),
+        ("lora_hotboth_small", "v", "v", 58.68),
+    ];
+    let mut t = Table::new(&["HOT on frozen", "HOT on decomposed",
+                             "final loss (ours)", "acc (paper)"]);
+    let mut losses = std::collections::BTreeMap::new();
+    for (key, hf, hdec, paper) in rows {
+        let (loss, diverged) = run(rt.clone(), key, n);
+        losses.insert(key.to_string(), loss);
+        t.row(&[hf.to_string(), hdec.to_string(),
+                if diverged { "NaN".into() } else { format!("{loss:.4}") },
+                format!("{paper:.2}")]);
+    }
+    t.print(&format!("Table 9 — HOT x LoRA weight-type ablation ({n} steps)"));
+
+    let frozen = losses["lora_hotfrozen_small"];
+    let dec = losses["lora_hotdec_small"];
+    let fp = losses["lora_fp_small"];
+    println!("\nfrozen-only {frozen:.4} vs decomposed {dec:.4} vs exact \
+              {fp:.4}");
+    for (k, l) in &losses {
+        assert!(l.is_finite(), "{k} diverged");
+    }
+    assert!(frozen < fp * 1.5 + 0.3,
+            "HOT on frozen must stay near exact LoRA");
+    // Scale caveat (EXPERIMENTS.md): the paper's decomposed-path collapse
+    // (92.51 -> 57.96) emerges over 50-epoch CIFAR100 fine-tunes; at this
+    // scale all configs fit the task and differences sit in the 3rd
+    // decimal. The mechanism — quantized adapter gradients corrupt the
+    // A/B update direction — is exercised (hot_decomposed runs the
+    // HLA+INT8 adapter path) and its gradients verified in
+    // python/tests/test_lora.py.
+    println!("SHAPE HOLDS (stability; frozen-only ~= exact LoRA)");
+}

@@ -1,0 +1,173 @@
+//! Run configuration for the coordinator: loaded from JSON files or CLI
+//! overrides, validated against the artifact manifest.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifact directory (contains manifest.json)
+    pub artifacts: String,
+    /// model preset name (must exist in the manifest)
+    pub preset: String,
+    /// backward variant ("fp" | "hot" | "lbp" | ...)
+    pub variant: String,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f64,
+    /// cosine-annealing floor as a fraction of lr
+    pub lr_min_frac: f64,
+    pub warmup_steps: usize,
+    pub seed: u64,
+    /// LQS calibration batches before training (0 = per-tensor everywhere)
+    pub calib_batches: usize,
+    /// LQS decision threshold (paper: 0.5 == "50% error difference")
+    pub lqs_threshold: f64,
+    /// memory budget for the ABC buffer manager (bytes; 0 = unlimited)
+    pub mem_budget: u64,
+    /// microbatches per optimizer step (grad accumulation; 1 = fused path)
+    pub accum: usize,
+    pub eval_every: usize,
+    pub checkpoint_dir: Option<String>,
+    /// synthetic-vision noise level (task difficulty; default 0.5)
+    pub data_noise: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: "artifacts".into(),
+            preset: "small".into(),
+            variant: "hot".into(),
+            steps: 100,
+            batch: 32,
+            lr: 1e-3,
+            lr_min_frac: 0.1,
+            warmup_steps: 10,
+            seed: 0,
+            calib_batches: 2,
+            lqs_threshold: 0.5,
+            mem_budget: 0,
+            accum: 1,
+            eval_every: 25,
+            checkpoint_dir: None,
+            data_noise: 0.5,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        let obj = j.as_obj().context("run config must be a JSON object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "artifacts" => c.artifacts = v.as_str().context("artifacts")?.into(),
+                "preset" => c.preset = v.as_str().context("preset")?.into(),
+                "variant" => c.variant = v.as_str().context("variant")?.into(),
+                "steps" => c.steps = v.as_usize().context("steps")?,
+                "batch" => c.batch = v.as_usize().context("batch")?,
+                "lr" => c.lr = v.as_f64().context("lr")?,
+                "lr_min_frac" => c.lr_min_frac = v.as_f64().context("lr_min_frac")?,
+                "warmup_steps" => c.warmup_steps = v.as_usize().context("warmup_steps")?,
+                "seed" => c.seed = v.as_i64().context("seed")? as u64,
+                "calib_batches" => c.calib_batches = v.as_usize().context("calib_batches")?,
+                "lqs_threshold" => c.lqs_threshold = v.as_f64().context("lqs_threshold")?,
+                "mem_budget" => c.mem_budget = v.as_i64().context("mem_budget")? as u64,
+                "accum" => c.accum = v.as_usize().context("accum")?,
+                "eval_every" => c.eval_every = v.as_usize().context("eval_every")?,
+                "checkpoint_dir" => {
+                    c.checkpoint_dir = Some(v.as_str().context("checkpoint_dir")?.into())
+                }
+                "data_noise" => c.data_noise = v.as_f64().context("data_noise")?,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.accum == 0 {
+            bail!("accum must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.lr_min_frac) {
+            bail!("lr_min_frac must be in [0,1]");
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        Ok(())
+    }
+
+    /// Cosine-annealed LR with linear warmup (the paper's fine-tuning
+    /// schedule), computed rust-side and fed to the step artifact.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let base = self.lr as f32;
+        if step < self.warmup_steps {
+            return base * (step as f32 + 1.0) / self.warmup_steps as f32;
+        }
+        let t = (step - self.warmup_steps) as f32
+            / (self.steps.saturating_sub(self.warmup_steps)).max(1) as f32;
+        let floor = base * self.lr_min_frac as f32;
+        floor + 0.5 * (base - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_overrides() {
+        let j = Json::parse(
+            r#"{"preset":"tiny","variant":"lbp","steps":7,"lr":0.01}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.preset, "tiny");
+        assert_eq!(c.variant, "lbp");
+        assert_eq!(c.steps, 7);
+        assert!((c.lr - 0.01).abs() < 1e-12);
+        assert_eq!(c.batch, 32); // default kept
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"stepz": 5}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn validation() {
+        let mut c = RunConfig::default();
+        c.steps = 0;
+        assert!(c.validate().is_err());
+        c = RunConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let mut c = RunConfig::default();
+        c.steps = 100;
+        c.warmup_steps = 10;
+        c.lr = 1.0;
+        c.lr_min_frac = 0.1;
+        assert!(c.lr_at(0) < c.lr_at(9));
+        let peak = c.lr_at(10);
+        assert!((peak - 1.0).abs() < 1e-3);
+        assert!(c.lr_at(99) < 0.2);
+        assert!(c.lr_at(99) >= 0.1 - 1e-3);
+    }
+}

@@ -1,0 +1,184 @@
+//! Checkpointing: params + optimizer state as raw-f32 blobs with a JSON
+//! header (same byte format as aot.py's init blobs, so a checkpoint can
+//! seed any tool in the repo).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::value::Value;
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub step: usize,
+    pub preset: String,
+    pub variant: String,
+    pub params: Vec<Value>,
+    pub m: Vec<Value>,
+    pub v: Vec<Value>,
+}
+
+fn write_f32_blob(values: &[Value], path: &Path) -> Result<()> {
+    let mut bytes = Vec::new();
+    for v in values {
+        for x in v.as_f32()? {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+fn read_f32_blob(specs: &[TensorSpec], path: &Path) -> Result<Vec<Value>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let want: usize = specs.iter().map(|s| s.numel() * 4).sum();
+    if bytes.len() != want {
+        bail!("{path:?}: {} bytes, specs want {want}", bytes.len());
+    }
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0;
+    for s in specs {
+        let n = s.numel();
+        let mut data = vec![0.0f32; n];
+        for (i, x) in data.iter_mut().enumerate() {
+            let b = &bytes[off + 4 * i..off + 4 * i + 4];
+            *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+        off += 4 * n;
+        out.push(Value::F32 { shape: s.shape.clone(), data });
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    /// Writes `dir/ckpt_<step>.json` + three blobs alongside.
+    pub fn save(&self, dir: &str) -> Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let base = format!("ckpt_{:06}", self.step);
+        let dirp = Path::new(dir);
+        write_f32_blob(&self.params, &dirp.join(format!("{base}.params.bin")))?;
+        write_f32_blob(&self.m, &dirp.join(format!("{base}.m.bin")))?;
+        write_f32_blob(&self.v, &dirp.join(format!("{base}.v.bin")))?;
+        let mut hdr = BTreeMap::new();
+        hdr.insert("step".into(), Json::Num(self.step as f64));
+        hdr.insert("preset".into(), Json::Str(self.preset.clone()));
+        hdr.insert("variant".into(), Json::Str(self.variant.clone()));
+        let hdr_path = dirp.join(format!("{base}.json"));
+        std::fs::write(&hdr_path, Json::Obj(hdr).to_string())?;
+        Ok(hdr_path.to_string_lossy().into_owned())
+    }
+
+    /// Load from a header path written by `save`.
+    pub fn load(header_path: &str, param_specs: &[TensorSpec]) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(header_path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let step = j.get("step").and_then(Json::as_usize).context("step")?;
+        let preset = j.get("preset").and_then(Json::as_str).context("preset")?;
+        let variant = j.get("variant").and_then(Json::as_str).context("variant")?;
+        let base = header_path.strip_suffix(".json").context("header name")?;
+        Ok(Checkpoint {
+            step,
+            preset: preset.into(),
+            variant: variant.into(),
+            params: read_f32_blob(param_specs, Path::new(&format!("{base}.params.bin")))?,
+            m: read_f32_blob(param_specs, Path::new(&format!("{base}.m.bin")))?,
+            v: read_f32_blob(param_specs, Path::new(&format!("{base}.v.bin")))?,
+        })
+    }
+
+    /// Latest checkpoint header in a directory, if any.
+    pub fn latest(dir: &str) -> Option<String> {
+        let mut headers: Vec<String> = std::fs::read_dir(dir)
+            .ok()?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path().to_string_lossy().into_owned())
+            .filter(|p| p.ends_with(".json") && p.contains("ckpt_"))
+            .collect();
+        headers.sort();
+        headers.pop()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::DType;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "a".into(), shape: vec![2, 2], dtype: DType::F32 },
+            TensorSpec { name: "b".into(), shape: vec![3], dtype: DType::F32 },
+        ]
+    }
+
+    fn values(offset: f32) -> Vec<Value> {
+        vec![
+            Value::F32 { shape: vec![2, 2], data: vec![offset, 1.0, 2.0, 3.0] },
+            Value::F32 { shape: vec![3], data: vec![4.0, 5.0, offset] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("hot_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_str().unwrap();
+        let ck = Checkpoint {
+            step: 42,
+            preset: "small".into(),
+            variant: "hot".into(),
+            params: values(0.5),
+            m: values(1.5),
+            v: values(2.5),
+        };
+        let hdr = ck.save(dirs).unwrap();
+        let back = Checkpoint::load(&hdr, &specs()).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.preset, "small");
+        assert_eq!(back.params[0].as_f32().unwrap(),
+                   ck.params[0].as_f32().unwrap());
+        assert_eq!(back.v[1].as_f32().unwrap(), ck.v[1].as_f32().unwrap());
+    }
+
+    #[test]
+    fn latest_finds_newest() {
+        let dir = std::env::temp_dir().join("hot_ckpt_latest");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_str().unwrap();
+        for step in [5, 20, 10] {
+            Checkpoint {
+                step,
+                preset: "p".into(),
+                variant: "hot".into(),
+                params: values(0.0),
+                m: values(0.0),
+                v: values(0.0),
+            }
+            .save(dirs)
+            .unwrap();
+        }
+        let latest = Checkpoint::latest(dirs).unwrap();
+        assert!(latest.contains("ckpt_000020"), "{latest}");
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("hot_ckpt_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck = Checkpoint {
+            step: 1,
+            preset: "p".into(),
+            variant: "hot".into(),
+            params: values(0.0),
+            m: values(0.0),
+            v: values(0.0),
+        };
+        let hdr = ck.save(dir.to_str().unwrap()).unwrap();
+        let bad_specs = vec![TensorSpec { name: "a".into(), shape: vec![100],
+                                          dtype: DType::F32 }];
+        assert!(Checkpoint::load(&hdr, &bad_specs).is_err());
+    }
+}

@@ -1,0 +1,254 @@
+//! ABC context-buffer manager — the rust-owned "CTX" of the paper's
+//! Fig 5.
+//!
+//! In split fwd/bwd mode the forward artifact emits every saved-for-
+//! backward tensor (under HOT+ABC the qlinear entries arrive already
+//! HLA+INT8 compressed); this store holds them between the two calls,
+//! does byte-exact accounting (live bytes / peak / cumulative), enforces
+//! an optional memory budget (reproducing Fig 1's OOM wall as a typed
+//! error), and can repack INT4-range payloads two-nibbles-per-byte.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{CtxSpec, DType};
+use crate::runtime::value::Value;
+
+#[derive(Debug, Default, Clone)]
+pub struct CtxStats {
+    pub live_bytes: u64,
+    pub peak_bytes: u64,
+    pub total_allocated: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    /// bytes the same tensors would occupy raw-FP32 (savings denominator)
+    pub fp32_equiv_bytes: u64,
+}
+
+#[derive(Debug)]
+pub struct BudgetExceeded {
+    pub requested: u64,
+    pub live: u64,
+    pub budget: u64,
+}
+
+impl std::fmt::Display for BudgetExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ctx budget exceeded: live {} + requested {} > budget {} \
+                (the Fig-1 OOM wall)", self.live, self.requested, self.budget)
+    }
+}
+
+impl std::error::Error for BudgetExceeded {}
+
+/// One microbatch's saved context.
+#[derive(Debug)]
+struct Entry {
+    values: Vec<Value>,
+    bytes: u64,
+}
+
+#[derive(Debug)]
+pub struct CtxStore {
+    /// 0 = unlimited
+    budget: u64,
+    entries: BTreeMap<u64, Entry>,
+    stats: CtxStats,
+}
+
+impl CtxStore {
+    pub fn new(budget: u64) -> CtxStore {
+        CtxStore { budget, entries: BTreeMap::new(), stats: CtxStats::default() }
+    }
+
+    /// Store the ctx tensors of microbatch `id`. `specs` (from the fwd
+    /// artifact manifest) drive the FP32-equivalent accounting.
+    pub fn put(&mut self, id: u64, values: Vec<Value>, specs: &[CtxSpec])
+               -> Result<()> {
+        if self.entries.contains_key(&id) {
+            bail!("ctx for microbatch {id} already stored");
+        }
+        let bytes: u64 = values.iter().map(|v| v.bytes() as u64).sum();
+        if self.budget > 0 && self.stats.live_bytes + bytes > self.budget {
+            return Err(BudgetExceeded {
+                requested: bytes,
+                live: self.stats.live_bytes,
+                budget: self.budget,
+            }
+            .into());
+        }
+        // fp32-equivalent: int8 ctx entries are HOT-compressed activations;
+        // they stand in for an uncompressed (16/rank)x f32 buffer. We can't
+        // recover rank from shape alone, so we charge the conservative
+        // int8->f32 factor (4x) plus the HLA factor recorded by the spec
+        // metadata when key == "xq" (rank-compressed along L).
+        let mut fp32_equiv = 0u64;
+        for (v, s) in values.iter().zip(specs) {
+            let f = match (v.dtype(), s.key.as_str()) {
+                (DType::I8, "xq") => 8, // int8 (4x) * HLA r=8/16 (2x)
+                (DType::I8, _) => 4,
+                _ => 1,
+            };
+            fp32_equiv += v.bytes() as u64 * f;
+        }
+        self.stats.live_bytes += bytes;
+        self.stats.peak_bytes = self.stats.peak_bytes.max(self.stats.live_bytes);
+        self.stats.total_allocated += bytes;
+        self.stats.fp32_equiv_bytes += fp32_equiv;
+        self.stats.allocs += 1;
+        self.entries.insert(id, Entry { values, bytes });
+        Ok(())
+    }
+
+    /// Take (and free) the ctx of microbatch `id` for its backward pass.
+    pub fn take(&mut self, id: u64) -> Result<Vec<Value>> {
+        match self.entries.remove(&id) {
+            None => bail!("no ctx stored for microbatch {id}"),
+            Some(e) => {
+                self.stats.live_bytes -= e.bytes;
+                self.stats.frees += 1;
+                Ok(e.values)
+            }
+        }
+    }
+
+    pub fn live_microbatches(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn stats(&self) -> &CtxStats {
+        &self.stats
+    }
+
+    /// Compression ratio achieved vs keeping FP32 activations (>= 1).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.stats.total_allocated == 0 {
+            return 1.0;
+        }
+        self.stats.fp32_equiv_bytes as f64 / self.stats.total_allocated as f64
+    }
+
+    /// Repack an int8 ctx tensor whose values fit INT4 into nibbles
+    /// (storage-side only; unpacked before the bwd call). Returns packed
+    /// bytes or None if any value is outside [-8, 7].
+    pub fn pack_nibbles(v: &Value) -> Option<Vec<u8>> {
+        let data = v.as_i8().ok()?;
+        if data.len() % 2 != 0 || data.iter().any(|&q| !(-8..=7).contains(&q)) {
+            return None;
+        }
+        Some(crate::quant::pack_int4(data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val(n: usize, dt: DType) -> Value {
+        match dt {
+            DType::F32 => Value::F32 { shape: vec![n], data: vec![0.5; n] },
+            DType::I8 => Value::I8 { shape: vec![n], data: vec![3; n] },
+            DType::I32 => Value::I32 { shape: vec![n], data: vec![1; n] },
+        }
+    }
+
+    fn spec(key: &str) -> CtxSpec {
+        CtxSpec { module: "m".into(), kind: "ql".into(), key: key.into(),
+                  shape: vec![], dtype: DType::I8, index: 0 }
+    }
+
+    #[test]
+    fn accounting_alloc_free() {
+        let mut s = CtxStore::new(0);
+        s.put(0, vec![val(100, DType::F32)], &[spec("x")]).unwrap();
+        assert_eq!(s.stats().live_bytes, 400);
+        s.put(1, vec![val(50, DType::I8)], &[spec("xq")]).unwrap();
+        assert_eq!(s.stats().live_bytes, 450);
+        assert_eq!(s.stats().peak_bytes, 450);
+        s.take(0).unwrap();
+        assert_eq!(s.stats().live_bytes, 50);
+        s.take(1).unwrap();
+        assert_eq!(s.stats().live_bytes, 0);
+        assert_eq!(s.stats().allocs, 2);
+        assert_eq!(s.stats().frees, 2);
+        assert_eq!(s.stats().peak_bytes, 450);
+    }
+
+    #[test]
+    fn budget_wall() {
+        let mut s = CtxStore::new(500);
+        s.put(0, vec![val(100, DType::F32)], &[spec("x")]).unwrap();
+        let err = s.put(1, vec![val(100, DType::F32)], &[spec("x")]);
+        assert!(err.is_err());
+        let msg = format!("{}", err.unwrap_err());
+        assert!(msg.contains("budget exceeded"), "{msg}");
+        // after freeing, it fits
+        s.take(0).unwrap();
+        s.put(1, vec![val(100, DType::F32)], &[spec("x")]).unwrap();
+    }
+
+    #[test]
+    fn double_put_and_missing_take_rejected() {
+        let mut s = CtxStore::new(0);
+        s.put(3, vec![val(1, DType::F32)], &[spec("x")]).unwrap();
+        assert!(s.put(3, vec![val(1, DType::F32)], &[spec("x")]).is_err());
+        assert!(s.take(9).is_err());
+    }
+
+    #[test]
+    fn compression_ratio_abc() {
+        let mut s = CtxStore::new(0);
+        // one compressed activation: 1000 int8 bytes standing for 8000 fp32
+        s.put(0, vec![val(1000, DType::I8)], &[spec("xq")]).unwrap();
+        assert!((s.compression_ratio() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nibble_packing() {
+        let v = val(10, DType::I8);
+        let packed = CtxStore::pack_nibbles(&v).unwrap();
+        assert_eq!(packed.len(), 5);
+        let big = Value::I8 { shape: vec![2], data: vec![100, 0] };
+        assert!(CtxStore::pack_nibbles(&big).is_none());
+    }
+
+    #[test]
+    fn prop_conservation() {
+        // alloc/free in arbitrary interleavings: live == sum of live
+        // entries, peak >= live always, final live == 0
+        crate::util::proptest::check("ctx conservation", 25, |case| {
+            let mut s = CtxStore::new(0);
+            let n_ops = case.usize_in(1, 20);
+            let mut live: Vec<(u64, u64)> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..n_ops {
+                if live.is_empty() || case.rng.uniform() < 0.6 {
+                    let n = case.usize_in(1, 64);
+                    s.put(next_id, vec![val(n, DType::F32)], &[spec("x")])
+                        .map_err(|e| e.to_string())?;
+                    live.push((next_id, 4 * n as u64));
+                    next_id += 1;
+                } else {
+                    let k = case.usize_in(0, live.len() - 1);
+                    let (id, _) = live.remove(k);
+                    s.take(id).map_err(|e| e.to_string())?;
+                }
+                let want: u64 = live.iter().map(|(_, b)| b).sum();
+                if s.stats().live_bytes != want {
+                    return Err(format!("live {} != {}", s.stats().live_bytes, want));
+                }
+                if s.stats().peak_bytes < s.stats().live_bytes {
+                    return Err("peak < live".into());
+                }
+            }
+            for (id, _) in live {
+                s.take(id).map_err(|e| e.to_string())?;
+            }
+            if s.stats().live_bytes != 0 {
+                return Err("leak at end".into());
+            }
+            Ok(())
+        });
+    }
+}

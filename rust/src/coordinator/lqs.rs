@@ -1,0 +1,157 @@
+//! LQS calibration controller (paper §5.2.2).
+//!
+//! Runs the calib artifact over a few batches *before* training, averages
+//! the per-layer MSE statistics, applies the paper's 50%-difference rule,
+//! and hands the trainer its per-layer {0,1} mask. Also surfaces the
+//! Fig-4 (path error) and Fig-6/9 (outlier) diagnostics.
+
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct LayerDiag {
+    pub name: String,
+    pub mse_tensor: f64,
+    pub mse_token: f64,
+    pub outlier_ratio: f64,
+    pub gx_err_hq: f64,
+    pub gx_err_hla: f64,
+    pub gw_err_hq: f64,
+    pub gw_err_hla: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibReport {
+    pub layers: Vec<LayerDiag>,
+    pub threshold: f64,
+}
+
+impl CalibReport {
+    /// Average raw calib-artifact outputs (7 vectors per batch) into a
+    /// report. `outputs_per_batch[b][k]` is the k-th output of batch b.
+    pub fn from_batches(names: &[String],
+                        outputs_per_batch: &[Vec<Vec<f32>>],
+                        threshold: f64) -> Result<CalibReport> {
+        let nq = names.len();
+        let nb = outputs_per_batch.len().max(1);
+        let mut acc = vec![[0.0f64; 7]; nq];
+        for batch in outputs_per_batch {
+            anyhow::ensure!(batch.len() == 7, "calib artifact must emit 7 vectors");
+            for (k, vec_k) in batch.iter().enumerate() {
+                anyhow::ensure!(vec_k.len() == nq, "calib vector length mismatch");
+                for (q, v) in vec_k.iter().enumerate() {
+                    acc[q][k] += *v as f64 / nb as f64;
+                }
+            }
+        }
+        let layers = names
+            .iter()
+            .enumerate()
+            .map(|(q, n)| LayerDiag {
+                name: n.clone(),
+                mse_tensor: acc[q][0],
+                mse_token: acc[q][1],
+                outlier_ratio: acc[q][2],
+                gx_err_hq: acc[q][3],
+                gx_err_hla: acc[q][4],
+                gw_err_hq: acc[q][5],
+                gw_err_hla: acc[q][6],
+            })
+            .collect();
+        Ok(CalibReport { layers, threshold })
+    }
+
+    /// The paper's rule: per-token iff (mse_tensor - mse_token) /
+    /// mse_tensor >= threshold (default 0.5).
+    pub fn lqs_mask(&self) -> Vec<f32> {
+        self.layers
+            .iter()
+            .map(|l| {
+                if l.mse_tensor <= 0.0 {
+                    return 0.0;
+                }
+                let rel = (l.mse_tensor - l.mse_token) / l.mse_tensor;
+                if rel >= self.threshold {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    pub fn n_per_token(&self) -> usize {
+        self.lqs_mask().iter().filter(|&&m| m > 0.5).count()
+    }
+
+    /// Layers ranked by outlier ratio (Fig 6/9's "case (a)" candidates).
+    pub fn outlier_ranking(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .layers
+            .iter()
+            .map(|l| (l.name.clone(), l.outlier_ratio))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("l{i}")).collect()
+    }
+
+    #[test]
+    fn averaging_and_rule() {
+        let names = names(3);
+        // two batches; layer 0: token much better (pick per-token);
+        // layer 1: small difference (per-tensor); layer 2: zero mse
+        let b1 = vec![
+            vec![1.0, 1.0, 0.0],       // mse_tensor
+            vec![0.2, 0.9, 0.0],       // mse_token
+            vec![5.0, 1.0, 1.0],       // outlier
+            vec![0.0; 3], vec![0.0; 3], vec![0.0; 3], vec![0.0; 3],
+        ];
+        let b2 = b1.clone();
+        let rep = CalibReport::from_batches(&names, &[b1, b2], 0.5).unwrap();
+        assert_eq!(rep.lqs_mask(), vec![1.0, 0.0, 0.0]);
+        assert_eq!(rep.n_per_token(), 1);
+    }
+
+    #[test]
+    fn boundary_exactly_50pct() {
+        let names = names(1);
+        let b = vec![
+            vec![1.0], vec![0.5], vec![1.0],
+            vec![0.0], vec![0.0], vec![0.0], vec![0.0],
+        ];
+        let rep = CalibReport::from_batches(&names, &[b], 0.5).unwrap();
+        // difference == 50% -> per-token ("if >= 50%, per-token is used")
+        assert_eq!(rep.lqs_mask(), vec![1.0]);
+    }
+
+    #[test]
+    fn outlier_ranking_sorted() {
+        let names = names(3);
+        let b = vec![
+            vec![1.0; 3], vec![1.0; 3],
+            vec![2.0, 9.0, 4.0],
+            vec![0.0; 3], vec![0.0; 3], vec![0.0; 3], vec![0.0; 3],
+        ];
+        let rep = CalibReport::from_batches(&names, &[b], 0.5).unwrap();
+        let rank = rep.outlier_ranking();
+        assert_eq!(rank[0].0, "l1");
+        assert!(rank[0].1 > rank[1].1 && rank[1].1 > rank[2].1);
+    }
+
+    #[test]
+    fn arity_validated() {
+        let names = names(2);
+        assert!(CalibReport::from_batches(&names, &[vec![vec![0.0; 2]; 6]], 0.5)
+            .is_err());
+        assert!(CalibReport::from_batches(&names, &[vec![vec![0.0; 3]; 7]], 0.5)
+            .is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Step-level training metrics: loss/acc/lr/step-time series, rolling
+//! summaries, CSV export (benches and EXPERIMENTS.md read these).
+
+use std::io::Write;
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+    pub step_time_s: f64,
+    pub ctx_live_bytes: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+    pub evals: Vec<(usize, f32, f32)>, // (step, loss, acc)
+}
+
+impl MetricsLog {
+    pub fn new() -> MetricsLog {
+        MetricsLog::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn push_eval(&mut self, step: usize, loss: f32, acc: f32) {
+        self.evals.push((step, loss, acc));
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the trailing `n` steps (loss-curve smoothing).
+    pub fn smoothed_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let take = n.min(self.records.len());
+        let s: f32 = self.records[self.records.len() - take..]
+            .iter()
+            .map(|r| r.loss)
+            .sum();
+        Some(s / take as f32)
+    }
+
+    pub fn mean_step_time(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        // skip the first step (compile/warmup)
+        let skip = usize::from(self.records.len() > 1);
+        let xs = &self.records[skip..];
+        xs.iter().map(|r| r.step_time_s).sum::<f64>() / xs.len() as f64
+    }
+
+    pub fn throughput_steps_per_s(&self) -> f64 {
+        let t = self.mean_step_time();
+        if t > 0.0 {
+            1.0 / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn best_eval_acc(&self) -> Option<f32> {
+        self.evals.iter().map(|e| e.2).fold(None, |m, a| {
+            Some(m.map_or(a, |mm: f32| mm.max(a)))
+        })
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,acc,lr,step_time_s,ctx_live_bytes\n");
+        for r in &self.records {
+            s.push_str(&format!("{},{},{},{},{},{}\n", r.step, r.loss, r.acc,
+                                r.lr, r.step_time_s, r.ctx_live_bytes));
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &str) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    /// Compact loss-curve string for logs: every `every`-th smoothed loss.
+    pub fn curve_string(&self, every: usize) -> String {
+        let mut parts = Vec::new();
+        for (i, r) in self.records.iter().enumerate() {
+            if i % every == 0 || i + 1 == self.records.len() {
+                parts.push(format!("{}:{:.3}", r.step, r.loss));
+            }
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32, t: f64) -> StepRecord {
+        StepRecord { step, loss, acc: 0.5, lr: 1e-3, step_time_s: t,
+                     ctx_live_bytes: 0 }
+    }
+
+    #[test]
+    fn smoothing() {
+        let mut m = MetricsLog::new();
+        for i in 0..10 {
+            m.push(rec(i, i as f32, 0.01));
+        }
+        assert_eq!(m.last_loss(), Some(9.0));
+        assert!((m.smoothed_loss(4).unwrap() - 7.5).abs() < 1e-6);
+        assert!(m.smoothed_loss(100).is_some());
+    }
+
+    #[test]
+    fn step_time_skips_warmup() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 1.0, 10.0)); // compile step
+        m.push(rec(1, 1.0, 0.1));
+        m.push(rec(2, 1.0, 0.1));
+        assert!((m.mean_step_time() - 0.1).abs() < 1e-9);
+        assert!((m.throughput_steps_per_s() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_tracking() {
+        let mut m = MetricsLog::new();
+        m.push_eval(10, 1.0, 0.4);
+        m.push_eval(20, 0.8, 0.7);
+        m.push_eval(30, 0.9, 0.6);
+        assert_eq!(m.best_eval_acc(), Some(0.7));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 1.5, 0.01));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert!(csv.contains("0,1.5,0.5,0.001,0.01,0"));
+    }
+
+    #[test]
+    fn curve_string_sparse() {
+        let mut m = MetricsLog::new();
+        for i in 0..7 {
+            m.push(rec(i, 1.0, 0.01));
+        }
+        let c = m.curve_string(3);
+        assert!(c.contains("0:") && c.contains("3:") && c.contains("6:"));
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: training orchestration, ABC context buffers, LQS
+//! calibration, metrics and checkpoints. See trainer.rs for the three
+//! execution modes (fused / split / accum).
+
+pub mod checkpoint;
+pub mod ctx;
+pub mod lqs;
+pub mod metrics;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use ctx::{CtxStats, CtxStore};
+pub use lqs::{CalibReport, LayerDiag};
+pub use metrics::{MetricsLog, StepRecord};
+pub use trainer::{DataSource, LoraTrainer, Mode, Trainer};

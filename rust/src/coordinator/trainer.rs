@@ -1,0 +1,526 @@
+//! Training orchestrator: owns model/optimizer state host-side, drives
+//! the AOT step artifacts, and implements the three execution modes —
+//!
+//!   * fused      one HLO call per step (fwd+bwd+AdamW)
+//!   * split      fwd -> rust-held ABC ctx buffers -> bwd -> opt
+//!                (the Fig-5 pipeline with the CTX owned by this process)
+//!   * accum      gradient accumulation over microbatches (grad artifact
+//!                per microbatch, host-side summation, one opt call)
+//!
+//! plus LQS calibration before training and LoRA fine-tuning state.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::ctx::CtxStore;
+use crate::coordinator::lqs::CalibReport;
+use crate::coordinator::metrics::{MetricsLog, StepRecord};
+use crate::data::{LmDataset, VisionDataset};
+use crate::runtime::value::Value;
+use crate::runtime::{Preset, Runtime};
+
+pub enum DataSource {
+    Vision(VisionDataset),
+    Lm(LmDataset),
+}
+
+impl DataSource {
+    pub fn batch(&self, split: u64, index: u64, batch: usize) -> (Value, Value) {
+        match self {
+            DataSource::Vision(d) => d.batch(split, index, batch),
+            DataSource::Lm(d) => d.batch(split, index, batch),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    Fused,
+    Split,
+    Accum,
+}
+
+pub struct Trainer {
+    pub rt: Arc<Runtime>,
+    pub cfg: RunConfig,
+    pub preset: Preset,
+    pub params: Vec<Value>,
+    pub m: Vec<Value>,
+    pub v: Vec<Value>,
+    pub lqs_mask: Vec<f32>,
+    pub metrics: MetricsLog,
+    pub ctx: CtxStore,
+    pub data: DataSource,
+    pub step: usize,
+    /// Execute a specific train-step artifact instead of the
+    /// `train_{variant}_{preset}` default (rank-sweep benches etc.).
+    pub key_override: Option<String>,
+}
+
+impl Trainer {
+    pub fn new(rt: Arc<Runtime>, cfg: RunConfig) -> Result<Trainer> {
+        let preset = rt.manifest.preset(&cfg.preset)?.clone();
+        let init = rt.manifest.load_init(&cfg.preset)?;
+        let params: Vec<Value> = preset
+            .params
+            .iter()
+            .zip(init)
+            .map(|(spec, data)| Value::F32 { shape: spec.shape.clone(), data })
+            .collect();
+        let zeros: Vec<Value> = preset
+            .params
+            .iter()
+            .map(Value::zeros_like_spec)
+            .collect();
+        let data = match preset.model.arch.as_str() {
+            "lm" => DataSource::Lm(LmDataset::new(preset.model.seq,
+                                                  preset.model.in_dim, cfg.seed)),
+            _ => DataSource::Vision(VisionDataset::new(
+                preset.model.seq, preset.model.in_dim,
+                preset.model.n_classes, cfg.seed)
+                .with_noise(cfg.data_noise as f32)),
+        };
+        let nq = preset.qlinears.len();
+        Ok(Trainer {
+            rt,
+            ctx: CtxStore::new(cfg.mem_budget),
+            cfg,
+            lqs_mask: vec![0.0; nq],
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            metrics: MetricsLog::new(),
+            data,
+            preset,
+            step: 0,
+            key_override: None,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // artifact keys
+    // ------------------------------------------------------------------
+
+    pub fn train_key(&self) -> String {
+        self.key_override.clone().unwrap_or_else(
+            || format!("train_{}_{}", self.cfg.variant, self.cfg.preset))
+    }
+
+    fn mask_value(&self) -> Value {
+        Value::F32 { shape: vec![self.lqs_mask.len()],
+                     data: self.lqs_mask.clone() }
+    }
+
+    fn state_refs(&self) -> Vec<&Value> {
+        self.params.iter().chain(&self.m).chain(&self.v).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // LQS calibration (before training)
+    // ------------------------------------------------------------------
+
+    pub fn calibrate(&mut self) -> Result<Option<CalibReport>> {
+        let key = format!("calib_{}", self.cfg.preset);
+        if self.cfg.calib_batches == 0
+            || self.rt.manifest.artifacts.get(&key).is_none()
+        {
+            return Ok(None);
+        }
+        let mut per_batch = Vec::new();
+        for b in 0..self.cfg.calib_batches {
+            let (x, y) = self.data.batch(2, b as u64, self.batch_size());
+            let mut args: Vec<&Value> = self.params.iter().collect();
+            args.push(&x);
+            args.push(&y);
+            let outs = self.rt.execute_refs(&key, &args)?;
+            per_batch.push(
+                outs.iter()
+                    .map(|v| v.as_f32().map(|s| s.to_vec()))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        let report = CalibReport::from_batches(&self.preset.qlinears,
+                                               &per_batch,
+                                               self.cfg.lqs_threshold)?;
+        self.lqs_mask = report.lqs_mask();
+        crate::info!("LQS: {}/{} layers per-token", report.n_per_token(),
+                     self.preset.qlinears.len());
+        Ok(Some(report))
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.rt
+            .manifest
+            .artifacts
+            .get(&self.train_key())
+            .and_then(|a| a.batch)
+            .unwrap_or(self.rt.manifest.batch)
+    }
+
+    // ------------------------------------------------------------------
+    // step modes
+    // ------------------------------------------------------------------
+
+    /// One fused train step; returns (loss, acc).
+    pub fn fused_step(&mut self, x: Value, y: Value) -> Result<(f32, f32)> {
+        let np = self.params.len();
+        let step_v = Value::scalar_f32(self.step as f32 + 1.0);
+        let lr_v = Value::scalar_f32(self.cfg.lr_at(self.step));
+        let mask_v = self.mask_value();
+        let mut args = self.state_refs();
+        args.push(&step_v);
+        args.push(&lr_v);
+        args.push(&mask_v);
+        args.push(&x);
+        args.push(&y);
+        let mut outs = self.rt.execute_refs(&self.train_key(), &args)?;
+        let acc = outs.pop().context("acc")?.scalar()?;
+        let loss = outs.pop().context("loss")?.scalar()?;
+        if outs.len() != 3 * np {
+            bail!("train step returned {} state tensors, want {}",
+                  outs.len(), 3 * np);
+        }
+        self.v = outs.split_off(2 * np);
+        self.m = outs.split_off(np);
+        self.params = outs;
+        Ok((loss, acc))
+    }
+
+    /// Split mode: fwd -> ctx store -> bwd -> opt. Exercises ABC across
+    /// the HLO boundary; the compressed buffers live in `self.ctx`
+    /// between the calls.
+    pub fn split_step(&mut self, x: Value, y: Value) -> Result<(f32, f32)> {
+        let fwd_key = format!("fwd_{}_{}", self.cfg.variant, self.cfg.preset);
+        let bwd_key = format!("bwd_{}_{}", self.cfg.variant, self.cfg.preset);
+        let opt_key = format!("opt_{}", self.cfg.preset);
+        let fwd_meta = self.rt.manifest.artifact(&fwd_key)?.clone();
+
+        let mask_v = self.mask_value();
+        let mut args: Vec<&Value> = self.params.iter().collect();
+        args.push(&mask_v);
+        args.push(&x);
+        args.push(&y);
+        let mut outs = self.rt.execute_refs(&fwd_key, &args)?;
+        let ctx_vals = outs.split_off(2);
+        let acc = outs.pop().context("acc")?.scalar()?;
+        let loss = outs.pop().context("loss")?.scalar()?;
+
+        let mb = self.step as u64;
+        self.ctx.put(mb, ctx_vals, &fwd_meta.ctx)?;
+
+        // ... in a real pipeline other microbatches' forwards would run
+        // here while ctx is held; take it back for the backward:
+        let ctx_vals = self.ctx.take(mb)?;
+        let mask_v = self.mask_value();
+        let mut bargs: Vec<&Value> = self.params.iter().collect();
+        bargs.push(&mask_v);
+        bargs.push(&x);
+        bargs.extend(ctx_vals.iter());
+        let grads = self.rt.execute_refs(&bwd_key, &bargs)?;
+
+        self.apply_opt(&opt_key, grads)?;
+        Ok((loss, acc))
+    }
+
+    /// Gradient accumulation: `cfg.accum` microbatches through the grad
+    /// artifact, host-side averaging, one optimizer call.
+    pub fn accum_step(&mut self, base_index: u64) -> Result<(f32, f32)> {
+        let grad_key = format!("grad_{}_{}", self.cfg.variant, self.cfg.preset);
+        let opt_key = format!("opt_{}", self.cfg.preset);
+        let np = self.params.len();
+        let mut sum: Option<Vec<Value>> = None;
+        let (mut loss_s, mut acc_s) = (0.0f32, 0.0f32);
+        for k in 0..self.cfg.accum {
+            let (x, y) = self.data.batch(
+                0, base_index * self.cfg.accum as u64 + k as u64,
+                self.batch_size());
+            let mask_v = self.mask_value();
+            let mut args: Vec<&Value> = self.params.iter().collect();
+            args.push(&mask_v);
+            args.push(&x);
+            args.push(&y);
+            let mut outs = self.rt.execute_refs(&grad_key, &args)?;
+            acc_s += outs.pop().context("acc")?.scalar()?;
+            loss_s += outs.pop().context("loss")?.scalar()?;
+            if outs.len() != np {
+                bail!("grad step arity {} != {np}", outs.len());
+            }
+            match &mut sum {
+                None => sum = Some(outs),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(outs) {
+                        if let (Value::F32 { data: ad, .. },
+                                Value::F32 { data: gd, .. }) = (a, g)
+                        {
+                            for (x0, x1) in ad.iter_mut().zip(gd) {
+                                *x0 += x1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut grads = sum.unwrap();
+        let inv = 1.0 / self.cfg.accum as f32;
+        for g in &mut grads {
+            if let Value::F32 { data, .. } = g {
+                for x in data.iter_mut() {
+                    *x *= inv;
+                }
+            }
+        }
+        self.apply_opt(&opt_key, grads)?;
+        Ok((loss_s * inv, acc_s * inv))
+    }
+
+    fn apply_opt(&mut self, opt_key: &str, grads: Vec<Value>) -> Result<()> {
+        let np = self.params.len();
+        let step_v = Value::scalar_f32(self.step as f32 + 1.0);
+        let lr_v = Value::scalar_f32(self.cfg.lr_at(self.step));
+        let mut oargs: Vec<&Value> = self.params.iter().collect();
+        oargs.extend(grads.iter());
+        oargs.extend(self.m.iter());
+        oargs.extend(self.v.iter());
+        oargs.push(&step_v);
+        oargs.push(&lr_v);
+        let mut outs = self.rt.execute_refs(opt_key, &oargs)?;
+        if outs.len() != 3 * np {
+            bail!("opt step arity {} != {}", outs.len(), 3 * np);
+        }
+        self.v = outs.split_off(2 * np);
+        self.m = outs.split_off(np);
+        self.params = outs;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // loops
+    // ------------------------------------------------------------------
+
+    pub fn step_once(&mut self, mode: Mode) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        let (loss, acc) = match mode {
+            Mode::Fused => {
+                let (x, y) = self.data.batch(0, self.step as u64,
+                                             self.batch_size());
+                self.fused_step(x, y)?
+            }
+            Mode::Split => {
+                let (x, y) = self.data.batch(0, self.step as u64,
+                                             self.batch_size());
+                self.split_step(x, y)?
+            }
+            Mode::Accum => self.accum_step(self.step as u64)?,
+        };
+        self.metrics.push(StepRecord {
+            step: self.step,
+            loss,
+            acc,
+            lr: self.cfg.lr_at(self.step),
+            step_time_s: t0.elapsed().as_secs_f64(),
+            ctx_live_bytes: self.ctx.stats().live_bytes,
+        });
+        self.step += 1;
+        Ok((loss, acc))
+    }
+
+    /// Mean (loss, acc) over `n` eval batches (FP forward).
+    pub fn eval(&self, n: usize) -> Result<(f32, f32)> {
+        let key = format!("eval_{}", self.cfg.preset);
+        let (mut ls, mut as_) = (0.0f32, 0.0f32);
+        for b in 0..n {
+            let (x, y) = self.data.batch(1, b as u64, self.batch_size());
+            let mut args: Vec<&Value> = self.params.iter().collect();
+            args.push(&x);
+            args.push(&y);
+            let outs = self.rt.execute_refs(&key, &args)?;
+            ls += outs[0].scalar()?;
+            as_ += outs[1].scalar()?;
+        }
+        Ok((ls / n as f32, as_ / n as f32))
+    }
+
+    /// Full training run per the RunConfig; returns final (eval loss, acc)
+    /// if an eval artifact exists.
+    pub fn train(&mut self) -> Result<Option<(f32, f32)>> {
+        self.calibrate()?;
+        let mode = if self.cfg.accum > 1 { Mode::Accum } else { Mode::Fused };
+        let has_eval = self
+            .rt
+            .manifest
+            .artifacts
+            .contains_key(&format!("eval_{}", self.cfg.preset));
+        for _ in 0..self.cfg.steps {
+            let (loss, acc) = self.step_once(mode)?;
+            if self.step % 20 == 0 || self.step == 1 {
+                crate::info!("step {:>5} loss {:.4} acc {:.3} lr {:.2e}",
+                             self.step, loss, acc, self.cfg.lr_at(self.step - 1));
+            }
+            if has_eval && self.cfg.eval_every > 0
+                && self.step % self.cfg.eval_every == 0
+            {
+                let (el, ea) = self.eval(4)?;
+                self.metrics.push_eval(self.step, el, ea);
+                crate::info!("  eval @ {}: loss {:.4} acc {:.3}", self.step, el, ea);
+            }
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                if self.step == self.cfg.steps {
+                    let ck = Checkpoint {
+                        step: self.step,
+                        preset: self.cfg.preset.clone(),
+                        variant: self.cfg.variant.clone(),
+                        params: self.params.clone(),
+                        m: self.m.clone(),
+                        v: self.v.clone(),
+                    };
+                    let p = ck.save(&dir)?;
+                    crate::info!("checkpoint -> {p}");
+                }
+            }
+        }
+        if has_eval {
+            let fin = self.eval(8)?;
+            self.metrics.push_eval(self.step, fin.0, fin.1);
+            Ok(Some(fin))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn resume(&mut self, header: &str) -> Result<()> {
+        let ck = Checkpoint::load(header, &self.preset.params)?;
+        if ck.preset != self.cfg.preset {
+            bail!("checkpoint preset {} != configured {}", ck.preset,
+                  self.cfg.preset);
+        }
+        self.params = ck.params;
+        self.m = ck.m;
+        self.v = ck.v;
+        self.step = ck.step;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LoRA fine-tuning driver (Table 9 / HOT+LoRA rows of Tables 3-4)
+// ---------------------------------------------------------------------------
+
+pub struct LoraTrainer {
+    pub rt: Arc<Runtime>,
+    pub cfg: RunConfig,
+    pub artifact: String,
+    pub base: Vec<Value>,
+    pub trainable: Vec<Value>,
+    pub m: Vec<Value>,
+    pub v: Vec<Value>,
+    pub lqs_mask: Vec<f32>,
+    pub metrics: MetricsLog,
+    pub data: VisionDataset,
+    pub step: usize,
+}
+
+impl LoraTrainer {
+    pub fn new(rt: Arc<Runtime>, cfg: RunConfig, artifact: &str) -> Result<Self> {
+        let meta = rt.manifest.artifact(artifact)?.clone();
+        let preset_name = meta.preset.clone().context("lora artifact preset")?;
+        let preset = rt.manifest.preset(&preset_name)?.clone();
+        let init = rt.manifest.load_init(&preset_name)?;
+        let base: Vec<Value> = preset
+            .params
+            .iter()
+            .zip(init)
+            .map(|(s, d)| Value::F32 { shape: s.shape.clone(), data: d })
+            .collect();
+        // trainable init: lora_a ~ N(0, 1/r), lora_b = 0, embed/head copied
+        let mut rng = crate::util::prng::Pcg32::seeded(cfg.seed ^ 0x10ae);
+        let by_name: std::collections::BTreeMap<&str, &Value> = preset
+            .params
+            .iter()
+            .map(|s| s.name.as_str())
+            .zip(base.iter())
+            .collect();
+        let trainable: Vec<Value> = meta
+            .trainable
+            .iter()
+            .map(|s| {
+                if s.name.ends_with(".lora_a") {
+                    let r = s.shape[0] as f32;
+                    let mut data = vec![0.0f32; s.numel()];
+                    rng.fill_normal(&mut data, 0.0, 1.0 / r);
+                    Value::F32 { shape: s.shape.clone(), data }
+                } else if s.name.ends_with(".lora_b") {
+                    Value::zeros_like_spec(s)
+                } else {
+                    (*by_name.get(s.name.as_str())
+                        .unwrap_or_else(|| panic!("no base param {}", s.name)))
+                    .clone()
+                }
+            })
+            .collect();
+        let zeros: Vec<Value> = meta.trainable.iter()
+            .map(Value::zeros_like_spec).collect();
+        let data = VisionDataset::new(preset.model.seq, preset.model.in_dim,
+                                      preset.model.n_classes, cfg.seed);
+        Ok(LoraTrainer {
+            rt,
+            artifact: artifact.to_string(),
+            base,
+            trainable,
+            m: zeros.clone(),
+            v: zeros,
+            lqs_mask: vec![0.0; preset.qlinears.len()],
+            metrics: MetricsLog::new(),
+            data,
+            cfg,
+            step: 0,
+        })
+    }
+
+    pub fn step_once(&mut self) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        let batch = self
+            .rt
+            .manifest
+            .artifact(&self.artifact)?
+            .batch
+            .unwrap_or(self.rt.manifest.batch);
+        let (x, y) = self.data.batch(0, self.step as u64, batch);
+        let nt = self.trainable.len();
+        let step_v = Value::scalar_f32(self.step as f32 + 1.0);
+        let lr_v = Value::scalar_f32(self.cfg.lr_at(self.step));
+        let mask_v = Value::F32 { shape: vec![self.lqs_mask.len()],
+                                  data: self.lqs_mask.clone() };
+        let mut args: Vec<&Value> = self.base.iter().collect();
+        args.extend(self.trainable.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&step_v);
+        args.push(&lr_v);
+        args.push(&mask_v);
+        args.push(&x);
+        args.push(&y);
+        let mut outs = self.rt.execute_refs(&self.artifact, &args)?;
+        let acc = outs.pop().context("acc")?.scalar()?;
+        let loss = outs.pop().context("loss")?.scalar()?;
+        if outs.len() != 3 * nt {
+            bail!("lora step arity {} != {}", outs.len(), 3 * nt);
+        }
+        self.v = outs.split_off(2 * nt);
+        self.m = outs.split_off(nt);
+        self.trainable = outs;
+        self.metrics.push(StepRecord {
+            step: self.step,
+            loss,
+            acc,
+            lr: self.cfg.lr_at(self.step),
+            step_time_s: t0.elapsed().as_secs_f64(),
+            ctx_live_bytes: 0,
+        });
+        self.step += 1;
+        Ok((loss, acc))
+    }
+}

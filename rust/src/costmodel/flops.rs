@@ -1,0 +1,178 @@
+//! FLOP / bit-operation (bops) accounting — Table 11 and Fig 7 (right).
+//!
+//! Table 11 (per layer, n = Hadamard block = 16, r = HLA rank):
+//!   vanilla BP        4·L·I·O                       (two GEMMs)
+//!   HOT g_x overhead  2·L·O·log n + 2·I·O·log n + 2·L·O + 2·I·O
+//!   HOT g_w overhead  2·L·I·log n + 2·L·O·log n + 2·I·(L·r/n) + 2·O·(L·r/n)
+//!   dequant           2·I·O + 2·L·I
+//!
+//! Bops follow UNIQ/NIPQ accounting: a MAC at (b1, b2) bits costs b1·b2
+//! bit-ops; FP32 is charged as 32x32. Elementwise transform/quant ops are
+//! charged at 32-bit adds (HT is add/sub only).
+
+use super::zoo::Layer;
+
+pub const BLOCK: usize = 16;
+pub const LOG_N: usize = 4; // log2(16)
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Fp32,
+    Hot { rank: usize },
+    LbpWht { rank: usize },
+    Luq,
+    Int4,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Fp32 => "FP".into(),
+            Method::Hot { rank } => format!("HOT(r={rank})"),
+            Method::LbpWht { rank } => format!("LBP-WHT(r={rank})"),
+            Method::Luq => "LUQ".into(),
+            Method::Int4 => "INT4".into(),
+        }
+    }
+}
+
+/// FLOPs of the two backward GEMMs under `method` (the low-precision GEMM
+/// ops counted as FLOPs — see `bops` for precision-weighted cost).
+pub fn bwd_gemm_flops(l: &Layer, method: Method) -> u64 {
+    let (ll, o, i) = (l.l as u64, l.o as u64, l.i as u64);
+    match method {
+        Method::Fp32 | Method::Luq | Method::Int4 => 4 * ll * i * o,
+        // HOT: g_x full dims; g_w over compressed L
+        Method::Hot { rank } => {
+            2 * ll * i * o + 2 * (ll * rank as u64 / BLOCK as u64) * i * o
+        }
+        // LBP-WHT: both paths over compressed L
+        Method::LbpWht { rank } => {
+            4 * (ll * rank as u64 / BLOCK as u64) * i * o
+        }
+    }
+}
+
+/// Transform/quant/dequant overhead FLOPs (Table 11).
+pub fn overhead_flops(l: &Layer, method: Method) -> u64 {
+    let (ll, o, i) = (l.l as u64, l.o as u64, l.i as u64);
+    let logn = LOG_N as u64;
+    match method {
+        Method::Fp32 => 0,
+        Method::Int4 | Method::Luq => {
+            // quantize both operands of both GEMMs + dequant outputs
+            2 * (ll * o + i * o) + 2 * (ll * o + ll * i) + 2 * (i * o + ll * i)
+        }
+        Method::Hot { rank } => {
+            let r = rank as u64;
+            let gx = 2 * ll * o * logn + 2 * i * o * logn + 2 * ll * o + 2 * i * o;
+            let gw = 2 * ll * i * logn + 2 * ll * o * logn
+                + 2 * i * (ll * r / BLOCK as u64)
+                + 2 * o * (ll * r / BLOCK as u64);
+            let dequant = 2 * i * o + 2 * ll * i;
+            gx + gw + dequant
+        }
+        Method::LbpWht { rank } => {
+            let r = rank as u64;
+            // project g_y & x & the g_x expansion (all HT-based)
+            2 * ll * o * logn + 2 * ll * i * logn + 2 * (ll * r / BLOCK as u64) * i * logn
+        }
+    }
+}
+
+pub fn total_flops(l: &Layer, method: Method) -> u64 {
+    bwd_gemm_flops(l, method) + overhead_flops(l, method)
+}
+
+/// Bit-operations for the backward pass of one layer.
+pub fn bops(l: &Layer, method: Method) -> u64 {
+    let (ll, o, i) = (l.l as u64, l.o as u64, l.i as u64);
+    let fp = 32 * 32;
+    match method {
+        Method::Fp32 => 2 * ll * i * o * fp * 2 / 2, // both GEMMs at 32x32
+        Method::Hot { rank } => {
+            let gx = 2 * ll * i * o * (4 * 4);
+            let gw = 2 * (ll * rank as u64 / BLOCK as u64) * i * o * (8 * 8);
+            gx + gw + overhead_flops(l, method) * 32
+        }
+        Method::LbpWht { rank } => {
+            // FP16 GEMMs over compressed dims
+            let g = 4 * (ll * rank as u64 / BLOCK as u64) * i * o * (16 * 16);
+            g + overhead_flops(l, method) * 32
+        }
+        Method::Luq => {
+            // FP4-ish gradient x INT4 operand
+            4 * ll * i * o * (4 * 4) + overhead_flops(l, method) * 32
+        }
+        Method::Int4 => 4 * ll * i * o * (4 * 4) + overhead_flops(l, method) * 32,
+    }
+}
+
+/// Whole-model backward bops (per sample).
+pub fn model_bops(layers: &[Layer], method: Method) -> u64 {
+    layers.iter().map(|l| bops(l, method)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> Layer {
+        Layer::new("test", 197, 768, 3072)
+    }
+
+    #[test]
+    fn vanilla_matches_table11() {
+        let l = layer();
+        assert_eq!(bwd_gemm_flops(&l, Method::Fp32),
+                   4 * 197 * 768 * 3072);
+    }
+
+    #[test]
+    fn appendix_d_example() {
+        // 'stages.3.fc2' (49, 448, 1792): vanilla 137.3 MFlops less the
+        // low-precision GEMMs leaves ~11.5 MFlops of HOT overhead.
+        let l = Layer::new("stages.3.fc2", 49, 448, 1792);
+        let vanilla = bwd_gemm_flops(&l, Method::Fp32) as f64 / 1e6;
+        assert!((vanilla - 157.4).abs() < 25.0, "{vanilla}");
+        let ovh = overhead_flops(&l, Method::Hot { rank: 8 }) as f64 / 1e6;
+        assert!(ovh > 5.0 && ovh < 20.0, "{ovh}");
+    }
+
+    #[test]
+    fn hot_overhead_small_relative() {
+        // paper: overhead negligible when log n << dims (~7% predicted)
+        let l = layer();
+        let ovh = overhead_flops(&l, Method::Hot { rank: 8 }) as f64;
+        let van = bwd_gemm_flops(&l, Method::Fp32) as f64;
+        assert!(ovh / van < 0.15, "{}", ovh / van);
+    }
+
+    #[test]
+    fn hot_bops_beat_fp_by_large_factor() {
+        let l = layer();
+        let r = bops(&l, Method::Hot { rank: 8 }) as f64
+            / bops(&l, Method::Fp32) as f64;
+        // paper Fig 7: ~65% reduction in total compute; per-layer GEMM
+        // bops drop much harder (4x4 vs 32x32)
+        assert!(r < 0.5, "{r}");
+    }
+
+    #[test]
+    fn gemm_flops_ordering() {
+        let l = layer();
+        let fp = bwd_gemm_flops(&l, Method::Fp32);
+        let hot = bwd_gemm_flops(&l, Method::Hot { rank: 8 });
+        let lbp = bwd_gemm_flops(&l, Method::LbpWht { rank: 8 });
+        assert!(lbp < hot && hot < fp);
+    }
+
+    #[test]
+    fn rank_scales_gw_cost() {
+        let l = layer();
+        let h1 = total_flops(&l, Method::Hot { rank: 1 });
+        let h8 = total_flops(&l, Method::Hot { rank: 8 });
+        let h16 = total_flops(&l, Method::Hot { rank: 16 });
+        assert!(h1 < h8 && h8 < h16);
+    }
+}

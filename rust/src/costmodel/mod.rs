@@ -1,0 +1,11 @@
+//! Analytic cost models: FLOPs/bops (Table 11, Fig 7-right) and training
+//! memory (Fig 1, Fig 2, Fig 7-left, Table 7). The model zoo carries the
+//! paper's exact evaluation-layer dimensions.
+
+pub mod flops;
+pub mod memory;
+pub mod zoo;
+
+pub use flops::{bops, model_bops, overhead_flops, total_flops, Method};
+pub use memory::{breakdown, max_feasible_batch, MemBreakdown, MemMethod};
+pub use zoo::{Layer, ModelSpec};

@@ -1,0 +1,281 @@
+//! Synthetic datasets — the substitution for CIFAR/ImageNet/VOC/MRPC/
+//! Alpaca (DESIGN.md §Substitutions). Two families:
+//!
+//!   * vision: per-class gaussian "prototype patch grids" + noise; the
+//!     class structure lives in low-frequency content (like natural
+//!     images), which is what makes HLA-vs-quantization sensitivity
+//!     behave the way the paper reports.
+//!   * lm: class-conditioned markov chains over a small vocab (a causal
+//!     model can reduce perplexity by learning transition structure).
+//!
+//! Deterministic per (seed, split): train/eval never overlap.
+
+use crate::runtime::value::Value;
+use crate::util::prng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct VisionDataset {
+    pub seq: usize,
+    pub in_dim: usize,
+    pub n_classes: usize,
+    /// per-class prototype, (seq * in_dim)
+    prototypes: Vec<Vec<f32>>,
+    pub noise: f32,
+    seed: u64,
+}
+
+impl VisionDataset {
+    pub fn new(seq: usize, in_dim: usize, n_classes: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0x11);
+        let mut prototypes = Vec::with_capacity(n_classes);
+        for _ in 0..n_classes {
+            // low-frequency prototypes: random coarse pattern, smoothed
+            // along the sequence axis so class evidence is low-pass
+            let mut proto = vec![0.0f32; seq * in_dim];
+            let coarse: Vec<f32> = (0..(seq / 4 + 1) * in_dim)
+                .map(|_| rng.normal() * 1.5)
+                .collect();
+            for t in 0..seq {
+                for d in 0..in_dim {
+                    let c0 = coarse[(t / 4) * in_dim + d];
+                    let c1 = coarse[(t / 4 + 1).min(seq / 4) * in_dim + d];
+                    let frac = (t % 4) as f32 / 4.0;
+                    proto[t * in_dim + d] = c0 * (1.0 - frac) + c1 * frac;
+                }
+            }
+            prototypes.push(proto);
+        }
+        VisionDataset { seq, in_dim, n_classes, prototypes, noise: 0.5, seed }
+    }
+
+    /// Same dataset with a different noise level (task difficulty knob:
+    /// benches use harder settings so method quality separates).
+    pub fn with_noise(mut self, noise: f32) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    /// Batch `index` of `split` (0 = train, 1 = eval): (x, y) Values with
+    /// shapes (b, seq, in_dim) f32 and (b,) i32.
+    pub fn batch(&self, split: u64, index: u64, batch: usize) -> (Value, Value) {
+        let mut rng = Pcg32::new(
+            self.seed ^ (split.wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+            0x100 + index,
+        );
+        let mut x = vec![0.0f32; batch * self.seq * self.in_dim];
+        let mut y = vec![0i32; batch];
+        let n = self.seq * self.in_dim;
+        for b in 0..batch {
+            let cls = rng.below(self.n_classes as u32) as usize;
+            y[b] = cls as i32;
+            let proto = &self.prototypes[cls];
+            for j in 0..n {
+                x[b * n + j] = proto[j] + self.noise * rng.normal();
+            }
+        }
+        (
+            Value::F32 { shape: vec![batch, self.seq, self.in_dim], data: x },
+            Value::I32 { shape: vec![batch], data: y },
+        )
+    }
+
+    /// Variant with an injected token-level outlier (drives the Fig-6/9
+    /// outlier experiments): token `tok` scaled by `gain` on every sample.
+    pub fn batch_with_outlier(&self, split: u64, index: u64, batch: usize,
+                              tok: usize, gain: f32) -> (Value, Value) {
+        let (mut x, y) = self.batch(split, index, batch);
+        if let Value::F32 { ref mut data, .. } = x {
+            let n = self.seq * self.in_dim;
+            for b in 0..batch {
+                for d in 0..self.in_dim {
+                    data[b * n + tok * self.in_dim + d] *= gain;
+                }
+            }
+        }
+        (x, y)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LmDataset {
+    pub seq: usize,
+    pub vocab: usize,
+    /// row-stochastic transition matrix (vocab x vocab), shared; the
+    /// learnable signal.
+    trans_cdf: Vec<f32>,
+    seed: u64,
+}
+
+impl LmDataset {
+    pub fn new(seq: usize, vocab: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0x22);
+        // sparse-ish peaked transitions: each token strongly prefers a
+        // few successors (gives a causal LM something to learn)
+        let mut cdf = vec![0.0f32; vocab * vocab];
+        for t in 0..vocab {
+            let mut probs = vec![0.0f32; vocab];
+            for p in probs.iter_mut() {
+                *p = 0.05 + rng.uniform();
+            }
+            // boost 3 preferred successors
+            for _ in 0..3 {
+                probs[rng.below(vocab as u32) as usize] += 5.0 * rng.uniform();
+            }
+            let total: f32 = probs.iter().sum();
+            let mut acc = 0.0;
+            for v in 0..vocab {
+                acc += probs[v] / total;
+                cdf[t * vocab + v] = acc;
+            }
+        }
+        LmDataset { seq, vocab, trans_cdf: cdf, seed }
+    }
+
+    /// (x, y): x (b, seq) i32 tokens, y (b, seq) i32 next-token labels.
+    pub fn batch(&self, split: u64, index: u64, batch: usize) -> (Value, Value) {
+        let mut rng = Pcg32::new(
+            self.seed ^ (split.wrapping_mul(0xbf58_476d_1ce4_e5b9)),
+            0x200 + index,
+        );
+        let mut x = vec![0i32; batch * self.seq];
+        let mut y = vec![0i32; batch * self.seq];
+        for b in 0..batch {
+            let mut tok = rng.below(self.vocab as u32) as usize;
+            for t in 0..self.seq {
+                x[b * self.seq + t] = tok as i32;
+                let u = rng.uniform();
+                let row = &self.trans_cdf[tok * self.vocab..(tok + 1) * self.vocab];
+                let next = row.iter().position(|&c| u <= c).unwrap_or(self.vocab - 1);
+                y[b * self.seq + t] = next as i32;
+                tok = next;
+            }
+        }
+        (
+            Value::I32 { shape: vec![batch, self.seq], data: x },
+            Value::I32 { shape: vec![batch, self.seq], data: y },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vision_shapes_and_labels() {
+        let ds = VisionDataset::new(32, 48, 16, 0);
+        let (x, y) = ds.batch(0, 0, 8);
+        assert_eq!(x.shape(), &[8, 32, 48]);
+        assert_eq!(y.shape(), &[8]);
+        if let Value::I32 { data, .. } = y {
+            assert!(data.iter().all(|&c| (0..16).contains(&c)));
+        } else {
+            panic!("labels must be i32");
+        }
+    }
+
+    #[test]
+    fn vision_deterministic_and_split_disjoint() {
+        let ds = VisionDataset::new(16, 16, 4, 7);
+        let (a1, _) = ds.batch(0, 3, 4);
+        let (a2, _) = ds.batch(0, 3, 4);
+        assert_eq!(a1.as_f32().unwrap(), a2.as_f32().unwrap());
+        let (b, _) = ds.batch(1, 3, 4);
+        assert_ne!(a1.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    #[test]
+    fn vision_classes_separable() {
+        // prototype distance >> noise: nearest-prototype classification
+        // on clean prototypes should be perfect
+        let ds = VisionDataset::new(16, 16, 4, 1);
+        let (x, y) = ds.batch(0, 0, 32);
+        let xd = x.as_f32().unwrap();
+        let n = 16 * 16;
+        if let Value::I32 { data: yd, .. } = y {
+            let mut correct = 0;
+            for b in 0..32 {
+                let sample = &xd[b * n..(b + 1) * n];
+                let best = (0..4)
+                    .min_by(|&a, &c| {
+                        let da: f32 = ds.prototypes[a].iter().zip(sample)
+                            .map(|(p, s)| (p - s) * (p - s)).sum();
+                        let dc: f32 = ds.prototypes[c].iter().zip(sample)
+                            .map(|(p, s)| (p - s) * (p - s)).sum();
+                        da.partial_cmp(&dc).unwrap()
+                    })
+                    .unwrap();
+                if best as i32 == yd[b] {
+                    correct += 1;
+                }
+            }
+            assert!(correct >= 30, "{correct}/32");
+        }
+    }
+
+    #[test]
+    fn outlier_injection() {
+        let ds = VisionDataset::new(16, 8, 4, 2);
+        let (x0, _) = ds.batch(0, 0, 2);
+        let (x1, _) = ds.batch_with_outlier(0, 0, 2, 5, 30.0);
+        let a = x0.as_f32().unwrap();
+        let b = x1.as_f32().unwrap();
+        let _n = 16 * 8;
+        // token 5 amplified, others identical
+        assert_eq!(a[0], b[0]);
+        let off = 5 * 8;
+        assert!((b[off] - 30.0 * a[off]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lm_tokens_in_vocab() {
+        let ds = LmDataset::new(32, 128, 3);
+        let (x, y) = ds.batch(0, 0, 4);
+        for v in [&x, &y] {
+            if let Value::I32 { data, .. } = v {
+                assert!(data.iter().all(|&t| (0..128).contains(&t)));
+            }
+        }
+    }
+
+    #[test]
+    fn lm_labels_are_next_tokens() {
+        let ds = LmDataset::new(16, 32, 4);
+        let (x, y) = ds.batch(0, 0, 2);
+        if let (Value::I32 { data: xd, .. }, Value::I32 { data: yd, .. }) = (x, y) {
+            // y[t] == x[t+1] within each sequence
+            for b in 0..2 {
+                for t in 0..15 {
+                    assert_eq!(yd[b * 16 + t], xd[b * 16 + t + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lm_transitions_learnable() {
+        // empirical transition entropy must be far below uniform
+        let ds = LmDataset::new(64, 16, 5);
+        let (x, _) = ds.batch(0, 0, 64);
+        if let Value::I32 { data, .. } = x {
+            let mut counts = vec![0u32; 16 * 16];
+            for b in 0..64 {
+                for t in 0..63 {
+                    let a = data[b * 64 + t] as usize;
+                    let c = data[b * 64 + t + 1] as usize;
+                    counts[a * 16 + c] += 1;
+                }
+            }
+            let mut h = 0.0f64;
+            let total: u32 = counts.iter().sum();
+            for &c in &counts {
+                if c > 0 {
+                    let p = c as f64 / total as f64;
+                    h -= p * p.log2();
+                }
+            }
+            // uniform over 256 pairs would be 8 bits
+            assert!(h < 7.5, "joint entropy {h}");
+        }
+    }
+}

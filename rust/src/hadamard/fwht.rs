@@ -1,0 +1,178 @@
+//! Fast Walsh-Hadamard transform, order-16 block-diagonal (natural order,
+//! normalized by 1/4 so the transform is orthonormal and involutive).
+
+pub const BLOCK: usize = 16;
+const NORM: f32 = 0.25; // 1/sqrt(16)
+
+/// In-place FWHT of one 16-element tile (butterflies, natural order).
+#[inline]
+pub fn fwht_inplace(v: &mut [f32; BLOCK]) {
+    let mut size = 1;
+    while size < BLOCK {
+        let stride = size * 2;
+        let mut base = 0;
+        while base < BLOCK {
+            for i in base..base + size {
+                let a = v[i];
+                let b = v[i + size];
+                v[i] = a + b;
+                v[i + size] = a - b;
+            }
+            base += stride;
+        }
+        size = stride;
+    }
+    for x in v.iter_mut() {
+        *x *= NORM;
+    }
+}
+
+/// The normalized 16x16 Sylvester Walsh matrix (row-major).
+pub fn hadamard_matrix() -> [[f32; BLOCK]; BLOCK] {
+    let mut h = [[0.0f32; BLOCK]; BLOCK];
+    for (i, row) in h.iter_mut().enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            // H[i][j] = (-1)^{popcount(i & j)} / 4
+            *v = if (i & j).count_ones() % 2 == 0 { NORM } else { -NORM };
+        }
+    }
+    h
+}
+
+/// Block-FWHT along the *last* axis of a row-major (rows, cols) matrix,
+/// cols % 16 == 0. Matches `hadamard.block_ht(x, axis=1)` /
+/// `kernels.fwht.block_fwht`.
+pub fn block_fwht_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(cols % BLOCK, 0, "cols must tile into {}", BLOCK);
+    let mut tile = [0.0f32; BLOCK];
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        for t in 0..cols / BLOCK {
+            tile.copy_from_slice(&row[t * BLOCK..(t + 1) * BLOCK]);
+            fwht_inplace(&mut tile);
+            row[t * BLOCK..(t + 1) * BLOCK].copy_from_slice(&tile);
+        }
+    }
+}
+
+/// Block-FWHT along axis 0 (column direction) of a (rows, cols) matrix.
+pub fn block_fwht_cols(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(rows % BLOCK, 0, "rows must tile into {}", BLOCK);
+    let mut tile = [0.0f32; BLOCK];
+    for c in 0..cols {
+        for t in 0..rows / BLOCK {
+            for b in 0..BLOCK {
+                tile[b] = x[(t * BLOCK + b) * cols + c];
+            }
+            fwht_inplace(&mut tile);
+            for b in 0..BLOCK {
+                x[(t * BLOCK + b) * cols + c] = tile[b];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn involution() {
+        let mut r = Pcg32::seeded(1);
+        let mut v = [0.0f32; BLOCK];
+        for x in v.iter_mut() {
+            *x = r.normal();
+        }
+        let orig = v;
+        fwht_inplace(&mut v);
+        fwht_inplace(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matches_matrix_form() {
+        let mut r = Pcg32::seeded(2);
+        let mut v = [0.0f32; BLOCK];
+        for x in v.iter_mut() {
+            *x = r.normal();
+        }
+        let h = hadamard_matrix();
+        let want: Vec<f32> = (0..BLOCK)
+            .map(|i| (0..BLOCK).map(|j| h[i][j] * v[j]).sum())
+            .collect();
+        fwht_inplace(&mut v);
+        for (a, b) in v.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matrix_orthonormal() {
+        let h = hadamard_matrix();
+        for i in 0..BLOCK {
+            for j in 0..BLOCK {
+                let dot: f32 = (0..BLOCK).map(|k| h[i][k] * h[j][k]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn block_rows_energy() {
+        let mut r = Pcg32::seeded(3);
+        let (rows, cols) = (4, 48);
+        let mut x: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let e0: f32 = x.iter().map(|v| v * v).sum();
+        block_fwht_rows(&mut x, rows, cols);
+        let e1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((e0 - e1).abs() / e0 < 1e-5);
+    }
+
+    #[test]
+    fn rows_cols_consistent() {
+        // transform along axis0 == transpose . axis1 . transpose
+        let mut r = Pcg32::seeded(4);
+        let (rows, cols) = (32, 3);
+        let x: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        let mut a = x.clone();
+        block_fwht_cols(&mut a, rows, cols);
+        // manual transpose path
+        let mut xt = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                xt[j * rows + i] = x[i * cols + j];
+            }
+        }
+        block_fwht_rows(&mut xt, cols, rows);
+        for i in 0..rows {
+            for j in 0..cols {
+                assert!((a[i * cols + j] - xt[j * rows + i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_involution_any_shape() {
+        crate::util::proptest::check("fwht involution", 25, |case| {
+            let rows = case.usize_in(1, 6);
+            let tiles = case.usize_in(1, 4);
+            let cols = tiles * BLOCK;
+            let orig = case.f32_vec(rows * cols, 2.0);
+            let mut x = orig.clone();
+            block_fwht_rows(&mut x, rows, cols);
+            block_fwht_rows(&mut x, rows, cols);
+            for (a, b) in x.iter().zip(&orig) {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("{a} != {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

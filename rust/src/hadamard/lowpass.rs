@@ -1,0 +1,147 @@
+//! Low-pass basis selection: 1-D sequency order and LBP-WHT's LP_L1
+//! criterion for 2-D (4x4) image tiles. Mirrors python hadamard.py.
+
+use super::fwht::BLOCK;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    /// 1-D sequency (sign-change count) order — transformer L dims.
+    Sequency,
+    /// LBP-WHT LP_L1 over a 4x4 spatial tile — image-patch L dims.
+    LpL1,
+}
+
+impl Criterion {
+    pub fn parse(s: &str) -> Option<Criterion> {
+        match s {
+            "sequency" => Some(Criterion::Sequency),
+            "lp_l1" => Some(Criterion::LpL1),
+            _ => None,
+        }
+    }
+}
+
+/// Sign-change count of natural-order Walsh row `i` (order n=16):
+/// row entries are (-1)^{popcount(i & j)} over j.
+fn sequency_of(i: usize, n: usize) -> usize {
+    let mut changes = 0;
+    let mut prev = (i & 0).count_ones() % 2;
+    for j in 1..n {
+        let cur = (i & j).count_ones() % 2;
+        if cur != prev {
+            changes += 1;
+        }
+        prev = cur;
+    }
+    changes
+}
+
+/// Permutation mapping sequency rank -> natural row index (n must be a
+/// power of two; we only ever use 4 and 16).
+pub fn sequency_order(n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by_key(|&i| sequency_of(i, n));
+    idx
+}
+
+/// LP_L1 ordering for a (bh x bw) 2-D basis: natural flat indices sorted
+/// by (row-sequency + col-sequency, row-seq, col-seq).
+pub fn lp_l1_order_2d(bh: usize, bw: usize) -> Vec<usize> {
+    let sv: Vec<usize> = {
+        let ord = sequency_order(bh);
+        let mut inv = vec![0; bh];
+        for (rank, &nat) in ord.iter().enumerate() {
+            inv[nat] = rank;
+        }
+        inv
+    };
+    let sh: Vec<usize> = {
+        let ord = sequency_order(bw);
+        let mut inv = vec![0; bw];
+        for (rank, &nat) in ord.iter().enumerate() {
+            inv[nat] = rank;
+        }
+        inv
+    };
+    let mut keys: Vec<(usize, usize, usize, usize)> = Vec::new();
+    for r in 0..bh {
+        for c in 0..bw {
+            keys.push((sv[r] + sh[c], sv[r], sh[c], r * bw + c));
+        }
+    }
+    keys.sort();
+    keys.into_iter().map(|k| k.3).collect()
+}
+
+/// Natural-order indices of the `rank` lowest-frequency components of an
+/// order-16 tile under the given criterion.
+pub fn lowpass_indices(rank: usize, criterion: Criterion) -> Vec<usize> {
+    assert!(rank >= 1 && rank <= BLOCK);
+    match criterion {
+        Criterion::Sequency => sequency_order(BLOCK)[..rank].to_vec(),
+        Criterion::LpL1 => lp_l1_order_2d(4, 4)[..rank].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::fwht::hadamard_matrix;
+
+    #[test]
+    fn sequency_is_permutation() {
+        for n in [4, 16] {
+            let mut o = sequency_order(n);
+            o.sort_unstable();
+            assert_eq!(o, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn sequency_monotone() {
+        let ord = sequency_order(16);
+        let seqs: Vec<usize> = ord.iter().map(|&i| sequency_of(i, 16)).collect();
+        for w in seqs.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert_eq!(seqs[0], 0); // DC row first
+        assert_eq!(ord[0], 0);
+    }
+
+    #[test]
+    fn sequency_matches_matrix_sign_changes() {
+        let h = hadamard_matrix();
+        for i in 0..16 {
+            let mut changes = 0;
+            for j in 1..16 {
+                if (h[i][j] > 0.0) != (h[i][j - 1] > 0.0) {
+                    changes += 1;
+                }
+            }
+            assert_eq!(changes, sequency_of(i, 16), "row {}", i);
+        }
+    }
+
+    #[test]
+    fn lp_l1_permutation_and_dc() {
+        let mut o = lp_l1_order_2d(4, 4);
+        assert_eq!(o[0], 0);
+        o.sort_unstable();
+        assert_eq!(o, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lowpass_prefix_property() {
+        let full = lowpass_indices(16, Criterion::Sequency);
+        for r in [1, 2, 4, 8] {
+            assert_eq!(lowpass_indices(r, Criterion::Sequency), full[..r]);
+        }
+    }
+
+    #[test]
+    fn criterion_parse() {
+        assert_eq!(Criterion::parse("sequency"), Some(Criterion::Sequency));
+        assert_eq!(Criterion::parse("lp_l1"), Some(Criterion::LpL1));
+        assert_eq!(Criterion::parse("nope"), None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Rust-native Walsh-Hadamard machinery: FWHT, sequency / LP_L1 orders,
+//! block HLA projection — the host-side mirror of python/compile/hadamard.py.
+//!
+//! Used by the coordinator to verify/repack ABC buffers, by integration
+//! tests to cross-check artifact outputs, and by the latency simulator's
+//! op model. Semantics match the L1 kernels bit-for-bit where exactness
+//! is possible (FWHT is adds/subs only — exact in f32 for our ranges).
+
+pub mod fwht;
+pub mod lowpass;
+
+pub use fwht::{block_fwht_rows, fwht_inplace, BLOCK};
+pub use lowpass::{lowpass_indices, lp_l1_order_2d, sequency_order};
+
+/// Block-HLA projection along axis 0 of a row-major (rows, cols) matrix:
+/// (rows, cols) -> (rows/BLOCK*rank, cols). Mirrors
+/// `hadamard.block_hla(x, rank, axis=0)`.
+pub fn block_hla_axis0(x: &[f32], rows: usize, cols: usize, rank: usize,
+                       criterion: lowpass::Criterion) -> Vec<f32> {
+    assert_eq!(rows % BLOCK, 0, "rows must tile into {}", BLOCK);
+    assert!(rank >= 1 && rank <= BLOCK);
+    let sel = lowpass_indices(rank, criterion);
+    let h = fwht::hadamard_matrix();
+    let tiles = rows / BLOCK;
+    let mut out = vec![0.0f32; tiles * rank * cols];
+    for t in 0..tiles {
+        for (ri, &nat) in sel.iter().enumerate() {
+            let hrow = &h[nat];
+            let dst_row = t * rank + ri;
+            for c in 0..cols {
+                let mut acc = 0.0f32;
+                for b in 0..BLOCK {
+                    acc += hrow[b] * x[(t * BLOCK + b) * cols + c];
+                }
+                out[dst_row * cols + c] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of `block_hla_axis0` (external-HLA expansion).
+pub fn block_hla_expand_axis0(x: &[f32], rows_c: usize, cols: usize,
+                              rank: usize, criterion: lowpass::Criterion)
+                              -> Vec<f32> {
+    assert_eq!(rows_c % rank, 0);
+    let sel = lowpass_indices(rank, criterion);
+    let h = fwht::hadamard_matrix();
+    let tiles = rows_c / rank;
+    let mut out = vec![0.0f32; tiles * BLOCK * cols];
+    for t in 0..tiles {
+        for (ri, &nat) in sel.iter().enumerate() {
+            let hrow = &h[nat];
+            for b in 0..BLOCK {
+                let w = hrow[b];
+                let dst = (t * BLOCK + b) * cols;
+                let src = (t * rank + ri) * cols;
+                for c in 0..cols {
+                    out[dst + c] += w * x[src + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use lowpass::Criterion;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn hla_full_rank_preserves_energy() {
+        let x = randv(32 * 4, 1);
+        let c = block_hla_axis0(&x, 32, 4, 16, Criterion::Sequency);
+        let e0: f32 = x.iter().map(|v| v * v).sum();
+        let e1: f32 = c.iter().map(|v| v * v).sum();
+        assert!((e0 - e1).abs() / e0 < 1e-5);
+    }
+
+    #[test]
+    fn hla_shapes() {
+        let x = randv(64 * 3, 2);
+        for r in [1, 2, 4, 8] {
+            let c = block_hla_axis0(&x, 64, 3, r, Criterion::Sequency);
+            assert_eq!(c.len(), 64 / 16 * r * 3);
+        }
+    }
+
+    #[test]
+    fn expand_compress_projection() {
+        // compress(expand(c)) == c (rows of H-hat are orthonormal)
+        let x = randv(32 * 2, 3);
+        let c = block_hla_axis0(&x, 32, 2, 8, Criterion::Sequency);
+        let e = block_hla_expand_axis0(&c, 16, 2, 8, Criterion::Sequency);
+        let c2 = block_hla_axis0(&e, 32, 2, 8, Criterion::Sequency);
+        for (a, b) in c.iter().zip(&c2) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dc_signal_exact_at_rank_1() {
+        let x = vec![3.0f32; 32 * 2];
+        let c = block_hla_axis0(&x, 32, 2, 1, Criterion::Sequency);
+        let e = block_hla_expand_axis0(&c, 2, 2, 1, Criterion::Sequency);
+        for (a, b) in e.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_hla_error_monotone_in_rank() {
+        crate::util::proptest::check("hla error monotone", 20, |case| {
+            let tiles = case.usize_in(1, 3);
+            let cols = case.usize_in(1, 5);
+            let rows = tiles * BLOCK;
+            let x = case.f32_vec(rows * cols, 1.0);
+            let err = |r: usize| {
+                let c = block_hla_axis0(&x, rows, cols, r, Criterion::Sequency);
+                let e = block_hla_expand_axis0(&c, tiles * r, cols, r,
+                                               Criterion::Sequency);
+                x.iter().zip(&e).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+            };
+            let (e4, e16) = (err(4), err(16));
+            if e16 <= e4 + 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("rank-16 err {} > rank-4 err {}", e16, e4))
+            }
+        });
+    }
+}

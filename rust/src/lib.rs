@@ -1,0 +1,24 @@
+//! HOT: Hadamard-based Optimized Training — rust coordinator (L3).
+//!
+//! Reproduction of Kim et al., "HOT: Hadamard-based Optimized Training"
+//! (2025). Architecture (see DESIGN.md):
+//!
+//!   * python/jax/Pallas author the training graphs at build time and AOT
+//!     them to HLO-text artifacts (`make artifacts`);
+//!   * this crate loads the artifacts through PJRT (`runtime`), owns the
+//!     training loop, ABC context buffers, LQS calibration, data,
+//!     metrics and checkpoints (`coordinator`);
+//!   * `costmodel` / `latsim` regenerate the paper's analytic
+//!     tables/figures; `hadamard` / `quant` mirror kernel semantics
+//!     host-side; `util` holds the offline-built substrates.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod hadamard;
+pub mod latsim;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

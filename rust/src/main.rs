@@ -1,0 +1,250 @@
+//! `hot` — leader binary for the HOT reproduction.
+//!
+//! Subcommands:
+//!   train       run a training job (fused / split / accum modes)
+//!   calibrate   run LQS calibration only and print the report
+//!   eval        evaluate a checkpoint (or the init params)
+//!   memory      print the analytic memory model for a zoo architecture
+//!   latency     print the Table-6 latency simulation
+//!   info        list artifacts / presets in the manifest
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use hot::config::RunConfig;
+use hot::coordinator::{Mode, Trainer};
+use hot::runtime::Runtime;
+use hot::util::args::Args;
+use hot::util::timer::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("memory") => cmd_memory(&args),
+        Some("latency") => cmd_latency(&args),
+        Some("info") => cmd_info(&args),
+        Some("runhlo") => cmd_runhlo(&args),
+        _ => {
+            eprintln!(
+                "usage: hot <train|calibrate|eval|memory|latency|info> [--opts]\n\
+                 common: --artifacts DIR --preset NAME --variant V --steps N\n\
+                         --batch N --lr F --mode fused|split|accum --accum N\n\
+                         --seed N --config run.json"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts = v.into();
+    }
+    if let Some(v) = args.get("preset") {
+        cfg.preset = v.into();
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.into();
+    }
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.lr = args.f64_or("lr", cfg.lr);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.accum = args.usize_or("accum", cfg.accum);
+    cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches);
+    cfg.mem_budget = args.u64_or("mem-budget", cfg.mem_budget);
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
+    cfg.data_noise = args.f64_or("data-noise", cfg.data_noise);
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d.into());
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let mode = match args.str_or("mode", "fused").as_str() {
+        "fused" => Mode::Fused,
+        "split" => Mode::Split,
+        "accum" => Mode::Accum,
+        m => bail!("unknown mode {m:?}"),
+    };
+    let rt = Arc::new(Runtime::new(&cfg.artifacts)?);
+    let mut tr = Trainer::new(rt, cfg)?;
+    if let Some(ck) = args.get("resume") {
+        tr.resume(ck)?;
+        hot::info!("resumed from {ck} at step {}", tr.step);
+    }
+    if mode == Mode::Fused && tr.cfg.accum == 1 {
+        let fin = tr.train()?;
+        if let Some((l, a)) = fin {
+            println!("final eval: loss {l:.4} acc {a:.4}");
+        }
+    } else {
+        tr.calibrate()?;
+        for _ in 0..tr.cfg.steps {
+            tr.step_once(mode)?;
+        }
+        let (l, a) = tr.eval(8)?;
+        println!("final eval: loss {l:.4} acc {a:.4}");
+    }
+    println!("mean step time: {:.4}s ({:.2} steps/s)",
+             tr.metrics.mean_step_time(), tr.metrics.throughput_steps_per_s());
+    println!("ctx: peak {} B, compression {:.2}x",
+             tr.ctx.stats().peak_bytes, tr.ctx.compression_ratio());
+    if let Some(csv) = args.get("csv") {
+        tr.metrics.save_csv(csv)?;
+        println!("metrics -> {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let rt = Arc::new(Runtime::new(&cfg.artifacts)?);
+    let mut tr = Trainer::new(rt, cfg)?;
+    match tr.calibrate()? {
+        None => println!("no calib artifact for this preset"),
+        Some(rep) => {
+            let mut t = Table::new(&["layer", "mse_tensor", "mse_token",
+                                     "outlier", "LQS"]);
+            for (l, m) in rep.layers.iter().zip(rep.lqs_mask()) {
+                t.row(&[
+                    l.name.clone(),
+                    format!("{:.3e}", l.mse_tensor),
+                    format!("{:.3e}", l.mse_token),
+                    format!("{:.2}", l.outlier_ratio),
+                    if m > 0.5 { "per-token".into() } else { "per-tensor".into() },
+                ]);
+            }
+            t.print("LQS calibration (paper §5.2.2)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let rt = Arc::new(Runtime::new(&cfg.artifacts)?);
+    let mut tr = Trainer::new(rt, cfg)?;
+    if let Some(ck) = args.get("resume") {
+        tr.resume(ck)?;
+    }
+    let (l, a) = tr.eval(args.usize_or("batches", 8))?;
+    println!("eval: loss {l:.4} acc {a:.4}");
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    use hot::costmodel::{breakdown, zoo, MemMethod};
+    let model = args.str_or("model", "vit_b");
+    let batch = args.usize_or("batch", 256);
+    let spec = match model.as_str() {
+        "vit_b" => zoo::vit_b(),
+        "vit_s" => zoo::vit_s(),
+        "resnet50" => zoo::resnet50(),
+        "resnet18" => zoo::resnet18(),
+        "efficientformer_l7" => zoo::efficientformer_l7(),
+        "efficientformer_l1" => zoo::efficientformer_l1(),
+        m => bail!("unknown zoo model {m:?}"),
+    };
+    let mut t = Table::new(&["method", "weights", "grads", "optimizer",
+                             "activations", "attn", "total GB"]);
+    for (name, m) in [
+        ("FP", MemMethod::Fp32),
+        ("LBP-WHT/LUQ", MemMethod::FpActivations),
+        ("LoRA", MemMethod::Lora { r_lora: 8 }),
+        ("HOT", MemMethod::Hot { rank: 8, abc: true }),
+        ("HOT+LoRA", MemMethod::HotLora { rank: 8, r_lora: 8 }),
+    ] {
+        let b = breakdown(&spec, batch, m);
+        let gb = |x: u64| format!("{:.2}", x as f64 / (1u64 << 30) as f64);
+        t.row(&[name.into(), gb(b.weights), gb(b.gradients), gb(b.optimizer),
+                gb(b.activations), gb(b.attention), format!("{:.2}", b.gb())]);
+    }
+    t.print(&format!("{} @ batch {batch} (GB)", spec.name));
+    Ok(())
+}
+
+fn cmd_latency(args: &Args) -> Result<()> {
+    use hot::costmodel::zoo::table6_layers;
+    use hot::costmodel::Method;
+    use hot::latsim::{total_us, RTX_3090};
+    let _ = args;
+    let mut t = Table::new(&["model", "(L,O,I)", "layer", "FP us",
+                             "LBP us", "HOT us", "speedup"]);
+    for (model, l) in table6_layers() {
+        let fp = total_us(&RTX_3090, &l, Method::Fp32);
+        let lbp = total_us(&RTX_3090, &l, Method::LbpWht { rank: 8 });
+        let hotl = total_us(&RTX_3090, &l, Method::Hot { rank: 8 });
+        t.row(&[model, format!("({},{},{})", l.l, l.o, l.i), l.name.clone(),
+                format!("{fp:.0}"), format!("{lbp:.0}"), format!("{hotl:.0}"),
+                format!("{:.1}x", fp / hotl)]);
+    }
+    t.print("Table 6 — simulated RTX-3090 backward latency");
+    Ok(())
+}
+
+/// Debug tool: run an arbitrary HLO text file with seeded-random inputs.
+/// `hot runhlo file.hlo.txt f32:64x64 f32:64x48`
+fn cmd_runhlo(args: &Args) -> Result<()> {
+    use hot::util::prng::Pcg32;
+    let file = args.positional.first().expect("hlo file");
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(file)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let mut rng = Pcg32::seeded(args.u64_or("seed", 0));
+    let mut lits = Vec::new();
+    for spec in &args.positional[1..] {
+        let (ty, dims) = spec.split_once(':').expect("ty:dims");
+        let dims: Vec<usize> = dims.split('x').map(|d| d.parse().unwrap()).collect();
+        let n: usize = dims.iter().product();
+        let v = match ty {
+            "f32" => hot::runtime::Value::F32 {
+                shape: dims,
+                data: (0..n).map(|_| rng.normal()).collect(),
+            },
+            "i32" => hot::runtime::Value::I32 { shape: dims, data: vec![1; n] },
+            t => bail!("bad ty {t}"),
+        };
+        lits.push(v.to_literal()?);
+    }
+    let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let parts = out.to_tuple()?;
+    for (i, p) in parts.iter().enumerate() {
+        let v = hot::runtime::Value::from_literal(p)?;
+        match v {
+            hot::runtime::Value::F32 { ref data, ref shape } => {
+                let head: Vec<f32> = data.iter().take(4).copied().collect();
+                let sum: f64 = data.iter().map(|x| x.abs() as f64).sum();
+                println!("out{i}: f32 {shape:?} head={head:?} sum|x|={sum:.3}");
+            }
+            other => println!("out{i}: {:?} {:?}", other.dtype(), other.shape()),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let rt = Runtime::new(&dir)?;
+    println!("suite: {}  batch: {}", rt.manifest.suite, rt.manifest.batch);
+    for (name, p) in &rt.manifest.presets {
+        println!("preset {name}: arch={} d={} depth={} seq={} params={}",
+                 p.model.arch, p.model.d_model, p.model.depth, p.model.seq,
+                 p.n_params());
+    }
+    for (key, a) in &rt.manifest.artifacts {
+        println!("  {key}: kind={} in={} out={}", a.kind, a.inputs.len(),
+                 a.outputs.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,242 @@
+//! Host-side quantizer semantics — bit-mirror of python kernels
+//! (pseudo-stochastic min-max quant, INT4 nibble packing, LUQ baseline).
+//!
+//! Why rust needs this at all: the ABC context-buffer manager repacks
+//! INT4 payloads two-nibbles-per-byte for storage accounting, the
+//! checkpointing layer round-trips compressed buffers, and integration
+//! tests cross-verify artifact outputs without going back through python.
+
+pub const QMAX_I4: i32 = 7;
+pub const QMAX_I8: i32 = 127;
+
+pub fn qmax(bits: u8) -> i32 {
+    match bits {
+        4 => QMAX_I4,
+        8 => QMAX_I8,
+        b => panic!("unsupported bit width {b}"),
+    }
+}
+
+/// The paper's pseudo-random source: lower 11 bits of the FP32 input,
+/// scaled to [0, 1). Bit-identical to kernels/ref.py::pseudo_random_unit.
+#[inline]
+pub fn pseudo_random_unit(x: f32) -> f32 {
+    (x.to_bits() & 0x7FF) as f32 / 2048.0
+}
+
+/// Stochastic rounding: round up iff frac(v) > u.
+#[inline]
+pub fn ps_round(v: f32, u: f32) -> f32 {
+    let f = v.floor();
+    if v - f > u {
+        f + 1.0
+    } else {
+        f
+    }
+}
+
+/// Min-max symmetric scale over a slice.
+pub fn minmax_scale(xs: &[f32], bits: u8) -> f32 {
+    let amax = xs.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    amax.max(1e-8) / qmax(bits) as f32
+}
+
+/// Pseudo-stochastic quantize one value.
+#[inline]
+pub fn quantize_ps_one(x: f32, scale: f32, bits: u8) -> i8 {
+    let q = ps_round(x / scale, pseudo_random_unit(x));
+    q.clamp(-(qmax(bits) as f32), qmax(bits) as f32) as i8
+}
+
+pub fn quantize_ps(xs: &[f32], scale: f32, bits: u8) -> Vec<i8> {
+    xs.iter().map(|&x| quantize_ps_one(x, scale, bits)).collect()
+}
+
+pub fn dequantize(qs: &[i8], scale: f32) -> Vec<f32> {
+    qs.iter().map(|&q| q as f32 * scale).collect()
+}
+
+/// Per-token (row-wise) scales over a row-major (rows, cols) matrix.
+pub fn minmax_scale_rows(xs: &[f32], rows: usize, cols: usize, bits: u8)
+                         -> Vec<f32> {
+    (0..rows)
+        .map(|r| minmax_scale(&xs[r * cols..(r + 1) * cols], bits))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// INT4 nibble packing (two values per byte; low nibble = even index)
+// ---------------------------------------------------------------------------
+
+pub fn pack_int4(qs: &[i8]) -> Vec<u8> {
+    assert_eq!(qs.len() % 2, 0, "need an even count to pack nibbles");
+    qs.chunks_exact(2)
+        .map(|p| {
+            let lo = (p[0] as u8) & 0xF;
+            let hi = (p[1] as u8) & 0xF;
+            (hi << 4) | lo
+        })
+        .collect()
+}
+
+pub fn unpack_int4(packed: &[u8]) -> Vec<i8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        let lo = (b & 0xF) as i8;
+        let hi = ((b >> 4) & 0xF) as i8;
+        out.push(if lo >= 8 { lo - 16 } else { lo });
+        out.push(if hi >= 8 { hi - 16 } else { hi });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// LUQ baseline (logarithmic stochastic quantization, Chmiel et al.)
+// ---------------------------------------------------------------------------
+
+/// Fake-quant LUQ at `bits`: snap to signed powers of two below max|x|,
+/// stochastic in the log domain, stochastic underflow pruning. Mirrors
+/// kernels/ref.py::quantize_luq (same pseudo-random source).
+pub fn quantize_luq(xs: &[f32], bits: u8) -> Vec<f32> {
+    let levels = (1i32 << (bits - 1)) - 1;
+    let amax = xs.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-20);
+    let e_hi = amax.log2().floor();
+    let e_lo = e_hi - (levels - 1) as f32;
+    xs.iter()
+        .map(|&x| {
+            if x == 0.0 {
+                return 0.0;
+            }
+            let mag = x.abs();
+            let sgn = x.signum();
+            let u = pseudo_random_unit(x);
+            if mag < e_lo.exp2() {
+                // stochastic underflow: keep w.p. mag/2^e_lo
+                return if u < mag / e_lo.exp2() { sgn * e_lo.exp2() } else { 0.0 };
+            }
+            let e = mag.log2().clamp(e_lo, e_hi);
+            let ef = e.floor();
+            let pl = ef.exp2();
+            let ph = (ef + 1.0).exp2().min(e_hi.exp2());
+            let p_up = if ph > pl { (mag - pl) / (ph - pl) } else { 0.0 };
+            sgn * if u < p_up { ph } else { pl }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn randv(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal() * scale).collect()
+    }
+
+    #[test]
+    fn range_respected() {
+        for bits in [4u8, 8] {
+            let xs = randv(512, 1, 100.0);
+            let s = minmax_scale(&xs, bits);
+            let q = quantize_ps(&xs, s, bits);
+            for v in q {
+                assert!((v as i32).abs() <= qmax(bits));
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let xs = randv(512, 2, 3.0);
+        for bits in [4u8, 8] {
+            let s = minmax_scale(&xs, bits);
+            let q = quantize_ps(&xs, s, bits);
+            let d = dequantize(&q, s);
+            for (a, b) in xs.iter().zip(&d) {
+                assert!((a - b).abs() <= s * 1.0001, "{a} vs {b} (s={s})");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_points_fixed() {
+        // values already on the grid never move
+        let s = 0.5f32;
+        for k in -7..=7 {
+            let x = k as f32 * s;
+            assert_eq!(quantize_ps_one(x, s, 4) as i32, k);
+        }
+    }
+
+    #[test]
+    fn nearly_unbiased() {
+        let xs = randv(200_000, 3, 2.0);
+        let s = minmax_scale(&xs, 4);
+        let q = quantize_ps(&xs, s, 4);
+        let d = dequantize(&q, s);
+        let err: f64 = xs.iter().zip(&d).map(|(a, b)| (b - a) as f64).sum();
+        let mean_err = err / xs.len() as f64;
+        assert!(mean_err.abs() < 0.02 * s as f64, "bias {}", mean_err);
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let mut r = Pcg32::seeded(4);
+        let qs: Vec<i8> = (0..256).map(|_| (r.below(16) as i8) - 8).collect();
+        assert_eq!(unpack_int4(&pack_int4(&qs)), qs);
+    }
+
+    #[test]
+    fn prop_pack_roundtrip() {
+        crate::util::proptest::check("int4 pack roundtrip", 30, |case| {
+            let n = 2 * case.usize_in(1, 64);
+            let qs: Vec<i8> = (0..n).map(|_| (case.rng.below(16) as i8) - 8).collect();
+            if unpack_int4(&pack_int4(&qs)) == qs {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn pack_halves_bytes() {
+        let qs = vec![1i8; 128];
+        assert_eq!(pack_int4(&qs).len(), 64);
+    }
+
+    #[test]
+    fn luq_powers_of_two() {
+        let xs = randv(256, 5, 3.0);
+        let y = quantize_luq(&xs, 4);
+        for v in y {
+            if v != 0.0 {
+                let e = v.abs().log2();
+                assert!((e - e.round()).abs() < 1e-5, "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn luq_sign_preserved() {
+        let xs = randv(256, 6, 3.0);
+        let y = quantize_luq(&xs, 4);
+        for (a, b) in xs.iter().zip(&y) {
+            if *b != 0.0 {
+                assert_eq!(a.signum(), b.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn per_row_scales() {
+        let xs = vec![
+            1.0, -2.0, 3.0, -4.0, // row 0: amax 4
+            10.0, 20.0, -30.0, 5.0, // row 1: amax 30
+        ];
+        let s = minmax_scale_rows(&xs, 2, 4, 8);
+        assert!((s[0] - 4.0 / 127.0).abs() < 1e-6);
+        assert!((s[1] - 30.0 / 127.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,334 @@
+//! Parse artifacts/manifest.json — the contract between aot.py and the
+//! coordinator. Nothing about shapes or parameter ordering is hardcoded
+//! on the rust side; it all flows from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            "int8" | "i8" => DType::I8,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).context("spec.name")?.into(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("spec.shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(
+                j.get("dtype").and_then(Json::as_str).context("spec.dtype")?,
+            )?,
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub arch: String,
+    pub d_model: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub in_dim: usize,
+    pub n_classes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub name: String,
+    pub model: ModelMeta,
+    pub params: Vec<TensorSpec>,
+    pub qlinears: Vec<String>,
+    pub init_blob: String,
+}
+
+impl Preset {
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(TensorSpec::bytes).sum()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(TensorSpec::numel).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub key: String,
+    pub file: String,
+    pub kind: String,
+    pub preset: Option<String>,
+    pub variant: Option<String>,
+    pub batch: Option<usize>,
+    pub rank: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// split-fwd artifacts: ctx tensor descriptions (module, key, index)
+    pub ctx: Vec<CtxSpec>,
+    pub trainable: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CtxSpec {
+    pub module: String,
+    pub kind: String,
+    pub key: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub index: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub suite: String,
+    pub batch: usize,
+    pub presets: BTreeMap<String, Preset>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = PathBuf::from(dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.get("presets").and_then(Json::as_obj)
+            .context("manifest.presets")? {
+            let mj = pj.get("model").context("preset.model")?;
+            let get = |k: &str| -> Result<usize> {
+                mj.get(k).and_then(Json::as_usize)
+                    .with_context(|| format!("model.{k}"))
+            };
+            let model = ModelMeta {
+                arch: mj.get("arch").and_then(Json::as_str).context("arch")?.into(),
+                d_model: get("d_model")?,
+                depth: get("depth")?,
+                heads: get("heads")?,
+                seq: get("seq")?,
+                in_dim: get("in_dim")?,
+                n_classes: get("n_classes")?,
+            };
+            let params = pj.get("params").and_then(Json::as_arr)
+                .context("preset.params")?
+                .iter().map(TensorSpec::from_json).collect::<Result<_>>()?;
+            let qlinears = pj.get("qlinears").and_then(Json::as_arr)
+                .context("preset.qlinears")?
+                .iter()
+                .map(|v| Ok(v.as_str().context("qlinear name")?.to_string()))
+                .collect::<Result<_>>()?;
+            presets.insert(name.clone(), Preset {
+                name: name.clone(),
+                model,
+                params,
+                qlinears,
+                init_blob: pj.get("init_blob").and_then(Json::as_str)
+                    .context("init_blob")?.into(),
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (key, aj) in j.get("artifacts").and_then(Json::as_obj)
+            .context("manifest.artifacts")? {
+            let specs = |field: &str| -> Result<Vec<TensorSpec>> {
+                aj.get(field).and_then(Json::as_arr)
+                    .with_context(|| format!("artifact.{field}"))?
+                    .iter().map(TensorSpec::from_json).collect()
+            };
+            let ctx = match aj.get("ctx").and_then(Json::as_arr) {
+                None => vec![],
+                Some(arr) => arr.iter().map(|c| {
+                    Ok(CtxSpec {
+                        module: c.get("module").and_then(Json::as_str)
+                            .context("ctx.module")?.into(),
+                        kind: c.get("kind").and_then(Json::as_str)
+                            .context("ctx.kind")?.into(),
+                        key: c.get("key").and_then(Json::as_str)
+                            .context("ctx.key")?.into(),
+                        shape: c.get("shape").and_then(Json::as_arr)
+                            .context("ctx.shape")?.iter()
+                            .map(|d| d.as_usize().context("ctx dim"))
+                            .collect::<Result<_>>()?,
+                        dtype: DType::parse(c.get("dtype").and_then(Json::as_str)
+                            .context("ctx.dtype")?)?,
+                        index: c.get("index").and_then(Json::as_usize)
+                            .context("ctx.index")?,
+                    })
+                }).collect::<Result<_>>()?,
+            };
+            let trainable = match aj.get("trainable").and_then(Json::as_arr) {
+                None => vec![],
+                Some(arr) => arr.iter().map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(key.clone(), ArtifactMeta {
+                key: key.clone(),
+                file: aj.get("file").and_then(Json::as_str)
+                    .context("artifact.file")?.into(),
+                kind: aj.get("kind").and_then(Json::as_str)
+                    .context("artifact.kind")?.into(),
+                preset: aj.get("preset").and_then(Json::as_str).map(String::from),
+                variant: aj.get("variant").and_then(Json::as_str).map(String::from),
+                batch: aj.get("batch").and_then(Json::as_usize),
+                rank: aj.get("rank").and_then(Json::as_usize),
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+                ctx,
+                trainable,
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            suite: j.get("suite").and_then(Json::as_str).unwrap_or("?").into(),
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(32),
+            presets,
+            artifacts,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&Preset> {
+        self.presets.get(name)
+            .with_context(|| format!("preset {name:?} not in manifest \
+                 (have: {:?})", self.presets.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(key)
+            .with_context(|| format!("artifact {key:?} not in manifest — \
+                 run `make artifacts` (full suite)"))
+    }
+
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(key)?.file))
+    }
+
+    /// Load the init blob for a preset into per-param f32 vectors.
+    pub fn load_init(&self, preset: &str) -> Result<Vec<Vec<f32>>> {
+        let p = self.preset(preset)?;
+        let path = self.dir.join(&p.init_blob);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != p.param_bytes() {
+            bail!("init blob {path:?}: {} bytes, manifest wants {}",
+                  bytes.len(), p.param_bytes());
+        }
+        let mut out = Vec::with_capacity(p.params.len());
+        let mut off = 0usize;
+        for spec in &p.params {
+            let n = spec.numel();
+            let mut v = vec![0.0f32; n];
+            for (i, x) in v.iter_mut().enumerate() {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            off += n * 4;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Check whether an artifact directory looks usable (for tests/examples
+/// that want to skip gracefully when `make artifacts` hasn't run).
+pub fn artifacts_available(dir: &str) -> bool {
+    Path::new(dir).join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int8").unwrap(), DType::I8);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("complex64").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_bytes() {
+        let s = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
+        assert_eq!(s.numel(), 6);
+        assert_eq!(s.bytes(), 24);
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let j = r#"{
+          "batch": 8, "suite": "default",
+          "presets": {"t": {
+            "model": {"arch":"vit","d_model":32,"depth":1,"heads":2,
+                      "seq":16,"in_dim":16,"n_classes":4,"mlp_ratio":2},
+            "params": [{"name":"w","shape":[2,2],"dtype":"float32"}],
+            "qlinears": ["embed"],
+            "init_blob": "x.bin", "init_seed": 0}},
+          "artifacts": {"a": {
+            "file":"a.hlo.txt","kind":"train_step","preset":"t",
+            "variant":"hot","batch":8,"rank":8,
+            "inputs":[{"name":"x","shape":[8,16,16],"dtype":"float32"}],
+            "outputs":[{"name":"loss","shape":[],"dtype":"float32"}]}}
+        }"#;
+        let dir = std::env::temp_dir().join("hot_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), j).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.batch, 8);
+        let p = m.preset("t").unwrap();
+        assert_eq!(p.model.d_model, 32);
+        assert_eq!(p.qlinears, vec!["embed"]);
+        let a = m.artifact("a").unwrap();
+        assert_eq!(a.variant.as_deref(), Some("hot"));
+        assert_eq!(a.inputs[0].shape, vec![8, 16, 16]);
+        assert!(m.artifact("missing").is_err());
+    }
+}

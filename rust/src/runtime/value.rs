@@ -1,0 +1,175 @@
+//! Host values crossing the HLO boundary + conversion to/from xla Literals.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use crate::runtime::manifest::{DType, TensorSpec};
+
+/// A host-side tensor value in one of the dtypes the artifacts use.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    I8 { shape: Vec<usize>, data: Vec<i8> },
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_like_spec(spec: &TensorSpec) -> Value {
+        match spec.dtype {
+            DType::F32 => Value::F32 { shape: spec.shape.clone(),
+                                       data: vec![0.0; spec.numel()] },
+            DType::I32 => Value::I32 { shape: spec.shape.clone(),
+                                       data: vec![0; spec.numel()] },
+            DType::I8 => Value::I8 { shape: spec.shape.clone(),
+                                     data: vec![0; spec.numel()] },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. }
+            | Value::I8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32 { .. } => DType::F32,
+            Value::I32 { .. } => DType::I32,
+            Value::I8 { .. } => DType::I8,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype().bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            v => bail!("expected f32 value, got {:?}", v.dtype()),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            Value::I8 { data, .. } => Ok(data),
+            v => bail!("expected i8 value, got {:?}", v.dtype()),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, shape {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    /// Validate against a manifest spec (shape + dtype).
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() || self.dtype() != spec.dtype {
+            bail!("value {:?}/{:?} does not match spec {} {:?}/{:?}",
+                  self.shape(), self.dtype(), spec.name, spec.shape, spec.dtype);
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        // Perf (EXPERIMENTS.md §Perf): view the host buffer as raw bytes
+        // instead of materializing an intermediate Vec<u8> — the literal
+        // constructor copies once, we used to copy twice. x86-64 is
+        // little-endian, matching XLA's host layout.
+        let (ty, dims, bytes): (ElementType, &Vec<usize>, &[u8]) = match self {
+            Value::F32 { shape, data } => (ElementType::F32, shape, unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                           data.len() * 4)
+            }),
+            Value::I32 { shape, data } => (ElementType::S32, shape, unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                           data.len() * 4)
+            }),
+            Value::I8 { shape, data } => (ElementType::S8, shape, unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                           data.len())
+            }),
+        };
+        Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+            .context("creating literal")
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Value> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(Value::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().context("f32 read")?,
+            }),
+            ElementType::S32 => Ok(Value::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().context("i32 read")?,
+            }),
+            ElementType::S8 => Ok(Value::I8 {
+                shape: dims,
+                data: lit.to_vec::<i8>().context("i8 read")?,
+            }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let v = Value::F32 { shape: vec![2, 2], data: vec![1.0, -2.5, 3.0, 0.0] };
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 2]);
+        assert_eq!(back.as_f32().unwrap(), v.as_f32().unwrap());
+    }
+
+    #[test]
+    fn roundtrip_i8() {
+        let v = Value::I8 { shape: vec![3], data: vec![-7, 0, 127] };
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i8().unwrap(), &[-7, 0, 127]);
+    }
+
+    #[test]
+    fn roundtrip_i32_scalar_shape() {
+        let v = Value::I32 { shape: vec![], data: vec![42] };
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit).unwrap();
+        assert!(matches!(back, Value::I32 { ref data, .. } if data == &vec![42]));
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec { name: "x".into(), shape: vec![2], dtype: DType::F32 };
+        let good = Value::F32 { shape: vec![2], data: vec![0.0; 2] };
+        let bad = Value::F32 { shape: vec![3], data: vec![0.0; 3] };
+        assert!(good.check_spec(&spec).is_ok());
+        assert!(bad.check_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn zeros_like() {
+        let spec = TensorSpec { name: "q".into(), shape: vec![4, 2], dtype: DType::I8 };
+        let v = Value::zeros_like_spec(&spec);
+        assert_eq!(v.bytes(), 8);
+        assert_eq!(v.dtype(), DType::I8);
+    }
+}

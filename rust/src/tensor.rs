@@ -1,0 +1,177 @@
+//! Minimal host-side tensor types.
+//!
+//! The heavy math lives in the XLA artifacts; rust needs tensors for
+//! synthetic data generation, ABC buffer accounting/verification, the
+//! cost-model/latency simulators and host-side mirrors of the quantizer
+//! semantics. Row-major, owned storage, f32 or i8.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI8 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorF32 { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(shape),
+                  data.len());
+        }
+        Ok(TensorF32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// (rows, cols) view of a 2-D tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            s => bail!("expected 2-D, got {:?}", s),
+        }
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape[1] + c]
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn mse(&self, other: &TensorF32) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n as f32
+    }
+
+    /// Frobenius-relative error vs a reference.
+    pub fn rel_err(&self, reference: &TensorF32) -> f32 {
+        assert_eq!(self.shape, reference.shape);
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 = reference.data.iter().map(|v| v * v).sum();
+        (num / den.max(1e-20)).sqrt()
+    }
+
+    /// Exact row-major matmul: (m,k) x (k,n) -> (m,n).
+    pub fn matmul(&self, rhs: &TensorF32) -> Result<TensorF32> {
+        let (m, k) = self.dims2()?;
+        let (k2, n) = rhs.dims2()?;
+        if k != k2 {
+            bail!("matmul dim mismatch: {}x{} @ {}x{}", m, k, k2, n);
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for (d, b) in dst.iter_mut().zip(row) {
+                    *d += a * b;
+                }
+            }
+        }
+        TensorF32::from_vec(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Result<TensorF32> {
+        let (m, n) = self.dims2()?;
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        TensorF32::from_vec(&[n, m], out)
+    }
+}
+
+impl TensorI8 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI8 { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i8>) -> Result<Self> {
+        if numel(shape) != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(shape),
+                  data.len());
+        }
+        Ok(TensorI8 { shape: shape.to_vec(), data })
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = TensorF32::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = TensorF32::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose() {
+        let a = TensorF32::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect())
+            .unwrap();
+        let t = a.transpose2().unwrap();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.at2(2, 1), 5.0);
+    }
+
+    #[test]
+    fn mse_and_rel_err() {
+        let a = TensorF32::from_vec(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let b = TensorF32::from_vec(&[1, 2], vec![1.0, 4.0]).unwrap();
+        assert!((a.mse(&b) - 2.0).abs() < 1e-6);
+        assert!(a.rel_err(&a) < 1e-9);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(TensorF32::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        let a = TensorF32::zeros(&[2, 3]);
+        let b = TensorF32::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog SUBCOMMAND [--flag] [--key value] [positional...]`.
+//! Typed accessors with defaults; unknown-flag detection via `finish()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argv entries (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.kv.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.kv.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number")))
+            .unwrap_or(default)
+    }
+
+    /// Returns the unknown --key/--flag names (parsed but never accessed).
+    pub fn unused(&self) -> Vec<String> {
+        let used = self.used.borrow();
+        self.kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !used.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = argv("train --steps 100 --preset small --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 1), 100);
+        assert_eq!(a.str_or("preset", "x"), "small");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = argv("bench --lr=0.5 --steps=3");
+        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+        assert_eq!(a.usize_or("steps", 0), 3);
+    }
+
+    #[test]
+    fn positional() {
+        let a = argv("run file1 file2 --n 2");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+        assert_eq!(a.usize_or("n", 0), 2);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = argv("x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn unused_detection() {
+        let a = argv("t --known 1 --typo 2");
+        let _ = a.get("known");
+        assert_eq!(a.unused(), vec!["typo".to_string()]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built in-repo because the image is offline
+//! (no serde/clap/rand/criterion/proptest): JSON, PRNG, CLI args,
+//! timing/bench harness, property testing, logging.
+
+pub mod args;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod proptest;
+pub mod timer;

@@ -1,0 +1,110 @@
+//! Mini property-testing harness (the `proptest` crate is unavailable in
+//! this offline image). Seeded, deterministic, with simple shrinking of
+//! sized inputs: on failure, sizes are halved toward minimal and the
+//! smallest failing case is reported.
+
+use crate::util::prng::Pcg32;
+
+/// A generated case: a PRNG to draw values from plus a size hint the
+/// harness shrinks on failure.
+pub struct Case<'a> {
+    pub rng: &'a mut Pcg32,
+    pub size: usize,
+}
+
+impl<'a> Case<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// A dimension that scales with the shrinkable size (>= lo).
+    pub fn dim(&mut self, lo: usize, step: usize) -> usize {
+        lo + step * self.rng.below((self.size + 1) as u32) as usize
+    }
+
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    pub fn choice<'b, T>(&mut self, xs: &'b [T]) -> &'b T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Run `prop` on `n_cases` random cases. On failure, retry with smaller
+/// sizes and panic with the minimal size + seed that still fails.
+pub fn check<F>(name: &str, n_cases: usize, prop: F)
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    let base_seed = 0x5eed_0000u64;
+    for i in 0..n_cases {
+        let seed = base_seed + i as u64;
+        let mut size = 8usize;
+        let run = |size: usize, seed: u64| {
+            let mut rng = Pcg32::seeded(seed);
+            let mut case = Case { rng: &mut rng, size };
+            prop(&mut case)
+        };
+        if let Err(first) = run(size, seed) {
+            // shrink: halve size while it still fails
+            let mut last_err = first;
+            while size > 0 {
+                let smaller = size / 2;
+                match run(smaller, seed) {
+                    Err(e) => {
+                        last_err = e;
+                        size = smaller;
+                        if size == 0 {
+                            break;
+                        }
+                    }
+                    Ok(()) => break,
+                }
+                if smaller == 0 {
+                    break;
+                }
+            }
+            panic!(
+                "property '{}' failed (case {}, seed {:#x}, shrunk size {}): {}",
+                name, i, seed, size, last_err
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 50, |c| {
+            let a = c.rng.next_u32() as u64;
+            let b = c.rng.next_u32() as u64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_with_info() {
+        check("always fails", 3, |_| Err("always fails".into()));
+    }
+
+    #[test]
+    fn sized_dims() {
+        check("dims in range", 20, |c| {
+            let d = c.dim(16, 16);
+            if d >= 16 && (d - 16) % 16 == 0 {
+                Ok(())
+            } else {
+                Err(format!("bad dim {d}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Timing + micro-bench harness (criterion is unavailable offline).
+//!
+//! `bench()` runs warmups, then timed iterations until a wall budget or an
+//! iteration cap is hit, and reports robust statistics (median, mean, p10,
+//! p90). Bench binaries (`cargo bench`, harness = false) print one table
+//! row per paper table entry through `Table`.
+
+use std::time::{Duration, Instant};
+
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchStats {
+    pub fn fmt_human(&self) -> String {
+        fn h(s: f64) -> String {
+            if s < 1e-6 {
+                format!("{:.0}ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:.2}us", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:.2}ms", s * 1e3)
+            } else {
+                format!("{:.3}s", s)
+            }
+        }
+        format!(
+            "median {} mean {} [p10 {} p90 {}] ({} iters)",
+            h(self.median_s),
+            h(self.mean_s),
+            h(self.p10_s),
+            h(self.p90_s),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then timed runs until
+/// `budget` elapses or `max_iters` is reached (at least 3 samples).
+pub fn bench<F: FnMut()>(warmup: usize, budget: Duration, max_iters: usize,
+                         mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 3 || start.elapsed() < budget)
+        && samples.len() < max_iters
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchStats {
+        iters: n,
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        median_s: samples[n / 2],
+        p10_s: samples[n / 10],
+        p90_s: samples[(n * 9 / 10).min(n - 1)],
+    }
+}
+
+/// Fixed-width console table mirroring the paper's layout.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line: usize = w.iter().sum::<usize>() + 3 * w.len() + 1;
+        println!("\n== {} ==", title);
+        println!("{}", "-".repeat(line));
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(line));
+        for r in &self.rows {
+            println!("{}", fmt_row(r));
+        }
+        println!("{}", "-".repeat(line));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let stats = bench(1, Duration::from_millis(20), 10_000, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(stats.iters >= 3);
+        assert!(stats.p10_s <= stats.median_s);
+        assert!(stats.median_s <= stats.p90_s + 1e-12);
+        assert!(stats.mean_s > 0.0);
+    }
+
+    #[test]
+    fn table_builds() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["bb".into(), "2".into()]);
+        t.print("test table");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["one"]);
+        t.row(&["a".into(), "b".into()]);
+    }
+
+    #[test]
+    fn human_format() {
+        let s = BenchStats { iters: 3, mean_s: 2e-6, median_s: 2e-6, p10_s: 1e-6, p90_s: 3e-6 };
+        assert!(s.fmt_human().contains("us"));
+    }
+}

@@ -1,0 +1,324 @@
+//! Integration tests over real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full stack: HLO text -> PJRT compile -> execute,
+//! the trainer's three modes, ABC ctx buffers crossing the boundary, LQS
+//! calibration, and cross-language consistency between the artifacts and
+//! the rust-side Hadamard/quant mirrors. Tests skip (not fail) when the
+//! artifact directory is missing so `cargo test` works pre-`make`.
+
+use std::sync::Arc;
+
+use hot::config::RunConfig;
+use hot::coordinator::{LoraTrainer, Mode, Trainer};
+use hot::runtime::manifest::artifacts_available;
+use hot::runtime::{Runtime, Value};
+use hot::util::prng::Pcg32;
+
+const DIR: &str = "artifacts";
+
+/// The PJRT client is not Send/Sync (Rc internals), and compiling the
+/// artifacts is the dominant cost, so the whole suite runs as ONE test
+/// sharing a single Runtime, with named sub-checks executed sequentially.
+#[test]
+fn integration_suite() {
+    if !artifacts_available(DIR) {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let rt = Arc::new(Runtime::new(DIR).expect("runtime"));
+    let checks: Vec<(&str, fn(Arc<Runtime>))> = vec![
+        ("kernel_hq_demo_matches_host_mirror", kernel_hq_demo_matches_host_mirror),
+        ("kernel_hla_demo_runs_and_approximates", kernel_hla_demo_runs_and_approximates),
+        ("execute_validates_arity_and_shapes", execute_validates_arity_and_shapes),
+        ("fused_training_reduces_loss_tiny", fused_training_reduces_loss_tiny),
+        ("split_mode_matches_fused_statistically_and_fills_ctx",
+         split_mode_matches_fused_statistically_and_fills_ctx),
+        ("split_fp_stores_bigger_ctx_than_hot", split_fp_stores_bigger_ctx_than_hot),
+        ("accum_mode_runs_and_learns", accum_mode_runs_and_learns),
+        ("calibration_produces_mask_and_diagnostics",
+         calibration_produces_mask_and_diagnostics),
+        ("checkpoint_roundtrip_through_trainer", checkpoint_roundtrip_through_trainer),
+        ("lora_trainer_learns_with_frozen_base", lora_trainer_learns_with_frozen_base),
+        ("lqs_mask_affects_training_but_stays_stable",
+         lqs_mask_affects_training_but_stays_stable),
+        ("manifest_covers_every_table", manifest_covers_every_table),
+    ];
+    for (name, f) in checks {
+        let t0 = std::time::Instant::now();
+        f(rt.clone());
+        eprintln!("  ok {name} ({:.1}s)", t0.elapsed().as_secs_f64());
+    }
+}
+
+fn tiny_cfg(variant: &str) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.preset = "tiny".into();
+    c.variant = variant.into();
+    c.steps = 8;
+    c.calib_batches = 1;
+    c.warmup_steps = 2;
+    c.lr = 3e-3;
+    c.eval_every = 0;
+    c
+}
+
+// ---------------------------------------------------------------------------
+// runtime + kernel demos (the L1-Pallas-in-HLO path)
+// ---------------------------------------------------------------------------
+
+fn kernel_hq_demo_matches_host_mirror(rt: Arc<Runtime>) {
+    // kernel_hq_demo: gy (64,64), w (64,48) -> gx (64,48)
+    let mut rng = Pcg32::seeded(11);
+    let gy: Vec<f32> = (0..64 * 64).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..64 * 48).map(|_| rng.normal()).collect();
+    let out = rt
+        .execute(
+            "kernel_hq_demo",
+            &[
+                Value::F32 { shape: vec![64, 64], data: gy.clone() },
+                Value::F32 { shape: vec![64, 48], data: w.clone() },
+            ],
+        )
+        .expect("execute hq demo");
+    let gx = out[0].as_f32().unwrap();
+    assert_eq!(out[0].shape(), &[64, 48]);
+    // host mirror: HT along O on both operands, INT4 ps-quant, int GEMM
+    let mut gy_t = gy.clone();
+    hot::hadamard::fwht::block_fwht_rows(&mut gy_t, 64, 64);
+    let mut w_t = w.clone();
+    hot::hadamard::fwht::block_fwht_cols(&mut w_t, 64, 48);
+    let s_g = hot::quant::minmax_scale(&gy_t, 4);
+    let s_w = hot::quant::minmax_scale(&w_t, 4);
+    let qg = hot::quant::quantize_ps(&gy_t, s_g, 4);
+    let qw = hot::quant::quantize_ps(&w_t, s_w, 4);
+    let mut want = vec![0.0f32; 64 * 48];
+    for m in 0..64 {
+        for n in 0..48 {
+            let mut acc = 0i32;
+            for k in 0..64 {
+                acc += qg[m * 64 + k] as i32 * qw[k * 48 + n] as i32;
+            }
+            want[m * 48 + n] = acc as f32 * s_g * s_w;
+        }
+    }
+    // ULP-level float diffs can flip a few stochastic roundings across
+    // implementations; demand strong agreement, not bit equality.
+    let num: f32 = gx.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum();
+    let den: f32 = want.iter().map(|v| v * v).sum();
+    let rel = (num / den).sqrt();
+    assert!(rel < 0.05, "rel err {rel}");
+}
+
+fn kernel_hla_demo_runs_and_approximates(rt: Arc<Runtime>) {
+    let mut rng = Pcg32::seeded(12);
+    // smooth-along-L inputs (HLA's favourable case)
+    let mut gy = vec![0.0f32; 64 * 64];
+    let mut x = vec![0.0f32; 64 * 48];
+    for l in 0..64 {
+        let t = (l as f32 / 64.0 * std::f32::consts::PI).cos();
+        for o in 0..64 {
+            gy[l * 64 + o] = t * (o as f32 / 64.0 + 0.3) + 0.05 * rng.normal();
+        }
+        for i in 0..48 {
+            x[l * 48 + i] = t * (i as f32 / 48.0 - 0.5) + 0.05 * rng.normal();
+        }
+    }
+    let out = rt
+        .execute(
+            "kernel_hla_demo",
+            &[
+                Value::F32 { shape: vec![64, 64], data: gy.clone() },
+                Value::F32 { shape: vec![64, 48], data: x.clone() },
+            ],
+        )
+        .expect("execute hla demo");
+    assert_eq!(out[0].shape(), &[64, 48]);
+    // exact g_w for comparison
+    let mut exact = vec![0.0f32; 64 * 48];
+    for o in 0..64 {
+        for i in 0..48 {
+            let mut acc = 0.0;
+            for l in 0..64 {
+                acc += gy[l * 64 + o] * x[l * 48 + i];
+            }
+            exact[o * 48 + i] = acc;
+        }
+    }
+    let got = out[0].as_f32().unwrap();
+    let num: f32 = got.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum();
+    let den: f32 = exact.iter().map(|v| v * v).sum();
+    let rel = (num / den).sqrt();
+    assert!(rel < 0.15, "rel err {rel} — HLA+INT8 should track smooth g_w");
+}
+
+fn execute_validates_arity_and_shapes(rt: Arc<Runtime>) {
+    let err = rt.execute("kernel_hq_demo", &[]);
+    assert!(err.is_err());
+    let bad = rt.execute(
+        "kernel_hq_demo",
+        &[
+            Value::F32 { shape: vec![2, 2], data: vec![0.0; 4] },
+            Value::F32 { shape: vec![2, 2], data: vec![0.0; 4] },
+        ],
+    );
+    assert!(bad.is_err());
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// trainer modes
+// ---------------------------------------------------------------------------
+
+fn fused_training_reduces_loss_tiny(rt: Arc<Runtime>) {
+    let mut cfg = tiny_cfg("hot");
+    cfg.steps = 30;
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    tr.calibrate().unwrap();
+    let mut first = None;
+    for _ in 0..30 {
+        let (loss, _) = tr.step_once(Mode::Fused).unwrap();
+        first.get_or_insert(loss);
+    }
+    let first = first.unwrap();
+    let last = tr.metrics.smoothed_loss(5).unwrap();
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+fn split_mode_matches_fused_statistically_and_fills_ctx(rt: Arc<Runtime>) {
+    let mut a = Trainer::new(rt.clone(), tiny_cfg("hot")).unwrap();
+    let mut b = Trainer::new(rt, tiny_cfg("hot")).unwrap();
+    for _ in 0..4 {
+        a.step_once(Mode::Fused).unwrap();
+        b.step_once(Mode::Split).unwrap();
+    }
+    // same data, same init: loss trajectories must track closely (bit
+    // equality is impossible across differently-compiled HLO modules —
+    // the pseudo-stochastic quantizer keys off mantissa bits)
+    for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+        let diff = (ra.loss - rb.loss).abs() / ra.loss.max(1e-3);
+        assert!(diff < 0.05, "step {}: fused {} vs split {}", ra.step,
+                ra.loss, rb.loss);
+    }
+    // ABC context flowed through the rust-side store
+    let stats = b.ctx.stats();
+    assert_eq!(stats.allocs, 4);
+    assert_eq!(stats.frees, 4);
+    assert_eq!(stats.live_bytes, 0);
+    assert!(stats.peak_bytes > 0);
+    // HOT ctx must compress vs FP32-equivalent accounting. At tiny scale
+    // the FP attention/gelu residuals (which HOT leaves uncompressed)
+    // dominate, so the overall ratio is modest; the qlinear entries
+    // themselves are 8x (asserted via split_fp comparison below).
+    assert!(b.ctx.compression_ratio() > 1.25,
+            "ratio {}", b.ctx.compression_ratio());
+}
+
+fn split_fp_stores_bigger_ctx_than_hot(rt: Arc<Runtime>) {
+    let mut hot_t = Trainer::new(rt.clone(), tiny_cfg("hot")).unwrap();
+    let mut fp_t = Trainer::new(rt, tiny_cfg("fp")).unwrap();
+    hot_t.step_once(Mode::Split).unwrap();
+    fp_t.step_once(Mode::Split).unwrap();
+    let hot_peak = hot_t.ctx.stats().peak_bytes;
+    let fp_peak = fp_t.ctx.stats().peak_bytes;
+    assert!(hot_peak < fp_peak,
+            "ABC must shrink the stored ctx: hot {hot_peak} vs fp {fp_peak}");
+}
+
+fn accum_mode_runs_and_learns(rt: Arc<Runtime>) {
+    let mut cfg = tiny_cfg("hot");
+    cfg.accum = 2;
+    cfg.steps = 6;
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    for _ in 0..6 {
+        tr.step_once(Mode::Accum).unwrap();
+    }
+    assert_eq!(tr.metrics.records.len(), 6);
+    assert!(tr.metrics.records.iter().all(|r| r.loss.is_finite()));
+}
+
+fn calibration_produces_mask_and_diagnostics(rt: Arc<Runtime>) {
+    let mut tr = Trainer::new(rt, tiny_cfg("hot")).unwrap();
+    let rep = tr.calibrate().unwrap().expect("calib artifact exists");
+    assert_eq!(rep.layers.len(), tr.preset.qlinears.len());
+    for l in &rep.layers {
+        assert!(l.mse_tensor.is_finite() && l.mse_token.is_finite());
+        assert!(l.outlier_ratio >= 1.0 - 1e-6, "{}: {}", l.name,
+                l.outlier_ratio);
+    }
+    // All four Fig-4 path-error diagnostics must be populated and
+    // positive on tile-compatible layers. (The paper's ordering claim —
+    // HLA-on-g_x error *accumulates* with depth while HQ noise averages
+    // out — is about training outcomes; table2_sensitivity reproduces
+    // it end-to-end. One-shot per-layer MSE at d_model=32 legitimately
+    // inverts.)
+    let populated = rep.layers.iter()
+        .filter(|l| l.gx_err_hq > 0.0 && l.gx_err_hla > 0.0
+                 && l.gw_err_hq > 0.0 && l.gw_err_hla > 0.0)
+        .count();
+    assert!(populated * 2 >= rep.layers.len(),
+            "diagnostics unpopulated ({populated}/{})", rep.layers.len());
+}
+
+fn checkpoint_roundtrip_through_trainer(rt: Arc<Runtime>) {
+    let dir = std::env::temp_dir().join("hot_int_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = tiny_cfg("hot");
+    cfg.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.steps = 3;
+    let mut tr = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    tr.train().unwrap();
+    let header = hot::coordinator::Checkpoint::latest(
+        dir.to_str().unwrap()).expect("ckpt written");
+    let mut tr2 = Trainer::new(rt, cfg).unwrap();
+    tr2.resume(&header).unwrap();
+    assert_eq!(tr2.step, 3);
+    for (a, b) in tr.params.iter().zip(&tr2.params) {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+}
+
+fn lora_trainer_learns_with_frozen_base(rt: Arc<Runtime>) {
+    let mut cfg = RunConfig::default();
+    cfg.preset = "small".into();
+    cfg.lr = 3e-3;
+    cfg.warmup_steps = 2;
+    let mut tr = LoraTrainer::new(rt, cfg, "lora_hotfrozen_small").unwrap();
+    let base_before: Vec<f32> = tr.base[0].as_f32().unwrap().to_vec();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let (loss, _) = tr.step_once().unwrap();
+        losses.push(loss);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    // base params never move; trainable did
+    assert_eq!(tr.base[0].as_f32().unwrap(), base_before.as_slice());
+    assert!(*losses.last().unwrap() < losses[0] * 1.5);
+}
+
+fn lqs_mask_affects_training_but_stays_stable(rt: Arc<Runtime>) {
+    let mut tr = Trainer::new(rt, tiny_cfg("hot")).unwrap();
+    // force all-per-token vs all-per-tensor and check both train fine
+    tr.lqs_mask = vec![1.0; tr.preset.qlinears.len()];
+    let (l1, _) = tr.step_once(Mode::Fused).unwrap();
+    tr.lqs_mask = vec![0.0; tr.preset.qlinears.len()];
+    let (l2, _) = tr.step_once(Mode::Fused).unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+}
+
+fn manifest_covers_every_table(rt: Arc<Runtime>) {
+    // every experiment family the benches rely on must be present in the
+    // full suite
+    for key in [
+        "train_fp_small", "train_hot_small", "train_lbp_small",
+        "train_luq_small", "train_int4_small", "eval_small", "opt_small",
+        "calib_small", "fwd_hot_small", "bwd_hot_small", "fwd_fp_small",
+        "bwd_fp_small", "grad_hot_small", "kernel_hq_demo", "kernel_hla_demo",
+        "lora_fp_small", "lora_hotfrozen_small",
+        // full-suite families
+        "train_gx_int_hla_tiny", "train_gw_hla_tiny", "train_hot_r4_tiny",
+        "lora_hotdec_small", "train_hot_lm_tiny", "train_hot_mlp_small",
+    ] {
+        assert!(rt.manifest.artifacts.contains_key(key),
+                "missing artifact {key} — run `make artifacts` (full suite)");
+    }
+}
