@@ -4,19 +4,19 @@
 //!
 //! Run: `cargo run --release --example finetune_vision -- [--steps 60]`
 
-use std::sync::Arc;
-
 use anyhow::Result;
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::{LoraTrainer, Trainer};
-use hot::runtime::Runtime;
 use hot::util::args::Args;
 use hot::util::timer::Table;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let steps = args.usize_or("steps", 60);
-    let rt = Arc::new(Runtime::new(&args.str_or("artifacts", "artifacts"))?);
+    let rt = hot::backend::by_name(&args.str_or("backend", "auto"),
+                                   &args.str_or("artifacts", "artifacts"))?;
+    println!("backend: {}", rt.name());
 
     let mut table = Table::new(&["method", "final loss", "eval acc",
                                  "steps/s"]);

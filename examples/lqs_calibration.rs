@@ -9,14 +9,14 @@
 use std::sync::Arc;
 
 use anyhow::Result;
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::lqs::CalibReport;
 use hot::coordinator::Trainer;
 use hot::data::VisionDataset;
-use hot::runtime::Runtime;
 use hot::util::timer::Table;
 
-fn calib_with(rt: &Arc<Runtime>, tr: &Trainer, ds: &VisionDataset,
+fn calib_with(rt: &Arc<dyn Executor>, tr: &Trainer, ds: &VisionDataset,
               outlier: Option<(usize, f32)>) -> Result<CalibReport> {
     let batch = tr.batch_size();
     let mut per_batch = Vec::new();
@@ -25,21 +25,15 @@ fn calib_with(rt: &Arc<Runtime>, tr: &Trainer, ds: &VisionDataset,
             None => ds.batch(2, b, batch),
             Some((tok, gain)) => ds.batch_with_outlier(2, b, batch, tok, gain),
         };
-        let mut args = tr.params.clone();
-        args.push(x);
-        args.push(y);
-        let outs = rt.execute(&format!("calib_{}", tr.cfg.preset), &args)?;
-        per_batch.push(
-            outs.iter()
-                .map(|v| v.as_f32().map(|s| s.to_vec()))
-                .collect::<anyhow::Result<Vec<_>>>()?,
-        );
+        per_batch.push(rt.calib_step(&format!("calib_{}", tr.cfg.preset),
+                                     &tr.params, &x, &y)?);
     }
     CalibReport::from_batches(&tr.preset.qlinears, &per_batch, 0.5)
 }
 
 fn main() -> Result<()> {
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = hot::backend::by_name("auto", "artifacts")?;
+    println!("backend: {}", rt.name());
     let mut cfg = RunConfig::default();
     cfg.preset = "small".into();
     let tr = Trainer::new(rt.clone(), cfg)?;

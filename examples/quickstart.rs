@@ -1,31 +1,32 @@
 //! Quickstart: the whole three-layer stack in one page.
 //!
-//! 1. loads the AOT artifacts (python/jax/Pallas authored, `make artifacts`)
-//! 2. runs the Pallas HQ kernel demo through PJRT from rust
+//! 1. picks an execution backend (native CPU by default; PJRT artifacts
+//!    when built with `--features pjrt` and `make artifacts` has run)
+//! 2. runs the HQ kernel demo (Pallas-lowered HLO on PJRT; the bit-level
+//!    mirror on the native backend)
 //! 3. fine-tunes the `small` ViT for a handful of steps with HOT
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use std::sync::Arc;
-
 use anyhow::Result;
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::{Mode, Trainer};
-use hot::runtime::{Runtime, Value};
+use hot::runtime::Value;
 use hot::util::prng::Pcg32;
 
 fn main() -> Result<()> {
-    // --- 1. runtime + artifacts -------------------------------------------
-    let rt = Arc::new(Runtime::new("artifacts")?);
-    println!("loaded {} artifacts", rt.manifest.artifacts.len());
+    // --- 1. backend -------------------------------------------------------
+    let rt = hot::backend::by_name("auto", "artifacts")?;
+    println!("{}", rt.describe());
 
-    // --- 2. the L1 Pallas kernel, executed from rust ----------------------
-    // kernel_hq_demo is pl.pallas_call(...) lowered into the same HLO the
-    // CPU PJRT client runs: g_x = dequant(Q4(HT(g_y)) @ Q4(HT(w))).
+    // --- 2. the HQ kernel demo --------------------------------------------
+    // On PJRT this is pl.pallas_call(...) lowered into HLO; natively it's
+    // the same math host-side: g_x = dequant(Q4(HT(g_y)) @ Q4(HT(w))).
     let mut rng = Pcg32::seeded(0);
     let gy: Vec<f32> = (0..64 * 64).map(|_| rng.normal()).collect();
     let w: Vec<f32> = (0..64 * 48).map(|_| rng.normal()).collect();
-    let out = rt.execute(
+    let out = rt.execute_raw(
         "kernel_hq_demo",
         &[
             Value::F32 { shape: vec![64, 64], data: gy },

@@ -14,12 +14,12 @@
 use std::sync::Arc;
 
 use anyhow::Result;
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::{Mode, Trainer};
-use hot::runtime::Runtime;
 use hot::util::args::Args;
 
-fn run(rt: Arc<Runtime>, preset: &str, variant: &str, steps: usize,
+fn run(rt: Arc<dyn Executor>, preset: &str, variant: &str, steps: usize,
        seed: u64) -> Result<Trainer> {
     let mut cfg = RunConfig::default();
     cfg.preset = preset.into();
@@ -40,7 +40,9 @@ fn main() -> Result<()> {
     let steps = args.usize_or("steps", 200);
     let preset = args.str_or("preset", "small");
     let seed = args.u64_or("seed", 0);
-    let rt = Arc::new(Runtime::new(&args.str_or("artifacts", "artifacts"))?);
+    let rt = hot::backend::by_name(&args.str_or("backend", "auto"),
+                                   &args.str_or("artifacts", "artifacts"))?;
+    println!("backend: {}", rt.name());
 
     println!("== end-to-end: {preset} for {steps} steps, HOT vs FP ==");
     let hot_tr = run(rt.clone(), &preset, "hot", steps, seed)?;

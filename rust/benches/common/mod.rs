@@ -1,11 +1,13 @@
 //! Shared helpers for the training-based benches.
 
+// each bench binary includes this file and uses a different subset
+#![allow(dead_code)]
+
 use std::sync::Arc;
 
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::{Mode, Trainer};
-use hot::runtime::manifest::artifacts_available;
-use hot::runtime::Runtime;
 
 pub const DIR: &str = "artifacts";
 
@@ -18,12 +20,20 @@ pub fn steps(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-pub fn runtime_or_exit() -> Arc<Runtime> {
-    if !artifacts_available(DIR) {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(0);
+/// Backend for the benches: PJRT over real artifacts when compiled in
+/// and available, the native CPU backend otherwise — so the bench
+/// trajectories populate on any machine.
+pub fn executor_or_exit() -> Arc<dyn Executor> {
+    match hot::backend::by_name("auto", DIR) {
+        Ok(rt) => {
+            eprintln!("bench backend: {}", rt.name());
+            rt
+        }
+        Err(e) => {
+            eprintln!("no usable backend: {e}");
+            std::process::exit(0);
+        }
     }
-    Arc::new(Runtime::new(DIR).expect("runtime"))
 }
 
 pub struct TrainOutcome {
@@ -36,12 +46,12 @@ pub struct TrainOutcome {
 
 /// Train `variant` on `preset` for `n` steps and evaluate. Divergence
 /// (NaN/inf loss) is reported, mirroring the paper's "NaN" table cells.
-pub fn train_variant(rt: Arc<Runtime>, preset: &str, variant: &str,
+pub fn train_variant(rt: Arc<dyn Executor>, preset: &str, variant: &str,
                      n: usize, seed: u64, lr: f64) -> TrainOutcome {
     train_variant_noise(rt, preset, variant, n, seed, lr, 0.5)
 }
 
-pub fn train_variant_noise(rt: Arc<Runtime>, preset: &str, variant: &str,
+pub fn train_variant_noise(rt: Arc<dyn Executor>, preset: &str, variant: &str,
                            n: usize, seed: u64, lr: f64, noise: f64)
                            -> TrainOutcome {
     let mut cfg = RunConfig::default();
@@ -56,42 +66,19 @@ pub fn train_variant_noise(rt: Arc<Runtime>, preset: &str, variant: &str,
     cfg.calib_batches = if variant == "hot" { 1 } else { 0 };
     let mut tr = Trainer::new(rt.clone(), cfg).expect("trainer");
     tr.calibrate().expect("calibrate");
-    let mut diverged = false;
-    for _ in 0..n {
-        match tr.step_once(Mode::Fused) {
-            Ok((loss, _)) if loss.is_finite() => {}
-            _ => {
-                diverged = true;
-                break;
-            }
-        }
-    }
-    let has_eval = rt.manifest.artifacts
-        .contains_key(&format!("eval_{preset}"));
-    let (el, ea) = if diverged || !has_eval {
-        (f32::NAN, f32::NAN)
-    } else {
-        tr.eval(4).unwrap_or((f32::NAN, f32::NAN))
-    };
-    TrainOutcome {
-        final_loss: tr.metrics.smoothed_loss(8).unwrap_or(f32::NAN),
-        eval_loss: el,
-        eval_acc: ea,
-        steps_per_s: tr.metrics.throughput_steps_per_s(),
-        diverged,
-    }
+    run_and_eval(rt, preset, tr, n)
 }
 
-/// Like `train_variant` but executes an explicit train-step artifact key
+/// Like `train_variant` but executes an explicit train-step key
 /// (rank-sweep variants such as `train_hot_r4_tiny`).
-pub fn train_variant_with_key(rt: Arc<Runtime>, preset: &str, key: &str,
+pub fn train_variant_with_key(rt: Arc<dyn Executor>, preset: &str, key: &str,
                               n: usize, seed: u64, lr: f64) -> TrainOutcome {
     train_variant_with_key_noise(rt, preset, key, n, seed, lr, 0.5)
 }
 
-pub fn train_variant_with_key_noise(rt: Arc<Runtime>, preset: &str, key: &str,
-                                    n: usize, seed: u64, lr: f64, noise: f64)
-                                    -> TrainOutcome {
+pub fn train_variant_with_key_noise(rt: Arc<dyn Executor>, preset: &str,
+                                    key: &str, n: usize, seed: u64, lr: f64,
+                                    noise: f64) -> TrainOutcome {
     let mut cfg = RunConfig::default();
     cfg.data_noise = noise;
     cfg.preset = preset.into();
@@ -104,6 +91,11 @@ pub fn train_variant_with_key_noise(rt: Arc<Runtime>, preset: &str, key: &str,
     cfg.calib_batches = 0;
     let mut tr = Trainer::new(rt.clone(), cfg).expect("trainer");
     tr.key_override = Some(key.to_string());
+    run_and_eval(rt, preset, tr, n)
+}
+
+fn run_and_eval(rt: Arc<dyn Executor>, preset: &str, mut tr: Trainer,
+                n: usize) -> TrainOutcome {
     let mut diverged = false;
     for _ in 0..n {
         match tr.step_once(Mode::Fused) {
@@ -114,7 +106,8 @@ pub fn train_variant_with_key_noise(rt: Arc<Runtime>, preset: &str, key: &str,
             }
         }
     }
-    let (el, ea) = if diverged {
+    let has_eval = rt.supports(&format!("eval_{preset}"));
+    let (el, ea) = if diverged || !has_eval {
         (f32::NAN, f32::NAN)
     } else {
         tr.eval(4).unwrap_or((f32::NAN, f32::NAN))

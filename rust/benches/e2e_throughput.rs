@@ -1,25 +1,42 @@
 //! End-to-end coordinator throughput (ours; no direct paper analog —
 //! this is the L3 perf gate for EXPERIMENTS.md §Perf).
 //!
-//! Measures steady-state step time for fused / split / accum modes and
-//! breaks out the coordinator's host-side overhead vs XLA execute time.
+//! Measures steady-state step time for fused / split / accum modes on
+//! the active backend (native by default — no artifacts needed), breaks
+//! out the data-generation share, and emits a machine-readable
+//! `BENCH_e2e.json` so the bench trajectory populates run over run.
 
 #[path = "common/mod.rs"]
 mod common;
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::{Mode, Trainer};
+use hot::util::json::Json;
 use hot::util::timer::Table;
 
-fn bench_mode(rt: std::sync::Arc<hot::runtime::Runtime>, preset: &str,
-              mode: Mode, steps: usize) -> (f64, f64) {
+struct ModeResult {
+    preset: String,
+    mode: &'static str,
+    step_s: f64,
+    data_s: f64,
+}
+
+fn bench_mode(rt: Arc<dyn Executor>, preset: &str, mode: Mode,
+              steps: usize) -> (f64, f64) {
     let mut cfg = RunConfig::default();
     cfg.preset = preset.into();
     cfg.variant = "hot".into();
     cfg.steps = steps;
+    cfg.batch = 16;
     cfg.calib_batches = 0;
+    if mode == Mode::Accum {
+        cfg.accum = 2; // measure real accumulation, not a degenerate loop
+    }
     let mut tr = Trainer::new(rt, cfg).expect("trainer");
     tr.step_once(mode).expect("warmup/compile");
     let t0 = Instant::now();
@@ -37,24 +54,56 @@ fn bench_mode(rt: std::sync::Arc<hot::runtime::Runtime>, preset: &str,
 }
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let steps = common::steps(12).max(4);
-    let mut t = Table::new(&["preset", "mode", "step time", "data-gen share"]);
+    let mut results: Vec<ModeResult> = Vec::new();
+    let mut t = Table::new(&["preset", "mode", "step time", "steps/s",
+                             "data-gen share"]);
     for preset in ["tiny", "small"] {
-        for (name, mode) in [("fused", Mode::Fused), ("split", Mode::Split)] {
-            if mode == Mode::Split
-                && !rt.manifest.artifacts
-                    .contains_key(&format!("fwd_hot_{preset}"))
-            {
+        for (name, mode) in [("fused", Mode::Fused), ("split", Mode::Split),
+                             ("accum", Mode::Accum)] {
+            let needed = match mode {
+                Mode::Fused => format!("train_hot_{preset}"),
+                Mode::Split => format!("fwd_hot_{preset}"),
+                Mode::Accum => format!("grad_hot_{preset}"),
+            };
+            if !rt.supports(&needed) {
                 continue;
             }
             let (step_s, data_s) = bench_mode(rt.clone(), preset, mode, steps);
             t.row(&[preset.into(), name.into(),
                     format!("{:.1} ms", step_s * 1e3),
+                    format!("{:.2}", 1.0 / step_s),
                     format!("{:.1}%", 100.0 * data_s / step_s)]);
+            results.push(ModeResult { preset: preset.into(), mode: name,
+                                      step_s, data_s });
         }
     }
-    t.print("end-to-end coordinator throughput (HOT variant)");
-    println!("note: XLA-CPU execute dominates; coordinator overhead = \
-              data-gen + literal marshalling (see EXPERIMENTS.md §Perf)");
+    t.print(&format!("end-to-end throughput (HOT variant, {} backend)",
+                     rt.name()));
+
+    // machine-readable trajectory point
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("e2e_throughput".into()));
+    root.insert("backend".to_string(), Json::Str(rt.name().into()));
+    root.insert("steps".to_string(), Json::Num(steps as f64));
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("preset".to_string(), Json::Str(r.preset.clone()));
+            m.insert("mode".to_string(), Json::Str(r.mode.into()));
+            m.insert("step_ms".to_string(), Json::Num(r.step_s * 1e3));
+            m.insert("steps_per_sec".to_string(), Json::Num(1.0 / r.step_s));
+            m.insert("datagen_share".to_string(),
+                     Json::Num(r.data_s / r.step_s));
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("results".to_string(), Json::Arr(rows));
+    let path = "BENCH_e2e.json";
+    match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -13,7 +13,7 @@ use hot::coordinator::Trainer;
 use hot::util::timer::Table;
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let mut cfg = RunConfig::default();
     cfg.preset = "small".into();
     cfg.calib_batches = 2;

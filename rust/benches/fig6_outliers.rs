@@ -10,13 +10,14 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::lqs::CalibReport;
 use hot::coordinator::Trainer;
 use hot::data::VisionDataset;
 use hot::util::timer::Table;
 
-fn calib(rt: &std::sync::Arc<hot::runtime::Runtime>, tr: &Trainer,
+fn calib(rt: &std::sync::Arc<dyn Executor>, tr: &Trainer,
          ds: &VisionDataset, outlier: Option<(usize, f32)>) -> CalibReport {
     let batch = tr.batch_size();
     let mut per_batch = Vec::new();
@@ -25,19 +26,16 @@ fn calib(rt: &std::sync::Arc<hot::runtime::Runtime>, tr: &Trainer,
             None => ds.batch(2, b, batch),
             Some((tok, gain)) => ds.batch_with_outlier(2, b, batch, tok, gain),
         };
-        let mut args = tr.params.clone();
-        args.push(x);
-        args.push(y);
-        let outs = rt.execute(&format!("calib_{}", tr.cfg.preset), &args)
+        let outs = rt.calib_step(&format!("calib_{}", tr.cfg.preset),
+                                 &tr.params, &x, &y)
             .expect("calib");
-        per_batch.push(outs.iter()
-            .map(|v| v.as_f32().unwrap().to_vec()).collect::<Vec<_>>());
+        per_batch.push(outs);
     }
     CalibReport::from_batches(&tr.preset.qlinears, &per_batch, 0.5).unwrap()
 }
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let mut cfg = RunConfig::default();
     cfg.preset = "small".into();
     let tr = Trainer::new(rt.clone(), cfg).expect("trainer");

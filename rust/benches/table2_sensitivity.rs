@@ -15,7 +15,7 @@ use hot::util::timer::Table;
 const NOISE: f64 = 6.0; // hard-mode task (FP ~0.75 at tiny scale)
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let n = common::steps(120);
     let rows: &[(&str, &str, &str, f64)] = &[
         // (variant, gx label, gw label, paper acc)

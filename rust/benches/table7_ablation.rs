@@ -16,7 +16,7 @@ use hot::costmodel::{breakdown, MemMethod, Method};
 use hot::latsim::{avg_speedup, RTX_3090};
 use hot::util::timer::Table;
 
-fn train_acc(rt: std::sync::Arc<hot::runtime::Runtime>, lqs: bool,
+fn train_acc(rt: std::sync::Arc<dyn hot::backend::Executor>, lqs: bool,
              n: usize) -> f32 {
     let mut cfg = RunConfig::default();
     cfg.preset = "tiny".into();
@@ -35,7 +35,7 @@ fn train_acc(rt: std::sync::Arc<hot::runtime::Runtime>, lqs: bool,
 }
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let n = common::steps(100);
     let spec = vit_b();
     let vit_layers: Vec<Layer> =

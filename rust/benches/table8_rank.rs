@@ -6,12 +6,13 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use hot::backend::Executor;
 use hot::costmodel::zoo::efficientformer_l1;
 use hot::costmodel::{model_bops, Method};
 use hot::util::timer::Table;
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let n = common::steps(120);
     let spec = efficientformer_l1();
     let paper: &[(usize, f64, f64)] = &[
@@ -27,7 +28,7 @@ fn main() {
     for (r, p_cost, p_acc) in paper {
         let key = if *r == 8 { "train_hot_tiny".to_string() }
                   else { format!("train_hot_r{r}_tiny") };
-        assert!(rt.manifest.artifacts.contains_key(&key), "missing {key}");
+        assert!(rt.supports(&key), "missing {key}");
         let variant_steps = common::train_variant_with_key_noise(
             rt.clone(), "tiny", &key, n, 5, 3e-3, 6.0);
         let bops = model_bops(&spec.layers, Method::Hot { rank: *r }) as f64

@@ -12,7 +12,7 @@ use hot::config::RunConfig;
 use hot::coordinator::LoraTrainer;
 use hot::util::timer::Table;
 
-fn run(rt: std::sync::Arc<hot::runtime::Runtime>, key: &str, n: usize)
+fn run(rt: std::sync::Arc<dyn hot::backend::Executor>, key: &str, n: usize)
        -> (f32, bool) {
     let mut cfg = RunConfig::default();
     cfg.preset = "small".into();
@@ -34,7 +34,7 @@ fn run(rt: std::sync::Arc<hot::runtime::Runtime>, key: &str, n: usize)
 }
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let n = common::steps(80);
     let rows: &[(&str, &str, &str, f64)] = &[
         ("lora_fp_small", "x", "x", 92.61),

@@ -9,10 +9,11 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use hot::backend::Executor;
 use hot::util::timer::Table;
 
 fn main() {
-    let rt = common::runtime_or_exit();
+    let rt = common::executor_or_exit();
     let n = common::steps(100);
     let variants = ["fp", "hot", "lbp", "luq", "int4"];
 
@@ -35,7 +36,7 @@ fn main() {
                 continue;
             }
             let key = format!("train_{v}_{preset}");
-            if !rt.manifest.artifacts.contains_key(&key) {
+            if !rt.supports(&key) {
                 continue;
             }
             let o = common::train_variant(rt.clone(), preset, v, n, 3, *lr);

@@ -1,0 +1,318 @@
+//! Execution backends — the `Executor` trait abstracts "run a
+//! train/fwd/bwd/opt step" so the coordinator, benches and tests are
+//! agnostic to *where* the math happens:
+//!
+//!   * `NativeBackend` (default): pure-rust forward/backward/optimizer
+//!     built on `tensor`/`hadamard`/`quant` — self-contained, no
+//!     artifacts, no PJRT. This is what `cargo test` exercises.
+//!   * `runtime::Runtime` (behind the non-default `pjrt` feature): the
+//!     original AOT-artifact path — HLO text compiled once through the
+//!     PJRT CPU client, executed many times.
+//!
+//! Both speak the same "artifact key" naming scheme
+//! (`train_{variant}_{preset}`, `fwd_…`, `bwd_…`, `grad_…`,
+//! `opt_{preset}`, `eval_{preset}`, `calib_{preset}`,
+//! `lora_{tag}_{preset}`, `kernel_*_demo`) so run configs, benches and
+//! checkpoints are portable across backends. See DESIGN.md §Backends for
+//! the execution matrix.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+pub use native::NativeBackend;
+
+use crate::runtime::manifest::{CtxSpec, Preset, TensorSpec};
+use crate::runtime::value::Value;
+
+/// Output of a fused train / LoRA step: refreshed state + step metrics.
+#[derive(Debug)]
+pub struct StepOut {
+    pub params: Vec<Value>,
+    pub m: Vec<Value>,
+    pub v: Vec<Value>,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Output of a split-mode forward: metrics + the saved-for-backward ctx
+/// tensors (HOT+ABC entries arrive HLA+INT8 compressed) and their specs
+/// for the `CtxStore`'s byte accounting.
+#[derive(Debug)]
+pub struct ForwardOut {
+    pub loss: f32,
+    pub acc: f32,
+    pub ctx: Vec<Value>,
+    pub ctx_specs: Vec<CtxSpec>,
+}
+
+/// Output of a gradient-only step (accumulation mode).
+#[derive(Debug)]
+pub struct GradOut {
+    pub grads: Vec<Value>,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Static description of a LoRA fine-tuning step's trainable set.
+#[derive(Debug, Clone)]
+pub struct LoraMeta {
+    pub preset: String,
+    pub trainable: Vec<TensorSpec>,
+    pub batch: Option<usize>,
+}
+
+/// One execution backend. All tensor traffic uses `Value` (the host
+/// format both backends share); parameter vectors are always in the
+/// preset's manifest order (sorted names).
+///
+/// Deliberately NOT `Send`/`Sync`: real PJRT clients hold `Rc`
+/// internals, so executors are single-threaded by contract (the
+/// coordinator never shares one across threads).
+pub trait Executor {
+    /// Short backend id: "native" or "pjrt".
+    fn name(&self) -> &'static str;
+
+    /// Human-readable summary for `hot info`.
+    fn describe(&self) -> String;
+
+    fn preset_names(&self) -> Vec<String>;
+
+    fn preset(&self, name: &str) -> Result<Preset>;
+
+    /// Initial parameter values for a preset (deterministic per backend).
+    fn init_params(&self, preset: &str) -> Result<Vec<Value>>;
+
+    /// Batch size used when nothing pins it.
+    fn default_batch(&self) -> usize;
+
+    /// Whether this backend can run `key`.
+    fn supports(&self, key: &str) -> bool;
+
+    /// Batch size pinned by a compiled artifact (PJRT graphs are
+    /// shape-static). `None` means the caller picks (native backend).
+    fn key_batch(&self, key: &str) -> Option<usize>;
+
+    /// Fused step: forward + backward + AdamW in one call.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(&self, key: &str, params: &[Value], m: &[Value],
+                  v: &[Value], step: f32, lr: f32, lqs_mask: &[f32],
+                  x: &Value, y: &Value) -> Result<StepOut>;
+
+    /// Split-mode forward: emits the saved ctx instead of applying it.
+    fn forward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                    x: &Value, y: &Value) -> Result<ForwardOut>;
+
+    /// Split-mode backward: consumes the ctx, returns grads (param order).
+    fn backward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                     x: &Value, ctx: Vec<Value>) -> Result<Vec<Value>>;
+
+    /// Gradient-only step for microbatch accumulation.
+    fn grad_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                 x: &Value, y: &Value) -> Result<GradOut>;
+
+    /// AdamW: returns (params, m, v).
+    #[allow(clippy::too_many_arguments)]
+    fn opt_step(&self, key: &str, params: &[Value], grads: &[Value],
+                m: &[Value], v: &[Value], step: f32, lr: f32)
+                -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)>;
+
+    /// FP forward over an eval batch: (loss, acc).
+    fn eval_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
+                 -> Result<(f32, f32)>;
+
+    /// LQS calibration: the 7 per-qlinear diagnostic vectors (model
+    /// order) — mse_tensor, mse_token, outlier, gx_err_hq, gx_err_hla,
+    /// gw_err_hq, gw_err_hla.
+    fn calib_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
+                  -> Result<Vec<Vec<f32>>>;
+
+    /// Trainable-set description for a LoRA step key.
+    fn lora_meta(&self, key: &str) -> Result<LoraMeta>;
+
+    /// LoRA fused step (frozen base): returns refreshed trainable state.
+    #[allow(clippy::too_many_arguments)]
+    fn lora_step(&self, key: &str, base: &[Value], trainable: &[Value],
+                 m: &[Value], v: &[Value], step: f32, lr: f32,
+                 lqs_mask: &[f32], x: &Value, y: &Value) -> Result<StepOut>;
+
+    /// Raw execution for kernel demos / debug tooling. PJRT runs any
+    /// artifact; native mirrors the `kernel_*_demo` entries.
+    fn execute_raw(&self, key: &str, args: &[Value]) -> Result<Vec<Value>>;
+}
+
+// ---------------------------------------------------------------------------
+// Key grammar shared by both backends
+// ---------------------------------------------------------------------------
+
+/// Step-key kinds; `tag` carries the backward-variant string where the
+/// kind has one (e.g. "hot", "hot_r4", "fp", "hotfrozen").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepKey {
+    Train { tag: String, preset: String },
+    Fwd { tag: String, preset: String },
+    Bwd { tag: String, preset: String },
+    Grad { tag: String, preset: String },
+    Opt { preset: String },
+    Eval { preset: String },
+    Calib { preset: String },
+    Lora { tag: String, preset: String },
+    Kernel { name: String },
+}
+
+impl StepKey {
+    /// Parse a key against a list of known preset names (presets may
+    /// contain underscores — match the longest suffix).
+    pub fn parse(key: &str, presets: &[String]) -> Result<StepKey> {
+        if let Some(name) = key.strip_prefix("kernel_") {
+            return Ok(StepKey::Kernel { name: name.to_string() });
+        }
+        let (kind, rest) = match key.split_once('_') {
+            Some(p) => p,
+            None => bail!("unparseable step key {key:?}"),
+        };
+        let find_preset = |rest: &str| -> Option<(String, String)> {
+            // longest preset suffix wins ("lm_tiny" over "tiny")
+            let mut best: Option<&String> = None;
+            for p in presets {
+                let matches = rest == p.as_str()
+                    || rest.ends_with(&format!("_{p}"));
+                if matches && best.map(|b| p.len() > b.len()).unwrap_or(true) {
+                    best = Some(p);
+                }
+            }
+            best.map(|p| {
+                let tag = if rest.len() == p.len() {
+                    String::new()
+                } else {
+                    rest[..rest.len() - p.len() - 1].to_string()
+                };
+                (tag, p.clone())
+            })
+        };
+        let parsed = find_preset(rest);
+        let (tag, preset) = match parsed {
+            Some(tp) => tp,
+            None => bail!("step key {key:?} names no known preset \
+                           (have: {presets:?})"),
+        };
+        Ok(match kind {
+            "train" => StepKey::Train { tag, preset },
+            "fwd" => StepKey::Fwd { tag, preset },
+            "bwd" => StepKey::Bwd { tag, preset },
+            "grad" => StepKey::Grad { tag, preset },
+            "opt" => StepKey::Opt { preset },
+            "eval" => StepKey::Eval { preset },
+            "calib" => StepKey::Calib { preset },
+            "lora" => StepKey::Lora { tag, preset },
+            other => bail!("unknown step kind {other:?} in key {key:?}"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Factory
+// ---------------------------------------------------------------------------
+
+/// Construct a backend by name: "native", "pjrt", or "auto" (pjrt when
+/// compiled in *and* the artifact dir exists; native otherwise).
+pub fn by_name(backend: &str, artifacts: &str) -> Result<Arc<dyn Executor>> {
+    match backend {
+        "native" => Ok(Arc::new(NativeBackend::new())),
+        "pjrt" => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Arc::new(crate::runtime::Runtime::new(artifacts)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifacts;
+                bail!("this binary was built without the `pjrt` feature; \
+                       rebuild with `--features pjrt` or use --backend native")
+            }
+        }
+        "auto" => {
+            #[cfg(feature = "pjrt")]
+            {
+                if crate::runtime::manifest::artifacts_available(artifacts) {
+                    // a failing PJRT bring-up (e.g. the offline xla stub)
+                    // must not take down auto mode — native always works
+                    match crate::runtime::Runtime::new(artifacts) {
+                        Ok(rt) => return Ok(Arc::new(rt)),
+                        Err(e) => crate::warn_!(
+                            "auto backend: PJRT unavailable ({e}); \
+                             falling back to native"),
+                    }
+                }
+            }
+            let _ = artifacts;
+            Ok(Arc::new(NativeBackend::new()))
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt|auto)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn presets() -> Vec<String> {
+        ["tiny", "small", "lm_tiny", "mlp_small"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    #[test]
+    fn parses_train_keys() {
+        let k = StepKey::parse("train_hot_tiny", &presets()).unwrap();
+        assert_eq!(k, StepKey::Train { tag: "hot".into(), preset: "tiny".into() });
+        let k = StepKey::parse("train_hot_r4_tiny", &presets()).unwrap();
+        assert_eq!(k, StepKey::Train { tag: "hot_r4".into(), preset: "tiny".into() });
+    }
+
+    #[test]
+    fn longest_preset_suffix_wins() {
+        let k = StepKey::parse("train_hot_lm_tiny", &presets()).unwrap();
+        assert_eq!(k, StepKey::Train { tag: "hot".into(), preset: "lm_tiny".into() });
+        let k = StepKey::parse("grad_gx_int_hla_mlp_small", &presets()).unwrap();
+        assert_eq!(k, StepKey::Grad { tag: "gx_int_hla".into(),
+                                      preset: "mlp_small".into() });
+    }
+
+    #[test]
+    fn tagless_kinds() {
+        assert_eq!(StepKey::parse("opt_tiny", &presets()).unwrap(),
+                   StepKey::Opt { preset: "tiny".into() });
+        assert_eq!(StepKey::parse("eval_lm_tiny", &presets()).unwrap(),
+                   StepKey::Eval { preset: "lm_tiny".into() });
+        assert_eq!(StepKey::parse("calib_small", &presets()).unwrap(),
+                   StepKey::Calib { preset: "small".into() });
+    }
+
+    #[test]
+    fn lora_and_kernel_keys() {
+        assert_eq!(StepKey::parse("lora_hotfrozen_small", &presets()).unwrap(),
+                   StepKey::Lora { tag: "hotfrozen".into(), preset: "small".into() });
+        assert_eq!(StepKey::parse("kernel_hq_demo", &presets()).unwrap(),
+                   StepKey::Kernel { name: "hq_demo".into() });
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(StepKey::parse("train_hot_nopreset", &presets()).is_err());
+        assert!(StepKey::parse("bogus", &presets()).is_err());
+        assert!(StepKey::parse("frob_hot_tiny", &presets()).is_err());
+    }
+
+    #[test]
+    fn factory_native_always_works() {
+        let b = by_name("native", "artifacts").unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(by_name("frobnicate", "artifacts").is_err());
+    }
+}

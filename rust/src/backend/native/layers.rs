@@ -1,0 +1,1098 @@
+//! Native layer primitives with explicit forward/backward — the rust
+//! port of python/compile/layers.py (+ the kernels/ref.py oracles),
+//! built on the `hadamard`/`quant` mirrors so both backends share one
+//! set of bit-level quantizer semantics.
+//!
+//! All qlinears operate on flattened (N = B*L, D) row-major slices.
+//! Forward is always exact FP32; the `variant` selects how each gradient
+//! GEMM is approximated (HQ on the input-gradient path, HLA+INT8 on the
+//! weight-gradient path for HOT) and what the saved ctx looks like
+//! (HLA+INT8-compressed activations under ABC).
+
+use anyhow::{bail, Result};
+
+use crate::hadamard::lowpass::Criterion;
+use crate::hadamard::{block_hla_axis0, block_hla_expand_axis0, fwht, BLOCK};
+use crate::quant;
+
+// ---------------------------------------------------------------------------
+// Backward configuration (config.py BackwardConfig)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Fp,
+    Hot,
+    Lbp,
+    Luq,
+    Int4,
+    GxHq4,
+    GxQ4,
+    GxExtHla,
+    GxIntHla,
+    GwHq4,
+    GwHla,
+    GwHot,
+}
+
+impl Variant {
+    /// Base-variant names, longest first so prefix matching is unambiguous
+    /// ("gx_int_hla" before "gx_hq4" before implicit separators).
+    const NAMES: [(&'static str, Variant); 12] = [
+        ("gx_ext_hla", Variant::GxExtHla),
+        ("gx_int_hla", Variant::GxIntHla),
+        ("gx_hq4", Variant::GxHq4),
+        ("gw_hq4", Variant::GwHq4),
+        ("gw_hla", Variant::GwHla),
+        ("gw_hot", Variant::GwHot),
+        ("gx_q4", Variant::GxQ4),
+        ("int4", Variant::Int4),
+        ("hot", Variant::Hot),
+        ("lbp", Variant::Lbp),
+        ("luq", Variant::Luq),
+        ("fp", Variant::Fp),
+    ];
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BackwardCfg {
+    pub variant: Variant,
+    pub rank: usize,
+    pub gx_bits: u8,
+    pub gw_bits: u8,
+    pub abc: bool,
+    pub criterion: Criterion,
+}
+
+impl Default for BackwardCfg {
+    fn default() -> Self {
+        BackwardCfg { variant: Variant::Hot, rank: 8, gx_bits: 4, gw_bits: 8,
+                      abc: true, criterion: Criterion::Sequency }
+    }
+}
+
+impl BackwardCfg {
+    /// Parse a variant tag like "hot", "hot_r4", "hot_noabc", "gx_int_hla"
+    /// (the artifact-key grammar of BackwardConfig.tag()).
+    pub fn parse(tag: &str) -> Result<BackwardCfg> {
+        let mut best: Option<(&str, Variant)> = None;
+        for (name, v) in Variant::NAMES {
+            let ok = tag == name || tag.starts_with(&format!("{name}_"));
+            if ok && best.map(|(b, _)| name.len() > b.len()).unwrap_or(true) {
+                best = Some((name, v));
+            }
+        }
+        let (name, variant) = match best {
+            Some(b) => b,
+            None => bail!("unknown backward variant tag {tag:?}"),
+        };
+        let mut cfg = BackwardCfg { variant, ..BackwardCfg::default() };
+        if tag.len() > name.len() {
+            for part in tag[name.len() + 1..].split('_') {
+                if part == "noabc" {
+                    cfg.abc = false;
+                } else if part == "pallas" {
+                    // pallas-vs-ref kernel routing is an artifact-side
+                    // distinction; semantics are identical host-side
+                } else if let Some(r) = part.strip_prefix('r') {
+                    let r: usize = r.parse()
+                        .map_err(|_| anyhow::anyhow!("bad rank in {tag:?}"))?;
+                    if !(1..=BLOCK).contains(&r) {
+                        bail!("rank {r} outside [1, {BLOCK}] in tag {tag:?}");
+                    }
+                    cfg.rank = r;
+                } else {
+                    bail!("unknown variant suffix {part:?} in tag {tag:?}");
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Whether ABC compresses a qlinear's saved activations at this row
+    /// count. THE single source of truth for the split-mode wire format:
+    /// `qlinear_fwd` (what the forward saves) and `model::ctx_layout`
+    /// (what the backward expects) both key off it.
+    pub fn compresses(&self, rows: usize) -> bool {
+        matches!(self.variant, Variant::Hot | Variant::GwHot)
+            && self.abc
+            && rows % BLOCK == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels (row-major; debug-friendly loop nests)
+// ---------------------------------------------------------------------------
+
+/// y = x @ w.T: x (n, k), w (m, k) -> (n, m).
+pub fn matmul_nt(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), m * k);
+    let mut out = vec![0.0f32; n * m];
+    for r in 0..n {
+        let xr = &x[r * k..(r + 1) * k];
+        let dst = &mut out[r * m..(r + 1) * m];
+        for (c, d) in dst.iter_mut().enumerate() {
+            let wr = &w[c * k..(c + 1) * k];
+            let mut acc = 0.0f32;
+            for (a, b) in xr.iter().zip(wr) {
+                acc += a * b;
+            }
+            *d = acc;
+        }
+    }
+    out
+}
+
+/// a @ b: a (n, k), b (k, m) -> (n, m). Skips zero lhs entries (the LM
+/// one-hot embedding makes this effectively O(n*m)).
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for r in 0..n {
+        for p in 0..k {
+            let av = a[r * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * m..(p + 1) * m];
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// a.T @ b: a (k, n), b (k, m) -> (n, m).
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for p in 0..k {
+        let arow = &a[p * n..(p + 1) * n];
+        let brow = &b[p * m..(p + 1) * m];
+        for (r, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Integer GEMM a @ b with i32 accumulation: a (n, k), b (k, m) i8.
+pub fn matmul_i8_nn(a: &[i8], b: &[i8], n: usize, k: usize, m: usize) -> Vec<i32> {
+    let mut out = vec![0i32; n * m];
+    for r in 0..n {
+        for p in 0..k {
+            let av = a[r * k + p] as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[p * m..(p + 1) * m];
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, &bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Integer GEMM a.T @ b with i32 accumulation: a (k, n), b (k, m) i8.
+pub fn matmul_i8_tn(a: &[i8], b: &[i8], k: usize, n: usize, m: usize) -> Vec<i32> {
+    let mut out = vec![0i32; n * m];
+    for p in 0..k {
+        let arow = &a[p * n..(p + 1) * n];
+        let brow = &b[p * m..(p + 1) * m];
+        for (r, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, &bv) in dst.iter_mut().zip(brow) {
+                *d += av as i32 * bv as i32;
+            }
+        }
+    }
+    out
+}
+
+pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = a[r * cols + c];
+        }
+    }
+    out
+}
+
+fn dequant_i32(acc: &[i32], scale: f32) -> Vec<f32> {
+    acc.iter().map(|&v| v as f32 * scale).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Kernel oracles (kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+/// HQ matmul: g_x = Q(g_y Hᵀ) · Q(H w) — HT along the contracted O dim,
+/// pseudo-stochastic INT quant, int32 accumulation (ref.hq_matmul_ref).
+pub fn hq_matmul(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
+                 bits: u8) -> Vec<f32> {
+    let mut gy_t = gy.to_vec();
+    fwht::block_fwht_rows(&mut gy_t, n, o);
+    let mut w_t = w.to_vec();
+    fwht::block_fwht_cols(&mut w_t, o, i);
+    let s_g = quant::minmax_scale(&gy_t, bits);
+    let s_w = quant::minmax_scale(&w_t, bits);
+    let q_g = quant::quantize_ps(&gy_t, s_g, bits);
+    let q_w = quant::quantize_ps(&w_t, s_w, bits);
+    dequant_i32(&matmul_i8_nn(&q_g, &q_w, n, o, i), s_g * s_w)
+}
+
+/// ABC's forward-time compression: HLA along N then INT quant
+/// (ref.hla_compress_ref). Returns (q (n/16*rank, cols), scale).
+pub fn hla_compress(x: &[f32], n: usize, cols: usize, rank: usize, bits: u8,
+                    criterion: Criterion) -> (Vec<i8>, f32) {
+    let xc = block_hla_axis0(x, n, cols, rank, criterion);
+    let s = quant::minmax_scale(&xc, bits);
+    (quant::quantize_ps(&xc, s, bits), s)
+}
+
+/// HOT's g_w = (H-hat g_y)ᵀ · (H-hat x), both INT8 (ref.hla_matmul_ref).
+/// `per_token` selects row scales on the compressed g_y.
+#[allow(clippy::too_many_arguments)]
+pub fn hla_matmul(gy: &[f32], n: usize, o: usize, xq: &[i8], sx: f32,
+                  i: usize, rank: usize, bits: u8, per_token: bool,
+                  criterion: Criterion) -> Vec<f32> {
+    let gc = block_hla_axis0(gy, n, o, rank, criterion);
+    let nc = n / BLOCK * rank;
+    debug_assert_eq!(xq.len(), nc * i);
+    if per_token {
+        // row scales live on the contracted dim: dequantize first, FP GEMM
+        let s_k = quant::minmax_scale_rows(&gc, nc, o, bits);
+        let mut g_deq = vec![0.0f32; nc * o];
+        for r in 0..nc {
+            let s = s_k[r];
+            for c in 0..o {
+                let q = quant::quantize_ps_one(gc[r * o + c], s, bits);
+                g_deq[r * o + c] = q as f32 * s;
+            }
+        }
+        let xf: Vec<f32> = xq.iter().map(|&q| q as f32).collect();
+        let mut out = matmul_tn(&g_deq, &xf, nc, o, i);
+        for v in out.iter_mut() {
+            *v *= sx;
+        }
+        out
+    } else {
+        let s_t = quant::minmax_scale(&gc, bits);
+        let q_t = quant::quantize_ps(&gc, s_t, bits);
+        dequant_i32(&matmul_i8_tn(&q_t, xq, nc, o, i), s_t * sx)
+    }
+}
+
+/// LBP-WHT's g_x: external HLA on N — H-hatᵀ(H-hat g_y)w (ref.lbp_gx_ref).
+pub fn lbp_gx(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
+              rank: usize) -> Vec<f32> {
+    let gc = block_hla_axis0(gy, n, o, rank, Criterion::Sequency);
+    let nc = n / BLOCK * rank;
+    let out = matmul(&gc, w, nc, o, i);
+    block_hla_expand_axis0(&out, nc, i, rank, Criterion::Sequency)
+}
+
+/// LBP-WHT's g_w: internal HLA along N, FP arithmetic (ref.lbp_gw_ref).
+pub fn lbp_gw(gy: &[f32], n: usize, o: usize, x: &[f32], i: usize,
+              rank: usize) -> Vec<f32> {
+    let gc = block_hla_axis0(gy, n, o, rank, Criterion::Sequency);
+    let xc = block_hla_axis0(x, n, i, rank, Criterion::Sequency);
+    let nc = n / BLOCK * rank;
+    matmul_tn(&gc, &xc, nc, o, i)
+}
+
+/// Fake-quant (quantize -> dequantize) with a per-tensor min-max scale.
+pub fn fake_quant(x: &[f32], bits: u8) -> Vec<f32> {
+    let s = quant::minmax_scale(x, bits);
+    x.iter()
+        .map(|&v| quant::quantize_ps_one(v, s, bits) as f32 * s)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// qlinear: y = x @ w.T + b — the paper's object of study
+// ---------------------------------------------------------------------------
+
+/// Saved-for-backward state of one qlinear (the paper's CTX entry).
+#[derive(Debug, Clone)]
+pub struct QlCtx {
+    /// raw FP activations (kept by fp/lbp/luq/int4/ablation variants and
+    /// by HOT when ABC is off or the layer doesn't tile)
+    pub x: Option<Vec<f32>>,
+    /// HLA+INT8 compressed activations + scale (HOT with ABC)
+    pub xq: Option<(Vec<i8>, f32)>,
+    pub n: usize,
+    pub i: usize,
+}
+
+/// Forward (always exact FP32) + build the saved ctx.
+pub fn qlinear_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
+                   bias: &[f32], cfg: &BackwardCfg) -> (Vec<f32>, QlCtx) {
+    let mut y = matmul_nt(x, w, n, i, o);
+    for r in 0..n {
+        let row = &mut y[r * o..(r + 1) * o];
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+    let ctx = if cfg.compresses(n) {
+        let (xq, sx) = hla_compress(x, n, i, cfg.rank, cfg.gw_bits,
+                                    cfg.criterion);
+        QlCtx { x: None, xq: Some((xq, sx)), n, i }
+    } else {
+        QlCtx { x: Some(x.to_vec()), xq: None, n, i }
+    };
+    (y, ctx)
+}
+
+fn gx_q4_noht(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
+              bits: u8) -> Vec<f32> {
+    let s_g = quant::minmax_scale(gy, bits);
+    let s_w = quant::minmax_scale(w, bits);
+    let q_g = quant::quantize_ps(gy, s_g, bits);
+    let q_w = quant::quantize_ps(w, s_w, bits);
+    dequant_i32(&matmul_i8_nn(&q_g, &q_w, n, o, i), s_g * s_w)
+}
+
+fn gx_int_hla(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
+              rank: usize) -> Vec<f32> {
+    // internal HLA over the contracted O dim (Table 2's worst row)
+    let gy_t = transpose(gy, n, o); // (o, n)
+    let gct = block_hla_axis0(&gy_t, o, n, rank, Criterion::Sequency);
+    let oc = o / BLOCK * rank;
+    let gc = transpose(&gct, oc, n); // (n, oc)
+    let wc = block_hla_axis0(w, o, i, rank, Criterion::Sequency); // (oc, i)
+    matmul(&gc, &wc, n, oc, i)
+}
+
+fn gw_hot(gy: &[f32], n: usize, o: usize, ctx: &QlCtx, cfg: &BackwardCfg,
+          pt_flag: f32) -> Vec<f32> {
+    let owned;
+    let (xq, sx): (&[i8], f32) = match &ctx.xq {
+        Some((q, s)) => (q, *s),
+        None => {
+            let x = ctx.x.as_ref().expect("qlinear ctx holds x or xq");
+            owned = hla_compress(x, n, ctx.i, cfg.rank, cfg.gw_bits,
+                                 cfg.criterion);
+            (&owned.0, owned.1)
+        }
+    };
+    hla_matmul(gy, n, o, xq, sx, ctx.i, cfg.rank, cfg.gw_bits,
+               pt_flag > 0.5, cfg.criterion)
+}
+
+fn gw_hq4(gy: &[f32], n: usize, o: usize, x: &[f32], i: usize) -> Vec<f32> {
+    let mut gy_t = gy.to_vec();
+    fwht::block_fwht_cols(&mut gy_t, n, o);
+    let mut x_t = x.to_vec();
+    fwht::block_fwht_cols(&mut x_t, n, i);
+    let s_g = quant::minmax_scale(&gy_t, 4);
+    let s_x = quant::minmax_scale(&x_t, 4);
+    let q_g = quant::quantize_ps(&gy_t, s_g, 4);
+    let q_x = quant::quantize_ps(&x_t, s_x, 4);
+    dequant_i32(&matmul_i8_tn(&q_g, &q_x, n, o, i), s_g * s_x)
+}
+
+fn luq_pair(gy: &[f32], other: &[f32], bits_other: u8) -> (Vec<f32>, Vec<f32>) {
+    let g_q = quant::quantize_luq(gy, 4);
+    let s_o = quant::minmax_scale(other, bits_other);
+    let o_q: Vec<f32> = other
+        .iter()
+        .map(|&v| quant::quantize_ps_one(v, s_o, bits_other) as f32 * s_o)
+        .collect();
+    (g_q, o_q)
+}
+
+/// Backward for y = x w.T + b: (g_x, g_w, g_b). g_b is always exact (the
+/// paper never quantizes bias gradients). `need_gx = false` skips the
+/// input-gradient GEMM (the first layer's g_x is never consumed).
+#[allow(clippy::too_many_arguments)]
+pub fn qlinear_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
+                   ctx: &QlCtx, cfg: &BackwardCfg, pt_flag: f32,
+                   need_gx: bool) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
+    use Variant::*;
+    debug_assert_eq!(gy.len(), n * o);
+    debug_assert_eq!(w.len(), o * i);
+
+    let mut g_b = vec![0.0f32; o];
+    for r in 0..n {
+        for (c, gb) in g_b.iter_mut().enumerate() {
+            *gb += gy[r * o + c];
+        }
+    }
+
+    let can_o = o % BLOCK == 0;
+    let can_n = n % BLOCK == 0;
+    let v = cfg.variant;
+
+    // --- g_x (needs w) --------------------------------------------------
+    let g_x = if !need_gx {
+        None
+    } else {
+        Some(match v {
+            Hot | GxHq4 if !can_o => matmul(gy, w, n, o, i),
+            Lbp | GxExtHla if !can_n => matmul(gy, w, n, o, i),
+            GxIntHla if !can_o => matmul(gy, w, n, o, i),
+            Hot | GxHq4 => hq_matmul(gy, n, o, w, i, cfg.gx_bits),
+            GxQ4 => gx_q4_noht(gy, n, o, w, i, cfg.gx_bits),
+            Lbp | GxExtHla => lbp_gx(gy, n, o, w, i, cfg.rank),
+            GxIntHla => gx_int_hla(gy, n, o, w, i, cfg.rank),
+            Luq => {
+                let (g_q, w_q) = luq_pair(gy, w, 4);
+                matmul(&g_q, &w_q, n, o, i)
+            }
+            Int4 => gx_q4_noht(gy, n, o, w, i, 4),
+            Fp | GwHq4 | GwHla | GwHot => matmul(gy, w, n, o, i),
+        })
+    };
+
+    // --- g_w (needs saved x / compressed x) -------------------------------
+    fn raw_of(ctx: &QlCtx) -> &[f32] {
+        ctx.x.as_deref().expect("variant requires raw ctx activations")
+    }
+    let g_w = match v {
+        Hot | GwHot | Lbp | GwHla | GwHq4 if !can_n => {
+            matmul_tn(gy, raw_of(ctx), n, o, i)
+        }
+        Hot | GwHot => gw_hot(gy, n, o, ctx, cfg, pt_flag),
+        Lbp | GwHla => lbp_gw(gy, n, o, raw_of(ctx), i, cfg.rank),
+        GwHq4 => gw_hq4(gy, n, o, raw_of(ctx), i),
+        Luq => {
+            let (g_q, x_q) = luq_pair(gy, raw_of(ctx), 4);
+            matmul_tn(&g_q, &x_q, n, o, i)
+        }
+        Int4 => {
+            let x = raw_of(ctx);
+            let s_g = quant::minmax_scale(gy, 4);
+            let s_x = quant::minmax_scale(x, 4);
+            let q_g = quant::quantize_ps(gy, s_g, 4);
+            let q_x = quant::quantize_ps(x, s_x, 4);
+            dequant_i32(&matmul_i8_tn(&q_g, &q_x, n, o, i), s_g * s_x)
+        }
+        Fp | GxHq4 | GxQ4 | GxExtHla | GxIntHla => {
+            matmul_tn(gy, raw_of(ctx), n, o, i)
+        }
+    };
+    (g_x, g_w, g_b)
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm (FP; HOT leaves normalization untouched)
+// ---------------------------------------------------------------------------
+
+pub struct LnCtx {
+    pub xhat: Vec<f32>, // (rows, d)
+    pub rstd: Vec<f32>, // (rows,)
+}
+
+pub fn layernorm_fwd(x: &[f32], rows: usize, d: usize, gamma: &[f32],
+                     beta: &[f32]) -> (Vec<f32>, LnCtx) {
+    let eps = 1e-5f32;
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut rstd = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>()
+            / d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        rstd[r] = rs;
+        for c in 0..d {
+            let xh = (row[c] - mu) * rs;
+            xhat[r * d + c] = xh;
+            y[r * d + c] = xh * gamma[c] + beta[c];
+        }
+    }
+    (y, LnCtx { xhat, rstd })
+}
+
+/// Returns (g_x, g_gamma, g_beta).
+pub fn layernorm_bwd(gy: &[f32], rows: usize, d: usize, gamma: &[f32],
+                     ctx: &LnCtx) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut g_gamma = vec![0.0f32; d];
+    let mut g_beta = vec![0.0f32; d];
+    let mut g_x = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let gr = &gy[r * d..(r + 1) * d];
+        let xh = &ctx.xhat[r * d..(r + 1) * d];
+        let mut mean_gh = 0.0f32;
+        let mut mean_ghx = 0.0f32;
+        for c in 0..d {
+            let gh = gr[c] * gamma[c];
+            g_gamma[c] += gr[c] * xh[c];
+            g_beta[c] += gr[c];
+            mean_gh += gh;
+            mean_ghx += gh * xh[c];
+        }
+        mean_gh /= d as f32;
+        mean_ghx /= d as f32;
+        let rs = ctx.rstd[r];
+        for c in 0..d {
+            let gh = gr[c] * gamma[c];
+            g_x[r * d + c] = (gh - mean_gh - xh[c] * mean_ghx) * rs;
+        }
+    }
+    (g_x, g_gamma, g_beta)
+}
+
+// ---------------------------------------------------------------------------
+// GELU (tanh approximation, as in ViT/timm)
+// ---------------------------------------------------------------------------
+
+const K0: f32 = 0.797_884_56; // sqrt(2/pi)
+const K1: f32 = 0.044_715;
+
+pub struct GeluCtx {
+    pub x: Vec<f32>,
+    pub t: Vec<f32>,
+}
+
+pub fn gelu_fwd(x: &[f32]) -> (Vec<f32>, GeluCtx) {
+    let t: Vec<f32> = x.iter().map(|&v| (K0 * (v + K1 * v * v * v)).tanh())
+        .collect();
+    let y: Vec<f32> = x.iter().zip(&t).map(|(&v, &tt)| 0.5 * v * (1.0 + tt))
+        .collect();
+    (y, GeluCtx { x: x.to_vec(), t })
+}
+
+pub fn gelu_bwd(gy: &[f32], ctx: &GeluCtx) -> Vec<f32> {
+    gy.iter()
+        .zip(ctx.x.iter().zip(&ctx.t))
+        .map(|(&g, (&x, &t))| {
+            let dt = (1.0 - t * t) * K0 * (1.0 + 3.0 * K1 * x * x);
+            g * (0.5 * (1.0 + t) + 0.5 * x * dt)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Multi-head self-attention core (FP; the qkv/proj qlinears around it
+// carry HOT's machinery, matching the paper)
+// ---------------------------------------------------------------------------
+
+pub struct AttnCtx {
+    pub qh: Vec<f32>, // (b, h, l, dh)
+    pub kh: Vec<f32>,
+    pub vh: Vec<f32>,
+    pub p: Vec<f32>, // (b, h, l, l)
+}
+
+/// q, k, v are (b, l, d) flattened; returns out (b, l, d) + ctx.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_fwd(q: &[f32], k: &[f32], v: &[f32], b: usize, l: usize,
+                     d: usize, heads: usize, causal: bool)
+                     -> (Vec<f32>, AttnCtx) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let split = |t: &[f32]| -> Vec<f32> {
+        // (b, l, h*dh) -> (b, h, l, dh)
+        let mut out = vec![0.0f32; b * heads * l * dh];
+        for bi in 0..b {
+            for ti in 0..l {
+                for h in 0..heads {
+                    for c in 0..dh {
+                        out[((bi * heads + h) * l + ti) * dh + c] =
+                            t[(bi * l + ti) * d + h * dh + c];
+                    }
+                }
+            }
+        }
+        out
+    };
+    let qh = split(q);
+    let kh = split(k);
+    let vh = split(v);
+    let bh = b * heads;
+    let mut p = vec![0.0f32; bh * l * l];
+    for g in 0..bh {
+        for t in 0..l {
+            let qrow = &qh[(g * l + t) * dh..(g * l + t + 1) * dh];
+            let prow = &mut p[(g * l + t) * l..(g * l + t + 1) * l];
+            for (s, pv) in prow.iter_mut().enumerate() {
+                if causal && s > t {
+                    *pv = f32::NEG_INFINITY;
+                    continue;
+                }
+                let krow = &kh[(g * l + s) * dh..(g * l + s + 1) * dh];
+                let mut acc = 0.0f32;
+                for (a, bb) in qrow.iter().zip(krow) {
+                    acc += a * bb;
+                }
+                *pv = acc * scale;
+            }
+            // stable softmax over s
+            let mx = prow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for pv in prow.iter_mut() {
+                *pv = (*pv - mx).exp();
+                z += *pv;
+            }
+            for pv in prow.iter_mut() {
+                *pv /= z;
+            }
+        }
+    }
+    let mut out = vec![0.0f32; b * l * d];
+    for bi in 0..b {
+        for h in 0..heads {
+            let g = bi * heads + h;
+            for t in 0..l {
+                let prow = &p[(g * l + t) * l..(g * l + t + 1) * l];
+                let dst = &mut out[(bi * l + t) * d + h * dh
+                                   ..(bi * l + t) * d + (h + 1) * dh];
+                for (s, &pv) in prow.iter().enumerate() {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vh[(g * l + s) * dh..(g * l + s + 1) * dh];
+                    for (dv, &vv) in dst.iter_mut().zip(vrow) {
+                        *dv += pv * vv;
+                    }
+                }
+            }
+        }
+    }
+    (out, AttnCtx { qh, kh, vh, p })
+}
+
+/// gy (b, l, d) -> (g_q, g_k, g_v) each (b, l, d).
+pub fn attention_bwd(gy: &[f32], ctx: &AttnCtx, b: usize, l: usize, d: usize,
+                     heads: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let bh = b * heads;
+    // go: (b, h, l, dh) view of gy
+    let mut go = vec![0.0f32; bh * l * dh];
+    for bi in 0..b {
+        for t in 0..l {
+            for h in 0..heads {
+                for c in 0..dh {
+                    go[((bi * heads + h) * l + t) * dh + c] =
+                        gy[(bi * l + t) * d + h * dh + c];
+                }
+            }
+        }
+    }
+    let mut g_vh = vec![0.0f32; bh * l * dh];
+    let mut g_qh = vec![0.0f32; bh * l * dh];
+    let mut g_kh = vec![0.0f32; bh * l * dh];
+    let mut g_s_row = vec![0.0f32; l];
+    for g in 0..bh {
+        for t in 0..l {
+            let prow = &ctx.p[(g * l + t) * l..(g * l + t + 1) * l];
+            let grow = &go[(g * l + t) * dh..(g * l + t + 1) * dh];
+            // g_v += pᵀ go ; g_p = go vhᵀ
+            let mut dot = 0.0f32; // sum_s g_p[s] * p[s]
+            for s in 0..l {
+                let vrow = &ctx.vh[(g * l + s) * dh..(g * l + s + 1) * dh];
+                let mut gp = 0.0f32;
+                for (a, bb) in grow.iter().zip(vrow) {
+                    gp += a * bb;
+                }
+                g_s_row[s] = gp;
+                dot += gp * prow[s];
+            }
+            for s in 0..l {
+                let pv = prow[s];
+                let gs = pv * (g_s_row[s] - dot) * scale;
+                if pv != 0.0 {
+                    let gv = &mut g_vh[(g * l + s) * dh..(g * l + s + 1) * dh];
+                    for (dv, &gg) in gv.iter_mut().zip(grow) {
+                        *dv += pv * gg;
+                    }
+                }
+                if gs != 0.0 {
+                    let krow = &ctx.kh[(g * l + s) * dh..(g * l + s + 1) * dh];
+                    let qrow = &ctx.qh[(g * l + t) * dh..(g * l + t + 1) * dh];
+                    let gq = &mut g_qh[(g * l + t) * dh..(g * l + t + 1) * dh];
+                    for (dv, &kk) in gq.iter_mut().zip(krow) {
+                        *dv += gs * kk;
+                    }
+                    let gk = &mut g_kh[(g * l + s) * dh..(g * l + s + 1) * dh];
+                    for (dv, &qq) in gk.iter_mut().zip(qrow) {
+                        *dv += gs * qq;
+                    }
+                }
+            }
+        }
+    }
+    let merge = |t: &[f32]| -> Vec<f32> {
+        let mut out = vec![0.0f32; b * l * d];
+        for bi in 0..b {
+            for ti in 0..l {
+                for h in 0..heads {
+                    for c in 0..dh {
+                        out[(bi * l + ti) * d + h * dh + c] =
+                            t[((bi * heads + h) * l + ti) * dh + c];
+                    }
+                }
+            }
+        }
+        out
+    };
+    (merge(&g_qh), merge(&g_kh), merge(&g_vh))
+}
+
+// ---------------------------------------------------------------------------
+// Softmax cross-entropy (mean over all label positions)
+// ---------------------------------------------------------------------------
+
+pub struct CeCtx {
+    pub p: Vec<f32>,      // (n, c) softmax probabilities
+    pub onehot: Vec<f32>, // (n, c)
+}
+
+/// logits (n, c), labels (n,) -> (loss, acc, ctx).
+pub fn softmax_xent_fwd(logits: &[f32], n: usize, c: usize, labels: &[i32])
+                        -> (f32, f32, CeCtx) {
+    debug_assert_eq!(labels.len(), n);
+    let mut p = vec![0.0f32; n * c];
+    let mut onehot = vec![0.0f32; n * c];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for r in 0..n {
+        let row = &logits[r * c..(r + 1) * c];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &v in row {
+            z += (v - mx).exp();
+        }
+        let lse = mx + z.ln();
+        let lab = labels[r] as usize;
+        debug_assert!(lab < c);
+        onehot[r * c + lab] = 1.0;
+        loss -= (row[lab] - lse) as f64;
+        let mut argmax = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[argmax] {
+                argmax = j;
+            }
+            p[r * c + j] = (v - lse).exp();
+        }
+        if argmax == lab {
+            correct += 1;
+        }
+    }
+    ((loss / n as f64) as f32, correct as f32 / n as f32, CeCtx { p, onehot })
+}
+
+/// d loss / d logits for unit upstream gradient.
+pub fn softmax_xent_bwd(ctx: &CeCtx, n: usize) -> Vec<f32> {
+    ctx.p
+        .iter()
+        .zip(&ctx.onehot)
+        .map(|(&p, &o)| (p - o) / n as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f32 = b.iter().map(|v| v * v).sum();
+        (num / den.max(1e-12)).sqrt()
+    }
+
+    #[test]
+    fn variant_tag_parsing() {
+        let c = BackwardCfg::parse("hot").unwrap();
+        assert_eq!(c.variant, Variant::Hot);
+        assert_eq!(c.rank, 8);
+        assert!(c.abc);
+        let c = BackwardCfg::parse("hot_r4").unwrap();
+        assert_eq!(c.rank, 4);
+        let c = BackwardCfg::parse("hot_noabc").unwrap();
+        assert!(!c.abc);
+        let c = BackwardCfg::parse("gx_int_hla").unwrap();
+        assert_eq!(c.variant, Variant::GxIntHla);
+        assert_eq!(BackwardCfg::parse("fp").unwrap().variant, Variant::Fp);
+        assert!(BackwardCfg::parse("warp").is_err());
+        assert!(BackwardCfg::parse("hot_r99").is_err());
+    }
+
+    #[test]
+    fn matmul_identities() {
+        let a = randv(6 * 4, 1);
+        let b = randv(4 * 5, 2);
+        let ab = matmul(&a, &b, 6, 4, 5);
+        // x @ w.T with w = b.T equals a @ b
+        let bt = transpose(&b, 4, 5); // (5, 4)
+        let ab2 = matmul_nt(&a, &bt, 6, 4, 5);
+        assert!(rel_err(&ab, &ab2) < 1e-5);
+        // (a.T).T @ b == a @ b
+        let at = transpose(&a, 6, 4); // (4, 6)
+        let ab3 = matmul_tn(&at, &b, 4, 6, 5);
+        assert!(rel_err(&ab, &ab3) < 1e-5);
+    }
+
+    #[test]
+    fn int_gemm_matches_float() {
+        let mut r = Pcg32::seeded(3);
+        let a: Vec<i8> = (0..8 * 6).map(|_| (r.below(15) as i8) - 7).collect();
+        let b: Vec<i8> = (0..6 * 5).map(|_| (r.below(15) as i8) - 7).collect();
+        let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let got: Vec<f32> = matmul_i8_nn(&a, &b, 8, 6, 5)
+            .iter().map(|&v| v as f32).collect();
+        assert!(rel_err(&got, &matmul(&af, &bf, 8, 6, 5)) < 1e-6);
+        let at: Vec<i8> = {
+            let mut out = vec![0i8; 6 * 8];
+            for r0 in 0..8 {
+                for c0 in 0..6 {
+                    out[c0 * 8 + r0] = a[r0 * 6 + c0];
+                }
+            }
+            out
+        };
+        let got2: Vec<f32> = matmul_i8_tn(&at, &b, 6, 8, 5)
+            .iter().map(|&v| v as f32).collect();
+        assert!(rel_err(&got2, &matmul(&af, &bf, 8, 6, 5)) < 1e-6);
+    }
+
+    #[test]
+    fn hq_matmul_tracks_exact_at_8_bits() {
+        // HT on the contracted dim cancels exactly; at 8 bits only the
+        // quantization noise remains
+        let gy = randv(32 * 32, 4);
+        let w = randv(32 * 16, 5);
+        let got = hq_matmul(&gy, 32, 32, &w, 16, 8);
+        let want = matmul(&gy, &w, 32, 32, 16);
+        assert!(rel_err(&got, &want) < 0.05, "{}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn fp_qlinear_bwd_is_exact() {
+        let cfg = BackwardCfg { variant: Variant::Fp, ..Default::default() };
+        let (n, i, o) = (5, 4, 3);
+        let x = randv(n * i, 6);
+        let w = randv(o * i, 7);
+        let bias = vec![0.1f32; o];
+        let (y, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        // y[r][c] = sum_k x[r][k] w[c][k] + b[c]
+        let mut want_y = matmul_nt(&x, &w, n, i, o);
+        for r in 0..n {
+            for c in 0..o {
+                want_y[r * o + c] += bias[c];
+            }
+        }
+        assert!(rel_err(&y, &want_y) < 1e-6);
+        let gy = randv(n * o, 8);
+        let (gx, gw, gb) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
+        assert!(rel_err(gx.as_ref().unwrap(), &matmul(&gy, &w, n, o, i)) < 1e-6);
+        assert!(rel_err(&gw, &matmul_tn(&gy, &x, n, o, i)) < 1e-6);
+        let want_gb: Vec<f32> = (0..o)
+            .map(|c| (0..n).map(|r| gy[r * o + c]).sum())
+            .collect();
+        assert!(rel_err(&gb, &want_gb) < 1e-6);
+    }
+
+    #[test]
+    fn hot_ctx_is_compressed_and_usable() {
+        let cfg = BackwardCfg::default(); // hot, abc
+        let (n, i, o) = (32, 16, 16);
+        let x = randv(n * i, 9);
+        let w = randv(o * i, 10);
+        let bias = vec![0.0f32; o];
+        let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        assert!(ctx.x.is_none());
+        let (xq, _) = ctx.xq.as_ref().unwrap();
+        assert_eq!(xq.len(), n / BLOCK * cfg.rank * i);
+        let gy = randv(n * o, 11);
+        let (gx, gw, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
+        // approximations stay in the exact gradients' ballpark
+        let exact_gx = matmul(&gy, &w, n, o, i);
+        let exact_gw = matmul_tn(&gy, &x, n, o, i);
+        assert!(rel_err(gx.as_ref().unwrap(), &exact_gx) < 1.0);
+        assert!(rel_err(&gw, &exact_gw) < 1.0);
+        // per-token flag flips the g_w computation but not its scale
+        let (_, gw_pt, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 1.0, true);
+        assert!(gw_pt.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn non_tiling_layers_fall_back_to_exact() {
+        let cfg = BackwardCfg::default();
+        let (n, i, o) = (5, 4, 3); // nothing tiles into 16
+        let x = randv(n * i, 12);
+        let w = randv(o * i, 13);
+        let bias = vec![0.0f32; o];
+        let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        assert!(ctx.x.is_some(), "non-tiling layer keeps raw FP residuals");
+        let gy = randv(n * o, 14);
+        let (gx, gw, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
+        assert!(rel_err(gx.as_ref().unwrap(), &matmul(&gy, &w, n, o, i)) < 1e-6);
+        assert!(rel_err(&gw, &matmul_tn(&gy, &x, n, o, i)) < 1e-6);
+    }
+
+    #[test]
+    fn all_variants_produce_finite_grads() {
+        let (n, i, o) = (32, 16, 16);
+        let x = randv(n * i, 15);
+        let w = randv(o * i, 16);
+        let gy = randv(n * o, 17);
+        let bias = vec![0.0f32; o];
+        for tag in ["fp", "hot", "lbp", "luq", "int4", "gx_hq4", "gx_q4",
+                    "gx_ext_hla", "gx_int_hla", "gw_hq4", "gw_hla", "gw_hot"] {
+            let cfg = BackwardCfg::parse(tag).unwrap();
+            let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+            let (gx, gw, gb) =
+                qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
+            assert!(gx.unwrap().iter().all(|v| v.is_finite()), "{tag} gx");
+            assert!(gw.iter().all(|v| v.is_finite()), "{tag} gw");
+            assert!(gb.iter().all(|v| v.is_finite()), "{tag} gb");
+        }
+    }
+
+    #[test]
+    fn layernorm_grad_invariants() {
+        let (rows, d) = (6, 8);
+        let x = randv(rows * d, 18);
+        let gamma = randv(d, 19);
+        let beta = vec![0.0f32; d];
+        let (y, ctx) = layernorm_fwd(&x, rows, d, &gamma, &beta);
+        assert_eq!(y.len(), rows * d);
+        let gy = randv(rows * d, 20);
+        let (gx, ggamma, gbeta) = layernorm_bwd(&gy, rows, d, &gamma, &ctx);
+        // per-row: sum of g_x is 0 and g_x ⟂ xhat (exact LN identities)
+        for r in 0..rows {
+            let row = &gx[r * d..(r + 1) * d];
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-3, "row {r} sum {s}");
+            let dot: f32 = row.iter().zip(&ctx.xhat[r * d..(r + 1) * d])
+                .map(|(a, b)| a * b).sum();
+            assert!(dot.abs() < 1e-2, "row {r} dot {dot}");
+        }
+        let want_gbeta: Vec<f32> = (0..d)
+            .map(|c| (0..rows).map(|r| gy[r * d + c]).sum())
+            .collect();
+        assert!(rel_err(&gbeta, &want_gbeta) < 1e-5);
+        assert!(ggamma.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gelu_matches_finite_difference() {
+        let xs = [-2.0f32, -0.5, 0.0, 0.3, 1.7];
+        let (_, ctx) = gelu_fwd(&xs);
+        let g = gelu_bwd(&vec![1.0; xs.len()], &ctx);
+        for (j, &x) in xs.iter().enumerate() {
+            let eps = 1e-3f32;
+            let f = |v: f32| {
+                let t = (K0 * (v + K1 * v * v * v)).tanh();
+                0.5 * v * (1.0 + t)
+            };
+            let fd = (f(x + eps) - f(x - eps)) / (2.0 * eps);
+            assert!((g[j] - fd).abs() < 1e-2, "x={x}: {} vs {fd}", g[j]);
+        }
+    }
+
+    #[test]
+    fn attention_shapes_and_causality() {
+        let (b, l, d, heads) = (2, 4, 8, 2);
+        let q = randv(b * l * d, 21);
+        let k = randv(b * l * d, 22);
+        let v = randv(b * l * d, 23);
+        let (out, ctx) = attention_fwd(&q, &k, &v, b, l, d, heads, true);
+        assert_eq!(out.len(), b * l * d);
+        // causal: p[t][s] == 0 for s > t
+        for g in 0..b * heads {
+            for t in 0..l {
+                for s in t + 1..l {
+                    assert_eq!(ctx.p[(g * l + t) * l + s], 0.0);
+                }
+            }
+        }
+        // softmax rows sum to 1
+        for row in ctx.p.chunks(l) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        let gy = randv(b * l * d, 24);
+        let (gq, gk, gv) = attention_bwd(&gy, &ctx, b, l, d, heads);
+        assert!(gq.iter().chain(&gk).chain(&gv).all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn attention_grad_directional_check() {
+        // d/deps loss(q + eps*dq, ...) == <g_q, dq> for loss = <out, r>
+        let (b, l, d, heads) = (1, 4, 8, 2);
+        let q = randv(b * l * d, 25);
+        let k = randv(b * l * d, 26);
+        let v = randv(b * l * d, 27);
+        let r = randv(b * l * d, 28);
+        let dq = randv(b * l * d, 29);
+        let loss = |qv: &[f32]| -> f32 {
+            let (out, _) = attention_fwd(qv, &k, &v, b, l, d, heads, false);
+            out.iter().zip(&r).map(|(a, bb)| a * bb).sum()
+        };
+        let (_, ctx) = attention_fwd(&q, &k, &v, b, l, d, heads, false);
+        let (gq, _, _) = attention_bwd(&r, &ctx, b, l, d, heads);
+        let analytic: f32 = gq.iter().zip(&dq).map(|(a, bb)| a * bb).sum();
+        let eps = 1e-3f32;
+        let qp: Vec<f32> = q.iter().zip(&dq).map(|(a, bb)| a + eps * bb).collect();
+        let qm: Vec<f32> = q.iter().zip(&dq).map(|(a, bb)| a - eps * bb).collect();
+        let fd = (loss(&qp) - loss(&qm)) / (2.0 * eps);
+        assert!((analytic - fd).abs() < 0.05 * fd.abs().max(1.0),
+                "{analytic} vs {fd}");
+    }
+
+    #[test]
+    fn xent_known_values() {
+        // two rows, 2 classes, logits strongly favouring the label
+        let logits = vec![5.0, -5.0, -5.0, 5.0];
+        let labels = vec![0, 1];
+        let (loss, acc, ctx) = softmax_xent_fwd(&logits, 2, 2, &labels);
+        assert!(loss < 0.01, "{loss}");
+        assert_eq!(acc, 1.0);
+        let g = softmax_xent_bwd(&ctx, 2);
+        // gradient sums to zero per row
+        assert!((g[0] + g[1]).abs() < 1e-6);
+        assert!((g[2] + g[3]).abs() < 1e-6);
+        // wrong labels: high loss, zero acc
+        let (loss2, acc2, _) = softmax_xent_fwd(&logits, 2, 2, &[1, 0]);
+        assert!(loss2 > 5.0);
+        assert_eq!(acc2, 0.0);
+    }
+
+    #[test]
+    fn lbp_paths_reconstruct_smooth_signals() {
+        // low-frequency gy along N: external HLA g_x should track exact
+        let (n, o, i) = (32, 16, 16);
+        let mut gy = vec![0.0f32; n * o];
+        for r in 0..n {
+            let t = (r as f32 / n as f32 * std::f32::consts::PI).cos();
+            for c in 0..o {
+                gy[r * o + c] = t * (0.2 + c as f32 / o as f32);
+            }
+        }
+        let w = randv(o * i, 30);
+        let got = lbp_gx(&gy, n, o, &w, i, 8);
+        let want = matmul(&gy, &w, n, o, i);
+        assert!(rel_err(&got, &want) < 0.25, "{}", rel_err(&got, &want));
+    }
+}

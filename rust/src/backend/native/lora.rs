@@ -1,0 +1,534 @@
+//! Native HOT + LoRA joint optimization — the rust port of
+//! python/compile/lora.py (paper §5.3, Tables 3/4/9).
+//!
+//! LoRA freezes the base weight w and learns a low-rank update B·A. HOT
+//! composes with it per the paper's ablation:
+//!   * frozen path: g_w is skipped entirely; `hot_frozen` computes the
+//!     remaining g_x through w with HQ-INT4 (the winning configuration);
+//!   * decomposed path: `hot_decomposed` applies HLA+INT8 to the A/B
+//!     gradients (the configuration the paper shows fails).
+//!
+//! Adapted layers: qkv, proj, fc1, fc2. embed/head stay trainable in
+//! full. Fused-step only (LoRA fine-tuning never runs split/accum).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::native::layers::{self, BackwardCfg, Variant};
+use crate::backend::native::model::Params;
+use crate::backend::native::presets::{self, ModelShape};
+use crate::hadamard::{block_hla_axis0, BLOCK};
+use crate::quant;
+use crate::runtime::manifest::{DType, TensorSpec};
+use crate::runtime::value::Value;
+
+pub const LORA_TARGETS: [&str; 4] = ["attn.wqkv", "attn.wo", "fc1.w", "fc2.w"];
+pub const DEFAULT_R_LORA: usize = 8;
+pub const LORA_SCALE: f32 = 2.0;
+
+/// How HOT composes with the LoRA paths (parsed from the key tag).
+#[derive(Debug, Clone, Copy)]
+pub struct LoraCfg {
+    pub bcfg: BackwardCfg,
+    pub hot_frozen: bool,
+    pub hot_decomposed: bool,
+    pub r_lora: usize,
+}
+
+impl LoraCfg {
+    pub fn parse(tag: &str) -> Result<LoraCfg> {
+        let (frozen, dec, variant) = match tag {
+            "fp" => (false, false, Variant::Fp),
+            "hotfrozen" => (true, false, Variant::Hot),
+            "hotdec" => (false, true, Variant::Hot),
+            "hotboth" => (true, true, Variant::Hot),
+            other => bail!("unknown lora tag {other:?} \
+                            (fp|hotfrozen|hotdec|hotboth)"),
+        };
+        Ok(LoraCfg {
+            bcfg: BackwardCfg { variant, ..BackwardCfg::default() },
+            hot_frozen: frozen,
+            hot_decomposed: dec,
+            r_lora: DEFAULT_R_LORA,
+        })
+    }
+}
+
+fn is_target(name: &str) -> bool {
+    LORA_TARGETS.iter().any(|t| name.ends_with(t))
+}
+
+/// The trainable set: LoRA tensors + embed/head (+biases), sorted by name
+/// (lora.py lora_param_specs + make_lora_train_step's "extra" set).
+pub fn trainable_specs(shape: &ModelShape, r_lora: usize) -> Vec<TensorSpec> {
+    let mut specs: Vec<TensorSpec> = Vec::new();
+    for base in presets::param_specs(shape) {
+        if is_target(&base.name) {
+            let (o, i) = (base.shape[0], base.shape[1]);
+            specs.push(TensorSpec { name: format!("{}.lora_a", base.name),
+                                    shape: vec![r_lora, i],
+                                    dtype: DType::F32 });
+            specs.push(TensorSpec { name: format!("{}.lora_b", base.name),
+                                    shape: vec![o, r_lora],
+                                    dtype: DType::F32 });
+        } else if matches!(base.name.as_str(),
+                           "embed.w" | "embed.b" | "head.w" | "head.b") {
+            specs.push(base);
+        }
+    }
+    specs.sort_by(|a, b| a.name.cmp(&b.name));
+    specs
+}
+
+// ---------------------------------------------------------------------------
+// LoRA-adapted qlinear
+// ---------------------------------------------------------------------------
+
+struct LoraQlCtx {
+    u: Vec<f32>, // x @ Aᵀ, (n, r)
+    x: Option<Vec<f32>>,
+    xq: Option<(Vec<i8>, f32)>,
+    n: usize,
+    i: usize,
+}
+
+/// y = x wᵀ + scale · (x Aᵀ) Bᵀ + b.
+#[allow(clippy::too_many_arguments)]
+fn qlinear_lora_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
+                    bias: &[f32], a: &[f32], bm: &[f32], cfg: &LoraCfg)
+                    -> (Vec<f32>, LoraQlCtx) {
+    let r = cfg.r_lora;
+    let u = layers::matmul_nt(x, a, n, i, r);
+    let mut y = layers::matmul_nt(x, w, n, i, o);
+    let ub = layers::matmul_nt(&u, bm, n, r, o);
+    for row in 0..n {
+        for c in 0..o {
+            y[row * o + c] += LORA_SCALE * ub[row * o + c] + bias[c];
+        }
+    }
+    let ctx = if cfg.hot_decomposed && n % BLOCK == 0 {
+        let (xq, sx) = layers::hla_compress(x, n, i, cfg.bcfg.rank,
+                                            cfg.bcfg.gw_bits,
+                                            cfg.bcfg.criterion);
+        LoraQlCtx { u, x: None, xq: Some((xq, sx)), n, i }
+    } else {
+        LoraQlCtx { u, x: Some(x.to_vec()), xq: None, n, i }
+    };
+    (y, ctx)
+}
+
+/// Returns (g_x, g_a, g_bm). No g_w — w is frozen (biases too).
+#[allow(clippy::too_many_arguments)]
+fn qlinear_lora_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
+                    a: &[f32], bm: &[f32], ctx: &LoraQlCtx, cfg: &LoraCfg)
+                    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let r = cfg.r_lora;
+    // frozen-path g_x
+    let mut g_x = if cfg.hot_frozen && o % BLOCK == 0 {
+        layers::hq_matmul(gy, n, o, w, i, cfg.bcfg.gx_bits)
+    } else {
+        layers::matmul(gy, w, n, o, i)
+    };
+    // decomposed-path gradients
+    let mut g_u = layers::matmul(gy, bm, n, o, r); // gy (n,o) @ bm (o,r)
+    for v in g_u.iter_mut() {
+        *v *= LORA_SCALE;
+    }
+    let (g_a, g_bm) = if let Some((xq, sx)) = &ctx.xq {
+        // HLA+INT8 on the decomposed products (Table 9 ablation)
+        let bits = cfg.bcfg.gw_bits;
+        let rank = cfg.bcfg.rank;
+        let nc = n / BLOCK * rank;
+        let gc_u = block_hla_axis0(&g_u, n, r, rank, cfg.bcfg.criterion);
+        let s_gu = quant::minmax_scale(&gc_u, bits);
+        let q_gu = quant::quantize_ps(&gc_u, s_gu, bits);
+        let g_a: Vec<f32> = layers::matmul_i8_tn(&q_gu, xq, nc, r, i)
+            .iter()
+            .map(|&v| v as f32 * s_gu * sx)
+            .collect();
+        let gc_y = block_hla_axis0(gy, n, o, rank, cfg.bcfg.criterion);
+        let uc = block_hla_axis0(&ctx.u, n, r, rank, cfg.bcfg.criterion);
+        let mut g_bm = layers::matmul_tn(&layers::fake_quant(&gc_y, bits),
+                                         &layers::fake_quant(&uc, bits), nc,
+                                         o, r);
+        for v in g_bm.iter_mut() {
+            *v *= LORA_SCALE;
+        }
+        (g_a, g_bm)
+    } else {
+        let x = ctx.x.as_deref().expect("lora ctx holds x or xq");
+        let g_a = layers::matmul_tn(&g_u, x, n, r, i);
+        let mut g_bm = layers::matmul_tn(gy, &ctx.u, n, o, r);
+        for v in g_bm.iter_mut() {
+            *v *= LORA_SCALE;
+        }
+        (g_a, g_bm)
+    };
+    // g_x += g_u @ A
+    let ga_path = layers::matmul(&g_u, a, n, r, i);
+    for (gv, av) in g_x.iter_mut().zip(&ga_path) {
+        *gv += av;
+    }
+    (g_x, g_a, g_bm)
+}
+
+// ---------------------------------------------------------------------------
+// Full LoRA model (reuses the non-linear pieces from layers.rs)
+// ---------------------------------------------------------------------------
+
+enum Saved {
+    Ql { module: String, ctx: layers::QlCtx, flag: f32 },
+    QLora { wname: String, ctx: LoraQlCtx },
+    Ln(layers::LnCtx),
+    Gelu(layers::GeluCtx),
+    Attn(layers::AttnCtx),
+    Ce(layers::CeCtx),
+}
+
+pub struct LoraStepOut {
+    pub loss: f32,
+    pub acc: f32,
+    pub grads: BTreeMap<String, Vec<f32>>,
+}
+
+/// One fused LoRA forward+backward. `merged` maps base params with the
+/// trainable embed/head overrides applied; `lora` maps the adapter
+/// tensors. Returns grads keyed by trainable names only.
+pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
+                           merged: &Params, lora: &Params, lqs_mask: &[f32],
+                           x: &Value, y: &Value) -> Result<LoraStepOut> {
+    ensure!(shape.arch == "vit", "LoRA fine-tuning targets the vit presets");
+    let (d, l, m) = (shape.d_model, shape.seq, shape.d_mlp());
+    let dims = x.shape();
+    ensure!(dims.len() == 3 && dims[1] == l && dims[2] == shape.in_dim,
+            "input must be (b, {l}, {}), got {dims:?}", shape.in_dim);
+    let b = dims[0];
+    let n = b * l;
+    let labels = match y {
+        Value::I32 { data, .. } => data.clone(),
+        _ => bail!("labels must be i32"),
+    };
+    ensure!(labels.len() == b, "labels must be (b,)");
+    let mut saved: Vec<Saved> = Vec::new();
+    let mut qi = 0usize;
+    let bcfg = cfg.bcfg;
+
+    // --- forward ------------------------------------------------------------
+    let (mut h, ql) = layers::qlinear_fwd(x.as_f32()?, n, shape.in_dim,
+                                          merged.f("embed.w")?, d,
+                                          merged.f("embed.b")?, &bcfg);
+    saved.push(Saved::Ql { module: "embed".into(), ctx: ql,
+                           flag: lqs_mask.first().copied().unwrap_or(0.0) });
+    qi += 1;
+    let pos = merged.f("pos")?;
+    for row in 0..n {
+        let t = row % l;
+        for j in 0..d {
+            h[row * d + j] += pos[t * d + j];
+        }
+    }
+
+    for blk in 0..shape.depth {
+        let pre = format!("blk{blk}.");
+        let mut lora_fwd = |saved: &mut Vec<Saved>, qi: &mut usize,
+                            inp: &[f32], rows: usize, in_dim: usize,
+                            wname: String, bname: String, o: usize|
+                            -> Result<Vec<f32>> {
+            let a = lora.f(&format!("{wname}.lora_a"))?;
+            let bm = lora.f(&format!("{wname}.lora_b"))?;
+            let (y, ctx) = qlinear_lora_fwd(inp, rows, in_dim,
+                                            merged.f(&wname)?, o,
+                                            merged.f(&bname)?, a, bm, cfg);
+            saved.push(Saved::QLora { wname, ctx });
+            *qi += 1;
+            Ok(y)
+        };
+        let (hn, ln) = layers::layernorm_fwd(&h, n, d,
+                                             merged.f(&format!("{pre}ln1.g"))?,
+                                             merged.f(&format!("{pre}ln1.b"))?);
+        saved.push(Saved::Ln(ln));
+        let qkv = lora_fwd(&mut saved, &mut qi, &hn, n, d,
+                           format!("{pre}attn.wqkv"),
+                           format!("{pre}attn.bqkv"), 3 * d)?;
+        let mut q = vec![0.0f32; n * d];
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        for row in 0..n {
+            for j in 0..d {
+                q[row * d + j] = qkv[row * 3 * d + j];
+                k[row * d + j] = qkv[row * 3 * d + d + j];
+                v[row * d + j] = qkv[row * 3 * d + 2 * d + j];
+            }
+        }
+        let (att, actx) = layers::attention_fwd(&q, &k, &v, b, l, d,
+                                                shape.heads, false);
+        saved.push(Saved::Attn(actx));
+        let proj = lora_fwd(&mut saved, &mut qi, &att, n, d,
+                            format!("{pre}attn.wo"),
+                            format!("{pre}attn.bo"), d)?;
+        for (hv, pv) in h.iter_mut().zip(&proj) {
+            *hv += pv;
+        }
+        let (hn, ln) = layers::layernorm_fwd(&h, n, d,
+                                             merged.f(&format!("{pre}ln2.g"))?,
+                                             merged.f(&format!("{pre}ln2.b"))?);
+        saved.push(Saved::Ln(ln));
+        let f1 = lora_fwd(&mut saved, &mut qi, &hn, n, d,
+                          format!("{pre}fc1.w"), format!("{pre}fc1.b"), m)?;
+        let (g1, gc) = layers::gelu_fwd(&f1);
+        saved.push(Saved::Gelu(gc));
+        let f2 = lora_fwd(&mut saved, &mut qi, &g1, n, m,
+                          format!("{pre}fc2.w"), format!("{pre}fc2.b"), d)?;
+        for (hv, fv) in h.iter_mut().zip(&f2) {
+            *hv += fv;
+        }
+    }
+
+    let (hn, lnf) = layers::layernorm_fwd(&h, n, d, merged.f("lnf.g")?,
+                                          merged.f("lnf.b")?);
+    saved.push(Saved::Ln(lnf));
+    let mut pooled = vec![0.0f32; b * d];
+    for bi in 0..b {
+        for t in 0..l {
+            for j in 0..d {
+                pooled[bi * d + j] += hn[(bi * l + t) * d + j] / l as f32;
+            }
+        }
+    }
+    let c = shape.n_classes;
+    let (logits, hctx) = layers::qlinear_fwd(&pooled, b, d,
+                                             merged.f("head.w")?, c,
+                                             merged.f("head.b")?, &bcfg);
+    saved.push(Saved::Ql { module: "head".into(), ctx: hctx,
+                           flag: lqs_mask.get(qi).copied().unwrap_or(0.0) });
+    let (loss, acc, ce) = layers::softmax_xent_fwd(&logits, b, c, &labels);
+    saved.push(Saved::Ce(ce));
+
+    // --- backward -------------------------------------------------------------
+    let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut it = saved.into_iter().rev();
+    let mut take = move || it.next().context("lora ctx walk underflow");
+
+    let ce = match take()? {
+        Saved::Ce(c) => c,
+        _ => bail!("lora walk: expected ce"),
+    };
+    let g_logits = layers::softmax_xent_bwd(&ce, b);
+    let (head_ctx, head_flag) = match take()? {
+        Saved::Ql { ctx, flag, .. } => (ctx, flag),
+        _ => bail!("lora walk: expected head ql"),
+    };
+    let (g_pooled, g_hw, g_hb) = layers::qlinear_bwd(
+        &g_logits, b, c, merged.f("head.w")?, d, &head_ctx, &bcfg,
+        head_flag, true);
+    grads.insert("head.w".into(), g_hw);
+    grads.insert("head.b".into(), g_hb);
+    let g_pooled = g_pooled.expect("head g_x");
+
+    let lnf = match take()? {
+        Saved::Ln(ln) => ln,
+        _ => bail!("lora walk: expected lnf"),
+    };
+    let mut g_hn = vec![0.0f32; n * d];
+    for bi in 0..b {
+        for t in 0..l {
+            for j in 0..d {
+                g_hn[(bi * l + t) * d + j] = g_pooled[bi * d + j] / l as f32;
+            }
+        }
+    }
+    let (mut g_h, _, _) = layers::layernorm_bwd(&g_hn, n, d,
+                                                merged.f("lnf.g")?, &lnf);
+
+    for blk in (0..shape.depth).rev() {
+        let pre = format!("blk{blk}.");
+        let mut lora_bwd = |take: &mut dyn FnMut() -> Result<Saved>,
+                            gy: &[f32], rows: usize, o: usize|
+                            -> Result<Vec<f32>> {
+            let (wname, ctx) = match take()? {
+                Saved::QLora { wname, ctx } => (wname, ctx),
+                _ => bail!("lora walk: expected qlora"),
+            };
+            let wv = merged.value(&wname)?;
+            let i = wv.shape()[1];
+            ensure!(ctx.n == rows && ctx.i == i, "{wname}: ctx dims drifted");
+            let a = lora.f(&format!("{wname}.lora_a"))?;
+            let bm = lora.f(&format!("{wname}.lora_b"))?;
+            let (g_x, g_a, g_bm) = qlinear_lora_bwd(gy, rows, o,
+                                                    wv.as_f32()?, i, a, bm,
+                                                    &ctx, cfg);
+            grads.insert(format!("{wname}.lora_a"), g_a);
+            grads.insert(format!("{wname}.lora_b"), g_bm);
+            Ok(g_x)
+        };
+        let g_f2in = lora_bwd(&mut take, &g_h, n, d)?;
+        let gelu = match take()? {
+            Saved::Gelu(g) => g,
+            _ => bail!("lora walk: expected gelu"),
+        };
+        let g_f1 = layers::gelu_bwd(&g_f2in, &gelu);
+        let g_hn2 = lora_bwd(&mut take, &g_f1, n, m)?;
+        let ln2 = match take()? {
+            Saved::Ln(ln) => ln,
+            _ => bail!("lora walk: expected ln2"),
+        };
+        let (g_res, _, _) = layers::layernorm_bwd(
+            &g_hn2, n, d, merged.f(&format!("{pre}ln2.g"))?, &ln2);
+        for (hv, rv) in g_h.iter_mut().zip(&g_res) {
+            *hv += rv;
+        }
+        let g_att = lora_bwd(&mut take, &g_h, n, d)?;
+        let actx = match take()? {
+            Saved::Attn(a) => a,
+            _ => bail!("lora walk: expected attn"),
+        };
+        let (g_q, g_k, g_v) = layers::attention_bwd(&g_att, &actx, b, l, d,
+                                                    shape.heads);
+        let mut g_qkv = vec![0.0f32; n * 3 * d];
+        for row in 0..n {
+            for j in 0..d {
+                g_qkv[row * 3 * d + j] = g_q[row * d + j];
+                g_qkv[row * 3 * d + d + j] = g_k[row * d + j];
+                g_qkv[row * 3 * d + 2 * d + j] = g_v[row * d + j];
+            }
+        }
+        let g_hn1 = lora_bwd(&mut take, &g_qkv, n, 3 * d)?;
+        let ln1 = match take()? {
+            Saved::Ln(ln) => ln,
+            _ => bail!("lora walk: expected ln1"),
+        };
+        let (g_res, _, _) = layers::layernorm_bwd(
+            &g_hn1, n, d, merged.f(&format!("{pre}ln1.g"))?, &ln1);
+        for (hv, rv) in g_h.iter_mut().zip(&g_res) {
+            *hv += rv;
+        }
+    }
+
+    let (embed_ctx, embed_flag) = match take()? {
+        Saved::Ql { ctx, flag, .. } => (ctx, flag),
+        _ => bail!("lora walk: expected embed ql"),
+    };
+    let (_, g_ew, g_eb) = layers::qlinear_bwd(
+        &g_h, n, d, merged.f("embed.w")?, shape.in_dim, &embed_ctx, &bcfg,
+        embed_flag, false);
+    grads.insert("embed.w".into(), g_ew);
+    grads.insert("embed.b".into(), g_eb);
+
+    Ok(LoraStepOut { loss, acc, grads })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn tiny_shape() -> ModelShape {
+        ModelShape { arch: "vit", d_model: 16, depth: 1, heads: 2, seq: 16,
+                     in_dim: 8, n_classes: 3, mlp_ratio: 2 }
+    }
+
+    fn lora_init(shape: &ModelShape, cfg: &LoraCfg, base: &[Value],
+                 base_specs: &[TensorSpec], seed: u64) -> Vec<Value> {
+        let mut rng = Pcg32::seeded(seed);
+        trainable_specs(shape, cfg.r_lora)
+            .iter()
+            .map(|s| {
+                if s.name.ends_with(".lora_a") {
+                    let mut data = vec![0.0f32; s.numel()];
+                    rng.fill_normal(&mut data, 0.0, 1.0 / s.shape[0] as f32);
+                    Value::F32 { shape: s.shape.clone(), data }
+                } else if s.name.ends_with(".lora_b") {
+                    Value::F32 { shape: s.shape.clone(),
+                                 data: vec![0.0; s.numel()] }
+                } else {
+                    let idx = base_specs
+                        .iter()
+                        .position(|b| b.name == s.name)
+                        .unwrap();
+                    base[idx].clone()
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trainable_specs_shape() {
+        let shape = tiny_shape();
+        let specs = trainable_specs(&shape, 8);
+        // 4 targets x 2 tensors per block + embed.w/b + head.w/b
+        assert_eq!(specs.len(), 8 * shape.depth + 4);
+        for w in specs.windows(2) {
+            assert!(w[0].name < w[1].name);
+        }
+        let a = specs.iter().find(|s| s.name == "blk0.fc1.w.lora_a").unwrap();
+        assert_eq!(a.shape, vec![8, shape.d_model]);
+        let b = specs.iter().find(|s| s.name == "blk0.fc1.w.lora_b").unwrap();
+        assert_eq!(b.shape, vec![shape.d_mlp(), 8]);
+    }
+
+    #[test]
+    fn lora_tags_parse() {
+        assert!(LoraCfg::parse("fp").unwrap().bcfg.variant == Variant::Fp);
+        let c = LoraCfg::parse("hotfrozen").unwrap();
+        assert!(c.hot_frozen && !c.hot_decomposed);
+        let c = LoraCfg::parse("hotdec").unwrap();
+        assert!(!c.hot_frozen && c.hot_decomposed);
+        let c = LoraCfg::parse("hotboth").unwrap();
+        assert!(c.hot_frozen && c.hot_decomposed);
+        assert!(LoraCfg::parse("nope").is_err());
+    }
+
+    #[test]
+    fn zero_b_makes_adapter_a_noop_and_grads_flow() {
+        let shape = tiny_shape();
+        let base_specs = presets::param_specs(&shape);
+        let base = presets::init_values(&shape, 1);
+        for tag in ["fp", "hotfrozen", "hotdec", "hotboth"] {
+            let cfg = LoraCfg::parse(tag).unwrap();
+            let trainable = lora_init(&shape, &cfg, &base, &base_specs, 2);
+            let tspecs = trainable_specs(&shape, cfg.r_lora);
+            let merged_vals: Vec<Value> = base.clone();
+            let merged = Params::new(&base_specs, &merged_vals).unwrap();
+            let lora_specs: Vec<TensorSpec> = tspecs
+                .iter()
+                .filter(|s| s.name.contains(".lora_"))
+                .cloned()
+                .collect();
+            let lora_vals: Vec<Value> = tspecs
+                .iter()
+                .zip(&trainable)
+                .filter(|(s, _)| s.name.contains(".lora_"))
+                .map(|(_, v)| v.clone())
+                .collect();
+            let lora = Params::new(&lora_specs, &lora_vals).unwrap();
+            let mut rng = Pcg32::seeded(3);
+            let n = 4 * shape.seq * shape.in_dim;
+            let x = Value::F32 {
+                shape: vec![4, shape.seq, shape.in_dim],
+                data: (0..n).map(|_| rng.normal()).collect(),
+            };
+            let y = Value::I32 {
+                shape: vec![4],
+                data: (0..4).map(|_| rng.below(3) as i32).collect(),
+            };
+            let mask = vec![0.0f32; shape.n_qlinears()];
+            let out = lora_loss_and_grads(&shape, &cfg, &merged, &lora,
+                                          &mask, &x, &y).unwrap();
+            assert!(out.loss.is_finite(), "{tag}");
+            // every trainable gets a grad; lora_a grads are zero when B=0
+            // (g_a = scale·(gy B)ᵀ x and B starts at 0), lora_b's are not
+            for s in &tspecs {
+                let g = out.grads.get(&s.name)
+                    .unwrap_or_else(|| panic!("{tag}: no grad {}", s.name));
+                assert_eq!(g.len(), s.numel(), "{tag} {}", s.name);
+                assert!(g.iter().all(|v| v.is_finite()), "{tag} {}", s.name);
+            }
+            let gb: f32 = out.grads["blk0.fc1.w.lora_b"]
+                .iter()
+                .map(|v| v.abs())
+                .sum();
+            assert!(gb > 0.0, "{tag}: lora_b grad must be nonzero");
+        }
+    }
+}

@@ -1,0 +1,454 @@
+//! `NativeBackend` — the pure-rust `Executor`: runs the full HOT
+//! training loop (fused / split / accum, eval, LQS calibration, LoRA)
+//! with zero external dependencies. Where the PJRT backend executes AOT
+//! artifacts, this one executes the same math through the host-side
+//! mirrors (`hadamard`, `quant`) plus the model/optimizer ports in this
+//! module — the decomposition HOT's backward makes possible is exactly
+//! what makes a from-scratch CPU backend tractable.
+
+pub mod layers;
+pub mod lora;
+pub mod model;
+pub mod optim;
+pub mod presets;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::{Executor, ForwardOut, GradOut, LoraMeta, StepKey,
+                     StepOut};
+use crate::backend::native::layers::{BackwardCfg, Variant};
+use crate::backend::native::model::Params;
+use crate::backend::native::presets::ModelShape;
+use crate::runtime::manifest::Preset;
+use crate::runtime::value::Value;
+
+/// Seed for the deterministic initial parameters (the native analog of
+/// the artifact init blobs, which aot.py generates with a fixed seed).
+const INIT_SEED: u64 = 0;
+
+struct Entry {
+    name: String,
+    shape: ModelShape,
+    preset: Preset,
+}
+
+pub struct NativeBackend {
+    entries: Vec<Entry>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let entries = presets::builtin_presets()
+            .into_iter()
+            .map(|(name, shape)| Entry {
+                name: name.to_string(),
+                preset: presets::to_preset(name, &shape),
+                shape,
+            })
+            .collect();
+        NativeBackend { entries }
+    }
+
+    fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("unknown native preset {name:?}"))
+    }
+
+    fn parse(&self, key: &str) -> Result<StepKey> {
+        StepKey::parse(key, &self.preset_names())
+    }
+
+    /// (entry, bcfg) for a tagged step key.
+    fn step_ctx(&self, tag: &str, preset: &str) -> Result<(&Entry, BackwardCfg)> {
+        Ok((self.entry(preset)?, BackwardCfg::parse(tag)?))
+    }
+
+    fn run_forward_backward(&self, tag: &str, preset: &str, params: &[Value],
+                            lqs_mask: &[f32], x: &Value, y: &Value)
+                            -> Result<(f32, f32, Vec<Value>)> {
+        let (e, bcfg) = self.step_ctx(tag, preset)?;
+        let p = Params::new(&e.preset.params, params)?;
+        let fwd = model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?;
+        let grads = model::backward(&e.shape, &bcfg, &p, lqs_mask, &fwd.ctxs,
+                                    None)?;
+        Ok((fwd.loss, fwd.acc,
+            model::grads_to_values(&e.preset.params, grads)?))
+    }
+}
+
+impl Executor for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn describe(&self) -> String {
+        let names: Vec<&str> =
+            self.entries.iter().map(|e| e.name.as_str()).collect();
+        format!("native CPU backend — presets {names:?}; variants fp/hot/\
+                 lbp/luq/int4 + single-path ablations; modes fused/split/\
+                 accum, eval, calib, lora (no artifacts needed)")
+    }
+
+    fn preset_names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    fn preset(&self, name: &str) -> Result<Preset> {
+        Ok(self.entry(name)?.preset.clone())
+    }
+
+    fn init_params(&self, preset: &str) -> Result<Vec<Value>> {
+        Ok(presets::init_values(&self.entry(preset)?.shape, INIT_SEED))
+    }
+
+    fn default_batch(&self) -> usize {
+        32
+    }
+
+    fn supports(&self, key: &str) -> bool {
+        match self.parse(key) {
+            Err(_) => false,
+            Ok(StepKey::Train { tag, .. })
+            | Ok(StepKey::Fwd { tag, .. })
+            | Ok(StepKey::Bwd { tag, .. })
+            | Ok(StepKey::Grad { tag, .. }) => BackwardCfg::parse(&tag).is_ok(),
+            Ok(StepKey::Opt { .. }) | Ok(StepKey::Eval { .. })
+            | Ok(StepKey::Calib { .. }) => true,
+            Ok(StepKey::Lora { tag, preset }) => {
+                lora::LoraCfg::parse(&tag).is_ok()
+                    && self.entry(&preset)
+                        .map(|e| e.shape.arch == "vit")
+                        .unwrap_or(false)
+            }
+            Ok(StepKey::Kernel { name }) => {
+                matches!(name.as_str(), "hq_demo" | "hla_demo")
+            }
+        }
+    }
+
+    fn key_batch(&self, _key: &str) -> Option<usize> {
+        None // nothing is shape-static natively; the run config decides
+    }
+
+    fn train_step(&self, key: &str, params: &[Value], m: &[Value],
+                  v: &[Value], step: f32, lr: f32, lqs_mask: &[f32],
+                  x: &Value, y: &Value) -> Result<StepOut> {
+        let (tag, preset) = match self.parse(key)? {
+            StepKey::Train { tag, preset } => (tag, preset),
+            other => bail!("{key:?} is not a train step ({other:?})"),
+        };
+        let (loss, acc, grads) =
+            self.run_forward_backward(&tag, &preset, params, lqs_mask, x, y)?;
+        let specs = &self.entry(&preset)?.preset.params;
+        let (params, m, v) = optim::adamw(specs, params, &grads, m, v, step,
+                                          lr)?;
+        Ok(StepOut { params, m, v, loss, acc })
+    }
+
+    fn forward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                    x: &Value, y: &Value) -> Result<ForwardOut> {
+        let (tag, preset) = match self.parse(key)? {
+            StepKey::Fwd { tag, preset } => (tag, preset),
+            other => bail!("{key:?} is not a fwd step ({other:?})"),
+        };
+        let (e, bcfg) = self.step_ctx(&tag, &preset)?;
+        let p = Params::new(&e.preset.params, params)?;
+        let fwd = model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?;
+        let (ctx, ctx_specs) = model::flatten_ctx(fwd.ctxs);
+        Ok(ForwardOut { loss: fwd.loss, acc: fwd.acc, ctx, ctx_specs })
+    }
+
+    fn backward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                     x: &Value, ctx: Vec<Value>) -> Result<Vec<Value>> {
+        let (tag, preset) = match self.parse(key)? {
+            StepKey::Bwd { tag, preset } => (tag, preset),
+            other => bail!("{key:?} is not a bwd step ({other:?})"),
+        };
+        let (e, bcfg) = self.step_ctx(&tag, &preset)?;
+        let p = Params::new(&e.preset.params, params)?;
+        ensure!(!x.shape().is_empty(), "model input must be batched");
+        let b = x.shape()[0];
+        let ctxs = model::parse_ctx(&e.shape, &bcfg, b, ctx)?;
+        let grads = model::backward(&e.shape, &bcfg, &p, lqs_mask, &ctxs,
+                                    None)?;
+        model::grads_to_values(&e.preset.params, grads)
+    }
+
+    fn grad_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                 x: &Value, y: &Value) -> Result<GradOut> {
+        let (tag, preset) = match self.parse(key)? {
+            StepKey::Grad { tag, preset } => (tag, preset),
+            other => bail!("{key:?} is not a grad step ({other:?})"),
+        };
+        let (loss, acc, grads) =
+            self.run_forward_backward(&tag, &preset, params, lqs_mask, x, y)?;
+        Ok(GradOut { grads, loss, acc })
+    }
+
+    fn opt_step(&self, key: &str, params: &[Value], grads: &[Value],
+                m: &[Value], v: &[Value], step: f32, lr: f32)
+                -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)> {
+        let preset = match self.parse(key)? {
+            StepKey::Opt { preset } => preset,
+            other => bail!("{key:?} is not an opt step ({other:?})"),
+        };
+        optim::adamw(&self.entry(&preset)?.preset.params, params, grads, m,
+                     v, step, lr)
+    }
+
+    fn eval_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
+                 -> Result<(f32, f32)> {
+        let preset = match self.parse(key)? {
+            StepKey::Eval { preset } => preset,
+            other => bail!("{key:?} is not an eval step ({other:?})"),
+        };
+        let e = self.entry(&preset)?;
+        let p = Params::new(&e.preset.params, params)?;
+        let fp = BackwardCfg { variant: Variant::Fp, ..Default::default() };
+        let mask = vec![0.0f32; e.shape.n_qlinears()];
+        let fwd = model::forward(&e.shape, &fp, &p, &mask, x, y)?;
+        Ok((fwd.loss, fwd.acc))
+    }
+
+    fn calib_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
+                  -> Result<Vec<Vec<f32>>> {
+        let preset = match self.parse(key)? {
+            StepKey::Calib { preset } => preset,
+            other => bail!("{key:?} is not a calib step ({other:?})"),
+        };
+        let e = self.entry(&preset)?;
+        let p = Params::new(&e.preset.params, params)?;
+        model::calibrate(&e.shape, &p, x, y)
+    }
+
+    fn lora_meta(&self, key: &str) -> Result<LoraMeta> {
+        let (tag, preset) = match self.parse(key)? {
+            StepKey::Lora { tag, preset } => (tag, preset),
+            other => bail!("{key:?} is not a lora step ({other:?})"),
+        };
+        let cfg = lora::LoraCfg::parse(&tag)?;
+        let e = self.entry(&preset)?;
+        ensure!(e.shape.arch == "vit", "LoRA targets the vit presets");
+        Ok(LoraMeta {
+            preset: preset.clone(),
+            trainable: lora::trainable_specs(&e.shape, cfg.r_lora),
+            batch: None,
+        })
+    }
+
+    fn lora_step(&self, key: &str, base: &[Value], trainable: &[Value],
+                 m: &[Value], v: &[Value], step: f32, lr: f32,
+                 lqs_mask: &[f32], x: &Value, y: &Value) -> Result<StepOut> {
+        let (tag, preset) = match self.parse(key)? {
+            StepKey::Lora { tag, preset } => (tag, preset),
+            other => bail!("{key:?} is not a lora step ({other:?})"),
+        };
+        let cfg = lora::LoraCfg::parse(&tag)?;
+        let e = self.entry(&preset)?;
+        let tspecs = lora::trainable_specs(&e.shape, cfg.r_lora);
+        ensure!(trainable.len() == tspecs.len(),
+                "{} trainable tensors given, lora step wants {}",
+                trainable.len(), tspecs.len());
+        // merged view: frozen base + live embed/head overrides
+        let base_specs = &e.preset.params;
+        ensure!(base.len() == base_specs.len(), "base param arity mismatch");
+        let mut pairs: Vec<(&str, &Value)> = base_specs
+            .iter()
+            .zip(base)
+            .map(|(s, val)| (s.name.as_str(), val))
+            .collect();
+        let mut lora_pairs: Vec<(&str, &Value)> = Vec::new();
+        for (s, val) in tspecs.iter().zip(trainable) {
+            ensure!(val.shape() == s.shape.as_slice(),
+                    "trainable {}: shape {:?} != spec {:?}", s.name,
+                    val.shape(), s.shape);
+            if s.name.contains(".lora_") {
+                lora_pairs.push((s.name.as_str(), val));
+            } else {
+                pairs.push((s.name.as_str(), val)); // later pairs win
+            }
+        }
+        let merged = Params::from_pairs(pairs);
+        let lp = Params::from_pairs(lora_pairs);
+        let out = lora::lora_loss_and_grads(&e.shape, &cfg, &merged, &lp,
+                                            lqs_mask, x, y)?;
+        let grads = model::grads_to_values(&tspecs, out.grads)?;
+        let (params, m, v) = optim::adamw(&tspecs, trainable, &grads, m, v,
+                                          step, lr)?;
+        Ok(StepOut { params, m, v, loss: out.loss, acc: out.acc })
+    }
+
+    fn execute_raw(&self, key: &str, args: &[Value]) -> Result<Vec<Value>> {
+        let name = match self.parse(key)? {
+            StepKey::Kernel { name } => name,
+            other => bail!("execute_raw on the native backend only runs \
+                            kernel demos, not {other:?}"),
+        };
+        ensure!(args.len() == 2, "kernel {key}: {} args given, want 2",
+                args.len());
+        let a = args[0].as_f32()?;
+        let b = args[1].as_f32()?;
+        let (ash, bsh) = (args[0].shape(), args[1].shape());
+        ensure!(ash.len() == 2 && bsh.len() == 2,
+                "kernel {key}: operands must be 2-D, got {ash:?}/{bsh:?}");
+        match name.as_str() {
+            "hq_demo" => {
+                // gy (n, o) x w (o, i) -> g_x (n, i), HT+INT4 on the
+                // contracted dim (mirrors the Pallas hq kernel demo)
+                let (n, o) = (ash[0], ash[1]);
+                ensure!(bsh[0] == o, "hq demo: gy cols {o} != w rows {}",
+                        bsh[0]);
+                ensure!(o % 16 == 0, "hq demo: contracted dim must tile \
+                                      into 16, got {o}");
+                let i = bsh[1];
+                let out = layers::hq_matmul(a, n, o, b, i, 4);
+                Ok(vec![Value::F32 { shape: vec![n, i], data: out }])
+            }
+            "hla_demo" => {
+                // gy (n, o) x x (n, i) -> g_w (o, i), HLA+INT8 along N
+                let (n, o) = (ash[0], ash[1]);
+                ensure!(bsh[0] == n, "hla demo: gy rows {n} != x rows {}",
+                        bsh[0]);
+                ensure!(n % 16 == 0, "hla demo: N must tile into 16, got {n}");
+                let i = bsh[1];
+                let cfg = BackwardCfg::default();
+                let (xq, sx) = layers::hla_compress(b, n, i, cfg.rank,
+                                                    cfg.gw_bits,
+                                                    cfg.criterion);
+                let out = layers::hla_matmul(a, n, o, &xq, sx, i, cfg.rank,
+                                             cfg.gw_bits, false,
+                                             cfg.criterion);
+                Ok(vec![Value::F32 { shape: vec![o, i], data: out }])
+            }
+            other => bail!("unknown kernel demo {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::VisionDataset;
+    use crate::util::prng::Pcg32;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    #[test]
+    fn supports_the_artifact_key_families() {
+        let b = backend();
+        for key in ["train_hot_tiny", "train_fp_small", "train_hot_r4_tiny",
+                    "train_hot_lm_tiny", "fwd_hot_tiny", "bwd_hot_tiny",
+                    "grad_hot_tiny", "opt_tiny", "eval_lm_tiny", "calib_small",
+                    "lora_hotfrozen_small", "lora_fp_small", "kernel_hq_demo",
+                    "kernel_hla_demo", "train_gx_int_hla_tiny",
+                    "train_hot_mlp_small"] {
+            assert!(b.supports(key), "{key}");
+        }
+        for key in ["train_warp_tiny", "train_hot_nopreset", "kernel_nope",
+                    "lora_hotfrozen_lm_tiny"] {
+            assert!(!b.supports(key), "{key}");
+        }
+        assert_eq!(b.key_batch("train_hot_tiny"), None);
+    }
+
+    #[test]
+    fn init_matches_preset_specs() {
+        let b = backend();
+        for name in b.preset_names() {
+            let p = b.preset(&name).unwrap();
+            let init = b.init_params(&name).unwrap();
+            assert_eq!(init.len(), p.params.len(), "{name}");
+            for (v, s) in init.iter().zip(&p.params) {
+                assert_eq!(v.shape(), s.shape.as_slice(), "{name} {}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_demos_execute_and_validate() {
+        let b = backend();
+        let mut rng = Pcg32::seeded(1);
+        let gy = Value::F32 { shape: vec![32, 32],
+                              data: (0..32 * 32).map(|_| rng.normal())
+                                  .collect() };
+        let w = Value::F32 { shape: vec![32, 16],
+                             data: (0..32 * 16).map(|_| rng.normal())
+                                 .collect() };
+        let out = b.execute_raw("kernel_hq_demo", &[gy.clone(), w.clone()])
+            .unwrap();
+        assert_eq!(out[0].shape(), &[32, 16]);
+        let out = b.execute_raw("kernel_hla_demo", &[gy.clone(), w.clone()])
+            .unwrap();
+        assert_eq!(out[0].shape(), &[32, 16]);
+        assert!(b.execute_raw("kernel_hq_demo", &[]).is_err());
+        assert!(b.execute_raw("no_such_artifact", &[]).is_err());
+        let tiny = Value::F32 { shape: vec![2, 2], data: vec![0.0; 4] };
+        assert!(b.execute_raw("kernel_hq_demo",
+                              &[tiny.clone(), tiny.clone()]).is_err());
+    }
+
+    #[test]
+    fn fused_steps_descend_on_tiny_vision() {
+        let b = backend();
+        let preset = b.preset("tiny").unwrap();
+        let ds = VisionDataset::new(preset.model.seq, preset.model.in_dim,
+                                    preset.model.n_classes, 0);
+        let mut params = b.init_params("tiny").unwrap();
+        let zeros: Vec<Value> = preset.params.iter()
+            .map(crate::runtime::value::Value::zeros_like_spec)
+            .collect();
+        let (mut m, mut v) = (zeros.clone(), zeros);
+        let mask = vec![0.0f32; preset.qlinears.len()];
+        let mut losses = Vec::new();
+        for step in 0..12 {
+            let (x, y) = ds.batch(0, step as u64, 8);
+            let out = b.train_step("train_hot_tiny", &params, &m, &v,
+                                   step as f32 + 1.0, 5e-3, &mask, &x, &y)
+                .unwrap();
+            losses.push(out.loss);
+            params = out.params;
+            m = out.m;
+            v = out.v;
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        let tail: f32 = losses[9..].iter().sum::<f32>() / 3.0;
+        assert!(tail < losses[0], "loss did not decrease: {losses:?}");
+    }
+
+    #[test]
+    fn grad_plus_opt_equals_train_step() {
+        let b = backend();
+        let preset = b.preset("tiny").unwrap();
+        let ds = VisionDataset::new(preset.model.seq, preset.model.in_dim,
+                                    preset.model.n_classes, 1);
+        let params = b.init_params("tiny").unwrap();
+        let zeros: Vec<Value> = preset.params.iter()
+            .map(crate::runtime::value::Value::zeros_like_spec)
+            .collect();
+        let mask = vec![0.0f32; preset.qlinears.len()];
+        let (x, y) = ds.batch(0, 0, 8);
+        // fp is deterministic and ctx-identical across paths
+        let fused = b.train_step("train_fp_tiny", &params, &zeros, &zeros,
+                                 1.0, 1e-3, &mask, &x, &y).unwrap();
+        let g = b.grad_step("grad_fp_tiny", &params, &mask, &x, &y).unwrap();
+        let (p2, _, _) = b.opt_step("opt_tiny", &params, &g.grads, &zeros,
+                                    &zeros, 1.0, 1e-3).unwrap();
+        assert!((fused.loss - g.loss).abs() < 1e-6);
+        for (a, bb) in fused.params.iter().zip(&p2) {
+            let (av, bv) = (a.as_f32().unwrap(), bb.as_f32().unwrap());
+            for (x0, x1) in av.iter().zip(bv) {
+                assert!((x0 - x1).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,956 @@
+//! Native full-model forward/backward — the rust port of
+//! python/compile/model.py's explicit manual backprop.
+//!
+//! `forward` returns (loss, acc, ctx-list); `backward` consumes the
+//! ctx-list in reverse and produces the full gradient set. The ctx-list
+//! is the paper's Fig-5 "CTX": in split mode its entries literally cross
+//! the backend boundary as `Value`s and live in the coordinator's
+//! `CtxStore` between the calls — qlinear entries arrive HLA+INT8
+//! compressed under HOT's ABC.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::native::layers::{self, AttnCtx, BackwardCfg, CeCtx,
+                                     GeluCtx, LnCtx, QlCtx, Variant};
+use crate::backend::native::presets::ModelShape;
+use crate::hadamard::{block_hla_axis0, fwht, BLOCK};
+use crate::quant;
+use crate::runtime::manifest::{CtxSpec, TensorSpec};
+use crate::runtime::value::Value;
+
+// ---------------------------------------------------------------------------
+// Parameter view (sorted-spec order -> by-name access)
+// ---------------------------------------------------------------------------
+
+pub struct Params<'a> {
+    by_name: BTreeMap<&'a str, &'a Value>,
+}
+
+impl<'a> Params<'a> {
+    pub fn new(specs: &'a [TensorSpec], values: &'a [Value]) -> Result<Params<'a>> {
+        ensure!(specs.len() == values.len(),
+                "{} params given, preset wants {}", values.len(), specs.len());
+        let mut by_name = BTreeMap::new();
+        for (s, v) in specs.iter().zip(values) {
+            ensure!(v.shape() == s.shape.as_slice(),
+                    "param {}: shape {:?} != spec {:?}", s.name, v.shape(),
+                    s.shape);
+            by_name.insert(s.name.as_str(), v);
+        }
+        Ok(Params { by_name })
+    }
+
+    /// Build a view from explicit (name, value) pairs — later pairs win,
+    /// which is how the LoRA step overlays trainable embed/head tensors
+    /// on the frozen base.
+    pub fn from_pairs<I>(pairs: I) -> Params<'a>
+    where
+        I: IntoIterator<Item = (&'a str, &'a Value)>,
+    {
+        let mut by_name = BTreeMap::new();
+        for (name, v) in pairs {
+            by_name.insert(name, v);
+        }
+        Params { by_name }
+    }
+
+    pub fn value(&self, name: &str) -> Result<&'a Value> {
+        self.by_name
+            .get(name)
+            .copied()
+            .with_context(|| format!("no parameter {name:?}"))
+    }
+
+    pub fn f(&self, name: &str) -> Result<&'a [f32]> {
+        self.value(name)?.as_f32()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ctx entries (one per saved-for-backward primitive, forward order)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct CtxEntry {
+    pub kind: &'static str, // "ql" | "ln" | "gelu" | "attn" | "ce"
+    pub module: String,
+    /// (key, tensor) pairs, sorted by key — the flattening contract.
+    pub items: Vec<(&'static str, Value)>,
+}
+
+impl CtxEntry {
+    fn item(&self, key: &str) -> Result<&Value> {
+        self.items
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| v)
+            .with_context(|| format!("ctx {}:{} has no item {key:?}",
+                                     self.kind, self.module))
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.items.iter().any(|(k, _)| *k == key)
+    }
+}
+
+fn f32_value(shape: Vec<usize>, data: Vec<f32>) -> Value {
+    Value::F32 { shape, data }
+}
+
+fn entry_ql(module: String, ctx: QlCtx) -> CtxEntry {
+    let items = match (ctx.x, ctx.xq) {
+        (None, Some((xq, sx))) => {
+            let nc = xq.len() / ctx.i;
+            vec![
+                ("sx", f32_value(vec![], vec![sx])),
+                ("xq", Value::I8 { shape: vec![nc, ctx.i], data: xq }),
+            ]
+        }
+        (Some(x), _) => vec![("x", f32_value(vec![ctx.n, ctx.i], x))],
+        (None, None) => unreachable!("qlinear ctx holds x or xq"),
+    };
+    CtxEntry { kind: "ql", module, items }
+}
+
+fn entry_ln(module: String, ctx: LnCtx, rows: usize, d: usize) -> CtxEntry {
+    CtxEntry {
+        kind: "ln",
+        module,
+        items: vec![
+            ("rstd", f32_value(vec![rows], ctx.rstd)),
+            ("xhat", f32_value(vec![rows, d], ctx.xhat)),
+        ],
+    }
+}
+
+fn entry_gelu(module: String, ctx: GeluCtx, n: usize, m: usize) -> CtxEntry {
+    CtxEntry {
+        kind: "gelu",
+        module,
+        items: vec![
+            ("t", f32_value(vec![n, m], ctx.t)),
+            ("x", f32_value(vec![n, m], ctx.x)),
+        ],
+    }
+}
+
+fn entry_attn(module: String, ctx: AttnCtx, b: usize, h: usize, l: usize,
+              dh: usize) -> CtxEntry {
+    CtxEntry {
+        kind: "attn",
+        module,
+        items: vec![
+            ("kh", f32_value(vec![b, h, l, dh], ctx.kh)),
+            ("p", f32_value(vec![b, h, l, l], ctx.p)),
+            ("qh", f32_value(vec![b, h, l, dh], ctx.qh)),
+            ("vh", f32_value(vec![b, h, l, dh], ctx.vh)),
+        ],
+    }
+}
+
+fn entry_ce(module: String, ctx: CeCtx, n: usize, c: usize) -> CtxEntry {
+    CtxEntry {
+        kind: "ce",
+        module,
+        items: vec![
+            ("onehot", f32_value(vec![n, c], ctx.onehot)),
+            ("p", f32_value(vec![n, c], ctx.p)),
+        ],
+    }
+}
+
+// --- parsing back (split-mode backward) -------------------------------------
+
+fn ql_ctx_of(e: &CtxEntry, rank: usize) -> Result<QlCtx> {
+    if e.has("xq") {
+        let xqv = e.item("xq")?;
+        let sx = e.item("sx")?.as_f32()?[0];
+        let shape = xqv.shape();
+        ensure!(shape.len() == 2, "xq must be 2-D");
+        let (nc, i) = (shape[0], shape[1]);
+        ensure!(nc % rank == 0, "xq rows {nc} don't tile into rank {rank}");
+        Ok(QlCtx { x: None, xq: Some((xqv.as_i8()?.to_vec(), sx)),
+                   n: nc / rank * BLOCK, i })
+    } else {
+        let xv = e.item("x")?;
+        let shape = xv.shape();
+        ensure!(shape.len() == 2, "ctx x must be 2-D");
+        Ok(QlCtx { x: Some(xv.as_f32()?.to_vec()), xq: None,
+                   n: shape[0], i: shape[1] })
+    }
+}
+
+fn ln_ctx_of(e: &CtxEntry) -> Result<LnCtx> {
+    Ok(LnCtx {
+        xhat: e.item("xhat")?.as_f32()?.to_vec(),
+        rstd: e.item("rstd")?.as_f32()?.to_vec(),
+    })
+}
+
+fn gelu_ctx_of(e: &CtxEntry) -> Result<GeluCtx> {
+    Ok(GeluCtx {
+        x: e.item("x")?.as_f32()?.to_vec(),
+        t: e.item("t")?.as_f32()?.to_vec(),
+    })
+}
+
+fn attn_ctx_of(e: &CtxEntry) -> Result<AttnCtx> {
+    Ok(AttnCtx {
+        qh: e.item("qh")?.as_f32()?.to_vec(),
+        kh: e.item("kh")?.as_f32()?.to_vec(),
+        vh: e.item("vh")?.as_f32()?.to_vec(),
+        p: e.item("p")?.as_f32()?.to_vec(),
+    })
+}
+
+fn ce_ctx_of(e: &CtxEntry) -> Result<(CeCtx, usize, usize)> {
+    let pv = e.item("p")?;
+    let shape = pv.shape().to_vec();
+    ensure!(shape.len() == 2, "ce ctx p must be 2-D");
+    Ok((
+        CeCtx {
+            p: pv.as_f32()?.to_vec(),
+            onehot: e.item("onehot")?.as_f32()?.to_vec(),
+        },
+        shape[0],
+        shape[1],
+    ))
+}
+
+/// Flatten ctx entries into Values + manifest-style specs (the split-mode
+/// boundary format the `CtxStore` accounts for).
+pub fn flatten_ctx(ctxs: Vec<CtxEntry>) -> (Vec<Value>, Vec<CtxSpec>) {
+    let mut values = Vec::new();
+    let mut specs = Vec::new();
+    for e in ctxs {
+        for (key, v) in e.items {
+            specs.push(CtxSpec {
+                module: e.module.clone(),
+                kind: e.kind.to_string(),
+                key: key.to_string(),
+                shape: v.shape().to_vec(),
+                dtype: v.dtype(),
+                index: values.len(),
+            });
+            values.push(v);
+        }
+    }
+    (values, specs)
+}
+
+/// The static ctx schema for (shape, cfg, batch): (kind, module, keys).
+/// Both split-mode endpoints derive it independently, so nothing about
+/// entry boundaries needs to cross the wire.
+pub fn ctx_layout(shape: &ModelShape, cfg: &BackwardCfg, b: usize)
+                  -> Vec<(&'static str, String, Vec<&'static str>)> {
+    let n = b * shape.seq;
+    let ql_keys = |rows: usize| -> Vec<&'static str> {
+        if cfg.compresses(rows) {
+            vec!["sx", "xq"]
+        } else {
+            vec!["x"]
+        }
+    };
+    let mut out = Vec::new();
+    out.push(("ql", "embed".to_string(), ql_keys(n)));
+    for i in 0..shape.depth {
+        let pre = format!("blk{i}.");
+        if shape.has_attention() {
+            out.push(("ln", format!("{pre}ln1"), vec!["rstd", "xhat"]));
+            out.push(("ql", format!("{pre}qkv"), ql_keys(n)));
+            out.push(("attn", format!("{pre}attn"),
+                      vec!["kh", "p", "qh", "vh"]));
+            out.push(("ql", format!("{pre}proj"), ql_keys(n)));
+        }
+        out.push(("ln", format!("{pre}ln2"), vec!["rstd", "xhat"]));
+        out.push(("ql", format!("{pre}fc1"), ql_keys(n)));
+        out.push(("gelu", format!("{pre}gelu"), vec!["t", "x"]));
+        out.push(("ql", format!("{pre}fc2"), ql_keys(n)));
+    }
+    out.push(("ln", "lnf".to_string(), vec!["rstd", "xhat"]));
+    let head_rows = if shape.arch == "lm" { n } else { b };
+    out.push(("ql", "head".to_string(), ql_keys(head_rows)));
+    out.push(("ce", "loss".to_string(), vec!["onehot", "p"]));
+    out
+}
+
+/// Rebuild ctx entries from the flat Value list (split-mode backward).
+pub fn parse_ctx(shape: &ModelShape, cfg: &BackwardCfg, b: usize,
+                 flat: Vec<Value>) -> Result<Vec<CtxEntry>> {
+    let layout = ctx_layout(shape, cfg, b);
+    let want: usize = layout.iter().map(|(_, _, keys)| keys.len()).sum();
+    ensure!(flat.len() == want,
+            "{} ctx values given, schema wants {want}", flat.len());
+    let mut it = flat.into_iter();
+    let mut out = Vec::with_capacity(layout.len());
+    for (kind, module, keys) in layout {
+        let items: Vec<(&'static str, Value)> = keys
+            .into_iter()
+            .map(|k| (k, it.next().expect("length checked above")))
+            .collect();
+        out.push(CtxEntry { kind, module, items });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Forward
+// ---------------------------------------------------------------------------
+
+pub struct FwdOut {
+    pub loss: f32,
+    pub acc: f32,
+    pub ctxs: Vec<CtxEntry>,
+}
+
+/// Decode the model input into flattened (B*L, in_dim) features and
+/// return (features, batch). LM token ids are one-hot embedded so every
+/// trainable matmul stays on the HOT path (model.py `_embed_input`).
+fn embed_input(shape: &ModelShape, x: &Value) -> Result<(Vec<f32>, usize)> {
+    let (l, i) = (shape.seq, shape.in_dim);
+    if shape.arch == "lm" {
+        let dims = x.shape();
+        ensure!(dims.len() == 2 && dims[1] == l,
+                "lm input must be (b, {l}) tokens, got {dims:?}");
+        let b = dims[0];
+        let toks = match x {
+            Value::I32 { data, .. } => data,
+            _ => bail!("lm input must be i32 tokens"),
+        };
+        let mut xf = vec![0.0f32; b * l * i];
+        for (r, &t) in toks.iter().enumerate() {
+            ensure!((0..i as i32).contains(&t), "token {t} outside vocab {i}");
+            xf[r * i + t as usize] = 1.0;
+        }
+        Ok((xf, b))
+    } else {
+        let dims = x.shape();
+        ensure!(dims.len() == 3 && dims[1] == l && dims[2] == i,
+                "input must be (b, {l}, {i}), got {dims:?}");
+        Ok((x.as_f32()?.to_vec(), dims[0]))
+    }
+}
+
+fn labels_of(shape: &ModelShape, y: &Value, b: usize) -> Result<Vec<i32>> {
+    let data = match y {
+        Value::I32 { data, .. } => data,
+        _ => bail!("labels must be i32"),
+    };
+    if shape.arch == "lm" {
+        ensure!(y.shape() == [b, shape.seq].as_slice(),
+                "lm labels must be (b, seq)");
+    } else {
+        ensure!(y.shape() == [b].as_slice(), "labels must be (b,)");
+    }
+    Ok(data.clone())
+}
+
+pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
+               lqs_mask: &[f32], x: &Value, y: &Value) -> Result<FwdOut> {
+    ensure!(lqs_mask.len() == shape.n_qlinears(),
+            "lqs mask length {} != {}", lqs_mask.len(), shape.n_qlinears());
+    let (d, l, m) = (shape.d_model, shape.seq, shape.d_mlp());
+    let (xf, b) = embed_input(shape, x)?;
+    let labels = labels_of(shape, y, b)?;
+    let n = b * l;
+    let mut ctxs: Vec<CtxEntry> = Vec::new();
+
+    // embed + positional encoding
+    let (mut h, ql) = layers::qlinear_fwd(&xf, n, shape.in_dim,
+                                          p.f("embed.w")?, d,
+                                          p.f("embed.b")?, cfg);
+    ctxs.push(entry_ql("embed".into(), ql));
+    let pos = p.f("pos")?;
+    for r in 0..n {
+        let t = r % l;
+        let row = &mut h[r * d..(r + 1) * d];
+        for (v, pv) in row.iter_mut().zip(&pos[t * d..(t + 1) * d]) {
+            *v += pv;
+        }
+    }
+
+    for blk in 0..shape.depth {
+        let pre = format!("blk{blk}.");
+        if shape.has_attention() {
+            let (hn, ln) = layers::layernorm_fwd(
+                &h, n, d, p.f(&format!("{pre}ln1.g"))?,
+                p.f(&format!("{pre}ln1.b"))?);
+            ctxs.push(entry_ln(format!("{pre}ln1"), ln, n, d));
+            let (qkv, ql) = layers::qlinear_fwd(
+                &hn, n, d, p.f(&format!("{pre}attn.wqkv"))?, 3 * d,
+                p.f(&format!("{pre}attn.bqkv"))?, cfg);
+            ctxs.push(entry_ql(format!("{pre}qkv"), ql));
+            let mut q = vec![0.0f32; n * d];
+            let mut k = vec![0.0f32; n * d];
+            let mut v = vec![0.0f32; n * d];
+            for r in 0..n {
+                for j in 0..d {
+                    q[r * d + j] = qkv[r * 3 * d + j];
+                    k[r * d + j] = qkv[r * 3 * d + d + j];
+                    v[r * d + j] = qkv[r * 3 * d + 2 * d + j];
+                }
+            }
+            let (att, actx) = layers::attention_fwd(
+                &q, &k, &v, b, l, d, shape.heads, shape.arch == "lm");
+            ctxs.push(entry_attn(format!("{pre}attn"), actx, b, shape.heads,
+                                 l, d / shape.heads));
+            let (proj, ql) = layers::qlinear_fwd(
+                &att, n, d, p.f(&format!("{pre}attn.wo"))?, d,
+                p.f(&format!("{pre}attn.bo"))?, cfg);
+            ctxs.push(entry_ql(format!("{pre}proj"), ql));
+            for (hv, pv) in h.iter_mut().zip(&proj) {
+                *hv += pv;
+            }
+        }
+        let (hn, ln) = layers::layernorm_fwd(
+            &h, n, d, p.f(&format!("{pre}ln2.g"))?,
+            p.f(&format!("{pre}ln2.b"))?);
+        ctxs.push(entry_ln(format!("{pre}ln2"), ln, n, d));
+        let (f1, ql) = layers::qlinear_fwd(
+            &hn, n, d, p.f(&format!("{pre}fc1.w"))?, m,
+            p.f(&format!("{pre}fc1.b"))?, cfg);
+        ctxs.push(entry_ql(format!("{pre}fc1"), ql));
+        let (g1, gc) = layers::gelu_fwd(&f1);
+        ctxs.push(entry_gelu(format!("{pre}gelu"), gc, n, m));
+        let (f2, ql) = layers::qlinear_fwd(
+            &g1, n, m, p.f(&format!("{pre}fc2.w"))?, d,
+            p.f(&format!("{pre}fc2.b"))?, cfg);
+        ctxs.push(entry_ql(format!("{pre}fc2"), ql));
+        for (hv, fv) in h.iter_mut().zip(&f2) {
+            *hv += fv;
+        }
+    }
+
+    let (hn, ln) = layers::layernorm_fwd(&h, n, d, p.f("lnf.g")?,
+                                         p.f("lnf.b")?);
+    ctxs.push(entry_ln("lnf".into(), ln, n, d));
+
+    let c = shape.n_classes;
+    let (loss, acc, ce) = if shape.arch == "lm" {
+        let (logits, ql) = layers::qlinear_fwd(&hn, n, d, p.f("head.w")?, c,
+                                               p.f("head.b")?, cfg);
+        ctxs.push(entry_ql("head".into(), ql));
+        layers::softmax_xent_fwd(&logits, n, c, &labels)
+    } else {
+        let mut pooled = vec![0.0f32; b * d];
+        for bi in 0..b {
+            for t in 0..l {
+                let row = &hn[(bi * l + t) * d..(bi * l + t + 1) * d];
+                let dst = &mut pooled[bi * d..(bi + 1) * d];
+                for (pv, hv) in dst.iter_mut().zip(row) {
+                    *pv += hv / l as f32;
+                }
+            }
+        }
+        let (logits, ql) = layers::qlinear_fwd(&pooled, b, d, p.f("head.w")?,
+                                               c, p.f("head.b")?, cfg);
+        ctxs.push(entry_ql("head".into(), ql));
+        layers::softmax_xent_fwd(&logits, b, c, &labels)
+    };
+    ctxs.push(entry_ce("loss".into(), ce,
+                       if shape.arch == "lm" { n } else { b }, c));
+    Ok(FwdOut { loss, acc, ctxs })
+}
+
+// ---------------------------------------------------------------------------
+// Backward (walks ctxs in reverse; mirrors forward exactly)
+// ---------------------------------------------------------------------------
+
+/// Raw material for the LQS calibration diagnostics: one entry per
+/// qlinear in *reverse* model order (model.py's `diag_sink`).
+pub struct QlDiag {
+    pub wname: String,
+    pub gy: Vec<f32>,
+    pub n: usize,
+    pub o: usize,
+    pub x: Vec<f32>,
+    pub i: usize,
+}
+
+struct Walker<'a> {
+    ctxs: &'a [CtxEntry],
+    flags: Vec<f32>,
+    pos: usize,
+}
+
+impl<'a> Walker<'a> {
+    fn new(ctxs: &'a [CtxEntry], lqs_mask: &[f32]) -> Walker<'a> {
+        let mut flags = vec![0.0f32; ctxs.len()];
+        let mut qi = 0usize;
+        for (idx, e) in ctxs.iter().enumerate() {
+            if e.kind == "ql" {
+                flags[idx] = lqs_mask.get(qi).copied().unwrap_or(0.0);
+                qi += 1;
+            }
+        }
+        Walker { ctxs, flags, pos: ctxs.len() }
+    }
+
+    fn take(&mut self, kind: &str) -> Result<(&'a CtxEntry, f32)> {
+        ensure!(self.pos > 0, "ctx walk underflow (wanted {kind})");
+        self.pos -= 1;
+        let e = &self.ctxs[self.pos];
+        ensure!(e.kind == kind, "ctx walk: expected {kind}, got {} ({})",
+                e.kind, e.module);
+        Ok((e, self.flags[self.pos]))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ql_backward(gy: &[f32], n: usize, o: usize, p: &Params, wname: &str,
+               bname: &str, entry: &CtxEntry, cfg: &BackwardCfg, flag: f32,
+               need_gx: bool, grads: &mut BTreeMap<String, Vec<f32>>,
+               diag: &mut Option<&mut Vec<QlDiag>>)
+               -> Result<Option<Vec<f32>>> {
+    let wv = p.value(wname)?;
+    ensure!(wv.shape().len() == 2 && wv.shape()[0] == o,
+            "{wname}: shape {:?} incompatible with gy cols {o}", wv.shape());
+    let i = wv.shape()[1];
+    let ctx = ql_ctx_of(entry, cfg.rank)?;
+    ensure!(ctx.n == n && ctx.i == i,
+            "{wname}: ctx dims ({}, {}) != ({n}, {i})", ctx.n, ctx.i);
+    if let Some(sink) = diag.as_deref_mut() {
+        let x = ctx.x.clone().with_context(
+            || format!("{wname}: calibration needs raw FP ctx"))?;
+        sink.push(QlDiag { wname: wname.to_string(), gy: gy.to_vec(), n, o,
+                           x, i });
+    }
+    let (gx, gw, gb) =
+        layers::qlinear_bwd(gy, n, o, wv.as_f32()?, i, &ctx, cfg, flag,
+                            need_gx);
+    grads.insert(wname.to_string(), gw);
+    grads.insert(bname.to_string(), gb);
+    Ok(gx)
+}
+
+/// Full-model manual backprop; returns grads keyed like params.
+pub fn backward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
+                lqs_mask: &[f32], ctxs: &[CtxEntry],
+                mut diag: Option<&mut Vec<QlDiag>>)
+                -> Result<BTreeMap<String, Vec<f32>>> {
+    let (d, l) = (shape.d_model, shape.seq);
+    let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut w = Walker::new(ctxs, lqs_mask);
+
+    // --- loss & head ------------------------------------------------------
+    let (ce_entry, _) = w.take("ce")?;
+    let (ce, ce_rows, c) = ce_ctx_of(ce_entry)?;
+    let g_logits = layers::softmax_xent_bwd(&ce, ce_rows);
+
+    let (head_entry, head_flag) = w.take("ql")?;
+    let g_pooled_or_seq = ql_backward(&g_logits, ce_rows, c, p, "head.w",
+                                      "head.b", head_entry, cfg, head_flag,
+                                      true, &mut grads, &mut diag)?
+        .expect("head g_x requested");
+
+    let b = if shape.arch == "lm" { ce_rows / l } else { ce_rows };
+    let n = b * l;
+
+    let (lnf_entry, _) = w.take("ln")?;
+    let g_hn: Vec<f32> = if shape.arch == "lm" {
+        g_pooled_or_seq
+    } else {
+        let mut out = vec![0.0f32; n * d];
+        for bi in 0..b {
+            for t in 0..l {
+                let src = &g_pooled_or_seq[bi * d..(bi + 1) * d];
+                let dst = &mut out[(bi * l + t) * d..(bi * l + t + 1) * d];
+                for (o_, s) in dst.iter_mut().zip(src) {
+                    *o_ = s / l as f32;
+                }
+            }
+        }
+        out
+    };
+    let lnf = ln_ctx_of(lnf_entry)?;
+    let (mut g_h, gg, gb) = layers::layernorm_bwd(&g_hn, n, d, p.f("lnf.g")?,
+                                                  &lnf);
+    grads.insert("lnf.g".into(), gg);
+    grads.insert("lnf.b".into(), gb);
+
+    // --- blocks in reverse --------------------------------------------------
+    for blk in (0..shape.depth).rev() {
+        let pre = format!("blk{blk}.");
+        let m = shape.d_mlp();
+        // MLP sub-block
+        let (fc2_entry, f2_flag) = w.take("ql")?;
+        let g_f2in = ql_backward(&g_h, n, d, p, &format!("{pre}fc2.w"),
+                                 &format!("{pre}fc2.b"), fc2_entry, cfg,
+                                 f2_flag, true, &mut grads, &mut diag)?
+            .expect("fc2 g_x");
+        let (gelu_entry, _) = w.take("gelu")?;
+        let g_f1 = layers::gelu_bwd(&g_f2in, &gelu_ctx_of(gelu_entry)?);
+        let (fc1_entry, f1_flag) = w.take("ql")?;
+        let g_hn2 = ql_backward(&g_f1, n, m, p, &format!("{pre}fc1.w"),
+                                &format!("{pre}fc1.b"), fc1_entry, cfg,
+                                f1_flag, true, &mut grads, &mut diag)?
+            .expect("fc1 g_x");
+        let (ln2_entry, _) = w.take("ln")?;
+        let (g_res, gg, gb) = layers::layernorm_bwd(
+            &g_hn2, n, d, p.f(&format!("{pre}ln2.g"))?,
+            &ln_ctx_of(ln2_entry)?);
+        grads.insert(format!("{pre}ln2.g"), gg);
+        grads.insert(format!("{pre}ln2.b"), gb);
+        for (hv, rv) in g_h.iter_mut().zip(&g_res) {
+            *hv += rv;
+        }
+
+        if shape.has_attention() {
+            let (proj_entry, pr_flag) = w.take("ql")?;
+            let g_att = ql_backward(&g_h, n, d, p, &format!("{pre}attn.wo"),
+                                    &format!("{pre}attn.bo"), proj_entry, cfg,
+                                    pr_flag, true, &mut grads, &mut diag)?
+                .expect("proj g_x");
+            let (attn_entry, _) = w.take("attn")?;
+            let actx = attn_ctx_of(attn_entry)?;
+            let (g_q, g_k, g_v) = layers::attention_bwd(&g_att, &actx, b, l,
+                                                        d, shape.heads);
+            let mut g_qkv = vec![0.0f32; n * 3 * d];
+            for r in 0..n {
+                for j in 0..d {
+                    g_qkv[r * 3 * d + j] = g_q[r * d + j];
+                    g_qkv[r * 3 * d + d + j] = g_k[r * d + j];
+                    g_qkv[r * 3 * d + 2 * d + j] = g_v[r * d + j];
+                }
+            }
+            let (qkv_entry, qk_flag) = w.take("ql")?;
+            let g_hn1 = ql_backward(&g_qkv, n, 3 * d, p,
+                                    &format!("{pre}attn.wqkv"),
+                                    &format!("{pre}attn.bqkv"), qkv_entry,
+                                    cfg, qk_flag, true, &mut grads,
+                                    &mut diag)?
+                .expect("qkv g_x");
+            let (ln1_entry, _) = w.take("ln")?;
+            let (g_res, gg, gb) = layers::layernorm_bwd(
+                &g_hn1, n, d, p.f(&format!("{pre}ln1.g"))?,
+                &ln_ctx_of(ln1_entry)?);
+            grads.insert(format!("{pre}ln1.g"), gg);
+            grads.insert(format!("{pre}ln1.b"), gb);
+            for (hv, rv) in g_h.iter_mut().zip(&g_res) {
+                *hv += rv;
+            }
+        }
+    }
+
+    // --- positional encoding + embed ----------------------------------------
+    let mut g_pos = vec![0.0f32; l * d];
+    for r in 0..n {
+        let t = r % l;
+        let src = &g_h[r * d..(r + 1) * d];
+        let dst = &mut g_pos[t * d..(t + 1) * d];
+        for (o_, s) in dst.iter_mut().zip(src) {
+            *o_ += s;
+        }
+    }
+    grads.insert("pos".into(), g_pos);
+    let (embed_entry, e_flag) = w.take("ql")?;
+    ql_backward(&g_h, n, d, p, "embed.w", "embed.b", embed_entry, cfg,
+                e_flag, false, &mut grads, &mut diag)?;
+    ensure!(w.pos == 0, "{} unconsumed ctx entries", w.pos);
+    Ok(grads)
+}
+
+/// Grads map -> Values in spec order.
+pub fn grads_to_values(specs: &[TensorSpec],
+                       mut grads: BTreeMap<String, Vec<f32>>)
+                       -> Result<Vec<Value>> {
+    let mut out = Vec::with_capacity(specs.len());
+    for s in specs {
+        let g = grads
+            .remove(&s.name)
+            .with_context(|| format!("backward produced no grad for {}",
+                                     s.name))?;
+        ensure!(g.len() == s.numel(), "grad {}: {} values, spec wants {}",
+                s.name, g.len(), s.numel());
+        out.push(Value::F32 { shape: s.shape.clone(), data: g });
+    }
+    ensure!(grads.is_empty(), "backward produced extra grads: {:?}",
+            grads.keys().collect::<Vec<_>>());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// LQS calibration diagnostics (train.py make_calib_step)
+// ---------------------------------------------------------------------------
+
+fn mean_sq(xs: &[f32]) -> f64 {
+    xs.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        / xs.len().max(1) as f64
+}
+
+fn mean_sq_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64) * ((x - y) as f64))
+        .sum::<f64>()
+        / a.len().max(1) as f64
+}
+
+/// The 7 per-qlinear diagnostic vectors in model order: mse_tensor,
+/// mse_token, outlier, gx_err_hq, gx_err_hla, gw_err_hq, gw_err_hla.
+pub fn calibrate(shape: &ModelShape, p: &Params, x: &Value, y: &Value)
+                 -> Result<Vec<Vec<f32>>> {
+    let fp = BackwardCfg { variant: Variant::Fp, ..Default::default() };
+    let hot = BackwardCfg::default();
+    let mask = vec![0.0f32; shape.n_qlinears()];
+    let fwd = forward(shape, &fp, p, &mask, x, y)?;
+    let mut sink: Vec<QlDiag> = Vec::new();
+    backward(shape, &fp, p, &mask, &fwd.ctxs, Some(&mut sink))?;
+    sink.reverse(); // reverse walk order -> model order
+
+    let nq = shape.n_qlinears();
+    ensure!(sink.len() == nq, "calib captured {} qlinears, want {nq}",
+            sink.len());
+    let mut outs = vec![vec![0.0f32; nq]; 7];
+    for (q, dg) in sink.iter().enumerate() {
+        let (n, o, i) = (dg.n, dg.o, dg.i);
+        let wv = p.f(&dg.wname)?;
+        let exact_gx = layers::matmul(&dg.gy, wv, n, o, i);
+        let exact_gw = layers::matmul_tn(&dg.gy, &dg.x, n, o, i);
+        let gx_norm = mean_sq(&exact_gx) + 1e-12;
+        let gw_norm = mean_sq(&exact_gw) + 1e-12;
+        if n % BLOCK == 0 {
+            let gc = block_hla_axis0(&dg.gy, n, o, hot.rank,
+                                     hot.criterion);
+            let nc = n / BLOCK * hot.rank;
+            let fq_t = layers::fake_quant(&gc, hot.gw_bits);
+            outs[0][q] = mean_sq_diff(&gc, &fq_t) as f32;
+            let s_k = quant::minmax_scale_rows(&gc, nc, o, hot.gw_bits);
+            let mut fq_k = vec![0.0f32; nc * o];
+            for r in 0..nc {
+                for cix in 0..o {
+                    let qv = quant::quantize_ps_one(gc[r * o + cix], s_k[r],
+                                                    hot.gw_bits);
+                    fq_k[r * o + cix] = qv as f32 * s_k[r];
+                }
+            }
+            outs[1][q] = mean_sq_diff(&gc, &fq_k) as f32;
+            let ghla = layers::lbp_gw(&dg.gy, n, o, &dg.x, i, hot.rank);
+            outs[6][q] = (mean_sq_diff(&ghla, &exact_gw) / gw_norm) as f32;
+            let gx_hla = layers::lbp_gx(&dg.gy, n, o, wv, i, hot.rank);
+            outs[4][q] = (mean_sq_diff(&gx_hla, &exact_gx) / gx_norm) as f32;
+            let mut gy_t = dg.gy.clone();
+            fwht::block_fwht_cols(&mut gy_t, n, o);
+            let mut x_t = dg.x.clone();
+            fwht::block_fwht_cols(&mut x_t, n, i);
+            let gw_hq = layers::matmul_tn(&layers::fake_quant(&gy_t, 4),
+                                          &layers::fake_quant(&x_t, 4), n, o,
+                                          i);
+            outs[5][q] = (mean_sq_diff(&gw_hq, &exact_gw) / gw_norm) as f32;
+        }
+        if o % BLOCK == 0 {
+            let gx_hq = layers::hq_matmul(&dg.gy, n, o, wv, i, hot.gx_bits);
+            outs[3][q] = (mean_sq_diff(&gx_hq, &exact_gx) / gx_norm) as f32;
+        }
+        // token-outlier structure of g_y (Fig 6/9)
+        let mut mx = 0.0f64;
+        let mut mean = 0.0f64;
+        for r in 0..n {
+            let amax = dg.gy[r * o..(r + 1) * o]
+                .iter()
+                .fold(0.0f32, |a, v| a.max(v.abs())) as f64;
+            mx = mx.max(amax);
+            mean += amax / n as f64;
+        }
+        outs[2][q] = (mx / (mean + 1e-12)) as f32;
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::presets;
+    use crate::util::prng::Pcg32;
+
+    fn test_shape() -> ModelShape {
+        ModelShape { arch: "vit", d_model: 16, depth: 1, heads: 2, seq: 16,
+                     in_dim: 8, n_classes: 3, mlp_ratio: 2 }
+    }
+
+    fn batch(shape: &ModelShape, b: usize, seed: u64) -> (Value, Value) {
+        let mut rng = Pcg32::seeded(seed);
+        if shape.arch == "lm" {
+            let n = b * shape.seq;
+            let x: Vec<i32> = (0..n)
+                .map(|_| rng.below(shape.in_dim as u32) as i32)
+                .collect();
+            let y: Vec<i32> = (0..n)
+                .map(|_| rng.below(shape.n_classes as u32) as i32)
+                .collect();
+            (Value::I32 { shape: vec![b, shape.seq], data: x },
+             Value::I32 { shape: vec![b, shape.seq], data: y })
+        } else {
+            let n = b * shape.seq * shape.in_dim;
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<i32> = (0..b)
+                .map(|_| rng.below(shape.n_classes as u32) as i32)
+                .collect();
+            (Value::F32 { shape: vec![b, shape.seq, shape.in_dim], data: x },
+             Value::I32 { shape: vec![b], data: y })
+        }
+    }
+
+    fn fp_cfg() -> BackwardCfg {
+        BackwardCfg { variant: Variant::Fp, ..Default::default() }
+    }
+
+    #[test]
+    fn forward_runs_and_ctx_matches_layout() {
+        let shape = test_shape();
+        let specs = presets::param_specs(&shape);
+        let values = presets::init_values(&shape, 1);
+        let p = Params::new(&specs, &values).unwrap();
+        let mask = vec![0.0; shape.n_qlinears()];
+        let (x, y) = batch(&shape, 4, 2);
+        for cfg in [fp_cfg(), BackwardCfg::default()] {
+            let out = forward(&shape, &cfg, &p, &mask, &x, &y).unwrap();
+            assert!(out.loss.is_finite() && out.loss > 0.0);
+            assert!((0.0..=1.0).contains(&out.acc));
+            let layout = ctx_layout(&shape, &cfg, 4);
+            assert_eq!(out.ctxs.len(), layout.len());
+            for (e, (kind, module, keys)) in out.ctxs.iter().zip(&layout) {
+                assert_eq!(e.kind, *kind, "{module}");
+                assert_eq!(&e.module, module);
+                let got: Vec<&str> = e.items.iter().map(|(k, _)| *k).collect();
+                assert_eq!(&got, keys, "{module}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp_backward_matches_directional_derivative() {
+        let shape = test_shape();
+        let specs = presets::param_specs(&shape);
+        let values = presets::init_values(&shape, 3);
+        let mask = vec![0.0; shape.n_qlinears()];
+        let (x, y) = batch(&shape, 4, 4);
+        let cfg = fp_cfg();
+
+        let loss_of = |vals: &[Value]| -> f32 {
+            let p = Params::new(&specs, vals).unwrap();
+            forward(&shape, &cfg, &p, &mask, &x, &y).unwrap().loss
+        };
+
+        let p = Params::new(&specs, &values).unwrap();
+        let fwd = forward(&shape, &cfg, &p, &mask, &x, &y).unwrap();
+        let grads = backward(&shape, &cfg, &p, &mask, &fwd.ctxs, None).unwrap();
+
+        // random unit direction over the full parameter set
+        let mut rng = Pcg32::seeded(5);
+        let dirs: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| (0..s.numel()).map(|_| rng.normal()).collect())
+            .collect();
+        let norm: f32 = dirs
+            .iter()
+            .flat_map(|d| d.iter())
+            .map(|v| v * v)
+            .sum::<f32>()
+            .sqrt();
+
+        let mut analytic = 0.0f32;
+        for (s, dir) in specs.iter().zip(&dirs) {
+            let g = &grads[&s.name];
+            for (gv, dv) in g.iter().zip(dir) {
+                analytic += gv * dv / norm;
+            }
+        }
+
+        let eps = 2e-3f32;
+        let shift = |sign: f32| -> Vec<Value> {
+            values
+                .iter()
+                .zip(&dirs)
+                .map(|(v, dir)| {
+                    let data = v
+                        .as_f32()
+                        .unwrap()
+                        .iter()
+                        .zip(dir)
+                        .map(|(a, d)| a + sign * eps * d / norm)
+                        .collect();
+                    Value::F32 { shape: v.shape().to_vec(), data }
+                })
+                .collect()
+        };
+        let fd = (loss_of(&shift(1.0)) - loss_of(&shift(-1.0))) / (2.0 * eps);
+        assert!((analytic - fd).abs() < 5e-3 + 0.05 * fd.abs(),
+                "directional derivative mismatch: analytic {analytic} vs \
+                 finite-diff {fd}");
+    }
+
+    #[test]
+    fn split_roundtrip_matches_direct_backward() {
+        let shape = test_shape();
+        let specs = presets::param_specs(&shape);
+        let values = presets::init_values(&shape, 6);
+        let p = Params::new(&specs, &values).unwrap();
+        let mask = vec![0.0; shape.n_qlinears()];
+        let (x, y) = batch(&shape, 4, 7);
+        let cfg = BackwardCfg::default(); // hot + abc
+
+        let fwd = forward(&shape, &cfg, &p, &mask, &x, &y).unwrap();
+        let direct = backward(&shape, &cfg, &p, &mask, &fwd.ctxs, None).unwrap();
+
+        let fwd2 = forward(&shape, &cfg, &p, &mask, &x, &y).unwrap();
+        let (flat, specs_ctx) = flatten_ctx(fwd2.ctxs);
+        assert!(!flat.is_empty());
+        assert_eq!(flat.len(), specs_ctx.len());
+        // HOT+ABC: at least one int8 compressed entry crosses the boundary
+        assert!(specs_ctx.iter().any(|s| s.key == "xq"));
+        let parsed = parse_ctx(&shape, &cfg, 4, flat).unwrap();
+        let roundtrip = backward(&shape, &cfg, &p, &mask, &parsed, None).unwrap();
+        for (name, g) in &direct {
+            let r = &roundtrip[name];
+            for (a, b) in g.iter().zip(r) {
+                assert!((a - b).abs() < 1e-6, "{name}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn grads_cover_every_param() {
+        for arch in ["vit", "lm", "mlp"] {
+            let shape = ModelShape { arch, d_model: 16, depth: 1, heads: 2,
+                                     seq: 16, in_dim: 8, n_classes: 3,
+                                     mlp_ratio: 2 };
+            let specs = presets::param_specs(&shape);
+            let values = presets::init_values(&shape, 8);
+            let p = Params::new(&specs, &values).unwrap();
+            let mask = vec![0.0; shape.n_qlinears()];
+            let (x, y) = batch(&shape, 2, 9);
+            let cfg = BackwardCfg::default();
+            let fwd = forward(&shape, &cfg, &p, &mask, &x, &y).unwrap();
+            let grads = backward(&shape, &cfg, &p, &mask, &fwd.ctxs, None)
+                .unwrap();
+            let gv = grads_to_values(&specs, grads).unwrap();
+            assert_eq!(gv.len(), specs.len(), "{arch}");
+            for (g, s) in gv.iter().zip(&specs) {
+                assert_eq!(g.shape(), s.shape.as_slice(), "{arch} {}", s.name);
+                assert!(g.as_f32().unwrap().iter().all(|v| v.is_finite()),
+                        "{arch} {}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_vectors_are_sane() {
+        let shape = test_shape();
+        let specs = presets::param_specs(&shape);
+        let values = presets::init_values(&shape, 10);
+        let p = Params::new(&specs, &values).unwrap();
+        let (x, y) = batch(&shape, 4, 11);
+        let outs = calibrate(&shape, &p, &x, &y).unwrap();
+        assert_eq!(outs.len(), 7);
+        let nq = shape.n_qlinears();
+        for v in &outs {
+            assert_eq!(v.len(), nq);
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+        // outlier ratio (max/mean of row maxima) is >= 1 by construction
+        assert!(outs[2].iter().all(|&r| r >= 1.0 - 1e-5));
+    }
+}

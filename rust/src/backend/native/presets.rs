@@ -1,0 +1,241 @@
+//! Native model presets — the rust mirror of python/compile/config.py's
+//! `PRESETS` plus the parameter-pytree layout of model.py. Parameter
+//! vectors everywhere in the repo are flattened in sorted-name order (the
+//! same convention aot.py bakes into the artifact manifest), so the two
+//! backends interoperate on checkpoints and run configs.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{DType, ModelMeta, Preset, TensorSpec};
+use crate::runtime::value::Value;
+use crate::util::prng::Pcg32;
+
+/// Architecture + dimensions of one preset (config.py `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    pub arch: &'static str, // "vit" | "lm" | "mlp"
+    pub d_model: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub in_dim: usize,
+    pub n_classes: usize,
+    pub mlp_ratio: usize,
+}
+
+impl ModelShape {
+    pub fn d_mlp(&self) -> usize {
+        self.d_model * self.mlp_ratio
+    }
+
+    pub fn has_attention(&self) -> bool {
+        matches!(self.arch, "vit" | "lm")
+    }
+
+    pub fn n_qlinears(&self) -> usize {
+        let per_block = if self.has_attention() { 4 } else { 2 };
+        2 + per_block * self.depth
+    }
+}
+
+/// The preset table (config.py PRESETS, verbatim dimensions).
+pub fn builtin_presets() -> Vec<(&'static str, ModelShape)> {
+    vec![
+        ("tiny", ModelShape { arch: "vit", d_model: 32, depth: 2, heads: 2,
+                              seq: 16, in_dim: 16, n_classes: 4, mlp_ratio: 2 }),
+        ("small", ModelShape { arch: "vit", d_model: 96, depth: 4, heads: 4,
+                               seq: 32, in_dim: 48, n_classes: 16, mlp_ratio: 4 }),
+        ("base", ModelShape { arch: "vit", d_model: 256, depth: 8, heads: 8,
+                              seq: 64, in_dim: 96, n_classes: 32, mlp_ratio: 4 }),
+        ("lm_tiny", ModelShape { arch: "lm", d_model: 64, depth: 2, heads: 2,
+                                 seq: 32, in_dim: 128, n_classes: 128,
+                                 mlp_ratio: 2 }),
+        ("lm_small", ModelShape { arch: "lm", d_model: 128, depth: 4, heads: 4,
+                                  seq: 64, in_dim: 256, n_classes: 256,
+                                  mlp_ratio: 4 }),
+        ("mlp_small", ModelShape { arch: "mlp", d_model: 96, depth: 4, heads: 1,
+                                   seq: 32, in_dim: 48, n_classes: 16,
+                                   mlp_ratio: 4 }),
+    ]
+}
+
+/// (name, shape) pairs of every parameter, *unsorted* (model.py layout).
+fn raw_param_shapes(s: &ModelShape) -> Vec<(String, Vec<usize>)> {
+    let (d, m, l) = (s.d_model, s.d_mlp(), s.seq);
+    let mut p: Vec<(String, Vec<usize>)> = vec![
+        ("embed.w".into(), vec![d, s.in_dim]),
+        ("embed.b".into(), vec![d]),
+        ("pos".into(), vec![l, d]),
+        ("lnf.g".into(), vec![d]),
+        ("lnf.b".into(), vec![d]),
+        ("head.w".into(), vec![s.n_classes, d]),
+        ("head.b".into(), vec![s.n_classes]),
+    ];
+    for i in 0..s.depth {
+        let pre = format!("blk{i}.");
+        p.push((format!("{pre}ln2.g"), vec![d]));
+        p.push((format!("{pre}ln2.b"), vec![d]));
+        p.push((format!("{pre}fc1.w"), vec![m, d]));
+        p.push((format!("{pre}fc1.b"), vec![m]));
+        p.push((format!("{pre}fc2.w"), vec![d, m]));
+        p.push((format!("{pre}fc2.b"), vec![d]));
+        if s.has_attention() {
+            p.push((format!("{pre}ln1.g"), vec![d]));
+            p.push((format!("{pre}ln1.b"), vec![d]));
+            p.push((format!("{pre}attn.wqkv"), vec![3 * d, d]));
+            p.push((format!("{pre}attn.bqkv"), vec![3 * d]));
+            p.push((format!("{pre}attn.wo"), vec![d, d]));
+            p.push((format!("{pre}attn.bo"), vec![d]));
+        }
+    }
+    p
+}
+
+/// Parameter specs in manifest (sorted-name) order.
+pub fn param_specs(s: &ModelShape) -> Vec<TensorSpec> {
+    let mut shapes = raw_param_shapes(s);
+    shapes.sort_by(|a, b| a.0.cmp(&b.0));
+    shapes
+        .into_iter()
+        .map(|(name, shape)| TensorSpec { name, shape, dtype: DType::F32 })
+        .collect()
+}
+
+/// LQS-mask ordering of the quantized linears (model.py qlinear_names).
+pub fn qlinear_names(s: &ModelShape) -> Vec<String> {
+    let mut names = vec!["embed".to_string()];
+    for i in 0..s.depth {
+        if s.has_attention() {
+            names.push(format!("blk{i}.qkv"));
+            names.push(format!("blk{i}.proj"));
+        }
+        names.push(format!("blk{i}.fc1"));
+        names.push(format!("blk{i}.fc2"));
+    }
+    names.push("head".to_string());
+    names
+}
+
+/// Manifest-compatible `Preset` view of a native preset.
+pub fn to_preset(name: &str, s: &ModelShape) -> Preset {
+    Preset {
+        name: name.to_string(),
+        model: ModelMeta {
+            arch: s.arch.to_string(),
+            d_model: s.d_model,
+            depth: s.depth,
+            heads: s.heads,
+            seq: s.seq,
+            in_dim: s.in_dim,
+            n_classes: s.n_classes,
+        },
+        params: param_specs(s),
+        qlinears: qlinear_names(s),
+        // native presets need no on-disk init blob; init_values() below
+        // generates the deterministic seed state instead
+        init_blob: String::new(),
+    }
+}
+
+/// Deterministic initial parameters (sorted-spec order). Dense weights
+/// get Glorot-style N(0, sqrt(2/(o+i))), `pos` N(0, 0.02), norm gains 1,
+/// everything else 0 — the same scheme as model.py init_params (exact
+/// bytes differ across backends; only the distribution matters).
+pub fn init_values(s: &ModelShape, seed: u64) -> Vec<Value> {
+    let mut rng = Pcg32::new(seed, 0x1417);
+    param_specs(s)
+        .iter()
+        .map(|spec| {
+            let n = spec.numel();
+            let mut data = vec![0.0f32; n];
+            let name = spec.name.as_str();
+            if name == "pos" {
+                rng.fill_normal(&mut data, 0.0, 0.02);
+            } else if name.ends_with(".g") {
+                data.iter_mut().for_each(|v| *v = 1.0);
+            } else if spec.shape.len() == 2 {
+                let (o, i) = (spec.shape[0], spec.shape[1]);
+                let std = (2.0 / (o + i) as f32).sqrt();
+                rng.fill_normal(&mut data, 0.0, std);
+            }
+            // 1-D non-gain tensors (biases) stay zero
+            Value::F32 { shape: spec.shape.clone(), data }
+        })
+        .collect()
+}
+
+/// Fetch a builtin shape by preset name.
+pub fn shape_of(name: &str) -> Result<ModelShape> {
+    for (n, s) in builtin_presets() {
+        if n == name {
+            return Ok(s);
+        }
+    }
+    bail!("unknown native preset {name:?} (have: {:?})",
+          builtin_presets().iter().map(|(n, _)| *n).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_sorted_and_complete() {
+        let s = shape_of("tiny").unwrap();
+        let specs = param_specs(&s);
+        for w in specs.windows(2) {
+            assert!(w[0].name < w[1].name, "{} !< {}", w[0].name, w[1].name);
+        }
+        // vit: 7 global + 12 per block
+        assert_eq!(specs.len(), 7 + 12 * s.depth);
+        let total: usize = specs.iter().map(TensorSpec::numel).sum();
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn mlp_has_no_attention_params() {
+        let s = shape_of("mlp_small").unwrap();
+        let specs = param_specs(&s);
+        assert!(specs.iter().all(|p| !p.name.contains("attn")));
+        assert_eq!(specs.len(), 7 + 6 * s.depth);
+        assert_eq!(s.n_qlinears(), 2 + 2 * s.depth);
+    }
+
+    #[test]
+    fn qlinear_count_matches_shape() {
+        for (name, s) in builtin_presets() {
+            assert_eq!(qlinear_names(&s).len(), s.n_qlinears(), "{name}");
+        }
+    }
+
+    #[test]
+    fn init_deterministic_and_scaled() {
+        let s = shape_of("tiny").unwrap();
+        let a = init_values(&s, 0);
+        let b = init_values(&s, 0);
+        let specs = param_specs(&s);
+        for (i, spec) in specs.iter().enumerate() {
+            assert_eq!(a[i].as_f32().unwrap(), b[i].as_f32().unwrap(),
+                       "{}", spec.name);
+            let data = a[i].as_f32().unwrap();
+            if spec.name.ends_with(".g") {
+                assert!(data.iter().all(|&v| v == 1.0));
+            } else if spec.name.ends_with(".b") {
+                assert!(data.iter().all(|&v| v == 0.0));
+            } else if spec.shape.len() == 2 {
+                let amax = data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                assert!(amax > 0.0 && amax < 2.0, "{}: {amax}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn preset_view_matches() {
+        let s = shape_of("lm_tiny").unwrap();
+        let p = to_preset("lm_tiny", &s);
+        assert_eq!(p.model.arch, "lm");
+        assert_eq!(p.params.len(), param_specs(&s).len());
+        assert_eq!(p.qlinears.len(), s.n_qlinears());
+        assert!(shape_of("nope").is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! `Executor` implementation for the PJRT artifact `Runtime` (behind the
+//! `pjrt` feature). The artifact calling conventions — flat argument
+//! lists in manifest order, outputs popped from the tail — live here, so
+//! the coordinator speaks only the semantic trait.
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{Executor, ForwardOut, GradOut, LoraMeta, StepOut};
+use crate::runtime::value::Value;
+use crate::runtime::{Preset, Runtime};
+
+fn mask_value(lqs_mask: &[f32]) -> Value {
+    Value::F32 { shape: vec![lqs_mask.len()], data: lqs_mask.to_vec() }
+}
+
+/// Pop `[state..., loss, acc]`-shaped outputs into a StepOut.
+fn pop_step_out(mut outs: Vec<Value>, np: usize, key: &str) -> Result<StepOut> {
+    let acc = outs.pop().context("acc")?.scalar()?;
+    let loss = outs.pop().context("loss")?.scalar()?;
+    if outs.len() != 3 * np {
+        bail!("{key}: {} state tensors returned, want {}", outs.len(), 3 * np);
+    }
+    let v = outs.split_off(2 * np);
+    let m = outs.split_off(np);
+    Ok(StepOut { params: outs, m, v, loss, acc })
+}
+
+impl Executor for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn describe(&self) -> String {
+        format!("PJRT artifact backend — suite {:?}, {} artifacts, {} presets",
+                self.manifest.suite, self.manifest.artifacts.len(),
+                self.manifest.presets.len())
+    }
+
+    fn preset_names(&self) -> Vec<String> {
+        self.manifest.presets.keys().cloned().collect()
+    }
+
+    fn preset(&self, name: &str) -> Result<Preset> {
+        Ok(self.manifest.preset(name)?.clone())
+    }
+
+    fn init_params(&self, preset: &str) -> Result<Vec<Value>> {
+        let p = self.manifest.preset(preset)?;
+        let init = self.manifest.load_init(preset)?;
+        Ok(p.params
+            .iter()
+            .zip(init)
+            .map(|(spec, data)| Value::F32 { shape: spec.shape.clone(), data })
+            .collect())
+    }
+
+    fn default_batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    fn supports(&self, key: &str) -> bool {
+        self.manifest.artifacts.contains_key(key)
+    }
+
+    fn key_batch(&self, key: &str) -> Option<usize> {
+        // PJRT graphs are shape-static: an artifact's batch always wins,
+        // falling back to the suite-wide lowering batch — even when the
+        // key isn't lowered (eval/calibrate against a partial suite must
+        // still size batches for the shape-static artifacts they do hit).
+        Some(self.manifest
+            .artifacts
+            .get(key)
+            .and_then(|a| a.batch)
+            .unwrap_or(self.manifest.batch))
+    }
+
+    fn train_step(&self, key: &str, params: &[Value], m: &[Value],
+                  v: &[Value], step: f32, lr: f32, lqs_mask: &[f32],
+                  x: &Value, y: &Value) -> Result<StepOut> {
+        let step_v = Value::scalar_f32(step);
+        let lr_v = Value::scalar_f32(lr);
+        let mask_v = mask_value(lqs_mask);
+        let mut args: Vec<&Value> = params.iter().chain(m).chain(v).collect();
+        args.push(&step_v);
+        args.push(&lr_v);
+        args.push(&mask_v);
+        args.push(x);
+        args.push(y);
+        pop_step_out(self.execute_refs(key, &args)?, params.len(), key)
+    }
+
+    fn forward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                    x: &Value, y: &Value) -> Result<ForwardOut> {
+        let meta = self.manifest.artifact(key)?.clone();
+        let mask_v = mask_value(lqs_mask);
+        let mut args: Vec<&Value> = params.iter().collect();
+        args.push(&mask_v);
+        args.push(x);
+        args.push(y);
+        let mut outs = self.execute_refs(key, &args)?;
+        let ctx = outs.split_off(2);
+        let acc = outs.pop().context("acc")?.scalar()?;
+        let loss = outs.pop().context("loss")?.scalar()?;
+        Ok(ForwardOut { loss, acc, ctx, ctx_specs: meta.ctx })
+    }
+
+    fn backward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                     x: &Value, ctx: Vec<Value>) -> Result<Vec<Value>> {
+        let mask_v = mask_value(lqs_mask);
+        let mut args: Vec<&Value> = params.iter().collect();
+        args.push(&mask_v);
+        args.push(x);
+        args.extend(ctx.iter());
+        self.execute_refs(key, &args)
+    }
+
+    fn grad_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+                 x: &Value, y: &Value) -> Result<GradOut> {
+        let mask_v = mask_value(lqs_mask);
+        let mut args: Vec<&Value> = params.iter().collect();
+        args.push(&mask_v);
+        args.push(x);
+        args.push(y);
+        let mut outs = self.execute_refs(key, &args)?;
+        let acc = outs.pop().context("acc")?.scalar()?;
+        let loss = outs.pop().context("loss")?.scalar()?;
+        if outs.len() != params.len() {
+            bail!("{key}: grad arity {} != {}", outs.len(), params.len());
+        }
+        Ok(GradOut { grads: outs, loss, acc })
+    }
+
+    fn opt_step(&self, key: &str, params: &[Value], grads: &[Value],
+                m: &[Value], v: &[Value], step: f32, lr: f32)
+                -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)> {
+        let np = params.len();
+        let step_v = Value::scalar_f32(step);
+        let lr_v = Value::scalar_f32(lr);
+        let mut args: Vec<&Value> =
+            params.iter().chain(grads).chain(m).chain(v).collect();
+        args.push(&step_v);
+        args.push(&lr_v);
+        let mut outs = self.execute_refs(key, &args)?;
+        if outs.len() != 3 * np {
+            bail!("{key}: opt arity {} != {}", outs.len(), 3 * np);
+        }
+        let v = outs.split_off(2 * np);
+        let m = outs.split_off(np);
+        Ok((outs, m, v))
+    }
+
+    fn eval_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
+                 -> Result<(f32, f32)> {
+        let mut args: Vec<&Value> = params.iter().collect();
+        args.push(x);
+        args.push(y);
+        let outs = self.execute_refs(key, &args)?;
+        Ok((outs[0].scalar()?, outs[1].scalar()?))
+    }
+
+    fn calib_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
+                  -> Result<Vec<Vec<f32>>> {
+        let mut args: Vec<&Value> = params.iter().collect();
+        args.push(x);
+        args.push(y);
+        let outs = self.execute_refs(key, &args)?;
+        outs.iter()
+            .map(|v| v.as_f32().map(|s| s.to_vec()))
+            .collect()
+    }
+
+    fn lora_meta(&self, key: &str) -> Result<LoraMeta> {
+        let meta = self.manifest.artifact(key)?;
+        Ok(LoraMeta {
+            preset: meta.preset.clone().context("lora artifact preset")?,
+            trainable: meta.trainable.clone(),
+            batch: Some(meta.batch.unwrap_or(self.manifest.batch)),
+        })
+    }
+
+    fn lora_step(&self, key: &str, base: &[Value], trainable: &[Value],
+                 m: &[Value], v: &[Value], step: f32, lr: f32,
+                 lqs_mask: &[f32], x: &Value, y: &Value) -> Result<StepOut> {
+        let step_v = Value::scalar_f32(step);
+        let lr_v = Value::scalar_f32(lr);
+        let mask_v = mask_value(lqs_mask);
+        let mut args: Vec<&Value> =
+            base.iter().chain(trainable).chain(m).chain(v).collect();
+        args.push(&step_v);
+        args.push(&lr_v);
+        args.push(&mask_v);
+        args.push(x);
+        args.push(y);
+        pop_step_out(self.execute_refs(key, &args)?, trainable.len(), key)
+    }
+
+    fn execute_raw(&self, key: &str, args: &[Value]) -> Result<Vec<Value>> {
+        self.execute(key, args)
+    }
+}

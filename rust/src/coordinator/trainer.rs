@@ -1,11 +1,12 @@
 //! Training orchestrator: owns model/optimizer state host-side, drives
-//! the AOT step artifacts, and implements the three execution modes —
+//! an `Executor` backend (native CPU or PJRT artifacts), and implements
+//! the three execution modes —
 //!
-//!   * fused      one HLO call per step (fwd+bwd+AdamW)
+//!   * fused      one backend call per step (fwd+bwd+AdamW)
 //!   * split      fwd -> rust-held ABC ctx buffers -> bwd -> opt
 //!                (the Fig-5 pipeline with the CTX owned by this process)
-//!   * accum      gradient accumulation over microbatches (grad artifact
-//!                per microbatch, host-side summation, one opt call)
+//!   * accum      gradient accumulation over microbatches (grad call per
+//!                microbatch, host-side summation, one opt call)
 //!
 //! plus LQS calibration before training and LoRA fine-tuning state.
 
@@ -14,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::Executor;
 use crate::config::RunConfig;
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::ctx::CtxStore;
@@ -21,7 +23,7 @@ use crate::coordinator::lqs::CalibReport;
 use crate::coordinator::metrics::{MetricsLog, StepRecord};
 use crate::data::{LmDataset, VisionDataset};
 use crate::runtime::value::Value;
-use crate::runtime::{Preset, Runtime};
+use crate::runtime::Preset;
 
 pub enum DataSource {
     Vision(VisionDataset),
@@ -45,7 +47,7 @@ pub enum Mode {
 }
 
 pub struct Trainer {
-    pub rt: Arc<Runtime>,
+    pub rt: Arc<dyn Executor>,
     pub cfg: RunConfig,
     pub preset: Preset,
     pub params: Vec<Value>,
@@ -56,21 +58,15 @@ pub struct Trainer {
     pub ctx: CtxStore,
     pub data: DataSource,
     pub step: usize,
-    /// Execute a specific train-step artifact instead of the
+    /// Execute a specific train-step key instead of the
     /// `train_{variant}_{preset}` default (rank-sweep benches etc.).
     pub key_override: Option<String>,
 }
 
 impl Trainer {
-    pub fn new(rt: Arc<Runtime>, cfg: RunConfig) -> Result<Trainer> {
-        let preset = rt.manifest.preset(&cfg.preset)?.clone();
-        let init = rt.manifest.load_init(&cfg.preset)?;
-        let params: Vec<Value> = preset
-            .params
-            .iter()
-            .zip(init)
-            .map(|(spec, data)| Value::F32 { shape: spec.shape.clone(), data })
-            .collect();
+    pub fn new(rt: Arc<dyn Executor>, cfg: RunConfig) -> Result<Trainer> {
+        let preset = rt.preset(&cfg.preset)?;
+        let params = rt.init_params(&cfg.preset)?;
         let zeros: Vec<Value> = preset
             .params
             .iter()
@@ -102,21 +98,12 @@ impl Trainer {
     }
 
     // ------------------------------------------------------------------
-    // artifact keys
+    // step keys
     // ------------------------------------------------------------------
 
     pub fn train_key(&self) -> String {
         self.key_override.clone().unwrap_or_else(
             || format!("train_{}_{}", self.cfg.variant, self.cfg.preset))
-    }
-
-    fn mask_value(&self) -> Value {
-        Value::F32 { shape: vec![self.lqs_mask.len()],
-                     data: self.lqs_mask.clone() }
-    }
-
-    fn state_refs(&self) -> Vec<&Value> {
-        self.params.iter().chain(&self.m).chain(&self.v).collect()
     }
 
     // ------------------------------------------------------------------
@@ -125,23 +112,13 @@ impl Trainer {
 
     pub fn calibrate(&mut self) -> Result<Option<CalibReport>> {
         let key = format!("calib_{}", self.cfg.preset);
-        if self.cfg.calib_batches == 0
-            || self.rt.manifest.artifacts.get(&key).is_none()
-        {
+        if self.cfg.calib_batches == 0 || !self.rt.supports(&key) {
             return Ok(None);
         }
         let mut per_batch = Vec::new();
         for b in 0..self.cfg.calib_batches {
             let (x, y) = self.data.batch(2, b as u64, self.batch_size());
-            let mut args: Vec<&Value> = self.params.iter().collect();
-            args.push(&x);
-            args.push(&y);
-            let outs = self.rt.execute_refs(&key, &args)?;
-            per_batch.push(
-                outs.iter()
-                    .map(|v| v.as_f32().map(|s| s.to_vec()))
-                    .collect::<Result<Vec<_>>>()?,
-            );
+            per_batch.push(self.rt.calib_step(&key, &self.params, &x, &y)?);
         }
         let report = CalibReport::from_batches(&self.preset.qlinears,
                                                &per_batch,
@@ -153,12 +130,12 @@ impl Trainer {
     }
 
     pub fn batch_size(&self) -> usize {
+        // artifact-pinned batch wins (PJRT graphs are shape-static);
+        // otherwise the run config decides (native backend)
         self.rt
-            .manifest
-            .artifacts
-            .get(&self.train_key())
-            .and_then(|a| a.batch)
-            .unwrap_or(self.rt.manifest.batch)
+            .key_batch(&self.train_key())
+            .unwrap_or(self.cfg.batch)
+            .max(1)
     }
 
     // ------------------------------------------------------------------
@@ -167,92 +144,62 @@ impl Trainer {
 
     /// One fused train step; returns (loss, acc).
     pub fn fused_step(&mut self, x: Value, y: Value) -> Result<(f32, f32)> {
-        let np = self.params.len();
-        let step_v = Value::scalar_f32(self.step as f32 + 1.0);
-        let lr_v = Value::scalar_f32(self.cfg.lr_at(self.step));
-        let mask_v = self.mask_value();
-        let mut args = self.state_refs();
-        args.push(&step_v);
-        args.push(&lr_v);
-        args.push(&mask_v);
-        args.push(&x);
-        args.push(&y);
-        let mut outs = self.rt.execute_refs(&self.train_key(), &args)?;
-        let acc = outs.pop().context("acc")?.scalar()?;
-        let loss = outs.pop().context("loss")?.scalar()?;
-        if outs.len() != 3 * np {
-            bail!("train step returned {} state tensors, want {}",
-                  outs.len(), 3 * np);
-        }
-        self.v = outs.split_off(2 * np);
-        self.m = outs.split_off(np);
-        self.params = outs;
-        Ok((loss, acc))
+        let out = self.rt.train_step(
+            &self.train_key(), &self.params, &self.m, &self.v,
+            self.step as f32 + 1.0, self.cfg.lr_at(self.step),
+            &self.lqs_mask, &x, &y)?;
+        self.params = out.params;
+        self.m = out.m;
+        self.v = out.v;
+        Ok((out.loss, out.acc))
     }
 
     /// Split mode: fwd -> ctx store -> bwd -> opt. Exercises ABC across
-    /// the HLO boundary; the compressed buffers live in `self.ctx`
+    /// the backend boundary; the compressed buffers live in `self.ctx`
     /// between the calls.
     pub fn split_step(&mut self, x: Value, y: Value) -> Result<(f32, f32)> {
         let fwd_key = format!("fwd_{}_{}", self.cfg.variant, self.cfg.preset);
         let bwd_key = format!("bwd_{}_{}", self.cfg.variant, self.cfg.preset);
         let opt_key = format!("opt_{}", self.cfg.preset);
-        let fwd_meta = self.rt.manifest.artifact(&fwd_key)?.clone();
 
-        let mask_v = self.mask_value();
-        let mut args: Vec<&Value> = self.params.iter().collect();
-        args.push(&mask_v);
-        args.push(&x);
-        args.push(&y);
-        let mut outs = self.rt.execute_refs(&fwd_key, &args)?;
-        let ctx_vals = outs.split_off(2);
-        let acc = outs.pop().context("acc")?.scalar()?;
-        let loss = outs.pop().context("loss")?.scalar()?;
-
+        let fwd = self.rt.forward_step(&fwd_key, &self.params,
+                                       &self.lqs_mask, &x, &y)?;
         let mb = self.step as u64;
-        self.ctx.put(mb, ctx_vals, &fwd_meta.ctx)?;
+        self.ctx.put(mb, fwd.ctx, &fwd.ctx_specs)?;
 
         // ... in a real pipeline other microbatches' forwards would run
         // here while ctx is held; take it back for the backward:
         let ctx_vals = self.ctx.take(mb)?;
-        let mask_v = self.mask_value();
-        let mut bargs: Vec<&Value> = self.params.iter().collect();
-        bargs.push(&mask_v);
-        bargs.push(&x);
-        bargs.extend(ctx_vals.iter());
-        let grads = self.rt.execute_refs(&bwd_key, &bargs)?;
+        let grads = self.rt.backward_step(&bwd_key, &self.params,
+                                          &self.lqs_mask, &x, ctx_vals)?;
 
         self.apply_opt(&opt_key, grads)?;
-        Ok((loss, acc))
+        Ok((fwd.loss, fwd.acc))
     }
 
     /// Gradient accumulation: `cfg.accum` microbatches through the grad
-    /// artifact, host-side averaging, one optimizer call.
+    /// step, host-side averaging, one optimizer call.
     pub fn accum_step(&mut self, base_index: u64) -> Result<(f32, f32)> {
         let grad_key = format!("grad_{}_{}", self.cfg.variant, self.cfg.preset);
         let opt_key = format!("opt_{}", self.cfg.preset);
-        let np = self.params.len();
         let mut sum: Option<Vec<Value>> = None;
         let (mut loss_s, mut acc_s) = (0.0f32, 0.0f32);
         for k in 0..self.cfg.accum {
             let (x, y) = self.data.batch(
                 0, base_index * self.cfg.accum as u64 + k as u64,
                 self.batch_size());
-            let mask_v = self.mask_value();
-            let mut args: Vec<&Value> = self.params.iter().collect();
-            args.push(&mask_v);
-            args.push(&x);
-            args.push(&y);
-            let mut outs = self.rt.execute_refs(&grad_key, &args)?;
-            acc_s += outs.pop().context("acc")?.scalar()?;
-            loss_s += outs.pop().context("loss")?.scalar()?;
-            if outs.len() != np {
-                bail!("grad step arity {} != {np}", outs.len());
+            let out = self.rt.grad_step(&grad_key, &self.params,
+                                        &self.lqs_mask, &x, &y)?;
+            loss_s += out.loss;
+            acc_s += out.acc;
+            if out.grads.len() != self.params.len() {
+                bail!("grad step arity {} != {}", out.grads.len(),
+                      self.params.len());
             }
             match &mut sum {
-                None => sum = Some(outs),
+                None => sum = Some(out.grads),
                 Some(acc) => {
-                    for (a, g) in acc.iter_mut().zip(outs) {
+                    for (a, g) in acc.iter_mut().zip(out.grads) {
                         if let (Value::F32 { data: ad, .. },
                                 Value::F32 { data: gd, .. }) = (a, g)
                         {
@@ -264,7 +211,7 @@ impl Trainer {
                 }
             }
         }
-        let mut grads = sum.unwrap();
+        let mut grads = sum.context("accum >= 1 validated by RunConfig")?;
         let inv = 1.0 / self.cfg.accum as f32;
         for g in &mut grads {
             if let Value::F32 { data, .. } = g {
@@ -278,22 +225,12 @@ impl Trainer {
     }
 
     fn apply_opt(&mut self, opt_key: &str, grads: Vec<Value>) -> Result<()> {
-        let np = self.params.len();
-        let step_v = Value::scalar_f32(self.step as f32 + 1.0);
-        let lr_v = Value::scalar_f32(self.cfg.lr_at(self.step));
-        let mut oargs: Vec<&Value> = self.params.iter().collect();
-        oargs.extend(grads.iter());
-        oargs.extend(self.m.iter());
-        oargs.extend(self.v.iter());
-        oargs.push(&step_v);
-        oargs.push(&lr_v);
-        let mut outs = self.rt.execute_refs(opt_key, &oargs)?;
-        if outs.len() != 3 * np {
-            bail!("opt step arity {} != {}", outs.len(), 3 * np);
-        }
-        self.v = outs.split_off(2 * np);
-        self.m = outs.split_off(np);
-        self.params = outs;
+        let (p, m, v) = self.rt.opt_step(
+            opt_key, &self.params, &grads, &self.m, &self.v,
+            self.step as f32 + 1.0, self.cfg.lr_at(self.step))?;
+        self.params = p;
+        self.m = m;
+        self.v = v;
         Ok(())
     }
 
@@ -334,26 +271,19 @@ impl Trainer {
         let (mut ls, mut as_) = (0.0f32, 0.0f32);
         for b in 0..n {
             let (x, y) = self.data.batch(1, b as u64, self.batch_size());
-            let mut args: Vec<&Value> = self.params.iter().collect();
-            args.push(&x);
-            args.push(&y);
-            let outs = self.rt.execute_refs(&key, &args)?;
-            ls += outs[0].scalar()?;
-            as_ += outs[1].scalar()?;
+            let (l, a) = self.rt.eval_step(&key, &self.params, &x, &y)?;
+            ls += l;
+            as_ += a;
         }
         Ok((ls / n as f32, as_ / n as f32))
     }
 
     /// Full training run per the RunConfig; returns final (eval loss, acc)
-    /// if an eval artifact exists.
+    /// if the backend can evaluate this preset.
     pub fn train(&mut self) -> Result<Option<(f32, f32)>> {
         self.calibrate()?;
         let mode = if self.cfg.accum > 1 { Mode::Accum } else { Mode::Fused };
-        let has_eval = self
-            .rt
-            .manifest
-            .artifacts
-            .contains_key(&format!("eval_{}", self.cfg.preset));
+        let has_eval = self.rt.supports(&format!("eval_{}", self.cfg.preset));
         for _ in 0..self.cfg.steps {
             let (loss, acc) = self.step_once(mode)?;
             if self.step % 20 == 0 || self.step == 1 {
@@ -410,9 +340,9 @@ impl Trainer {
 // ---------------------------------------------------------------------------
 
 pub struct LoraTrainer {
-    pub rt: Arc<Runtime>,
+    pub rt: Arc<dyn Executor>,
     pub cfg: RunConfig,
-    pub artifact: String,
+    pub key: String,
     pub base: Vec<Value>,
     pub trainable: Vec<Value>,
     pub m: Vec<Value>,
@@ -421,20 +351,14 @@ pub struct LoraTrainer {
     pub metrics: MetricsLog,
     pub data: VisionDataset,
     pub step: usize,
+    batch: usize,
 }
 
 impl LoraTrainer {
-    pub fn new(rt: Arc<Runtime>, cfg: RunConfig, artifact: &str) -> Result<Self> {
-        let meta = rt.manifest.artifact(artifact)?.clone();
-        let preset_name = meta.preset.clone().context("lora artifact preset")?;
-        let preset = rt.manifest.preset(&preset_name)?.clone();
-        let init = rt.manifest.load_init(&preset_name)?;
-        let base: Vec<Value> = preset
-            .params
-            .iter()
-            .zip(init)
-            .map(|(s, d)| Value::F32 { shape: s.shape.clone(), data: d })
-            .collect();
+    pub fn new(rt: Arc<dyn Executor>, cfg: RunConfig, key: &str) -> Result<Self> {
+        let meta = rt.lora_meta(key)?;
+        let preset = rt.preset(&meta.preset)?;
+        let base = rt.init_params(&meta.preset)?;
         // trainable init: lora_a ~ N(0, 1/r), lora_b = 0, embed/head copied
         let mut rng = crate::util::prng::Pcg32::seeded(cfg.seed ^ 0x10ae);
         let by_name: std::collections::BTreeMap<&str, &Value> = preset
@@ -465,9 +389,10 @@ impl LoraTrainer {
             .map(Value::zeros_like_spec).collect();
         let data = VisionDataset::new(preset.model.seq, preset.model.in_dim,
                                       preset.model.n_classes, cfg.seed);
+        let batch = meta.batch.unwrap_or(cfg.batch).max(1);
         Ok(LoraTrainer {
             rt,
-            artifact: artifact.to_string(),
+            key: key.to_string(),
             base,
             trainable,
             m: zeros.clone(),
@@ -477,50 +402,29 @@ impl LoraTrainer {
             data,
             cfg,
             step: 0,
+            batch,
         })
     }
 
     pub fn step_once(&mut self) -> Result<(f32, f32)> {
         let t0 = Instant::now();
-        let batch = self
-            .rt
-            .manifest
-            .artifact(&self.artifact)?
-            .batch
-            .unwrap_or(self.rt.manifest.batch);
-        let (x, y) = self.data.batch(0, self.step as u64, batch);
-        let nt = self.trainable.len();
-        let step_v = Value::scalar_f32(self.step as f32 + 1.0);
-        let lr_v = Value::scalar_f32(self.cfg.lr_at(self.step));
-        let mask_v = Value::F32 { shape: vec![self.lqs_mask.len()],
-                                  data: self.lqs_mask.clone() };
-        let mut args: Vec<&Value> = self.base.iter().collect();
-        args.extend(self.trainable.iter());
-        args.extend(self.m.iter());
-        args.extend(self.v.iter());
-        args.push(&step_v);
-        args.push(&lr_v);
-        args.push(&mask_v);
-        args.push(&x);
-        args.push(&y);
-        let mut outs = self.rt.execute_refs(&self.artifact, &args)?;
-        let acc = outs.pop().context("acc")?.scalar()?;
-        let loss = outs.pop().context("loss")?.scalar()?;
-        if outs.len() != 3 * nt {
-            bail!("lora step arity {} != {}", outs.len(), 3 * nt);
-        }
-        self.v = outs.split_off(2 * nt);
-        self.m = outs.split_off(nt);
-        self.trainable = outs;
+        let (x, y) = self.data.batch(0, self.step as u64, self.batch);
+        let out = self.rt.lora_step(
+            &self.key, &self.base, &self.trainable, &self.m, &self.v,
+            self.step as f32 + 1.0, self.cfg.lr_at(self.step),
+            &self.lqs_mask, &x, &y)?;
+        self.trainable = out.params;
+        self.m = out.m;
+        self.v = out.v;
         self.metrics.push(StepRecord {
             step: self.step,
-            loss,
-            acc,
+            loss: out.loss,
+            acc: out.acc,
             lr: self.cfg.lr_at(self.step),
             step_time_s: t0.elapsed().as_secs_f64(),
             ctx_live_bytes: 0,
         });
         self.step += 1;
-        Ok((loss, acc))
+        Ok((out.loss, out.acc))
     }
 }

@@ -116,6 +116,33 @@ mod tests {
     }
 
     #[test]
+    fn prop_expand_is_exact_adjoint_of_compress() {
+        // ⟨P x, y⟩ == ⟨x, Pᵀ y⟩ for P = block_hla_axis0 and
+        // Pᵀ = block_hla_expand_axis0, over random shapes/ranks/criteria
+        crate::util::proptest::check("hla adjoint", 30, |case| {
+            let tiles = case.usize_in(1, 3);
+            let cols = case.usize_in(1, 6);
+            let rank = case.usize_in(1, BLOCK);
+            let rows = tiles * BLOCK;
+            let crit = *case.choice(&[Criterion::Sequency, Criterion::LpL1]);
+            let x = case.f32_vec(rows * cols, 1.0);
+            let y = case.f32_vec(tiles * rank * cols, 1.0);
+            let px = block_hla_axis0(&x, rows, cols, rank, crit);
+            let pty = block_hla_expand_axis0(&y, tiles * rank, cols, rank,
+                                             crit);
+            let lhs: f32 = px.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let rhs: f32 = x.iter().zip(&pty).map(|(a, b)| a * b).sum();
+            let scale = lhs.abs().max(rhs.abs()).max(1.0);
+            if (lhs - rhs).abs() / scale < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("⟨Px,y⟩={lhs} != ⟨x,Pᵀy⟩={rhs} \
+                             (tiles={tiles} cols={cols} rank={rank})"))
+            }
+        });
+    }
+
+    #[test]
     fn prop_hla_error_monotone_in_rank() {
         crate::util::proptest::check("hla error monotone", 20, |case| {
             let tiles = case.usize_in(1, 3);

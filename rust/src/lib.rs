@@ -3,15 +3,19 @@
 //! Reproduction of Kim et al., "HOT: Hadamard-based Optimized Training"
 //! (2025). Architecture (see DESIGN.md):
 //!
-//!   * python/jax/Pallas author the training graphs at build time and AOT
-//!     them to HLO-text artifacts (`make artifacts`);
-//!   * this crate loads the artifacts through PJRT (`runtime`), owns the
-//!     training loop, ABC context buffers, LQS calibration, data,
-//!     metrics and checkpoints (`coordinator`);
+//!   * `backend` defines the `Executor` trait ("run a train/fwd/bwd/opt
+//!     step") with two implementations: the pure-rust `NativeBackend`
+//!     (default — self-contained, no artifacts) and, behind the `pjrt`
+//!     feature, the AOT-artifact `runtime::Runtime` authored by
+//!     python/jax/Pallas (`make artifacts`);
+//!   * `coordinator` owns the training loop, ABC context buffers, LQS
+//!     calibration, data, metrics and checkpoints — backend-agnostic;
 //!   * `costmodel` / `latsim` regenerate the paper's analytic
 //!     tables/figures; `hadamard` / `quant` mirror kernel semantics
-//!     host-side; `util` holds the offline-built substrates.
+//!     host-side (both backends share them); `util` holds the
+//!     offline-built substrates.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;

@@ -6,15 +6,19 @@
 //!   eval        evaluate a checkpoint (or the init params)
 //!   memory      print the analytic memory model for a zoo architecture
 //!   latency     print the Table-6 latency simulation
-//!   info        list artifacts / presets in the manifest
+//!   info        list presets / step keys of the selected backend
+//!   runhlo      (pjrt builds) run an arbitrary HLO text file
+//!
+//! `--backend native|pjrt|auto` selects the execution backend (default
+//! auto: PJRT when compiled in and artifacts exist, else native).
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use hot::backend::Executor;
 use hot::config::RunConfig;
 use hot::coordinator::{Mode, Trainer};
-use hot::runtime::Runtime;
 use hot::util::args::Args;
 use hot::util::timer::Table;
 
@@ -31,8 +35,9 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: hot <train|calibrate|eval|memory|latency|info> [--opts]\n\
-                 common: --artifacts DIR --preset NAME --variant V --steps N\n\
-                         --batch N --lr F --mode fused|split|accum --accum N\n\
+                 common: --backend native|pjrt|auto --artifacts DIR\n\
+                         --preset NAME --variant V --steps N --batch N\n\
+                         --lr F --mode fused|split|accum --accum N\n\
                          --seed N --config run.json"
             );
             Ok(())
@@ -55,6 +60,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         cfg.variant = v.into();
     }
     cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.batch = args.usize_or("batch", cfg.batch);
     cfg.lr = args.f64_or("lr", cfg.lr);
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.accum = args.usize_or("accum", cfg.accum);
@@ -69,6 +75,13 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+fn executor(args: &Args, cfg: &RunConfig) -> Result<Arc<dyn Executor>> {
+    let backend = args.str_or("backend", "auto");
+    let rt = hot::backend::by_name(&backend, &cfg.artifacts)?;
+    hot::info!("backend: {}", rt.name());
+    Ok(rt)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let mode = match args.str_or("mode", "fused").as_str() {
@@ -77,7 +90,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "accum" => Mode::Accum,
         m => bail!("unknown mode {m:?}"),
     };
-    let rt = Arc::new(Runtime::new(&cfg.artifacts)?);
+    let rt = executor(args, &cfg)?;
     let mut tr = Trainer::new(rt, cfg)?;
     if let Some(ck) = args.get("resume") {
         tr.resume(ck)?;
@@ -109,10 +122,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    let rt = Arc::new(Runtime::new(&cfg.artifacts)?);
+    let rt = executor(args, &cfg)?;
     let mut tr = Trainer::new(rt, cfg)?;
     match tr.calibrate()? {
-        None => println!("no calib artifact for this preset"),
+        None => println!("backend cannot calibrate this preset"),
         Some(rep) => {
             let mut t = Table::new(&["layer", "mse_tensor", "mse_token",
                                      "outlier", "LQS"]);
@@ -133,7 +146,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    let rt = Arc::new(Runtime::new(&cfg.artifacts)?);
+    let rt = executor(args, &cfg)?;
     let mut tr = Trainer::new(rt, cfg)?;
     if let Some(ck) = args.get("resume") {
         tr.resume(ck)?;
@@ -195,12 +208,16 @@ fn cmd_latency(args: &Args) -> Result<()> {
 
 /// Debug tool: run an arbitrary HLO text file with seeded-random inputs.
 /// `hot runhlo file.hlo.txt f32:64x64 f32:64x48`
+#[cfg(feature = "pjrt")]
 fn cmd_runhlo(args: &Args) -> Result<()> {
     use hot::util::prng::Pcg32;
     let file = args.positional.first().expect("hlo file");
-    let client = xla::PjRtClient::cpu()?;
-    let proto = xla::HloModuleProto::from_text_file(file)?;
-    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let proto = xla::HloModuleProto::from_text_file(file)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut rng = Pcg32::seeded(args.u64_or("seed", 0));
     let mut lits = Vec::new();
     for spec in &args.positional[1..] {
@@ -217,8 +234,12 @@ fn cmd_runhlo(args: &Args) -> Result<()> {
         };
         lits.push(v.to_literal()?);
     }
-    let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-    let parts = out.to_tuple()?;
+    let out = exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| anyhow::anyhow!("{e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let parts = out.to_tuple().map_err(|e| anyhow::anyhow!("{e}"))?;
     for (i, p) in parts.iter().enumerate() {
         let v = hot::runtime::Value::from_literal(p)?;
         match v {
@@ -233,18 +254,21 @@ fn cmd_runhlo(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runhlo(_args: &Args) -> Result<()> {
+    bail!("runhlo needs the `pjrt` feature — rebuild with --features pjrt")
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
-    let dir = args.str_or("artifacts", "artifacts");
-    let rt = Runtime::new(&dir)?;
-    println!("suite: {}  batch: {}", rt.manifest.suite, rt.manifest.batch);
-    for (name, p) in &rt.manifest.presets {
+    let cfg = run_config(args)?;
+    let rt = executor(args, &cfg)?;
+    println!("{}", rt.describe());
+    for name in rt.preset_names() {
+        let p = rt.preset(&name)?;
         println!("preset {name}: arch={} d={} depth={} seq={} params={}",
                  p.model.arch, p.model.d_model, p.model.depth, p.model.seq,
                  p.n_params());
     }
-    for (key, a) in &rt.manifest.artifacts {
-        println!("  {key}: kind={} in={} out={}", a.kind, a.inputs.len(),
-                 a.outputs.len());
-    }
+    println!("default batch: {}", rt.default_batch());
     Ok(())
 }

@@ -201,6 +201,20 @@ mod tests {
     }
 
     #[test]
+    fn pack_roundtrip_exhaustive_all_nibble_pairs() {
+        // every INT4 value pair (lo, hi) in [-8, 7]^2 — all 256 bytes —
+        // must survive pack -> unpack bit-exactly
+        for lo in -8i8..=7 {
+            for hi in -8i8..=7 {
+                let qs = vec![lo, hi];
+                let packed = pack_int4(&qs);
+                assert_eq!(packed.len(), 1);
+                assert_eq!(unpack_int4(&packed), qs, "({lo}, {hi})");
+            }
+        }
+    }
+
+    #[test]
     fn pack_halves_bytes() {
         let qs = vec![1i8; 128];
         assert_eq!(pack_int4(&qs).len(), 64);

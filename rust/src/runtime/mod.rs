@@ -1,119 +1,148 @@
-//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//! Artifact runtime layer.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT). Executables are
-//! cached per artifact key; every execute validates argument count and
-//! (optionally) shapes against the manifest, so a drifted artifact set
-//! fails loudly instead of producing garbage.
+//! `manifest` (the artifact contract) and `value` (host tensors) are
+//! always compiled — the native backend and the coordinator build on
+//! them. The PJRT `Runtime` itself (HLO-text -> compile -> execute via
+//! the `xla` crate) sits behind the non-default `pjrt` cargo feature;
+//! the default build is fully self-contained (see backend::NativeBackend
+//! and DESIGN.md §Backends).
 
 pub mod manifest;
 pub mod value;
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-use anyhow::{bail, Context, Result};
-
 pub use manifest::{ArtifactMeta, CtxSpec, DType, Manifest, Preset, TensorSpec};
 pub use value::Value;
 
-pub struct Runtime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    /// cumulative executions per artifact (metrics)
-    pub exec_counts: Mutex<HashMap<String, u64>>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_runtime {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
 
-impl Runtime {
-    pub fn new(artifact_dir: &str) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        crate::info!(
-            "PJRT client up: platform={} devices={} — {} artifacts in {}",
-            client.platform_name(),
-            client.device_count(),
-            manifest.artifacts.len(),
-            artifact_dir
-        );
-        Ok(Runtime {
-            manifest,
-            client,
-            cache: Mutex::new(HashMap::new()),
-            exec_counts: Mutex::new(HashMap::new()),
-        })
+    use anyhow::{bail, Context, Result};
+
+    use super::manifest::Manifest;
+    use super::value::Value;
+
+    /// PJRT runtime: load HLO-text artifacts, compile once, execute many.
+    ///
+    /// Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT). Executables
+    /// are cached per artifact key; every execute validates argument count
+    /// and shapes against the manifest, so a drifted artifact set fails
+    /// loudly instead of producing garbage.
+    pub struct Runtime {
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+        /// cumulative executions per artifact (metrics)
+        pub exec_counts: Mutex<HashMap<String, u64>>,
     }
 
-    /// Compile (or fetch cached) executable for an artifact key.
-    pub fn load(&self, key: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(key) {
-            return Ok(exe.clone());
-        }
-        let path = self.manifest.artifact_path(key)?;
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {key}"))?;
-        crate::info!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
-        let arc = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(key.to_string(), arc.clone());
-        Ok(arc)
-    }
-
-    /// Execute an artifact with host values; returns host values in the
-    /// manifest's output order.
-    pub fn execute(&self, key: &str, args: &[Value]) -> Result<Vec<Value>> {
-        let refs: Vec<&Value> = args.iter().collect();
-        self.execute_refs(key, &refs)
-    }
-
-    /// Like `execute` but borrows the inputs — the trainer's hot loop
-    /// passes its whole parameter/optimizer state every step, and deep-
-    /// cloning it into an owned args vector cost ~2 full state copies per
-    /// step before this existed (see EXPERIMENTS.md §Perf).
-    pub fn execute_refs(&self, key: &str, args: &[&Value]) -> Result<Vec<Value>> {
-        let meta = self.manifest.artifact(key)?;
-        if args.len() != meta.inputs.len() {
-            bail!("artifact {key}: {} args given, manifest wants {}",
-                  args.len(), meta.inputs.len());
-        }
-        let exe = self.load(key)?;
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .enumerate()
-            .map(|(i, v)| {
-                v.check_spec(&meta.inputs[i]).with_context(|| {
-                    format!("artifact {key} input #{i} ({})", meta.inputs[i].name)
-                })?;
-                v.to_literal()
+    impl Runtime {
+        pub fn new(artifact_dir: &str) -> Result<Runtime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("{e}"))
+                .context("creating PJRT CPU client")?;
+            crate::info!(
+                "PJRT client up: platform={} devices={} — {} artifacts in {}",
+                client.platform_name(),
+                client.device_count(),
+                manifest.artifacts.len(),
+                artifact_dir
+            );
+            Ok(Runtime {
+                manifest,
+                client,
+                cache: Mutex::new(HashMap::new()),
+                exec_counts: Mutex::new(HashMap::new()),
             })
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {key}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {key}"))?;
-        // aot.py lowers with return_tuple=True: single tuple of outputs
-        let parts = lit.to_tuple().context("decomposing output tuple")?;
-        if parts.len() != meta.outputs.len() {
-            bail!("artifact {key}: {} outputs, manifest wants {}",
-                  parts.len(), meta.outputs.len());
         }
-        *self.exec_counts.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
-        parts.iter().map(Value::from_literal).collect()
-    }
 
-    /// Number of compiled executables currently cached.
-    pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
+        /// Compile (or fetch cached) executable for an artifact key.
+        pub fn load(&self, key: &str)
+                    -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(key) {
+                return Ok(exe.clone());
+            }
+            let path = self.manifest.artifact_path(key)?;
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf-8")?,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("{e}"))
+                .with_context(|| format!("compiling artifact {key}"))?;
+            crate::info!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
+            let arc = std::sync::Arc::new(exe);
+            self.cache.lock().unwrap().insert(key.to_string(), arc.clone());
+            Ok(arc)
+        }
 
-    pub fn exec_count(&self, key: &str) -> u64 {
-        *self.exec_counts.lock().unwrap().get(key).unwrap_or(&0)
+        /// Execute an artifact with host values; returns host values in
+        /// the manifest's output order.
+        pub fn execute(&self, key: &str, args: &[Value]) -> Result<Vec<Value>> {
+            let refs: Vec<&Value> = args.iter().collect();
+            self.execute_refs(key, &refs)
+        }
+
+        /// Like `execute` but borrows the inputs — the trainer's hot loop
+        /// passes its whole parameter/optimizer state every step, and
+        /// deep-cloning it into an owned args vector cost ~2 full state
+        /// copies per step before this existed (EXPERIMENTS.md §Perf).
+        pub fn execute_refs(&self, key: &str, args: &[&Value])
+                            -> Result<Vec<Value>> {
+            let meta = self.manifest.artifact(key)?;
+            if args.len() != meta.inputs.len() {
+                bail!("artifact {key}: {} args given, manifest wants {}",
+                      args.len(), meta.inputs.len());
+            }
+            let exe = self.load(key)?;
+            let literals: Vec<xla::Literal> = args
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    v.check_spec(&meta.inputs[i]).with_context(|| {
+                        format!("artifact {key} input #{i} ({})",
+                                meta.inputs[i].name)
+                    })?;
+                    v.to_literal()
+                })
+                .collect::<Result<_>>()?;
+            let result = exe.execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("{e}"))
+                .with_context(|| format!("executing {key}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("{e}"))
+                .with_context(|| format!("fetching result of {key}"))?;
+            // aot.py lowers with return_tuple=True: one tuple of outputs
+            let parts = lit.to_tuple()
+                .map_err(|e| anyhow::anyhow!("{e}"))
+                .context("decomposing output tuple")?;
+            if parts.len() != meta.outputs.len() {
+                bail!("artifact {key}: {} outputs, manifest wants {}",
+                      parts.len(), meta.outputs.len());
+            }
+            *self.exec_counts.lock().unwrap().entry(key.to_string())
+                .or_insert(0) += 1;
+            parts.iter().map(Value::from_literal).collect()
+        }
+
+        /// Number of compiled executables currently cached.
+        pub fn compiled_count(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
+
+        pub fn exec_count(&self, key: &str) -> u64 {
+            *self.exec_counts.lock().unwrap().get(key).unwrap_or(&0)
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_runtime::Runtime;
