@@ -22,8 +22,15 @@ pub fn steps(default: usize) -> usize {
 
 /// Backend for the benches: PJRT over real artifacts when compiled in
 /// and available, the native CPU backend otherwise — so the bench
-/// trajectories populate on any machine.
+/// trajectories populate on any machine. `HOT_THREADS` pins the kernel
+/// pool budget (benches have no CLI, so the knob rides an env var).
 pub fn executor_or_exit() -> Arc<dyn Executor> {
+    if let Some(t) = std::env::var("HOT_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        hot::kernels::set_num_threads(t);
+    }
     match hot::backend::by_name("auto", DIR) {
         Ok(rt) => {
             eprintln!("bench backend: {}", rt.name());

@@ -22,6 +22,7 @@ use hot::util::timer::Table;
 struct ModeResult {
     preset: String,
     mode: &'static str,
+    threads: usize,
     step_s: f64,
     data_s: f64,
 }
@@ -56,12 +57,23 @@ fn bench_mode(rt: Arc<dyn Executor>, preset: &str, mode: Mode,
 fn main() {
     let rt = common::executor_or_exit();
     let steps = common::steps(12).max(4);
+    let max_threads = hot::kernels::num_threads();
+    let mut thread_budgets = vec![1usize];
+    // the kernel pool only drives the native backend; sweeping threads
+    // under PJRT would record duplicate rows as fake scaling signal
+    if max_threads > 1 && rt.name() == "native" {
+        thread_budgets.push(max_threads);
+    }
     let mut results: Vec<ModeResult> = Vec::new();
-    let mut t = Table::new(&["preset", "mode", "step time", "steps/s",
-                             "data-gen share"]);
-    for preset in ["tiny", "small"] {
+    let mut t = Table::new(&["preset", "mode", "threads", "step time",
+                             "steps/s", "data-gen share"]);
+    for preset in ["tiny", "small", "base"] {
         for (name, mode) in [("fused", Mode::Fused), ("split", Mode::Split),
                              ("accum", Mode::Accum)] {
+            // base is heavy: fused only, so the bench stays bounded
+            if preset == "base" && mode != Mode::Fused {
+                continue;
+            }
             let needed = match mode {
                 Mode::Fused => format!("train_hot_{preset}"),
                 Mode::Split => format!("fwd_hot_{preset}"),
@@ -70,15 +82,23 @@ fn main() {
             if !rt.supports(&needed) {
                 continue;
             }
-            let (step_s, data_s) = bench_mode(rt.clone(), preset, mode, steps);
-            t.row(&[preset.into(), name.into(),
-                    format!("{:.1} ms", step_s * 1e3),
-                    format!("{:.2}", 1.0 / step_s),
-                    format!("{:.1}%", 100.0 * data_s / step_s)]);
-            results.push(ModeResult { preset: preset.into(), mode: name,
-                                      step_s, data_s });
+            // base steps are ~100x tiny steps; fewer samples keep the
+            // bench bounded without losing the steady-state signal
+            let steps = if preset == "base" { steps.min(4) } else { steps };
+            for &threads in &thread_budgets {
+                hot::kernels::set_num_threads(threads);
+                let (step_s, data_s) =
+                    bench_mode(rt.clone(), preset, mode, steps);
+                t.row(&[preset.into(), name.into(), threads.to_string(),
+                        format!("{:.1} ms", step_s * 1e3),
+                        format!("{:.2}", 1.0 / step_s),
+                        format!("{:.1}%", 100.0 * data_s / step_s)]);
+                results.push(ModeResult { preset: preset.into(), mode: name,
+                                          threads, step_s, data_s });
+            }
         }
     }
+    hot::kernels::set_num_threads(0);
     t.print(&format!("end-to-end throughput (HOT variant, {} backend)",
                      rt.name()));
 
@@ -93,6 +113,7 @@ fn main() {
             let mut m = BTreeMap::new();
             m.insert("preset".to_string(), Json::Str(r.preset.clone()));
             m.insert("mode".to_string(), Json::Str(r.mode.into()));
+            m.insert("threads".to_string(), Json::Num(r.threads as f64));
             m.insert("step_ms".to_string(), Json::Num(r.step_s * 1e3));
             m.insert("steps_per_sec".to_string(), Json::Num(1.0 / r.step_s));
             m.insert("datagen_share".to_string(),

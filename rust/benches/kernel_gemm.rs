@@ -1,0 +1,116 @@
+//! GEMM kernel throughput: naive oracle vs blocked vs blocked+threaded,
+//! f32 and i8, across thread budgets — the perf gate for the
+//! `rust/src/kernels/` subsystem (ours; no direct paper analog, but it
+//! is the compute story behind the paper's Table 6 speedups).
+//!
+//! Emits `BENCH_kernels.json` with GFLOP/s (f32) / GOP/s (i8) per
+//! (size, impl, threads) so the bench trajectory tracks kernel perf
+//! run over run. `HOT_BENCH_STEPS` is unused here; sizing is fixed so
+//! points stay comparable.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use hot::kernels::{self, reference};
+use hot::util::json::Json;
+use hot::util::prng::Pcg32;
+use hot::util::timer::{bench, Table};
+
+struct Point {
+    kind: &'static str,
+    size: usize,
+    imp: &'static str,
+    threads: usize,
+    gflops: f64,
+}
+
+fn gflops(size: usize, secs: f64) -> f64 {
+    2.0 * (size * size * size) as f64 / secs / 1e9
+}
+
+fn bench_size(size: usize, budget_ms: u64, points: &mut Vec<Point>) {
+    let mut rng = Pcg32::seeded(size as u64);
+    let a: Vec<f32> = (0..size * size).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..size * size).map(|_| rng.normal()).collect();
+    let qa: Vec<i8> =
+        (0..size * size).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let qb: Vec<i8> =
+        (0..size * size).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let budget = Duration::from_millis(budget_ms);
+
+    // naive oracles (single-threaded by construction)
+    let st = bench(1, budget, 64, || {
+        std::hint::black_box(reference::matmul(&a, &b, size, size, size));
+    });
+    points.push(Point { kind: "f32", size, imp: "naive", threads: 1,
+                        gflops: gflops(size, st.median_s) });
+    let st = bench(1, budget, 64, || {
+        std::hint::black_box(reference::matmul_i8_nn(&qa, &qb, size, size,
+                                                     size));
+    });
+    points.push(Point { kind: "i8", size, imp: "naive", threads: 1,
+                        gflops: gflops(size, st.median_s) });
+
+    // blocked kernels at 1 / 2 / 4 threads
+    for threads in [1usize, 2, 4] {
+        kernels::set_num_threads(threads);
+        let imp = if threads == 1 { "blocked" } else { "blocked+threaded" };
+        let st = bench(1, budget, 64, || {
+            std::hint::black_box(kernels::gemm_f32_nn(&a, &b, size, size,
+                                                      size));
+        });
+        points.push(Point { kind: "f32", size, imp, threads,
+                            gflops: gflops(size, st.median_s) });
+        let st = bench(1, budget, 64, || {
+            std::hint::black_box(kernels::gemm_i8_nn(&qa, &qb, size, size,
+                                                     size));
+        });
+        points.push(Point { kind: "i8", size, imp, threads,
+                            gflops: gflops(size, st.median_s) });
+    }
+    kernels::set_num_threads(0);
+}
+
+fn main() {
+    let mut points: Vec<Point> = Vec::new();
+    for (size, budget_ms) in [(64usize, 150u64), (128, 250), (256, 600)] {
+        bench_size(size, budget_ms, &mut points);
+    }
+
+    let mut t = Table::new(&["kind", "size", "impl", "threads", "GFLOP/s",
+                             "vs naive"]);
+    for p in &points {
+        let naive = points
+            .iter()
+            .find(|q| q.kind == p.kind && q.size == p.size && q.imp == "naive")
+            .map(|q| q.gflops)
+            .unwrap_or(f64::NAN);
+        t.row(&[p.kind.into(), format!("{0}x{0}x{0}", p.size), p.imp.into(),
+                p.threads.to_string(), format!("{:.2}", p.gflops),
+                format!("{:.2}x", p.gflops / naive)]);
+    }
+    t.print("GEMM kernels: naive vs blocked vs blocked+threaded");
+
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut m = BTreeMap::new();
+            m.insert("kind".to_string(), Json::Str(p.kind.into()));
+            m.insert("n".to_string(), Json::Num(p.size as f64));
+            m.insert("k".to_string(), Json::Num(p.size as f64));
+            m.insert("m".to_string(), Json::Num(p.size as f64));
+            m.insert("impl".to_string(), Json::Str(p.imp.into()));
+            m.insert("threads".to_string(), Json::Num(p.threads as f64));
+            m.insert("gflops".to_string(), Json::Num(p.gflops));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("kernel_gemm".into()));
+    root.insert("results".to_string(), Json::Arr(rows));
+    let path = "BENCH_kernels.json";
+    match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -218,6 +218,16 @@ impl StepKey {
 // Factory
 // ---------------------------------------------------------------------------
 
+/// `by_name` with an explicit kernel thread budget (0 = one per core).
+/// The budget is process-wide: it configures the `kernels` pool every
+/// native GEMM/FWHT routes through, so it applies to whichever backend
+/// comes back (PJRT manages its own intra-op threads).
+pub fn by_name_threaded(backend: &str, artifacts: &str, threads: usize)
+                        -> Result<Arc<dyn Executor>> {
+    crate::kernels::set_num_threads(threads);
+    by_name(backend, artifacts)
+}
+
 /// Construct a backend by name: "native", "pjrt", or "auto" (pjrt when
 /// compiled in *and* the artifact dir exists; native otherwise).
 pub fn by_name(backend: &str, artifacts: &str) -> Result<Arc<dyn Executor>> {

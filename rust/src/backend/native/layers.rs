@@ -12,7 +12,10 @@
 use anyhow::{bail, Result};
 
 use crate::hadamard::lowpass::Criterion;
-use crate::hadamard::{block_hla_axis0, block_hla_expand_axis0, fwht, BLOCK};
+use crate::hadamard::{block_hla_axis0, block_hla_expand_axis0, BLOCK};
+use crate::kernels::{fwht_quant_cols, fwht_quant_rows, gemm_f32_nn,
+                     gemm_f32_nt, gemm_f32_tn, gemm_i8_nn_deq,
+                     gemm_i8_tn_deq, transpose};
 use crate::quant;
 
 // ---------------------------------------------------------------------------
@@ -121,141 +124,23 @@ impl BackwardCfg {
 }
 
 // ---------------------------------------------------------------------------
-// Dense kernels (row-major; debug-friendly loop nests)
-// ---------------------------------------------------------------------------
-
-/// y = x @ w.T: x (n, k), w (m, k) -> (n, m).
-pub fn matmul_nt(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * k);
-    debug_assert_eq!(w.len(), m * k);
-    let mut out = vec![0.0f32; n * m];
-    for r in 0..n {
-        let xr = &x[r * k..(r + 1) * k];
-        let dst = &mut out[r * m..(r + 1) * m];
-        for (c, d) in dst.iter_mut().enumerate() {
-            let wr = &w[c * k..(c + 1) * k];
-            let mut acc = 0.0f32;
-            for (a, b) in xr.iter().zip(wr) {
-                acc += a * b;
-            }
-            *d = acc;
-        }
-    }
-    out
-}
-
-/// a @ b: a (n, k), b (k, m) -> (n, m). Skips zero lhs entries (the LM
-/// one-hot embedding makes this effectively O(n*m)).
-pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), k * m);
-    let mut out = vec![0.0f32; n * m];
-    for r in 0..n {
-        for p in 0..k {
-            let av = a[r * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * m..(p + 1) * m];
-            let dst = &mut out[r * m..(r + 1) * m];
-            for (d, bv) in dst.iter_mut().zip(brow) {
-                *d += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// a.T @ b: a (k, n), b (k, m) -> (n, m).
-pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), k * n);
-    debug_assert_eq!(b.len(), k * m);
-    let mut out = vec![0.0f32; n * m];
-    for p in 0..k {
-        let arow = &a[p * n..(p + 1) * n];
-        let brow = &b[p * m..(p + 1) * m];
-        for (r, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let dst = &mut out[r * m..(r + 1) * m];
-            for (d, bv) in dst.iter_mut().zip(brow) {
-                *d += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// Integer GEMM a @ b with i32 accumulation: a (n, k), b (k, m) i8.
-pub fn matmul_i8_nn(a: &[i8], b: &[i8], n: usize, k: usize, m: usize) -> Vec<i32> {
-    let mut out = vec![0i32; n * m];
-    for r in 0..n {
-        for p in 0..k {
-            let av = a[r * k + p] as i32;
-            if av == 0 {
-                continue;
-            }
-            let brow = &b[p * m..(p + 1) * m];
-            let dst = &mut out[r * m..(r + 1) * m];
-            for (d, &bv) in dst.iter_mut().zip(brow) {
-                *d += av * bv as i32;
-            }
-        }
-    }
-    out
-}
-
-/// Integer GEMM a.T @ b with i32 accumulation: a (k, n), b (k, m) i8.
-pub fn matmul_i8_tn(a: &[i8], b: &[i8], k: usize, n: usize, m: usize) -> Vec<i32> {
-    let mut out = vec![0i32; n * m];
-    for p in 0..k {
-        let arow = &a[p * n..(p + 1) * n];
-        let brow = &b[p * m..(p + 1) * m];
-        for (r, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue;
-            }
-            let dst = &mut out[r * m..(r + 1) * m];
-            for (d, &bv) in dst.iter_mut().zip(brow) {
-                *d += av as i32 * bv as i32;
-            }
-        }
-    }
-    out
-}
-
-pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; rows * cols];
-    for r in 0..rows {
-        for c in 0..cols {
-            out[c * rows + r] = a[r * cols + c];
-        }
-    }
-    out
-}
-
-fn dequant_i32(acc: &[i32], scale: f32) -> Vec<f32> {
-    acc.iter().map(|&v| v as f32 * scale).collect()
-}
-
-// ---------------------------------------------------------------------------
-// Kernel oracles (kernels/ref.py)
+// Kernel oracles (kernels/ref.py) — GEMMs route through the blocked,
+// multi-threaded `crate::kernels` subsystem; the old naive loop nests
+// survive only as `kernels::reference` oracles.
 // ---------------------------------------------------------------------------
 
 /// HQ matmul: g_x = Q(g_y Hᵀ) · Q(H w) — HT along the contracted O dim,
 /// pseudo-stochastic INT quant, int32 accumulation (ref.hq_matmul_ref).
+/// FWHT and the min-max scan run as one fused pass per operand, and the
+/// dequant scale rides the GEMM's output write. (INT4 values travel in
+/// an i8 container here; `kernels::gemm_i4_nn_deq` serves operands that
+/// arrive already nibble-packed, e.g. the ABC wire format — packing a
+/// freshly quantized tensor just to unpack it would cost an extra pass.)
 pub fn hq_matmul(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
                  bits: u8) -> Vec<f32> {
-    let mut gy_t = gy.to_vec();
-    fwht::block_fwht_rows(&mut gy_t, n, o);
-    let mut w_t = w.to_vec();
-    fwht::block_fwht_cols(&mut w_t, o, i);
-    let s_g = quant::minmax_scale(&gy_t, bits);
-    let s_w = quant::minmax_scale(&w_t, bits);
-    let q_g = quant::quantize_ps(&gy_t, s_g, bits);
-    let q_w = quant::quantize_ps(&w_t, s_w, bits);
-    dequant_i32(&matmul_i8_nn(&q_g, &q_w, n, o, i), s_g * s_w)
+    let (q_g, s_g) = fwht_quant_rows(gy, n, o, bits);
+    let (q_w, s_w) = fwht_quant_cols(w, o, i, bits);
+    gemm_i8_nn_deq(&q_g, &q_w, n, o, i, s_g * s_w)
 }
 
 /// ABC's forward-time compression: HLA along N then INT quant
@@ -288,7 +173,7 @@ pub fn hla_matmul(gy: &[f32], n: usize, o: usize, xq: &[i8], sx: f32,
             }
         }
         let xf: Vec<f32> = xq.iter().map(|&q| q as f32).collect();
-        let mut out = matmul_tn(&g_deq, &xf, nc, o, i);
+        let mut out = gemm_f32_tn(&g_deq, &xf, nc, o, i);
         for v in out.iter_mut() {
             *v *= sx;
         }
@@ -296,7 +181,7 @@ pub fn hla_matmul(gy: &[f32], n: usize, o: usize, xq: &[i8], sx: f32,
     } else {
         let s_t = quant::minmax_scale(&gc, bits);
         let q_t = quant::quantize_ps(&gc, s_t, bits);
-        dequant_i32(&matmul_i8_tn(&q_t, xq, nc, o, i), s_t * sx)
+        gemm_i8_tn_deq(&q_t, xq, nc, o, i, s_t * sx)
     }
 }
 
@@ -305,7 +190,7 @@ pub fn lbp_gx(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
               rank: usize) -> Vec<f32> {
     let gc = block_hla_axis0(gy, n, o, rank, Criterion::Sequency);
     let nc = n / BLOCK * rank;
-    let out = matmul(&gc, w, nc, o, i);
+    let out = gemm_f32_nn(&gc, w, nc, o, i);
     block_hla_expand_axis0(&out, nc, i, rank, Criterion::Sequency)
 }
 
@@ -315,7 +200,7 @@ pub fn lbp_gw(gy: &[f32], n: usize, o: usize, x: &[f32], i: usize,
     let gc = block_hla_axis0(gy, n, o, rank, Criterion::Sequency);
     let xc = block_hla_axis0(x, n, i, rank, Criterion::Sequency);
     let nc = n / BLOCK * rank;
-    matmul_tn(&gc, &xc, nc, o, i)
+    gemm_f32_tn(&gc, &xc, nc, o, i)
 }
 
 /// Fake-quant (quantize -> dequantize) with a per-tensor min-max scale.
@@ -345,7 +230,7 @@ pub struct QlCtx {
 /// Forward (always exact FP32) + build the saved ctx.
 pub fn qlinear_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
                    bias: &[f32], cfg: &BackwardCfg) -> (Vec<f32>, QlCtx) {
-    let mut y = matmul_nt(x, w, n, i, o);
+    let mut y = gemm_f32_nt(x, w, n, i, o);
     for r in 0..n {
         let row = &mut y[r * o..(r + 1) * o];
         for (v, b) in row.iter_mut().zip(bias) {
@@ -368,7 +253,7 @@ fn gx_q4_noht(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
     let s_w = quant::minmax_scale(w, bits);
     let q_g = quant::quantize_ps(gy, s_g, bits);
     let q_w = quant::quantize_ps(w, s_w, bits);
-    dequant_i32(&matmul_i8_nn(&q_g, &q_w, n, o, i), s_g * s_w)
+    gemm_i8_nn_deq(&q_g, &q_w, n, o, i, s_g * s_w)
 }
 
 fn gx_int_hla(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
@@ -379,7 +264,7 @@ fn gx_int_hla(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
     let oc = o / BLOCK * rank;
     let gc = transpose(&gct, oc, n); // (n, oc)
     let wc = block_hla_axis0(w, o, i, rank, Criterion::Sequency); // (oc, i)
-    matmul(&gc, &wc, n, oc, i)
+    gemm_f32_nn(&gc, &wc, n, oc, i)
 }
 
 fn gw_hot(gy: &[f32], n: usize, o: usize, ctx: &QlCtx, cfg: &BackwardCfg,
@@ -399,15 +284,9 @@ fn gw_hot(gy: &[f32], n: usize, o: usize, ctx: &QlCtx, cfg: &BackwardCfg,
 }
 
 fn gw_hq4(gy: &[f32], n: usize, o: usize, x: &[f32], i: usize) -> Vec<f32> {
-    let mut gy_t = gy.to_vec();
-    fwht::block_fwht_cols(&mut gy_t, n, o);
-    let mut x_t = x.to_vec();
-    fwht::block_fwht_cols(&mut x_t, n, i);
-    let s_g = quant::minmax_scale(&gy_t, 4);
-    let s_x = quant::minmax_scale(&x_t, 4);
-    let q_g = quant::quantize_ps(&gy_t, s_g, 4);
-    let q_x = quant::quantize_ps(&x_t, s_x, 4);
-    dequant_i32(&matmul_i8_tn(&q_g, &q_x, n, o, i), s_g * s_x)
+    let (q_g, s_g) = fwht_quant_cols(gy, n, o, 4);
+    let (q_x, s_x) = fwht_quant_cols(x, n, i, 4);
+    gemm_i8_tn_deq(&q_g, &q_x, n, o, i, s_g * s_x)
 }
 
 fn luq_pair(gy: &[f32], other: &[f32], bits_other: u8) -> (Vec<f32>, Vec<f32>) {
@@ -447,19 +326,19 @@ pub fn qlinear_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
         None
     } else {
         Some(match v {
-            Hot | GxHq4 if !can_o => matmul(gy, w, n, o, i),
-            Lbp | GxExtHla if !can_n => matmul(gy, w, n, o, i),
-            GxIntHla if !can_o => matmul(gy, w, n, o, i),
+            Hot | GxHq4 if !can_o => gemm_f32_nn(gy, w, n, o, i),
+            Lbp | GxExtHla if !can_n => gemm_f32_nn(gy, w, n, o, i),
+            GxIntHla if !can_o => gemm_f32_nn(gy, w, n, o, i),
             Hot | GxHq4 => hq_matmul(gy, n, o, w, i, cfg.gx_bits),
             GxQ4 => gx_q4_noht(gy, n, o, w, i, cfg.gx_bits),
             Lbp | GxExtHla => lbp_gx(gy, n, o, w, i, cfg.rank),
             GxIntHla => gx_int_hla(gy, n, o, w, i, cfg.rank),
             Luq => {
                 let (g_q, w_q) = luq_pair(gy, w, 4);
-                matmul(&g_q, &w_q, n, o, i)
+                gemm_f32_nn(&g_q, &w_q, n, o, i)
             }
             Int4 => gx_q4_noht(gy, n, o, w, i, 4),
-            Fp | GwHq4 | GwHla | GwHot => matmul(gy, w, n, o, i),
+            Fp | GwHq4 | GwHla | GwHot => gemm_f32_nn(gy, w, n, o, i),
         })
     };
 
@@ -469,14 +348,14 @@ pub fn qlinear_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
     }
     let g_w = match v {
         Hot | GwHot | Lbp | GwHla | GwHq4 if !can_n => {
-            matmul_tn(gy, raw_of(ctx), n, o, i)
+            gemm_f32_tn(gy, raw_of(ctx), n, o, i)
         }
         Hot | GwHot => gw_hot(gy, n, o, ctx, cfg, pt_flag),
         Lbp | GwHla => lbp_gw(gy, n, o, raw_of(ctx), i, cfg.rank),
         GwHq4 => gw_hq4(gy, n, o, raw_of(ctx), i),
         Luq => {
             let (g_q, x_q) = luq_pair(gy, raw_of(ctx), 4);
-            matmul_tn(&g_q, &x_q, n, o, i)
+            gemm_f32_tn(&g_q, &x_q, n, o, i)
         }
         Int4 => {
             let x = raw_of(ctx);
@@ -484,10 +363,10 @@ pub fn qlinear_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
             let s_x = quant::minmax_scale(x, 4);
             let q_g = quant::quantize_ps(gy, s_g, 4);
             let q_x = quant::quantize_ps(x, s_x, 4);
-            dequant_i32(&matmul_i8_tn(&q_g, &q_x, n, o, i), s_g * s_x)
+            gemm_i8_tn_deq(&q_g, &q_x, n, o, i, s_g * s_x)
         }
         Fp | GxHq4 | GxQ4 | GxExtHla | GxIntHla => {
-            matmul_tn(gy, raw_of(ctx), n, o, i)
+            gemm_f32_tn(gy, raw_of(ctx), n, o, i)
         }
     };
     (g_x, g_w, g_b)
@@ -840,27 +719,28 @@ mod tests {
     fn matmul_identities() {
         let a = randv(6 * 4, 1);
         let b = randv(4 * 5, 2);
-        let ab = matmul(&a, &b, 6, 4, 5);
+        let ab = gemm_f32_nn(&a, &b, 6, 4, 5);
         // x @ w.T with w = b.T equals a @ b
         let bt = transpose(&b, 4, 5); // (5, 4)
-        let ab2 = matmul_nt(&a, &bt, 6, 4, 5);
+        let ab2 = gemm_f32_nt(&a, &bt, 6, 4, 5);
         assert!(rel_err(&ab, &ab2) < 1e-5);
         // (a.T).T @ b == a @ b
         let at = transpose(&a, 6, 4); // (4, 6)
-        let ab3 = matmul_tn(&at, &b, 4, 6, 5);
+        let ab3 = gemm_f32_tn(&at, &b, 4, 6, 5);
         assert!(rel_err(&ab, &ab3) < 1e-5);
     }
 
     #[test]
     fn int_gemm_matches_float() {
+        use crate::kernels::{gemm_i8_nn, gemm_i8_tn};
         let mut r = Pcg32::seeded(3);
         let a: Vec<i8> = (0..8 * 6).map(|_| (r.below(15) as i8) - 7).collect();
         let b: Vec<i8> = (0..6 * 5).map(|_| (r.below(15) as i8) - 7).collect();
         let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
         let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
-        let got: Vec<f32> = matmul_i8_nn(&a, &b, 8, 6, 5)
+        let got: Vec<f32> = gemm_i8_nn(&a, &b, 8, 6, 5)
             .iter().map(|&v| v as f32).collect();
-        assert!(rel_err(&got, &matmul(&af, &bf, 8, 6, 5)) < 1e-6);
+        assert!(rel_err(&got, &gemm_f32_nn(&af, &bf, 8, 6, 5)) < 1e-6);
         let at: Vec<i8> = {
             let mut out = vec![0i8; 6 * 8];
             for r0 in 0..8 {
@@ -870,9 +750,9 @@ mod tests {
             }
             out
         };
-        let got2: Vec<f32> = matmul_i8_tn(&at, &b, 6, 8, 5)
+        let got2: Vec<f32> = gemm_i8_tn(&at, &b, 6, 8, 5)
             .iter().map(|&v| v as f32).collect();
-        assert!(rel_err(&got2, &matmul(&af, &bf, 8, 6, 5)) < 1e-6);
+        assert!(rel_err(&got2, &gemm_f32_nn(&af, &bf, 8, 6, 5)) < 1e-6);
     }
 
     #[test]
@@ -882,8 +762,25 @@ mod tests {
         let gy = randv(32 * 32, 4);
         let w = randv(32 * 16, 5);
         let got = hq_matmul(&gy, 32, 32, &w, 16, 8);
-        let want = matmul(&gy, &w, 32, 32, 16);
+        let want = gemm_f32_nn(&gy, &w, 32, 32, 16);
         assert!(rel_err(&got, &want) < 0.05, "{}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn int4_nibble_gemm_could_serve_the_hq_path_bit_exactly() {
+        // the packed-operand kernel must agree bit-for-bit with the
+        // production hq route on real HQ operands, so a future caller
+        // whose g_y already lives in the ABC nibble wire format can
+        // switch kernels without a numerics change
+        use crate::kernels::gemm_i4_nn_deq;
+        let gy = randv(32 * 32, 40);
+        let w = randv(32 * 16, 41);
+        let want = hq_matmul(&gy, 32, 32, &w, 16, 4);
+        let (q_g, s_g) = fwht_quant_rows(&gy, 32, 32, 4);
+        let (q_w, s_w) = fwht_quant_cols(&w, 32, 16, 4);
+        let got = gemm_i4_nn_deq(&quant::pack_int4(&q_g), &q_w, 32, 32, 16,
+                                 s_g * s_w);
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -895,7 +792,7 @@ mod tests {
         let bias = vec![0.1f32; o];
         let (y, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
         // y[r][c] = sum_k x[r][k] w[c][k] + b[c]
-        let mut want_y = matmul_nt(&x, &w, n, i, o);
+        let mut want_y = gemm_f32_nt(&x, &w, n, i, o);
         for r in 0..n {
             for c in 0..o {
                 want_y[r * o + c] += bias[c];
@@ -904,8 +801,9 @@ mod tests {
         assert!(rel_err(&y, &want_y) < 1e-6);
         let gy = randv(n * o, 8);
         let (gx, gw, gb) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
-        assert!(rel_err(gx.as_ref().unwrap(), &matmul(&gy, &w, n, o, i)) < 1e-6);
-        assert!(rel_err(&gw, &matmul_tn(&gy, &x, n, o, i)) < 1e-6);
+        assert!(rel_err(gx.as_ref().unwrap(),
+                        &gemm_f32_nn(&gy, &w, n, o, i)) < 1e-6);
+        assert!(rel_err(&gw, &gemm_f32_tn(&gy, &x, n, o, i)) < 1e-6);
         let want_gb: Vec<f32> = (0..o)
             .map(|c| (0..n).map(|r| gy[r * o + c]).sum())
             .collect();
@@ -926,8 +824,8 @@ mod tests {
         let gy = randv(n * o, 11);
         let (gx, gw, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
         // approximations stay in the exact gradients' ballpark
-        let exact_gx = matmul(&gy, &w, n, o, i);
-        let exact_gw = matmul_tn(&gy, &x, n, o, i);
+        let exact_gx = gemm_f32_nn(&gy, &w, n, o, i);
+        let exact_gw = gemm_f32_tn(&gy, &x, n, o, i);
         assert!(rel_err(gx.as_ref().unwrap(), &exact_gx) < 1.0);
         assert!(rel_err(&gw, &exact_gw) < 1.0);
         // per-token flag flips the g_w computation but not its scale
@@ -946,8 +844,9 @@ mod tests {
         assert!(ctx.x.is_some(), "non-tiling layer keeps raw FP residuals");
         let gy = randv(n * o, 14);
         let (gx, gw, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
-        assert!(rel_err(gx.as_ref().unwrap(), &matmul(&gy, &w, n, o, i)) < 1e-6);
-        assert!(rel_err(&gw, &matmul_tn(&gy, &x, n, o, i)) < 1e-6);
+        assert!(rel_err(gx.as_ref().unwrap(),
+                        &gemm_f32_nn(&gy, &w, n, o, i)) < 1e-6);
+        assert!(rel_err(&gw, &gemm_f32_tn(&gy, &x, n, o, i)) < 1e-6);
     }
 
     #[test]
@@ -1092,7 +991,7 @@ mod tests {
         }
         let w = randv(o * i, 30);
         let got = lbp_gx(&gy, n, o, &w, i, 8);
-        let want = matmul(&gy, &w, n, o, i);
+        let want = gemm_f32_nn(&gy, &w, n, o, i);
         assert!(rel_err(&got, &want) < 0.25, "{}", rel_err(&got, &want));
     }
 }

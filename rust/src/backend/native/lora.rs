@@ -19,6 +19,8 @@ use crate::backend::native::layers::{self, BackwardCfg, Variant};
 use crate::backend::native::model::Params;
 use crate::backend::native::presets::{self, ModelShape};
 use crate::hadamard::{block_hla_axis0, BLOCK};
+use crate::kernels::{gemm_f32_nn, gemm_f32_nt, gemm_f32_tn,
+                     gemm_i8_tn_deq};
 use crate::quant;
 use crate::runtime::manifest::{DType, TensorSpec};
 use crate::runtime::value::Value;
@@ -99,9 +101,9 @@ fn qlinear_lora_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
                     bias: &[f32], a: &[f32], bm: &[f32], cfg: &LoraCfg)
                     -> (Vec<f32>, LoraQlCtx) {
     let r = cfg.r_lora;
-    let u = layers::matmul_nt(x, a, n, i, r);
-    let mut y = layers::matmul_nt(x, w, n, i, o);
-    let ub = layers::matmul_nt(&u, bm, n, r, o);
+    let u = gemm_f32_nt(x, a, n, i, r);
+    let mut y = gemm_f32_nt(x, w, n, i, o);
+    let ub = gemm_f32_nt(&u, bm, n, r, o);
     for row in 0..n {
         for c in 0..o {
             y[row * o + c] += LORA_SCALE * ub[row * o + c] + bias[c];
@@ -128,10 +130,10 @@ fn qlinear_lora_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
     let mut g_x = if cfg.hot_frozen && o % BLOCK == 0 {
         layers::hq_matmul(gy, n, o, w, i, cfg.bcfg.gx_bits)
     } else {
-        layers::matmul(gy, w, n, o, i)
+        gemm_f32_nn(gy, w, n, o, i)
     };
     // decomposed-path gradients
-    let mut g_u = layers::matmul(gy, bm, n, o, r); // gy (n,o) @ bm (o,r)
+    let mut g_u = gemm_f32_nn(gy, bm, n, o, r); // gy (n,o) @ bm (o,r)
     for v in g_u.iter_mut() {
         *v *= LORA_SCALE;
     }
@@ -143,30 +145,26 @@ fn qlinear_lora_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
         let gc_u = block_hla_axis0(&g_u, n, r, rank, cfg.bcfg.criterion);
         let s_gu = quant::minmax_scale(&gc_u, bits);
         let q_gu = quant::quantize_ps(&gc_u, s_gu, bits);
-        let g_a: Vec<f32> = layers::matmul_i8_tn(&q_gu, xq, nc, r, i)
-            .iter()
-            .map(|&v| v as f32 * s_gu * sx)
-            .collect();
+        let g_a = gemm_i8_tn_deq(&q_gu, xq, nc, r, i, s_gu * sx);
         let gc_y = block_hla_axis0(gy, n, o, rank, cfg.bcfg.criterion);
         let uc = block_hla_axis0(&ctx.u, n, r, rank, cfg.bcfg.criterion);
-        let mut g_bm = layers::matmul_tn(&layers::fake_quant(&gc_y, bits),
-                                         &layers::fake_quant(&uc, bits), nc,
-                                         o, r);
+        let mut g_bm = gemm_f32_tn(&layers::fake_quant(&gc_y, bits),
+                                   &layers::fake_quant(&uc, bits), nc, o, r);
         for v in g_bm.iter_mut() {
             *v *= LORA_SCALE;
         }
         (g_a, g_bm)
     } else {
         let x = ctx.x.as_deref().expect("lora ctx holds x or xq");
-        let g_a = layers::matmul_tn(&g_u, x, n, r, i);
-        let mut g_bm = layers::matmul_tn(gy, &ctx.u, n, o, r);
+        let g_a = gemm_f32_tn(&g_u, x, n, r, i);
+        let mut g_bm = gemm_f32_tn(gy, &ctx.u, n, o, r);
         for v in g_bm.iter_mut() {
             *v *= LORA_SCALE;
         }
         (g_a, g_bm)
     };
     // g_x += g_u @ A
-    let ga_path = layers::matmul(&g_u, a, n, r, i);
+    let ga_path = gemm_f32_nn(&g_u, a, n, r, i);
     for (gv, av) in g_x.iter_mut().zip(&ga_path) {
         *gv += av;
     }

@@ -43,6 +43,14 @@ impl Default for NativeBackend {
 }
 
 impl NativeBackend {
+    /// `new` plus an explicit kernel thread budget (0 = one per core).
+    /// The budget lands in the process-wide `kernels` pool that every
+    /// GEMM/FWHT this backend executes routes through.
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        crate::kernels::set_num_threads(threads);
+        Self::new()
+    }
+
     pub fn new() -> NativeBackend {
         let entries = presets::builtin_presets()
             .into_iter()

@@ -16,6 +16,7 @@ use crate::backend::native::layers::{self, AttnCtx, BackwardCfg, CeCtx,
                                      GeluCtx, LnCtx, QlCtx, Variant};
 use crate::backend::native::presets::ModelShape;
 use crate::hadamard::{block_hla_axis0, fwht, BLOCK};
+use crate::kernels;
 use crate::quant;
 use crate::runtime::manifest::{CtxSpec, TensorSpec};
 use crate::runtime::value::Value;
@@ -707,8 +708,8 @@ pub fn calibrate(shape: &ModelShape, p: &Params, x: &Value, y: &Value)
     for (q, dg) in sink.iter().enumerate() {
         let (n, o, i) = (dg.n, dg.o, dg.i);
         let wv = p.f(&dg.wname)?;
-        let exact_gx = layers::matmul(&dg.gy, wv, n, o, i);
-        let exact_gw = layers::matmul_tn(&dg.gy, &dg.x, n, o, i);
+        let exact_gx = kernels::gemm_f32_nn(&dg.gy, wv, n, o, i);
+        let exact_gw = kernels::gemm_f32_tn(&dg.gy, &dg.x, n, o, i);
         let gx_norm = mean_sq(&exact_gx) + 1e-12;
         let gw_norm = mean_sq(&exact_gw) + 1e-12;
         if n % BLOCK == 0 {
@@ -735,9 +736,9 @@ pub fn calibrate(shape: &ModelShape, p: &Params, x: &Value, y: &Value)
             fwht::block_fwht_cols(&mut gy_t, n, o);
             let mut x_t = dg.x.clone();
             fwht::block_fwht_cols(&mut x_t, n, i);
-            let gw_hq = layers::matmul_tn(&layers::fake_quant(&gy_t, 4),
-                                          &layers::fake_quant(&x_t, 4), n, o,
-                                          i);
+            let gw_hq = kernels::gemm_f32_tn(&layers::fake_quant(&gy_t, 4),
+                                             &layers::fake_quant(&x_t, 4), n,
+                                             o, i);
             outs[5][q] = (mean_sq_diff(&gw_hq, &exact_gw) / gw_norm) as f32;
         }
         if o % BLOCK == 0 {

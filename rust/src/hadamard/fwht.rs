@@ -2,7 +2,7 @@
 //! normalized by 1/4 so the transform is orthonormal and involutive).
 
 pub const BLOCK: usize = 16;
-const NORM: f32 = 0.25; // 1/sqrt(16)
+pub const NORM: f32 = 0.25; // 1/sqrt(16)
 
 /// In-place FWHT of one 16-element tile (butterflies, natural order).
 #[inline]
@@ -41,37 +41,17 @@ pub fn hadamard_matrix() -> [[f32; BLOCK]; BLOCK] {
 
 /// Block-FWHT along the *last* axis of a row-major (rows, cols) matrix,
 /// cols % 16 == 0. Matches `hadamard.block_ht(x, axis=1)` /
-/// `kernels.fwht.block_fwht`.
+/// `kernels.fwht.block_fwht`. Routed through the blocked/threaded
+/// kernel subsystem (bit-identical to tile-by-tile `fwht_inplace`).
 pub fn block_fwht_rows(x: &mut [f32], rows: usize, cols: usize) {
-    assert_eq!(x.len(), rows * cols);
-    assert_eq!(cols % BLOCK, 0, "cols must tile into {}", BLOCK);
-    let mut tile = [0.0f32; BLOCK];
-    for r in 0..rows {
-        let row = &mut x[r * cols..(r + 1) * cols];
-        for t in 0..cols / BLOCK {
-            tile.copy_from_slice(&row[t * BLOCK..(t + 1) * BLOCK]);
-            fwht_inplace(&mut tile);
-            row[t * BLOCK..(t + 1) * BLOCK].copy_from_slice(&tile);
-        }
-    }
+    crate::kernels::fwht_rows(x, rows, cols);
 }
 
 /// Block-FWHT along axis 0 (column direction) of a (rows, cols) matrix.
+/// Routed through `kernels::fwht_cols` (strip-mined gather instead of
+/// a full-matrix stride per column).
 pub fn block_fwht_cols(x: &mut [f32], rows: usize, cols: usize) {
-    assert_eq!(x.len(), rows * cols);
-    assert_eq!(rows % BLOCK, 0, "rows must tile into {}", BLOCK);
-    let mut tile = [0.0f32; BLOCK];
-    for c in 0..cols {
-        for t in 0..rows / BLOCK {
-            for b in 0..BLOCK {
-                tile[b] = x[(t * BLOCK + b) * cols + c];
-            }
-            fwht_inplace(&mut tile);
-            for b in 0..BLOCK {
-                x[(t * BLOCK + b) * cols + c] = tile[b];
-            }
-        }
-    }
+    crate::kernels::fwht_cols(x, rows, cols);
 }
 
 #[cfg(test)]

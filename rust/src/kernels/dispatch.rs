@@ -1,0 +1,101 @@
+//! Per-shape dispatch cache: how many parallel tasks a GEMM of a given
+//! shape should fan out to.
+//!
+//! The decision is cheap but not free (a few branches plus a
+//! `num_threads` load), and the training loop replays the same handful
+//! of shapes thousands of times, so plans are memoized by
+//! `(n, k, m, element, thread budget)`. Including the budget in the key
+//! means `set_num_threads` never needs to invalidate anything — a new
+//! budget simply populates new entries.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::kernels::pool;
+
+/// Element family of the kernel being planned (f32 and i8 have
+/// different arithmetic density, so they get separate entries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Elem {
+    F32,
+    I8,
+}
+
+/// A resolved execution plan for one GEMM shape.
+#[derive(Debug, Clone, Copy)]
+pub struct Plan {
+    /// Row-chunk tasks to fan out to (1 = stay on the calling thread).
+    pub tasks: usize,
+}
+
+/// Below this many multiply-accumulates a fork costs more than it buys.
+const PAR_MAC_FLOOR: usize = 1 << 18;
+
+/// Target rows per parallel task (a multiple of the microkernel MR).
+const TASK_ROWS: usize = 48;
+
+type Key = (usize, usize, usize, Elem, usize);
+
+fn cache() -> &'static Mutex<HashMap<Key, Plan>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, Plan>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Plan a (n, k) x (k, m) GEMM under the current thread budget.
+pub fn plan(n: usize, k: usize, m: usize, elem: Elem) -> Plan {
+    let width = pool::num_threads();
+    let key = (n, k, m, elem, width);
+    if let Some(p) = cache().lock().unwrap().get(&key) {
+        return *p;
+    }
+    let macs = n.saturating_mul(k).saturating_mul(m);
+    let tasks = if width <= 1 || macs < PAR_MAC_FLOOR || n < 2 {
+        1
+    } else {
+        // more tasks than threads so the stealing cursor can balance
+        // uneven chunks, but no thinner than TASK_ROWS rows each
+        n.div_ceil(TASK_ROWS).min(width * 4)
+    }
+    .max(1);
+    let p = Plan { tasks };
+    cache().lock().unwrap().insert(key, p);
+    p
+}
+
+/// Number of memoized plans (diagnostics / tests).
+pub fn cached_plans() -> usize {
+    cache().lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_shapes_stay_serial() {
+        assert_eq!(plan(4, 4, 4, Elem::F32).tasks, 1);
+        assert_eq!(plan(1, 512, 512, Elem::I8).tasks, 1);
+    }
+
+    #[test]
+    fn large_shapes_fan_out_under_a_budget() {
+        let _gate = pool::test_serial();
+        pool::set_num_threads(4);
+        let p = plan(1024, 256, 256, Elem::F32);
+        assert!(p.tasks > 1, "expected a parallel plan, got {}", p.tasks);
+        assert!(p.tasks <= 16);
+        pool::set_num_threads(1);
+        assert_eq!(plan(1024, 256, 256, Elem::F32).tasks, 1);
+        pool::set_num_threads(0);
+    }
+
+    #[test]
+    fn plans_are_memoized() {
+        // other tests insert plans concurrently, so only per-key
+        // stability is assertable here
+        let p1 = plan(77, 33, 11, Elem::F32);
+        let p2 = plan(77, 33, 11, Elem::F32);
+        assert_eq!(p1.tasks, p2.tasks);
+        assert!(cached_plans() >= 1);
+    }
+}

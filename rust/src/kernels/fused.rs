@@ -1,0 +1,310 @@
+//! Threaded block-FWHT transforms and the fused FWHT+quantize epilogue.
+//!
+//! HLQ's observation (and HOT's speedup recipe) is that the Hadamard
+//! transform and the quantizer should ride the same memory pass instead
+//! of running as separate kernels. Host-side that means:
+//!
+//!   * `fwht_rows` / `fwht_cols` — the order-16 block transforms,
+//!     strip-mined for cache locality (the column variant gathers
+//!     16-row tiles instead of striding the full matrix per column) and
+//!     forked across the kernel pool for large tensors;
+//!   * `fwht_quant_rows` / `fwht_quant_cols` — transform + min-max
+//!     amax folded into one pass, then pseudo-stochastic quantize:
+//!     one full traversal fewer than transform → scan → quantize, and
+//!     bit-exact against the separate passes (same tile butterflies,
+//!     same scale formula, same quantizer on the same f32 bits).
+//!
+//! Everything here is bit-identical to `hadamard::fwht::fwht_inplace`
+//! applied tile by tile — the butterflies run in the same order, so
+//! the pseudo-stochastic quantizer (which keys off result mantissas)
+//! sees identical inputs no matter which path produced them.
+
+use std::sync::Mutex;
+
+use crate::hadamard::fwht::{fwht_inplace, BLOCK, NORM};
+use crate::kernels::pool;
+use crate::quant;
+
+/// Minimum elements before a transform forks across the pool.
+const MIN_PAR: usize = 1 << 15;
+
+/// Block-FWHT along the last axis of a row-major (rows, cols) matrix,
+/// cols % 16 == 0. Threaded over row chunks for large tensors.
+pub fn fwht_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(cols % BLOCK, 0, "cols must tile into {BLOCK}");
+    par_rows(x, rows, cols, 1, &rows_worker::<false>);
+}
+
+/// `fwht_rows` that also returns max|x| of the transformed tensor,
+/// folded into the transform pass.
+pub fn fwht_rows_amax(x: &mut [f32], rows: usize, cols: usize) -> f32 {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(cols % BLOCK, 0, "cols must tile into {BLOCK}");
+    par_rows(x, rows, cols, 1, &rows_worker::<true>)
+}
+
+/// Block-FWHT along axis 0 of a row-major (rows, cols) matrix,
+/// rows % 16 == 0. Strip-mined: gathers 16xW tiles so the butterflies
+/// stream instead of striding `cols` floats per element.
+pub fn fwht_cols(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(rows % BLOCK, 0, "rows must tile into {BLOCK}");
+    if x.is_empty() {
+        return;
+    }
+    par_rows(x, rows, cols, BLOCK, &|chunk: &mut [f32]| {
+        cols_worker::<false>(chunk, cols)
+    });
+}
+
+/// `fwht_cols` that also returns max|x| of the transformed tensor.
+pub fn fwht_cols_amax(x: &mut [f32], rows: usize, cols: usize) -> f32 {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(rows % BLOCK, 0, "rows must tile into {BLOCK}");
+    if x.is_empty() {
+        return 0.0;
+    }
+    par_rows(x, rows, cols, BLOCK, &|chunk: &mut [f32]| {
+        cols_worker::<true>(chunk, cols)
+    })
+}
+
+/// Fused epilogue: block-FWHT along rows, then pseudo-stochastic
+/// min-max quantize at `bits`, the scale's amax scan folded into the
+/// transform. Returns (q, scale); bit-exact vs separate
+/// FWHT-then-quant passes.
+pub fn fwht_quant_rows(x: &[f32], rows: usize, cols: usize, bits: u8)
+                       -> (Vec<i8>, f32) {
+    let mut t = x.to_vec();
+    let amax = fwht_rows_amax(&mut t, rows, cols);
+    let scale = amax.max(1e-8) / quant::qmax(bits) as f32;
+    (quant::quantize_ps(&t, scale, bits), scale)
+}
+
+/// Fused epilogue along axis 0: block-FWHT down columns + quantize.
+pub fn fwht_quant_cols(x: &[f32], rows: usize, cols: usize, bits: u8)
+                       -> (Vec<i8>, f32) {
+    let mut t = x.to_vec();
+    let amax = fwht_cols_amax(&mut t, rows, cols);
+    let scale = amax.max(1e-8) / quant::qmax(bits) as f32;
+    (quant::quantize_ps(&t, scale, bits), scale)
+}
+
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
+
+/// Run `worker` over row chunks (each a multiple of `granule` rows),
+/// forking across the pool when the tensor is large enough. Returns the
+/// max of the workers' returns (the folded amax).
+fn par_rows(x: &mut [f32], rows: usize, cols: usize, granule: usize,
+            worker: &(dyn Fn(&mut [f32]) -> f32 + Sync)) -> f32 {
+    let width = pool::num_threads();
+    if width <= 1 || x.len() < MIN_PAR || rows <= granule {
+        return worker(x);
+    }
+    let chunk_rows =
+        rows.div_ceil(width * 2).max(1).next_multiple_of(granule);
+    let parts: Vec<Mutex<(&mut [f32], f32)>> = x
+        .chunks_mut(chunk_rows * cols)
+        .map(|c| Mutex::new((c, 0.0f32)))
+        .collect();
+    pool::parallel_for(parts.len(), &|i| {
+        let mut guard = parts[i].lock().unwrap();
+        let (chunk, amax) = &mut *guard;
+        *amax = worker(chunk);
+    });
+    parts
+        .into_iter()
+        .map(|p| p.into_inner().unwrap().1)
+        .fold(0.0f32, f32::max)
+}
+
+/// Transform every 16-tile of the chunk in place (row tiling: since
+/// cols % 16 == 0, row boundaries land on tile boundaries). `AMAX`
+/// selects at compile time whether the post-transform max|x| is folded
+/// in — plain transforms skip the per-element abs/compare entirely.
+fn rows_worker<const AMAX: bool>(x: &mut [f32]) -> f32 {
+    let mut tile = [0.0f32; BLOCK];
+    let mut amax = 0.0f32;
+    for t in x.chunks_exact_mut(BLOCK) {
+        tile.copy_from_slice(t);
+        fwht_inplace(&mut tile);
+        if AMAX {
+            for &v in &tile {
+                amax = amax.max(v.abs());
+            }
+        }
+        t.copy_from_slice(&tile);
+    }
+    amax
+}
+
+/// Column transform over a chunk whose row count is a multiple of 16:
+/// gather a 16xW tile, butterfly along the 16 axis (identical add/sub
+/// order to `fwht_inplace`), scale by NORM, scatter back. `AMAX` as in
+/// `rows_worker`.
+fn cols_worker<const AMAX: bool>(x: &mut [f32], cols: usize) -> f32 {
+    const W: usize = 64;
+    let rows = x.len() / cols;
+    let mut buf = [0.0f32; BLOCK * W];
+    let mut amax = 0.0f32;
+    for tr in 0..rows / BLOCK {
+        let base = tr * BLOCK;
+        let mut c0 = 0usize;
+        while c0 < cols {
+            let w = W.min(cols - c0);
+            for b in 0..BLOCK {
+                let at = (base + b) * cols + c0;
+                buf[b * w..(b + 1) * w].copy_from_slice(&x[at..at + w]);
+            }
+            let mut size = 1usize;
+            while size < BLOCK {
+                let stride = size * 2;
+                let mut lo = 0usize;
+                while lo < BLOCK {
+                    for i in lo..lo + size {
+                        for c in 0..w {
+                            let a = buf[i * w + c];
+                            let b2 = buf[(i + size) * w + c];
+                            buf[i * w + c] = a + b2;
+                            buf[(i + size) * w + c] = a - b2;
+                        }
+                    }
+                    lo += stride;
+                }
+                size = stride;
+            }
+            for v in buf[..BLOCK * w].iter_mut() {
+                *v *= NORM;
+                if AMAX {
+                    amax = amax.max(v.abs());
+                }
+            }
+            for b in 0..BLOCK {
+                let at = (base + b) * cols + c0;
+                x[at..at + w].copy_from_slice(&buf[b * w..(b + 1) * w]);
+            }
+            c0 += w;
+        }
+    }
+    amax
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    /// The obvious tile-by-tile reference for the row transform.
+    fn naive_rows(x: &mut [f32]) {
+        let mut tile = [0.0f32; BLOCK];
+        for t in x.chunks_exact_mut(BLOCK) {
+            tile.copy_from_slice(t);
+            fwht_inplace(&mut tile);
+            t.copy_from_slice(&tile);
+        }
+    }
+
+    #[test]
+    fn rows_bit_identical_to_tilewise_reference() {
+        for (rows, cols) in [(1, 16), (5, 48), (33, 32)] {
+            let orig = randv(rows * cols, 1 + rows as u64);
+            let mut a = orig.clone();
+            fwht_rows(&mut a, rows, cols);
+            let mut b = orig.clone();
+            naive_rows(&mut b);
+            assert_eq!(a, b, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn cols_bit_identical_to_transpose_path() {
+        for (rows, cols) in [(16, 1), (32, 7), (48, 130)] {
+            let orig = randv(rows * cols, 7 + cols as u64);
+            let mut a = orig.clone();
+            fwht_cols(&mut a, rows, cols);
+            // transpose -> row transform -> transpose runs the same
+            // butterflies per column in the same order
+            let mut xt = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    xt[c * rows + r] = orig[r * cols + c];
+                }
+            }
+            naive_rows(&mut xt);
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(a[r * cols + c], xt[c * rows + r],
+                               "({r},{c}) of {rows}x{cols}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_quant_equals_separate_passes() {
+        for bits in [4u8, 8] {
+            let (rows, cols) = (24, 48);
+            let x = randv(rows * cols, 11);
+            let (q, s) = fwht_quant_rows(&x, rows, cols, bits);
+            let mut t = x.clone();
+            naive_rows(&mut t);
+            let s_want = quant::minmax_scale(&t, bits);
+            let q_want = quant::quantize_ps(&t, s_want, bits);
+            assert_eq!(s.to_bits(), s_want.to_bits(), "bits={bits}");
+            assert_eq!(q, q_want, "bits={bits}");
+
+            let (rows, cols) = (48, 24);
+            let x = randv(rows * cols, 12);
+            let (q, s) = fwht_quant_cols(&x, rows, cols, bits);
+            let mut t = x.clone();
+            crate::hadamard::fwht::block_fwht_cols(&mut t, rows, cols);
+            let s_want = quant::minmax_scale(&t, bits);
+            let q_want = quant::quantize_ps(&t, s_want, bits);
+            assert_eq!(s.to_bits(), s_want.to_bits(), "cols bits={bits}");
+            assert_eq!(q, q_want, "cols bits={bits}");
+        }
+    }
+
+    #[test]
+    fn threaded_transform_is_bit_deterministic() {
+        let _gate = pool::test_serial();
+        let (rows, cols) = (512, 128); // 64k elements: above the fork floor
+        let orig = randv(rows * cols, 13);
+        pool::set_num_threads(1);
+        let mut serial = orig.clone();
+        let amax_s = fwht_rows_amax(&mut serial, rows, cols);
+        pool::set_num_threads(4);
+        let mut par = orig.clone();
+        let amax_p = fwht_rows_amax(&mut par, rows, cols);
+        let mut par_c = orig.clone();
+        fwht_cols(&mut par_c, rows, cols);
+        pool::set_num_threads(0);
+        assert_eq!(serial, par);
+        assert_eq!(amax_s.to_bits(), amax_p.to_bits());
+        let mut serial_c = orig.clone();
+        pool::set_num_threads(1);
+        fwht_cols(&mut serial_c, rows, cols);
+        pool::set_num_threads(0);
+        assert_eq!(serial_c, par_c);
+    }
+
+    #[test]
+    fn involution_still_holds() {
+        let (rows, cols) = (3, 64);
+        let orig = randv(rows * cols, 14);
+        let mut x = orig.clone();
+        fwht_rows(&mut x, rows, cols);
+        fwht_rows(&mut x, rows, cols);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,652 @@
+//! Cache-blocked, register-tiled, multi-threaded GEMM kernels.
+//!
+//! Layout story (BLIS-lite): the rhs is packed once into NR-column
+//! strips (k-major within a strip, zero-padded lanes past the column
+//! edge), the lhs is packed per row-task into MR-row strips per KC
+//! depth block, and an MRxNR microkernel with a fully unrolled register
+//! tile does all the arithmetic. Output rows are partitioned into tasks
+//! and stolen off the shared cursor in `kernels::pool`, so results are
+//! bit-deterministic for a given shape regardless of thread count
+//! (tasks own disjoint row ranges; the summation order inside a row
+//! never depends on scheduling).
+//!
+//! Three element families:
+//!   * f32 (NN / NT / TN) — forward qlinears and the FP gradient paths;
+//!   * i8 -> i32 (NN / TN) — the HQ/HLA quantized backward GEMMs, with
+//!     an optional fused dequant-scale epilogue on the output write;
+//!   * INT4-nibble (NN) — for lhs operands that already live packed
+//!     two-values-per-byte (the `quant::pack_int4` ABC wire format):
+//!     they stay packed in memory and expand only into the L1-resident
+//!     panel. Freshly quantized tensors should use the i8 kernels —
+//!     packing just to unpack costs an extra pass.
+//!
+//! The naive loop nests these kernels replaced live on as oracles in
+//! `kernels::reference`.
+
+use std::sync::Mutex;
+
+use crate::kernels::dispatch::{self, Elem};
+use crate::kernels::pool;
+
+/// Microkernel rows (register-tile height).
+pub const MR: usize = 4;
+/// Microkernel columns (register-tile width; one or two SIMD lanes).
+pub const NR: usize = 8;
+/// Depth-block for f32 (keeps an MR panel + NR strip slice in L1).
+const KC_F32: usize = 256;
+/// Depth-block for i8 (denser panels, larger block).
+const KC_I8: usize = 1024;
+
+/// Largest contraction depth an i8 GEMM may accumulate in i32: every
+/// product is bounded by 127^2, so k·127² must stay below `i32::MAX`.
+pub const MAX_K_I8: usize = (i32::MAX / (127 * 127)) as usize;
+
+#[derive(Debug, Clone, Copy)]
+enum Lhs {
+    /// lhs is (n, k) row-major.
+    N,
+    /// lhs is (k, n) row-major; the product contracts its rows.
+    T,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Rhs {
+    /// rhs is (k, m) row-major.
+    N,
+    /// rhs is (m, k) row-major; the product contracts its columns.
+    T,
+}
+
+/// Integer lhs operand: plain i8 in either layout, or an INT4
+/// nibble-packed (n, k/2) byte matrix (low nibble = even k index,
+/// matching `quant::pack_int4`).
+#[derive(Clone, Copy)]
+enum IntLhs<'a> {
+    I8(&'a [i8], Lhs),
+    I4(&'a [u8]),
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points (argument orders mirror the old naive loops)
+// ---------------------------------------------------------------------------
+
+/// a @ b: a (n, k), b (k, m) -> (n, m).
+pub fn gemm_f32_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize)
+                   -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    gemm_f32(Lhs::N, a, Rhs::N, b, n, k, m)
+}
+
+/// x @ w.T: x (n, k), w (m, k) -> (n, m).
+pub fn gemm_f32_nt(x: &[f32], w: &[f32], n: usize, k: usize, m: usize)
+                   -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), m * k);
+    gemm_f32(Lhs::N, x, Rhs::T, w, n, k, m)
+}
+
+/// a.T @ b: a (k, n), b (k, m) -> (n, m).
+pub fn gemm_f32_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize)
+                   -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    gemm_f32(Lhs::T, a, Rhs::N, b, n, k, m)
+}
+
+/// Integer GEMM a @ b with i32 accumulation: a (n, k), b (k, m) i8.
+pub fn gemm_i8_nn(a: &[i8], b: &[i8], n: usize, k: usize, m: usize)
+                  -> Vec<i32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    gemm_int_i32(IntLhs::I8(a, Lhs::N), b, n, k, m)
+}
+
+/// Integer GEMM a.T @ b with i32 accumulation: a (k, n), b (k, m) i8.
+pub fn gemm_i8_tn(a: &[i8], b: &[i8], k: usize, n: usize, m: usize)
+                  -> Vec<i32> {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    gemm_int_i32(IntLhs::I8(a, Lhs::T), b, n, k, m)
+}
+
+/// `gemm_i8_nn` with the dequant epilogue fused into the output write:
+/// each i32 tile lands in the f32 output pre-scaled, so no second pass
+/// over (n, m) happens. Always equal to `i32 GEMM then scale` — depths
+/// beyond one KC block fall back to the exact i32 accumulator so the
+/// bit-mirror contract with `ref.py` holds at every k.
+pub fn gemm_i8_nn_deq(a: &[i8], b: &[i8], n: usize, k: usize, m: usize,
+                      scale: f32) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    gemm_int_deq(IntLhs::I8(a, Lhs::N), b, n, k, m, scale)
+}
+
+/// `gemm_i8_tn` with the fused dequant-scale epilogue.
+pub fn gemm_i8_tn_deq(a: &[i8], b: &[i8], k: usize, n: usize, m: usize,
+                      scale: f32) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    gemm_int_deq(IntLhs::I8(a, Lhs::T), b, n, k, m, scale)
+}
+
+/// INT4-nibble GEMM: a stays packed (n, k/2) bytes (k even, low nibble
+/// = even k index — the `quant::pack_int4` wire format), b is i8
+/// (k, m). i32 accumulation, fused dequant-scale output. Bit-exact
+/// against unpack-then-`gemm_i8_nn`.
+pub fn gemm_i4_nn_deq(a_packed: &[u8], b: &[i8], n: usize, k: usize,
+                      m: usize, scale: f32) -> Vec<f32> {
+    assert_eq!(k % 2, 0, "INT4 GEMM needs an even contraction depth");
+    debug_assert_eq!(a_packed.len(), n * k / 2);
+    debug_assert_eq!(b.len(), k * m);
+    gemm_int_deq(IntLhs::I4(a_packed), b, n, k, m, scale)
+}
+
+/// Row-major transpose: (rows, cols) -> (cols, rows).
+pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = a[r * cols + c];
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Row-task fan-out (shared by every element family)
+// ---------------------------------------------------------------------------
+
+/// Split the (n, m) output into row chunks and run `f(r0, r1, chunk)`
+/// on each — serially for 1 task, else stolen off the pool. Chunks are
+/// disjoint `&mut` row ranges, so tasks never alias.
+fn run_rows<T: Send>(n: usize, m: usize, tasks: usize, out: &mut [T],
+                     f: &(dyn Fn(usize, usize, &mut [T]) + Sync)) {
+    if tasks <= 1 {
+        f(0, n, out);
+        return;
+    }
+    let rows_per = n.div_ceil(tasks).max(1);
+    let mut parts: Vec<Mutex<(usize, &mut [T])>> = Vec::new();
+    let mut r0 = 0usize;
+    for chunk in out.chunks_mut(rows_per * m) {
+        let rows = chunk.len() / m;
+        parts.push(Mutex::new((r0, chunk)));
+        r0 += rows;
+    }
+    pool::parallel_for(parts.len(), &|i| {
+        let mut guard = parts[i].lock().unwrap();
+        let (r0, chunk) = &mut *guard;
+        let rows = chunk.len() / m;
+        f(*r0, *r0 + rows, chunk);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// f32 path
+// ---------------------------------------------------------------------------
+
+fn gemm_f32(lhs: Lhs, a: &[f32], rhs: Rhs, b: &[f32], n: usize, k: usize,
+            m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    if n == 0 || m == 0 || k == 0 {
+        return out;
+    }
+    let pb = pack_rhs_f32(rhs, b, k, m);
+    let plan = dispatch::plan(n, k, m, Elem::F32);
+    run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
+        task_f32(lhs, a, &pb, n, k, m, r0, r1, c);
+    });
+    out
+}
+
+/// Pack the rhs into NR-column strips, k-major within each strip:
+/// value (kk, j) of strip s lives at `pb[(s * k + kk) * NR + j]`.
+/// Lanes past the column edge are zero, so the microkernel never
+/// branches on m.
+fn pack_rhs_f32(rhs: Rhs, b: &[f32], k: usize, m: usize) -> Vec<f32> {
+    let strips = m.div_ceil(NR);
+    let mut pb = vec![0.0f32; strips * k * NR];
+    match rhs {
+        Rhs::N => {
+            for kk in 0..k {
+                let row = &b[kk * m..(kk + 1) * m];
+                for s in 0..strips {
+                    let c0 = s * NR;
+                    let w = NR.min(m - c0);
+                    let base = (s * k + kk) * NR;
+                    pb[base..base + w].copy_from_slice(&row[c0..c0 + w]);
+                }
+            }
+        }
+        Rhs::T => {
+            for j in 0..m {
+                let (s, lane) = (j / NR, j % NR);
+                let row = &b[j * k..(j + 1) * k];
+                for (kk, &v) in row.iter().enumerate() {
+                    pb[(s * k + kk) * NR + lane] = v;
+                }
+            }
+        }
+    }
+    pb
+}
+
+/// Pack lhs rows r0..r1 at depths kbeg..kend into MR-row strips,
+/// k-major: value (row r, depth kk) of strip t lives at
+/// `ap[(t * kc + kk) * MR + (r % MR)]`. Rows past r1 are zero.
+#[allow(clippy::too_many_arguments)]
+fn pack_lhs_f32(lhs: Lhs, a: &[f32], n: usize, k: usize, r0: usize,
+                r1: usize, kbeg: usize, kend: usize, ap: &mut Vec<f32>) {
+    let rows = r1 - r0;
+    let kc = kend - kbeg;
+    ap.clear();
+    ap.resize(rows.div_ceil(MR) * kc * MR, 0.0);
+    match lhs {
+        Lhs::N => {
+            for r in 0..rows {
+                let (t, lane) = (r / MR, r % MR);
+                let src = &a[(r0 + r) * k + kbeg..(r0 + r) * k + kend];
+                for (kk, &v) in src.iter().enumerate() {
+                    ap[(t * kc + kk) * MR + lane] = v;
+                }
+            }
+        }
+        Lhs::T => {
+            for kk in 0..kc {
+                let src = &a[(kbeg + kk) * n + r0..(kbeg + kk) * n + r1];
+                for (r, &v) in src.iter().enumerate() {
+                    let (t, lane) = (r / MR, r % MR);
+                    ap[(t * kc + kk) * MR + lane] = v;
+                }
+            }
+        }
+    }
+}
+
+/// MRxNR register tile over one packed panel pair.
+#[inline]
+fn tile_f32(asl: &[f32], bs: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (af, bf) in asl.chunks_exact(MR).zip(bs.chunks_exact(NR)) {
+        for (&av, arow) in af.iter().zip(acc.iter_mut()) {
+            for (a, &bv) in arow.iter_mut().zip(bf) {
+                *a += av * bv;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn task_f32(lhs: Lhs, a: &[f32], pb: &[f32], n: usize, k: usize, m: usize,
+            r0: usize, r1: usize, c: &mut [f32]) {
+    let rows = r1 - r0;
+    let strips_m = m.div_ceil(NR);
+    let mut ap: Vec<f32> = Vec::new();
+    let mut kbeg = 0usize;
+    while kbeg < k {
+        let kend = k.min(kbeg + KC_F32);
+        let kc = kend - kbeg;
+        pack_lhs_f32(lhs, a, n, k, r0, r1, kbeg, kend, &mut ap);
+        for s in 0..strips_m {
+            let bs = &pb[(s * k + kbeg) * NR..(s * k + kend) * NR];
+            let cmax = NR.min(m - s * NR);
+            for t in 0..rows.div_ceil(MR) {
+                let asl = &ap[t * kc * MR..(t + 1) * kc * MR];
+                let mut acc = [[0.0f32; NR]; MR];
+                tile_f32(asl, bs, &mut acc);
+                let rmax = MR.min(rows - t * MR);
+                for (i, arow) in acc.iter().enumerate().take(rmax) {
+                    let row = t * MR + i;
+                    let base = row * m + s * NR;
+                    for (d, &v) in
+                        c[base..base + cmax].iter_mut().zip(&arow[..cmax])
+                    {
+                        *d += v;
+                    }
+                }
+            }
+        }
+        kbeg = kend;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8 / INT4 path
+// ---------------------------------------------------------------------------
+
+fn gemm_int_i32(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize)
+                -> Vec<i32> {
+    debug_assert!(k <= MAX_K_I8,
+                  "i8 GEMM depth {k} can overflow i32 (max {MAX_K_I8})");
+    let mut out = vec![0i32; n * m];
+    if n == 0 || m == 0 || k == 0 {
+        return out;
+    }
+    let pb = pack_rhs_i8(b, k, m);
+    let plan = dispatch::plan(n, k, m, Elem::I8);
+    run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
+        task_int(src, &pb, n, k, m, r0, r1, &mut |row_base, tile_c,
+                                                  vals: &[i32]| {
+            for (d, &v) in c[row_base + tile_c..row_base + tile_c + vals.len()]
+                .iter_mut()
+                .zip(vals)
+            {
+                *d += v;
+            }
+        });
+    });
+    out
+}
+
+fn gemm_int_deq(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize,
+                scale: f32) -> Vec<f32> {
+    debug_assert!(k <= MAX_K_I8,
+                  "i8 GEMM depth {k} can overflow i32 (max {MAX_K_I8})");
+    if k > KC_I8 {
+        // multi-block depths would accumulate f32-converted partials
+        // per KC block; keep the exact i32 total and scale once so the
+        // result is identical to the naive dequant at every depth
+        return gemm_int_i32(src, b, n, k, m)
+            .iter()
+            .map(|&v| v as f32 * scale)
+            .collect();
+    }
+    let mut out = vec![0.0f32; n * m];
+    if n == 0 || m == 0 || k == 0 {
+        return out;
+    }
+    let pb = pack_rhs_i8(b, k, m);
+    let plan = dispatch::plan(n, k, m, Elem::I8);
+    run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
+        task_int(src, &pb, n, k, m, r0, r1, &mut |row_base, tile_c,
+                                                  vals: &[i32]| {
+            for (d, &v) in c[row_base + tile_c..row_base + tile_c + vals.len()]
+                .iter_mut()
+                .zip(vals)
+            {
+                *d += v as f32 * scale;
+            }
+        });
+    });
+    out
+}
+
+fn pack_rhs_i8(b: &[i8], k: usize, m: usize) -> Vec<i8> {
+    let strips = m.div_ceil(NR);
+    let mut pb = vec![0i8; strips * k * NR];
+    for kk in 0..k {
+        let row = &b[kk * m..(kk + 1) * m];
+        for s in 0..strips {
+            let c0 = s * NR;
+            let w = NR.min(m - c0);
+            let base = (s * k + kk) * NR;
+            pb[base..base + w].copy_from_slice(&row[c0..c0 + w]);
+        }
+    }
+    pb
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pack_lhs_int(src: IntLhs, n: usize, k: usize, r0: usize, r1: usize,
+                kbeg: usize, kend: usize, ap: &mut Vec<i8>) {
+    let rows = r1 - r0;
+    let kc = kend - kbeg;
+    ap.clear();
+    ap.resize(rows.div_ceil(MR) * kc * MR, 0);
+    match src {
+        IntLhs::I8(a, Lhs::N) => {
+            for r in 0..rows {
+                let (t, lane) = (r / MR, r % MR);
+                let line = &a[(r0 + r) * k + kbeg..(r0 + r) * k + kend];
+                for (kk, &v) in line.iter().enumerate() {
+                    ap[(t * kc + kk) * MR + lane] = v;
+                }
+            }
+        }
+        IntLhs::I8(a, Lhs::T) => {
+            for kk in 0..kc {
+                let line = &a[(kbeg + kk) * n + r0..(kbeg + kk) * n + r1];
+                for (r, &v) in line.iter().enumerate() {
+                    let (t, lane) = (r / MR, r % MR);
+                    ap[(t * kc + kk) * MR + lane] = v;
+                }
+            }
+        }
+        IntLhs::I4(a) => {
+            // KC_I8 is even, so kbeg always starts on a whole byte
+            let kb = k / 2;
+            for r in 0..rows {
+                let (t, lane) = (r / MR, r % MR);
+                let line = &a[(r0 + r) * kb..(r0 + r + 1) * kb];
+                for kk in 0..kc {
+                    let kabs = kbeg + kk;
+                    let byte = line[kabs / 2];
+                    let nib =
+                        (if kabs % 2 == 0 { byte & 0xF } else { byte >> 4 })
+                            as i8;
+                    let v = if nib >= 8 { nib - 16 } else { nib };
+                    ap[(t * kc + kk) * MR + lane] = v;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn tile_i8(asl: &[i8], bs: &[i8], acc: &mut [[i32; NR]; MR]) {
+    for (af, bf) in asl.chunks_exact(MR).zip(bs.chunks_exact(NR)) {
+        for (&av, arow) in af.iter().zip(acc.iter_mut()) {
+            let av = av as i32;
+            for (a, &bv) in arow.iter_mut().zip(bf) {
+                *a += av * bv as i32;
+            }
+        }
+    }
+}
+
+/// Shared int task: packs lhs panels, runs the tile loop, and hands
+/// each finished (row_base, col, values) tile to `store` — the i32 and
+/// fused-dequant epilogues differ only there.
+#[allow(clippy::too_many_arguments)]
+fn task_int(src: IntLhs, pb: &[i8], n: usize, k: usize, m: usize, r0: usize,
+            r1: usize, store: &mut dyn FnMut(usize, usize, &[i32])) {
+    let rows = r1 - r0;
+    let strips_m = m.div_ceil(NR);
+    let mut ap: Vec<i8> = Vec::new();
+    let mut kbeg = 0usize;
+    while kbeg < k {
+        let kend = k.min(kbeg + KC_I8);
+        let kc = kend - kbeg;
+        pack_lhs_int(src, n, k, r0, r1, kbeg, kend, &mut ap);
+        for s in 0..strips_m {
+            let bs = &pb[(s * k + kbeg) * NR..(s * k + kend) * NR];
+            let cmax = NR.min(m - s * NR);
+            for t in 0..rows.div_ceil(MR) {
+                let asl = &ap[t * kc * MR..(t + 1) * kc * MR];
+                let mut acc = [[0i32; NR]; MR];
+                tile_i8(asl, bs, &mut acc);
+                let rmax = MR.min(rows - t * MR);
+                for (i, arow) in acc.iter().enumerate().take(rmax) {
+                    let row = t * MR + i;
+                    store(row * m, s * NR, &arow[..cmax]);
+                }
+            }
+        }
+        kbeg = kend;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::reference;
+    use crate::util::prng::Pcg32;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    fn randq(n: usize, seed: u64, lim: u32) -> Vec<i8> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| (r.below(2 * lim + 1) as i32 - lim as i32) as i8)
+            .collect()
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f32 = b.iter().map(|v| v * v).sum();
+        (num / den.max(1e-12)).sqrt()
+    }
+
+    const SHAPES: [(usize, usize, usize); 6] = [
+        (1, 1, 1),
+        (3, 17, 5),
+        (64, 64, 64),
+        (127, 33, 65),
+        (16, 257, 7),
+        (40, 19, 128),
+    ];
+
+    #[test]
+    fn f32_matches_naive_oracle_all_layouts() {
+        for (idx, &(n, k, m)) in SHAPES.iter().enumerate() {
+            let seed = 100 + idx as u64;
+            let a = randv(n * k, seed);
+            let b = randv(k * m, seed + 50);
+            let w = randv(m * k, seed + 60); // (m, k) for NT
+            let at = transpose(&a, n, k); // (k, n) for TN
+            let e = rel_err(&gemm_f32_nn(&a, &b, n, k, m),
+                            &reference::matmul(&a, &b, n, k, m));
+            assert!(e < 1e-4, "nn {n}x{k}x{m}: {e}");
+            let e = rel_err(&gemm_f32_nt(&a, &w, n, k, m),
+                            &reference::matmul_nt(&a, &w, n, k, m));
+            assert!(e < 1e-4, "nt {n}x{k}x{m}: {e}");
+            let e = rel_err(&gemm_f32_tn(&at, &b, k, n, m),
+                            &reference::matmul_tn(&at, &b, k, n, m));
+            assert!(e < 1e-4, "tn {n}x{k}x{m}: {e}");
+        }
+    }
+
+    #[test]
+    fn f32_threaded_matches_and_is_deterministic() {
+        let _gate = pool::test_serial();
+        let (n, k, m) = (127, 65, 33);
+        let a = randv(n * k, 7);
+        let b = randv(k * m, 8);
+        pool::set_num_threads(1);
+        let serial = gemm_f32_nn(&a, &b, n, k, m);
+        pool::set_num_threads(4);
+        let par = gemm_f32_nn(&a, &b, n, k, m);
+        pool::set_num_threads(0);
+        // identical row partitioning -> bit-identical output
+        assert_eq!(serial, par);
+        assert!(rel_err(&par, &reference::matmul(&a, &b, n, k, m)) < 1e-4);
+    }
+
+    #[test]
+    fn i8_bit_exact_vs_reference() {
+        for (idx, &(n, k, m)) in SHAPES.iter().enumerate() {
+            let seed = 300 + idx as u64;
+            let a = randq(n * k, seed, 127);
+            let b = randq(k * m, seed + 50, 127);
+            assert_eq!(gemm_i8_nn(&a, &b, n, k, m),
+                       reference::matmul_i8_nn(&a, &b, n, k, m),
+                       "nn {n}x{k}x{m}");
+            let at = randq(k * n, seed + 70, 127);
+            assert_eq!(gemm_i8_tn(&at, &b, k, n, m),
+                       reference::matmul_i8_tn(&at, &b, k, n, m),
+                       "tn {n}x{k}x{m}");
+        }
+    }
+
+    #[test]
+    fn i8_deq_equals_i32_then_scale() {
+        // k = 2048 crosses the KC_I8 = 1024 block boundary, pinning the
+        // exact-i32-total contract on multi-block depths too (the
+        // gw_hq4 path contracts over batch*seq, which exceeds 1024)
+        for (n, k, m) in [(24, 32, 17), (2, 2048, 3)] {
+            let a = randq(n * k, 1, 127);
+            let b = randq(k * m, 2, 127);
+            let s = 0.0371f32;
+            let want: Vec<f32> = reference::matmul_i8_nn(&a, &b, n, k, m)
+                .iter()
+                .map(|&v| v as f32 * s)
+                .collect();
+            assert_eq!(gemm_i8_nn_deq(&a, &b, n, k, m, s), want,
+                       "nn {n}x{k}x{m}");
+            let at = transpose_i8(&a, n, k);
+            assert_eq!(gemm_i8_tn_deq(&at, &b, k, n, m, s), want,
+                       "tn {n}x{k}x{m}");
+        }
+    }
+
+    fn transpose_i8(a: &[i8], rows: usize, cols: usize) -> Vec<i8> {
+        let mut out = vec![0i8; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = a[r * cols + c];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn int4_nibble_gemm_bit_exact_vs_unpacked() {
+        for &(n, k, m) in &[(1usize, 2usize, 1usize), (3, 16, 5), (9, 48, 11),
+                            (32, 32, 32)] {
+            let q = randq(n * k, 42 + n as u64, 7); // INT4 range
+            let packed = crate::quant::pack_int4(&q);
+            let b = randq(k * m, 43 + m as u64, 7);
+            let s = 0.125f32;
+            let want: Vec<f32> = reference::matmul_i8_nn(&q, &b, n, k, m)
+                .iter()
+                .map(|&v| v as f32 * s)
+                .collect();
+            assert_eq!(gemm_i4_nn_deq(&packed, &b, n, k, m, s), want,
+                       "{n}x{k}x{m}");
+        }
+    }
+
+    #[test]
+    fn int4_rejects_odd_depth() {
+        let r = std::panic::catch_unwind(|| {
+            gemm_i4_nn_deq(&[0u8; 2], &[0i8; 3], 1, 3, 1, 1.0)
+        });
+        assert!(r.is_err(), "odd k must be rejected");
+    }
+
+    #[test]
+    fn max_k_contract_is_pinned() {
+        // k·127² must fit i32: the bound is exactly i32::MAX / 127².
+        assert_eq!(MAX_K_I8, 133_152);
+        assert!((MAX_K_I8 as i64) * 127 * 127 <= i32::MAX as i64);
+        assert!((MAX_K_I8 as i64 + 1) * 127 * 127 > i32::MAX as i64);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn over_max_k_panics_in_debug() {
+        let k = MAX_K_I8 + 2;
+        let a = vec![0i8; k];
+        let b = vec![0i8; k];
+        let r = std::panic::catch_unwind(|| gemm_i8_nn(&a, &b, 1, k, 1));
+        assert!(r.is_err(), "k beyond the i32 bound must debug-panic");
+    }
+
+    #[test]
+    fn empty_dims_yield_zeros() {
+        let b = randv(3 * 4, 77);
+        assert!(gemm_f32_nn(&[], &b, 0, 3, 4).is_empty());
+        assert_eq!(gemm_f32_nn(&[], &[], 2, 0, 3), vec![0.0; 6]);
+        assert!(gemm_i8_nn(&[], &[0i8], 0, 1, 1).is_empty());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = randv(7 * 5, 9);
+        assert_eq!(transpose(&transpose(&a, 7, 5), 5, 7), a);
+    }
+}

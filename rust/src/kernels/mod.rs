@@ -1,0 +1,114 @@
+//! The native compute kernel subsystem — blocked, multi-threaded GEMM
+//! and fused Hadamard/quantize epilogues powering `NativeBackend`.
+//!
+//! HOT's 2.6x training speedup comes from running the Hadamard-
+//! quantized backward GEMMs on real low-precision kernels with the
+//! transform/quantize fused into the GEMM pipeline (HLQ, Kim & Park
+//! 2024). This module is that compute story for the CPU backend:
+//!
+//!   * `gemm` — cache-blocked f32 microkernels (NN/NT/TN, packed
+//!     panels, MRxNR register tiles), packed INT8->i32 and INT4-nibble
+//!     GEMMs for the HQ/HLA backward paths, fused dequant-scale output;
+//!   * `fused` — threaded block-FWHT-16 plus the fused FWHT+quantize
+//!     epilogue (amax folded into the transform pass);
+//!   * `pool` — std-only fork-join pool with a work-stealing task
+//!     cursor (`--threads N` / `set_num_threads`);
+//!   * `dispatch` — per-shape plan memoization (fan-out decisions);
+//!   * `reference` — the original naive loop nests, kept solely as
+//!     property-test oracles.
+//!
+//! Everything is deterministic: for a given shape the result is
+//! bit-identical at any thread count, because tasks own disjoint output
+//! rows and in-row summation order never depends on scheduling.
+
+pub mod dispatch;
+pub mod fused;
+pub mod gemm;
+pub mod pool;
+pub mod reference;
+
+pub use fused::{fwht_cols, fwht_cols_amax, fwht_quant_cols,
+                fwht_quant_rows, fwht_rows, fwht_rows_amax};
+pub use gemm::{gemm_f32_nn, gemm_f32_nt, gemm_f32_tn, gemm_i4_nn_deq,
+               gemm_i8_nn, gemm_i8_nn_deq, gemm_i8_tn, gemm_i8_tn_deq,
+               transpose, MAX_K_I8, MR, NR};
+pub use pool::{num_threads, parallel_for, set_num_threads};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f32 = b.iter().map(|v| v * v).sum();
+        (num / den.max(1e-12)).sqrt()
+    }
+
+    #[test]
+    fn prop_blocked_f32_matches_oracle_any_shape() {
+        proptest::check("blocked f32 gemm vs naive", 25, |case| {
+            let n = case.usize_in(1, 70);
+            let k = case.usize_in(1, 70);
+            let m = case.usize_in(1, 70);
+            let a = case.f32_vec(n * k, 1.0);
+            let b = case.f32_vec(k * m, 1.0);
+            let got = gemm_f32_nn(&a, &b, n, k, m);
+            let want = reference::matmul(&a, &b, n, k, m);
+            let e = rel_err(&got, &want);
+            if e < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("{n}x{k}x{m}: rel err {e}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_blocked_i8_bit_exact_any_shape() {
+        proptest::check("blocked i8 gemm vs naive", 25, |case| {
+            let n = case.usize_in(1, 50);
+            let k = case.usize_in(1, 50);
+            let m = case.usize_in(1, 50);
+            let a: Vec<i8> = (0..n * k)
+                .map(|_| (case.rng.below(255) as i32 - 127) as i8)
+                .collect();
+            let b: Vec<i8> = (0..k * m)
+                .map(|_| (case.rng.below(255) as i32 - 127) as i8)
+                .collect();
+            if gemm_i8_nn(&a, &b, n, k, m)
+                == reference::matmul_i8_nn(&a, &b, n, k, m)
+            {
+                Ok(())
+            } else {
+                Err(format!("{n}x{k}x{m}: i8 mismatch"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_int4_matches_int8_any_even_depth() {
+        proptest::check("int4 nibble gemm vs i8", 20, |case| {
+            let n = case.usize_in(1, 24);
+            let k = 2 * case.usize_in(1, 24);
+            let m = case.usize_in(1, 24);
+            let q: Vec<i8> = (0..n * k)
+                .map(|_| (case.rng.below(15) as i32 - 7) as i8)
+                .collect();
+            let b: Vec<i8> = (0..k * m)
+                .map(|_| (case.rng.below(15) as i32 - 7) as i8)
+                .collect();
+            let packed = crate::quant::pack_int4(&q);
+            let got = gemm_i4_nn_deq(&packed, &b, n, k, m, 1.0);
+            let want: Vec<f32> = reference::matmul_i8_nn(&q, &b, n, k, m)
+                .iter()
+                .map(|&v| v as f32)
+                .collect();
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{n}x{k}x{m}: int4 mismatch"))
+            }
+        });
+    }
+}

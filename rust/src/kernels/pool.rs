@@ -1,0 +1,328 @@
+//! Std-only fork-join thread pool with work-stealing task scheduling.
+//!
+//! One process-global pool, spawned lazily on first use. Workers park on
+//! a condvar; `parallel_for` publishes a *region* — a borrowed closure
+//! plus an atomic task cursor — and every participating thread (the
+//! caller included) repeatedly steals the next unclaimed task index
+//! until the region is drained. Idle threads therefore self-balance
+//! against slow tasks instead of being handed a static partition.
+//!
+//! The closure is borrowed, not `'static`: `parallel_for` erases the
+//! lifetime, and soundness comes from the retire protocol — the caller
+//! clears the region and blocks until every joined worker has retired
+//! (`live == 0`) before its stack frame returns, so no worker can touch
+//! the closure after it dies. Late-waking workers observe `region ==
+//! None` and go back to sleep without joining.
+//!
+//! `--threads N` maps to [`set_num_threads`]; 0 means one thread per
+//! available core. The cap may exceed the core count (useful for
+//! oversubscription experiments in `benches/kernel_gemm.rs`) — the pool
+//! grows on demand. Nested or concurrent `parallel_for` calls fall back
+//! to inline execution (the submit lock is `try_lock`ed), which keeps
+//! the pool deadlock-free by construction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// Requested thread budget; 0 = one per available core.
+static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide kernel thread budget (0 restores the per-core
+/// default). Takes effect on the next `parallel_for`.
+pub fn set_num_threads(n: usize) {
+    THREAD_CAP.store(n, Ordering::Relaxed);
+}
+
+/// Serializes tests that mutate the process-global thread budget (the
+/// harness runs tests concurrently; cap-dependent assertions must not
+/// interleave). Poison is ignored so one failing test doesn't cascade.
+#[cfg(test)]
+pub(crate) fn test_serial() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The thread budget `parallel_for` will use right now.
+pub fn num_threads() -> usize {
+    let cap = THREAD_CAP.load(Ordering::Relaxed);
+    if cap != 0 {
+        return cap;
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One published parallel region: a lifetime-erased closure and the
+/// shared cursor tasks are stolen from.
+struct Region {
+    /// SAFETY: points at the caller's borrowed closure; only valid until
+    /// the caller retires the region (see `parallel_for`).
+    func: &'static (dyn Fn(usize) + Sync),
+    tasks: usize,
+    next: AtomicUsize,
+    /// First panic payload caught on a worker; re-raised on the caller
+    /// after the region retires so task panics are never swallowed.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Region {
+    /// Steal-and-run until the cursor passes `tasks`.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks {
+                break;
+            }
+            (self.func)(i);
+        }
+    }
+}
+
+struct State {
+    region: Option<Arc<Region>>,
+    /// Bumped on each publish so parked workers can tell a fresh region
+    /// from one they already joined.
+    seq: u64,
+    /// Workers still allowed to join the current region.
+    slots: usize,
+    /// Workers currently inside `Region::drain`.
+    live: usize,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Serializes regions; `try_lock` failure = nested/concurrent call,
+    /// which runs inline instead of queueing (no deadlock possible).
+    submit: Mutex<()>,
+    spawned: Mutex<usize>,
+}
+
+fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(State { region: None, seq: 0, slots: 0, live: 0 }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        submit: Mutex::new(()),
+        spawned: Mutex::new(0),
+    })
+}
+
+fn ensure_workers(pool: &'static Pool, want: usize) {
+    let mut spawned = pool.spawned.lock().unwrap();
+    while *spawned < want {
+        thread::Builder::new()
+            .name(format!("hot-kernel-{}", *spawned))
+            .spawn(move || worker_loop(pool))
+            .expect("spawn kernel pool worker");
+        *spawned += 1;
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    let mut seen = 0u64;
+    let mut st = pool.state.lock().unwrap();
+    loop {
+        if st.seq != seen && st.slots > 0 {
+            if let Some(region) = st.region.clone() {
+                seen = st.seq;
+                st.slots -= 1;
+                st.live += 1;
+                drop(st);
+                // a panicking task must not leak `live` (the caller
+                // would wait forever); park the payload on the region
+                // and the caller re-raises it after the retire barrier
+                let result = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| region.drain()));
+                if let Err(payload) = result {
+                    let mut slot = region.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                st = pool.state.lock().unwrap();
+                st.live -= 1;
+                if st.live == 0 {
+                    pool.done_cv.notify_all();
+                }
+                continue;
+            }
+            // region already retired: remember the seq so we don't spin
+            seen = st.seq;
+        }
+        st = pool.work_cv.wait(st).unwrap();
+    }
+}
+
+/// Drop guard that retires the published region: clears it (so late
+/// wakers can't join) and blocks until every joined worker has left
+/// `Region::drain`. Running in `Drop` keeps the lifetime erasure in
+/// `parallel_for` sound even when a task panics on the caller thread.
+struct Retire {
+    pool: &'static Pool,
+}
+
+impl Drop for Retire {
+    fn drop(&mut self) {
+        let mut st = self.pool.state.lock().unwrap();
+        st.region = None;
+        st.slots = 0;
+        while st.live > 0 {
+            st = self.pool.done_cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Run `f(0..tasks)` across the pool. Each index runs exactly once;
+/// scheduling is dynamic (work-stealing cursor), completion is a
+/// barrier: every call has returned when this returns. Falls back to
+/// inline serial execution when the budget is 1, the pool is busy, or
+/// the call is nested inside another `parallel_for`.
+pub fn parallel_for(tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if tasks == 0 {
+        return;
+    }
+    let width = num_threads().min(tasks);
+    if width <= 1 {
+        for i in 0..tasks {
+            f(i);
+        }
+        return;
+    }
+    let pool = global();
+    let guard = match pool.submit.try_lock() {
+        Ok(g) => g,
+        // a task panic on a previous caller poisons `submit` as its
+        // guard unwinds; the pool state itself is consistent (Retire
+        // ran), so recover instead of degrading to inline forever
+        Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(std::sync::TryLockError::WouldBlock) => {
+            // nested or concurrent region: run inline
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+    };
+    ensure_workers(pool, width - 1);
+    // SAFETY: `_retire` clears the region and drains `live` before this
+    // frame returns — normally or by unwind — so the erased borrow
+    // never outlives `f`.
+    let func: &'static (dyn Fn(usize) + Sync) =
+        unsafe { &*(f as *const (dyn Fn(usize) + Sync)) };
+    let region = Arc::new(Region {
+        func,
+        tasks,
+        next: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+    });
+    {
+        let mut st = pool.state.lock().unwrap();
+        st.region = Some(region.clone());
+        st.seq = st.seq.wrapping_add(1);
+        st.slots = width - 1;
+        pool.work_cv.notify_all();
+    }
+    let _retire = Retire { pool };
+    region.drain();
+    drop(_retire);
+    drop(guard);
+    if let Some(payload) = region.panic.lock().unwrap().take() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let _gate = test_serial();
+        set_num_threads(4);
+        let hits: Vec<AtomicUsize> =
+            (0..257).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        set_num_threads(0);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let _gate = test_serial();
+        set_num_threads(4);
+        let total = AtomicU64::new(0);
+        parallel_for(8, &|i| {
+            parallel_for(8, &|j| {
+                total.fetch_add((i * 8 + j) as u64, Ordering::Relaxed);
+            });
+        });
+        set_num_threads(0);
+        assert_eq!(total.load(Ordering::Relaxed), (0..64).sum::<u64>());
+    }
+
+    #[test]
+    fn zero_tasks_and_single_thread_paths() {
+        let _gate = test_serial();
+        parallel_for(0, &|_| panic!("no tasks to run"));
+        set_num_threads(1);
+        let sum = AtomicUsize::new(0);
+        parallel_for(5, &|i| {
+            sum.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        set_num_threads(0);
+        assert_eq!(sum.load(Ordering::Relaxed), 15);
+    }
+
+    #[test]
+    fn budget_resolves() {
+        let _gate = test_serial();
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(0);
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_task_panics_propagate_to_caller() {
+        let _gate = test_serial();
+        set_num_threads(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_for(64, &|i| {
+                if i == 13 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "task panic must reach the caller");
+        // the pool stays usable after a panicked region
+        set_num_threads(2);
+        let sum = AtomicUsize::new(0);
+        parallel_for(8, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        set_num_threads(0);
+        assert_eq!(sum.load(Ordering::Relaxed), 28);
+    }
+
+    #[test]
+    fn regions_reusable_back_to_back() {
+        let _gate = test_serial();
+        set_num_threads(2);
+        for round in 0..32 {
+            let sum = AtomicUsize::new(0);
+            parallel_for(16, &|i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 120, "round {round}");
+        }
+        set_num_threads(0);
+    }
+}

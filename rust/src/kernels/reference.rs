@@ -1,0 +1,111 @@
+//! Naive loop-nest GEMM oracles.
+//!
+//! These are the seed tree's original debug-friendly triple loops,
+//! collected in ONE place. They are the correctness contract the
+//! blocked/threaded kernels in `kernels::gemm` are property-tested
+//! against — nothing outside this module and the kernel tests should
+//! call them on a hot path.
+
+/// y = x @ w.T: x (n, k), w (m, k) -> (n, m).
+pub fn matmul_nt(x: &[f32], w: &[f32], n: usize, k: usize, m: usize)
+                 -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), m * k);
+    let mut out = vec![0.0f32; n * m];
+    for r in 0..n {
+        let xr = &x[r * k..(r + 1) * k];
+        let dst = &mut out[r * m..(r + 1) * m];
+        for (c, d) in dst.iter_mut().enumerate() {
+            let wr = &w[c * k..(c + 1) * k];
+            let mut acc = 0.0f32;
+            for (a, b) in xr.iter().zip(wr) {
+                acc += a * b;
+            }
+            *d = acc;
+        }
+    }
+    out
+}
+
+/// a @ b: a (n, k), b (k, m) -> (n, m). Skips zero lhs entries.
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for r in 0..n {
+        for p in 0..k {
+            let av = a[r * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * m..(p + 1) * m];
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// a.T @ b: a (k, n), b (k, m) -> (n, m).
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize)
+                 -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for p in 0..k {
+        let arow = &a[p * n..(p + 1) * n];
+        let brow = &b[p * m..(p + 1) * m];
+        for (r, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Integer GEMM a @ b with i32 accumulation: a (n, k), b (k, m) i8.
+pub fn matmul_i8_nn(a: &[i8], b: &[i8], n: usize, k: usize, m: usize)
+                    -> Vec<i32> {
+    let mut out = vec![0i32; n * m];
+    for r in 0..n {
+        for p in 0..k {
+            let av = a[r * k + p] as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[p * m..(p + 1) * m];
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, &bv) in dst.iter_mut().zip(brow) {
+                *d += av * bv as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Integer GEMM a.T @ b with i32 accumulation: a (k, n), b (k, m) i8.
+pub fn matmul_i8_tn(a: &[i8], b: &[i8], k: usize, n: usize, m: usize)
+                    -> Vec<i32> {
+    let mut out = vec![0i32; n * m];
+    for p in 0..k {
+        let arow = &a[p * n..(p + 1) * n];
+        let brow = &b[p * m..(p + 1) * m];
+        for (r, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let dst = &mut out[r * m..(r + 1) * m];
+            for (d, &bv) in dst.iter_mut().zip(brow) {
+                *d += av as i32 * bv as i32;
+            }
+        }
+    }
+    out
+}

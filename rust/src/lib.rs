@@ -10,6 +10,9 @@
 //!     python/jax/Pallas (`make artifacts`);
 //!   * `coordinator` owns the training loop, ABC context buffers, LQS
 //!     calibration, data, metrics and checkpoints — backend-agnostic;
+//!   * `kernels` is the native compute layer: blocked multi-threaded
+//!     GEMM (f32 / INT8 / INT4-nibble), fused FWHT+quant epilogues and
+//!     the `--threads` work-stealing pool every hot path routes through;
 //!   * `costmodel` / `latsim` regenerate the paper's analytic
 //!     tables/figures; `hadamard` / `quant` mirror kernel semantics
 //!     host-side (both backends share them); `util` holds the
@@ -21,6 +24,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod hadamard;
+pub mod kernels;
 pub mod latsim;
 pub mod quant;
 pub mod runtime;

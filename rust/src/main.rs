@@ -38,7 +38,7 @@ fn main() -> Result<()> {
                  common: --backend native|pjrt|auto --artifacts DIR\n\
                          --preset NAME --variant V --steps N --batch N\n\
                          --lr F --mode fused|split|accum --accum N\n\
-                         --seed N --config run.json"
+                         --threads N --seed N --config run.json"
             );
             Ok(())
         }
@@ -77,8 +77,11 @@ fn run_config(args: &Args) -> Result<RunConfig> {
 
 fn executor(args: &Args, cfg: &RunConfig) -> Result<Arc<dyn Executor>> {
     let backend = args.str_or("backend", "auto");
-    let rt = hot::backend::by_name(&backend, &cfg.artifacts)?;
-    hot::info!("backend: {}", rt.name());
+    let rt =
+        hot::backend::by_name_threaded(&backend, &cfg.artifacts,
+                                       args.threads())?;
+    hot::info!("backend: {} ({} kernel threads)", rt.name(),
+               hot::kernels::num_threads());
     Ok(rt)
 }
 

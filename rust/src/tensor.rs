@@ -84,27 +84,15 @@ impl TensorF32 {
         (num / den.max(1e-20)).sqrt()
     }
 
-    /// Exact row-major matmul: (m,k) x (k,n) -> (m,n).
+    /// Row-major matmul: (m,k) x (k,n) -> (m,n). Thin wrapper over the
+    /// blocked/threaded kernel subsystem (`kernels::gemm_f32_nn`).
     pub fn matmul(&self, rhs: &TensorF32) -> Result<TensorF32> {
         let (m, k) = self.dims2()?;
         let (k2, n) = rhs.dims2()?;
         if k != k2 {
             bail!("matmul dim mismatch: {}x{} @ {}x{}", m, k, k2, n);
         }
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let row = &rhs.data[p * n..(p + 1) * n];
-                let dst = &mut out[i * n..(i + 1) * n];
-                for (d, b) in dst.iter_mut().zip(row) {
-                    *d += a * b;
-                }
-            }
-        }
+        let out = crate::kernels::gemm_f32_nn(&self.data, &rhs.data, m, k, n);
         TensorF32::from_vec(&[m, n], out)
     }
 

@@ -81,6 +81,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--threads N` — the kernel-pool thread budget shared by every
+    /// binary/bench (0 = one thread per available core).
+    pub fn threads(&self) -> usize {
+        self.usize_or("threads", 0)
+    }
+
     /// Returns the unknown --key/--flag names (parsed but never accessed).
     pub fn unused(&self) -> Vec<String> {
         let used = self.used.borrow();
@@ -130,6 +136,12 @@ mod tests {
         let a = argv("x");
         assert_eq!(a.usize_or("missing", 7), 7);
         assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn threads_knob() {
+        assert_eq!(argv("train --threads 3").threads(), 3);
+        assert_eq!(argv("train").threads(), 0);
     }
 
     #[test]
