@@ -686,16 +686,11 @@ pub fn softmax_xent_bwd(ctx: &CeCtx, n: usize) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::util::prng::Pcg32;
+    use crate::util::proptest::rel_err;
 
     fn randv(n: usize, seed: u64) -> Vec<f32> {
         let mut r = Pcg32::seeded(seed);
         (0..n).map(|_| r.normal()).collect()
-    }
-
-    fn rel_err(a: &[f32], b: &[f32]) -> f32 {
-        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
-        let den: f32 = b.iter().map(|v| v * v).sum();
-        (num / den.max(1e-12)).sqrt()
     }
 
     #[test]

@@ -39,7 +39,14 @@ const KC_I8: usize = 1024;
 
 /// Largest contraction depth an i8 GEMM may accumulate in i32: every
 /// product is bounded by 127^2, so k·127² must stay below `i32::MAX`.
+/// Assumes operands live in the symmetric quantized range [-127, 127]
+/// (every repo quantizer clamps there); -128 would void the bound and
+/// is rejected in debug builds.
 pub const MAX_K_I8: usize = (i32::MAX / (127 * 127)) as usize;
+/// The (much looser) bound for the INT4-nibble lhs family: nibbles
+/// sign-extend to [-8, 7], so every product is bounded by 8·127 (the
+/// i8 rhs under the same symmetric-range contract).
+pub const MAX_K_I4: usize = (i32::MAX / (8 * 127)) as usize;
 
 #[derive(Debug, Clone, Copy)]
 enum Lhs {
@@ -64,6 +71,16 @@ enum Rhs {
 enum IntLhs<'a> {
     I8(&'a [i8], Lhs),
     I4(&'a [u8]),
+}
+
+impl IntLhs<'_> {
+    /// Per-family depth bound keeping every i32 accumulator exact.
+    fn max_k(&self) -> usize {
+        match self {
+            IntLhs::I8(..) => MAX_K_I8,
+            IntLhs::I4(_) => MAX_K_I4,
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -95,6 +112,8 @@ pub fn gemm_f32_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize)
 }
 
 /// Integer GEMM a @ b with i32 accumulation: a (n, k), b (k, m) i8.
+/// All i8 entry points expect operands in the symmetric quantized
+/// range [-127, 127] — see `MAX_K_I8`.
 pub fn gemm_i8_nn(a: &[i8], b: &[i8], n: usize, k: usize, m: usize)
                   -> Vec<i32> {
     debug_assert_eq!(a.len(), n * k);
@@ -193,12 +212,80 @@ fn gemm_f32(lhs: Lhs, a: &[f32], rhs: Rhs, b: &[f32], n: usize, k: usize,
     if n == 0 || m == 0 || k == 0 {
         return out;
     }
+    let onehot = match lhs {
+        Lhs::N => onehot_rows(a, k),
+        Lhs::T => None,
+    };
+    if let Some(rows) = onehot {
+        gather_rows(&rows, rhs, b, k, m, &mut out);
+        return out;
+    }
     let pb = pack_rhs_f32(rhs, b, k, m);
     let plan = dispatch::plan(n, k, m, Elem::F32);
     run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
         task_f32(lhs, a, &pb, n, k, m, r0, r1, c);
     });
     out
+}
+
+/// If every lhs row has at most one nonzero (the LM one-hot embedding
+/// feeding the first qlinear), return the per-row (col, val) pairs so
+/// the GEMM can run as an O(n·m) gather instead of dense O(n·k·m) —
+/// the sparsity win the old naive loop got from skipping zero entries.
+/// The scan exits at the first row with a second nonzero, so a typical
+/// dense lhs bails inside row 0; the worst case (a long prefix of
+/// ≤1-nonzero rows before a dense one) adds one extra read pass over
+/// the lhs, ≤ 1/m of the dense GEMM's own work.
+fn onehot_rows(a: &[f32], k: usize) -> Option<Vec<(usize, f32)>> {
+    let mut chunks = a.chunks_exact(k);
+    // probe the first row before allocating anything: a typical dense
+    // lhs (every GEMM outside the embedding) bails here for free
+    let first = onehot_row(chunks.next()?)?;
+    let mut rows = Vec::with_capacity(a.len() / k);
+    rows.push(first);
+    for row in chunks {
+        rows.push(onehot_row(row)?);
+    }
+    Some(rows)
+}
+
+/// `None` if the row has two or more nonzeros; `Some((0, 0.0))` for an
+/// all-zero row.
+fn onehot_row(row: &[f32]) -> Option<(usize, f32)> {
+    let mut hit: Option<(usize, f32)> = None;
+    for (j, &v) in row.iter().enumerate() {
+        if v != 0.0 {
+            if hit.is_some() {
+                return None;
+            }
+            hit = Some((j, v));
+        }
+    }
+    Some(hit.unwrap_or((0, 0.0)))
+}
+
+/// out[r, :] = val_r * b[col_r, :] (Rhs::N) or val_r * b[:, col_r]
+/// read across (m, k) rows (Rhs::T). Memory-bound; runs serial.
+fn gather_rows(rows: &[(usize, f32)], rhs: Rhs, b: &[f32], k: usize,
+               m: usize, out: &mut [f32]) {
+    for (&(j, v), dst) in rows.iter().zip(out.chunks_exact_mut(m)) {
+        if v == 0.0 {
+            continue; // all-zero lhs row: output row stays zero
+        }
+        match rhs {
+            Rhs::N => {
+                for (d, &bv) in dst.iter_mut().zip(&b[j * m..(j + 1) * m]) {
+                    *d = v * bv;
+                }
+            }
+            Rhs::T => {
+                let col = b.iter().skip(j).step_by(k);
+                for (d, &bv) in dst.iter_mut().zip(col) {
+                    *d = v * bv;
+                }
+            }
+        }
+    }
 }
 
 /// Pack the rhs into NR-column strips, k-major within each strip:
@@ -317,8 +404,13 @@ fn task_f32(lhs: Lhs, a: &[f32], pb: &[f32], n: usize, k: usize, m: usize,
 
 fn gemm_int_i32(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize)
                 -> Vec<i32> {
-    debug_assert!(k <= MAX_K_I8,
-                  "i8 GEMM depth {k} can overflow i32 (max {MAX_K_I8})");
+    // release-mode assert: beyond the bound the accumulator silently
+    // wraps and produces garbage gradients, and the check is one
+    // comparison per GEMM call
+    let max_k = src.max_k();
+    assert!(k <= max_k,
+            "int GEMM depth {k} can overflow i32 (max {max_k})");
+    debug_check_symmetric(src, b);
     let mut out = vec![0i32; n * m];
     if n == 0 || m == 0 || k == 0 {
         return out;
@@ -341,8 +433,10 @@ fn gemm_int_i32(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize)
 
 fn gemm_int_deq(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize,
                 scale: f32) -> Vec<f32> {
-    debug_assert!(k <= MAX_K_I8,
-                  "i8 GEMM depth {k} can overflow i32 (max {MAX_K_I8})");
+    let max_k = src.max_k();
+    assert!(k <= max_k,
+            "int GEMM depth {k} can overflow i32 (max {max_k})");
+    debug_check_symmetric(src, b);
     if k > KC_I8 {
         // multi-block depths would accumulate f32-converted partials
         // per KC block; keep the exact i32 total and scale once so the
@@ -370,6 +464,23 @@ fn gemm_int_deq(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize,
         });
     });
     out
+}
+
+/// Debug-only: the 127-based `MAX_K_*` bounds assume the symmetric
+/// quantized range, so an i8 operand of -128 voids the no-overflow
+/// guarantee. Every repo quantizer clamps to ±127 — this guards
+/// direct pub-API callers. (The I4 lhs extreme of -8 is already
+/// accounted for in `MAX_K_I4`, so only i8 slices are scanned.)
+fn debug_check_symmetric(src: IntLhs, b: &[i8]) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    if let IntLhs::I8(a, _) = src {
+        assert!(a.iter().all(|&v| v != i8::MIN),
+                "i8 GEMM lhs must lie in [-127, 127]");
+    }
+    assert!(b.iter().all(|&v| v != i8::MIN),
+            "i8 GEMM rhs must lie in [-127, 127]");
 }
 
 fn pack_rhs_i8(b: &[i8], k: usize, m: usize) -> Vec<i8> {
@@ -482,6 +593,7 @@ mod tests {
     use super::*;
     use crate::kernels::reference;
     use crate::util::prng::Pcg32;
+    use crate::util::proptest::rel_err;
 
     fn randv(n: usize, seed: u64) -> Vec<f32> {
         let mut r = Pcg32::seeded(seed);
@@ -493,12 +605,6 @@ mod tests {
         (0..n)
             .map(|_| (r.below(2 * lim + 1) as i32 - lim as i32) as i8)
             .collect()
-    }
-
-    fn rel_err(a: &[f32], b: &[f32]) -> f32 {
-        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
-        let den: f32 = b.iter().map(|v| v * v).sum();
-        (num / den.max(1e-12)).sqrt()
     }
 
     const SHAPES: [(usize, usize, usize); 6] = [
@@ -528,6 +634,29 @@ mod tests {
                             &reference::matmul_tn(&at, &b, k, n, m));
             assert!(e < 1e-4, "tn {n}x{k}x{m}: {e}");
         }
+    }
+
+    #[test]
+    fn onehot_lhs_gather_matches_naive_oracle() {
+        // one-hot lhs rows (the LM embedding) take the gather fast
+        // path; it must agree with the dense oracle for NN and NT,
+        // including scaled hits and all-zero rows
+        let (n, k, m) = (9, 13, 7);
+        let mut r = Pcg32::seeded(31);
+        let mut a = vec![0.0f32; n * k];
+        for row in 0..n {
+            if row == 4 {
+                continue; // leave one row all-zero
+            }
+            a[row * k + r.below(k as u32) as usize] =
+                if row % 2 == 0 { 1.0 } else { -0.5 };
+        }
+        let b = randv(k * m, 32);
+        let w = randv(m * k, 33);
+        assert!(rel_err(&gemm_f32_nn(&a, &b, n, k, m),
+                        &reference::matmul(&a, &b, n, k, m)) < 1e-6);
+        assert!(rel_err(&gemm_f32_nt(&a, &w, n, k, m),
+                        &reference::matmul_nt(&a, &w, n, k, m)) < 1e-6);
     }
 
     #[test]
@@ -620,20 +749,46 @@ mod tests {
 
     #[test]
     fn max_k_contract_is_pinned() {
-        // k·127² must fit i32: the bound is exactly i32::MAX / 127².
-        assert_eq!(MAX_K_I8, 133_152);
-        assert!((MAX_K_I8 as i64) * 127 * 127 <= i32::MAX as i64);
-        assert!((MAX_K_I8 as i64 + 1) * 127 * 127 > i32::MAX as i64);
+        // every i8 product is bounded by 127², every i4·i8 product by
+        // 8·127 (nibbles sign-extend to [-8, 7]); k·bound must fit i32
+        assert_eq!(MAX_K_I8, 133_144);
+        assert_eq!(MAX_K_I4, 2_113_665);
+        for (max_k, prod) in [(MAX_K_I8, 127i64 * 127), (MAX_K_I4, 8 * 127)] {
+            assert!(max_k as i64 * prod <= i32::MAX as i64);
+            assert!((max_k as i64 + 1) * prod > i32::MAX as i64);
+        }
     }
 
     #[cfg(debug_assertions)]
     #[test]
-    fn over_max_k_panics_in_debug() {
+    fn asymmetric_i8_rejected_in_debug() {
+        // -128 operands would void the 127-based overflow bounds
+        let r = std::panic::catch_unwind(|| {
+            gemm_i8_nn(&[-128], &[1], 1, 1, 1)
+        });
+        assert!(r.is_err(), "-128 lhs must be debug-rejected");
+        let r = std::panic::catch_unwind(|| {
+            gemm_i8_nn(&[1], &[-128], 1, 1, 1)
+        });
+        assert!(r.is_err(), "-128 rhs must be debug-rejected");
+    }
+
+    #[test]
+    fn int4_accepts_depth_beyond_i8_bound() {
+        // the INT4 family's looser bound must not inherit the i8 limit
+        let k = MAX_K_I8 + 2; // even
+        let a = vec![0u8; k / 2];
+        let b = vec![0i8; k];
+        assert_eq!(gemm_i4_nn_deq(&a, &b, 1, k, 1, 1.0), vec![0.0]);
+    }
+
+    #[test]
+    fn over_max_k_panics() {
         let k = MAX_K_I8 + 2;
         let a = vec![0i8; k];
         let b = vec![0i8; k];
         let r = std::panic::catch_unwind(|| gemm_i8_nn(&a, &b, 1, k, 1));
-        assert!(r.is_err(), "k beyond the i32 bound must debug-panic");
+        assert!(r.is_err(), "k beyond the i32 bound must panic");
     }
 
     #[test]

@@ -31,19 +31,14 @@ pub use fused::{fwht_cols, fwht_cols_amax, fwht_quant_cols,
                 fwht_quant_rows, fwht_rows, fwht_rows_amax};
 pub use gemm::{gemm_f32_nn, gemm_f32_nt, gemm_f32_tn, gemm_i4_nn_deq,
                gemm_i8_nn, gemm_i8_nn_deq, gemm_i8_tn, gemm_i8_tn_deq,
-               transpose, MAX_K_I8, MR, NR};
+               transpose, MAX_K_I4, MAX_K_I8, MR, NR};
 pub use pool::{num_threads, parallel_for, set_num_threads};
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest;
-
-    fn rel_err(a: &[f32], b: &[f32]) -> f32 {
-        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
-        let den: f32 = b.iter().map(|v| v * v).sum();
-        (num / den.max(1e-12)).sqrt()
-    }
+    use crate::util::proptest::rel_err;
 
     #[test]
     fn prop_blocked_f32_matches_oracle_any_shape() {

@@ -31,6 +31,15 @@ impl<'a> Case<'a> {
     }
 }
 
+/// RMS relative error of `a` vs reference `b` — the shared tolerance
+/// metric for kernel/layer property tests (one definition so the
+/// suites can't silently diverge on the formula or the den floor).
+pub fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f32 = b.iter().map(|v| v * v).sum();
+    (num / den.max(1e-12)).sqrt()
+}
+
 /// Run `prop` on `n_cases` random cases. On failure, retry with smaller
 /// sizes and panic with the minimal size + seed that still fails.
 pub fn check<F>(name: &str, n_cases: usize, prop: F)
