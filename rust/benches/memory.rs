@@ -1,0 +1,184 @@
+//! ABC memory bench — the measured counterpart of the paper's Fig 2 /
+//! Table 7 activation-memory story, at ctx granularity.
+//!
+//! Trains FP32 vs HOT (no ABC) vs HOT+ABC (INT8) vs HOT+ABC (INT4
+//! nibbles) in SPLIT mode, where every saved-for-backward tensor
+//! crosses the backend boundary into the byte-accounted `CtxStore`, and
+//! records live/peak ctx bytes + the metadata-derived compression
+//! ratio. Each measured peak is cross-checked against the analytic
+//! `costmodel::native_ctx_bytes` prediction (tolerance 15%; the model
+//! mirrors the ctx schema, so the two should agree exactly). Emits
+//! `BENCH_memory.json` and self-validates:
+//!
+//!   * HOT+ABC peak ctx < 0.5x FP32 on the `base` preset (CI smoke gate)
+//!   * best HOT+ABC peak <= 0.35x FP32 on an LM preset (paper's "up to
+//!     75%" activation claim, exceeded at ctx granularity because the
+//!     custom backward also packs the attention/GELU/CE residuals)
+//!   * split-mode loss decreases with packed ctx enabled (when the
+//!     step budget is large enough to read a trend)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use hot::backend::native::layers::BackwardCfg;
+use hot::backend::native::presets;
+use hot::backend::Executor;
+use hot::config::RunConfig;
+use hot::coordinator::{Mode, Trainer};
+use hot::costmodel::native_ctx_bytes;
+use hot::util::json::Json;
+use hot::util::timer::Table;
+
+struct Row {
+    preset: String,
+    method: &'static str,
+    variant: &'static str,
+    peak_bytes: u64,
+    predicted_bytes: u64,
+    compression: f64,
+    first_loss: f32,
+    last_loss: f32,
+}
+
+fn bench_one(rt: Arc<dyn Executor>, preset: &str, variant: &str,
+             batch: usize, steps: usize) -> (u64, f64, f32, f32) {
+    let mut cfg = RunConfig::default();
+    cfg.preset = preset.into();
+    cfg.variant = variant.into();
+    cfg.steps = steps;
+    cfg.batch = batch;
+    cfg.calib_batches = 0;
+    cfg.eval_every = 0;
+    cfg.warmup_steps = steps / 4 + 1;
+    let mut tr = Trainer::new(rt, cfg).expect("trainer");
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for s in 0..steps {
+        let (loss, _) = tr.step_once(Mode::Split).expect("split step");
+        if s == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert_eq!(tr.ctx.stats().live_bytes, 0, "ctx leak after training");
+    (tr.ctx.stats().peak_bytes, tr.ctx.compression_ratio(), first, last)
+}
+
+fn main() {
+    let rt = common::executor_or_exit();
+    if rt.name() != "native" {
+        // ctx byte accounting is native-exact; PJRT artifacts pin their
+        // own ctx schema, so the prediction cross-check would not apply
+        eprintln!("memory bench targets the native backend; got {}",
+                  rt.name());
+        return;
+    }
+    let steps = common::steps(6).max(2);
+    let methods: [(&'static str, &'static str); 4] = [
+        ("fp32", "fp"),
+        ("hot_noabc", "hot_noabc"),
+        ("hot_abc_int8", "hot"),
+        ("hot_abc_int4", "hot_abc4"),
+    ];
+    let preset_list: [(&str, usize); 3] = [("tiny", 16), ("lm_tiny", 8),
+                                           ("base", 4)];
+    let mut rows: Vec<Row> = Vec::new();
+    let mut t = Table::new(&["preset", "method", "peak ctx B", "vs fp32",
+                             "model B", "compression", "loss first->last"]);
+    for (preset, batch) in preset_list {
+        let mut fp_peak = 0u64;
+        for (method, variant) in methods {
+            let (peak, compression, first, last) =
+                bench_one(rt.clone(), preset, variant, batch, steps);
+            let shape = presets::shape_of(preset).expect("preset shape");
+            let cfg = BackwardCfg::parse(variant).expect("variant");
+            let predicted = native_ctx_bytes(&shape, &cfg, batch);
+            let rel = (peak as f64 - predicted as f64).abs()
+                / predicted as f64;
+            assert!(rel <= 0.15,
+                    "{preset}/{method}: measured peak {peak} vs cost-model \
+                     {predicted} ({:.1}% off — schema drift?)", rel * 100.0);
+            if method == "fp32" {
+                fp_peak = peak;
+            }
+            let frac = peak as f64 / fp_peak as f64;
+            t.row(&[preset.into(), method.into(), peak.to_string(),
+                    format!("{frac:.3}x"), predicted.to_string(),
+                    format!("{compression:.2}x"),
+                    format!("{first:.3} -> {last:.3}")]);
+            rows.push(Row { preset: preset.into(), method, variant,
+                            peak_bytes: peak, predicted_bytes: predicted,
+                            compression, first_loss: first,
+                            last_loss: last });
+        }
+    }
+    t.print(&format!("split-mode ctx memory, {} steps per cell (native \
+                      backend)", steps));
+
+    let peak_of = |preset: &str, method: &str| -> u64 {
+        rows.iter()
+            .find(|r| r.preset == preset && r.method == method)
+            .map(|r| r.peak_bytes)
+            .expect("row present")
+    };
+    // CI smoke gate: ABC must at least halve the base-preset ctx
+    let (base_fp, base_abc) = (peak_of("base", "fp32"),
+                               peak_of("base", "hot_abc_int8"));
+    assert!((base_abc as f64) < 0.5 * base_fp as f64,
+            "HOT+ABC peak ctx must be < 0.5x FP32 on base: {base_abc} vs \
+             {base_fp}");
+    // paper claim, exceeded: <= 0.35x FP32 on an LM preset
+    let lm_fp = peak_of("lm_tiny", "fp32");
+    let lm_best = peak_of("lm_tiny", "hot_abc_int8")
+        .min(peak_of("lm_tiny", "hot_abc_int4"));
+    assert!(lm_best as f64 <= 0.35 * lm_fp as f64,
+            "HOT+ABC must reach <= 0.35x FP32 ctx on lm_tiny: {lm_best} vs \
+             {lm_fp}");
+    // no-ABC HOT stores eager-style FP ctx — the savings must come from
+    // the packed schema, not from the variant label
+    assert_eq!(peak_of("lm_tiny", "hot_noabc"), lm_fp,
+               "hot_noabc must store the same eager ctx as fp32");
+    // with enough steps the packed-ctx runs must actually learn
+    if steps >= 6 {
+        for r in rows.iter().filter(|r| r.method.starts_with("hot_abc")) {
+            assert!(r.last_loss < r.first_loss,
+                    "{}/{}: loss {} -> {} did not decrease with packed ctx",
+                    r.preset, r.method, r.first_loss, r.last_loss);
+        }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("memory".into()));
+    root.insert("backend".to_string(), Json::Str(rt.name().into()));
+    root.insert("steps".to_string(), Json::Num(steps as f64));
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("preset".to_string(), Json::Str(r.preset.clone()));
+            m.insert("method".to_string(), Json::Str(r.method.into()));
+            m.insert("variant".to_string(), Json::Str(r.variant.into()));
+            m.insert("peak_ctx_bytes".to_string(),
+                     Json::Num(r.peak_bytes as f64));
+            m.insert("costmodel_bytes".to_string(),
+                     Json::Num(r.predicted_bytes as f64));
+            m.insert("compression_ratio".to_string(),
+                     Json::Num(r.compression));
+            m.insert("first_loss".to_string(), Json::Num(r.first_loss as f64));
+            m.insert("last_loss".to_string(), Json::Num(r.last_loss as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("results".to_string(), Json::Arr(jrows));
+    let path = "BENCH_memory.json";
+    std::fs::write(path, Json::Obj(root).to_string()).expect("write json");
+    // self-validate: the file must parse back and keep every row
+    let text = std::fs::read_to_string(path).expect("read back");
+    let parsed = Json::parse(&text).expect("BENCH_memory.json must parse");
+    let n = parsed.get("results").and_then(Json::as_arr).map(|a| a.len());
+    assert_eq!(n, Some(rows.len()), "json row count");
+    println!("wrote {path} ({} rows)", rows.len());
+}

@@ -15,8 +15,9 @@ use crate::hadamard::lowpass::Criterion;
 use crate::hadamard::{block_hla_axis0, block_hla_expand_axis0, BLOCK};
 use crate::kernels::{fwht_quant_cols, fwht_quant_rows, gemm_f32_nn,
                      gemm_f32_nt, gemm_f32_tn, gemm_i8_nn_deq,
-                     gemm_i8_tn_deq, transpose};
+                     gemm_i8_tn_deq, quant_pack_rows, transpose};
 use crate::quant;
+use crate::quant::AbcAct;
 
 // ---------------------------------------------------------------------------
 // Backward configuration (config.py BackwardConfig)
@@ -64,13 +65,17 @@ pub struct BackwardCfg {
     pub gx_bits: u8,
     pub gw_bits: u8,
     pub abc: bool,
+    /// Storage width of the packed ABC qlinear payload (8 = one byte
+    /// per code, 4 = two nibbles per byte). Independent of `gw_bits`,
+    /// which quantizes the gradient operand of the g_w GEMM.
+    pub abc_bits: u8,
     pub criterion: Criterion,
 }
 
 impl Default for BackwardCfg {
     fn default() -> Self {
         BackwardCfg { variant: Variant::Hot, rank: 8, gx_bits: 4, gw_bits: 8,
-                      abc: true, criterion: Criterion::Sequency }
+                      abc: true, abc_bits: 8, criterion: Criterion::Sequency }
     }
 }
 
@@ -94,6 +99,10 @@ impl BackwardCfg {
             for part in tag[name.len() + 1..].split('_') {
                 if part == "noabc" {
                     cfg.abc = false;
+                } else if part == "abc4" {
+                    cfg.abc_bits = 4;
+                } else if part == "abc8" {
+                    cfg.abc_bits = 8;
                 } else if part == "pallas" {
                     // pallas-vs-ref kernel routing is an artifact-side
                     // distinction; semantics are identical host-side
@@ -121,6 +130,17 @@ impl BackwardCfg {
             && self.abc
             && rows % BLOCK == 0
     }
+
+    /// Whether this variant's custom backward owns the ctx schema and
+    /// packs the non-qlinear saved buffers (LN x-hat, attention
+    /// internals, GELU input, CE probabilities) into the per-row INT8
+    /// storage format, recomputing what it can (GELU's tanh, the CE
+    /// one-hot). FP/LBP/LUQ model the paper's eager-mode baselines and
+    /// keep every residual raw-FP32 (the asymmetry `costmodel::memory`'s
+    /// `eager_extra_bytes` charges).
+    pub fn packs_ctx(&self) -> bool {
+        matches!(self.variant, Variant::Hot | Variant::GwHot) && self.abc
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -143,46 +163,49 @@ pub fn hq_matmul(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
     gemm_i8_nn_deq(&q_g, &q_w, n, o, i, s_g * s_w)
 }
 
-/// ABC's forward-time compression: HLA along N then INT quant
-/// (ref.hla_compress_ref). Returns (q (n/16*rank, cols), scale).
+/// ABC's forward-time compression: HLA along N, then the fused per-row
+/// quantize → pack epilogue (ref.hla_compress_ref, storage-side). The
+/// result is the packed ctx payload itself — (n/16*rank, cols) INT
+/// codes two-nibbles-per-byte at 4 bits, one scale per compressed row.
 pub fn hla_compress(x: &[f32], n: usize, cols: usize, rank: usize, bits: u8,
-                    criterion: Criterion) -> (Vec<i8>, f32) {
+                    criterion: Criterion) -> AbcAct {
     let xc = block_hla_axis0(x, n, cols, rank, criterion);
-    let s = quant::minmax_scale(&xc, bits);
-    (quant::quantize_ps(&xc, s, bits), s)
+    let nc = n / BLOCK * rank;
+    let (data, scales) = quant_pack_rows(&xc, nc, cols, bits);
+    AbcAct { rows: nc, cols, bits, data, scales }
 }
 
-/// HOT's g_w = (H-hat g_y)ᵀ · (H-hat x), both INT8 (ref.hla_matmul_ref).
-/// `per_token` selects row scales on the compressed g_y.
+/// HOT's g_w = (H-hat g_y)ᵀ · (H-hat x) with the saved x arriving in
+/// packed ABC form (ref.hla_matmul_ref). `per_token` selects row scales
+/// on the compressed g_y; either way the combined (g row scale · x row
+/// scale) dequant folds into the g operand — row scales live on the
+/// contracted dim, so they cannot ride a single output scale — and one
+/// FP TN GEMM finishes the job.
 #[allow(clippy::too_many_arguments)]
-pub fn hla_matmul(gy: &[f32], n: usize, o: usize, xq: &[i8], sx: f32,
-                  i: usize, rank: usize, bits: u8, per_token: bool,
-                  criterion: Criterion) -> Vec<f32> {
+pub fn hla_matmul(gy: &[f32], n: usize, o: usize, xa: &AbcAct, rank: usize,
+                  bits: u8, per_token: bool, criterion: Criterion)
+                  -> Vec<f32> {
     let gc = block_hla_axis0(gy, n, o, rank, criterion);
     let nc = n / BLOCK * rank;
-    debug_assert_eq!(xq.len(), nc * i);
-    if per_token {
-        // row scales live on the contracted dim: dequantize first, FP GEMM
-        let s_k = quant::minmax_scale_rows(&gc, nc, o, bits);
-        let mut g_deq = vec![0.0f32; nc * o];
-        for r in 0..nc {
-            let s = s_k[r];
-            for c in 0..o {
-                let q = quant::quantize_ps_one(gc[r * o + c], s, bits);
-                g_deq[r * o + c] = q as f32 * s;
-            }
-        }
-        let xf: Vec<f32> = xq.iter().map(|&q| q as f32).collect();
-        let mut out = gemm_f32_tn(&g_deq, &xf, nc, o, i);
-        for v in out.iter_mut() {
-            *v *= sx;
-        }
-        out
+    debug_assert_eq!(xa.rows, nc);
+    let i = xa.cols;
+    let s_t = if per_token { 0.0 } else { quant::minmax_scale(&gc, bits) };
+    let s_k = if per_token {
+        quant::minmax_scale_rows(&gc, nc, o, bits)
     } else {
-        let s_t = quant::minmax_scale(&gc, bits);
-        let q_t = quant::quantize_ps(&gc, s_t, bits);
-        gemm_i8_tn_deq(&q_t, xq, nc, o, i, s_t * sx)
+        Vec::new()
+    };
+    let mut g_deq = vec![0.0f32; nc * o];
+    for r in 0..nc {
+        let s_g = if per_token { s_k[r] } else { s_t };
+        let s = s_g * xa.scale(r);
+        for c in 0..o {
+            let q = quant::quantize_ps_one(gc[r * o + c], s_g, bits);
+            g_deq[r * o + c] = q as f32 * s;
+        }
     }
+    let xf = xa.unpack_f32();
+    gemm_f32_tn(&g_deq, &xf, nc, o, i)
 }
 
 /// LBP-WHT's g_x: external HLA on N — H-hatᵀ(H-hat g_y)w (ref.lbp_gx_ref).
@@ -221,8 +244,9 @@ pub struct QlCtx {
     /// raw FP activations (kept by fp/lbp/luq/int4/ablation variants and
     /// by HOT when ABC is off or the layer doesn't tile)
     pub x: Option<Vec<f32>>,
-    /// HLA+INT8 compressed activations + scale (HOT with ABC)
-    pub xq: Option<(Vec<i8>, f32)>,
+    /// HLA + per-row INT quantized activations in packed storage form
+    /// (HOT with ABC)
+    pub xq: Option<AbcAct>,
     pub n: usize,
     pub i: usize,
 }
@@ -238,9 +262,8 @@ pub fn qlinear_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
         }
     }
     let ctx = if cfg.compresses(n) {
-        let (xq, sx) = hla_compress(x, n, i, cfg.rank, cfg.gw_bits,
-                                    cfg.criterion);
-        QlCtx { x: None, xq: Some((xq, sx)), n, i }
+        let xa = hla_compress(x, n, i, cfg.rank, cfg.abc_bits, cfg.criterion);
+        QlCtx { x: None, xq: Some(xa), n, i }
     } else {
         QlCtx { x: Some(x.to_vec()), xq: None, n, i }
     };
@@ -270,17 +293,17 @@ fn gx_int_hla(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
 fn gw_hot(gy: &[f32], n: usize, o: usize, ctx: &QlCtx, cfg: &BackwardCfg,
           pt_flag: f32) -> Vec<f32> {
     let owned;
-    let (xq, sx): (&[i8], f32) = match &ctx.xq {
-        Some((q, s)) => (q, *s),
+    let xa: &AbcAct = match &ctx.xq {
+        Some(a) => a,
         None => {
             let x = ctx.x.as_ref().expect("qlinear ctx holds x or xq");
-            owned = hla_compress(x, n, ctx.i, cfg.rank, cfg.gw_bits,
+            owned = hla_compress(x, n, ctx.i, cfg.rank, cfg.abc_bits,
                                  cfg.criterion);
-            (&owned.0, owned.1)
+            &owned
         }
     };
-    hla_matmul(gy, n, o, xq, sx, ctx.i, cfg.rank, cfg.gw_bits,
-               pt_flag > 0.5, cfg.criterion)
+    hla_matmul(gy, n, o, xa, cfg.rank, cfg.gw_bits, pt_flag > 0.5,
+               cfg.criterion)
 }
 
 fn gw_hq4(gy: &[f32], n: usize, o: usize, x: &[f32], i: usize) -> Vec<f32> {
@@ -444,9 +467,15 @@ pub struct GeluCtx {
     pub t: Vec<f32>,
 }
 
+/// The tanh factor of the GELU. Pure function of x, so the packed ctx
+/// schema drops `t` from storage and rebuilds it here before the
+/// backward — bit-identical to the forward's value for the same x.
+pub fn gelu_t(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| (K0 * (v + K1 * v * v * v)).tanh()).collect()
+}
+
 pub fn gelu_fwd(x: &[f32]) -> (Vec<f32>, GeluCtx) {
-    let t: Vec<f32> = x.iter().map(|&v| (K0 * (v + K1 * v * v * v)).tanh())
-        .collect();
+    let t = gelu_t(x);
     let y: Vec<f32> = x.iter().zip(&t).map(|(&v, &tt)| 0.5 * v * (1.0 + tt))
         .collect();
     (y, GeluCtx { x: x.to_vec(), t })
@@ -703,6 +732,12 @@ mod tests {
         assert_eq!(c.rank, 4);
         let c = BackwardCfg::parse("hot_noabc").unwrap();
         assert!(!c.abc);
+        assert!(!c.packs_ctx(), "noabc keeps the eager ctx schema");
+        let c = BackwardCfg::parse("hot_abc4").unwrap();
+        assert_eq!(c.abc_bits, 4);
+        assert!(c.packs_ctx());
+        assert_eq!(BackwardCfg::parse("hot_abc4_r4").unwrap().rank, 4);
+        assert!(!BackwardCfg::parse("fp").unwrap().packs_ctx());
         let c = BackwardCfg::parse("gx_int_hla").unwrap();
         assert_eq!(c.variant, Variant::GxIntHla);
         assert_eq!(BackwardCfg::parse("fp").unwrap().variant, Variant::Fp);
@@ -814,8 +849,11 @@ mod tests {
         let bias = vec![0.0f32; o];
         let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
         assert!(ctx.x.is_none());
-        let (xq, _) = ctx.xq.as_ref().unwrap();
-        assert_eq!(xq.len(), n / BLOCK * cfg.rank * i);
+        let xa = ctx.xq.as_ref().unwrap();
+        let nc = n / BLOCK * cfg.rank;
+        assert_eq!((xa.rows, xa.cols), (nc, i));
+        assert_eq!(xa.data.len(), nc * i, "INT8 payload: one byte per code");
+        assert_eq!(xa.scales.len(), nc, "per-row scales");
         let gy = randv(n * o, 11);
         let (gx, gw, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
         // approximations stay in the exact gradients' ballpark
@@ -826,6 +864,26 @@ mod tests {
         // per-token flag flips the g_w computation but not its scale
         let (_, gw_pt, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 1.0, true);
         assert!(gw_pt.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn abc4_ctx_packs_nibbles_and_still_trains_the_gw_path() {
+        let cfg = BackwardCfg { abc_bits: 4, ..Default::default() };
+        let (n, i, o) = (32, 16, 16);
+        let x = randv(n * i, 90);
+        let w = randv(o * i, 91);
+        let bias = vec![0.0f32; o];
+        let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        let xa = ctx.xq.as_ref().unwrap();
+        let nc = n / BLOCK * cfg.rank;
+        assert_eq!(xa.bits, 4);
+        assert_eq!(xa.data.len(), (nc * i).div_ceil(2),
+                   "INT4 payload packs two codes per byte");
+        assert!(xa.unpack().iter().all(|&q| (-7..=7).contains(&q)));
+        let gy = randv(n * o, 92);
+        let (_, gw, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
+        let exact = gemm_f32_tn(&gy, &x, n, o, i);
+        assert!(rel_err(&gw, &exact) < 1.0, "{}", rel_err(&gw, &exact));
     }
 
     #[test]

@@ -19,9 +19,8 @@ use crate::backend::native::layers::{self, BackwardCfg, Variant};
 use crate::backend::native::model::Params;
 use crate::backend::native::presets::{self, ModelShape};
 use crate::hadamard::{block_hla_axis0, BLOCK};
-use crate::kernels::{gemm_f32_nn, gemm_f32_nt, gemm_f32_tn,
-                     gemm_i8_tn_deq};
-use crate::quant;
+use crate::kernels::{gemm_f32_nn, gemm_f32_nt, gemm_f32_tn};
+use crate::quant::AbcAct;
 use crate::runtime::manifest::{DType, TensorSpec};
 use crate::runtime::value::Value;
 
@@ -90,7 +89,7 @@ pub fn trainable_specs(shape: &ModelShape, r_lora: usize) -> Vec<TensorSpec> {
 struct LoraQlCtx {
     u: Vec<f32>, // x @ Aᵀ, (n, r)
     x: Option<Vec<f32>>,
-    xq: Option<(Vec<i8>, f32)>,
+    xq: Option<AbcAct>,
     n: usize,
     i: usize,
 }
@@ -110,10 +109,9 @@ fn qlinear_lora_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
         }
     }
     let ctx = if cfg.hot_decomposed && n % BLOCK == 0 {
-        let (xq, sx) = layers::hla_compress(x, n, i, cfg.bcfg.rank,
-                                            cfg.bcfg.gw_bits,
-                                            cfg.bcfg.criterion);
-        LoraQlCtx { u, x: None, xq: Some((xq, sx)), n, i }
+        let xa = layers::hla_compress(x, n, i, cfg.bcfg.rank,
+                                      cfg.bcfg.abc_bits, cfg.bcfg.criterion);
+        LoraQlCtx { u, x: None, xq: Some(xa), n, i }
     } else {
         LoraQlCtx { u, x: Some(x.to_vec()), xq: None, n, i }
     };
@@ -137,15 +135,16 @@ fn qlinear_lora_bwd(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
     for v in g_u.iter_mut() {
         *v *= LORA_SCALE;
     }
-    let (g_a, g_bm) = if let Some((xq, sx)) = &ctx.xq {
-        // HLA+INT8 on the decomposed products (Table 9 ablation)
+    let (g_a, g_bm) = if let Some(xa) = &ctx.xq {
+        // HLA + packed INT8 on the decomposed products (Table 9
+        // ablation) — same g_w shape as the full HOT path, so the
+        // shared kernel applies (it folds the per-row x scales into the
+        // dequantized g_u operand ahead of an FP TN GEMM).
         let bits = cfg.bcfg.gw_bits;
         let rank = cfg.bcfg.rank;
         let nc = n / BLOCK * rank;
-        let gc_u = block_hla_axis0(&g_u, n, r, rank, cfg.bcfg.criterion);
-        let s_gu = quant::minmax_scale(&gc_u, bits);
-        let q_gu = quant::quantize_ps(&gc_u, s_gu, bits);
-        let g_a = gemm_i8_tn_deq(&q_gu, xq, nc, r, i, s_gu * sx);
+        let g_a = layers::hla_matmul(&g_u, n, r, xa, rank, bits, false,
+                                     cfg.bcfg.criterion);
         let gc_y = block_hla_axis0(gy, n, o, rank, cfg.bcfg.criterion);
         let uc = block_hla_axis0(&ctx.u, n, r, rank, cfg.bcfg.criterion);
         let mut g_bm = gemm_f32_tn(&layers::fake_quant(&gc_y, bits),

@@ -328,10 +328,9 @@ impl Executor for NativeBackend {
                 ensure!(n % 16 == 0, "hla demo: N must tile into 16, got {n}");
                 let i = bsh[1];
                 let cfg = BackwardCfg::default();
-                let (xq, sx) = layers::hla_compress(b, n, i, cfg.rank,
-                                                    cfg.gw_bits,
-                                                    cfg.criterion);
-                let out = layers::hla_matmul(a, n, o, &xq, sx, i, cfg.rank,
+                let xa = layers::hla_compress(b, n, i, cfg.rank,
+                                              cfg.abc_bits, cfg.criterion);
+                let out = layers::hla_matmul(a, n, o, &xa, cfg.rank,
                                              cfg.gw_bits, false,
                                              cfg.criterion);
                 Ok(vec![Value::F32 { shape: vec![o, i], data: out }])

@@ -5,8 +5,11 @@
 //! ctx-list in reverse and produces the full gradient set. The ctx-list
 //! is the paper's Fig-5 "CTX": in split mode its entries literally cross
 //! the backend boundary as `Value`s and live in the coordinator's
-//! `CtxStore` between the calls — qlinear entries arrive HLA+INT8
-//! compressed under HOT's ABC.
+//! `CtxStore` between the calls. Under HOT's ABC the entries arrive in
+//! the packed storage format (qlinear x: HLA + per-row INT8/INT4
+//! nibble codes; LN/attention/GELU/CE residuals: per-row INT8), with
+//! GELU's tanh and the CE one-hot recomputed in the backward instead of
+//! stored — see DESIGN.md §Memory for the schema table.
 
 use std::collections::BTreeMap;
 
@@ -77,6 +80,10 @@ impl<'a> Params<'a> {
 pub struct CtxEntry {
     pub kind: &'static str, // "ql" | "ln" | "gelu" | "attn" | "ce"
     pub module: String,
+    /// HLA rank of a rank-compressed "xq" payload (0 = none); stamped
+    /// onto the flattened `CtxSpec`s so the `CtxStore` can account the
+    /// true FP32-equivalent footprint from metadata.
+    pub rank: usize,
     /// (key, tensor) pairs, sorted by key — the flattening contract.
     pub items: Vec<(&'static str, Value)>,
 }
@@ -100,66 +107,108 @@ fn f32_value(shape: Vec<usize>, data: Vec<f32>) -> Value {
     Value::F32 { shape, data }
 }
 
-fn entry_ql(module: String, ctx: QlCtx) -> CtxEntry {
-    let items = match (ctx.x, ctx.xq) {
-        (None, Some((xq, sx))) => {
-            let nc = xq.len() / ctx.i;
-            vec![
-                ("sx", f32_value(vec![], vec![sx])),
-                ("xq", Value::I8 { shape: vec![nc, ctx.i], data: xq }),
-            ]
-        }
-        (Some(x), _) => vec![("x", f32_value(vec![ctx.n, ctx.i], x))],
-        (None, None) => unreachable!("qlinear ctx holds x or xq"),
-    };
-    CtxEntry { kind: "ql", module, items }
+/// Storage width of the packed non-qlinear ctx buffers (LN x-hat,
+/// attention internals, GELU input, CE probs). Fixed at INT8 — these
+/// feed gradient paths directly and per-row INT8 keeps them within a
+/// fraction of a percent of raw; `abc_bits` narrows only the
+/// HLA-compressed qlinear payloads.
+const CTX_PACK_BITS: u8 = 8;
+
+/// Raw f32 or the per-row packed storage form, per the variant's ctx
+/// schema (`BackwardCfg::packs_ctx`).
+fn ctx_value(shape: Vec<usize>, data: Vec<f32>, pack: bool) -> Value {
+    if pack {
+        Value::quantize_rows(shape, &data, CTX_PACK_BITS)
+    } else {
+        Value::F32 { shape, data }
+    }
 }
 
-fn entry_ln(module: String, ctx: LnCtx, rows: usize, d: usize) -> CtxEntry {
+fn entry_ql(module: String, ctx: QlCtx) -> CtxEntry {
+    match (ctx.x, ctx.xq) {
+        (None, Some(xa)) => {
+            let rank = xa.rows * BLOCK / ctx.n;
+            CtxEntry {
+                kind: "ql",
+                module,
+                rank,
+                items: vec![("xq", Value::QuantF32 {
+                    shape: vec![xa.rows, xa.cols],
+                    bits: xa.bits,
+                    data: xa.data,
+                    scales: xa.scales,
+                })],
+            }
+        }
+        (Some(x), _) => CtxEntry {
+            kind: "ql",
+            module,
+            rank: 0,
+            items: vec![("x", f32_value(vec![ctx.n, ctx.i], x))],
+        },
+        (None, None) => unreachable!("qlinear ctx holds x or xq"),
+    }
+}
+
+fn entry_ln(module: String, ctx: LnCtx, rows: usize, d: usize, pack: bool)
+            -> CtxEntry {
     CtxEntry {
         kind: "ln",
         module,
+        rank: 0,
         items: vec![
             ("rstd", f32_value(vec![rows], ctx.rstd)),
-            ("xhat", f32_value(vec![rows, d], ctx.xhat)),
+            ("xhat", ctx_value(vec![rows, d], ctx.xhat, pack)),
         ],
     }
 }
 
-fn entry_gelu(module: String, ctx: GeluCtx, n: usize, m: usize) -> CtxEntry {
-    CtxEntry {
-        kind: "gelu",
-        module,
-        items: vec![
+fn entry_gelu(module: String, ctx: GeluCtx, n: usize, m: usize, pack: bool)
+              -> CtxEntry {
+    // packed schema: t is a pure function of x — recomputed in the
+    // backward instead of stored
+    let items = if pack {
+        vec![("x", ctx_value(vec![n, m], ctx.x, true))]
+    } else {
+        vec![
             ("t", f32_value(vec![n, m], ctx.t)),
             ("x", f32_value(vec![n, m], ctx.x)),
-        ],
-    }
+        ]
+    };
+    CtxEntry { kind: "gelu", module, rank: 0, items }
 }
 
 fn entry_attn(module: String, ctx: AttnCtx, b: usize, h: usize, l: usize,
-              dh: usize) -> CtxEntry {
+              dh: usize, pack: bool) -> CtxEntry {
     CtxEntry {
         kind: "attn",
         module,
+        rank: 0,
         items: vec![
-            ("kh", f32_value(vec![b, h, l, dh], ctx.kh)),
-            ("p", f32_value(vec![b, h, l, l], ctx.p)),
-            ("qh", f32_value(vec![b, h, l, dh], ctx.qh)),
-            ("vh", f32_value(vec![b, h, l, dh], ctx.vh)),
+            ("kh", ctx_value(vec![b, h, l, dh], ctx.kh, pack)),
+            ("p", ctx_value(vec![b, h, l, l], ctx.p, pack)),
+            ("qh", ctx_value(vec![b, h, l, dh], ctx.qh, pack)),
+            ("vh", ctx_value(vec![b, h, l, dh], ctx.vh, pack)),
         ],
     }
 }
 
-fn entry_ce(module: String, ctx: CeCtx, n: usize, c: usize) -> CtxEntry {
-    CtxEntry {
-        kind: "ce",
-        module,
-        items: vec![
+fn entry_ce(module: String, ctx: CeCtx, labels: &[i32], n: usize, c: usize,
+            pack: bool) -> CtxEntry {
+    // packed schema: the one-hot is n·c·4 bytes standing for n labels —
+    // store the labels and rebuild it in the backward
+    let items = if pack {
+        vec![
+            ("labels", Value::I32 { shape: vec![n], data: labels.to_vec() }),
+            ("p", ctx_value(vec![n, c], ctx.p, true)),
+        ]
+    } else {
+        vec![
             ("onehot", f32_value(vec![n, c], ctx.onehot)),
             ("p", f32_value(vec![n, c], ctx.p)),
-        ],
-    }
+        ]
+    };
+    CtxEntry { kind: "ce", module, rank: 0, items }
 }
 
 // --- parsing back (split-mode backward) -------------------------------------
@@ -167,13 +216,19 @@ fn entry_ce(module: String, ctx: CeCtx, n: usize, c: usize) -> CtxEntry {
 fn ql_ctx_of(e: &CtxEntry, rank: usize) -> Result<QlCtx> {
     if e.has("xq") {
         let xqv = e.item("xq")?;
-        let sx = e.item("sx")?.as_f32()?[0];
         let shape = xqv.shape();
         ensure!(shape.len() == 2, "xq must be 2-D");
         let (nc, i) = (shape[0], shape[1]);
         ensure!(nc % rank == 0, "xq rows {nc} don't tile into rank {rank}");
-        Ok(QlCtx { x: None, xq: Some((xqv.as_i8()?.to_vec(), sx)),
-                   n: nc / rank * BLOCK, i })
+        let xa = match xqv {
+            Value::QuantF32 { bits, data, scales, .. } => crate::quant::AbcAct {
+                rows: nc, cols: i, bits: *bits, data: data.clone(),
+                scales: scales.clone(),
+            },
+            v => bail!("xq must be the packed QuantF32 wire format, got {:?}",
+                       v.dtype()),
+        };
+        Ok(QlCtx { x: None, xq: Some(xa), n: nc / rank * BLOCK, i })
     } else {
         let xv = e.item("x")?;
         let shape = xv.shape();
@@ -185,24 +240,27 @@ fn ql_ctx_of(e: &CtxEntry, rank: usize) -> Result<QlCtx> {
 
 fn ln_ctx_of(e: &CtxEntry) -> Result<LnCtx> {
     Ok(LnCtx {
-        xhat: e.item("xhat")?.as_f32()?.to_vec(),
+        xhat: e.item("xhat")?.to_f32()?,
         rstd: e.item("rstd")?.as_f32()?.to_vec(),
     })
 }
 
 fn gelu_ctx_of(e: &CtxEntry) -> Result<GeluCtx> {
-    Ok(GeluCtx {
-        x: e.item("x")?.as_f32()?.to_vec(),
-        t: e.item("t")?.as_f32()?.to_vec(),
-    })
+    let x = e.item("x")?.to_f32()?;
+    let t = if e.has("t") {
+        e.item("t")?.to_f32()?
+    } else {
+        layers::gelu_t(&x) // packed schema: t recomputed, not stored
+    };
+    Ok(GeluCtx { x, t })
 }
 
 fn attn_ctx_of(e: &CtxEntry) -> Result<AttnCtx> {
     Ok(AttnCtx {
-        qh: e.item("qh")?.as_f32()?.to_vec(),
-        kh: e.item("kh")?.as_f32()?.to_vec(),
-        vh: e.item("vh")?.as_f32()?.to_vec(),
-        p: e.item("p")?.as_f32()?.to_vec(),
+        qh: e.item("qh")?.to_f32()?,
+        kh: e.item("kh")?.to_f32()?,
+        vh: e.item("vh")?.to_f32()?,
+        p: e.item("p")?.to_f32()?,
     })
 }
 
@@ -210,14 +268,21 @@ fn ce_ctx_of(e: &CtxEntry) -> Result<(CeCtx, usize, usize)> {
     let pv = e.item("p")?;
     let shape = pv.shape().to_vec();
     ensure!(shape.len() == 2, "ce ctx p must be 2-D");
-    Ok((
-        CeCtx {
-            p: pv.as_f32()?.to_vec(),
-            onehot: e.item("onehot")?.as_f32()?.to_vec(),
-        },
-        shape[0],
-        shape[1],
-    ))
+    let (n, c) = (shape[0], shape[1]);
+    let onehot = if e.has("onehot") {
+        e.item("onehot")?.as_f32()?.to_vec()
+    } else {
+        // packed schema stores the labels; rebuild the one-hot
+        let labels = e.item("labels")?.as_i32()?;
+        ensure!(labels.len() == n, "ce labels length {} != {n}", labels.len());
+        let mut oh = vec![0.0f32; n * c];
+        for (r, &lab) in labels.iter().enumerate() {
+            ensure!((0..c as i32).contains(&lab), "label {lab} outside {c}");
+            oh[r * c + lab as usize] = 1.0;
+        }
+        oh
+    };
+    Ok((CeCtx { p: pv.to_f32()?, onehot }, n, c))
 }
 
 /// Flatten ctx entries into Values + manifest-style specs (the split-mode
@@ -234,6 +299,7 @@ pub fn flatten_ctx(ctxs: Vec<CtxEntry>) -> (Vec<Value>, Vec<CtxSpec>) {
                 shape: v.shape().to_vec(),
                 dtype: v.dtype(),
                 index: values.len(),
+                rank: if key == "xq" { e.rank } else { 0 },
             });
             values.push(v);
         }
@@ -247,13 +313,18 @@ pub fn flatten_ctx(ctxs: Vec<CtxEntry>) -> (Vec<Value>, Vec<CtxSpec>) {
 pub fn ctx_layout(shape: &ModelShape, cfg: &BackwardCfg, b: usize)
                   -> Vec<(&'static str, String, Vec<&'static str>)> {
     let n = b * shape.seq;
+    let packed = cfg.packs_ctx();
     let ql_keys = |rows: usize| -> Vec<&'static str> {
         if cfg.compresses(rows) {
-            vec!["sx", "xq"]
+            vec!["xq"]
         } else {
             vec!["x"]
         }
     };
+    let gelu_keys: Vec<&'static str> =
+        if packed { vec!["x"] } else { vec!["t", "x"] };
+    let ce_keys: Vec<&'static str> =
+        if packed { vec!["labels", "p"] } else { vec!["onehot", "p"] };
     let mut out = Vec::new();
     out.push(("ql", "embed".to_string(), ql_keys(n)));
     for i in 0..shape.depth {
@@ -267,13 +338,13 @@ pub fn ctx_layout(shape: &ModelShape, cfg: &BackwardCfg, b: usize)
         }
         out.push(("ln", format!("{pre}ln2"), vec!["rstd", "xhat"]));
         out.push(("ql", format!("{pre}fc1"), ql_keys(n)));
-        out.push(("gelu", format!("{pre}gelu"), vec!["t", "x"]));
+        out.push(("gelu", format!("{pre}gelu"), gelu_keys.clone()));
         out.push(("ql", format!("{pre}fc2"), ql_keys(n)));
     }
     out.push(("ln", "lnf".to_string(), vec!["rstd", "xhat"]));
     let head_rows = if shape.arch == "lm" { n } else { b };
     out.push(("ql", "head".to_string(), ql_keys(head_rows)));
-    out.push(("ce", "loss".to_string(), vec!["onehot", "p"]));
+    out.push(("ce", "loss".to_string(), ce_keys));
     out
 }
 
@@ -287,11 +358,12 @@ pub fn parse_ctx(shape: &ModelShape, cfg: &BackwardCfg, b: usize,
     let mut it = flat.into_iter();
     let mut out = Vec::with_capacity(layout.len());
     for (kind, module, keys) in layout {
+        let rank = if keys.contains(&"xq") { cfg.rank } else { 0 };
         let items: Vec<(&'static str, Value)> = keys
             .into_iter()
             .map(|k| (k, it.next().expect("length checked above")))
             .collect();
-        out.push(CtxEntry { kind, module, items });
+        out.push(CtxEntry { kind, module, rank, items });
     }
     Ok(out)
 }
@@ -356,6 +428,7 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
     let (xf, b) = embed_input(shape, x)?;
     let labels = labels_of(shape, y, b)?;
     let n = b * l;
+    let packed = cfg.packs_ctx();
     let mut ctxs: Vec<CtxEntry> = Vec::new();
 
     // embed + positional encoding
@@ -378,7 +451,7 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
             let (hn, ln) = layers::layernorm_fwd(
                 &h, n, d, p.f(&format!("{pre}ln1.g"))?,
                 p.f(&format!("{pre}ln1.b"))?);
-            ctxs.push(entry_ln(format!("{pre}ln1"), ln, n, d));
+            ctxs.push(entry_ln(format!("{pre}ln1"), ln, n, d, packed));
             let (qkv, ql) = layers::qlinear_fwd(
                 &hn, n, d, p.f(&format!("{pre}attn.wqkv"))?, 3 * d,
                 p.f(&format!("{pre}attn.bqkv"))?, cfg);
@@ -396,7 +469,7 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
             let (att, actx) = layers::attention_fwd(
                 &q, &k, &v, b, l, d, shape.heads, shape.arch == "lm");
             ctxs.push(entry_attn(format!("{pre}attn"), actx, b, shape.heads,
-                                 l, d / shape.heads));
+                                 l, d / shape.heads, packed));
             let (proj, ql) = layers::qlinear_fwd(
                 &att, n, d, p.f(&format!("{pre}attn.wo"))?, d,
                 p.f(&format!("{pre}attn.bo"))?, cfg);
@@ -408,13 +481,13 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
         let (hn, ln) = layers::layernorm_fwd(
             &h, n, d, p.f(&format!("{pre}ln2.g"))?,
             p.f(&format!("{pre}ln2.b"))?);
-        ctxs.push(entry_ln(format!("{pre}ln2"), ln, n, d));
+        ctxs.push(entry_ln(format!("{pre}ln2"), ln, n, d, packed));
         let (f1, ql) = layers::qlinear_fwd(
             &hn, n, d, p.f(&format!("{pre}fc1.w"))?, m,
             p.f(&format!("{pre}fc1.b"))?, cfg);
         ctxs.push(entry_ql(format!("{pre}fc1"), ql));
         let (g1, gc) = layers::gelu_fwd(&f1);
-        ctxs.push(entry_gelu(format!("{pre}gelu"), gc, n, m));
+        ctxs.push(entry_gelu(format!("{pre}gelu"), gc, n, m, packed));
         let (f2, ql) = layers::qlinear_fwd(
             &g1, n, m, p.f(&format!("{pre}fc2.w"))?, d,
             p.f(&format!("{pre}fc2.b"))?, cfg);
@@ -426,7 +499,7 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
 
     let (hn, ln) = layers::layernorm_fwd(&h, n, d, p.f("lnf.g")?,
                                          p.f("lnf.b")?);
-    ctxs.push(entry_ln("lnf".into(), ln, n, d));
+    ctxs.push(entry_ln("lnf".into(), ln, n, d, packed));
 
     let c = shape.n_classes;
     let (loss, acc, ce) = if shape.arch == "lm" {
@@ -450,8 +523,8 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
         ctxs.push(entry_ql("head".into(), ql));
         layers::softmax_xent_fwd(&logits, b, c, &labels)
     };
-    ctxs.push(entry_ce("loss".into(), ce,
-                       if shape.arch == "lm" { n } else { b }, c));
+    ctxs.push(entry_ce("loss".into(), ce, &labels,
+                       if shape.arch == "lm" { n } else { b }, c, packed));
     Ok(FwdOut { loss, acc, ctxs })
 }
 
@@ -910,6 +983,65 @@ mod tests {
                 assert!((a - b).abs() < 1e-6, "{name}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn prop_packed_store_roundtrip_grads_bit_identical() {
+        // fwd -> packed ctx -> CtxStore put/take -> parse -> bwd must
+        // match the in-memory backward bit for bit: the wire format
+        // (nibble packing included) is storage-side only. Sweeps
+        // odd/prime dims, ranks {4, 8, 16} and both payload widths.
+        crate::util::proptest::check("packed ctx store roundtrip", 8, |case| {
+            use crate::coordinator::ctx::CtxStore;
+            let rank = [4usize, 8, 16][case.usize_in(0, 2)];
+            let abc_bits = if case.rng.uniform() < 0.5 { 4u8 } else { 8 };
+            let arch = ["vit", "mlp", "lm"][case.usize_in(0, 2)];
+            let in_dim = if arch == "lm" {
+                [13usize, 16, 17][case.usize_in(0, 2)]
+            } else {
+                [7usize, 11, 16][case.usize_in(0, 2)]
+            };
+            let b = [1usize, 3, 5][case.usize_in(0, 2)];
+            let shape = ModelShape { arch, d_model: 16, depth: 1, heads: 2,
+                                     seq: 16, in_dim, n_classes: 3,
+                                     mlp_ratio: 2 };
+            let cfg = BackwardCfg { rank, abc_bits, ..BackwardCfg::default() };
+            let specs = presets::param_specs(&shape);
+            let values = presets::init_values(&shape, 1 + rank as u64);
+            let p = Params::new(&specs, &values).map_err(|e| e.to_string())?;
+            let mask = vec![0.0f32; shape.n_qlinears()];
+            let (x, y) = batch(&shape, b, 40 + b as u64);
+            // the quantizer is pseudo-stochastic (keyed off input bits),
+            // so two forwards on identical inputs emit identical ctx
+            let fwd = forward(&shape, &cfg, &p, &mask, &x, &y)
+                .map_err(|e| e.to_string())?;
+            let direct = backward(&shape, &cfg, &p, &mask, &fwd.ctxs, None)
+                .map_err(|e| e.to_string())?;
+            let fwd2 = forward(&shape, &cfg, &p, &mask, &x, &y)
+                .map_err(|e| e.to_string())?;
+            let (flat, specs_ctx) = flatten_ctx(fwd2.ctxs);
+            let mut store = CtxStore::new(0);
+            store.put(0, flat, &specs_ctx).map_err(|e| e.to_string())?;
+            let vals = store.take(0).map_err(|e| e.to_string())?;
+            if store.stats().live_bytes != 0 {
+                return Err("store leaked live bytes".into());
+            }
+            let parsed = parse_ctx(&shape, &cfg, b, vals)
+                .map_err(|e| e.to_string())?;
+            let rt = backward(&shape, &cfg, &p, &mask, &parsed, None)
+                .map_err(|e| e.to_string())?;
+            for (name, g) in &direct {
+                let r = &rt[name];
+                for (i, (a, bb)) in g.iter().zip(r).enumerate() {
+                    if a.to_bits() != bb.to_bits() {
+                        return Err(format!(
+                            "{arch} r{rank} b{b} abc{abc_bits} {name}[{i}]: \
+                             {a} != {bb}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -101,7 +101,18 @@ impl Executor for Runtime {
         let ctx = outs.split_off(2);
         let acc = outs.pop().context("acc")?.scalar()?;
         let loss = outs.pop().context("loss")?.scalar()?;
-        Ok(ForwardOut { loss, acc, ctx, ctx_specs: meta.ctx })
+        // artifact manifests carry the HLA rank per artifact, not per ctx
+        // entry — propagate it onto the compressed payloads so the
+        // CtxStore's FP32-equivalent accounting stays metadata-exact
+        let mut ctx_specs = meta.ctx;
+        if let Some(rank) = meta.rank {
+            for s in ctx_specs.iter_mut() {
+                if s.key == "xq" && s.rank == 0 {
+                    s.rank = rank;
+                }
+            }
+        }
+        Ok(ForwardOut { loss, acc, ctx, ctx_specs })
     }
 
     fn backward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],

@@ -1,18 +1,22 @@
 //! ABC context-buffer manager — the rust-owned "CTX" of the paper's
 //! Fig 5.
 //!
-//! In split fwd/bwd mode the forward artifact emits every saved-for-
-//! backward tensor (under HOT+ABC the qlinear entries arrive already
-//! HLA+INT8 compressed); this store holds them between the two calls,
-//! does byte-exact accounting (live bytes / peak / cumulative), enforces
-//! an optional memory budget (reproducing Fig 1's OOM wall as a typed
-//! error), and can repack INT4-range payloads two-nibbles-per-byte.
+//! In split fwd/bwd mode the forward emits every saved-for-backward
+//! tensor (under HOT+ABC the entries arrive in the packed
+//! `Value::QuantF32` storage format — HLA + per-row INT8/INT4 codes
+//! with nibble packing); this store holds them between the two calls,
+//! does byte-exact accounting of the true stored footprint (live /
+//! peak / cumulative, plus the FP32-equivalent derived from `CtxSpec`
+//! rank metadata), enforces an optional memory budget (reproducing
+//! Fig 1's OOM wall as a typed error), and expands nibble payloads to
+//! one-byte codes on `take`.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::manifest::{CtxSpec, DType};
+use crate::hadamard::BLOCK;
+use crate::runtime::manifest::CtxSpec;
 use crate::runtime::value::Value;
 
 #[derive(Debug, Default, Clone)]
@@ -63,11 +67,18 @@ impl CtxStore {
     }
 
     /// Store the ctx tensors of microbatch `id`. `specs` (from the fwd
-    /// artifact manifest) drive the FP32-equivalent accounting.
+    /// artifact manifest) drive the FP32-equivalent accounting; a
+    /// values/specs arity mismatch is a hard error — a silent `zip`
+    /// truncation here would under-account live bytes forever.
     pub fn put(&mut self, id: u64, values: Vec<Value>, specs: &[CtxSpec])
                -> Result<()> {
         if self.entries.contains_key(&id) {
             bail!("ctx for microbatch {id} already stored");
+        }
+        if values.len() != specs.len() {
+            bail!("ctx arity mismatch for microbatch {id}: {} values vs {} \
+                   specs — accounting would silently drop the difference",
+                  values.len(), specs.len());
         }
         let bytes: u64 = values.iter().map(|v| v.bytes() as u64).sum();
         if self.budget > 0 && self.stats.live_bytes + bytes > self.budget {
@@ -78,20 +89,11 @@ impl CtxStore {
             }
             .into());
         }
-        // fp32-equivalent: int8 ctx entries are HOT-compressed activations;
-        // they stand in for an uncompressed (16/rank)x f32 buffer. We can't
-        // recover rank from shape alone, so we charge the conservative
-        // int8->f32 factor (4x) plus the HLA factor recorded by the spec
-        // metadata when key == "xq" (rank-compressed along L).
-        let mut fp32_equiv = 0u64;
-        for (v, s) in values.iter().zip(specs) {
-            let f = match (v.dtype(), s.key.as_str()) {
-                (DType::I8, "xq") => 8, // int8 (4x) * HLA r=8/16 (2x)
-                (DType::I8, _) => 4,
-                _ => 1,
-            };
-            fp32_equiv += v.bytes() as u64 * f;
-        }
+        let fp32_equiv = values
+            .iter()
+            .zip(specs)
+            .map(|(v, s)| fp32_equiv_bytes(v, s))
+            .sum::<u64>();
         self.stats.live_bytes += bytes;
         self.stats.peak_bytes = self.stats.peak_bytes.max(self.stats.live_bytes);
         self.stats.total_allocated += bytes;
@@ -102,13 +104,16 @@ impl CtxStore {
     }
 
     /// Take (and free) the ctx of microbatch `id` for its backward pass.
+    /// Nibble-packed INT4 payloads come back expanded to one-byte codes
+    /// (identical quantized values — the packing is storage-side only),
+    /// so consumers address codes directly.
     pub fn take(&mut self, id: u64) -> Result<Vec<Value>> {
         match self.entries.remove(&id) {
             None => bail!("no ctx stored for microbatch {id}"),
             Some(e) => {
                 self.stats.live_bytes -= e.bytes;
                 self.stats.frees += 1;
-                Ok(e.values)
+                Ok(e.values.into_iter().map(unpack_value).collect())
             }
         }
     }
@@ -130,32 +135,77 @@ impl CtxStore {
     }
 
     /// Repack an int8 ctx tensor whose values fit INT4 into nibbles
-    /// (storage-side only; unpacked before the bwd call). Returns packed
-    /// bytes or None if any value is outside [-8, 7].
+    /// (storage-side only; unpacked before the bwd call). Odd element
+    /// counts pack too — the final high nibble pads with 0 and the
+    /// tensor's shape keeps the logical length. Returns None only if a
+    /// value is outside [-8, 7].
     pub fn pack_nibbles(v: &Value) -> Option<Vec<u8>> {
         let data = v.as_i8().ok()?;
-        if data.len() % 2 != 0 || data.iter().any(|&q| !(-8..=7).contains(&q)) {
+        if data.iter().any(|&q| !(-8..=7).contains(&q)) {
             return None;
         }
-        Some(crate::quant::pack_int4(data))
+        Some(crate::quant::pack_int4_padded(data))
+    }
+}
+
+/// FP32-equivalent footprint of one ctx tensor, from its spec metadata:
+/// every logical element stands for one f32 of eager-mode storage, and a
+/// rank-compressed payload's leading dim additionally stands for
+/// `shape[0] / rank * 16` raw rows. Scale scalars riding a compressed
+/// payload (legacy key "sx") are pure storage overhead — equivalent 0.
+fn fp32_equiv_bytes(v: &Value, s: &CtxSpec) -> u64 {
+    if s.key == "sx" {
+        return 0;
+    }
+    let numel = v.numel() as u64;
+    let shape = v.shape();
+    let raw_numel = match shape.first() {
+        Some(&rows) if s.rank > 0 && rows > 0 && rows % s.rank == 0 => {
+            numel / rows as u64 * (rows / s.rank * BLOCK) as u64
+        }
+        _ => numel,
+    };
+    raw_numel * 4
+}
+
+/// Expand a nibble-packed payload to one-byte codes (same values).
+fn unpack_value(v: Value) -> Value {
+    match v {
+        Value::QuantF32 { shape, bits: 4, data, scales } => {
+            let numel: usize = shape.iter().product();
+            let codes = crate::quant::unpack_int4_n(&data, numel);
+            Value::QuantF32 {
+                shape,
+                bits: 8,
+                data: codes.into_iter().map(|q| q as u8).collect(),
+                scales,
+            }
+        }
+        v => v,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::DType;
 
     fn val(n: usize, dt: DType) -> Value {
         match dt {
             DType::F32 => Value::F32 { shape: vec![n], data: vec![0.5; n] },
             DType::I8 => Value::I8 { shape: vec![n], data: vec![3; n] },
             DType::I32 => Value::I32 { shape: vec![n], data: vec![1; n] },
+            DType::I4 => unreachable!("tests build I4 via QuantF32"),
         }
     }
 
     fn spec(key: &str) -> CtxSpec {
+        spec_r(key, 0)
+    }
+
+    fn spec_r(key: &str, rank: usize) -> CtxSpec {
         CtxSpec { module: "m".into(), kind: "ql".into(), key: key.into(),
-                  shape: vec![], dtype: DType::I8, index: 0 }
+                  shape: vec![], dtype: DType::I8, index: 0, rank }
     }
 
     #[test]
@@ -197,11 +247,54 @@ mod tests {
     }
 
     #[test]
-    fn compression_ratio_abc() {
+    fn compression_ratio_from_metadata() {
+        // rank-8 compressed payload: 128 stored rows stand for
+        // 128/8*16 = 256 raw rows of 10 f32 columns = 10240 raw bytes.
+        let (rows, cols) = (128usize, 10usize);
+        let v = Value::QuantF32 { shape: vec![rows, cols], bits: 8,
+                                  data: vec![1; rows * cols],
+                                  scales: vec![0.5; rows] };
+        let stored = v.bytes() as u64; // 1280 codes + 512 scale bytes
+        assert_eq!(stored, 1792);
         let mut s = CtxStore::new(0);
-        // one compressed activation: 1000 int8 bytes standing for 8000 fp32
-        s.put(0, vec![val(1000, DType::I8)], &[spec("xq")]).unwrap();
-        assert!((s.compression_ratio() - 8.0).abs() < 1e-9);
+        s.put(0, vec![v], &[spec_r("xq", 8)]).unwrap();
+        let want = 10240.0 / stored as f64;
+        assert!((s.compression_ratio() - want).abs() < 1e-9,
+                "{} vs {want}", s.compression_ratio());
+
+        // same payload without rank metadata: each element stands for
+        // one f32 — no hardcoded HLA factor sneaks back in
+        let v = Value::I8 { shape: vec![1000], data: vec![3; 1000] };
+        let mut s = CtxStore::new(0);
+        s.put(0, vec![v], &[spec("xq")]).unwrap();
+        assert!((s.compression_ratio() - 4.0).abs() < 1e-9);
+
+        // INT4 nibble payload: twice the ratio of INT8 on the codes
+        let q = Value::QuantF32 { shape: vec![rows, cols], bits: 4,
+                                  data: vec![0x11; (rows * cols) / 2],
+                                  scales: vec![0.5; rows] };
+        let mut s = CtxStore::new(0);
+        let stored4 = q.bytes() as u64; // 640 + 512
+        s.put(0, vec![q], &[spec_r("xq", 8)]).unwrap();
+        assert!((s.compression_ratio() - 10240.0 / stored4 as f64).abs()
+                < 1e-9);
+        // legacy per-tensor scale scalars are overhead, equivalent 0
+        let mut s = CtxStore::new(0);
+        s.put(0, vec![val(1, DType::F32)], &[spec("sx")]).unwrap();
+        assert_eq!(s.stats().fp32_equiv_bytes, 0);
+    }
+
+    #[test]
+    fn put_arity_mismatch_is_hard_error() {
+        let mut s = CtxStore::new(0);
+        let err = s.put(0, vec![val(4, DType::F32), val(4, DType::F32)],
+                        &[spec("x")]);
+        let msg = format!("{}", err.unwrap_err());
+        assert!(msg.contains("arity mismatch"), "{msg}");
+        // nothing was stored or accounted
+        assert_eq!(s.stats().allocs, 0);
+        assert_eq!(s.stats().live_bytes, 0);
+        assert_eq!(s.live_microbatches(), 0);
     }
 
     #[test]
@@ -211,6 +304,37 @@ mod tests {
         assert_eq!(packed.len(), 5);
         let big = Value::I8 { shape: vec![2], data: vec![100, 0] };
         assert!(CtxStore::pack_nibbles(&big).is_none());
+        // odd element counts pack with a padding nibble, logical length
+        // preserved by the shape
+        let odd = Value::I8 { shape: vec![7], data: vec![-8, 7, 0, 3, -3, 1, 5] };
+        let packed = CtxStore::pack_nibbles(&odd).unwrap();
+        assert_eq!(packed.len(), 4);
+        assert_eq!(crate::quant::unpack_int4_n(&packed, 7),
+                   odd.as_i8().unwrap());
+    }
+
+    #[test]
+    fn take_unpacks_nibble_payloads() {
+        let codes: Vec<i8> = vec![-7, 3, 0, 5, -1, 2];
+        let v = Value::QuantF32 { shape: vec![2, 3], bits: 4,
+                                  data: crate::quant::pack_int4_padded(&codes),
+                                  scales: vec![0.5, 0.25] };
+        let packed_bytes = v.bytes() as u64;
+        let deq = v.to_f32().unwrap();
+        let mut s = CtxStore::new(0);
+        s.put(0, vec![v], &[spec_r("xq", 8)]).unwrap();
+        assert_eq!(s.stats().live_bytes, packed_bytes,
+                   "accounting charges packed bytes");
+        let out = s.take(0).unwrap();
+        match &out[0] {
+            Value::QuantF32 { bits: 8, data, .. } => {
+                assert_eq!(data.len(), 6, "codes expanded to one byte each");
+            }
+            other => panic!("expected expanded QuantF32, got {other:?}"),
+        }
+        assert_eq!(out[0].to_f32().unwrap(), deq,
+                   "unpack must not change the quantized values");
+        assert_eq!(s.stats().live_bytes, 0);
     }
 
     #[test]

@@ -11,6 +11,10 @@ pub struct StepRecord {
     pub lr: f32,
     pub step_time_s: f64,
     pub ctx_live_bytes: u64,
+    /// high-water mark of the ctx store as of this step
+    pub ctx_peak_bytes: u64,
+    /// fp32-equivalent / stored bytes so far (1.0 when nothing stored)
+    pub ctx_compression: f64,
 }
 
 #[derive(Debug, Default)]
@@ -75,10 +79,13 @@ impl MetricsLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("step,loss,acc,lr,step_time_s,ctx_live_bytes\n");
+        let mut s = String::from(
+            "step,loss,acc,lr,step_time_s,ctx_live_bytes,ctx_peak_bytes,\
+             ctx_compression\n");
         for r in &self.records {
-            s.push_str(&format!("{},{},{},{},{},{}\n", r.step, r.loss, r.acc,
-                                r.lr, r.step_time_s, r.ctx_live_bytes));
+            s.push_str(&format!("{},{},{},{},{},{},{},{}\n", r.step, r.loss,
+                                r.acc, r.lr, r.step_time_s, r.ctx_live_bytes,
+                                r.ctx_peak_bytes, r.ctx_compression));
         }
         s
     }
@@ -107,7 +114,8 @@ mod tests {
 
     fn rec(step: usize, loss: f32, t: f64) -> StepRecord {
         StepRecord { step, loss, acc: 0.5, lr: 1e-3, step_time_s: t,
-                     ctx_live_bytes: 0 }
+                     ctx_live_bytes: 0, ctx_peak_bytes: 0,
+                     ctx_compression: 1.0 }
     }
 
     #[test]
@@ -146,7 +154,8 @@ mod tests {
         m.push(rec(0, 1.5, 0.01));
         let csv = m.to_csv();
         assert!(csv.starts_with("step,loss"));
-        assert!(csv.contains("0,1.5,0.5,0.001,0.01,0"));
+        assert!(csv.contains("ctx_peak_bytes"));
+        assert!(csv.contains("0,1.5,0.5,0.001,0.01,0,0,1"));
     }
 
     #[test]

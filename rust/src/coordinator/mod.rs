@@ -9,7 +9,7 @@ pub mod metrics;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
-pub use ctx::{CtxStats, CtxStore};
+pub use ctx::{BudgetExceeded, CtxStats, CtxStore};
 pub use lqs::{CalibReport, LayerDiag};
 pub use metrics::{MetricsLog, StepRecord};
 pub use trainer::{DataSource, LoraTrainer, Mode, Trainer};

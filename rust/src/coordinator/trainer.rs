@@ -260,6 +260,8 @@ impl Trainer {
             lr: self.cfg.lr_at(self.step),
             step_time_s: t0.elapsed().as_secs_f64(),
             ctx_live_bytes: self.ctx.stats().live_bytes,
+            ctx_peak_bytes: self.ctx.stats().peak_bytes,
+            ctx_compression: self.ctx.compression_ratio(),
         });
         self.step += 1;
         Ok((loss, acc))
@@ -423,6 +425,8 @@ impl LoraTrainer {
             lr: self.cfg.lr_at(self.step),
             step_time_s: t0.elapsed().as_secs_f64(),
             ctx_live_bytes: 0,
+            ctx_peak_bytes: 0,
+            ctx_compression: 1.0,
         });
         self.step += 1;
         Ok((out.loss, out.acc))

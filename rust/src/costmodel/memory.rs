@@ -7,13 +7,17 @@
 //!   * optimizer state   8·P                (AdamW m+v)
 //!   * activations       method-dependent; per qlinear the saved-for-bwd
 //!     input x is the dominant term: batch·L·I·4 for FP-keeping methods,
-//!     batch·(L·r/16)·I·1 (+4) under HOT's ABC. Attention internals
-//!     (softmax probs, q/k/v) and norm stats are FP for every method.
+//!     ceil(batch·L·r/16)·(I + 4) under HOT's ABC (INT8 payload + one
+//!     f32 scale per compressed row). Attention internals (softmax
+//!     probs, q/k/v) and norm stats are FP for the eager baselines;
+//!     HOT's custom backward stores them packed (`native_ctx_bytes`).
 //!
 //! LoRA halves differently: base weights have no grads/optimizer state;
 //! adapters add 2·r_lora·(I+O) params per adapted layer.
 
 use super::zoo::{Layer, ModelSpec};
+use crate::backend::native::layers::BackwardCfg;
+use crate::backend::native::presets::ModelShape;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum MemMethod {
@@ -48,8 +52,14 @@ impl MemBreakdown {
 
 fn act_bytes_layer(l: &Layer, batch: usize, m: MemMethod) -> u64 {
     let raw = (batch * l.l * l.i * 4) as u64;
-    let compressed =
-        |rank: usize| (batch * (l.l * rank / 16).max(1) * l.i) as u64 + 4;
+    // INT8 payload (one byte per element of the rank-compressed buffer)
+    // plus one 4-byte f32 scale PER COMPRESSED ROW — the quantizer is
+    // per-row (`minmax_scale_rows`), not per-tensor. div_ceil keeps
+    // tiny l·rank products from truncating the whole buffer to zero.
+    let compressed = |rank: usize| {
+        let rows = ((batch * l.l * rank) as u64).div_ceil(16).max(1);
+        rows * l.i as u64 + 4 * rows
+    };
     match m {
         MemMethod::Fp32 | MemMethod::FpActivations | MemMethod::Lora { .. } => raw,
         MemMethod::Hot { abc: false, .. } => raw,
@@ -103,6 +113,70 @@ pub fn breakdown(spec: &ModelSpec, batch: usize, m: MemMethod) -> MemBreakdown {
         activations: act,
         attention: extras,
     }
+}
+
+/// Predicted saved-for-backward ctx bytes of ONE microbatch on the
+/// native backend — what the `CtxStore` will measure for a split-mode
+/// step. Mirrors `backend::native::model::ctx_layout` entry by entry
+/// (a unit test pins the two equal, so they cannot drift):
+///
+///   * qlinear x: raw `rows·cols·4` for eager variants; under ABC the
+///     HLA rank-compressed payload `(rows/16·rank)·cols` codes at
+///     `abc_bits` (nibble-packed at 4) + one f32 scale per row;
+///   * LN x-hat, attention q/k/v heads + probs, GELU input, CE probs:
+///     raw f32 for eager variants; per-row INT8 codes + row scales
+///     under the packed schema (`BackwardCfg::packs_ctx`), with GELU's
+///     tanh and the CE one-hot recomputed instead of stored (the
+///     one-hot shrinks to one i32 label per row);
+///   * LN rstd stays f32 everywhere.
+pub fn native_ctx_bytes(shape: &ModelShape, cfg: &BackwardCfg, batch: usize)
+                        -> u64 {
+    let (d, l, m, c) = (shape.d_model, shape.seq, shape.d_mlp(),
+                        shape.n_classes);
+    let n = batch * l;
+    let packed = cfg.packs_ctx();
+    // per-row quantized f32 tensor: codes + f32 scale per row
+    let qrows = |rows: usize, cols: usize| -> u64 {
+        (rows * cols) as u64 + 4 * rows as u64
+    };
+    let fp = |rows: usize, cols: usize| (rows * cols * 4) as u64;
+    let buf = |rows: usize, cols: usize| -> u64 {
+        if packed { qrows(rows, cols) } else { fp(rows, cols) }
+    };
+    let ql = |rows: usize, cols: usize| -> u64 {
+        if cfg.compresses(rows) {
+            let nc = rows / 16 * cfg.rank;
+            ((nc * cols * cfg.abc_bits as usize) as u64).div_ceil(8)
+                + 4 * nc as u64
+        } else {
+            fp(rows, cols)
+        }
+    };
+    let ln = |rows: usize| 4 * rows as u64 + buf(rows, d);
+    let mut total = ql(n, shape.in_dim); // embed
+    for _ in 0..shape.depth {
+        if shape.has_attention() {
+            let heads = batch * shape.heads * l;
+            total += ln(n)                      // ln1
+                + ql(n, d)                      // qkv
+                + 3 * buf(heads, d / shape.heads) // qh kh vh
+                + buf(heads, l)                 // probs
+                + ql(n, d);                     // proj
+        }
+        total += ln(n)                          // ln2
+            + ql(n, d)                          // fc1
+            + if packed { qrows(n, m) } else { 2 * fp(n, m) } // gelu x (+t)
+            + ql(n, m);                         // fc2
+    }
+    total += ln(n); // lnf
+    let head_rows = if shape.arch == "lm" { n } else { batch };
+    total += ql(head_rows, d);
+    total += if packed {
+        4 * head_rows as u64 + qrows(head_rows, c) // labels + probs
+    } else {
+        2 * fp(head_rows, c) // onehot + probs
+    };
+    total
 }
 
 /// Fig 1: total training memory vs batch size, with a device budget.
@@ -193,5 +267,76 @@ mod tests {
         let noabc = breakdown(&spec, 64, MemMethod::Hot { rank: 8, abc: false });
         let fp = breakdown(&spec, 64, MemMethod::Fp32);
         assert_eq!(noabc.activations, fp.activations);
+    }
+
+    #[test]
+    fn per_row_scales_and_tiny_layers_are_charged() {
+        // tiny l·rank used to truncate to 0 compressed rows; and the
+        // scale overhead must be one f32 PER ROW, not per layer
+        let l = Layer::new("t", 1, 64, 64);
+        let hot = MemMethod::Hot { rank: 8, abc: true };
+        let got = act_bytes_layer(&l, 1, hot);
+        // 1·1·8 / 16 rows rounds up to 1 row: 64 payload + 4 scale bytes
+        assert_eq!(got, 68);
+        // 256 tokens at rank 8 -> 128 rows: payload 128·64, scales 128·4
+        let l2 = Layer::new("t2", 256, 64, 64);
+        assert_eq!(act_bytes_layer(&l2, 1, hot), 128 * 64 + 128 * 4);
+    }
+
+    #[test]
+    fn native_ctx_bytes_matches_measured_ctx_exactly() {
+        // the predictor must agree byte-for-byte with what the native
+        // forward actually emits (and the CtxStore therefore accounts)
+        use crate::backend::native::model::{self, Params};
+        use crate::backend::native::presets;
+        use crate::runtime::value::Value;
+        use crate::util::prng::Pcg32;
+        for (preset, batch, tags) in [
+            ("tiny", 4usize, &["fp", "hot", "hot_noabc", "hot_abc4"][..]),
+            ("lm_tiny", 2, &["fp", "hot", "hot_abc4"][..]),
+            ("mlp_small", 2, &["fp", "hot"][..]),
+        ] {
+            let shape = presets::shape_of(preset).unwrap();
+            let specs = presets::param_specs(&shape);
+            let values = presets::init_values(&shape, 1);
+            let p = Params::new(&specs, &values).unwrap();
+            let mask = vec![0.0f32; shape.n_qlinears()];
+            let mut rng = Pcg32::seeded(7);
+            let (x, y) = if shape.arch == "lm" {
+                let n = batch * shape.seq;
+                (Value::I32 {
+                    shape: vec![batch, shape.seq],
+                    data: (0..n).map(|_| rng.below(shape.in_dim as u32) as i32)
+                        .collect(),
+                 },
+                 Value::I32 {
+                    shape: vec![batch, shape.seq],
+                    data: (0..n)
+                        .map(|_| rng.below(shape.n_classes as u32) as i32)
+                        .collect(),
+                 })
+            } else {
+                let n = batch * shape.seq * shape.in_dim;
+                (Value::F32 { shape: vec![batch, shape.seq, shape.in_dim],
+                              data: (0..n).map(|_| rng.normal()).collect() },
+                 Value::I32 {
+                    shape: vec![batch],
+                    data: (0..batch)
+                        .map(|_| rng.below(shape.n_classes as u32) as i32)
+                        .collect(),
+                 })
+            };
+            for tag in tags {
+                let cfg = crate::backend::native::layers::BackwardCfg::parse(
+                    tag).unwrap();
+                let fwd = model::forward(&shape, &cfg, &p, &mask, &x, &y)
+                    .unwrap();
+                let (vals, _) = model::flatten_ctx(fwd.ctxs);
+                let measured: u64 = vals.iter().map(|v| v.bytes() as u64)
+                    .sum();
+                let predicted = native_ctx_bytes(&shape, &cfg, batch);
+                assert_eq!(predicted, measured, "{preset}/{tag}");
+            }
+        }
     }
 }

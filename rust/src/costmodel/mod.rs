@@ -7,5 +7,6 @@ pub mod memory;
 pub mod zoo;
 
 pub use flops::{bops, model_bops, overhead_flops, total_flops, Method};
-pub use memory::{breakdown, max_feasible_batch, MemBreakdown, MemMethod};
+pub use memory::{breakdown, max_feasible_batch, native_ctx_bytes,
+                 MemBreakdown, MemMethod};
 pub use zoo::{Layer, ModelSpec};

@@ -91,6 +91,46 @@ pub fn fwht_quant_cols(x: &[f32], rows: usize, cols: usize, bits: u8)
     (quant::quantize_ps(&t, scale, bits), scale)
 }
 
+/// Per-row quantize → pack epilogue: the ABC storage-side compressor.
+/// For each row of the (rows, cols) matrix, the min-max scale scan,
+/// the pseudo-stochastic quantizer and the byte/nibble packer run while
+/// the row is cache-hot — the whole-tensor scan → quantize → pack
+/// pipeline this replaces streamed the tensor three times. Returns
+/// (packed codes, per-row scales): one byte per code at 8 bits, two
+/// nibbles per byte at 4 bits (contiguous over the tensor; an odd
+/// element count pads the final high nibble, logical length is the
+/// caller's shape). Bit-exact vs `minmax_scale_rows` + `quantize_ps` +
+/// `pack_int4_padded` run as separate passes.
+pub fn quant_pack_rows(x: &[f32], rows: usize, cols: usize, bits: u8)
+                       -> (Vec<u8>, Vec<f32>) {
+    assert_eq!(x.len(), rows * cols);
+    let qmax = quant::qmax(bits) as f32;
+    let mut scales = Vec::with_capacity(rows);
+    let mut data = Vec::with_capacity((rows * cols * bits as usize).div_ceil(8));
+    // carry nibble for 4-bit packing across odd-cols row boundaries
+    let mut carry: Option<u8> = None;
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = amax.max(1e-8) / qmax;
+        scales.push(scale);
+        for &v in row {
+            let q = quant::quantize_ps_one(v, scale, bits);
+            match bits {
+                8 => data.push(q as u8),
+                _ => match carry.take() {
+                    None => carry = Some((q as u8) & 0xF),
+                    Some(lo) => data.push((((q as u8) & 0xF) << 4) | lo),
+                },
+            }
+        }
+    }
+    if let Some(lo) = carry {
+        data.push(lo); // pad the final high nibble with 0
+    }
+    (data, scales)
+}
+
 // ---------------------------------------------------------------------------
 // Workers
 // ---------------------------------------------------------------------------
@@ -270,6 +310,32 @@ mod tests {
             let q_want = quant::quantize_ps(&t, s_want, bits);
             assert_eq!(s.to_bits(), s_want.to_bits(), "cols bits={bits}");
             assert_eq!(q, q_want, "cols bits={bits}");
+        }
+    }
+
+    #[test]
+    fn quant_pack_rows_equals_separate_passes() {
+        for (rows, cols) in [(4usize, 8usize), (3, 5), (7, 1), (1, 9)] {
+            let x = randv(rows * cols, 100 + (rows * cols) as u64);
+            for bits in [4u8, 8] {
+                let (data, scales) = quant_pack_rows(&x, rows, cols, bits);
+                let s_want = quant::minmax_scale_rows(&x, rows, cols, bits);
+                assert_eq!(scales, s_want, "{rows}x{cols}@{bits}");
+                let mut q_want = Vec::new();
+                for r in 0..rows {
+                    q_want.extend(quant::quantize_ps(
+                        &x[r * cols..(r + 1) * cols], s_want[r], bits));
+                }
+                let d_want = match bits {
+                    8 => q_want.iter().map(|&q| q as u8).collect::<Vec<u8>>(),
+                    _ => quant::pack_int4_padded(&q_want),
+                };
+                assert_eq!(data, d_want, "{rows}x{cols}@{bits}");
+                if bits == 4 {
+                    assert_eq!(quant::unpack_int4_n(&data, rows * cols),
+                               q_want, "{rows}x{cols} unpack");
+                }
+            }
         }
     }
 

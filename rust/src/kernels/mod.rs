@@ -28,7 +28,8 @@ pub mod pool;
 pub mod reference;
 
 pub use fused::{fwht_cols, fwht_cols_amax, fwht_quant_cols,
-                fwht_quant_rows, fwht_rows, fwht_rows_amax};
+                fwht_quant_rows, fwht_rows, fwht_rows_amax,
+                quant_pack_rows};
 pub use gemm::{gemm_f32_nn, gemm_f32_nt, gemm_f32_tn, gemm_i4_nn_deq,
                gemm_i8_nn, gemm_i8_nn_deq, gemm_i8_tn, gemm_i8_tn_deq,
                transpose, MAX_K_I4, MAX_K_I8, MR, NR};

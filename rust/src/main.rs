@@ -114,8 +114,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     println!("mean step time: {:.4}s ({:.2} steps/s)",
              tr.metrics.mean_step_time(), tr.metrics.throughput_steps_per_s());
-    println!("ctx: peak {} B, compression {:.2}x",
-             tr.ctx.stats().peak_bytes, tr.ctx.compression_ratio());
+    println!("ctx: peak {} B ({} B fp32-equivalent), compression {:.2}x",
+             tr.ctx.stats().peak_bytes, tr.ctx.stats().fp32_equiv_bytes,
+             tr.ctx.compression_ratio());
     if let Some(csv) = args.get("csv") {
         tr.metrics.save_csv(csv)?;
         println!("metrics -> {csv}");

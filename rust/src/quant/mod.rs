@@ -79,6 +79,20 @@ pub fn pack_int4(qs: &[i8]) -> Vec<u8> {
         .collect()
 }
 
+/// `pack_int4` for any element count: an odd tail pads the final high
+/// nibble with 0. The logical length is the caller's to keep (the ctx
+/// wire format records it as the tensor shape); `unpack_int4_n`
+/// truncates back to it.
+pub fn pack_int4_padded(qs: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(qs.len().div_ceil(2));
+    for p in qs.chunks(2) {
+        let lo = (p[0] as u8) & 0xF;
+        let hi = if p.len() == 2 { (p[1] as u8) & 0xF } else { 0 };
+        out.push((hi << 4) | lo);
+    }
+    out
+}
+
 pub fn unpack_int4(packed: &[u8]) -> Vec<i8> {
     let mut out = Vec::with_capacity(packed.len() * 2);
     for &b in packed {
@@ -88,6 +102,130 @@ pub fn unpack_int4(packed: &[u8]) -> Vec<i8> {
         out.push(if hi >= 8 { hi - 16 } else { hi });
     }
     out
+}
+
+/// Unpack to exactly `n` values, dropping the padding nibble a
+/// `pack_int4_padded` of an odd-length input appended.
+pub fn unpack_int4_n(packed: &[u8], n: usize) -> Vec<i8> {
+    assert_eq!(packed.len(), n.div_ceil(2), "packed length vs logical n");
+    let mut out = unpack_int4(packed);
+    out.truncate(n);
+    out
+}
+
+/// One-pass decode + per-row dequantize of a packed payload (borrowed;
+/// no intermediate code buffer). `scales` is one f32 per row, or len 1
+/// for a per-tensor broadcast. THE single definition of the packed
+/// format's dequant semantics — `AbcAct::dequantize` and
+/// `Value::to_f32` both route here.
+pub fn dequant_rows(data: &[u8], scales: &[f32], rows: usize, cols: usize,
+                    bits: u8) -> Vec<f32> {
+    let n = rows * cols;
+    let scale =
+        |r: usize| if scales.len() == 1 { scales[0] } else { scales[r] };
+    let mut out = Vec::with_capacity(n);
+    match bits {
+        4 => {
+            assert_eq!(data.len(), n.div_ceil(2), "packed length vs logical n");
+            for &b in data {
+                let lo = (b & 0xF) as i8;
+                let lo = if lo >= 8 { lo - 16 } else { lo };
+                out.push(lo as f32 * scale(out.len() / cols));
+                if out.len() < n {
+                    let hi = ((b >> 4) & 0xF) as i8;
+                    let hi = if hi >= 8 { hi - 16 } else { hi };
+                    out.push(hi as f32 * scale(out.len() / cols));
+                }
+            }
+        }
+        8 => {
+            assert_eq!(data.len(), n, "payload length vs logical n");
+            for (idx, &b) in data.iter().enumerate() {
+                out.push((b as i8) as f32 * scale(idx / cols));
+            }
+        }
+        b => panic!("unsupported packed bit width {b}"),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Packed activation payload — the ABC ctx storage format
+// ---------------------------------------------------------------------------
+
+/// A per-row min-max quantized 2-D activation in storage form: INT`bits`
+/// codes packed two-nibbles-per-byte at 4 bits (raw one-byte codes at
+/// 8), one f32 scale per row, logical (rows, cols) kept so odd shapes
+/// survive the padding nibble. This is both the in-memory ctx format of
+/// the native backend and (inside `Value::QuantF32`) the split-mode
+/// wire format the `CtxStore` accounts byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct AbcAct {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u8,
+    /// packed codes: `(rows*cols*bits).div_ceil(8)` bytes
+    pub data: Vec<u8>,
+    /// per-row scales (len `rows`); len 1 = per-tensor broadcast
+    pub scales: Vec<f32>,
+}
+
+impl AbcAct {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Stored payload size: packed codes + scale table.
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+
+    pub fn scale(&self, row: usize) -> f32 {
+        if self.scales.len() == 1 {
+            self.scales[0]
+        } else {
+            self.scales[row]
+        }
+    }
+
+    /// Expand the packed codes back to one-byte values (bit-exact).
+    pub fn unpack(&self) -> Vec<i8> {
+        match self.bits {
+            4 => unpack_int4_n(&self.data, self.numel()),
+            8 => self.data.iter().map(|&b| b as i8).collect(),
+            b => panic!("unsupported packed bit width {b}"),
+        }
+    }
+
+    /// Expand straight to UNSCALED f32 codes in one pass, one
+    /// allocation — the g_w GEMM folds the row scales into its other
+    /// operand, so this is what the hot backward path consumes.
+    pub fn unpack_f32(&self) -> Vec<f32> {
+        let n = self.numel();
+        let mut out = Vec::with_capacity(n);
+        match self.bits {
+            4 => {
+                for &b in &self.data {
+                    let lo = (b & 0xF) as i8;
+                    out.push((if lo >= 8 { lo - 16 } else { lo }) as f32);
+                    if out.len() < n {
+                        let hi = ((b >> 4) & 0xF) as i8;
+                        out.push((if hi >= 8 { hi - 16 } else { hi }) as f32);
+                    }
+                }
+            }
+            8 => out.extend(self.data.iter().map(|&b| (b as i8) as f32)),
+            b => panic!("unsupported packed bit width {b}"),
+        }
+        debug_assert_eq!(out.len(), n);
+        out
+    }
+
+    /// Dequantize to f32 (row scale applied per row).
+    pub fn dequantize(&self) -> Vec<f32> {
+        dequant_rows(&self.data, &self.scales, self.rows, self.cols,
+                     self.bits)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -218,6 +356,52 @@ mod tests {
     fn pack_halves_bytes() {
         let qs = vec![1i8; 128];
         assert_eq!(pack_int4(&qs).len(), 64);
+    }
+
+    #[test]
+    fn padded_pack_roundtrips_odd_lengths() {
+        for n in [1usize, 2, 3, 7, 13, 64, 65] {
+            let qs: Vec<i8> = (0..n).map(|i| ((i % 16) as i8) - 8).collect();
+            let packed = pack_int4_padded(&qs);
+            assert_eq!(packed.len(), n.div_ceil(2), "n={n}");
+            assert_eq!(unpack_int4_n(&packed, n), qs, "n={n}");
+        }
+        // even lengths match the strict packer bit-for-bit
+        let qs: Vec<i8> = (0..32).map(|i| ((i % 16) as i8) - 8).collect();
+        assert_eq!(pack_int4_padded(&qs), pack_int4(&qs));
+    }
+
+    #[test]
+    fn abc_act_roundtrip_and_accounting() {
+        // odd cols at 4 bits: padding nibble + logical length preserved
+        let (rows, cols) = (3usize, 5usize);
+        let q: Vec<i8> = (0..rows * cols).map(|i| ((i % 15) as i8) - 7)
+            .collect();
+        let scales = vec![0.5f32, 2.0, 1.0];
+        let a = AbcAct { rows, cols, bits: 4,
+                         data: pack_int4_padded(&q), scales: scales.clone() };
+        assert_eq!(a.data.len(), (rows * cols).div_ceil(2));
+        assert_eq!(a.payload_bytes(), a.data.len() + 12);
+        assert_eq!(a.unpack(), q);
+        let want_f: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        assert_eq!(a.unpack_f32(), want_f, "odd-numel nibble expand");
+        let d = a.dequantize();
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(d[r * cols + c], q[r * cols + c] as f32 * scales[r]);
+            }
+        }
+        // 8-bit payload: one byte per code, same roundtrip contract
+        let a8 = AbcAct { rows, cols, bits: 8,
+                          data: q.iter().map(|&v| v as u8).collect(),
+                          scales: vec![1.0] };
+        assert_eq!(a8.unpack(), q);
+        assert_eq!(a8.unpack_f32(),
+                   q.iter().map(|&v| v as f32).collect::<Vec<f32>>());
+        assert_eq!(a8.scale(2), 1.0, "len-1 scales broadcast");
+        assert_eq!(a8.dequantize(),
+                   q.iter().map(|&v| v as f32).collect::<Vec<f32>>(),
+                   "broadcast dequant");
     }
 
     #[test]

@@ -9,11 +9,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
     F32,
     I32,
     I8,
+    /// Sub-byte: INT4 codes packed two-nibbles-per-byte (the ABC ctx
+    /// storage format). Use `bits()` for sizing — a single I4 element
+    /// has no whole-byte width.
+    I4,
 }
 
 impl DType {
@@ -22,14 +26,24 @@ impl DType {
             "float32" | "f32" => DType::F32,
             "int32" | "i32" => DType::I32,
             "int8" | "i8" => DType::I8,
+            "int4" | "i4" => DType::I4,
             other => bail!("unsupported dtype {other:?}"),
         })
+    }
+
+    pub fn bits(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 32,
+            DType::I8 => 8,
+            DType::I4 => 4,
+        }
     }
 
     pub fn bytes(&self) -> usize {
         match self {
             DType::F32 | DType::I32 => 4,
             DType::I8 => 1,
+            DType::I4 => panic!("I4 is sub-byte; size via bits()"),
         }
     }
 }
@@ -63,7 +77,7 @@ impl TensorSpec {
     }
 
     pub fn bytes(&self) -> usize {
-        self.numel() * self.dtype.bytes()
+        (self.numel() * self.dtype.bits()).div_ceil(8)
     }
 }
 
@@ -121,6 +135,11 @@ pub struct CtxSpec {
     pub shape: Vec<usize>,
     pub dtype: DType,
     pub index: usize,
+    /// HLA rank of a rank-compressed payload (key "xq"): the stored
+    /// leading dim stands for `shape[0] / rank * 16` raw rows. 0 = not
+    /// rank-compressed. Drives the `CtxStore`'s FP32-equivalent
+    /// accounting instead of a hardcoded savings factor.
+    pub rank: usize,
 }
 
 #[derive(Debug)]
@@ -201,6 +220,8 @@ impl Manifest {
                             .context("ctx.dtype")?)?,
                         index: c.get("index").and_then(Json::as_usize)
                             .context("ctx.index")?,
+                        rank: c.get("rank").and_then(Json::as_usize)
+                            .unwrap_or(0),
                     })
                 }).collect::<Result<_>>()?,
             };
@@ -292,6 +313,7 @@ mod tests {
         assert_eq!(DType::parse("float32").unwrap(), DType::F32);
         assert_eq!(DType::parse("int8").unwrap(), DType::I8);
         assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert_eq!(DType::parse("int4").unwrap(), DType::I4);
         assert!(DType::parse("complex64").is_err());
     }
 
@@ -300,6 +322,10 @@ mod tests {
         let s = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
         assert_eq!(s.numel(), 6);
         assert_eq!(s.bytes(), 24);
+        // sub-byte I4: nibble-packed, odd counts round up to whole bytes
+        let q = TensorSpec { name: "q".into(), shape: vec![5], dtype: DType::I4 };
+        assert_eq!(q.bytes(), 3);
+        assert_eq!(DType::I4.bits(), 4);
     }
 
     #[test]

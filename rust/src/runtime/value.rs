@@ -16,6 +16,13 @@ pub enum Value {
     F32 { shape: Vec<usize>, data: Vec<f32> },
     I32 { shape: Vec<usize>, data: Vec<i32> },
     I8 { shape: Vec<usize>, data: Vec<i8> },
+    /// A per-row quantized f32 tensor in ABC storage form: INT`bits`
+    /// codes (nibble-packed two-per-byte at 4 bits) plus one f32 scale
+    /// per leading row. `shape` is the LOGICAL shape; `data` holds
+    /// `(numel * bits).div_ceil(8)` packed bytes, so `bytes()` reports
+    /// the true stored footprint the `CtxStore` accounts. Native-side
+    /// only: it never crosses into PJRT.
+    QuantF32 { shape: Vec<usize>, bits: u8, data: Vec<u8>, scales: Vec<f32> },
 }
 
 impl Value {
@@ -31,13 +38,22 @@ impl Value {
                                        data: vec![0; spec.numel()] },
             DType::I8 => Value::I8 { shape: spec.shape.clone(),
                                      data: vec![0; spec.numel()] },
+            DType::I4 => {
+                // rows = everything but the last axis, matching every
+                // other QuantF32 producer/consumer
+                let numel = spec.numel();
+                let cols = spec.shape.last().copied().unwrap_or(1).max(1);
+                Value::QuantF32 { shape: spec.shape.clone(), bits: 4,
+                                  data: vec![0; numel.div_ceil(2)],
+                                  scales: vec![0.0; (numel / cols).max(1)] }
+            }
         }
     }
 
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32 { shape, .. } | Value::I32 { shape, .. }
-            | Value::I8 { shape, .. } => shape,
+            | Value::I8 { shape, .. } | Value::QuantF32 { shape, .. } => shape,
         }
     }
 
@@ -46,6 +62,8 @@ impl Value {
             Value::F32 { .. } => DType::F32,
             Value::I32 { .. } => DType::I32,
             Value::I8 { .. } => DType::I8,
+            Value::QuantF32 { bits: 4, .. } => DType::I4,
+            Value::QuantF32 { .. } => DType::I8,
         }
     }
 
@@ -53,8 +71,46 @@ impl Value {
         self.shape().iter().product()
     }
 
+    /// True stored footprint. For `QuantF32` that is the packed code
+    /// bytes plus the per-row scale table — what the `CtxStore`'s
+    /// byte-exact accounting charges.
     pub fn bytes(&self) -> usize {
-        self.numel() * self.dtype().bytes()
+        match self {
+            Value::QuantF32 { data, scales, .. } => {
+                data.len() + 4 * scales.len()
+            }
+            _ => self.numel() * self.dtype().bytes(),
+        }
+    }
+
+    /// Build the packed form of a row-major f32 tensor: per-row min-max
+    /// quantize at `bits` via the fused `kernels::quant_pack_rows`
+    /// epilogue, rows = everything but the last axis.
+    pub fn quantize_rows(shape: Vec<usize>, data: &[f32], bits: u8) -> Value {
+        let cols = shape.last().copied().unwrap_or(1).max(1);
+        let rows = data.len() / cols;
+        debug_assert_eq!(rows * cols, data.len());
+        let (packed, scales) =
+            crate::kernels::quant_pack_rows(data, rows, cols, bits);
+        Value::QuantF32 { shape, bits, data: packed, scales }
+    }
+
+    /// Dequantized f32 view (the split-mode ctx consumer's accessor):
+    /// a copy of the data for F32; for QuantF32, a single decode +
+    /// per-row dequant pass with no intermediate code buffer
+    /// (`quant::dequant_rows` — the one definition of the packed
+    /// format's dequant semantics).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32 { data, .. } => Ok(data.clone()),
+            Value::QuantF32 { shape, bits, data, scales } => {
+                let numel: usize = shape.iter().product();
+                let cols = shape.last().copied().unwrap_or(1).max(1);
+                Ok(crate::quant::dequant_rows(data, scales, numel / cols,
+                                              cols, *bits))
+            }
+            v => bail!("expected f32-valued tensor, got {:?}", v.dtype()),
+        }
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
@@ -114,6 +170,9 @@ impl Value {
                 std::slice::from_raw_parts(data.as_ptr() as *const u8,
                                            data.len())
             }),
+            Value::QuantF32 { .. } => bail!(
+                "packed QuantF32 ctx payloads are native-side only and \
+                 never cross into PJRT"),
         };
         Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
             .context("creating literal")
@@ -202,5 +261,39 @@ mod tests {
         let v = Value::zeros_like_spec(&spec);
         assert_eq!(v.bytes(), 8);
         assert_eq!(v.dtype(), DType::I8);
+    }
+
+    #[test]
+    fn quantized_value_roundtrip_and_bytes() {
+        // odd cols so the nibble packer pads — logical shape must win
+        let (rows, cols) = (4usize, 5usize);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|i| (i as f32 - 9.0) * 0.37)
+            .collect();
+        for bits in [4u8, 8] {
+            let v = Value::quantize_rows(vec![rows, cols], &data, bits);
+            assert_eq!(v.numel(), rows * cols);
+            assert_eq!(v.dtype(),
+                       if bits == 4 { DType::I4 } else { DType::I8 });
+            let want_payload = (rows * cols * bits as usize).div_ceil(8);
+            assert_eq!(v.bytes(), want_payload + 4 * rows, "bits={bits}");
+            // dequant error bounded by one quantization step per row
+            let d = v.to_f32().unwrap();
+            if let Value::QuantF32 { scales, .. } = &v {
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let (a, b) = (data[r * cols + c], d[r * cols + c]);
+                        assert!((a - b).abs() <= scales[r] * 1.0001,
+                                "bits={bits} ({r},{c}): {a} vs {b}");
+                    }
+                }
+            } else {
+                panic!("quantize_rows must return QuantF32");
+            }
+        }
+        // plain values: to_f32 is identity for F32, error for ints
+        let f = Value::F32 { shape: vec![2], data: vec![1.0, 2.0] };
+        assert_eq!(f.to_f32().unwrap(), vec![1.0, 2.0]);
+        assert!(Value::I32 { shape: vec![1], data: vec![1] }.to_f32().is_err());
     }
 }

@@ -55,6 +55,10 @@ fn native_suite() {
     checks.push(("native_three_modes_learn_lm", native_three_modes_learn_lm));
     checks.push(("native_split_trajectory_equals_fused",
                  native_split_trajectory_equals_fused));
+    checks.push(("fig1_oom_wall_hits_fp_but_not_hot_abc",
+                 fig1_oom_wall_hits_fp_but_not_hot_abc));
+    checks.push(("abc4_packed_ctx_learns_in_split_mode",
+                 abc4_packed_ctx_learns_in_split_mode));
     checks.push(("lora_trainer_learns_with_frozen_base",
                  lora_trainer_learns_with_frozen_base_tiny));
     checks.push(("native_supports_every_table_family",
@@ -397,6 +401,50 @@ fn native_three_modes_learn_lm(rt: Arc<dyn Executor>) {
     assert_learns("lm accum", &accum);
 }
 
+fn fig1_oom_wall_hits_fp_but_not_hot_abc(rt: Arc<dyn Executor>) {
+    // the paper's Fig 1 at ctx granularity: pick a budget between the
+    // HOT+ABC and FP32 single-step ctx footprints — FP must hit the
+    // typed OOM wall, HOT+ABC must train through it (loss decreasing)
+    let (_, hot_peak) = run_mode(rt.clone(), lm_cfg("hot"), Mode::Split, 1);
+    let (_, fp_peak) = run_mode(rt.clone(), lm_cfg("fp"), Mode::Split, 1);
+    assert!(2 * hot_peak < fp_peak,
+            "packed ABC ctx must be under half of FP32: hot {hot_peak} vs \
+             fp {fp_peak}");
+    let budget = (hot_peak + fp_peak) / 2;
+
+    let mut cfg = lm_cfg("fp");
+    cfg.mem_budget = budget;
+    let mut fp_t = Trainer::new(rt.clone(), cfg).unwrap();
+    let err = fp_t.step_once(Mode::Split)
+        .expect_err("FP ctx must exceed the budget");
+    assert!(err.chain().any(|c| c
+            .downcast_ref::<hot::coordinator::BudgetExceeded>()
+            .is_some()),
+            "expected the typed Fig-1 OOM wall, got: {err:#}");
+
+    let mut cfg = lm_cfg("hot");
+    cfg.mem_budget = budget;
+    let mut hot_t = Trainer::new(rt, cfg).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let (loss, _) = hot_t.step_once(Mode::Split)
+            .expect("HOT+ABC must fit the same budget");
+        losses.push(loss);
+    }
+    assert_learns("hot under fp-OOM budget", &losses);
+}
+
+fn abc4_packed_ctx_learns_in_split_mode(rt: Arc<dyn Executor>) {
+    // nibble-packed INT4 qlinear payloads: smaller ctx than INT8 ABC,
+    // split-mode loss still decreasing
+    let (_, int8_peak) = run_mode(rt.clone(), lm_cfg("hot"), Mode::Split, 1);
+    let (losses, int4_peak) =
+        run_mode(rt, lm_cfg("hot_abc4"), Mode::Split, 8);
+    assert!(int4_peak < int8_peak,
+            "INT4 packing must shrink the ctx: {int4_peak} vs {int8_peak}");
+    assert_learns("lm split abc4", &losses);
+}
+
 fn native_split_trajectory_equals_fused(rt: Arc<dyn Executor>) {
     // natively, fused and split run the same math on the same batches —
     // the ctx Values crossing the CtxStore change nothing numerically
@@ -420,7 +468,8 @@ fn native_supports_every_table_family(rt: Arc<dyn Executor>) {
         "lora_fp_small", "lora_hotfrozen_small", "lora_hotdec_small",
         "lora_hotboth_small", "train_gx_int_hla_tiny", "train_gw_hla_tiny",
         "train_hot_r4_tiny", "train_hot_lm_tiny", "train_hot_mlp_small",
-        "train_hot_r2_tiny", "train_hot_r16_tiny",
+        "train_hot_r2_tiny", "train_hot_r16_tiny", "train_hot_abc4_tiny",
+        "fwd_hot_abc4_lm_tiny",
     ] {
         assert!(rt.supports(key), "native backend must support {key}");
     }
