@@ -23,6 +23,7 @@ struct ModeResult {
     preset: String,
     mode: &'static str,
     threads: usize,
+    simd: bool,
     step_s: f64,
     data_s: f64,
 }
@@ -58,15 +59,24 @@ fn main() {
     let rt = common::executor_or_exit();
     let steps = common::steps(12).max(4);
     let max_threads = hot::kernels::num_threads();
-    let mut thread_budgets = vec![1usize];
-    // the kernel pool only drives the native backend; sweeping threads
-    // under PJRT would record duplicate rows as fake scaling signal
-    if max_threads > 1 && rt.name() == "native" {
-        thread_budgets.push(max_threads);
+    // (threads, simd) cells: the kernel pool and SIMD tier only drive
+    // the native backend; sweeping them under PJRT would record
+    // duplicate rows as fake scaling signal. The (1, scalar) cell is
+    // the baseline the SIMD-tier step-time delta is read against.
+    let simd_avail =
+        hot::kernels::active_tier() != hot::kernels::Tier::Scalar;
+    let mut cells = vec![(1usize, true)];
+    if rt.name() == "native" {
+        if simd_avail {
+            cells.push((1, false));
+        }
+        if max_threads > 1 {
+            cells.push((max_threads, true));
+        }
     }
     let mut results: Vec<ModeResult> = Vec::new();
-    let mut t = Table::new(&["preset", "mode", "threads", "step time",
-                             "steps/s", "data-gen share"]);
+    let mut t = Table::new(&["preset", "mode", "threads", "simd",
+                             "step time", "steps/s", "data-gen share"]);
     for preset in ["tiny", "small", "base"] {
         for (name, mode) in [("fused", Mode::Fused), ("split", Mode::Split),
                              ("accum", Mode::Accum)] {
@@ -85,20 +95,30 @@ fn main() {
             // base steps are ~100x tiny steps; fewer samples keep the
             // bench bounded without losing the steady-state signal
             let steps = if preset == "base" { steps.min(4) } else { steps };
-            for &threads in &thread_budgets {
+            for &(threads, simd) in &cells {
                 hot::kernels::set_num_threads(threads);
+                hot::kernels::set_simd_enabled(simd);
+                // record what actually ran, not what was requested: on
+                // scalar-only hardware (or under PJRT, which bypasses
+                // the kernel pool entirely) the row must not claim a
+                // SIMD tier it never had
+                let effective =
+                    simd && simd_avail && rt.name() == "native";
                 let (step_s, data_s) =
                     bench_mode(rt.clone(), preset, mode, steps);
                 t.row(&[preset.into(), name.into(), threads.to_string(),
+                        if effective { "on" } else { "off" }.into(),
                         format!("{:.1} ms", step_s * 1e3),
                         format!("{:.2}", 1.0 / step_s),
                         format!("{:.1}%", 100.0 * data_s / step_s)]);
                 results.push(ModeResult { preset: preset.into(), mode: name,
-                                          threads, step_s, data_s });
+                                          threads, simd: effective, step_s,
+                                          data_s });
             }
         }
     }
     hot::kernels::set_num_threads(0);
+    hot::kernels::set_simd_enabled(true);
     t.print(&format!("end-to-end throughput (HOT variant, {} backend)",
                      rt.name()));
 
@@ -106,6 +126,11 @@ fn main() {
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("e2e_throughput".into()));
     root.insert("backend".to_string(), Json::Str(rt.name().into()));
+    root.insert("tier".to_string(),
+                Json::Str(hot::kernels::active_tier().name().into()));
+    // distinguishes real runs of this binary from modeled artifacts a
+    // toolchain-less container may have committed
+    root.insert("provenance".to_string(), Json::Str("measured".into()));
     root.insert("steps".to_string(), Json::Num(steps as f64));
     let rows: Vec<Json> = results
         .iter()
@@ -114,6 +139,7 @@ fn main() {
             m.insert("preset".to_string(), Json::Str(r.preset.clone()));
             m.insert("mode".to_string(), Json::Str(r.mode.into()));
             m.insert("threads".to_string(), Json::Num(r.threads as f64));
+            m.insert("simd".to_string(), Json::Bool(r.simd));
             m.insert("step_ms".to_string(), Json::Num(r.step_s * 1e3));
             m.insert("steps_per_sec".to_string(), Json::Num(1.0 / r.step_s));
             m.insert("datagen_share".to_string(),

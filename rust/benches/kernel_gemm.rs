@@ -1,17 +1,19 @@
-//! GEMM kernel throughput: naive oracle vs blocked vs blocked+threaded,
-//! f32 and i8, across thread budgets — the perf gate for the
-//! `rust/src/kernels/` subsystem (ours; no direct paper analog, but it
-//! is the compute story behind the paper's Table 6 speedups).
+//! GEMM kernel throughput: naive oracle vs the scalar tier vs the SIMD
+//! tier (AVX2/NEON), f32 and i8, across thread budgets — the perf gate
+//! for the `rust/src/kernels/` subsystem (ours; no direct paper analog,
+//! but it is the compute story behind the paper's Table 6 speedups).
 //!
 //! Emits `BENCH_kernels.json` with GFLOP/s (f32) / GOP/s (i8) per
-//! (size, impl, threads) so the bench trajectory tracks kernel perf
-//! run over run. `HOT_BENCH_STEPS` is unused here; sizing is fixed so
-//! points stay comparable.
+//! (size, impl, threads) plus a `deltas` block recording the
+//! scalar-vs-SIMD speedup per (kind, size) at one thread — the number
+//! the SIMD-tier acceptance gate reads (>= 2x for f32 at 512^3 on any
+//! AVX2/NEON machine). `HOT_BENCH_STEPS` (any value) switches to the
+//! CI smoke sizing: small shapes, short budgets, same schema.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use hot::kernels::{self, reference};
+use hot::kernels::{self, reference, Tier};
 use hot::util::json::Json;
 use hot::util::prng::Pcg32;
 use hot::util::timer::{bench, Table};
@@ -28,7 +30,8 @@ fn gflops(size: usize, secs: f64) -> f64 {
     2.0 * (size * size * size) as f64 / secs / 1e9
 }
 
-fn bench_size(size: usize, budget_ms: u64, points: &mut Vec<Point>) {
+fn bench_size(size: usize, budget_ms: u64, simd_avail: bool,
+              points: &mut Vec<Point>) {
     let mut rng = Pcg32::seeded(size as u64);
     let a: Vec<f32> = (0..size * size).map(|_| rng.normal()).collect();
     let b: Vec<f32> = (0..size * size).map(|_| rng.normal()).collect();
@@ -38,58 +41,82 @@ fn bench_size(size: usize, budget_ms: u64, points: &mut Vec<Point>) {
         (0..size * size).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
     let budget = Duration::from_millis(budget_ms);
 
-    // naive oracles (single-threaded by construction)
-    let st = bench(1, budget, 64, || {
-        std::hint::black_box(reference::matmul(&a, &b, size, size, size));
-    });
-    points.push(Point { kind: "f32", size, imp: "naive", threads: 1,
-                        gflops: gflops(size, st.median_s) });
-    let st = bench(1, budget, 64, || {
-        std::hint::black_box(reference::matmul_i8_nn(&qa, &qb, size, size,
-                                                     size));
-    });
-    points.push(Point { kind: "i8", size, imp: "naive", threads: 1,
-                        gflops: gflops(size, st.median_s) });
-
-    // blocked kernels at 1 / 2 / 4 threads
-    for threads in [1usize, 2, 4] {
-        kernels::set_num_threads(threads);
-        let imp = if threads == 1 { "blocked" } else { "blocked+threaded" };
+    // naive oracles (single-threaded by construction); skipped at large
+    // sizes where a naive iteration alone would blow the budget
+    if size <= 256 {
         let st = bench(1, budget, 64, || {
-            std::hint::black_box(kernels::gemm_f32_nn(&a, &b, size, size,
-                                                      size));
+            std::hint::black_box(reference::matmul(&a, &b, size, size, size));
         });
-        points.push(Point { kind: "f32", size, imp, threads,
+        points.push(Point { kind: "f32", size, imp: "naive", threads: 1,
                             gflops: gflops(size, st.median_s) });
         let st = bench(1, budget, 64, || {
-            std::hint::black_box(kernels::gemm_i8_nn(&qa, &qb, size, size,
-                                                     size));
+            std::hint::black_box(reference::matmul_i8_nn(&qa, &qb, size, size,
+                                                         size));
         });
-        points.push(Point { kind: "i8", size, imp, threads,
+        points.push(Point { kind: "i8", size, imp: "naive", threads: 1,
                             gflops: gflops(size, st.median_s) });
     }
+
+    // blocked kernels: scalar tier vs SIMD tier at 1 / 2 / 4 threads
+    for (imp, simd) in [("scalar", false), ("simd", true)] {
+        if simd && !simd_avail {
+            continue;
+        }
+        kernels::set_simd_enabled(simd);
+        for threads in [1usize, 2, 4] {
+            kernels::set_num_threads(threads);
+            let st = bench(1, budget, 64, || {
+                std::hint::black_box(kernels::gemm_f32_nn(&a, &b, size, size,
+                                                          size));
+            });
+            points.push(Point { kind: "f32", size, imp, threads,
+                                gflops: gflops(size, st.median_s) });
+            let st = bench(1, budget, 64, || {
+                std::hint::black_box(kernels::gemm_i8_nn(&qa, &qb, size, size,
+                                                         size));
+            });
+            points.push(Point { kind: "i8", size, imp, threads,
+                                gflops: gflops(size, st.median_s) });
+        }
+    }
+    kernels::set_simd_enabled(true);
     kernels::set_num_threads(0);
 }
 
 fn main() {
+    let tier = hot::kernels::active_tier();
+    let simd_avail = tier != Tier::Scalar;
+    // CI smoke mode: the memory-bench smoke convention (HOT_BENCH_STEPS
+    // set) trims sizes/budgets so the step stays fast while still
+    // exercising every (impl, threads) cell and the JSON contract
+    let smoke = std::env::var("HOT_BENCH_STEPS").is_ok();
+    let sizes: &[(usize, u64)] = if smoke {
+        &[(64, 40), (128, 80)]
+    } else {
+        &[(64, 150), (128, 250), (256, 600), (512, 1500)]
+    };
     let mut points: Vec<Point> = Vec::new();
-    for (size, budget_ms) in [(64usize, 150u64), (128, 250), (256, 600)] {
-        bench_size(size, budget_ms, &mut points);
+    for &(size, budget_ms) in sizes {
+        bench_size(size, budget_ms, simd_avail, &mut points);
     }
 
-    let mut t = Table::new(&["kind", "size", "impl", "threads", "GFLOP/s",
-                             "vs naive"]);
-    for p in &points {
-        let naive = points
+    let find = |kind: &str, size: usize, imp: &str, threads: usize| {
+        points
             .iter()
-            .find(|q| q.kind == p.kind && q.size == p.size && q.imp == "naive")
+            .find(|q| q.kind == kind && q.size == size && q.imp == imp
+                  && q.threads == threads)
             .map(|q| q.gflops)
-            .unwrap_or(f64::NAN);
+    };
+    let mut t = Table::new(&["kind", "size", "impl", "threads", "GFLOP/s",
+                             "vs scalar@1t"]);
+    for p in &points {
+        let base = find(p.kind, p.size, "scalar", 1).unwrap_or(f64::NAN);
         t.row(&[p.kind.into(), format!("{0}x{0}x{0}", p.size), p.imp.into(),
                 p.threads.to_string(), format!("{:.2}", p.gflops),
-                format!("{:.2}x", p.gflops / naive)]);
+                format!("{:.2}x", p.gflops / base)]);
     }
-    t.print("GEMM kernels: naive vs blocked vs blocked+threaded");
+    t.print(&format!("GEMM kernels: naive vs scalar vs simd (tier: {})",
+                     tier.name()));
 
     let rows: Vec<Json> = points
         .iter()
@@ -105,9 +132,34 @@ fn main() {
             Json::Obj(m)
         })
         .collect();
+    // scalar-vs-SIMD deltas at 1 thread: the acceptance-gate numbers
+    let mut deltas: Vec<Json> = Vec::new();
+    if simd_avail {
+        for &(size, _) in sizes {
+            for kind in ["f32", "i8"] {
+                let (Some(s), Some(v)) = (find(kind, size, "scalar", 1),
+                                          find(kind, size, "simd", 1))
+                else {
+                    continue;
+                };
+                let mut m = BTreeMap::new();
+                m.insert("kind".to_string(), Json::Str(kind.into()));
+                m.insert("size".to_string(), Json::Num(size as f64));
+                m.insert("scalar_gflops".to_string(), Json::Num(s));
+                m.insert("simd_gflops".to_string(), Json::Num(v));
+                m.insert("speedup".to_string(), Json::Num(v / s));
+                deltas.push(Json::Obj(m));
+            }
+        }
+    }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("kernel_gemm".into()));
+    root.insert("tier".to_string(), Json::Str(tier.name().into()));
+    // distinguishes real runs of this binary from the C-mirror /
+    // modeled artifacts a toolchain-less container may have committed
+    root.insert("provenance".to_string(), Json::Str("measured".into()));
     root.insert("results".to_string(), Json::Arr(rows));
+    root.insert("deltas".to_string(), Json::Arr(deltas));
     let path = "BENCH_kernels.json";
     match std::fs::write(path, Json::Obj(root).to_string()) {
         Ok(()) => println!("wrote {path}"),

@@ -251,9 +251,9 @@ pub struct QlCtx {
     pub i: usize,
 }
 
-/// Forward (always exact FP32) + build the saved ctx.
-pub fn qlinear_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
-                   bias: &[f32], cfg: &BackwardCfg) -> (Vec<f32>, QlCtx) {
+/// y = x w.T + b (exact FP32).
+fn qlinear_y(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
+             bias: &[f32]) -> Vec<f32> {
     let mut y = gemm_f32_nt(x, w, n, i, o);
     for r in 0..n {
         let row = &mut y[r * o..(r + 1) * o];
@@ -261,13 +261,45 @@ pub fn qlinear_fwd(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
             *v += b;
         }
     }
+    y
+}
+
+/// Shared forward core: the compress-or-keep ctx decision lives in ONE
+/// place; `Cow` carries whether the caller handed over ownership (the
+/// uncompressed ctx then keeps the buffer without copying) or only a
+/// borrow (only that path pays a `to_vec`). The compressing path never
+/// materializes an owned copy either way.
+fn qlinear_fwd_cow(x: std::borrow::Cow<'_, [f32]>, n: usize, i: usize,
+                   w: &[f32], o: usize, bias: &[f32], cfg: &BackwardCfg)
+                   -> (Vec<f32>, QlCtx) {
+    let y = qlinear_y(&x, n, i, w, o, bias);
     let ctx = if cfg.compresses(n) {
-        let xa = hla_compress(x, n, i, cfg.rank, cfg.abc_bits, cfg.criterion);
+        let xa = hla_compress(&x, n, i, cfg.rank, cfg.abc_bits,
+                              cfg.criterion);
         QlCtx { x: None, xq: Some(xa), n, i }
     } else {
-        QlCtx { x: Some(x.to_vec()), xq: None, n, i }
+        QlCtx { x: Some(x.into_owned()), xq: None, n, i }
     };
     (y, ctx)
+}
+
+/// Forward (always exact FP32) + build the saved ctx. Takes `x` by
+/// value: every forward-walk caller hands over an activation it no
+/// longer needs, so the uncompressed ctx keeps the buffer itself
+/// instead of copying it (the old hot-path `to_vec`), and the ABC path
+/// compresses from the moved buffer and drops it.
+pub fn qlinear_fwd(x: Vec<f32>, n: usize, i: usize, w: &[f32], o: usize,
+                   bias: &[f32], cfg: &BackwardCfg) -> (Vec<f32>, QlCtx) {
+    qlinear_fwd_cow(std::borrow::Cow::Owned(x), n, i, w, o, bias, cfg)
+}
+
+/// `qlinear_fwd` for callers that only hold a borrow (the LoRA walk's
+/// `Value` inputs): the compressing path never materializes an owned
+/// copy, and only the uncompressed ctx pays the `to_vec`.
+pub fn qlinear_fwd_borrowed(x: &[f32], n: usize, i: usize, w: &[f32],
+                            o: usize, bias: &[f32], cfg: &BackwardCfg)
+                            -> (Vec<f32>, QlCtx) {
+    qlinear_fwd_cow(std::borrow::Cow::Borrowed(x), n, i, w, o, bias, cfg)
 }
 
 fn gx_q4_noht(gy: &[f32], n: usize, o: usize, w: &[f32], i: usize,
@@ -474,11 +506,13 @@ pub fn gelu_t(x: &[f32]) -> Vec<f32> {
     x.iter().map(|&v| (K0 * (v + K1 * v * v * v)).tanh()).collect()
 }
 
-pub fn gelu_fwd(x: &[f32]) -> (Vec<f32>, GeluCtx) {
-    let t = gelu_t(x);
+/// Takes `x` by value — the ctx owns the moved pre-activation buffer
+/// instead of copying it (the old hot-path `to_vec`).
+pub fn gelu_fwd(x: Vec<f32>) -> (Vec<f32>, GeluCtx) {
+    let t = gelu_t(&x);
     let y: Vec<f32> = x.iter().zip(&t).map(|(&v, &tt)| 0.5 * v * (1.0 + tt))
         .collect();
-    (y, GeluCtx { x: x.to_vec(), t })
+    (y, GeluCtx { x, t })
 }
 
 pub fn gelu_bwd(gy: &[f32], ctx: &GeluCtx) -> Vec<f32> {
@@ -820,7 +854,7 @@ mod tests {
         let x = randv(n * i, 6);
         let w = randv(o * i, 7);
         let bias = vec![0.1f32; o];
-        let (y, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        let (y, ctx) = qlinear_fwd(x.clone(), n, i, &w, o, &bias, &cfg);
         // y[r][c] = sum_k x[r][k] w[c][k] + b[c]
         let mut want_y = gemm_f32_nt(&x, &w, n, i, o);
         for r in 0..n {
@@ -847,7 +881,7 @@ mod tests {
         let x = randv(n * i, 9);
         let w = randv(o * i, 10);
         let bias = vec![0.0f32; o];
-        let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        let (_, ctx) = qlinear_fwd(x.clone(), n, i, &w, o, &bias, &cfg);
         assert!(ctx.x.is_none());
         let xa = ctx.xq.as_ref().unwrap();
         let nc = n / BLOCK * cfg.rank;
@@ -873,7 +907,7 @@ mod tests {
         let x = randv(n * i, 90);
         let w = randv(o * i, 91);
         let bias = vec![0.0f32; o];
-        let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        let (_, ctx) = qlinear_fwd(x.clone(), n, i, &w, o, &bias, &cfg);
         let xa = ctx.xq.as_ref().unwrap();
         let nc = n / BLOCK * cfg.rank;
         assert_eq!(xa.bits, 4);
@@ -893,7 +927,7 @@ mod tests {
         let x = randv(n * i, 12);
         let w = randv(o * i, 13);
         let bias = vec![0.0f32; o];
-        let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+        let (_, ctx) = qlinear_fwd(x.clone(), n, i, &w, o, &bias, &cfg);
         assert!(ctx.x.is_some(), "non-tiling layer keeps raw FP residuals");
         let gy = randv(n * o, 14);
         let (gx, gw, _) = qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
@@ -912,7 +946,7 @@ mod tests {
         for tag in ["fp", "hot", "lbp", "luq", "int4", "gx_hq4", "gx_q4",
                     "gx_ext_hla", "gx_int_hla", "gw_hq4", "gw_hla", "gw_hot"] {
             let cfg = BackwardCfg::parse(tag).unwrap();
-            let (_, ctx) = qlinear_fwd(&x, n, i, &w, o, &bias, &cfg);
+            let (_, ctx) = qlinear_fwd(x.clone(), n, i, &w, o, &bias, &cfg);
             let (gx, gw, gb) =
                 qlinear_bwd(&gy, n, o, &w, i, &ctx, &cfg, 0.0, true);
             assert!(gx.unwrap().iter().all(|v| v.is_finite()), "{tag} gx");
@@ -950,7 +984,7 @@ mod tests {
     #[test]
     fn gelu_matches_finite_difference() {
         let xs = [-2.0f32, -0.5, 0.0, 0.3, 1.7];
-        let (_, ctx) = gelu_fwd(&xs);
+        let (_, ctx) = gelu_fwd(xs.to_vec());
         let g = gelu_bwd(&vec![1.0; xs.len()], &ctx);
         for (j, &x) in xs.iter().enumerate() {
             let eps = 1e-3f32;

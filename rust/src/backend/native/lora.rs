@@ -212,9 +212,11 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
     let bcfg = cfg.bcfg;
 
     // --- forward ------------------------------------------------------------
-    let (mut h, ql) = layers::qlinear_fwd(x.as_f32()?, n, shape.in_dim,
-                                          merged.f("embed.w")?, d,
-                                          merged.f("embed.b")?, &bcfg);
+    let (mut h, ql) = layers::qlinear_fwd_borrowed(x.as_f32()?, n,
+                                                   shape.in_dim,
+                                                   merged.f("embed.w")?, d,
+                                                   merged.f("embed.b")?,
+                                                   &bcfg);
     saved.push(Saved::Ql { module: "embed".into(), ctx: ql,
                            flag: lqs_mask.first().copied().unwrap_or(0.0) });
     qi += 1;
@@ -273,7 +275,7 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
         saved.push(Saved::Ln(ln));
         let f1 = lora_fwd(&mut saved, &mut qi, &hn, n, d,
                           format!("{pre}fc1.w"), format!("{pre}fc1.b"), m)?;
-        let (g1, gc) = layers::gelu_fwd(&f1);
+        let (g1, gc) = layers::gelu_fwd(f1);
         saved.push(Saved::Gelu(gc));
         let f2 = lora_fwd(&mut saved, &mut qi, &g1, n, m,
                           format!("{pre}fc2.w"), format!("{pre}fc2.b"), d)?;
@@ -294,7 +296,7 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
         }
     }
     let c = shape.n_classes;
-    let (logits, hctx) = layers::qlinear_fwd(&pooled, b, d,
+    let (logits, hctx) = layers::qlinear_fwd(pooled, b, d,
                                              merged.f("head.w")?, c,
                                              merged.f("head.b")?, &bcfg);
     saved.push(Saved::Ql { module: "head".into(), ctx: hctx,

@@ -51,6 +51,16 @@ impl NativeBackend {
         Self::new()
     }
 
+    /// `new` plus an explicit SIMD toggle: `false` pins every kernel to
+    /// the portable scalar tier, `true` restores the auto-detected
+    /// AVX2/NEON tier (`kernels::dispatch`). The `HOT_SIMD=0`
+    /// environment override wins over this knob. Like the thread
+    /// budget, the setting is process-wide.
+    pub fn with_simd(enabled: bool) -> NativeBackend {
+        crate::kernels::set_simd_enabled(enabled);
+        Self::new()
+    }
+
     pub fn new() -> NativeBackend {
         let entries = presets::builtin_presets()
             .into_iter()

@@ -1,5 +1,13 @@
 //! Fast Walsh-Hadamard transform, order-16 block-diagonal (natural order,
 //! normalized by 1/4 so the transform is orthonormal and involutive).
+//!
+//! `fwht_inplace` is the scalar reference semantics; the block
+//! transforms below route through `kernels::`, which runs the same
+//! butterfly network on the active SIMD tier (`kernels::dispatch`).
+//! Every tier executes the identical add/sub/mul sequence per element,
+//! so the transform is bit-identical no matter which tier ran it — a
+//! hard requirement, because the pseudo-stochastic quantizer keys off
+//! the transformed values' mantissa bits.
 
 pub const BLOCK: usize = 16;
 pub const NORM: f32 = 0.25; // 1/sqrt(16)
@@ -41,8 +49,9 @@ pub fn hadamard_matrix() -> [[f32; BLOCK]; BLOCK] {
 
 /// Block-FWHT along the *last* axis of a row-major (rows, cols) matrix,
 /// cols % 16 == 0. Matches `hadamard.block_ht(x, axis=1)` /
-/// `kernels.fwht.block_fwht`. Routed through the blocked/threaded
-/// kernel subsystem (bit-identical to tile-by-tile `fwht_inplace`).
+/// `kernels.fwht.block_fwht`. Routed through the blocked/threaded/SIMD
+/// kernel subsystem (bit-identical to tile-by-tile `fwht_inplace` at
+/// every tier).
 pub fn block_fwht_rows(x: &mut [f32], rows: usize, cols: usize) {
     crate::kernels::fwht_rows(x, rows, cols);
 }

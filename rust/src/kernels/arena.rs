@@ -1,0 +1,133 @@
+//! Thread-local, grow-only packing/scratch arenas.
+//!
+//! The GEMM packers used to allocate their panel buffers on every call
+//! (`vec![0; strips * k * NR]` per GEMM, one lhs panel per row-task) and
+//! the fused FWHT epilogues cloned their input into a fresh transform
+//! buffer. In the training loop those are the same handful of shapes
+//! thousands of times over — pure allocator churn on the hottest paths.
+//!
+//! An arena here is one `Vec` per (thread, slot): callers borrow it for
+//! the duration of one kernel call via `with_f32`/`with_i8`, resize it
+//! to the shape they need (capacity only ever grows) and hand it back.
+//! Pool workers are long-lived threads, so after the first step at a
+//! given shape every steady-state kernel call packs into memory that is
+//! already there.
+//!
+//! Lifetime rules (also in DESIGN.md §Kernels):
+//!
+//!   * a slot is borrowed for at most one kernel *call* — it must never
+//!     be held across a call into another kernel entry point that could
+//!     reuse the same slot (the slots below are disjoint per use site:
+//!     rhs-pack, lhs-pack, fused transform, quant row);
+//!   * the take-and-put-back protocol makes accidental re-entry safe
+//!     rather than unsound: the inner borrower just sees an empty vec
+//!     and allocates (the grow counter makes such a bug visible);
+//!   * arenas die with their thread; pool workers live for the process,
+//!     so their arenas are bounded by the largest shape each worker
+//!     ever packed.
+//!
+//! `grow_count()` counts capacity growth on the *current thread* — the
+//! no-alloc-after-warmup contract is asserted by a serial test that
+//! pins the thread budget to 1 so all packing happens on one thread.
+
+use std::cell::Cell;
+
+/// Right-hand-side pack buffer (one per GEMM call, caller thread).
+pub(crate) const RHS: usize = 0;
+/// Left-hand-side panel buffer (one per row-task, worker threads too).
+pub(crate) const LHS: usize = 1;
+/// Fused-epilogue transform scratch (`fwht_quant_*`).
+pub(crate) const FUSED: usize = 2;
+const F32_SLOTS: usize = 3;
+
+/// Integer rhs pack buffer.
+pub(crate) const I_RHS: usize = 0;
+/// Integer lhs panel buffer.
+pub(crate) const I_LHS: usize = 1;
+/// Per-row quantize scratch (`quant_pack_rows`).
+pub(crate) const QROW: usize = 2;
+const I8_SLOTS: usize = 3;
+
+thread_local! {
+    static F32_ARENA: [Cell<Vec<f32>>; F32_SLOTS] =
+        [Cell::new(Vec::new()), Cell::new(Vec::new()), Cell::new(Vec::new())];
+    static I8_ARENA: [Cell<Vec<i8>>; I8_SLOTS] =
+        [Cell::new(Vec::new()), Cell::new(Vec::new()), Cell::new(Vec::new())];
+    static GROWS: Cell<usize> = Cell::new(0);
+}
+
+/// Capacity-growth events observed on this thread (monotonic). Stable
+/// across repeated kernel calls at already-seen shapes — the
+/// no-allocation-after-warmup contract.
+pub fn grow_count() -> usize {
+    GROWS.with(|g| g.get())
+}
+
+fn track<T, R>(cell: &Cell<Vec<T>>, f: impl FnOnce(&mut Vec<T>) -> R) -> R {
+    let mut v = cell.take();
+    let cap0 = v.capacity();
+    let r = f(&mut v);
+    if v.capacity() > cap0 {
+        GROWS.with(|g| g.set(g.get() + 1));
+    }
+    cell.set(v);
+    r
+}
+
+/// Borrow this thread's f32 arena `slot` for the duration of `f`.
+pub(crate) fn with_f32<R>(slot: usize, f: impl FnOnce(&mut Vec<f32>) -> R)
+                          -> R {
+    F32_ARENA.with(|a| track(&a[slot], f))
+}
+
+/// Borrow this thread's i8 arena `slot` for the duration of `f`.
+pub(crate) fn with_i8<R>(slot: usize, f: impl FnOnce(&mut Vec<i8>) -> R)
+                         -> R {
+    I8_ARENA.with(|a| track(&a[slot], f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_does_not_grow() {
+        // warm a private slot shape, then re-borrowing at the same (or
+        // a smaller) size must not move the counter
+        with_f32(FUSED, |v| {
+            v.clear();
+            v.resize(1024, 0.0);
+        });
+        let g0 = grow_count();
+        for round in 0..5 {
+            with_f32(FUSED, |v| {
+                v.clear();
+                v.resize(1024 - round, 0.0);
+                v[0] = round as f32;
+            });
+        }
+        assert_eq!(grow_count(), g0, "steady-state reuse must not grow");
+        with_f32(FUSED, |v| {
+            v.clear();
+            v.resize(4096, 0.0);
+        });
+        assert!(grow_count() > g0, "a larger shape must register a grow");
+    }
+
+    #[test]
+    fn reentry_is_safe_and_isolated() {
+        // the take-and-put-back protocol: an (illegal but possible)
+        // nested borrow of the same slot sees an empty vec, not an
+        // aliased one
+        with_i8(QROW, |outer| {
+            outer.clear();
+            outer.resize(8, 3);
+            with_i8(QROW, |inner| {
+                assert!(inner.is_empty(), "nested borrow must not alias");
+                inner.push(1);
+            });
+            assert_eq!(outer.len(), 8);
+            assert!(outer.iter().all(|&v| v == 3));
+        });
+    }
+}

@@ -1,14 +1,29 @@
-//! Per-shape dispatch cache: how many parallel tasks a GEMM of a given
-//! shape should fan out to.
+//! Kernel dispatch: which ISA tier and how many parallel tasks a kernel
+//! of a given shape should run with.
 //!
-//! The decision is cheap but not free (a few branches plus a
-//! `num_threads` load), and the training loop replays the same handful
-//! of shapes thousands of times, so plans are memoized by
-//! `(n, k, m, element, thread budget)`. Including the budget in the key
-//! means `set_num_threads` never needs to invalidate anything — a new
-//! budget simply populates new entries.
+//! Two decisions live here:
+//!
+//!   * **ISA tier** — a process-global `CpuCaps` probe (run once) detects
+//!     AVX2+FMA on x86_64 / NEON on aarch64, and `active_tier()` maps
+//!     that to the best available microkernel family in `kernels::simd`.
+//!     The probe honors two overrides: the `HOT_SIMD=0` environment
+//!     variable (read once, hard-disables SIMD for the process — the CI
+//!     scalar-fallback leg) and the runtime `set_simd_enabled` knob
+//!     (`NativeBackend::with_simd`). The scalar kernels are always the
+//!     fallback, and `kernels::reference` stays the correctness oracle
+//!     for every tier.
+//!   * **fan-out** — how many row-chunk tasks a GEMM forks into, as
+//!     before.
+//!
+//! Both are cheap but not free, and the training loop replays the same
+//! handful of shapes thousands of times, so resolved plans are memoized
+//! by `(n, k, m, element, thread budget, active tier)`. Including the
+//! budget and tier in the key means neither `set_num_threads` nor
+//! `set_simd_enabled` ever needs to invalidate anything — a new setting
+//! simply populates new entries.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use crate::kernels::pool;
@@ -21,30 +36,132 @@ pub enum Elem {
     I8,
 }
 
+/// Instruction-set tier a kernel executes at. `Scalar` is the portable
+/// fallback and always available; the SIMD tiers are selected only when
+/// the one-time `CpuCaps` probe proved the ISA present, so every unsafe
+/// intrinsic block in `kernels::simd` runs behind this safe gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Scalar,
+    /// x86_64 with AVX2 and FMA (both probed — FMA-less AVX2 parts
+    /// exist and would fault on the f32 microkernel).
+    Avx2,
+    /// aarch64; NEON is architecturally mandatory there.
+    Neon,
+}
+
+impl Tier {
+    /// Display name (bench JSON, diagnostics).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+/// One-time CPU capability probe.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuCaps {
+    pub avx2: bool,
+    pub neon: bool,
+    /// `HOT_SIMD=0` (or `off` / `scalar`) was set when the process
+    /// first touched the kernels: SIMD is hard-disabled.
+    pub env_off: bool,
+}
+
+/// The process-global capability probe (memoized on first use).
+pub fn caps() -> CpuCaps {
+    static CAPS: OnceLock<CpuCaps> = OnceLock::new();
+    *CAPS.get_or_init(|| {
+        let env_off = matches!(std::env::var("HOT_SIMD").as_deref(),
+                               Ok("0") | Ok("off") | Ok("scalar"));
+        #[cfg(target_arch = "x86_64")]
+        let avx2 = std::is_x86_feature_detected!("avx2")
+            && std::is_x86_feature_detected!("fma");
+        #[cfg(not(target_arch = "x86_64"))]
+        let avx2 = false;
+        CpuCaps { avx2, neon: cfg!(target_arch = "aarch64"), env_off }
+    })
+}
+
+/// Runtime SIMD knob (`NativeBackend::with_simd`); defaults to on.
+/// `HOT_SIMD=0` in the environment wins over this.
+static SIMD_ON: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable the SIMD tiers at runtime. Takes effect on the next
+/// kernel call (plans are keyed by the effective tier, so no
+/// invalidation is needed). The scalar fallback is always kept correct
+/// by the same property tests, so flipping this mid-run only changes
+/// speed — and, for f32, least-significant-bit rounding (FMA).
+pub fn set_simd_enabled(on: bool) {
+    SIMD_ON.store(on, Ordering::Relaxed);
+}
+
+/// Whether SIMD tiers may be selected right now.
+pub fn simd_enabled() -> bool {
+    !caps().env_off && SIMD_ON.load(Ordering::Relaxed)
+}
+
+/// Best tier the hardware probe allows, ignoring the runtime knob (the
+/// `HOT_SIMD` env override still wins). The single caps-to-tier
+/// mapping — `active_tier` and the tier parity tests both use it, so
+/// adding a tier cannot desynchronize them.
+pub(crate) fn probed_tier() -> Tier {
+    let c = caps();
+    if c.env_off {
+        Tier::Scalar
+    } else if c.avx2 {
+        Tier::Avx2
+    } else if c.neon {
+        Tier::Neon
+    } else {
+        Tier::Scalar
+    }
+}
+
+/// The best tier the current process may use.
+pub fn active_tier() -> Tier {
+    if !SIMD_ON.load(Ordering::Relaxed) {
+        return Tier::Scalar;
+    }
+    probed_tier()
+}
+
 /// A resolved execution plan for one GEMM shape.
 #[derive(Debug, Clone, Copy)]
 pub struct Plan {
     /// Row-chunk tasks to fan out to (1 = stay on the calling thread).
     pub tasks: usize,
+    /// Microkernel tier for this shape (may be `Scalar` below the
+    /// `SIMD_MAC_FLOOR` even when a SIMD tier is active).
+    pub tier: Tier,
 }
 
 /// Below this many multiply-accumulates a fork costs more than it buys.
 const PAR_MAC_FLOOR: usize = 1 << 18;
 
-/// Target rows per parallel task (a multiple of the microkernel MR).
+/// Below this many multiply-accumulates the wider SIMD register tile
+/// pads more than it computes; tiny shapes stay on the scalar kernels.
+const SIMD_MAC_FLOOR: usize = 1 << 9;
+
+/// Target rows per parallel task (a multiple of every tier's MR).
 const TASK_ROWS: usize = 48;
 
-type Key = (usize, usize, usize, Elem, usize);
+type Key = (usize, usize, usize, Elem, usize, Tier);
 
 fn cache() -> &'static Mutex<HashMap<Key, Plan>> {
     static CACHE: OnceLock<Mutex<HashMap<Key, Plan>>> = OnceLock::new();
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
-/// Plan a (n, k) x (k, m) GEMM under the current thread budget.
+/// Plan a (n, k) x (k, m) GEMM under the current thread budget and
+/// SIMD setting.
 pub fn plan(n: usize, k: usize, m: usize, elem: Elem) -> Plan {
     let width = pool::num_threads();
-    let key = (n, k, m, elem, width);
+    let active = active_tier();
+    let key = (n, k, m, elem, width, active);
     if let Some(p) = cache().lock().unwrap().get(&key) {
         return *p;
     }
@@ -57,7 +174,8 @@ pub fn plan(n: usize, k: usize, m: usize, elem: Elem) -> Plan {
         n.div_ceil(TASK_ROWS).min(width * 4)
     }
     .max(1);
-    let p = Plan { tasks };
+    let tier = if macs < SIMD_MAC_FLOOR { Tier::Scalar } else { active };
+    let p = Plan { tasks, tier };
     cache().lock().unwrap().insert(key, p);
     p
 }
@@ -92,10 +210,46 @@ mod tests {
     #[test]
     fn plans_are_memoized() {
         // other tests insert plans concurrently, so only per-key
-        // stability is assertable here
+        // stability is assertable here; the gate keeps concurrent
+        // set_simd_enabled togglers from flipping the tier between
+        // the two lookups
+        let _gate = pool::test_serial();
         let p1 = plan(77, 33, 11, Elem::F32);
         let p2 = plan(77, 33, 11, Elem::F32);
         assert_eq!(p1.tasks, p2.tasks);
+        assert_eq!(p1.tier, p2.tier);
         assert!(cached_plans() >= 1);
+    }
+
+    #[test]
+    fn tiny_shapes_stay_scalar_even_with_simd_active() {
+        // (4, 4, 4) = 64 macs < SIMD_MAC_FLOOR
+        assert_eq!(plan(4, 4, 4, Elem::F32).tier, Tier::Scalar);
+    }
+
+    #[test]
+    fn plan_tier_follows_the_active_tier() {
+        let _gate = pool::test_serial();
+        set_simd_enabled(false);
+        assert_eq!(active_tier(), Tier::Scalar);
+        assert_eq!(plan(128, 128, 128, Elem::F32).tier, Tier::Scalar);
+        set_simd_enabled(true);
+        // with the knob back on the plan mirrors whatever the probe
+        // found (scalar on hardware without AVX2/NEON)
+        assert_eq!(plan(128, 128, 128, Elem::F32).tier, active_tier());
+    }
+
+    #[test]
+    fn env_override_forces_scalar_when_set() {
+        // the env var is read once at probe time, so this asserts only
+        // when the whole process runs under HOT_SIMD=0 (the CI scalar
+        // leg); otherwise it checks the probe is consistent
+        if matches!(std::env::var("HOT_SIMD").as_deref(),
+                    Ok("0") | Ok("off") | Ok("scalar")) {
+            assert!(caps().env_off);
+            assert_eq!(active_tier(), Tier::Scalar);
+        } else {
+            assert!(!caps().env_off);
+        }
     }
 }

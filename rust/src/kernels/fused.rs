@@ -21,19 +21,27 @@
 
 use std::sync::Mutex;
 
-use crate::hadamard::fwht::{fwht_inplace, BLOCK, NORM};
+use crate::hadamard::fwht::{BLOCK, NORM};
+use crate::kernels::arena;
+use crate::kernels::dispatch::{self, Tier};
 use crate::kernels::pool;
+use crate::kernels::simd;
 use crate::quant;
 
 /// Minimum elements before a transform forks across the pool.
 const MIN_PAR: usize = 1 << 15;
 
 /// Block-FWHT along the last axis of a row-major (rows, cols) matrix,
-/// cols % 16 == 0. Threaded over row chunks for large tensors.
+/// cols % 16 == 0. Threaded over row chunks for large tensors. The tile
+/// butterflies run on the active SIMD tier — bit-identical to the
+/// scalar tier by construction (same add/sub/mul sequence).
 pub fn fwht_rows(x: &mut [f32], rows: usize, cols: usize) {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(cols % BLOCK, 0, "cols must tile into {BLOCK}");
-    par_rows(x, rows, cols, 1, &rows_worker::<false>);
+    let tier = dispatch::active_tier();
+    par_rows(x, rows, cols, 1, &|chunk: &mut [f32]| {
+        simd::fwht_tiles(tier, chunk, false)
+    });
 }
 
 /// `fwht_rows` that also returns max|x| of the transformed tensor,
@@ -41,20 +49,24 @@ pub fn fwht_rows(x: &mut [f32], rows: usize, cols: usize) {
 pub fn fwht_rows_amax(x: &mut [f32], rows: usize, cols: usize) -> f32 {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(cols % BLOCK, 0, "cols must tile into {BLOCK}");
-    par_rows(x, rows, cols, 1, &rows_worker::<true>)
+    let tier = dispatch::active_tier();
+    par_rows(x, rows, cols, 1, &|chunk: &mut [f32]| {
+        simd::fwht_tiles(tier, chunk, true)
+    })
 }
 
 /// Block-FWHT along axis 0 of a row-major (rows, cols) matrix,
 /// rows % 16 == 0. Strip-mined: gathers 16xW tiles so the butterflies
-/// stream instead of striding `cols` floats per element.
+/// stream instead of striding the full matrix per column.
 pub fn fwht_cols(x: &mut [f32], rows: usize, cols: usize) {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(rows % BLOCK, 0, "rows must tile into {BLOCK}");
     if x.is_empty() {
         return;
     }
+    let tier = dispatch::active_tier();
     par_rows(x, rows, cols, BLOCK, &|chunk: &mut [f32]| {
-        cols_worker::<false>(chunk, cols)
+        cols_worker::<false>(tier, chunk, cols)
     });
 }
 
@@ -65,30 +77,44 @@ pub fn fwht_cols_amax(x: &mut [f32], rows: usize, cols: usize) -> f32 {
     if x.is_empty() {
         return 0.0;
     }
+    let tier = dispatch::active_tier();
     par_rows(x, rows, cols, BLOCK, &|chunk: &mut [f32]| {
-        cols_worker::<true>(chunk, cols)
+        cols_worker::<true>(tier, chunk, cols)
+    })
+}
+
+/// Shared body of the fused FWHT+quant epilogues: copy into the
+/// thread-local transform scratch, run the amax-folding transform,
+/// derive the min-max scale, quantize on the active tier. Steady state
+/// allocates only the returned code buffer.
+fn fwht_quant(x: &[f32], rows: usize, cols: usize, bits: u8,
+              transform_amax: fn(&mut [f32], usize, usize) -> f32)
+              -> (Vec<i8>, f32) {
+    arena::with_f32(arena::FUSED, |t| {
+        t.clear();
+        t.extend_from_slice(x);
+        let amax = transform_amax(t, rows, cols);
+        let scale = amax.max(1e-8) / quant::qmax(bits) as f32;
+        let mut q = vec![0i8; x.len()];
+        simd::quantize_ps_into(dispatch::active_tier(), t, scale, bits,
+                               &mut q);
+        (q, scale)
     })
 }
 
 /// Fused epilogue: block-FWHT along rows, then pseudo-stochastic
 /// min-max quantize at `bits`, the scale's amax scan folded into the
 /// transform. Returns (q, scale); bit-exact vs separate
-/// FWHT-then-quant passes.
+/// FWHT-then-quant passes at every tier.
 pub fn fwht_quant_rows(x: &[f32], rows: usize, cols: usize, bits: u8)
                        -> (Vec<i8>, f32) {
-    let mut t = x.to_vec();
-    let amax = fwht_rows_amax(&mut t, rows, cols);
-    let scale = amax.max(1e-8) / quant::qmax(bits) as f32;
-    (quant::quantize_ps(&t, scale, bits), scale)
+    fwht_quant(x, rows, cols, bits, fwht_rows_amax)
 }
 
 /// Fused epilogue along axis 0: block-FWHT down columns + quantize.
 pub fn fwht_quant_cols(x: &[f32], rows: usize, cols: usize, bits: u8)
                        -> (Vec<i8>, f32) {
-    let mut t = x.to_vec();
-    let amax = fwht_cols_amax(&mut t, rows, cols);
-    let scale = amax.max(1e-8) / quant::qmax(bits) as f32;
-    (quant::quantize_ps(&t, scale, bits), scale)
+    fwht_quant(x, rows, cols, bits, fwht_cols_amax)
 }
 
 /// Per-row quantize → pack epilogue: the ABC storage-side compressor.
@@ -104,30 +130,40 @@ pub fn fwht_quant_cols(x: &[f32], rows: usize, cols: usize, bits: u8)
 pub fn quant_pack_rows(x: &[f32], rows: usize, cols: usize, bits: u8)
                        -> (Vec<u8>, Vec<f32>) {
     assert_eq!(x.len(), rows * cols);
+    let tier = dispatch::active_tier();
     let qmax = quant::qmax(bits) as f32;
     let mut scales = Vec::with_capacity(rows);
     let mut data = Vec::with_capacity((rows * cols * bits as usize).div_ceil(8));
-    // carry nibble for 4-bit packing across odd-cols row boundaries
-    let mut carry: Option<u8> = None;
-    for r in 0..rows {
-        let row = &x[r * cols..(r + 1) * cols];
-        let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        let scale = amax.max(1e-8) / qmax;
-        scales.push(scale);
-        for &v in row {
-            let q = quant::quantize_ps_one(v, scale, bits);
+    arena::with_i8(arena::QROW, |qrow| {
+        qrow.clear();
+        qrow.resize(cols, 0);
+        // carry nibble for 4-bit packing across odd-cols row boundaries
+        let mut carry: Option<u8> = None;
+        for r in 0..rows {
+            let row = &x[r * cols..(r + 1) * cols];
+            let scale = simd::amax(tier, row).max(1e-8) / qmax;
+            scales.push(scale);
+            // quantize the cache-hot row on the SIMD tier (bit-exact vs
+            // the scalar quantizer), then pack straight out of scratch
+            simd::quantize_ps_into(tier, row, scale, bits, qrow);
             match bits {
-                8 => data.push(q as u8),
-                _ => match carry.take() {
-                    None => carry = Some((q as u8) & 0xF),
-                    Some(lo) => data.push((((q as u8) & 0xF) << 4) | lo),
-                },
+                8 => data.extend(qrow.iter().map(|&q| q as u8)),
+                _ => {
+                    for &q in qrow.iter() {
+                        match carry.take() {
+                            None => carry = Some((q as u8) & 0xF),
+                            Some(lo) => {
+                                data.push((((q as u8) & 0xF) << 4) | lo)
+                            }
+                        }
+                    }
+                }
             }
         }
-    }
-    if let Some(lo) = carry {
-        data.push(lo); // pad the final high nibble with 0
-    }
+        if let Some(lo) = carry {
+            data.push(lo); // pad the final high nibble with 0
+        }
+    });
     (data, scales)
 }
 
@@ -161,31 +197,14 @@ fn par_rows(x: &mut [f32], rows: usize, cols: usize, granule: usize,
         .fold(0.0f32, f32::max)
 }
 
-/// Transform every 16-tile of the chunk in place (row tiling: since
-/// cols % 16 == 0, row boundaries land on tile boundaries). `AMAX`
-/// selects at compile time whether the post-transform max|x| is folded
-/// in — plain transforms skip the per-element abs/compare entirely.
-fn rows_worker<const AMAX: bool>(x: &mut [f32]) -> f32 {
-    let mut tile = [0.0f32; BLOCK];
-    let mut amax = 0.0f32;
-    for t in x.chunks_exact_mut(BLOCK) {
-        tile.copy_from_slice(t);
-        fwht_inplace(&mut tile);
-        if AMAX {
-            for &v in &tile {
-                amax = amax.max(v.abs());
-            }
-        }
-        t.copy_from_slice(&tile);
-    }
-    amax
-}
-
 /// Column transform over a chunk whose row count is a multiple of 16:
 /// gather a 16xW tile, butterfly along the 16 axis (identical add/sub
-/// order to `fwht_inplace`), scale by NORM, scatter back. `AMAX` as in
-/// `rows_worker`.
-fn cols_worker<const AMAX: bool>(x: &mut [f32], cols: usize) -> f32 {
+/// order to `fwht_inplace`; the per-stage row pairs run on the SIMD
+/// tier's vector butterfly), scale by NORM, scatter back. `AMAX`
+/// selects at compile time whether the post-transform max|x| is folded
+/// in — plain transforms skip the per-element abs/compare entirely.
+fn cols_worker<const AMAX: bool>(tier: Tier, x: &mut [f32], cols: usize)
+                                 -> f32 {
     const W: usize = 64;
     let rows = x.len() / cols;
     let mut buf = [0.0f32; BLOCK * W];
@@ -205,22 +224,19 @@ fn cols_worker<const AMAX: bool>(x: &mut [f32], cols: usize) -> f32 {
                 let mut lo = 0usize;
                 while lo < BLOCK {
                     for i in lo..lo + size {
-                        for c in 0..w {
-                            let a = buf[i * w + c];
-                            let b2 = buf[(i + size) * w + c];
-                            buf[i * w + c] = a + b2;
-                            buf[(i + size) * w + c] = a - b2;
-                        }
+                        let (top, bot) = buf.split_at_mut((i + size) * w);
+                        simd::butterfly_rows(tier,
+                                             &mut top[i * w..(i + 1) * w],
+                                             &mut bot[..w]);
                     }
                     lo += stride;
                 }
                 size = stride;
             }
-            for v in buf[..BLOCK * w].iter_mut() {
-                *v *= NORM;
-                if AMAX {
-                    amax = amax.max(v.abs());
-                }
+            let tile_amax =
+                simd::scale_amax(tier, &mut buf[..BLOCK * w], NORM, AMAX);
+            if AMAX {
+                amax = amax.max(tile_amax);
             }
             for b in 0..BLOCK {
                 let at = (base + b) * cols + c0;
@@ -235,6 +251,7 @@ fn cols_worker<const AMAX: bool>(x: &mut [f32], cols: usize) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hadamard::fwht::fwht_inplace;
     use crate::util::prng::Pcg32;
 
     fn randv(n: usize, seed: u64) -> Vec<f32> {
@@ -360,6 +377,28 @@ mod tests {
         fwht_cols(&mut serial_c, rows, cols);
         pool::set_num_threads(0);
         assert_eq!(serial_c, par_c);
+    }
+
+    #[test]
+    fn fused_scratch_reuses_after_warmup() {
+        // transform/quant scratch comes from the thread-local arena;
+        // steady state must allocate only the returned buffers
+        let _gate = pool::test_serial();
+        pool::set_num_threads(1);
+        let (rows, cols) = (24, 48);
+        let x = randv(rows * cols, 900);
+        for _ in 0..2 {
+            std::hint::black_box(fwht_quant_rows(&x, rows, cols, 4));
+            std::hint::black_box(quant_pack_rows(&x, rows, cols, 8));
+        }
+        let g0 = crate::kernels::arena::grow_count();
+        for _ in 0..4 {
+            std::hint::black_box(fwht_quant_rows(&x, rows, cols, 4));
+            std::hint::black_box(quant_pack_rows(&x, rows, cols, 8));
+        }
+        assert_eq!(crate::kernels::arena::grow_count(), g0,
+                   "steady-state fused epilogues must not grow the arena");
+        pool::set_num_threads(0);
     }
 
     #[test]

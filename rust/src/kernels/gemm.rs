@@ -22,15 +22,28 @@
 //!
 //! The naive loop nests these kernels replaced live on as oracles in
 //! `kernels::reference`.
+//!
+//! Tiering: `dispatch::plan` hands every call a `Tier`; the packers
+//! produce whatever (MR, NR) panel geometry that tier's microkernel
+//! wants (`simd::f32_tile`), and the register tile itself is either the
+//! scalar loops below or an ISA microkernel from `kernels::simd`. The
+//! int tiles share one packed layout across tiers and are bit-exact;
+//! the f32 SIMD tile uses FMA and differs from scalar only in last-bit
+//! rounding. Packing buffers come from the thread-local grow-only
+//! arenas in `kernels::arena` — after warmup no GEMM call allocates a
+//! panel.
 
 use std::sync::Mutex;
 
-use crate::kernels::dispatch::{self, Elem};
+use crate::kernels::arena;
+use crate::kernels::dispatch::{self, Elem, Tier};
 use crate::kernels::pool;
+use crate::kernels::simd;
 
-/// Microkernel rows (register-tile height).
+/// Scalar-tier microkernel rows (register-tile height). SIMD tiers may
+/// use wider tiles — see `simd::f32_tile`.
 pub const MR: usize = 4;
-/// Microkernel columns (register-tile width; one or two SIMD lanes).
+/// Scalar-tier microkernel columns (register-tile width).
 pub const NR: usize = 8;
 /// Depth-block for f32 (keeps an MR panel + NR strip slice in L1).
 const KC_F32: usize = 256;
@@ -220,10 +233,14 @@ fn gemm_f32(lhs: Lhs, a: &[f32], rhs: Rhs, b: &[f32], n: usize, k: usize,
         gather_rows(&rows, rhs, b, k, m, &mut out);
         return out;
     }
-    let pb = pack_rhs_f32(rhs, b, k, m);
     let plan = dispatch::plan(n, k, m, Elem::F32);
-    run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
-        task_f32(lhs, a, &pb, n, k, m, r0, r1, c);
+    let (_, nr) = simd::f32_tile(plan.tier);
+    arena::with_f32(arena::RHS, |pb| {
+        pack_rhs_f32(rhs, b, k, m, nr, pb);
+        let pb: &[f32] = pb;
+        run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
+            task_f32(plan.tier, lhs, a, pb, n, k, m, r0, r1, c);
+        });
     });
     out
 }
@@ -288,55 +305,57 @@ fn gather_rows(rows: &[(usize, f32)], rhs: Rhs, b: &[f32], k: usize,
     }
 }
 
-/// Pack the rhs into NR-column strips, k-major within each strip:
-/// value (kk, j) of strip s lives at `pb[(s * k + kk) * NR + j]`.
+/// Pack the rhs into `nr`-column strips, k-major within each strip:
+/// value (kk, j) of strip s lives at `pb[(s * k + kk) * nr + j]`.
 /// Lanes past the column edge are zero, so the microkernel never
-/// branches on m.
-fn pack_rhs_f32(rhs: Rhs, b: &[f32], k: usize, m: usize) -> Vec<f32> {
-    let strips = m.div_ceil(NR);
-    let mut pb = vec![0.0f32; strips * k * NR];
+/// branches on m. `nr` is the planned tier's register-tile width.
+fn pack_rhs_f32(rhs: Rhs, b: &[f32], k: usize, m: usize, nr: usize,
+                pb: &mut Vec<f32>) {
+    let strips = m.div_ceil(nr);
+    pb.clear();
+    pb.resize(strips * k * nr, 0.0);
     match rhs {
         Rhs::N => {
             for kk in 0..k {
                 let row = &b[kk * m..(kk + 1) * m];
                 for s in 0..strips {
-                    let c0 = s * NR;
-                    let w = NR.min(m - c0);
-                    let base = (s * k + kk) * NR;
+                    let c0 = s * nr;
+                    let w = nr.min(m - c0);
+                    let base = (s * k + kk) * nr;
                     pb[base..base + w].copy_from_slice(&row[c0..c0 + w]);
                 }
             }
         }
         Rhs::T => {
             for j in 0..m {
-                let (s, lane) = (j / NR, j % NR);
+                let (s, lane) = (j / nr, j % nr);
                 let row = &b[j * k..(j + 1) * k];
                 for (kk, &v) in row.iter().enumerate() {
-                    pb[(s * k + kk) * NR + lane] = v;
+                    pb[(s * k + kk) * nr + lane] = v;
                 }
             }
         }
     }
-    pb
 }
 
-/// Pack lhs rows r0..r1 at depths kbeg..kend into MR-row strips,
+/// Pack lhs rows r0..r1 at depths kbeg..kend into `mr`-row strips,
 /// k-major: value (row r, depth kk) of strip t lives at
-/// `ap[(t * kc + kk) * MR + (r % MR)]`. Rows past r1 are zero.
+/// `ap[(t * kc + kk) * mr + (r % mr)]`. Rows past r1 are zero.
 #[allow(clippy::too_many_arguments)]
 fn pack_lhs_f32(lhs: Lhs, a: &[f32], n: usize, k: usize, r0: usize,
-                r1: usize, kbeg: usize, kend: usize, ap: &mut Vec<f32>) {
+                r1: usize, kbeg: usize, kend: usize, mr: usize,
+                ap: &mut Vec<f32>) {
     let rows = r1 - r0;
     let kc = kend - kbeg;
     ap.clear();
-    ap.resize(rows.div_ceil(MR) * kc * MR, 0.0);
+    ap.resize(rows.div_ceil(mr) * kc * mr, 0.0);
     match lhs {
         Lhs::N => {
             for r in 0..rows {
-                let (t, lane) = (r / MR, r % MR);
+                let (t, lane) = (r / mr, r % mr);
                 let src = &a[(r0 + r) * k + kbeg..(r0 + r) * k + kend];
                 for (kk, &v) in src.iter().enumerate() {
-                    ap[(t * kc + kk) * MR + lane] = v;
+                    ap[(t * kc + kk) * mr + lane] = v;
                 }
             }
         }
@@ -344,19 +363,21 @@ fn pack_lhs_f32(lhs: Lhs, a: &[f32], n: usize, k: usize, r0: usize,
             for kk in 0..kc {
                 let src = &a[(kbeg + kk) * n + r0..(kbeg + kk) * n + r1];
                 for (r, &v) in src.iter().enumerate() {
-                    let (t, lane) = (r / MR, r % MR);
-                    ap[(t * kc + kk) * MR + lane] = v;
+                    let (t, lane) = (r / mr, r % mr);
+                    ap[(t * kc + kk) * mr + lane] = v;
                 }
             }
         }
     }
 }
 
-/// MRxNR register tile over one packed panel pair.
+/// Scalar MRxNR register tile over one packed panel pair. The flat
+/// `acc` is row-major MR rows of NR lanes (the first 32 entries of the
+/// shared accumulator buffer).
 #[inline]
-fn tile_f32(asl: &[f32], bs: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn tile_f32_scalar(asl: &[f32], bs: &[f32], acc: &mut [f32]) {
     for (af, bf) in asl.chunks_exact(MR).zip(bs.chunks_exact(NR)) {
-        for (&av, arow) in af.iter().zip(acc.iter_mut()) {
+        for (&av, arow) in af.iter().zip(acc.chunks_exact_mut(NR)) {
             for (a, &bv) in arow.iter_mut().zip(bf) {
                 *a += av * bv;
             }
@@ -365,37 +386,44 @@ fn tile_f32(asl: &[f32], bs: &[f32], acc: &mut [[f32; NR]; MR]) {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn task_f32(lhs: Lhs, a: &[f32], pb: &[f32], n: usize, k: usize, m: usize,
-            r0: usize, r1: usize, c: &mut [f32]) {
+fn task_f32(tier: Tier, lhs: Lhs, a: &[f32], pb: &[f32], n: usize, k: usize,
+            m: usize, r0: usize, r1: usize, c: &mut [f32]) {
+    let (mr, nr) = simd::f32_tile(tier);
     let rows = r1 - r0;
-    let strips_m = m.div_ceil(NR);
-    let mut ap: Vec<f32> = Vec::new();
-    let mut kbeg = 0usize;
-    while kbeg < k {
-        let kend = k.min(kbeg + KC_F32);
-        let kc = kend - kbeg;
-        pack_lhs_f32(lhs, a, n, k, r0, r1, kbeg, kend, &mut ap);
-        for s in 0..strips_m {
-            let bs = &pb[(s * k + kbeg) * NR..(s * k + kend) * NR];
-            let cmax = NR.min(m - s * NR);
-            for t in 0..rows.div_ceil(MR) {
-                let asl = &ap[t * kc * MR..(t + 1) * kc * MR];
-                let mut acc = [[0.0f32; NR]; MR];
-                tile_f32(asl, bs, &mut acc);
-                let rmax = MR.min(rows - t * MR);
-                for (i, arow) in acc.iter().enumerate().take(rmax) {
-                    let row = t * MR + i;
-                    let base = row * m + s * NR;
-                    for (d, &v) in
-                        c[base..base + cmax].iter_mut().zip(&arow[..cmax])
+    let strips_m = m.div_ceil(nr);
+    arena::with_f32(arena::LHS, |ap| {
+        let mut kbeg = 0usize;
+        while kbeg < k {
+            let kend = k.min(kbeg + KC_F32);
+            let kc = kend - kbeg;
+            pack_lhs_f32(lhs, a, n, k, r0, r1, kbeg, kend, mr, ap);
+            for s in 0..strips_m {
+                let bs = &pb[(s * k + kbeg) * nr..(s * k + kend) * nr];
+                let cmax = nr.min(m - s * nr);
+                for t in 0..rows.div_ceil(mr) {
+                    let asl = &ap[t * kc * mr..(t + 1) * kc * mr];
+                    let mut acc = [0.0f32; simd::F32_ACC];
+                    match tier {
+                        Tier::Scalar => tile_f32_scalar(asl, bs, &mut acc),
+                        _ => simd::tile_f32_wide(tier, asl, bs, kc, &mut acc),
+                    }
+                    let rmax = mr.min(rows - t * mr);
+                    for (i, arow) in
+                        acc.chunks_exact(nr).enumerate().take(rmax)
                     {
-                        *d += v;
+                        let row = t * mr + i;
+                        let base = row * m + s * nr;
+                        for (d, &v) in
+                            c[base..base + cmax].iter_mut().zip(&arow[..cmax])
+                        {
+                            *d += v;
+                        }
                     }
                 }
             }
+            kbeg = kend;
         }
-        kbeg = kend;
-    }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -415,17 +443,21 @@ fn gemm_int_i32(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize)
     if n == 0 || m == 0 || k == 0 {
         return out;
     }
-    let pb = pack_rhs_i8(b, k, m);
     let plan = dispatch::plan(n, k, m, Elem::I8);
-    run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
-        task_int(src, &pb, n, k, m, r0, r1, &mut |row_base, tile_c,
-                                                  vals: &[i32]| {
-            for (d, &v) in c[row_base + tile_c..row_base + tile_c + vals.len()]
-                .iter_mut()
-                .zip(vals)
-            {
-                *d += v;
-            }
+    arena::with_i8(arena::I_RHS, |pb| {
+        pack_rhs_i8(b, k, m, pb);
+        let pb: &[i8] = pb;
+        run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
+            task_int(plan.tier, src, pb, n, k, m, r0, r1,
+                     &mut |row_base, tile_c, vals: &[i32]| {
+                for (d, &v) in c
+                    [row_base + tile_c..row_base + tile_c + vals.len()]
+                    .iter_mut()
+                    .zip(vals)
+                {
+                    *d += v;
+                }
+            });
         });
     });
     out
@@ -450,17 +482,21 @@ fn gemm_int_deq(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize,
     if n == 0 || m == 0 || k == 0 {
         return out;
     }
-    let pb = pack_rhs_i8(b, k, m);
     let plan = dispatch::plan(n, k, m, Elem::I8);
-    run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
-        task_int(src, &pb, n, k, m, r0, r1, &mut |row_base, tile_c,
-                                                  vals: &[i32]| {
-            for (d, &v) in c[row_base + tile_c..row_base + tile_c + vals.len()]
-                .iter_mut()
-                .zip(vals)
-            {
-                *d += v as f32 * scale;
-            }
+    arena::with_i8(arena::I_RHS, |pb| {
+        pack_rhs_i8(b, k, m, pb);
+        let pb: &[i8] = pb;
+        run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
+            task_int(plan.tier, src, pb, n, k, m, r0, r1,
+                     &mut |row_base, tile_c, vals: &[i32]| {
+                for (d, &v) in c
+                    [row_base + tile_c..row_base + tile_c + vals.len()]
+                    .iter_mut()
+                    .zip(vals)
+                {
+                    *d += v as f32 * scale;
+                }
+            });
         });
     });
     out
@@ -483,9 +519,13 @@ fn debug_check_symmetric(src: IntLhs, b: &[i8]) {
             "i8 GEMM rhs must lie in [-127, 127]");
 }
 
-fn pack_rhs_i8(b: &[i8], k: usize, m: usize) -> Vec<i8> {
+/// Int rhs pack: NR-column strips, k-major — one layout for every tier
+/// (the SIMD int tile interleaves depth pairs at load time, so it reads
+/// the scalar layout as-is).
+fn pack_rhs_i8(b: &[i8], k: usize, m: usize, pb: &mut Vec<i8>) {
     let strips = m.div_ceil(NR);
-    let mut pb = vec![0i8; strips * k * NR];
+    pb.clear();
+    pb.resize(strips * k * NR, 0);
     for kk in 0..k {
         let row = &b[kk * m..(kk + 1) * m];
         for s in 0..strips {
@@ -495,7 +535,6 @@ fn pack_rhs_i8(b: &[i8], k: usize, m: usize) -> Vec<i8> {
             pb[base..base + w].copy_from_slice(&row[c0..c0 + w]);
         }
     }
-    pb
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -544,10 +583,11 @@ fn pack_lhs_int(src: IntLhs, n: usize, k: usize, r0: usize, r1: usize,
     }
 }
 
+/// Scalar int register tile (flat row-major MRxNR accumulator).
 #[inline]
-fn tile_i8(asl: &[i8], bs: &[i8], acc: &mut [[i32; NR]; MR]) {
+fn tile_i8_scalar(asl: &[i8], bs: &[i8], acc: &mut [i32]) {
     for (af, bf) in asl.chunks_exact(MR).zip(bs.chunks_exact(NR)) {
-        for (&av, arow) in af.iter().zip(acc.iter_mut()) {
+        for (&av, arow) in af.iter().zip(acc.chunks_exact_mut(NR)) {
             let av = av as i32;
             for (a, &bv) in arow.iter_mut().zip(bf) {
                 *a += av * bv as i32;
@@ -558,34 +598,42 @@ fn tile_i8(asl: &[i8], bs: &[i8], acc: &mut [[i32; NR]; MR]) {
 
 /// Shared int task: packs lhs panels, runs the tile loop, and hands
 /// each finished (row_base, col, values) tile to `store` — the i32 and
-/// fused-dequant epilogues differ only there.
+/// fused-dequant epilogues differ only there. The SIMD int tiles are
+/// exact i32 arithmetic over the same packed layout, so the result is
+/// bit-identical at every tier.
 #[allow(clippy::too_many_arguments)]
-fn task_int(src: IntLhs, pb: &[i8], n: usize, k: usize, m: usize, r0: usize,
-            r1: usize, store: &mut dyn FnMut(usize, usize, &[i32])) {
+fn task_int(tier: Tier, src: IntLhs, pb: &[i8], n: usize, k: usize, m: usize,
+            r0: usize, r1: usize, store: &mut dyn FnMut(usize, usize, &[i32])) {
     let rows = r1 - r0;
     let strips_m = m.div_ceil(NR);
-    let mut ap: Vec<i8> = Vec::new();
-    let mut kbeg = 0usize;
-    while kbeg < k {
-        let kend = k.min(kbeg + KC_I8);
-        let kc = kend - kbeg;
-        pack_lhs_int(src, n, k, r0, r1, kbeg, kend, &mut ap);
-        for s in 0..strips_m {
-            let bs = &pb[(s * k + kbeg) * NR..(s * k + kend) * NR];
-            let cmax = NR.min(m - s * NR);
-            for t in 0..rows.div_ceil(MR) {
-                let asl = &ap[t * kc * MR..(t + 1) * kc * MR];
-                let mut acc = [[0i32; NR]; MR];
-                tile_i8(asl, bs, &mut acc);
-                let rmax = MR.min(rows - t * MR);
-                for (i, arow) in acc.iter().enumerate().take(rmax) {
-                    let row = t * MR + i;
-                    store(row * m, s * NR, &arow[..cmax]);
+    arena::with_i8(arena::I_LHS, |ap| {
+        let mut kbeg = 0usize;
+        while kbeg < k {
+            let kend = k.min(kbeg + KC_I8);
+            let kc = kend - kbeg;
+            pack_lhs_int(src, n, k, r0, r1, kbeg, kend, ap);
+            for s in 0..strips_m {
+                let bs = &pb[(s * k + kbeg) * NR..(s * k + kend) * NR];
+                let cmax = NR.min(m - s * NR);
+                for t in 0..rows.div_ceil(MR) {
+                    let asl = &ap[t * kc * MR..(t + 1) * kc * MR];
+                    let mut acc = [0i32; simd::INT_ACC];
+                    match tier {
+                        Tier::Scalar => tile_i8_scalar(asl, bs, &mut acc),
+                        _ => simd::tile_i8_wide(tier, asl, bs, kc, &mut acc),
+                    }
+                    let rmax = MR.min(rows - t * MR);
+                    for (i, arow) in
+                        acc.chunks_exact(NR).enumerate().take(rmax)
+                    {
+                        let row = t * MR + i;
+                        store(row * m, s * NR, &arow[..cmax]);
+                    }
                 }
             }
+            kbeg = kend;
         }
-        kbeg = kend;
-    }
+    });
 }
 
 #[cfg(test)]
@@ -789,6 +837,33 @@ mod tests {
         let b = vec![0i8; k];
         let r = std::panic::catch_unwind(|| gemm_i8_nn(&a, &b, 1, k, 1));
         assert!(r.is_err(), "k beyond the i32 bound must panic");
+    }
+
+    #[test]
+    fn no_panel_allocation_after_warmup() {
+        // the arena contract from the SIMD/arena PR: once a shape has
+        // been seen, repeating it must not allocate any packing buffer.
+        // Thread budget pinned to 1 so every pack happens on this
+        // thread (grow_count is thread-local).
+        let _gate = pool::test_serial();
+        pool::set_num_threads(1);
+        let (n, k, m) = (48, 300, 33); // crosses one KC_F32 boundary
+        let a = randv(n * k, 500);
+        let b = randv(k * m, 501);
+        let qa = randq(n * k, 502, 127);
+        let qb = randq(k * m, 503, 127);
+        for _ in 0..2 {
+            std::hint::black_box(gemm_f32_nn(&a, &b, n, k, m));
+            std::hint::black_box(gemm_i8_nn(&qa, &qb, n, k, m));
+        }
+        let g0 = crate::kernels::arena::grow_count();
+        for _ in 0..4 {
+            std::hint::black_box(gemm_f32_nn(&a, &b, n, k, m));
+            std::hint::black_box(gemm_i8_nn(&qa, &qb, n, k, m));
+        }
+        assert_eq!(crate::kernels::arena::grow_count(), g0,
+                   "steady-state GEMMs must not grow the packing arenas");
+        pool::set_num_threads(0);
     }
 
     #[test]

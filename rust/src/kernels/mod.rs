@@ -7,26 +7,44 @@
 //! 2024). This module is that compute story for the CPU backend:
 //!
 //!   * `gemm` — cache-blocked f32 microkernels (NN/NT/TN, packed
-//!     panels, MRxNR register tiles), packed INT8->i32 and INT4-nibble
+//!     panels, register tiles), packed INT8->i32 and INT4-nibble
 //!     GEMMs for the HQ/HLA backward paths, fused dequant-scale output;
+//!   * `simd` — runtime-dispatched AVX2+FMA / NEON microkernels (wide
+//!     f32 register tiles, widening int inner products, vector FWHT
+//!     butterflies, vector amax/quantize), selected per shape by
+//!     `dispatch` with the scalar kernels as the portable fallback;
 //!   * `fused` — threaded block-FWHT-16 plus the fused FWHT+quantize
 //!     epilogue (amax folded into the transform pass);
+//!   * `arena` — thread-local grow-only packing/scratch buffers: no
+//!     GEMM panel or fused-epilogue scratch allocation after warmup;
 //!   * `pool` — std-only fork-join pool with a work-stealing task
 //!     cursor (`--threads N` / `set_num_threads`);
-//!   * `dispatch` — per-shape plan memoization (fan-out decisions);
+//!   * `dispatch` — `CpuCaps` probe + per-shape plan memoization (ISA
+//!     tier and fan-out; `HOT_SIMD=0` / `set_simd_enabled(false)`
+//!     force the scalar tier);
 //!   * `reference` — the original naive loop nests, kept solely as
 //!     property-test oracles.
 //!
-//! Everything is deterministic: for a given shape the result is
-//! bit-identical at any thread count, because tasks own disjoint output
-//! rows and in-row summation order never depends on scheduling.
+//! Everything is deterministic: for a given shape and tier the result
+//! is bit-identical at any thread count, because tasks own disjoint
+//! output rows and in-row summation order never depends on scheduling.
+//! The int GEMMs and every FWHT/quant epilogue are additionally
+//! bit-identical *across* tiers; the f32 GEMM differs in last-bit
+//! rounding only (FMA).
 
+pub mod arena;
 pub mod dispatch;
 pub mod fused;
 pub mod gemm;
 pub mod pool;
 pub mod reference;
+// crate-only: the tier wrappers rely on callers upholding the packed
+// layout contracts and on `Tier` values coming from the CpuCaps probe;
+// exposing them outside the crate would let safe code reach the
+// intrinsics with an unprobed tier or short panels
+pub(crate) mod simd;
 
+pub use dispatch::{active_tier, set_simd_enabled, simd_enabled, Tier};
 pub use fused::{fwht_cols, fwht_cols_amax, fwht_quant_cols,
                 fwht_quant_rows, fwht_rows, fwht_rows_amax,
                 quant_pack_rows};

@@ -20,6 +20,12 @@
 //! grows on demand. Nested or concurrent `parallel_for` calls fall back
 //! to inline execution (the submit lock is `try_lock`ed), which keeps
 //! the pool deadlock-free by construction.
+//!
+//! Workers are long-lived, which is what makes the thread-local packing
+//! arenas in `kernels::arena` effective: each worker's panel buffers
+//! warm up once per shape and are reused for the life of the process
+//! (they are never handed across threads — a task packs into its own
+//! thread's arena only).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};

@@ -1,0 +1,315 @@
+//! AVX2+FMA microkernels (x86_64).
+//!
+//! Every function here is `unsafe` with `#[target_feature]` and is only
+//! ever reached through the safe dispatch wrappers in `kernels::simd`,
+//! which in turn only select `Tier::Avx2` after the one-time `CpuCaps`
+//! probe proved both AVX2 and FMA present. Slices are indexed with
+//! `get_unchecked` only where the caller-checked layout contracts
+//! (documented per function) guarantee bounds.
+//!
+//! Numerics contracts, pinned by the property tests in `kernels::simd`:
+//!
+//!   * f32 GEMM: FMA fuses the multiply-add rounding, so results differ
+//!     from the scalar tier in the last bits (within the 1e-4 oracle
+//!     tolerance); per-element accumulation order is unchanged (k-major,
+//!     one accumulator per output lane), so results stay bit-identical
+//!     across thread counts at this tier.
+//!   * i8/i4 GEMM: `pmaddwd` on sign-extended i16 operands is exact
+//!     integer arithmetic; bit-identical to the scalar tier (the
+//!     `MAX_K_*` accumulator contracts in `kernels::gemm` keep every
+//!     i32 partial sum in range).
+//!   * FWHT / amax / quantize: identical add/sub/mul/max/compare
+//!     operations on the same values in an order that IEEE-754 makes
+//!     associativity-free, so bit-identical to the scalar tier — the
+//!     pseudo-stochastic quantizer keys off result mantissas and must
+//!     see the same bits no matter which tier produced them.
+
+#![allow(clippy::missing_safety_doc)] // safety contracts live on the module
+
+use core::arch::x86_64::*;
+
+use crate::quant;
+
+/// f32 microkernel rows at this tier.
+pub const MR_F32: usize = 6;
+/// f32 microkernel columns (two 8-lane vectors).
+pub const NR_F32: usize = 16;
+
+/// 6x16 f32 register tile: `acc[i*16 + j] = sum_k asl[k*6+i] * bs[k*16+j]`.
+///
+/// Layout contract: `asl.len() == kc * 6`, `bs.len() == kc * 16`,
+/// `acc.len() >= 96`. 12 accumulator registers + 2 rhs lanes + 1
+/// broadcast stay inside the 16 ymm registers.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn tile_f32_6x16(asl: &[f32], bs: &[f32], kc: usize,
+                            acc: &mut [f32]) {
+    debug_assert_eq!(asl.len(), kc * MR_F32);
+    debug_assert_eq!(bs.len(), kc * NR_F32);
+    debug_assert!(acc.len() >= MR_F32 * NR_F32);
+    let mut c = [_mm256_setzero_ps(); 12];
+    let ap = asl.as_ptr();
+    let bp = bs.as_ptr();
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_ps(bp.add(kk * 16));
+        let b1 = _mm256_loadu_ps(bp.add(kk * 16 + 8));
+        // unrolled over the 6 rows; LLVM keeps all 12 accumulators live
+        let mut i = 0;
+        while i < 6 {
+            let a = _mm256_broadcast_ss(&*ap.add(kk * 6 + i));
+            c[2 * i] = _mm256_fmadd_ps(a, b0, c[2 * i]);
+            c[2 * i + 1] = _mm256_fmadd_ps(a, b1, c[2 * i + 1]);
+            i += 1;
+        }
+    }
+    let out = acc.as_mut_ptr();
+    for (i, v) in c.iter().enumerate() {
+        _mm256_storeu_ps(out.add(i * 8), *v);
+    }
+}
+
+/// 4x8 i8 -> i32 register tile over the scalar tier's packed layout:
+/// `acc[i*8 + j] += sum_k asl[k*4+i] * bs[k*8+j]`, exact i32.
+///
+/// Depth pairs (k, k+1) are interleaved with `unpacklo` and contracted
+/// with `pmaddwd` on sign-extended i16 lanes — products are bounded by
+/// 127^2 (or 8*127 for expanded INT4 panels), so the pairwise i16
+/// multiply never saturates and the i32 adds never wrap under the
+/// `MAX_K_*` contracts.
+///
+/// Layout contract: `asl.len() == kc * 4`, `bs.len() == kc * 8`,
+/// `acc.len() >= 32`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_i8_4x8(asl: &[i8], bs: &[i8], kc: usize,
+                          acc: &mut [i32]) {
+    debug_assert_eq!(asl.len(), kc * 4);
+    debug_assert_eq!(bs.len(), kc * 8);
+    debug_assert!(acc.len() >= 32);
+    let mut c = [_mm256_setzero_si256(); 4];
+    let ap = asl.as_ptr();
+    let bp = bs.as_ptr();
+    let mut kk = 0;
+    while kk < kc {
+        let pair = kk + 1 < kc;
+        let b0 = _mm_loadl_epi64(bp.add(kk * 8) as *const __m128i);
+        let b1 = if pair {
+            _mm_loadl_epi64(bp.add((kk + 1) * 8) as *const __m128i)
+        } else {
+            _mm_setzero_si128()
+        };
+        // [b(k,0), b(k+1,0), ..., b(k,7), b(k+1,7)] sign-extended to i16
+        let bw = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(b0, b1));
+        let mut i = 0;
+        while i < 4 {
+            let a0 = *ap.add(kk * 4 + i) as i16 as u16 as u32;
+            let a1 = if pair {
+                *ap.add((kk + 1) * 4 + i) as i16 as u16 as u32
+            } else {
+                0
+            };
+            let av = _mm256_set1_epi32(((a1 << 16) | a0) as i32);
+            c[i] = _mm256_add_epi32(c[i], _mm256_madd_epi16(bw, av));
+            i += 1;
+        }
+        kk += 2;
+    }
+    let out = acc.as_mut_ptr();
+    for (i, v) in c.iter().enumerate() {
+        _mm256_storeu_si256(out.add(i * 8) as *mut __m256i, *v);
+    }
+}
+
+/// One FWHT-16 butterfly network over both halves of a tile, stages
+/// 1/2/4 inside each 8-lane vector. Sign masks flip the subtrahend
+/// lane, and IEEE addition of a negated operand is bit-identical to
+/// subtraction, so the result matches `fwht_inplace` exactly.
+#[target_feature(enable = "avx2")]
+unsafe fn fwht8_inner(v: __m256, s1: __m256, s2: __m256, s4: __m256)
+                      -> __m256 {
+    // stage 1: lanes [1,0,3,2,...]
+    let sw = _mm256_permute_ps::<0b10_11_00_01>(v);
+    let v = _mm256_add_ps(sw, _mm256_xor_ps(v, s1));
+    // stage 2: lanes [2,3,0,1,...]
+    let sw = _mm256_permute_ps::<0b01_00_11_10>(v);
+    let v = _mm256_add_ps(sw, _mm256_xor_ps(v, s2));
+    // stage 4: swap 128-bit halves
+    let sw = _mm256_permute2f128_ps::<0x01>(v, v);
+    _mm256_add_ps(sw, _mm256_xor_ps(v, s4))
+}
+
+/// Block-FWHT every 16-tile of `x` in place (`x.len() % 16 == 0`),
+/// optionally folding in max|x| of the transformed values. Bit-exact
+/// vs tile-by-tile `fwht_inplace` + a scalar amax fold.
+#[target_feature(enable = "avx2")]
+pub unsafe fn fwht_tiles(x: &mut [f32], want_amax: bool) -> f32 {
+    debug_assert_eq!(x.len() % 16, 0);
+    let s1 = _mm256_setr_ps(0.0, -0.0, 0.0, -0.0, 0.0, -0.0, 0.0, -0.0);
+    let s2 = _mm256_setr_ps(0.0, 0.0, -0.0, -0.0, 0.0, 0.0, -0.0, -0.0);
+    let s4 = _mm256_setr_ps(0.0, 0.0, 0.0, 0.0, -0.0, -0.0, -0.0, -0.0);
+    let norm = _mm256_set1_ps(crate::hadamard::fwht::NORM);
+    let absm = _mm256_set1_ps(-0.0);
+    let mut am = _mm256_setzero_ps();
+    let p = x.as_mut_ptr();
+    let mut at = 0;
+    while at < x.len() {
+        let v0 = fwht8_inner(_mm256_loadu_ps(p.add(at)), s1, s2, s4);
+        let v1 = fwht8_inner(_mm256_loadu_ps(p.add(at + 8)), s1, s2, s4);
+        // stage 8 across the two halves, then the 1/sqrt(16) norm
+        let t0 = _mm256_mul_ps(_mm256_add_ps(v0, v1), norm);
+        let t1 = _mm256_mul_ps(_mm256_sub_ps(v0, v1), norm);
+        if want_amax {
+            // operand order matters: maxps returns the SECOND operand
+            // on a NaN compare, so keeping `am` second ignores NaN
+            // values exactly like the scalar `f32::max` fold
+            am = _mm256_max_ps(_mm256_andnot_ps(absm, t0), am);
+            am = _mm256_max_ps(_mm256_andnot_ps(absm, t1), am);
+        }
+        _mm256_storeu_ps(p.add(at), t0);
+        _mm256_storeu_ps(p.add(at + 8), t1);
+        at += 16;
+    }
+    if want_amax { hmax(am) } else { 0.0 }
+}
+
+/// In-place paired butterfly over two equal-length rows:
+/// `(a, b) <- (a + b, a - b)` elementwise. Bit-exact vs the scalar loop.
+#[target_feature(enable = "avx2")]
+pub unsafe fn butterfly_rows(a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let pa = a.as_mut_ptr();
+    let pb = b.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm256_loadu_ps(pa.add(i));
+        let vb = _mm256_loadu_ps(pb.add(i));
+        _mm256_storeu_ps(pa.add(i), _mm256_add_ps(va, vb));
+        _mm256_storeu_ps(pb.add(i), _mm256_sub_ps(va, vb));
+        i += 8;
+    }
+    while i < n {
+        let (va, vb) = (*pa.add(i), *pb.add(i));
+        *pa.add(i) = va + vb;
+        *pb.add(i) = va - vb;
+        i += 1;
+    }
+}
+
+/// `x *= s` elementwise, optionally returning max|x| of the scaled
+/// values. Bit-exact vs the scalar loop (mul and max are exact ops).
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale_amax(x: &mut [f32], s: f32, want_amax: bool) -> f32 {
+    let vs = _mm256_set1_ps(s);
+    let absm = _mm256_set1_ps(-0.0);
+    let mut am = _mm256_setzero_ps();
+    let n = x.len();
+    let p = x.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), vs);
+        if want_amax {
+            // `am` second: NaN lanes fall back to the accumulator,
+            // mirroring the NaN-ignoring scalar `f32::max` fold
+            am = _mm256_max_ps(_mm256_andnot_ps(absm, v), am);
+        }
+        _mm256_storeu_ps(p.add(i), v);
+        i += 8;
+    }
+    let mut tail = 0.0f32;
+    while i < n {
+        let v = *p.add(i) * s;
+        *p.add(i) = v;
+        if want_amax {
+            tail = tail.max(v.abs());
+        }
+        i += 1;
+    }
+    if want_amax { hmax(am).max(tail) } else { 0.0 }
+}
+
+/// max|x| over a slice (0.0 for empty). Bit-exact vs the scalar fold.
+#[target_feature(enable = "avx2")]
+pub unsafe fn amax(x: &[f32]) -> f32 {
+    let absm = _mm256_set1_ps(-0.0);
+    let mut am = _mm256_setzero_ps();
+    let n = x.len();
+    let p = x.as_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(p.add(i));
+        // `am` second: NaN lanes fall back to the accumulator,
+        // mirroring the NaN-ignoring scalar `f32::max` fold
+        am = _mm256_max_ps(_mm256_andnot_ps(absm, v), am);
+        i += 8;
+    }
+    let mut m = hmax(am);
+    while i < n {
+        m = m.max((*p.add(i)).abs());
+        i += 1;
+    }
+    m
+}
+
+/// Pseudo-stochastic quantize a slice at one scale — bit-exact mirror
+/// of `quant::quantize_ps_one` per element (same div/floor/compare on
+/// the same bits; the pseudo-random source is the input's low mantissa
+/// bits, which the integer lane ops read exactly like the scalar code).
+#[target_feature(enable = "avx2")]
+pub unsafe fn quantize_ps(xs: &[f32], scale: f32, bits: u8,
+                          out: &mut [i8]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let qmax = quant::qmax(bits) as f32;
+    let vs = _mm256_set1_ps(scale);
+    let vmax = _mm256_set1_ps(qmax);
+    let vmin = _mm256_set1_ps(-qmax);
+    let m11 = _mm256_set1_epi32(0x7FF);
+    let v2048 = _mm256_set1_ps(2048.0);
+    let one = _mm256_set1_ps(1.0);
+    let lane_fix = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+    let n = xs.len();
+    let src = xs.as_ptr();
+    let dst = out.as_mut_ptr();
+    let mut i = 0;
+    while i + 32 <= n {
+        let mut q = [_mm256_setzero_si256(); 4];
+        for (j, qv) in q.iter_mut().enumerate() {
+            let x = _mm256_loadu_ps(src.add(i + 8 * j));
+            let v = _mm256_div_ps(x, vs);
+            let f = _mm256_floor_ps(v);
+            let u = _mm256_div_ps(
+                _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_castps_si256(x),
+                                                    m11)),
+                v2048);
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(_mm256_sub_ps(v, f), u);
+            let r = _mm256_add_ps(f, _mm256_and_ps(gt, one));
+            let r = _mm256_min_ps(_mm256_max_ps(r, vmin), vmax);
+            // scalar parity on NaN quotients: Rust's clamp keeps NaN
+            // and `NaN as i8` saturates to 0, while min/max here would
+            // collapse NaN to -qmax — zero those lanes explicitly
+            let ordered = _mm256_cmp_ps::<_CMP_ORD_Q>(v, v);
+            *qv = _mm256_cvttps_epi32(_mm256_and_ps(r, ordered));
+        }
+        // i32x8 x4 -> i8x32; packs never saturates (|q| <= 127), and
+        // the permute undoes the 128-bit lane interleave
+        let p01 = _mm256_packs_epi32(q[0], q[1]);
+        let p23 = _mm256_packs_epi32(q[2], q[3]);
+        let pb = _mm256_packs_epi16(p01, p23);
+        let pb = _mm256_permutevar8x32_epi32(pb, lane_fix);
+        _mm256_storeu_si256(dst.add(i) as *mut __m256i, pb);
+        i += 32;
+    }
+    while i < n {
+        *dst.add(i) = quant::quantize_ps_one(*src.add(i), scale, bits);
+        i += 1;
+    }
+}
+
+/// Horizontal max of 8 lanes.
+#[target_feature(enable = "avx2")]
+unsafe fn hmax(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let m = _mm_max_ps(lo, hi);
+    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+    let m = _mm_max_ss(m, _mm_shuffle_ps::<0b01>(m, m));
+    _mm_cvtss_f32(m)
+}

@@ -1,0 +1,408 @@
+//! Runtime-dispatched SIMD execution tier.
+//!
+//! `kernels::dispatch` probes the CPU once (`CpuCaps`) and hands every
+//! kernel a `Tier`; this module turns that tier into concrete
+//! microkernels. The unsafe intrinsic code lives in the per-ISA
+//! submodules (`avx2` on x86_64, `neon` on aarch64) and is reachable
+//! *only* through the dispatch wrappers here. The whole module is
+//! `pub(crate)`: soundness rests on (a) SIMD `Tier` values flowing
+//! from the successful `CpuCaps` probe (so the ISA is present) and
+//! (b) the in-crate callers upholding the packed-layout length
+//! contracts documented per wrapper — neither of which an external
+//! caller could be trusted with.
+//!
+//! Per-tier register tiles:
+//!
+//! | kernel    | scalar | AVX2+FMA            | NEON                 |
+//! |-----------|--------|---------------------|----------------------|
+//! | f32 GEMM  | 4x8    | 6x16 (FMA)          | 6x16 (`vfmaq`)       |
+//! | int GEMM  | 4x8    | 4x8 (`pmaddwd`)     | 4x8 (`vmlal_s16`)    |
+//! | FWHT-16   | loops  | 2x8-lane butterfly  | 4x4-lane butterfly   |
+//! | quant/amax| loops  | 8/32-lane           | 4/8-lane             |
+//!
+//! The INT4-nibble GEMM shares the int microkernel: its packed operand
+//! expands into the same i8 panel layout, so the widening inner product
+//! serves both families. Everything except the f32 GEMM (whose FMA
+//! changes last-bit rounding) is bit-exact across tiers; the fused
+//! FWHT+quant epilogues in particular MUST be — the pseudo-stochastic
+//! quantizer keys off result mantissas, and `hadamard::fwht` promises
+//! one transform semantics regardless of tier.
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use crate::kernels::dispatch::Tier;
+use crate::kernels::gemm::{MR, NR};
+use crate::quant;
+
+/// Accumulator capacity covering every tier's f32 tile (6x16).
+pub const F32_ACC: usize = 96;
+/// Accumulator capacity covering every tier's int tile (4x8).
+pub const INT_ACC: usize = 32;
+
+/// (MR, NR) of the f32 microkernel at `tier`.
+pub fn f32_tile(tier: Tier) -> (usize, usize) {
+    match tier {
+        Tier::Scalar => (MR, NR),
+        Tier::Avx2 | Tier::Neon => (6, 16),
+    }
+}
+
+/// Run the wide f32 register tile for a SIMD `tier`.
+/// Layout contract: `asl` is a kc-deep MR-major panel, `bs` a kc-deep
+/// NR-major strip for `f32_tile(tier)`, `acc` holds at least MRxNR.
+#[cfg_attr(not(any(target_arch = "x86_64", target_arch = "aarch64")),
+           allow(unused_variables))]
+pub fn tile_f32_wide(tier: Tier, asl: &[f32], bs: &[f32], kc: usize,
+                     acc: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Tier::Avx2 exists only after the CpuCaps probe
+        // detected avx2+fma on this machine
+        Tier::Avx2 => unsafe { avx2::tile_f32_6x16(asl, bs, kc, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64
+        Tier::Neon => unsafe { neon::tile_f32_6x16(asl, bs, kc, acc) },
+        _ => unreachable!("scalar tier has no wide f32 microkernel"),
+    }
+}
+
+/// Run the int register tile for a SIMD `tier` (exact i32; bit-equal to
+/// the scalar tile). Same layout contract as the scalar 4x8 tile.
+#[cfg_attr(not(any(target_arch = "x86_64", target_arch = "aarch64")),
+           allow(unused_variables))]
+pub fn tile_i8_wide(tier: Tier, asl: &[i8], bs: &[i8], kc: usize,
+                    acc: &mut [i32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: gated on the CpuCaps avx2 probe (see tile_f32_wide)
+        Tier::Avx2 => unsafe { avx2::tile_i8_4x8(asl, bs, kc, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64
+        Tier::Neon => unsafe { neon::tile_i8_4x8(asl, bs, kc, acc) },
+        _ => unreachable!("scalar tier has its own int tile"),
+    }
+}
+
+/// Block-FWHT every 16-tile of `x` in place (`x.len() % 16 == 0`),
+/// optionally folding in max|x| of the transformed tensor. Bit-exact
+/// across tiers.
+pub fn fwht_tiles(tier: Tier, x: &mut [f32], want_amax: bool) -> f32 {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: gated on the CpuCaps avx2 probe
+        Tier::Avx2 => unsafe { avx2::fwht_tiles(x, want_amax) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64
+        Tier::Neon => unsafe { neon::fwht_tiles(x, want_amax) },
+        _ => fwht_tiles_scalar(x, want_amax),
+    }
+}
+
+/// `(a, b) <- (a + b, a - b)` elementwise (the column-FWHT butterfly
+/// over two gathered rows). Bit-exact across tiers.
+pub fn butterfly_rows(tier: Tier, a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: gated on the CpuCaps avx2 probe
+        Tier::Avx2 => unsafe { avx2::butterfly_rows(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64
+        Tier::Neon => unsafe { neon::butterfly_rows(a, b) },
+        _ => {
+            for (av, bv) in a.iter_mut().zip(b.iter_mut()) {
+                let (x, y) = (*av, *bv);
+                *av = x + y;
+                *bv = x - y;
+            }
+        }
+    }
+}
+
+/// `x *= s` elementwise, optionally returning max|x| of the scaled
+/// values. Bit-exact across tiers.
+pub fn scale_amax(tier: Tier, x: &mut [f32], s: f32, want_amax: bool)
+                  -> f32 {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: gated on the CpuCaps avx2 probe
+        Tier::Avx2 => unsafe { avx2::scale_amax(x, s, want_amax) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64
+        Tier::Neon => unsafe { neon::scale_amax(x, s, want_amax) },
+        _ => {
+            let mut am = 0.0f32;
+            for v in x.iter_mut() {
+                *v *= s;
+                if want_amax {
+                    am = am.max(v.abs());
+                }
+            }
+            am
+        }
+    }
+}
+
+/// max|x| over a slice (0.0 for empty). Bit-exact across tiers,
+/// including NaN inputs: every tier's fold ignores NaN exactly like
+/// the scalar `f32::max` (AVX2 keeps the accumulator as the maxps
+/// fallback operand; NEON uses `vmaxnmq`).
+pub fn amax(tier: Tier, x: &[f32]) -> f32 {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: gated on the CpuCaps avx2 probe
+        Tier::Avx2 => unsafe { avx2::amax(x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64
+        Tier::Neon => unsafe { neon::amax(x) },
+        _ => x.iter().fold(0.0f32, |m, v| m.max(v.abs())),
+    }
+}
+
+/// Pseudo-stochastic quantize `xs` at one `scale` into `out`
+/// (`out.len() == xs.len()`). Bit-exact mirror of
+/// `quant::quantize_ps_one` per element at every tier.
+pub fn quantize_ps_into(tier: Tier, xs: &[f32], scale: f32, bits: u8,
+                        out: &mut [i8]) {
+    debug_assert_eq!(xs.len(), out.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: gated on the CpuCaps avx2 probe
+        Tier::Avx2 => unsafe { avx2::quantize_ps(xs, scale, bits, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64
+        Tier::Neon => unsafe { neon::quantize_ps(xs, scale, bits, out) },
+        _ => {
+            for (o, &x) in out.iter_mut().zip(xs) {
+                *o = quant::quantize_ps_one(x, scale, bits);
+            }
+        }
+    }
+}
+
+/// Portable tile transform (the pre-SIMD `rows_worker` body).
+fn fwht_tiles_scalar(x: &mut [f32], want_amax: bool) -> f32 {
+    use crate::hadamard::fwht::{fwht_inplace, BLOCK};
+    let mut tile = [0.0f32; BLOCK];
+    let mut am = 0.0f32;
+    for t in x.chunks_exact_mut(BLOCK) {
+        tile.copy_from_slice(t);
+        fwht_inplace(&mut tile);
+        if want_amax {
+            for &v in &tile {
+                am = am.max(v.abs());
+            }
+        }
+        t.copy_from_slice(&tile);
+    }
+    am
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dispatch::{self, active_tier, set_simd_enabled};
+    use crate::kernels::{gemm_f32_nn, gemm_f32_nt, gemm_f32_tn,
+                         gemm_i4_nn_deq, gemm_i8_nn, gemm_i8_tn, pool,
+                         reference};
+    use crate::util::prng::Pcg32;
+    use crate::util::proptest::rel_err;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    fn randq(n: usize, seed: u64, lim: u32) -> Vec<i8> {
+        let mut r = Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| (r.below(2 * lim + 1) as i32 - lim as i32) as i8)
+            .collect()
+    }
+
+    // knob-ignoring tier for the direct-parity tests: deterministic
+    // SIMD coverage even while a concurrent test has the knob off
+    use crate::kernels::dispatch::probed_tier;
+
+    /// Odd/prime-heavy shapes exercising every tile-edge case of the
+    /// wide microkernels (partial MR, partial NR, tiny k, deep k).
+    const SHAPES: [(usize, usize, usize); 8] = [
+        (1, 1, 1),
+        (5, 3, 17),
+        (6, 16, 16),
+        (7, 19, 23),
+        (13, 257, 31),
+        (61, 67, 71),
+        (97, 16, 101),
+        (128, 128, 128),
+    ];
+
+    #[test]
+    fn simd_and_scalar_f32_gemm_both_match_oracle() {
+        let _gate = pool::test_serial();
+        for (idx, &(n, k, m)) in SHAPES.iter().enumerate() {
+            let seed = 9000 + idx as u64;
+            let a = randv(n * k, seed);
+            let b = randv(k * m, seed + 1);
+            let w = randv(m * k, seed + 2);
+            let at = crate::kernels::transpose(&a, n, k);
+            let want_nn = reference::matmul(&a, &b, n, k, m);
+            let want_nt = reference::matmul_nt(&a, &w, n, k, m);
+            let want_tn = reference::matmul_tn(&at, &b, k, n, m);
+            for simd in [true, false] {
+                set_simd_enabled(simd);
+                let tag = if simd { "simd" } else { "scalar" };
+                let e = rel_err(&gemm_f32_nn(&a, &b, n, k, m), &want_nn);
+                assert!(e < 1e-4, "{tag} nn {n}x{k}x{m}: {e}");
+                let e = rel_err(&gemm_f32_nt(&a, &w, n, k, m), &want_nt);
+                assert!(e < 1e-4, "{tag} nt {n}x{k}x{m}: {e}");
+                let e = rel_err(&gemm_f32_tn(&at, &b, k, n, m), &want_tn);
+                assert!(e < 1e-4, "{tag} tn {n}x{k}x{m}: {e}");
+            }
+            set_simd_enabled(true);
+        }
+    }
+
+    #[test]
+    fn simd_int_gemms_bit_exact_vs_scalar_and_oracle() {
+        let _gate = pool::test_serial();
+        for (idx, &(n, k, m)) in SHAPES.iter().enumerate() {
+            let seed = 9500 + idx as u64;
+            let a = randq(n * k, seed, 127);
+            let b = randq(k * m, seed + 1, 127);
+            let at = randq(k * n, seed + 2, 127);
+            let want_nn = reference::matmul_i8_nn(&a, &b, n, k, m);
+            let want_tn = reference::matmul_i8_tn(&at, &b, k, n, m);
+            set_simd_enabled(true);
+            let simd_nn = gemm_i8_nn(&a, &b, n, k, m);
+            let simd_tn = gemm_i8_tn(&at, &b, k, n, m);
+            set_simd_enabled(false);
+            assert_eq!(simd_nn, gemm_i8_nn(&a, &b, n, k, m),
+                       "nn tiers disagree {n}x{k}x{m}");
+            assert_eq!(simd_tn, gemm_i8_tn(&at, &b, k, n, m),
+                       "tn tiers disagree {n}x{k}x{m}");
+            set_simd_enabled(true);
+            assert_eq!(simd_nn, want_nn, "nn {n}x{k}x{m}");
+            assert_eq!(simd_tn, want_tn, "tn {n}x{k}x{m}");
+        }
+    }
+
+    #[test]
+    fn simd_int4_nibble_gemm_bit_exact_across_tiers() {
+        let _gate = pool::test_serial();
+        for &(n, k, m) in &[(3usize, 16usize, 5usize), (9, 46, 11),
+                            (33, 128, 37)] {
+            let q = randq(n * k, 77 + n as u64, 7);
+            let b = randq(k * m, 78 + m as u64, 7);
+            let packed = crate::quant::pack_int4(&q);
+            let want: Vec<f32> = reference::matmul_i8_nn(&q, &b, n, k, m)
+                .iter()
+                .map(|&v| v as f32 * 0.25)
+                .collect();
+            for simd in [true, false] {
+                set_simd_enabled(simd);
+                assert_eq!(gemm_i4_nn_deq(&packed, &b, n, k, m, 0.25), want,
+                           "simd={simd} {n}x{k}x{m}");
+            }
+            set_simd_enabled(true);
+        }
+    }
+
+    #[test]
+    fn quantizer_bit_exact_vs_scalar_reference() {
+        // cover: negatives, zeros, grid points, clamp range, NaN/inf
+        // degenerates (diverged-training inputs), odd tails
+        let mut xs = randv(1037, 321);
+        xs.extend_from_slice(&[0.0, -0.0, 1.0, -1.0, 1e6, -1e6, 0.5f32,
+                               127.0 * 0.037, -127.0 * 0.037,
+                               f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+        for bits in [4u8, 8] {
+            let scale = 0.037f32;
+            let want = crate::quant::quantize_ps(&xs, scale, bits);
+            let mut got = vec![0i8; xs.len()];
+            quantize_ps_into(probed_tier(), &xs, scale, bits, &mut got);
+            assert_eq!(got, want, "bits={bits} tier={:?}", probed_tier());
+            // tiny scale drives huge quotients through the clamp
+            let mut got = vec![0i8; xs.len()];
+            quantize_ps_into(probed_tier(), &xs, 1e-6, bits, &mut got);
+            assert_eq!(got, crate::quant::quantize_ps(&xs, 1e-6, bits),
+                       "clamped bits={bits}");
+        }
+    }
+
+    #[test]
+    fn fwht_tiles_bit_exact_across_tiers() {
+        for tiles in [1usize, 3, 7, 32] {
+            let orig = randv(tiles * 16, 55 + tiles as u64);
+            let mut scalar = orig.clone();
+            let am_s = fwht_tiles(Tier::Scalar, &mut scalar, true);
+            let mut active = orig.clone();
+            let am_a = fwht_tiles(probed_tier(), &mut active, true);
+            assert_eq!(scalar, active, "{tiles} tiles");
+            assert_eq!(am_s.to_bits(), am_a.to_bits(), "{tiles} tiles amax");
+        }
+    }
+
+    #[test]
+    fn helper_ops_bit_exact_across_tiers() {
+        let tier = probed_tier();
+        let a0 = randv(37, 81);
+        let b0 = randv(37, 82);
+        let (mut a1, mut b1) = (a0.clone(), b0.clone());
+        butterfly_rows(Tier::Scalar, &mut a1, &mut b1);
+        let (mut a2, mut b2) = (a0, b0);
+        butterfly_rows(tier, &mut a2, &mut b2);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+
+        let mut x1 = randv(43, 83);
+        let mut x2 = x1.clone();
+        let m1 = scale_amax(Tier::Scalar, &mut x1, 0.25, true);
+        let m2 = scale_amax(tier, &mut x2, 0.25, true);
+        assert_eq!(x1, x2);
+        assert_eq!(m1.to_bits(), m2.to_bits());
+
+        let xs = randv(51, 84);
+        assert_eq!(amax(Tier::Scalar, &xs).to_bits(),
+                   amax(tier, &xs).to_bits());
+        assert_eq!(amax(tier, &[]), 0.0);
+
+        // NaN parity: the fold must ignore NaN like scalar f32::max —
+        // in particular a NaN must not wipe out an earlier lane max
+        let mut ys = randv(40, 85);
+        ys[3] = 100.0;
+        ys[11] = f32::NAN;
+        ys[12] = f32::NAN;
+        assert_eq!(amax(Tier::Scalar, &ys).to_bits(),
+                   amax(tier, &ys).to_bits());
+        assert_eq!(amax(tier, &ys), 100.0);
+        let mut y1 = ys.clone();
+        let mut y2 = ys.clone();
+        let m1 = scale_amax(Tier::Scalar, &mut y1, 0.5, true);
+        let m2 = scale_amax(tier, &mut y2, 0.5, true);
+        assert_eq!(m1.to_bits(), m2.to_bits());
+    }
+
+    #[test]
+    fn dispatch_knob_and_env_force_the_scalar_fallback() {
+        let _gate = pool::test_serial();
+        // the runtime knob always forces scalar plans...
+        set_simd_enabled(false);
+        assert_eq!(active_tier(), Tier::Scalar);
+        let (n, k, m) = (37, 41, 43);
+        let a = randv(n * k, 91);
+        let b = randv(k * m, 92);
+        let got = gemm_f32_nn(&a, &b, n, k, m);
+        let e = rel_err(&got, &reference::matmul(&a, &b, n, k, m));
+        assert!(e < 1e-4, "scalar fallback disagrees with oracle: {e}");
+        set_simd_enabled(true);
+        // ...and under HOT_SIMD=0 (the CI scalar leg) the env probe
+        // pins the whole process to scalar regardless of the knob
+        if dispatch::caps().env_off {
+            assert_eq!(active_tier(), Tier::Scalar);
+        }
+    }
+}

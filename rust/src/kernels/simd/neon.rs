@@ -1,0 +1,267 @@
+//! NEON microkernels (aarch64). Structural mirror of `simd::avx2` —
+//! same tile shapes, same layout contracts, same numerics contracts
+//! (f32 GEMM within the oracle tolerance via `vfmaq`, everything else
+//! bit-exact vs the scalar tier). NEON is architecturally mandatory on
+//! aarch64, so the only gate these kernels need is the tier selection
+//! in `kernels::dispatch`.
+
+#![allow(clippy::missing_safety_doc)] // safety contracts live on the module
+
+use core::arch::aarch64::*;
+
+use crate::quant;
+
+/// f32 microkernel rows at this tier.
+pub const MR_F32: usize = 6;
+/// f32 microkernel columns (four 4-lane vectors).
+pub const NR_F32: usize = 16;
+
+/// 6x16 f32 register tile: `acc[i*16 + j] = sum_k asl[k*6+i] * bs[k*16+j]`.
+/// Layout contract: `asl.len() == kc * 6`, `bs.len() == kc * 16`,
+/// `acc.len() >= 96`. 24 accumulators + 4 rhs lanes + 1 broadcast fit
+/// the 32 NEON registers.
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_f32_6x16(asl: &[f32], bs: &[f32], kc: usize,
+                            acc: &mut [f32]) {
+    debug_assert_eq!(asl.len(), kc * MR_F32);
+    debug_assert_eq!(bs.len(), kc * NR_F32);
+    debug_assert!(acc.len() >= MR_F32 * NR_F32);
+    let mut c = [vdupq_n_f32(0.0); 24];
+    let ap = asl.as_ptr();
+    let bp = bs.as_ptr();
+    for kk in 0..kc {
+        let b0 = vld1q_f32(bp.add(kk * 16));
+        let b1 = vld1q_f32(bp.add(kk * 16 + 4));
+        let b2 = vld1q_f32(bp.add(kk * 16 + 8));
+        let b3 = vld1q_f32(bp.add(kk * 16 + 12));
+        let mut i = 0;
+        while i < 6 {
+            let a = vdupq_n_f32(*ap.add(kk * 6 + i));
+            c[4 * i] = vfmaq_f32(c[4 * i], a, b0);
+            c[4 * i + 1] = vfmaq_f32(c[4 * i + 1], a, b1);
+            c[4 * i + 2] = vfmaq_f32(c[4 * i + 2], a, b2);
+            c[4 * i + 3] = vfmaq_f32(c[4 * i + 3], a, b3);
+            i += 1;
+        }
+    }
+    let out = acc.as_mut_ptr();
+    for (i, v) in c.iter().enumerate() {
+        vst1q_f32(out.add(i * 4), *v);
+    }
+}
+
+/// 4x8 i8 -> i32 register tile over the scalar tier's packed layout:
+/// `acc[i*8 + j] += sum_k asl[k*4+i] * bs[k*8+j]`, exact i32 via
+/// `smull`-family widening MACs (`vmlal_s16`).
+/// Layout contract: `asl.len() == kc * 4`, `bs.len() == kc * 8`,
+/// `acc.len() >= 32`.
+#[target_feature(enable = "neon")]
+pub unsafe fn tile_i8_4x8(asl: &[i8], bs: &[i8], kc: usize,
+                          acc: &mut [i32]) {
+    debug_assert_eq!(asl.len(), kc * 4);
+    debug_assert_eq!(bs.len(), kc * 8);
+    debug_assert!(acc.len() >= 32);
+    let mut c = [vdupq_n_s32(0); 8];
+    let ap = asl.as_ptr();
+    let bp = bs.as_ptr();
+    for kk in 0..kc {
+        let b16 = vmovl_s8(vld1_s8(bp.add(kk * 8)));
+        let blo = vget_low_s16(b16);
+        let bhi = vget_high_s16(b16);
+        let mut i = 0;
+        while i < 4 {
+            let a = vdup_n_s16(*ap.add(kk * 4 + i) as i16);
+            c[2 * i] = vmlal_s16(c[2 * i], blo, a);
+            c[2 * i + 1] = vmlal_s16(c[2 * i + 1], bhi, a);
+            i += 1;
+        }
+    }
+    let out = acc.as_mut_ptr();
+    for (i, v) in c.iter().enumerate() {
+        vst1q_s32(out.add(i * 4), *v);
+    }
+}
+
+/// Flip the sign of the lanes selected by `mask` (-0.0 bit pattern).
+#[target_feature(enable = "neon")]
+unsafe fn sign_flip(v: float32x4_t, mask: uint32x4_t) -> float32x4_t {
+    vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+}
+
+/// Butterfly stages 1 and 2 of the FWHT-16 inside one 4-lane vector.
+#[target_feature(enable = "neon")]
+unsafe fn fwht4_inner(v: float32x4_t, s1: uint32x4_t, s2: uint32x4_t)
+                      -> float32x4_t {
+    // stage 1: adjacent swap [x1, x0, x3, x2]
+    let sw = vrev64q_f32(v);
+    let v = vaddq_f32(sw, sign_flip(v, s1));
+    // stage 2: pair swap [x2, x3, x0, x1]
+    let sw = vextq_f32::<2>(v, v);
+    vaddq_f32(sw, sign_flip(v, s2))
+}
+
+/// Block-FWHT every 16-tile of `x` in place (`x.len() % 16 == 0`),
+/// optionally folding in max|x|. Bit-exact vs tile-by-tile
+/// `fwht_inplace`.
+#[target_feature(enable = "neon")]
+pub unsafe fn fwht_tiles(x: &mut [f32], want_amax: bool) -> f32 {
+    debug_assert_eq!(x.len() % 16, 0);
+    let s1 = vld1q_u32([0u32, 0x8000_0000, 0, 0x8000_0000].as_ptr());
+    let s2 = vld1q_u32([0u32, 0, 0x8000_0000, 0x8000_0000].as_ptr());
+    let norm = vdupq_n_f32(crate::hadamard::fwht::NORM);
+    let mut am = vdupq_n_f32(0.0);
+    let p = x.as_mut_ptr();
+    let mut at = 0;
+    while at < x.len() {
+        let v0 = fwht4_inner(vld1q_f32(p.add(at)), s1, s2);
+        let v1 = fwht4_inner(vld1q_f32(p.add(at + 4)), s1, s2);
+        let v2 = fwht4_inner(vld1q_f32(p.add(at + 8)), s1, s2);
+        let v3 = fwht4_inner(vld1q_f32(p.add(at + 12)), s1, s2);
+        // stage 4: (i, i+4) pairs across vector boundaries
+        let (u0, u1) = (vaddq_f32(v0, v1), vsubq_f32(v0, v1));
+        let (u2, u3) = (vaddq_f32(v2, v3), vsubq_f32(v2, v3));
+        // stage 8: (i, i+8), then the 1/sqrt(16) norm
+        let t0 = vmulq_f32(vaddq_f32(u0, u2), norm);
+        let t1 = vmulq_f32(vaddq_f32(u1, u3), norm);
+        let t2 = vmulq_f32(vsubq_f32(u0, u2), norm);
+        let t3 = vmulq_f32(vsubq_f32(u1, u3), norm);
+        if want_amax {
+            // vmaxnmq (FMAXNM) ignores NaN operands, mirroring the
+            // NaN-ignoring scalar `f32::max` fold
+            am = vmaxnmq_f32(am, vabsq_f32(t0));
+            am = vmaxnmq_f32(am, vabsq_f32(t1));
+            am = vmaxnmq_f32(am, vabsq_f32(t2));
+            am = vmaxnmq_f32(am, vabsq_f32(t3));
+        }
+        vst1q_f32(p.add(at), t0);
+        vst1q_f32(p.add(at + 4), t1);
+        vst1q_f32(p.add(at + 8), t2);
+        vst1q_f32(p.add(at + 12), t3);
+        at += 16;
+    }
+    if want_amax { vmaxvq_f32(am) } else { 0.0 }
+}
+
+/// In-place paired butterfly over two equal-length rows:
+/// `(a, b) <- (a + b, a - b)` elementwise.
+#[target_feature(enable = "neon")]
+pub unsafe fn butterfly_rows(a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let pa = a.as_mut_ptr();
+    let pb = b.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = vld1q_f32(pa.add(i));
+        let vb = vld1q_f32(pb.add(i));
+        vst1q_f32(pa.add(i), vaddq_f32(va, vb));
+        vst1q_f32(pb.add(i), vsubq_f32(va, vb));
+        i += 4;
+    }
+    while i < n {
+        let (va, vb) = (*pa.add(i), *pb.add(i));
+        *pa.add(i) = va + vb;
+        *pb.add(i) = va - vb;
+        i += 1;
+    }
+}
+
+/// `x *= s` elementwise, optionally returning max|x| of the scaled
+/// values.
+#[target_feature(enable = "neon")]
+pub unsafe fn scale_amax(x: &mut [f32], s: f32, want_amax: bool) -> f32 {
+    let vs = vdupq_n_f32(s);
+    let mut am = vdupq_n_f32(0.0);
+    let n = x.len();
+    let p = x.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vmulq_f32(vld1q_f32(p.add(i)), vs);
+        if want_amax {
+            // NaN-ignoring fold (see fwht_tiles)
+            am = vmaxnmq_f32(am, vabsq_f32(v));
+        }
+        vst1q_f32(p.add(i), v);
+        i += 4;
+    }
+    let mut tail = 0.0f32;
+    while i < n {
+        let v = *p.add(i) * s;
+        *p.add(i) = v;
+        if want_amax {
+            tail = tail.max(v.abs());
+        }
+        i += 1;
+    }
+    if want_amax { vmaxvq_f32(am).max(tail) } else { 0.0 }
+}
+
+/// max|x| over a slice (0.0 for empty).
+#[target_feature(enable = "neon")]
+pub unsafe fn amax(x: &[f32]) -> f32 {
+    let mut am = vdupq_n_f32(0.0);
+    let n = x.len();
+    let p = x.as_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        // NaN-ignoring fold (see fwht_tiles)
+        am = vmaxnmq_f32(am, vabsq_f32(vld1q_f32(p.add(i))));
+        i += 4;
+    }
+    let mut m = vmaxvq_f32(am);
+    while i < n {
+        m = m.max((*p.add(i)).abs());
+        i += 1;
+    }
+    m
+}
+
+/// Pseudo-stochastic quantize a slice at one scale — bit-exact mirror
+/// of `quant::quantize_ps_one` per element.
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize_ps(xs: &[f32], scale: f32, bits: u8,
+                          out: &mut [i8]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let qmax = quant::qmax(bits) as f32;
+    let vs = vdupq_n_f32(scale);
+    let vmax = vdupq_n_f32(qmax);
+    let vmin = vdupq_n_f32(-qmax);
+    let m11 = vdupq_n_u32(0x7FF);
+    let v2048 = vdupq_n_f32(2048.0);
+    let one = vreinterpretq_u32_f32(vdupq_n_f32(1.0));
+    let n = xs.len();
+    let src = xs.as_ptr();
+    let dst = out.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let mut half = [vdupq_n_s32(0); 2];
+        let mut j = 0;
+        while j < 2 {
+            let x = vld1q_f32(src.add(i + 4 * j));
+            let v = vdivq_f32(x, vs);
+            let f = vrndmq_f32(v); // floor
+            let u = vdivq_f32(
+                vcvtq_f32_u32(vandq_u32(vreinterpretq_u32_f32(x), m11)),
+                v2048);
+            let gt = vcgtq_f32(vsubq_f32(v, f), u);
+            let bump = vreinterpretq_f32_u32(vandq_u32(gt, one));
+            let r = vaddq_f32(f, bump);
+            let r = vminq_f32(vmaxq_f32(r, vmin), vmax);
+            // scalar parity on NaN quotients (see the AVX2 mirror):
+            // zero NaN lanes so they quantize to 0 like `NaN as i8`
+            let ordered = vceqq_f32(v, v);
+            let r = vreinterpretq_f32_u32(
+                vandq_u32(vreinterpretq_u32_f32(r), ordered));
+            half[j] = vcvtq_s32_f32(r); // truncate toward zero
+            j += 1;
+        }
+        // i32x4 x2 -> i16x8 -> i8x8; never saturates (|q| <= 127)
+        let w = vcombine_s16(vqmovn_s32(half[0]), vqmovn_s32(half[1]));
+        vst1_s8(dst.add(i), vqmovn_s16(w));
+        i += 8;
+    }
+    while i < n {
+        *dst.add(i) = quant::quantize_ps_one(*src.add(i), scale, bits);
+        i += 1;
+    }
+}
