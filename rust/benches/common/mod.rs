@@ -25,6 +25,8 @@ pub fn steps(default: usize) -> usize {
 /// trajectories populate on any machine. `HOT_THREADS` pins the kernel
 /// pool budget (benches have no CLI, so the knob rides an env var).
 pub fn executor_or_exit() -> Arc<dyn Executor> {
+    hot::util::log::init_from_env();
+    hot::obs::init_from_env();
     if let Some(t) = std::env::var("HOT_THREADS")
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
@@ -33,11 +35,11 @@ pub fn executor_or_exit() -> Arc<dyn Executor> {
     }
     match hot::backend::by_name("auto", DIR) {
         Ok(rt) => {
-            eprintln!("bench backend: {}", rt.name());
+            hot::info!("bench backend: {}", rt.name());
             rt
         }
         Err(e) => {
-            eprintln!("no usable backend: {e}");
+            hot::warn_!("no usable backend: {e}");
             std::process::exit(0);
         }
     }

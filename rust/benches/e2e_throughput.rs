@@ -26,10 +26,21 @@ struct ModeResult {
     simd: bool,
     step_s: f64,
     data_s: f64,
+    /// mean FLOPs/step from the kernels' own obs counters (not a model)
+    flops_per_step: f64,
+    /// mean bytes through the quantization epilogues per step
+    bytes_q_per_step: f64,
+}
+
+struct ModeTimings {
+    step_s: f64,
+    data_s: f64,
+    flops_per_step: f64,
+    bytes_q_per_step: f64,
 }
 
 fn bench_mode(rt: Arc<dyn Executor>, preset: &str, mode: Mode,
-              steps: usize) -> (f64, f64) {
+              steps: usize) -> ModeTimings {
     let mut cfg = RunConfig::default();
     cfg.preset = preset.into();
     cfg.variant = "hot".into();
@@ -40,19 +51,30 @@ fn bench_mode(rt: Arc<dyn Executor>, preset: &str, mode: Mode,
         cfg.accum = 2; // measure real accumulation, not a degenerate loop
     }
     let mut tr = Trainer::new(rt, cfg).expect("trainer");
+    // tracing stays on for the whole run: the per-step StepRecord then
+    // carries the counter deltas the rows below consume, and its cost
+    // is bounded <1% by the obs_trace overhead test
+    hot::obs::set_trace_enabled(true);
     tr.step_once(mode).expect("warmup/compile");
     let t0 = Instant::now();
     for _ in 1..steps {
         tr.step_once(mode).expect("step");
     }
     let total = t0.elapsed().as_secs_f64() / (steps - 1) as f64;
+    hot::obs::set_trace_enabled(false);
+    // steady-state counter means, warmup record excluded
+    let tail = &tr.metrics.records[1..];
+    let flops_per_step = tail.iter().map(|r| r.prof_flops as f64)
+        .sum::<f64>() / tail.len() as f64;
+    let bytes_q_per_step = tail.iter().map(|r| r.prof_bytes_quant as f64)
+        .sum::<f64>() / tail.len() as f64;
     // data-generation-only overhead estimate
     let t1 = Instant::now();
     for i in 0..20 {
         std::hint::black_box(tr.data.batch(0, i, tr.batch_size()));
     }
     let data_s = t1.elapsed().as_secs_f64() / 20.0;
-    (total, data_s)
+    ModeTimings { step_s: total, data_s, flops_per_step, bytes_q_per_step }
 }
 
 fn main() {
@@ -76,7 +98,8 @@ fn main() {
     }
     let mut results: Vec<ModeResult> = Vec::new();
     let mut t = Table::new(&["preset", "mode", "threads", "simd",
-                             "step time", "steps/s", "data-gen share"]);
+                             "step time", "steps/s", "GFLOP/s",
+                             "data-gen share"]);
     for preset in ["tiny", "small", "base"] {
         for (name, mode) in [("fused", Mode::Fused), ("split", Mode::Split),
                              ("accum", Mode::Accum)] {
@@ -104,16 +127,20 @@ fn main() {
                 // SIMD tier it never had
                 let effective =
                     simd && simd_avail && rt.name() == "native";
-                let (step_s, data_s) =
-                    bench_mode(rt.clone(), preset, mode, steps);
+                let tm = bench_mode(rt.clone(), preset, mode, steps);
                 t.row(&[preset.into(), name.into(), threads.to_string(),
                         if effective { "on" } else { "off" }.into(),
-                        format!("{:.1} ms", step_s * 1e3),
-                        format!("{:.2}", 1.0 / step_s),
-                        format!("{:.1}%", 100.0 * data_s / step_s)]);
-                results.push(ModeResult { preset: preset.into(), mode: name,
-                                          threads, simd: effective, step_s,
-                                          data_s });
+                        format!("{:.1} ms", tm.step_s * 1e3),
+                        format!("{:.2}", 1.0 / tm.step_s),
+                        format!("{:.2}",
+                                tm.flops_per_step / tm.step_s / 1e9),
+                        format!("{:.1}%", 100.0 * tm.data_s / tm.step_s)]);
+                results.push(ModeResult {
+                    preset: preset.into(), mode: name, threads,
+                    simd: effective, step_s: tm.step_s, data_s: tm.data_s,
+                    flops_per_step: tm.flops_per_step,
+                    bytes_q_per_step: tm.bytes_q_per_step,
+                });
             }
         }
     }
@@ -144,6 +171,12 @@ fn main() {
             m.insert("steps_per_sec".to_string(), Json::Num(1.0 / r.step_s));
             m.insert("datagen_share".to_string(),
                      Json::Num(r.data_s / r.step_s));
+            m.insert("flops_per_step".to_string(),
+                     Json::Num(r.flops_per_step));
+            m.insert("bytes_quantized_per_step".to_string(),
+                     Json::Num(r.bytes_q_per_step));
+            m.insert("gflops".to_string(),
+                     Json::Num(r.flops_per_step / r.step_s / 1e9));
             Json::Obj(m)
         })
         .collect();
@@ -151,6 +184,6 @@ fn main() {
     let path = "BENCH_e2e.json";
     match std::fs::write(path, Json::Obj(root).to_string()) {
         Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+        Err(e) => hot::warn_!("could not write {path}: {e}"),
     }
 }

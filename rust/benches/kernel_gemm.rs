@@ -9,6 +9,11 @@
 //! the SIMD-tier acceptance gate reads (>= 2x for f32 at 512^3 on any
 //! AVX2/NEON machine). `HOT_BENCH_STEPS` (any value) switches to the
 //! CI smoke sizing: small shapes, short budgets, same schema.
+//!
+//! FLOP counts come from the obs counters the kernels themselves bump
+//! (one instrumented run per cell with tracing enabled, tracing off for
+//! the timed loop) rather than a hand-computed 2n^3 — so shortcut paths
+//! (one-hot gathers, zero-skipping) are billed for the work they do.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -26,8 +31,19 @@ struct Point {
     gflops: f64,
 }
 
-fn gflops(size: usize, secs: f64) -> f64 {
-    2.0 * (size * size * size) as f64 / secs / 1e9
+/// FLOPs one invocation of `f` performs, read off the kernels' own obs
+/// counters (tracing is flipped on only for this single untimed run).
+fn counted_flops<F: FnMut()>(mut f: F) -> u64 {
+    hot::obs::set_trace_enabled(true);
+    let before = hot::obs::flops_total();
+    f();
+    let fl = hot::obs::flops_total() - before;
+    hot::obs::set_trace_enabled(false);
+    fl
+}
+
+fn gflops(flops: u64, secs: f64) -> f64 {
+    flops as f64 / secs / 1e9
 }
 
 fn bench_size(size: usize, budget_ms: u64, simd_avail: bool,
@@ -44,17 +60,24 @@ fn bench_size(size: usize, budget_ms: u64, simd_avail: bool,
     // naive oracles (single-threaded by construction); skipped at large
     // sizes where a naive iteration alone would blow the budget
     if size <= 256 {
+        let fl = counted_flops(|| {
+            std::hint::black_box(reference::matmul(&a, &b, size, size, size));
+        });
         let st = bench(1, budget, 64, || {
             std::hint::black_box(reference::matmul(&a, &b, size, size, size));
         });
         points.push(Point { kind: "f32", size, imp: "naive", threads: 1,
-                            gflops: gflops(size, st.median_s) });
+                            gflops: gflops(fl, st.median_s) });
+        let fl = counted_flops(|| {
+            std::hint::black_box(reference::matmul_i8_nn(&qa, &qb, size, size,
+                                                         size));
+        });
         let st = bench(1, budget, 64, || {
             std::hint::black_box(reference::matmul_i8_nn(&qa, &qb, size, size,
                                                          size));
         });
         points.push(Point { kind: "i8", size, imp: "naive", threads: 1,
-                            gflops: gflops(size, st.median_s) });
+                            gflops: gflops(fl, st.median_s) });
     }
 
     // blocked kernels: scalar tier vs SIMD tier at 1 / 2 / 4 threads
@@ -65,18 +88,26 @@ fn bench_size(size: usize, budget_ms: u64, simd_avail: bool,
         kernels::set_simd_enabled(simd);
         for threads in [1usize, 2, 4] {
             kernels::set_num_threads(threads);
+            let fl = counted_flops(|| {
+                std::hint::black_box(kernels::gemm_f32_nn(&a, &b, size, size,
+                                                          size));
+            });
             let st = bench(1, budget, 64, || {
                 std::hint::black_box(kernels::gemm_f32_nn(&a, &b, size, size,
                                                           size));
             });
             points.push(Point { kind: "f32", size, imp, threads,
-                                gflops: gflops(size, st.median_s) });
+                                gflops: gflops(fl, st.median_s) });
+            let fl = counted_flops(|| {
+                std::hint::black_box(kernels::gemm_i8_nn(&qa, &qb, size, size,
+                                                         size));
+            });
             let st = bench(1, budget, 64, || {
                 std::hint::black_box(kernels::gemm_i8_nn(&qa, &qb, size, size,
                                                          size));
             });
             points.push(Point { kind: "i8", size, imp, threads,
-                                gflops: gflops(size, st.median_s) });
+                                gflops: gflops(fl, st.median_s) });
         }
     }
     kernels::set_simd_enabled(true);
@@ -163,6 +194,6 @@ fn main() {
     let path = "BENCH_kernels.json";
     match std::fs::write(path, Json::Obj(root).to_string()) {
         Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+        Err(e) => hot::warn_!("could not write {path}: {e}"),
     }
 }

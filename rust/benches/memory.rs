@@ -72,8 +72,8 @@ fn main() {
     if rt.name() != "native" {
         // ctx byte accounting is native-exact; PJRT artifacts pin their
         // own ctx schema, so the prediction cross-check would not apply
-        eprintln!("memory bench targets the native backend; got {}",
-                  rt.name());
+        hot::warn_!("memory bench targets the native backend; got {}",
+                    rt.name());
         return;
     }
     let steps = common::steps(6).max(2);

@@ -172,7 +172,35 @@ pub fn hla_compress(x: &[f32], n: usize, cols: usize, rank: usize, bits: u8,
     let xc = block_hla_axis0(x, n, cols, rank, criterion);
     let nc = n / BLOCK * rank;
     let (data, scales) = quant_pack_rows(&xc, nc, cols, bits);
-    AbcAct { rows: nc, cols, bits, data, scales }
+    let xa = AbcAct { rows: nc, cols, bits, data, scales };
+    if crate::obs::enabled() {
+        // per-layer quantizer telemetry, attributed to the module name
+        // the model walk last set: amax of the compressed activations,
+        // saturation incidence against each row's min-max scale, and
+        // the dequant round-trip error — the raw signal the LQS report
+        // ranks layers by. Runs only under the trace gate (one extra
+        // pass over xc), so the untraced hot path is untouched.
+        let qmax = quant::qmax(bits) as f32;
+        let mut amax = 0.0f32;
+        let mut clipped = 0u64;
+        for (r, row) in xc.chunks_exact(cols).enumerate() {
+            let lim = qmax * xa.scale(r);
+            for &v in row {
+                let a = v.abs();
+                amax = amax.max(a);
+                if a >= lim {
+                    clipped += 1;
+                }
+            }
+        }
+        let err: f64 = xc
+            .iter()
+            .zip(&xa.dequantize())
+            .map(|(&a, &b)| (a - b).abs() as f64)
+            .sum();
+        crate::obs::record_quant(amax, clipped, err, xc.len() as u64);
+    }
+    xa
 }
 
 /// HOT's g_w = (H-hat g_y)ᵀ · (H-hat x) with the saved x arriving in

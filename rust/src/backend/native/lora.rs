@@ -212,6 +212,8 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
     let bcfg = cfg.bcfg;
 
     // --- forward ------------------------------------------------------------
+    let sp_fwd = crate::obs::span(crate::obs::Span::Forward);
+    crate::obs::set_layer("embed");
     let (mut h, ql) = layers::qlinear_fwd_borrowed(x.as_f32()?, n,
                                                    shape.in_dim,
                                                    merged.f("embed.w")?, d,
@@ -236,6 +238,7 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
                             -> Result<Vec<f32>> {
             let a = lora.f(&format!("{wname}.lora_a"))?;
             let bm = lora.f(&format!("{wname}.lora_b"))?;
+            crate::obs::set_layer(&wname);
             let (y, ctx) = qlinear_lora_fwd(inp, rows, in_dim,
                                             merged.f(&wname)?, o,
                                             merged.f(&bname)?, a, bm, cfg);
@@ -296,6 +299,7 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
         }
     }
     let c = shape.n_classes;
+    crate::obs::set_layer("head");
     let (logits, hctx) = layers::qlinear_fwd(pooled, b, d,
                                              merged.f("head.w")?, c,
                                              merged.f("head.b")?, &bcfg);
@@ -303,8 +307,10 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
                            flag: lqs_mask.get(qi).copied().unwrap_or(0.0) });
     let (loss, acc, ce) = layers::softmax_xent_fwd(&logits, b, c, &labels);
     saved.push(Saved::Ce(ce));
+    drop(sp_fwd);
 
     // --- backward -------------------------------------------------------------
+    let _sp_bwd = crate::obs::span(crate::obs::Span::Backward);
     let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
     let mut it = saved.into_iter().rev();
     let mut take = move || it.next().context("lora ctx walk underflow");
@@ -354,6 +360,7 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
             ensure!(ctx.n == rows && ctx.i == i, "{wname}: ctx dims drifted");
             let a = lora.f(&format!("{wname}.lora_a"))?;
             let bm = lora.f(&format!("{wname}.lora_b"))?;
+            crate::obs::set_layer(&wname);
             let (g_x, g_a, g_bm) = qlinear_lora_bwd(gy, rows, o,
                                                     wv.as_f32()?, i, a, bm,
                                                     &ctx, cfg);

@@ -61,6 +61,17 @@ impl NativeBackend {
         Self::new()
     }
 
+    /// `new` plus the hot-path tracing gate (`obs`): `true` arms span
+    /// recording and counters, `false` returns every probe to its
+    /// single relaxed-atomic-load fast path. `HOT_TRACE=1` in the
+    /// environment (applied by `obs::init_from_env`) is equivalent.
+    /// Process-wide, like the thread/SIMD knobs. Tracing never changes
+    /// numerics: recording is read-only on the data path.
+    pub fn with_trace(enabled: bool) -> NativeBackend {
+        crate::obs::set_trace_enabled(enabled);
+        Self::new()
+    }
+
     pub fn new() -> NativeBackend {
         let entries = presets::builtin_presets()
             .into_iter()
@@ -94,9 +105,14 @@ impl NativeBackend {
                             -> Result<(f32, f32, Vec<Value>)> {
         let (e, bcfg) = self.step_ctx(tag, preset)?;
         let p = Params::new(&e.preset.params, params)?;
-        let fwd = model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?;
-        let grads = model::backward(&e.shape, &bcfg, &p, lqs_mask, &fwd.ctxs,
-                                    None)?;
+        let fwd = {
+            let _sp = crate::obs::span(crate::obs::Span::Forward);
+            model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?
+        };
+        let grads = {
+            let _sp = crate::obs::span(crate::obs::Span::Backward);
+            model::backward(&e.shape, &bcfg, &p, lqs_mask, &fwd.ctxs, None)?
+        };
         Ok((fwd.loss, fwd.acc,
             model::grads_to_values(&e.preset.params, grads)?))
     }
@@ -179,7 +195,10 @@ impl Executor for NativeBackend {
         };
         let (e, bcfg) = self.step_ctx(&tag, &preset)?;
         let p = Params::new(&e.preset.params, params)?;
-        let fwd = model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?;
+        let fwd = {
+            let _sp = crate::obs::span(crate::obs::Span::Forward);
+            model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?
+        };
         let (ctx, ctx_specs) = model::flatten_ctx(fwd.ctxs);
         Ok(ForwardOut { loss: fwd.loss, acc: fwd.acc, ctx, ctx_specs })
     }
@@ -195,8 +214,10 @@ impl Executor for NativeBackend {
         ensure!(!x.shape().is_empty(), "model input must be batched");
         let b = x.shape()[0];
         let ctxs = model::parse_ctx(&e.shape, &bcfg, b, ctx)?;
-        let grads = model::backward(&e.shape, &bcfg, &p, lqs_mask, &ctxs,
-                                    None)?;
+        let grads = {
+            let _sp = crate::obs::span(crate::obs::Span::Backward);
+            model::backward(&e.shape, &bcfg, &p, lqs_mask, &ctxs, None)?
+        };
         model::grads_to_values(&e.preset.params, grads)
     }
 

@@ -432,6 +432,7 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
     let mut ctxs: Vec<CtxEntry> = Vec::new();
 
     // embed + positional encoding
+    crate::obs::set_layer("embed");
     let (mut h, ql) = layers::qlinear_fwd(xf, n, shape.in_dim,
                                           p.f("embed.w")?, d,
                                           p.f("embed.b")?, cfg);
@@ -452,6 +453,9 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
                 &h, n, d, p.f(&format!("{pre}ln1.g"))?,
                 p.f(&format!("{pre}ln1.b"))?);
             ctxs.push(entry_ln(format!("{pre}ln1"), ln, n, d, packed));
+            if crate::obs::enabled() {
+                crate::obs::set_layer(&format!("{pre}qkv"));
+            }
             let (qkv, ql) = layers::qlinear_fwd(
                 hn, n, d, p.f(&format!("{pre}attn.wqkv"))?, 3 * d,
                 p.f(&format!("{pre}attn.bqkv"))?, cfg);
@@ -470,6 +474,9 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
                 &q, &k, &v, b, l, d, shape.heads, shape.arch == "lm");
             ctxs.push(entry_attn(format!("{pre}attn"), actx, b, shape.heads,
                                  l, d / shape.heads, packed));
+            if crate::obs::enabled() {
+                crate::obs::set_layer(&format!("{pre}proj"));
+            }
             let (proj, ql) = layers::qlinear_fwd(
                 att, n, d, p.f(&format!("{pre}attn.wo"))?, d,
                 p.f(&format!("{pre}attn.bo"))?, cfg);
@@ -482,12 +489,18 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
             &h, n, d, p.f(&format!("{pre}ln2.g"))?,
             p.f(&format!("{pre}ln2.b"))?);
         ctxs.push(entry_ln(format!("{pre}ln2"), ln, n, d, packed));
+        if crate::obs::enabled() {
+            crate::obs::set_layer(&format!("{pre}fc1"));
+        }
         let (f1, ql) = layers::qlinear_fwd(
             hn, n, d, p.f(&format!("{pre}fc1.w"))?, m,
             p.f(&format!("{pre}fc1.b"))?, cfg);
         ctxs.push(entry_ql(format!("{pre}fc1"), ql));
         let (g1, gc) = layers::gelu_fwd(f1);
         ctxs.push(entry_gelu(format!("{pre}gelu"), gc, n, m, packed));
+        if crate::obs::enabled() {
+            crate::obs::set_layer(&format!("{pre}fc2"));
+        }
         let (f2, ql) = layers::qlinear_fwd(
             g1, n, m, p.f(&format!("{pre}fc2.w"))?, d,
             p.f(&format!("{pre}fc2.b"))?, cfg);
@@ -502,6 +515,7 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
     ctxs.push(entry_ln("lnf".into(), ln, n, d, packed));
 
     let c = shape.n_classes;
+    crate::obs::set_layer("head");
     let (loss, acc, ce) = if shape.arch == "lm" {
         let (logits, ql) = layers::qlinear_fwd(hn, n, d, p.f("head.w")?, c,
                                                p.f("head.b")?, cfg);
@@ -591,6 +605,9 @@ fn ql_backward(gy: &[f32], n: usize, o: usize, p: &Params, wname: &str,
         sink.push(QlDiag { wname: wname.to_string(), gy: gy.to_vec(), n, o,
                            x, i });
     }
+    // attribute quantizer telemetry (the hla_compress epilogues the
+    // backward may run on gy) to the same module name the forward used
+    crate::obs::set_layer(&entry.module);
     let (gx, gw, gb) =
         layers::qlinear_bwd(gy, n, o, wv.as_f32()?, i, &ctx, cfg, flag,
                             need_gx);

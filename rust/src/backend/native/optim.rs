@@ -26,6 +26,7 @@ fn decay_of(name: &str) -> f32 {
 pub fn adamw(specs: &[TensorSpec], params: &[Value], grads: &[Value],
              m: &[Value], v: &[Value], step: f32, lr: f32)
              -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)> {
+    let _sp = crate::obs::span(crate::obs::Span::OptStep);
     ensure!(params.len() == specs.len() && grads.len() == specs.len()
             && m.len() == specs.len() && v.len() == specs.len(),
             "adamw arity mismatch: {} specs vs {}/{}/{}/{}", specs.len(),

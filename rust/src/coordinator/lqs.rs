@@ -95,6 +95,70 @@ impl CalibReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Runtime quantizer telemetry -> LQS
+// ---------------------------------------------------------------------------
+
+/// Per-layer quantizer health observed *during* training (the obs
+/// subsystem drains it every step from the quant epilogues), folded into
+/// the LQS view. Calibration picks the initial per-token/per-tensor mask
+/// before step 0; this is the runtime signal that would drive the same
+/// decision mid-run — layers with high observed dequant error or clip
+/// rate are exactly the "case (a)" outlier layers of Figs 6/9.
+#[derive(Debug, Clone, Default)]
+pub struct QuantTelemetry {
+    pub layers: Vec<crate::obs::LayerQuant>,
+}
+
+impl QuantTelemetry {
+    /// Snapshot the latest step's drained telemetry (already sorted by
+    /// descending mean |dequant − f32| error).
+    pub fn from_step(layers: &[crate::obs::LayerQuant]) -> QuantTelemetry {
+        QuantTelemetry { layers: layers.to_vec() }
+    }
+
+    /// Layers ranked by observed mean dequant error, worst first.
+    pub fn ranked(&self) -> Vec<(&str, f64)> {
+        let mut v: Vec<(&str, f64)> = self
+            .layers
+            .iter()
+            .map(|l| (l.name.as_str(), l.mean_abs_err))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    /// Layers whose observed clip rate exceeds `thresh` — the runtime
+    /// analogue of `CalibReport::outlier_ranking`: heavy clipping under
+    /// per-tensor min-max scaling means outlier tokens are stretching
+    /// the shared scale, the condition LQS flips to per-token for.
+    pub fn clip_suspects(&self, thresh: f64) -> Vec<&str> {
+        self.layers
+            .iter()
+            .filter(|l| l.clip_rate > thresh)
+            .map(|l| l.name.as_str())
+            .collect()
+    }
+
+    /// Refine an existing LQS mask with the runtime signal: any qlinear
+    /// whose observed clip rate exceeds `thresh` is forced per-token.
+    /// Telemetry names are module paths ("blk0.qkv"); qlinear names from
+    /// the preset match by suffix/prefix containment.
+    pub fn refine_mask(&self, names: &[String], mask: &[f32], thresh: f64)
+                       -> Vec<f32> {
+        let suspects = self.clip_suspects(thresh);
+        names
+            .iter()
+            .zip(mask)
+            .map(|(n, &m)| {
+                let hit = suspects.iter()
+                    .any(|s| n.contains(*s) || s.contains(n.as_str()));
+                if hit { 1.0 } else { m }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +208,35 @@ mod tests {
         let rank = rep.outlier_ranking();
         assert_eq!(rank[0].0, "l1");
         assert!(rank[0].1 > rank[1].1 && rank[1].1 > rank[2].1);
+    }
+
+    fn lq(name: &str, clip: f64, err: f64) -> crate::obs::LayerQuant {
+        crate::obs::LayerQuant { name: name.into(), amax: 1.0,
+                                 clip_rate: clip, mean_abs_err: err,
+                                 numel: 100 }
+    }
+
+    #[test]
+    fn telemetry_ranks_by_error() {
+        let t = QuantTelemetry::from_step(&[
+            lq("l0", 0.0, 1e-3), lq("l1", 0.0, 5e-2), lq("l2", 0.0, 2e-3),
+        ]);
+        let r = t.ranked();
+        assert_eq!(r[0].0, "l1");
+        assert!(r[0].1 > r[1].1 && r[1].1 > r[2].1);
+    }
+
+    #[test]
+    fn clip_suspects_feed_mask_refinement() {
+        let t = QuantTelemetry::from_step(&[
+            lq("l0", 0.2, 1e-3),  // heavy clipping -> per-token
+            lq("l1", 0.0, 1e-3),
+        ]);
+        assert_eq!(t.clip_suspects(0.1), vec!["l0"]);
+        let names = names(3);
+        let refined = t.refine_mask(&names, &[0.0, 0.0, 1.0], 0.1);
+        // l0 flipped per-token, l1 untouched, l2 keeps its calib choice
+        assert_eq!(refined, vec![1.0, 0.0, 1.0]);
     }
 
     #[test]

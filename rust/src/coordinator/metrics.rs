@@ -15,6 +15,14 @@ pub struct StepRecord {
     pub ctx_peak_bytes: u64,
     /// fp32-equivalent / stored bytes so far (1.0 when nothing stored)
     pub ctx_compression: f64,
+    /// total nanoseconds attributed to spans this step (0 when obs off)
+    pub prof_span_ns: u64,
+    /// FLOPs executed this step, summed across kernel tiers (obs counters)
+    pub prof_flops: u64,
+    /// bytes produced by quantization epilogues this step (obs counters)
+    pub prof_bytes_quant: u64,
+    /// top-k layers by mean |dequant - f32| error, "name:err;..." (may be "")
+    pub quant_top: String,
 }
 
 #[derive(Debug, Default)]
@@ -53,12 +61,16 @@ impl MetricsLog {
         Some(s / take as f32)
     }
 
+    /// Mean step time excluding warmup. The skip is `max(1, 5%)` of the
+    /// recorded steps — always at least the first step (compile/warmup),
+    /// growing with run length so long runs also shed cache-cold steps —
+    /// clamped so at least one record always survives.
     pub fn mean_step_time(&self) -> f64 {
         if self.records.is_empty() {
             return 0.0;
         }
-        // skip the first step (compile/warmup)
-        let skip = usize::from(self.records.len() > 1);
+        let n = self.records.len();
+        let skip = (n / 20).max(1).min(n - 1);
         let xs = &self.records[skip..];
         xs.iter().map(|r| r.step_time_s).sum::<f64>() / xs.len() as f64
     }
@@ -72,20 +84,30 @@ impl MetricsLog {
         }
     }
 
+    /// Best (max) eval accuracy seen so far. NaN accuracies (e.g. an eval
+    /// on an empty split) are skipped rather than poisoning the fold:
+    /// `f32::max` is NaN-propagating in the accumulator position, so an
+    /// early NaN would otherwise stick for the rest of the run.
     pub fn best_eval_acc(&self) -> Option<f32> {
-        self.evals.iter().map(|e| e.2).fold(None, |m, a| {
-            Some(m.map_or(a, |mm: f32| mm.max(a)))
-        })
+        self.evals
+            .iter()
+            .map(|e| e.2)
+            .filter(|a| !a.is_nan())
+            .fold(None, |m, a| Some(m.map_or(a, |mm: f32| mm.max(a))))
     }
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "step,loss,acc,lr,step_time_s,ctx_live_bytes,ctx_peak_bytes,\
-             ctx_compression\n");
+             ctx_compression,prof_span_ns,prof_flops,prof_bytes_quant,\
+             quant_top\n");
         for r in &self.records {
-            s.push_str(&format!("{},{},{},{},{},{},{},{}\n", r.step, r.loss,
-                                r.acc, r.lr, r.step_time_s, r.ctx_live_bytes,
-                                r.ctx_peak_bytes, r.ctx_compression));
+            s.push_str(&format!("{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                                r.step, r.loss, r.acc, r.lr, r.step_time_s,
+                                r.ctx_live_bytes, r.ctx_peak_bytes,
+                                r.ctx_compression, r.prof_span_ns,
+                                r.prof_flops, r.prof_bytes_quant,
+                                r.quant_top));
         }
         s
     }
@@ -115,7 +137,8 @@ mod tests {
     fn rec(step: usize, loss: f32, t: f64) -> StepRecord {
         StepRecord { step, loss, acc: 0.5, lr: 1e-3, step_time_s: t,
                      ctx_live_bytes: 0, ctx_peak_bytes: 0,
-                     ctx_compression: 1.0 }
+                     ctx_compression: 1.0, prof_span_ns: 0, prof_flops: 0,
+                     prof_bytes_quant: 0, quant_top: String::new() }
     }
 
     #[test]
@@ -149,13 +172,68 @@ mod tests {
     }
 
     #[test]
+    fn best_eval_acc_ignores_nan() {
+        // f32::max propagates NaN from the accumulator position, so an
+        // early NaN eval used to poison every later comparison.
+        let mut m = MetricsLog::new();
+        m.push_eval(10, 1.0, f32::NAN);
+        m.push_eval(20, 0.8, 0.7);
+        m.push_eval(30, 0.9, 0.6);
+        assert_eq!(m.best_eval_acc(), Some(0.7));
+        // all-NaN evals -> no usable accuracy at all
+        let mut m2 = MetricsLog::new();
+        m2.push_eval(10, 1.0, f32::NAN);
+        assert_eq!(m2.best_eval_acc(), None);
+    }
+
+    #[test]
+    fn warmup_skip_is_five_percent_min_one() {
+        // 100 records: skip = max(1, 100/20) = 5. First five are slow;
+        // the mean must reflect only the steady-state tail.
+        let mut m = MetricsLog::new();
+        for i in 0..100 {
+            let t = if i < 5 { 10.0 } else { 0.1 };
+            m.push(rec(i, 1.0, t));
+        }
+        assert!((m.mean_step_time() - 0.1).abs() < 1e-9);
+        // 2 records: skip clamps to 1, never to all of them
+        let mut m2 = MetricsLog::new();
+        m2.push(rec(0, 1.0, 10.0));
+        m2.push(rec(1, 1.0, 0.2));
+        assert!((m2.mean_step_time() - 0.2).abs() < 1e-9);
+        // 1 record: skip clamps so the single record survives
+        let mut m1 = MetricsLog::new();
+        m1.push(rec(0, 1.0, 0.3));
+        assert!((m1.mean_step_time() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
     fn csv_format() {
         let mut m = MetricsLog::new();
         m.push(rec(0, 1.5, 0.01));
         let csv = m.to_csv();
         assert!(csv.starts_with("step,loss"));
         assert!(csv.contains("ctx_peak_bytes"));
+        assert!(csv.contains("prof_flops") && csv.contains("quant_top"));
         assert!(csv.contains("0,1.5,0.5,0.001,0.01,0,0,1"));
+    }
+
+    #[test]
+    fn csv_prof_columns_round_trip() {
+        let mut m = MetricsLog::new();
+        let mut r = rec(0, 1.5, 0.01);
+        r.prof_span_ns = 123;
+        r.prof_flops = 456;
+        r.prof_bytes_quant = 789;
+        r.quant_top = "head:1.0e-2;embed:5.0e-3".into();
+        m.push(r);
+        let csv = m.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",123,456,789,head:1.0e-2;embed:5.0e-3"),
+                "{row}");
+        // same number of cells in header and rows
+        let ncols = csv.lines().next().unwrap().split(',').count();
+        assert_eq!(row.split(',').count(), ncols);
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use ctx::{BudgetExceeded, CtxStats, CtxStore};
-pub use lqs::{CalibReport, LayerDiag};
+pub use lqs::{CalibReport, LayerDiag, QuantTelemetry};
 pub use metrics::{MetricsLog, StepRecord};
 pub use trainer::{DataSource, LoraTrainer, Mode, Trainer};

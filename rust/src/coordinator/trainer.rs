@@ -61,6 +61,25 @@ pub struct Trainer {
     /// Execute a specific train-step key instead of the
     /// `train_{variant}_{preset}` default (rank-sweep benches etc.).
     pub key_override: Option<String>,
+    /// Keep raw span events when tracing (for Chrome-trace export). Off by
+    /// default so long traced runs only pay for aggregates.
+    pub keep_trace: bool,
+    /// Accumulated span events across all steps (when `keep_trace`).
+    pub trace: Vec<crate::obs::TraceEvent>,
+    /// Per-layer quantizer telemetry from the most recent step.
+    pub last_quant: Vec<crate::obs::LayerQuant>,
+}
+
+/// Flatten an optional per-step profile into the StepRecord columns.
+fn prof_fields(p: Option<&crate::obs::StepProfile>)
+               -> (u64, u64, u64, String) {
+    match p {
+        Some(p) => {
+            let bq = p.counters[crate::obs::Counter::BytesQuantized as usize];
+            (p.step_coverage_ns(), p.flops(), bq, p.top_quant_csv(3))
+        }
+        None => (0, 0, 0, String::new()),
+    }
 }
 
 impl Trainer {
@@ -94,6 +113,9 @@ impl Trainer {
             preset,
             step: 0,
             key_override: None,
+            keep_trace: false,
+            trace: Vec::new(),
+            last_quant: Vec::new(),
         })
     }
 
@@ -126,6 +148,11 @@ impl Trainer {
         self.lqs_mask = report.lqs_mask();
         crate::info!("LQS: {}/{} layers per-token", report.n_per_token(),
                      self.preset.qlinears.len());
+        // calibration ran under the trace gate too — discard its spans
+        // and counters so step 0's profile reflects step 0 only
+        if crate::obs::enabled() {
+            crate::obs::drain_step(false);
+        }
         Ok(Some(report))
     }
 
@@ -240,19 +267,35 @@ impl Trainer {
 
     pub fn step_once(&mut self, mode: Mode) -> Result<(f32, f32)> {
         let t0 = Instant::now();
+        // batch generation stays outside the train_step span — the span
+        // times backend work; each guard drops at the end of its arm, so
+        // every event is pushed before drain_step sweeps the rings below
         let (loss, acc) = match mode {
             Mode::Fused => {
                 let (x, y) = self.data.batch(0, self.step as u64,
                                              self.batch_size());
+                let _sp = crate::obs::span(crate::obs::Span::TrainStep);
                 self.fused_step(x, y)?
             }
             Mode::Split => {
                 let (x, y) = self.data.batch(0, self.step as u64,
                                              self.batch_size());
+                let _sp = crate::obs::span(crate::obs::Span::TrainStep);
                 self.split_step(x, y)?
             }
-            Mode::Accum => self.accum_step(self.step as u64)?,
+            Mode::Accum => {
+                let _sp = crate::obs::span(crate::obs::Span::TrainStep);
+                self.accum_step(self.step as u64)?
+            }
         };
+        let prof = crate::obs::enabled()
+            .then(|| crate::obs::drain_step(self.keep_trace));
+        let (prof_span_ns, prof_flops, prof_bytes_quant, quant_top) =
+            prof_fields(prof.as_ref());
+        if let Some(p) = prof {
+            self.trace.extend(p.events);
+            self.last_quant = p.quant;
+        }
         self.metrics.push(StepRecord {
             step: self.step,
             loss,
@@ -262,9 +305,19 @@ impl Trainer {
             ctx_live_bytes: self.ctx.stats().live_bytes,
             ctx_peak_bytes: self.ctx.stats().peak_bytes,
             ctx_compression: self.ctx.compression_ratio(),
+            prof_span_ns,
+            prof_flops,
+            prof_bytes_quant,
+            quant_top,
         });
         self.step += 1;
         Ok((loss, acc))
+    }
+
+    /// Runtime quantizer telemetry from the most recent traced step,
+    /// in the LQS-facing form (rank by error, clip-rate mask refinement).
+    pub fn quant_telemetry(&self) -> crate::coordinator::lqs::QuantTelemetry {
+        crate::coordinator::lqs::QuantTelemetry::from_step(&self.last_quant)
     }
 
     /// Mean (loss, acc) over `n` eval batches (FP forward).
@@ -276,6 +329,11 @@ impl Trainer {
             let (l, a) = self.rt.eval_step(&key, &self.params, &x, &y)?;
             ls += l;
             as_ += a;
+        }
+        // like calibration: a mid-run eval's spans must not leak into
+        // the next training step's profile
+        if crate::obs::enabled() {
+            crate::obs::drain_step(false);
         }
         Ok((ls / n as f32, as_ / n as f32))
     }
@@ -353,6 +411,10 @@ pub struct LoraTrainer {
     pub metrics: MetricsLog,
     pub data: VisionDataset,
     pub step: usize,
+    /// Keep raw span events when tracing (Chrome-trace export).
+    pub keep_trace: bool,
+    /// Accumulated span events across all steps (when `keep_trace`).
+    pub trace: Vec<crate::obs::TraceEvent>,
     batch: usize,
 }
 
@@ -404,20 +466,33 @@ impl LoraTrainer {
             data,
             cfg,
             step: 0,
+            keep_trace: false,
+            trace: Vec::new(),
             batch,
         })
     }
 
     pub fn step_once(&mut self) -> Result<(f32, f32)> {
         let t0 = Instant::now();
-        let (x, y) = self.data.batch(0, self.step as u64, self.batch);
-        let out = self.rt.lora_step(
-            &self.key, &self.base, &self.trainable, &self.m, &self.v,
-            self.step as f32 + 1.0, self.cfg.lr_at(self.step),
-            &self.lqs_mask, &x, &y)?;
-        self.trainable = out.params;
-        self.m = out.m;
-        self.v = out.v;
+        let out = {
+            let _sp = crate::obs::span(crate::obs::Span::TrainStep);
+            let (x, y) = self.data.batch(0, self.step as u64, self.batch);
+            let out = self.rt.lora_step(
+                &self.key, &self.base, &self.trainable, &self.m, &self.v,
+                self.step as f32 + 1.0, self.cfg.lr_at(self.step),
+                &self.lqs_mask, &x, &y)?;
+            self.trainable = out.params;
+            self.m = out.m;
+            self.v = out.v;
+            out
+        };
+        let prof = crate::obs::enabled()
+            .then(|| crate::obs::drain_step(self.keep_trace));
+        let (prof_span_ns, prof_flops, prof_bytes_quant, quant_top) =
+            prof_fields(prof.as_ref());
+        if let Some(p) = prof {
+            self.trace.extend(p.events);
+        }
         self.metrics.push(StepRecord {
             step: self.step,
             loss: out.loss,
@@ -427,6 +502,10 @@ impl LoraTrainer {
             ctx_live_bytes: 0,
             ctx_peak_bytes: 0,
             ctx_compression: 1.0,
+            prof_span_ns,
+            prof_flops,
+            prof_bytes_quant,
+            quant_top,
         });
         self.step += 1;
         Ok((out.loss, out.acc))

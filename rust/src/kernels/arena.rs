@@ -69,6 +69,7 @@ fn track<T, R>(cell: &Cell<Vec<T>>, f: impl FnOnce(&mut Vec<T>) -> R) -> R {
     let r = f(&mut v);
     if v.capacity() > cap0 {
         GROWS.with(|g| g.set(g.get() + 1));
+        crate::obs::count(crate::obs::Counter::ArenaGrows, 1);
     }
     cell.set(v);
     r

@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use crate::kernels::pool;
+use crate::obs;
 
 /// Element family of the kernel being planned (f32 and i8 have
 /// different arithmetic density, so they get separate entries).
@@ -163,8 +164,10 @@ pub fn plan(n: usize, k: usize, m: usize, elem: Elem) -> Plan {
     let active = active_tier();
     let key = (n, k, m, elem, width, active);
     if let Some(p) = cache().lock().unwrap().get(&key) {
+        obs::count(obs::Counter::PlanHits, 1);
         return *p;
     }
+    obs::count(obs::Counter::PlanMisses, 1);
     let macs = n.saturating_mul(k).saturating_mul(m);
     let tasks = if width <= 1 || macs < PAR_MAC_FLOOR || n < 2 {
         1

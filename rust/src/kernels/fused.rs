@@ -26,6 +26,7 @@ use crate::kernels::arena;
 use crate::kernels::dispatch::{self, Tier};
 use crate::kernels::pool;
 use crate::kernels::simd;
+use crate::obs;
 use crate::quant;
 
 /// Minimum elements before a transform forks across the pool.
@@ -90,6 +91,7 @@ pub fn fwht_cols_amax(x: &mut [f32], rows: usize, cols: usize) -> f32 {
 fn fwht_quant(x: &[f32], rows: usize, cols: usize, bits: u8,
               transform_amax: fn(&mut [f32], usize, usize) -> f32)
               -> (Vec<i8>, f32) {
+    let _sp = obs::span(obs::Span::FwhtQuant);
     arena::with_f32(arena::FUSED, |t| {
         t.clear();
         t.extend_from_slice(x);
@@ -98,6 +100,7 @@ fn fwht_quant(x: &[f32], rows: usize, cols: usize, bits: u8,
         let mut q = vec![0i8; x.len()];
         simd::quantize_ps_into(dispatch::active_tier(), t, scale, bits,
                                &mut q);
+        obs::count(obs::Counter::BytesQuantized, q.len() as u64);
         (q, scale)
     })
 }
@@ -130,6 +133,7 @@ pub fn fwht_quant_cols(x: &[f32], rows: usize, cols: usize, bits: u8)
 pub fn quant_pack_rows(x: &[f32], rows: usize, cols: usize, bits: u8)
                        -> (Vec<u8>, Vec<f32>) {
     assert_eq!(x.len(), rows * cols);
+    let _sp = obs::span(obs::Span::QuantPackRows);
     let tier = dispatch::active_tier();
     let qmax = quant::qmax(bits) as f32;
     let mut scales = Vec::with_capacity(rows);
@@ -164,6 +168,7 @@ pub fn quant_pack_rows(x: &[f32], rows: usize, cols: usize, bits: u8)
             data.push(lo); // pad the final high nibble with 0
         }
     });
+    obs::count(obs::Counter::BytesPacked, data.len() as u64);
     (data, scales)
 }
 

@@ -39,6 +39,22 @@ use crate::kernels::arena;
 use crate::kernels::dispatch::{self, Elem, Tier};
 use crate::kernels::pool;
 use crate::kernels::simd;
+use crate::obs;
+
+/// Record the nominal 2·n·k·m FLOPs of one GEMM against the counter of
+/// the tier that actually executed it (no-op while tracing is off).
+fn count_flops(tier: Tier, n: usize, k: usize, m: usize) {
+    if !obs::enabled() {
+        return;
+    }
+    let fl = 2 * n as u64 * k as u64 * m as u64;
+    obs::count(match tier {
+                   Tier::Scalar => obs::Counter::FlopsScalar,
+                   Tier::Avx2 => obs::Counter::FlopsAvx2,
+                   Tier::Neon => obs::Counter::FlopsNeon,
+               },
+               fl);
+}
 
 /// Scalar-tier microkernel rows (register-tile height). SIMD tiers may
 /// use wider tiles — see `simd::f32_tile`.
@@ -221,6 +237,7 @@ fn run_rows<T: Send>(n: usize, m: usize, tasks: usize, out: &mut [T],
 
 fn gemm_f32(lhs: Lhs, a: &[f32], rhs: Rhs, b: &[f32], n: usize, k: usize,
             m: usize) -> Vec<f32> {
+    let _sp = obs::span(obs::Span::GemmF32);
     let mut out = vec![0.0f32; n * m];
     if n == 0 || m == 0 || k == 0 {
         return out;
@@ -231,12 +248,18 @@ fn gemm_f32(lhs: Lhs, a: &[f32], rhs: Rhs, b: &[f32], n: usize, k: usize,
     };
     if let Some(rows) = onehot {
         gather_rows(&rows, rhs, b, k, m, &mut out);
+        // the gather does n·m multiplies, not a dense contraction
+        count_flops(Tier::Scalar, n, 1, m);
         return out;
     }
     let plan = dispatch::plan(n, k, m, Elem::F32);
+    count_flops(plan.tier, n, k, m);
     let (_, nr) = simd::f32_tile(plan.tier);
     arena::with_f32(arena::RHS, |pb| {
-        pack_rhs_f32(rhs, b, k, m, nr, pb);
+        {
+            let _sp = obs::span(obs::Span::PackRhs);
+            pack_rhs_f32(rhs, b, k, m, nr, pb);
+        }
         let pb: &[f32] = pb;
         run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
             task_f32(plan.tier, lhs, a, pb, n, k, m, r0, r1, c);
@@ -396,7 +419,10 @@ fn task_f32(tier: Tier, lhs: Lhs, a: &[f32], pb: &[f32], n: usize, k: usize,
         while kbeg < k {
             let kend = k.min(kbeg + KC_F32);
             let kc = kend - kbeg;
-            pack_lhs_f32(lhs, a, n, k, r0, r1, kbeg, kend, mr, ap);
+            {
+                let _sp = obs::span(obs::Span::PackLhs);
+                pack_lhs_f32(lhs, a, n, k, r0, r1, kbeg, kend, mr, ap);
+            }
             for s in 0..strips_m {
                 let bs = &pb[(s * k + kbeg) * nr..(s * k + kend) * nr];
                 let cmax = nr.min(m - s * nr);
@@ -439,13 +465,18 @@ fn gemm_int_i32(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize)
     assert!(k <= max_k,
             "int GEMM depth {k} can overflow i32 (max {max_k})");
     debug_check_symmetric(src, b);
+    let _sp = obs::span(obs::Span::GemmI8);
     let mut out = vec![0i32; n * m];
     if n == 0 || m == 0 || k == 0 {
         return out;
     }
     let plan = dispatch::plan(n, k, m, Elem::I8);
+    count_flops(plan.tier, n, k, m);
     arena::with_i8(arena::I_RHS, |pb| {
-        pack_rhs_i8(b, k, m, pb);
+        {
+            let _sp = obs::span(obs::Span::PackRhs);
+            pack_rhs_i8(b, k, m, pb);
+        }
         let pb: &[i8] = pb;
         run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
             task_int(plan.tier, src, pb, n, k, m, r0, r1,
@@ -478,13 +509,21 @@ fn gemm_int_deq(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize,
             .map(|&v| v as f32 * scale)
             .collect();
     }
+    // span sits below the multi-block fallback: that path delegates to
+    // `gemm_int_i32`, whose own span/FLOP record covers it (a second
+    // record here would double-book the nested GemmI8 time)
+    let _sp = obs::span(obs::Span::GemmI8);
     let mut out = vec![0.0f32; n * m];
     if n == 0 || m == 0 || k == 0 {
         return out;
     }
     let plan = dispatch::plan(n, k, m, Elem::I8);
+    count_flops(plan.tier, n, k, m);
     arena::with_i8(arena::I_RHS, |pb| {
-        pack_rhs_i8(b, k, m, pb);
+        {
+            let _sp = obs::span(obs::Span::PackRhs);
+            pack_rhs_i8(b, k, m, pb);
+        }
         let pb: &[i8] = pb;
         run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
             task_int(plan.tier, src, pb, n, k, m, r0, r1,
@@ -611,7 +650,10 @@ fn task_int(tier: Tier, src: IntLhs, pb: &[i8], n: usize, k: usize, m: usize,
         while kbeg < k {
             let kend = k.min(kbeg + KC_I8);
             let kc = kend - kbeg;
-            pack_lhs_int(src, n, k, r0, r1, kbeg, kend, ap);
+            {
+                let _sp = obs::span(obs::Span::PackLhs);
+                pack_lhs_int(src, n, k, r0, r1, kbeg, kend, ap);
+            }
             for s in 0..strips_m {
                 let bs = &pb[(s * k + kbeg) * NR..(s * k + kend) * NR];
                 let cmax = NR.min(m - s * NR);

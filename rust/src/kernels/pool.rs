@@ -72,12 +72,19 @@ struct Region {
 }
 
 impl Region {
-    /// Steal-and-run until the cursor passes `tasks`.
-    fn drain(&self) {
+    /// Steal-and-run until the cursor passes `tasks`. `stolen` marks a
+    /// worker (non-submitter) draining — observability only; the
+    /// scheduling itself is identical either way, which is what keeps a
+    /// traced run bit-identical to an untraced one.
+    fn drain(&self, stolen: bool) {
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.tasks {
                 break;
+            }
+            let _sp = crate::obs::span(crate::obs::Span::PoolTask);
+            if stolen {
+                crate::obs::count(crate::obs::Counter::PoolSteals, 1);
             }
             (self.func)(i);
         }
@@ -141,7 +148,7 @@ fn worker_loop(pool: &'static Pool) {
                 // would wait forever); park the payload on the region
                 // and the caller re-raises it after the retire barrier
                 let result = std::panic::catch_unwind(
-                    std::panic::AssertUnwindSafe(|| region.drain()));
+                    std::panic::AssertUnwindSafe(|| region.drain(true)));
                 if let Err(payload) = result {
                     let mut slot = region.panic.lock().unwrap();
                     if slot.is_none() {
@@ -158,6 +165,7 @@ fn worker_loop(pool: &'static Pool) {
             // region already retired: remember the seq so we don't spin
             seen = st.seq;
         }
+        crate::obs::count(crate::obs::Counter::PoolParks, 1);
         st = pool.work_cv.wait(st).unwrap();
     }
 }
@@ -232,7 +240,7 @@ pub fn parallel_for(tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         pool.work_cv.notify_all();
     }
     let _retire = Retire { pool };
-    region.drain();
+    region.drain(false);
     drop(_retire);
     drop(guard);
     if let Some(payload) = region.panic.lock().unwrap().take() {

@@ -5,12 +5,24 @@
 //! blocked/threaded kernels in `kernels::gemm` are property-tested
 //! against — nothing outside this module and the kernel tests should
 //! call them on a hot path.
+//!
+//! Each oracle still books its nominal 2·n·k·m FLOPs against the
+//! scalar-tier counter so the bench binaries can derive GFLOP/s from
+//! the same telemetry for naive and blocked rows alike (the
+//! zero-skipping shortcuts don't change the nominal count).
+
+use crate::obs;
+
+fn count_flops(n: usize, k: usize, m: usize) {
+    obs::count(obs::Counter::FlopsScalar, 2 * n as u64 * k as u64 * m as u64);
+}
 
 /// y = x @ w.T: x (n, k), w (m, k) -> (n, m).
 pub fn matmul_nt(x: &[f32], w: &[f32], n: usize, k: usize, m: usize)
                  -> Vec<f32> {
     debug_assert_eq!(x.len(), n * k);
     debug_assert_eq!(w.len(), m * k);
+    count_flops(n, k, m);
     let mut out = vec![0.0f32; n * m];
     for r in 0..n {
         let xr = &x[r * k..(r + 1) * k];
@@ -31,6 +43,7 @@ pub fn matmul_nt(x: &[f32], w: &[f32], n: usize, k: usize, m: usize)
 pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), n * k);
     debug_assert_eq!(b.len(), k * m);
+    count_flops(n, k, m);
     let mut out = vec![0.0f32; n * m];
     for r in 0..n {
         for p in 0..k {
@@ -53,6 +66,7 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize)
                  -> Vec<f32> {
     debug_assert_eq!(a.len(), k * n);
     debug_assert_eq!(b.len(), k * m);
+    count_flops(n, k, m);
     let mut out = vec![0.0f32; n * m];
     for p in 0..k {
         let arow = &a[p * n..(p + 1) * n];
@@ -73,6 +87,7 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize)
 /// Integer GEMM a @ b with i32 accumulation: a (n, k), b (k, m) i8.
 pub fn matmul_i8_nn(a: &[i8], b: &[i8], n: usize, k: usize, m: usize)
                     -> Vec<i32> {
+    count_flops(n, k, m);
     let mut out = vec![0i32; n * m];
     for r in 0..n {
         for p in 0..k {
@@ -93,6 +108,7 @@ pub fn matmul_i8_nn(a: &[i8], b: &[i8], n: usize, k: usize, m: usize)
 /// Integer GEMM a.T @ b with i32 accumulation: a (k, n), b (k, m) i8.
 pub fn matmul_i8_tn(a: &[i8], b: &[i8], k: usize, n: usize, m: usize)
                     -> Vec<i32> {
+    count_flops(n, k, m);
     let mut out = vec![0i32; n * m];
     for p in 0..k {
         let arow = &a[p * n..(p + 1) * n];

@@ -26,6 +26,7 @@ pub mod data;
 pub mod hadamard;
 pub mod kernels;
 pub mod latsim;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

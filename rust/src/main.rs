@@ -23,6 +23,8 @@ use hot::util::args::Args;
 use hot::util::timer::Table;
 
 fn main() -> Result<()> {
+    hot::util::log::init_from_env();
+    hot::obs::init_from_env();
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
@@ -38,7 +40,9 @@ fn main() -> Result<()> {
                  common: --backend native|pjrt|auto --artifacts DIR\n\
                          --preset NAME --variant V --steps N --batch N\n\
                          --lr F --mode fused|split|accum --accum N\n\
-                         --threads N --seed N --config run.json"
+                         --threads N --seed N --config run.json\n\
+                         --trace-out trace.json (Chrome-trace; HOT_TRACE=1\n\
+                         enables counters without the event dump)"
             );
             Ok(())
         }
@@ -95,6 +99,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let rt = executor(args, &cfg)?;
     let mut tr = Trainer::new(rt, cfg)?;
+    let trace_out = args.get("trace-out").map(String::from);
+    if trace_out.is_some() {
+        // --trace-out implies tracing and keeps the raw span events
+        hot::obs::set_trace_enabled(true);
+        tr.keep_trace = true;
+    }
     if let Some(ck) = args.get("resume") {
         tr.resume(ck)?;
         hot::info!("resumed from {ck} at step {}", tr.step);
@@ -120,6 +130,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(csv) = args.get("csv") {
         tr.metrics.save_csv(csv)?;
         println!("metrics -> {csv}");
+    }
+    if let Some(path) = trace_out {
+        hot::obs::chrome::write_trace(&path, &tr.trace)?;
+        println!("trace -> {path} ({} events)", tr.trace.len());
+        let telem = tr.quant_telemetry();
+        for (name, err) in telem.ranked().into_iter().take(5) {
+            println!("quant err {name}: {err:.3e}");
+        }
     }
     Ok(())
 }

@@ -19,6 +19,24 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// One-shot init from `HOT_LOG` (debug|info|warn|error). Call from the
+/// binaries' entry points; unknown or unset values keep the default
+/// (info). Idempotent: the env var is only consulted once.
+pub fn init_from_env() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        if let Ok(v) = std::env::var("HOT_LOG") {
+            match v.to_ascii_lowercase().as_str() {
+                "debug" => set_level(Level::Debug),
+                "info" => set_level(Level::Info),
+                "warn" => set_level(Level::Warn),
+                "error" => set_level(Level::Error),
+                _ => {}
+            }
+        }
+    });
+}
+
 pub fn enabled(l: Level) -> bool {
     l as u8 >= LEVEL.load(Ordering::Relaxed)
 }

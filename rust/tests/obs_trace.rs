@@ -1,0 +1,137 @@
+//! Observability must never perturb training.
+//!
+//! Two properties, checked sequentially in one test body because the
+//! trace knob is process-global:
+//!
+//!   1. bit-identity — with a 2-thread pool, the loss trajectory and
+//!      final parameters are bit-for-bit identical with HOT_TRACE on vs
+//!      off (span pushes never block, so scheduling is undisturbed);
+//!   2. disabled-mode overhead — the cost of obs calls when tracing is
+//!      off (one relaxed atomic load each) times the number of calls a
+//!      step makes is under 1% of the measured step time.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hot::backend::{Executor, NativeBackend};
+use hot::config::RunConfig;
+use hot::coordinator::{Mode, Trainer};
+
+const STEPS: usize = 6;
+
+fn cfg() -> RunConfig {
+    let mut c = RunConfig::default();
+    c.preset = "tiny".into();
+    c.variant = "hot".into();
+    c.steps = STEPS;
+    c.batch = 32;
+    c.calib_batches = 0;
+    c.warmup_steps = 2;
+    c.lr = 3e-3;
+    c.eval_every = 0;
+    c
+}
+
+struct Run {
+    losses: Vec<f32>,
+    params: Vec<Vec<f32>>,
+    trace: Vec<hot::obs::TraceEvent>,
+    tr: Trainer,
+}
+
+fn run(trace: bool) -> Run {
+    let rt: Arc<dyn Executor> = Arc::new(NativeBackend::with_threads(2));
+    hot::obs::set_trace_enabled(trace);
+    let mut tr = Trainer::new(rt, cfg()).unwrap();
+    tr.keep_trace = trace;
+    let mut losses = Vec::new();
+    for _ in 0..STEPS {
+        let (l, _) = tr.step_once(Mode::Fused).unwrap();
+        losses.push(l);
+    }
+    hot::obs::set_trace_enabled(false);
+    let params = tr
+        .params
+        .iter()
+        .map(|p| p.as_f32().unwrap().to_vec())
+        .collect();
+    let trace = std::mem::take(&mut tr.trace);
+    Run { losses, params, trace, tr }
+}
+
+#[test]
+fn trace_is_invisible_to_training() {
+    let off = run(false);
+    let on = run(true);
+
+    // -- 1. bit-identity ------------------------------------------------
+    assert_eq!(off.losses, on.losses,
+               "loss trajectory must be bit-identical with tracing on");
+    assert_eq!(off.params.len(), on.params.len());
+    for (i, (a, b)) in off.params.iter().zip(&on.params).enumerate() {
+        assert_eq!(a, b, "param {i} diverged under tracing");
+    }
+
+    // the traced run actually produced events and telemetry
+    assert!(!on.trace.is_empty(), "traced run kept no events");
+    let train_steps = on.trace.iter()
+        .filter(|e| e.name() == "train_step")
+        .count();
+    assert_eq!(train_steps, STEPS, "one train_step span per step");
+    assert!(!on.tr.last_quant.is_empty(),
+            "hot variant must report per-layer quantizer telemetry");
+    for r in &on.tr.metrics.records {
+        assert!(r.prof_span_ns > 0, "step {}: no span time", r.step);
+        assert!(r.prof_flops > 0, "step {}: no flops counted", r.step);
+        assert!(r.prof_bytes_quant > 0, "step {}: no quant bytes", r.step);
+        assert!(!r.quant_top.is_empty(), "step {}: no quant_top", r.step);
+    }
+    // span coverage: fwd+bwd+opt are nested inside train_step on the
+    // main thread, so their time can never exceed it — and together
+    // they must account for the bulk of it (debug builds inflate the
+    // untraced glue, hence the loose 60% floor here; CI pins 80% on
+    // the release binary)
+    let sum_ns = |name: &str| -> u64 {
+        on.trace.iter().filter(|e| e.name() == name)
+            .map(|e| e.dur_ns()).sum()
+    };
+    let cov = sum_ns("fwd") + sum_ns("bwd") + sum_ns("opt_step");
+    let steps_ns = sum_ns("train_step");
+    assert!(cov <= steps_ns,
+            "nested spans exceed train_step: {cov} > {steps_ns}");
+    assert!(cov as f64 >= 0.6 * steps_ns as f64,
+            "fwd+bwd+opt cover only {cov} of {steps_ns} train_step ns");
+    // untraced run recorded zeros (obs off -> no profile columns)
+    for r in &off.tr.metrics.records {
+        assert_eq!(r.prof_span_ns, 0);
+        assert!(r.quant_top.is_empty());
+    }
+
+    // -- 2. disabled-mode overhead -------------------------------------
+    // Measure the primitive cost of disabled obs calls (one span + one
+    // counter, each a single relaxed load), then bound per-step obs cost
+    // as (calls per step) x (cost per call). The traced run's event
+    // count tells us how many span sites fire per step; counter and
+    // set_layer sites are fewer than 2x that, so 2 pairs (4 calls) per
+    // event is a conservative ceiling.
+    assert!(!hot::obs::enabled());
+    let iters = 1_000_000u32;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let sp = hot::obs::span(hot::obs::Span::GemmF32);
+        std::hint::black_box(&sp);
+        hot::obs::count(hot::obs::Counter::FlopsScalar, 1);
+    }
+    let per_pair = t0.elapsed().as_secs_f64() / iters as f64;
+
+    let events_per_step = on.trace.len() as f64 / STEPS as f64;
+    let obs_cost_per_step = events_per_step * 2.0 * per_pair;
+    let step_time = off.tr.metrics.mean_step_time();
+    assert!(step_time > 0.0);
+    let ratio = obs_cost_per_step / step_time;
+    assert!(ratio < 0.01,
+            "disabled-mode obs overhead {:.4}% of step time (events/step \
+             {:.0}, cost/call {:.1}ns, step {:.3}ms)",
+            ratio * 100.0, events_per_step, per_pair * 1e9,
+            step_time * 1e3);
+}
