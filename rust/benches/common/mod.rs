@@ -20,11 +20,11 @@ pub fn steps(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// Backend for the benches: PJRT over real artifacts when compiled in
-/// and available, the native CPU backend otherwise — so the bench
-/// trajectories populate on any machine. `HOT_THREADS` pins the kernel
-/// pool budget (benches have no CLI, so the knob rides an env var).
-pub fn executor_or_exit() -> Arc<dyn Executor> {
+/// Shared bench entry point: logging + obs env knobs (`HOT_LOG`,
+/// `HOT_TRACE`) and the `HOT_THREADS` kernel-pool budget. Every bench
+/// binary calls this (directly or via `executor_or_exit`) before any
+/// timing, so env-knob handling cannot drift per binary.
+pub fn init() {
     hot::util::log::init_from_env();
     hot::obs::init_from_env();
     if let Some(t) = std::env::var("HOT_THREADS")
@@ -33,6 +33,14 @@ pub fn executor_or_exit() -> Arc<dyn Executor> {
     {
         hot::kernels::set_num_threads(t);
     }
+}
+
+/// Backend for the benches: PJRT over real artifacts when compiled in
+/// and available, the native CPU backend otherwise — so the bench
+/// trajectories populate on any machine. `HOT_THREADS` pins the kernel
+/// pool budget (benches have no CLI, so the knob rides an env var).
+pub fn executor_or_exit() -> Arc<dyn Executor> {
+    init();
     match hot::backend::by_name("auto", DIR) {
         Ok(rt) => {
             hot::info!("bench backend: {}", rt.name());

@@ -1,189 +1,26 @@
-//! End-to-end coordinator throughput (ours; no direct paper analog —
-//! this is the L3 perf gate for EXPERIMENTS.md §Perf).
+//! End-to-end coordinator throughput — thin shim over the shared
+//! harness.
 //!
-//! Measures steady-state step time for fused / split / accum modes on
-//! the active backend (native by default — no artifacts needed), breaks
-//! out the data-generation share, and emits a machine-readable
-//! `BENCH_e2e.json` so the bench trajectory populates run over run.
+//! `cargo bench --bench e2e_throughput` runs exactly the e2e suite of
+//! `hot bench` (`hot::bench::suites::run_e2e`): per-step sampling
+//! through the cell runner (no hand-rolled `Instant` loops here),
+//! robust stats, obs-counter work totals, schema-v2 `BENCH_e2e.json`.
+//! `HOT_BENCH_STEPS` doubles as the smoke switch (tiny preset only)
+//! and, when numeric, the per-cell step count.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use std::collections::BTreeMap;
-use std::sync::Arc;
-use std::time::Instant;
-
-use hot::backend::Executor;
-use hot::config::RunConfig;
-use hot::coordinator::{Mode, Trainer};
-use hot::util::json::Json;
-use hot::util::timer::Table;
-
-struct ModeResult {
-    preset: String,
-    mode: &'static str,
-    threads: usize,
-    simd: bool,
-    step_s: f64,
-    data_s: f64,
-    /// mean FLOPs/step from the kernels' own obs counters (not a model)
-    flops_per_step: f64,
-    /// mean bytes through the quantization epilogues per step
-    bytes_q_per_step: f64,
-}
-
-struct ModeTimings {
-    step_s: f64,
-    data_s: f64,
-    flops_per_step: f64,
-    bytes_q_per_step: f64,
-}
-
-fn bench_mode(rt: Arc<dyn Executor>, preset: &str, mode: Mode,
-              steps: usize) -> ModeTimings {
-    let mut cfg = RunConfig::default();
-    cfg.preset = preset.into();
-    cfg.variant = "hot".into();
-    cfg.steps = steps;
-    cfg.batch = 16;
-    cfg.calib_batches = 0;
-    if mode == Mode::Accum {
-        cfg.accum = 2; // measure real accumulation, not a degenerate loop
-    }
-    let mut tr = Trainer::new(rt, cfg).expect("trainer");
-    // tracing stays on for the whole run: the per-step StepRecord then
-    // carries the counter deltas the rows below consume, and its cost
-    // is bounded <1% by the obs_trace overhead test
-    hot::obs::set_trace_enabled(true);
-    tr.step_once(mode).expect("warmup/compile");
-    let t0 = Instant::now();
-    for _ in 1..steps {
-        tr.step_once(mode).expect("step");
-    }
-    let total = t0.elapsed().as_secs_f64() / (steps - 1) as f64;
-    hot::obs::set_trace_enabled(false);
-    // steady-state counter means, warmup record excluded
-    let tail = &tr.metrics.records[1..];
-    let flops_per_step = tail.iter().map(|r| r.prof_flops as f64)
-        .sum::<f64>() / tail.len() as f64;
-    let bytes_q_per_step = tail.iter().map(|r| r.prof_bytes_quant as f64)
-        .sum::<f64>() / tail.len() as f64;
-    // data-generation-only overhead estimate
-    let t1 = Instant::now();
-    for i in 0..20 {
-        std::hint::black_box(tr.data.batch(0, i, tr.batch_size()));
-    }
-    let data_s = t1.elapsed().as_secs_f64() / 20.0;
-    ModeTimings { step_s: total, data_s, flops_per_step, bytes_q_per_step }
-}
-
 fn main() {
     let rt = common::executor_or_exit();
-    let steps = common::steps(12).max(4);
-    let max_threads = hot::kernels::num_threads();
-    // (threads, simd) cells: the kernel pool and SIMD tier only drive
-    // the native backend; sweeping them under PJRT would record
-    // duplicate rows as fake scaling signal. The (1, scalar) cell is
-    // the baseline the SIMD-tier step-time delta is read against.
-    let simd_avail =
-        hot::kernels::active_tier() != hot::kernels::Tier::Scalar;
-    let mut cells = vec![(1usize, true)];
-    if rt.name() == "native" {
-        if simd_avail {
-            cells.push((1, false));
-        }
-        if max_threads > 1 {
-            cells.push((max_threads, true));
-        }
-    }
-    let mut results: Vec<ModeResult> = Vec::new();
-    let mut t = Table::new(&["preset", "mode", "threads", "simd",
-                             "step time", "steps/s", "GFLOP/s",
-                             "data-gen share"]);
-    for preset in ["tiny", "small", "base"] {
-        for (name, mode) in [("fused", Mode::Fused), ("split", Mode::Split),
-                             ("accum", Mode::Accum)] {
-            // base is heavy: fused only, so the bench stays bounded
-            if preset == "base" && mode != Mode::Fused {
-                continue;
-            }
-            let needed = match mode {
-                Mode::Fused => format!("train_hot_{preset}"),
-                Mode::Split => format!("fwd_hot_{preset}"),
-                Mode::Accum => format!("grad_hot_{preset}"),
-            };
-            if !rt.supports(&needed) {
-                continue;
-            }
-            // base steps are ~100x tiny steps; fewer samples keep the
-            // bench bounded without losing the steady-state signal
-            let steps = if preset == "base" { steps.min(4) } else { steps };
-            for &(threads, simd) in &cells {
-                hot::kernels::set_num_threads(threads);
-                hot::kernels::set_simd_enabled(simd);
-                // record what actually ran, not what was requested: on
-                // scalar-only hardware (or under PJRT, which bypasses
-                // the kernel pool entirely) the row must not claim a
-                // SIMD tier it never had
-                let effective =
-                    simd && simd_avail && rt.name() == "native";
-                let tm = bench_mode(rt.clone(), preset, mode, steps);
-                t.row(&[preset.into(), name.into(), threads.to_string(),
-                        if effective { "on" } else { "off" }.into(),
-                        format!("{:.1} ms", tm.step_s * 1e3),
-                        format!("{:.2}", 1.0 / tm.step_s),
-                        format!("{:.2}",
-                                tm.flops_per_step / tm.step_s / 1e9),
-                        format!("{:.1}%", 100.0 * tm.data_s / tm.step_s)]);
-                results.push(ModeResult {
-                    preset: preset.into(), mode: name, threads,
-                    simd: effective, step_s: tm.step_s, data_s: tm.data_s,
-                    flops_per_step: tm.flops_per_step,
-                    bytes_q_per_step: tm.bytes_q_per_step,
-                });
-            }
-        }
-    }
-    hot::kernels::set_num_threads(0);
-    hot::kernels::set_simd_enabled(true);
-    t.print(&format!("end-to-end throughput (HOT variant, {} backend)",
-                     rt.name()));
-
-    // machine-readable trajectory point
-    let mut root = BTreeMap::new();
-    root.insert("bench".to_string(), Json::Str("e2e_throughput".into()));
-    root.insert("backend".to_string(), Json::Str(rt.name().into()));
-    root.insert("tier".to_string(),
-                Json::Str(hot::kernels::active_tier().name().into()));
-    // distinguishes real runs of this binary from modeled artifacts a
-    // toolchain-less container may have committed
-    root.insert("provenance".to_string(), Json::Str("measured".into()));
-    root.insert("steps".to_string(), Json::Num(steps as f64));
-    let rows: Vec<Json> = results
-        .iter()
-        .map(|r| {
-            let mut m = BTreeMap::new();
-            m.insert("preset".to_string(), Json::Str(r.preset.clone()));
-            m.insert("mode".to_string(), Json::Str(r.mode.into()));
-            m.insert("threads".to_string(), Json::Num(r.threads as f64));
-            m.insert("simd".to_string(), Json::Bool(r.simd));
-            m.insert("step_ms".to_string(), Json::Num(r.step_s * 1e3));
-            m.insert("steps_per_sec".to_string(), Json::Num(1.0 / r.step_s));
-            m.insert("datagen_share".to_string(),
-                     Json::Num(r.data_s / r.step_s));
-            m.insert("flops_per_step".to_string(),
-                     Json::Num(r.flops_per_step));
-            m.insert("bytes_quantized_per_step".to_string(),
-                     Json::Num(r.bytes_q_per_step));
-            m.insert("gflops".to_string(),
-                     Json::Num(r.flops_per_step / r.step_s / 1e9));
-            Json::Obj(m)
-        })
-        .collect();
-    root.insert("results".to_string(), Json::Arr(rows));
+    let smoke = std::env::var("HOT_BENCH_STEPS").is_ok();
+    let steps = common::steps(12);
     let path = "BENCH_e2e.json";
-    match std::fs::write(path, Json::Obj(root).to_string()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => hot::warn_!("could not write {path}: {e}"),
+    match hot::bench::suites::run_e2e(rt, smoke, steps) {
+        Ok(report) => match report.save(path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => hot::warn_!("could not write {path}: {e}"),
+        },
+        Err(e) => hot::warn_!("e2e suite failed: {e}"),
     }
 }

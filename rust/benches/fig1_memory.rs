@@ -1,10 +1,14 @@
 //! Fig 1 — training memory vs batch size for ViT-B on a 24 GB device.
 //! Paper: FP (and LBP/LUQ) OOM at batch 256; HOT trains up to 1024.
 
+#[path = "common/mod.rs"]
+mod common;
+
 use hot::costmodel::{breakdown, max_feasible_batch, zoo, MemMethod};
 use hot::util::timer::Table;
 
 fn main() {
+    common::init();
     let spec = zoo::vit_b();
     let batches = [64, 128, 256, 512, 1024];
     let methods: [(&str, MemMethod); 4] = [

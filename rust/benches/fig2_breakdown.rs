@@ -1,10 +1,14 @@
 //! Fig 2 — component-wise memory breakdown, ViT-B @ batch 256.
 //! Paper: intermediate activations dominate; HOT collapses that bar.
 
+#[path = "common/mod.rs"]
+mod common;
+
 use hot::costmodel::{breakdown, zoo, MemMethod};
 use hot::util::timer::Table;
 
 fn main() {
+    common::init();
     let spec = zoo::vit_b();
     let batch = 256;
     let mut t = Table::new(&["method", "weights", "optimizer", "grads",

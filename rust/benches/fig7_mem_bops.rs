@@ -3,10 +3,14 @@
 //! Paper: HOT cuts memory up to 86% (ResNet-50) / 75% (ViT) and compute
 //! ~64-65% vs FP, beating LBP-WHT and LUQ on compute.
 
+#[path = "common/mod.rs"]
+mod common;
+
 use hot::costmodel::{breakdown, model_bops, zoo, MemMethod, Method};
 use hot::util::timer::Table;
 
 fn main() {
+    common::init();
     let specs = [zoo::resnet50(), zoo::vit_b(), zoo::efficientformer_l7()];
     let mem_methods: [(&str, MemMethod); 3] = [
         ("FP", MemMethod::Fp32),

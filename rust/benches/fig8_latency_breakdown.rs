@@ -3,12 +3,16 @@
 //! LBP-WHT vs HOT. Paper: integer GEMM collapses the GEMM bar (182μs ->
 //! 25μs on ViT-B qkv); HT+HLA overhead ~16% of FP.
 
+#[path = "common/mod.rs"]
+mod common;
+
 use hot::costmodel::zoo::Layer;
 use hot::costmodel::Method;
 use hot::latsim::{pipeline, total_us, RTX_3090};
 use hot::util::timer::Table;
 
 fn main() {
+    common::init();
     let layers = [
         ("ResNet-50", Layer::new("layer4.conv2", 49, 512, 4608)),
         ("ViT-B", Layer::new("qkv", 197, 2304, 768)),

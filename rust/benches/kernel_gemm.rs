@@ -1,198 +1,21 @@
-//! GEMM kernel throughput: naive oracle vs the scalar tier vs the SIMD
-//! tier (AVX2/NEON), f32 and i8, across thread budgets — the perf gate
-//! for the `rust/src/kernels/` subsystem (ours; no direct paper analog,
-//! but it is the compute story behind the paper's Table 6 speedups).
+//! GEMM kernel throughput — thin shim over the shared harness.
 //!
-//! Emits `BENCH_kernels.json` with GFLOP/s (f32) / GOP/s (i8) per
-//! (size, impl, threads) plus a `deltas` block recording the
-//! scalar-vs-SIMD speedup per (kind, size) at one thread — the number
-//! the SIMD-tier acceptance gate reads (>= 2x for f32 at 512^3 on any
-//! AVX2/NEON machine). `HOT_BENCH_STEPS` (any value) switches to the
-//! CI smoke sizing: small shapes, short budgets, same schema.
-//!
-//! FLOP counts come from the obs counters the kernels themselves bump
-//! (one instrumented run per cell with tracing enabled, tracing off for
-//! the timed loop) rather than a hand-computed 2n^3 — so shortcut paths
-//! (one-hot gathers, zero-skipping) are billed for the work they do.
+//! `cargo bench --bench kernel_gemm` runs exactly the kernels suite of
+//! `hot bench` (`hot::bench::suites::run_kernels`): same cells, same
+//! warmup/MAD methodology, same schema-v2 `BENCH_kernels.json`. All
+//! methodology lives in `rust/src/bench/`; this file only selects the
+//! smoke tier and writes the report. `HOT_BENCH_STEPS` (any value)
+//! keeps its historical meaning as the CI smoke switch.
 
-use std::collections::BTreeMap;
-use std::time::Duration;
-
-use hot::kernels::{self, reference, Tier};
-use hot::util::json::Json;
-use hot::util::prng::Pcg32;
-use hot::util::timer::{bench, Table};
-
-struct Point {
-    kind: &'static str,
-    size: usize,
-    imp: &'static str,
-    threads: usize,
-    gflops: f64,
-}
-
-/// FLOPs one invocation of `f` performs, read off the kernels' own obs
-/// counters (tracing is flipped on only for this single untimed run).
-fn counted_flops<F: FnMut()>(mut f: F) -> u64 {
-    hot::obs::set_trace_enabled(true);
-    let before = hot::obs::flops_total();
-    f();
-    let fl = hot::obs::flops_total() - before;
-    hot::obs::set_trace_enabled(false);
-    fl
-}
-
-fn gflops(flops: u64, secs: f64) -> f64 {
-    flops as f64 / secs / 1e9
-}
-
-fn bench_size(size: usize, budget_ms: u64, simd_avail: bool,
-              points: &mut Vec<Point>) {
-    let mut rng = Pcg32::seeded(size as u64);
-    let a: Vec<f32> = (0..size * size).map(|_| rng.normal()).collect();
-    let b: Vec<f32> = (0..size * size).map(|_| rng.normal()).collect();
-    let qa: Vec<i8> =
-        (0..size * size).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
-    let qb: Vec<i8> =
-        (0..size * size).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
-    let budget = Duration::from_millis(budget_ms);
-
-    // naive oracles (single-threaded by construction); skipped at large
-    // sizes where a naive iteration alone would blow the budget
-    if size <= 256 {
-        let fl = counted_flops(|| {
-            std::hint::black_box(reference::matmul(&a, &b, size, size, size));
-        });
-        let st = bench(1, budget, 64, || {
-            std::hint::black_box(reference::matmul(&a, &b, size, size, size));
-        });
-        points.push(Point { kind: "f32", size, imp: "naive", threads: 1,
-                            gflops: gflops(fl, st.median_s) });
-        let fl = counted_flops(|| {
-            std::hint::black_box(reference::matmul_i8_nn(&qa, &qb, size, size,
-                                                         size));
-        });
-        let st = bench(1, budget, 64, || {
-            std::hint::black_box(reference::matmul_i8_nn(&qa, &qb, size, size,
-                                                         size));
-        });
-        points.push(Point { kind: "i8", size, imp: "naive", threads: 1,
-                            gflops: gflops(fl, st.median_s) });
-    }
-
-    // blocked kernels: scalar tier vs SIMD tier at 1 / 2 / 4 threads
-    for (imp, simd) in [("scalar", false), ("simd", true)] {
-        if simd && !simd_avail {
-            continue;
-        }
-        kernels::set_simd_enabled(simd);
-        for threads in [1usize, 2, 4] {
-            kernels::set_num_threads(threads);
-            let fl = counted_flops(|| {
-                std::hint::black_box(kernels::gemm_f32_nn(&a, &b, size, size,
-                                                          size));
-            });
-            let st = bench(1, budget, 64, || {
-                std::hint::black_box(kernels::gemm_f32_nn(&a, &b, size, size,
-                                                          size));
-            });
-            points.push(Point { kind: "f32", size, imp, threads,
-                                gflops: gflops(fl, st.median_s) });
-            let fl = counted_flops(|| {
-                std::hint::black_box(kernels::gemm_i8_nn(&qa, &qb, size, size,
-                                                         size));
-            });
-            let st = bench(1, budget, 64, || {
-                std::hint::black_box(kernels::gemm_i8_nn(&qa, &qb, size, size,
-                                                         size));
-            });
-            points.push(Point { kind: "i8", size, imp, threads,
-                                gflops: gflops(fl, st.median_s) });
-        }
-    }
-    kernels::set_simd_enabled(true);
-    kernels::set_num_threads(0);
-}
+#[path = "common/mod.rs"]
+mod common;
 
 fn main() {
-    let tier = hot::kernels::active_tier();
-    let simd_avail = tier != Tier::Scalar;
-    // CI smoke mode: the memory-bench smoke convention (HOT_BENCH_STEPS
-    // set) trims sizes/budgets so the step stays fast while still
-    // exercising every (impl, threads) cell and the JSON contract
+    common::init();
     let smoke = std::env::var("HOT_BENCH_STEPS").is_ok();
-    let sizes: &[(usize, u64)] = if smoke {
-        &[(64, 40), (128, 80)]
-    } else {
-        &[(64, 150), (128, 250), (256, 600), (512, 1500)]
-    };
-    let mut points: Vec<Point> = Vec::new();
-    for &(size, budget_ms) in sizes {
-        bench_size(size, budget_ms, simd_avail, &mut points);
-    }
-
-    let find = |kind: &str, size: usize, imp: &str, threads: usize| {
-        points
-            .iter()
-            .find(|q| q.kind == kind && q.size == size && q.imp == imp
-                  && q.threads == threads)
-            .map(|q| q.gflops)
-    };
-    let mut t = Table::new(&["kind", "size", "impl", "threads", "GFLOP/s",
-                             "vs scalar@1t"]);
-    for p in &points {
-        let base = find(p.kind, p.size, "scalar", 1).unwrap_or(f64::NAN);
-        t.row(&[p.kind.into(), format!("{0}x{0}x{0}", p.size), p.imp.into(),
-                p.threads.to_string(), format!("{:.2}", p.gflops),
-                format!("{:.2}x", p.gflops / base)]);
-    }
-    t.print(&format!("GEMM kernels: naive vs scalar vs simd (tier: {})",
-                     tier.name()));
-
-    let rows: Vec<Json> = points
-        .iter()
-        .map(|p| {
-            let mut m = BTreeMap::new();
-            m.insert("kind".to_string(), Json::Str(p.kind.into()));
-            m.insert("n".to_string(), Json::Num(p.size as f64));
-            m.insert("k".to_string(), Json::Num(p.size as f64));
-            m.insert("m".to_string(), Json::Num(p.size as f64));
-            m.insert("impl".to_string(), Json::Str(p.imp.into()));
-            m.insert("threads".to_string(), Json::Num(p.threads as f64));
-            m.insert("gflops".to_string(), Json::Num(p.gflops));
-            Json::Obj(m)
-        })
-        .collect();
-    // scalar-vs-SIMD deltas at 1 thread: the acceptance-gate numbers
-    let mut deltas: Vec<Json> = Vec::new();
-    if simd_avail {
-        for &(size, _) in sizes {
-            for kind in ["f32", "i8"] {
-                let (Some(s), Some(v)) = (find(kind, size, "scalar", 1),
-                                          find(kind, size, "simd", 1))
-                else {
-                    continue;
-                };
-                let mut m = BTreeMap::new();
-                m.insert("kind".to_string(), Json::Str(kind.into()));
-                m.insert("size".to_string(), Json::Num(size as f64));
-                m.insert("scalar_gflops".to_string(), Json::Num(s));
-                m.insert("simd_gflops".to_string(), Json::Num(v));
-                m.insert("speedup".to_string(), Json::Num(v / s));
-                deltas.push(Json::Obj(m));
-            }
-        }
-    }
-    let mut root = BTreeMap::new();
-    root.insert("bench".to_string(), Json::Str("kernel_gemm".into()));
-    root.insert("tier".to_string(), Json::Str(tier.name().into()));
-    // distinguishes real runs of this binary from the C-mirror /
-    // modeled artifacts a toolchain-less container may have committed
-    root.insert("provenance".to_string(), Json::Str("measured".into()));
-    root.insert("results".to_string(), Json::Arr(rows));
-    root.insert("deltas".to_string(), Json::Arr(deltas));
+    let report = hot::bench::suites::run_kernels(smoke);
     let path = "BENCH_kernels.json";
-    match std::fs::write(path, Json::Obj(root).to_string()) {
+    match report.save(path) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => hot::warn_!("could not write {path}: {e}"),
     }

@@ -150,8 +150,30 @@ fn main() {
         }
     }
 
+    // schema-v2 provenance envelope (same keys as the harness suites;
+    // the result rows stay byte-centric — there is no timing block to
+    // compare, so `hot bench --check` does not gate this file)
+    let smoke = std::env::var("HOT_BENCH_STEPS").is_ok();
+    let host = hot::bench::roofline::host(smoke);
+    let mut hostj = BTreeMap::new();
+    hostj.insert("fingerprint".to_string(), Json::Str(host.fingerprint));
+    hostj.insert("threads_avail".to_string(),
+                 Json::Num(host.threads_avail as f64));
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("memory".into()));
+    root.insert("schema_version".to_string(),
+                Json::Num(hot::bench::SCHEMA_VERSION as f64));
+    root.insert("provenance".to_string(),
+                Json::Str(hot::bench::PROVENANCE_MEASURED.into()));
+    root.insert("provenance_detail".to_string(),
+                Json::Str("ctx byte accounting from a real split-mode \
+                           training run on the native backend".into()));
+    root.insert("git_sha".to_string(),
+                Json::Str(hot::bench::record::git_sha()));
+    root.insert("host".to_string(), Json::Obj(hostj));
+    root.insert("tier".to_string(),
+                Json::Str(hot::kernels::active_tier().name().into()));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
     root.insert("backend".to_string(), Json::Str(rt.name().into()));
     root.insert("steps".to_string(), Json::Num(steps as f64));
     let jrows: Vec<Json> = rows

@@ -4,11 +4,15 @@
 //! HOT overhead ~11.5 MFlops (<10%); overhead negligible when
 //! log n << dims.
 
+#[path = "common/mod.rs"]
+mod common;
+
 use hot::costmodel::zoo::{table6_layers, Layer};
 use hot::costmodel::{overhead_flops, total_flops, Method};
 use hot::util::timer::Table;
 
 fn main() {
+    common::init();
     let mut t = Table::new(&["layer", "(L,O,I)", "vanilla MF", "HOT ovh MF",
                              "ovh %", "HOT total MF"]);
     let mut rows: Vec<(String, Layer)> = table6_layers();

@@ -2,12 +2,16 @@
 //! Paper: HOT 1.6-3.3x vs FP per layer, ~2.6x avg on ViT-B, beating
 //! LBP-WHT throughout.
 
+#[path = "common/mod.rs"]
+mod common;
+
 use hot::costmodel::zoo::{table6_layers, vit_b, Layer};
 use hot::costmodel::Method;
 use hot::latsim::{avg_speedup, total_us, RTX_3090};
 use hot::util::timer::Table;
 
 fn main() {
+    common::init();
     // the paper's measured values for reference columns
     let paper: &[(&str, f64, f64, f64)] = &[
         ("layer1.conv1", 115.0, 106.0, 62.0),

@@ -1,0 +1,474 @@
+//! Baseline comparison: diff a fresh `BenchReport` against a committed
+//! one, with per-cell noise-aware tolerances.
+//!
+//! The tolerance for each cell is derived from the **baseline's own
+//! dispersion** — a cell whose baseline MAD is 1% of its median gets a
+//! tight gate, a noisy cell gets a loose one — never a single global
+//! percentage. A floor keeps quantization of very quiet cells from
+//! producing zero-width gates (which would flag every rerun).
+//!
+//! Perf gating is fingerprint-gated: when the two reports come from
+//! different machines (`host.fingerprint` mismatch — the usual case
+//! for a CI runner checking a baseline measured elsewhere), timing
+//! comparisons are rendered for information but never fail the check;
+//! only schema/provenance structure is enforced. On a fingerprint
+//! match the full dispersion-derived gates apply and
+//! `CompareOutcome::failed()` drives the nonzero exit of
+//! `hot bench --check`.
+
+use std::collections::BTreeMap;
+
+use crate::bench::record::BenchReport;
+use crate::bench::stats::Robust;
+
+/// Minimum allowed slowdown before a cell can ever be called a
+/// regression: quiet cells (MAD ≈ 0) still tolerate scheduler-level
+/// run-to-run drift.
+pub const TOL_FLOOR: f64 = 0.10;
+
+/// How many baseline relative MADs of slowdown to allow.
+pub const TOL_MAD_K: f64 = 4.0;
+
+/// Per-cell allowed relative slowdown, from the baseline's own
+/// dispersion: `max(K × MAD/median, (p90−p10)/median, floor)`.
+pub fn tolerance(base: &Robust) -> f64 {
+    if base.median_s <= 0.0 {
+        return TOL_FLOOR;
+    }
+    let rel_mad = base.mad_s / base.median_s;
+    let rel_spread =
+        ((base.p90_s - base.p10_s) / base.median_s).max(0.0);
+    (TOL_MAD_K * rel_mad).max(rel_spread).max(TOL_FLOOR)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// within tolerance
+    Ok,
+    /// fresh median slower than baseline × (1 + tol)
+    Regression,
+    /// fresh median faster than baseline × (1 − tol) — informational
+    Improvement,
+    /// cell present only in the fresh run (new coverage)
+    New,
+    /// cell present only in the baseline (e.g. a smoke run covering a
+    /// subset) — informational, never a failure
+    Missing,
+}
+
+impl Status {
+    pub fn name(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Regression => "REGRESSION",
+            Status::Improvement => "improvement",
+            Status::New => "new",
+            Status::Missing => "missing",
+        }
+    }
+}
+
+/// One cell's diff row.
+#[derive(Debug, Clone)]
+pub struct CellDiff {
+    pub id: String,
+    /// 0.0 for `New` rows
+    pub base_median_s: f64,
+    /// 0.0 for `Missing` rows
+    pub fresh_median_s: f64,
+    /// fresh / base (1.0 for New/Missing rows)
+    pub ratio: f64,
+    pub tol: f64,
+    pub status: Status,
+}
+
+/// The full comparison result; render with `render_terminal` /
+/// `render_markdown`, gate CI on `failed()`.
+#[derive(Debug, Clone)]
+pub struct CompareOutcome {
+    pub base_fingerprint: String,
+    pub fresh_fingerprint: String,
+    pub fingerprint_match: bool,
+    /// set when the reports are not structurally comparable (schema
+    /// version or suite mismatch) — always a failure
+    pub schema_mismatch: Option<String>,
+    pub diffs: Vec<CellDiff>,
+}
+
+impl CompareOutcome {
+    pub fn regressions(&self) -> Vec<&CellDiff> {
+        self.diffs
+            .iter()
+            .filter(|d| d.status == Status::Regression)
+            .collect()
+    }
+
+    /// Whether `hot bench --check` should exit nonzero: structural
+    /// mismatch always fails; timing regressions fail only when the
+    /// fingerprints match (same machine, numbers comparable).
+    pub fn failed(&self) -> bool {
+        self.schema_mismatch.is_some()
+            || (self.fingerprint_match && !self.regressions().is_empty())
+    }
+
+    fn rows(&self) -> Vec<[String; 6]> {
+        self.diffs
+            .iter()
+            .map(|d| {
+                let ms = |s: f64| {
+                    if s > 0.0 {
+                        format!("{:.3}ms", s * 1e3)
+                    } else {
+                        "-".to_string()
+                    }
+                };
+                let delta = match d.status {
+                    Status::New | Status::Missing => "-".to_string(),
+                    _ => format!("{:+.1}%", (d.ratio - 1.0) * 100.0),
+                };
+                [
+                    d.id.clone(),
+                    ms(d.base_median_s),
+                    ms(d.fresh_median_s),
+                    delta,
+                    format!("±{:.0}%", d.tol * 100.0),
+                    d.status.name().to_string(),
+                ]
+            })
+            .collect()
+    }
+
+    fn gate_note(&self) -> String {
+        if self.fingerprint_match {
+            format!("fingerprints match ({}) — perf gates active",
+                    self.base_fingerprint)
+        } else {
+            format!(
+                "fingerprint mismatch (baseline {}, fresh {}) — \
+                 structural check only, timing shown for information",
+                self.base_fingerprint, self.fresh_fingerprint
+            )
+        }
+    }
+
+    /// Plain-text report for terminal output.
+    pub fn render_terminal(&self) -> String {
+        let headers =
+            ["cell", "baseline", "fresh", "delta", "tol", "status"];
+        let rows = self.rows();
+        let mut w: Vec<usize> =
+            headers.iter().map(|h| h.len()).collect();
+        for r in &rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let fmt = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.gate_note()));
+        if let Some(m) = &self.schema_mismatch {
+            out.push_str(&format!("SCHEMA MISMATCH: {m}\n"));
+        }
+        out.push_str(&fmt(
+            &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        ));
+        out.push('\n');
+        for r in &rows {
+            out.push_str(&fmt(r));
+            out.push('\n');
+        }
+        let reg = self.regressions().len();
+        out.push_str(&format!(
+            "{} cells, {} regression{}{}\n",
+            self.diffs.len(),
+            reg,
+            if reg == 1 { "" } else { "s" },
+            if reg > 0 && !self.fingerprint_match {
+                " (not gated: fingerprint mismatch)"
+            } else {
+                ""
+            },
+        ));
+        out
+    }
+
+    /// GitHub-flavored markdown report (the CI artifact).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# Bench comparison\n\n");
+        out.push_str(&format!("{}\n\n", self.gate_note()));
+        if let Some(m) = &self.schema_mismatch {
+            out.push_str(&format!("**SCHEMA MISMATCH:** {m}\n\n"));
+        }
+        out.push_str(
+            "| cell | baseline | fresh | delta | tol | status |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|\n");
+        for r in self.rows() {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                r[0], r[1], r[2], r[3], r[4], r[5]
+            ));
+        }
+        let reg = self.regressions().len();
+        out.push_str(&format!(
+            "\n**{}** cells, **{}** regressions, check {}.\n",
+            self.diffs.len(),
+            reg,
+            if self.failed() { "**FAILED**" } else { "passed" },
+        ));
+        out
+    }
+}
+
+/// Diff `fresh` against `base`, cell-by-cell on `BenchRecord::id`.
+pub fn compare(base: &BenchReport, fresh: &BenchReport) -> CompareOutcome {
+    let schema_mismatch = if base.schema_version != fresh.schema_version {
+        Some(format!(
+            "schema_version {} (baseline) vs {} (fresh)",
+            base.schema_version, fresh.schema_version
+        ))
+    } else if base.bench != fresh.bench {
+        Some(format!("suite '{}' (baseline) vs '{}' (fresh)",
+                     base.bench, fresh.bench))
+    } else {
+        None
+    };
+    let base_cells: BTreeMap<&str, &Robust> = base
+        .results
+        .iter()
+        .map(|r| (r.id.as_str(), &r.timing))
+        .collect();
+    let fresh_cells: BTreeMap<&str, &Robust> = fresh
+        .results
+        .iter()
+        .map(|r| (r.id.as_str(), &r.timing))
+        .collect();
+    let mut diffs = Vec::new();
+    for (id, bt) in &base_cells {
+        match fresh_cells.get(id) {
+            Some(ft) => {
+                let tol = tolerance(bt);
+                let ratio = if bt.median_s > 0.0 {
+                    ft.median_s / bt.median_s
+                } else {
+                    1.0
+                };
+                let status = if ratio > 1.0 + tol {
+                    Status::Regression
+                } else if ratio < 1.0 - tol {
+                    Status::Improvement
+                } else {
+                    Status::Ok
+                };
+                diffs.push(CellDiff {
+                    id: id.to_string(),
+                    base_median_s: bt.median_s,
+                    fresh_median_s: ft.median_s,
+                    ratio,
+                    tol,
+                    status,
+                });
+            }
+            None => diffs.push(CellDiff {
+                id: id.to_string(),
+                base_median_s: bt.median_s,
+                fresh_median_s: 0.0,
+                ratio: 1.0,
+                tol: tolerance(bt),
+                status: Status::Missing,
+            }),
+        }
+    }
+    for (id, ft) in &fresh_cells {
+        if !base_cells.contains_key(id) {
+            diffs.push(CellDiff {
+                id: id.to_string(),
+                base_median_s: 0.0,
+                fresh_median_s: ft.median_s,
+                ratio: 1.0,
+                tol: TOL_FLOOR,
+                status: Status::New,
+            });
+        }
+    }
+    CompareOutcome {
+        base_fingerprint: base.host.fingerprint.clone(),
+        fresh_fingerprint: fresh.host.fingerprint.clone(),
+        fingerprint_match: base.host.fingerprint == fresh.host.fingerprint
+            && base.host.fingerprint != "unknown",
+        schema_mismatch,
+        diffs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::record::{BenchRecord, BenchReport, HostInfo,
+                               SCHEMA_VERSION};
+    use crate::util::prng::Pcg32;
+    use std::collections::BTreeMap;
+
+    fn report_with(cells: &[(&str, f64, f64)], fp: &str) -> BenchReport {
+        // (id, median_s, mad_s)
+        let results = cells
+            .iter()
+            .map(|(id, med, mad)| BenchRecord {
+                id: id.to_string(),
+                params: BTreeMap::new(),
+                timing: Robust {
+                    iters: 10,
+                    rejected: 0,
+                    median_s: *med,
+                    mean_s: *med,
+                    min_s: *med * 0.98,
+                    p10_s: *med * 0.99,
+                    p90_s: *med * 1.02,
+                    mad_s: *mad,
+                },
+                flops: 1000,
+                bytes_moved: 100,
+                gflops: 1.0,
+                roofline: None,
+            })
+            .collect();
+        BenchReport {
+            bench: "kernels".to_string(),
+            schema_version: SCHEMA_VERSION,
+            provenance: "measured".to_string(),
+            provenance_detail: "fixture".to_string(),
+            git_sha: "abc1234".to_string(),
+            host: HostInfo {
+                fingerprint: fp.to_string(),
+                freq_ghz: Some(2.1),
+                mem_bw_gbps: Some(10.0),
+                threads_avail: 1,
+            },
+            tier: "avx2".to_string(),
+            smoke: false,
+            results,
+            extra: BTreeMap::new(),
+        }
+    }
+
+    const FP: &str = "x86_64/avx2+fma/1c@2.10GHz";
+
+    #[test]
+    fn tolerance_scales_with_baseline_dispersion() {
+        let quiet = Robust {
+            iters: 10, rejected: 0, median_s: 1e-3, mean_s: 1e-3,
+            min_s: 1e-3, p10_s: 1e-3, p90_s: 1e-3, mad_s: 0.0,
+        };
+        let noisy = Robust { mad_s: 1e-4, ..quiet.clone() };
+        assert_eq!(tolerance(&quiet), TOL_FLOOR,
+                   "quiet cell sits at the floor");
+        assert!(tolerance(&noisy) > tolerance(&quiet),
+                "noisy baseline earns a wider gate");
+        assert!((tolerance(&noisy) - 0.4).abs() < 1e-12,
+                "4 x (1e-4/1e-3)");
+    }
+
+    #[test]
+    fn synthetic_2x_slowdown_is_flagged_as_regression() {
+        // the acceptance scenario: same machine, one cell twice as slow
+        let base = report_with(
+            &[("f32/256/simd/1t", 1.0e-3, 1.0e-5),
+              ("i8/256/simd/1t", 0.5e-3, 1.0e-5)],
+            FP,
+        );
+        let mut fresh = base.clone();
+        fresh.results[0].timing.median_s *= 2.0;
+        let out = compare(&base, &fresh);
+        assert!(out.fingerprint_match);
+        assert_eq!(out.regressions().len(), 1);
+        assert_eq!(out.regressions()[0].id, "f32/256/simd/1t");
+        assert!(out.failed(), "2x slowdown must fail the check");
+        assert!(out.render_terminal().contains("REGRESSION"));
+        assert!(out.render_markdown().contains("**FAILED**"));
+    }
+
+    #[test]
+    fn fingerprint_mismatch_disables_perf_gating() {
+        // same 2x slowdown, but the fresh run is on another machine:
+        // shown, not gated — a CI runner cannot gate numbers measured
+        // on the maintainer's box
+        let base = report_with(&[("f32/256/simd/1t", 1.0e-3, 1e-5)], FP);
+        let mut fresh = base.clone();
+        fresh.results[0].timing.median_s *= 2.0;
+        fresh.host.fingerprint = "x86_64/avx2+fma/8c@3.50GHz".to_string();
+        let out = compare(&base, &fresh);
+        assert!(!out.fingerprint_match);
+        assert_eq!(out.regressions().len(), 1, "still rendered");
+        assert!(!out.failed(), "but never a CI failure");
+        assert!(out.render_terminal().contains("fingerprint mismatch"));
+    }
+
+    #[test]
+    fn schema_mismatch_always_fails() {
+        let base = report_with(&[("a", 1e-3, 0.0)], FP);
+        let mut fresh = base.clone();
+        fresh.schema_version = SCHEMA_VERSION + 1;
+        fresh.host.fingerprint = "some/other/machine".to_string();
+        let out = compare(&base, &fresh);
+        assert!(out.schema_mismatch.is_some());
+        assert!(out.failed(),
+                "schema break fails even across machines");
+    }
+
+    #[test]
+    fn subset_and_superset_cells_are_informational() {
+        let base =
+            report_with(&[("a", 1e-3, 0.0), ("b", 2e-3, 0.0)], FP);
+        let fresh =
+            report_with(&[("a", 1e-3, 0.0), ("c", 3e-3, 0.0)], FP);
+        let out = compare(&base, &fresh);
+        let by_id = |id: &str| {
+            out.diffs.iter().find(|d| d.id == id).unwrap().status
+        };
+        assert_eq!(by_id("a"), Status::Ok);
+        assert_eq!(by_id("b"), Status::Missing);
+        assert_eq!(by_id("c"), Status::New);
+        assert!(!out.failed(),
+                "coverage drift is informational, not a regression");
+    }
+
+    #[test]
+    fn prop_identical_runs_are_never_flagged() {
+        // property: for any report, compare(r, r) has no regressions
+        // and does not fail — the gate must be self-consistent under
+        // zero change no matter how noisy the baseline was
+        let mut rng = Pcg32::seeded(0xBE7C);
+        for round in 0..200 {
+            let ncells = 1 + rng.below(8) as usize;
+            let cells: Vec<(String, f64, f64)> = (0..ncells)
+                .map(|i| {
+                    let med =
+                        1e-6 * (1.0 + rng.below(1_000_000) as f64);
+                    // MAD anywhere from zero to wildly noisy (half the
+                    // median)
+                    let mad =
+                        med * (rng.below(1000) as f64 / 2000.0);
+                    (format!("cell/{i}"), med, mad)
+                })
+                .collect();
+            let borrowed: Vec<(&str, f64, f64)> = cells
+                .iter()
+                .map(|(id, m, d)| (id.as_str(), *m, *d))
+                .collect();
+            let r = report_with(&borrowed, FP);
+            let out = compare(&r, &r);
+            assert!(out.regressions().is_empty(),
+                    "round {round}: identical runs flagged");
+            assert!(!out.failed(), "round {round}: identical runs fail");
+            assert!(out.diffs.iter().all(|d| d.status == Status::Ok),
+                    "round {round}: identical cells must all be ok");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! The shared benchmark harness (the "perf observatory").
+//!
+//! Before this module, every bench binary hand-rolled its own timing
+//! loop, stats, and JSON — methodology drifted per file and the
+//! committed `BENCH_*.json` carried no provenance a CI job could
+//! check. The harness owns all of it once:
+//!
+//!   * [`stats`] — warmup detection, fixed-count or time-budgeted
+//!     sampling, median/p10/p90 + MAD outlier rejection, min-of-k;
+//!     all timing `Instant`-based;
+//!   * [`runner`] — the per-cell protocol: obs counters drained (and
+//!     asserted drained-to-zero) at cell start, one instrumented run
+//!     for counter-derived FLOPs/bytes, clean timed sampling after;
+//!   * [`record`] — the versioned BenchRecord schema (v2): provenance
+//!     envelope with git SHA, `CpuCaps` fingerprint, SIMD tier, plus
+//!     per-cell dispersion stats and a roofline block;
+//!   * [`roofline`] — analytic peak FLOP/s from the CPU probe
+//!     (frequency × width × FMA), measured stream-copy bandwidth
+//!     ceiling, compute-bound/memory-bound attribution per cell;
+//!   * [`compare`] — baseline diffing with per-cell tolerances derived
+//!     from the baseline's own dispersion (never a global %),
+//!     fingerprint-gated so cross-machine comparisons inform but
+//!     never fail, terminal + markdown rendering;
+//!   * [`suites`] — the kernel and e2e cell sets, shared by
+//!     `hot bench` and the `cargo bench` shim binaries.
+//!
+//! CI runs `hot bench --smoke --check .` and fails on regression
+//! against the committed baselines (when fingerprints match) or on
+//! schema/provenance drift (always).
+
+pub mod compare;
+pub mod record;
+pub mod roofline;
+pub mod runner;
+pub mod stats;
+pub mod suites;
+
+pub use compare::{compare, CompareOutcome};
+pub use record::{BenchRecord, BenchReport, PROVENANCE_MEASURED,
+                 SCHEMA_VERSION};
+pub use runner::{run_cell, Measured};
+pub use stats::{robust, sample, Policy, Robust};

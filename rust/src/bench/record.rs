@@ -1,0 +1,497 @@
+//! The versioned bench-record schema (v2) and its JSON round-trip.
+//!
+//! Every committed `BENCH_*.json` is a serialized `BenchReport`:
+//! a provenance envelope (schema version, provenance string, git SHA,
+//! `CpuCaps` fingerprint, thread/SIMD tier) around a list of
+//! `BenchRecord` cells. Each cell carries the robust timing block from
+//! `bench::stats`, the obs-counter-derived FLOP and byte totals, and a
+//! roofline attribution block. `bench::compare` consumes two of these;
+//! CI asserts the envelope fields on the committed files.
+//!
+//! Parsing is lenient the same way `obs::chrome::parse_trace` is:
+//! unknown top-level keys are preserved in `extra` (round-tripped, not
+//! dropped), unknown per-record keys are ignored, and only the fields
+//! compare actually needs are required.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::bench::stats::Robust;
+use crate::util::json::Json;
+
+/// Bump when the envelope or cell layout changes shape. v1 was the
+/// ad-hoc per-binary format; v2 adds the provenance envelope, the
+/// dispersion timing block, and the roofline block.
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// The provenance string CI requires on committed BENCH files: numbers
+/// that came out of a timed run of real code on a named host, never
+/// modeled or copied from the paper.
+pub const PROVENANCE_MEASURED: &str = "measured";
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn int(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Roofline attribution for one cell: achieved throughput against the
+/// machine's estimated compute and bandwidth ceilings, and which
+/// ceiling the cell is actually pinned to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Roofline {
+    /// estimated peak for this cell's tier/elem/threads (GFLOP/s)
+    pub peak_gflops: Option<f64>,
+    /// achieved / peak compute
+    pub frac_peak: Option<f64>,
+    /// bytes_moved / time (GB/s)
+    pub achieved_gbps: Option<f64>,
+    /// measured stream-copy ceiling (GB/s)
+    pub peak_gbps: Option<f64>,
+    /// achieved / peak bandwidth
+    pub frac_bw: Option<f64>,
+    /// flops / bytes_moved — compared against the machine ridge point
+    pub intensity_flops_per_byte: Option<f64>,
+    /// "compute-bound" | "memory-bound" | "unknown"
+    pub bound: String,
+}
+
+impl Roofline {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: Option<f64>| {
+            if let Some(v) = v {
+                m.insert(k.to_string(), num(v));
+            }
+        };
+        put("peak_gflops", self.peak_gflops);
+        put("frac_peak", self.frac_peak);
+        put("achieved_gbps", self.achieved_gbps);
+        put("peak_gbps", self.peak_gbps);
+        put("frac_bw", self.frac_bw);
+        put("intensity_flops_per_byte", self.intensity_flops_per_byte);
+        m.insert("bound".to_string(), s(&self.bound));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Roofline {
+        let f = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        Roofline {
+            peak_gflops: f("peak_gflops"),
+            frac_peak: f("frac_peak"),
+            achieved_gbps: f("achieved_gbps"),
+            peak_gbps: f("peak_gbps"),
+            frac_bw: f("frac_bw"),
+            intensity_flops_per_byte: f("intensity_flops_per_byte"),
+            bound: j
+                .get("bound")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+        }
+    }
+}
+
+/// One bench cell: identity, parameters, robust timing, counter-derived
+/// work totals, and roofline attribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// stable compare key, e.g. `"f32/512/simd/1t"` — baselines and
+    /// fresh runs are matched cell-by-cell on this
+    pub id: String,
+    /// free-form cell parameters (kind, n, threads, preset, mode, ...)
+    pub params: BTreeMap<String, Json>,
+    pub timing: Robust,
+    /// obs-counter FLOPs per iteration (0 when the cell does no GEMM)
+    pub flops: u64,
+    /// obs-counter bytes per iteration: packed-panel traffic plus
+    /// quantize/pack transfer — the roofline bandwidth numerator
+    pub bytes_moved: u64,
+    /// flops / median_s, in GFLOP/s (0 when flops is 0)
+    pub gflops: f64,
+    pub roofline: Option<Roofline>,
+}
+
+fn timing_json(t: &Robust) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("iters".to_string(), int(t.iters as u64));
+    m.insert("rejected".to_string(), int(t.rejected as u64));
+    m.insert("median_s".to_string(), num(t.median_s));
+    m.insert("mean_s".to_string(), num(t.mean_s));
+    m.insert("min_s".to_string(), num(t.min_s));
+    m.insert("p10_s".to_string(), num(t.p10_s));
+    m.insert("p90_s".to_string(), num(t.p90_s));
+    m.insert("mad_s".to_string(), num(t.mad_s));
+    Json::Obj(m)
+}
+
+fn timing_from_json(j: &Json) -> Result<Robust> {
+    let f = |k: &str| {
+        j.get(k)
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("timing block missing '{k}'"))
+    };
+    Ok(Robust {
+        iters: j.get("iters").and_then(|v| v.as_usize()).unwrap_or(1),
+        rejected: j.get("rejected").and_then(|v| v.as_usize()).unwrap_or(0),
+        median_s: f("median_s")?,
+        mean_s: f("mean_s").unwrap_or(f("median_s")?),
+        min_s: f("min_s").unwrap_or(f("median_s")?),
+        p10_s: f("p10_s").unwrap_or(f("median_s")?),
+        p90_s: f("p90_s").unwrap_or(f("median_s")?),
+        mad_s: f("mad_s").unwrap_or(0.0),
+    })
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), s(&self.id));
+        m.insert("params".to_string(), Json::Obj(self.params.clone()));
+        m.insert("timing".to_string(), timing_json(&self.timing));
+        m.insert("flops".to_string(), int(self.flops));
+        m.insert("bytes_moved".to_string(), int(self.bytes_moved));
+        m.insert("gflops".to_string(), num(self.gflops));
+        if let Some(r) = &self.roofline {
+            m.insert("roofline".to_string(), r.to_json());
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchRecord> {
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_str())
+            .context("record missing 'id'")?
+            .to_string();
+        let timing = timing_from_json(
+            j.get("timing").with_context(|| {
+                format!("record '{id}' missing 'timing' block")
+            })?,
+        )?;
+        Ok(BenchRecord {
+            id,
+            params: j
+                .get("params")
+                .and_then(|v| v.as_obj())
+                .cloned()
+                .unwrap_or_default(),
+            timing,
+            flops: j.get("flops").and_then(|v| v.as_i64()).unwrap_or(0)
+                as u64,
+            bytes_moved: j
+                .get("bytes_moved")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(0) as u64,
+            gflops: j.get("gflops").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            roofline: j.get("roofline").map(Roofline::from_json),
+        })
+    }
+}
+
+/// The machine identity block of a report: used by `bench::compare` to
+/// decide whether perf gating is meaningful (numbers from two different
+/// machines never gate each other).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostInfo {
+    /// `CpuCaps::fingerprint()` — "x86_64/avx2+fma/1c@2.10GHz"
+    pub fingerprint: String,
+    pub freq_ghz: Option<f64>,
+    /// measured stream-copy bandwidth ceiling
+    pub mem_bw_gbps: Option<f64>,
+    pub threads_avail: usize,
+}
+
+impl HostInfo {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("fingerprint".to_string(), s(&self.fingerprint));
+        if let Some(f) = self.freq_ghz {
+            m.insert("freq_ghz".to_string(), num(f));
+        }
+        if let Some(b) = self.mem_bw_gbps {
+            m.insert("mem_bw_gbps".to_string(), num(b));
+        }
+        m.insert("threads_avail".to_string(),
+                 int(self.threads_avail as u64));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> HostInfo {
+        HostInfo {
+            fingerprint: j
+                .get("fingerprint")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            freq_ghz: j.get("freq_ghz").and_then(|v| v.as_f64()),
+            mem_bw_gbps: j.get("mem_bw_gbps").and_then(|v| v.as_f64()),
+            threads_avail: j
+                .get("threads_avail")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1),
+        }
+    }
+}
+
+/// A full bench report: the provenance envelope plus the result cells.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// suite name: "kernels" | "e2e" | "memory"
+    pub bench: String,
+    pub schema_version: u64,
+    /// "measured" for anything this harness produced
+    pub provenance: String,
+    /// how the numbers were obtained, honestly (host, method, caveats)
+    pub provenance_detail: String,
+    /// short commit SHA at measurement time, "+dirty" when the tree
+    /// had uncommitted changes, "unknown" outside a git checkout
+    pub git_sha: String,
+    pub host: HostInfo,
+    /// active SIMD tier name at measurement time
+    pub tier: String,
+    /// true when produced under `--smoke` (reduced sizes/iterations)
+    pub smoke: bool,
+    pub results: Vec<BenchRecord>,
+    /// unrecognized top-level keys (e.g. suite-specific `deltas`),
+    /// preserved verbatim across a load/save round-trip
+    pub extra: BTreeMap<String, Json>,
+}
+
+/// Envelope keys owned by the schema; everything else round-trips
+/// through `extra`.
+const ENVELOPE_KEYS: &[&str] = &[
+    "bench", "schema_version", "provenance", "provenance_detail",
+    "git_sha", "host", "tier", "smoke", "results",
+];
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".to_string(), s(&self.bench));
+        m.insert("schema_version".to_string(), int(self.schema_version));
+        m.insert("provenance".to_string(), s(&self.provenance));
+        m.insert("provenance_detail".to_string(),
+                 s(&self.provenance_detail));
+        m.insert("git_sha".to_string(), s(&self.git_sha));
+        m.insert("host".to_string(), self.host.to_json());
+        m.insert("tier".to_string(), s(&self.tier));
+        m.insert("smoke".to_string(), Json::Bool(self.smoke));
+        m.insert(
+            "results".to_string(),
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        );
+        for (k, v) in &self.extra {
+            m.insert(k.clone(), v.clone());
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchReport> {
+        let results = j
+            .get("results")
+            .and_then(|v| v.as_arr())
+            .context("report missing 'results' array")?
+            .iter()
+            .map(BenchRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let gs = |k: &str, default: &str| {
+            j.get(k).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+        };
+        let extra = j
+            .as_obj()
+            .context("report is not an object")?
+            .iter()
+            .filter(|(k, _)| !ENVELOPE_KEYS.contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        Ok(BenchReport {
+            bench: gs("bench", "unknown"),
+            schema_version: j
+                .get("schema_version")
+                .and_then(|v| v.as_i64())
+                .context("report missing 'schema_version'")?
+                as u64,
+            provenance: gs("provenance", ""),
+            provenance_detail: gs("provenance_detail", ""),
+            git_sha: gs("git_sha", "unknown"),
+            host: j
+                .get("host")
+                .map(HostInfo::from_json)
+                .unwrap_or(HostInfo {
+                    fingerprint: "unknown".to_string(),
+                    freq_ghz: None,
+                    mem_bw_gbps: None,
+                    threads_avail: 1,
+                }),
+            tier: gs("tier", "unknown"),
+            smoke: j.get("smoke").and_then(|v| v.as_bool()).unwrap_or(false),
+            results,
+            extra,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing bench report to {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {path}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        Self::from_json(&j)
+            .with_context(|| format!("decoding bench report {path}"))
+    }
+}
+
+/// Short git SHA of HEAD with a `+dirty` suffix when the working tree
+/// has uncommitted changes; "unknown" when git is unavailable (e.g. a
+/// source tarball). Spawning git twice per report is fine — this runs
+/// once per bench invocation, not per cell.
+pub fn git_sha() -> String {
+    let run = |args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+    };
+    match run(&["rev-parse", "--short", "HEAD"]) {
+        Some(sha) if !sha.is_empty() => {
+            let dirty = run(&["status", "--porcelain"])
+                .map(|s| !s.is_empty())
+                .unwrap_or(false);
+            if dirty { format!("{sha}+dirty") } else { sha }
+        }
+        _ => "unknown".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        let timing = Robust {
+            iters: 12,
+            rejected: 1,
+            median_s: 2.5e-3,
+            mean_s: 2.6e-3,
+            min_s: 2.4e-3,
+            p10_s: 2.45e-3,
+            p90_s: 2.8e-3,
+            mad_s: 5.0e-5,
+        };
+        let mut params = BTreeMap::new();
+        params.insert("n".to_string(), Json::Num(256.0));
+        params.insert("kind".to_string(), Json::Str("f32".to_string()));
+        let rec = BenchRecord {
+            id: "f32/256/simd/1t".to_string(),
+            params,
+            timing,
+            flops: 33_554_432,
+            bytes_moved: 1_048_576,
+            gflops: 13.4,
+            roofline: Some(Roofline {
+                peak_gflops: Some(67.2),
+                frac_peak: Some(0.2),
+                achieved_gbps: Some(0.42),
+                peak_gbps: Some(12.0),
+                frac_bw: Some(0.035),
+                intensity_flops_per_byte: Some(32.0),
+                bound: "compute-bound".to_string(),
+            }),
+        };
+        let mut extra = BTreeMap::new();
+        extra.insert("deltas".to_string(),
+                     Json::Arr(vec![Json::Num(1.5)]));
+        BenchReport {
+            bench: "kernels".to_string(),
+            schema_version: SCHEMA_VERSION,
+            provenance: PROVENANCE_MEASURED.to_string(),
+            provenance_detail: "test fixture".to_string(),
+            git_sha: "abc1234".to_string(),
+            host: HostInfo {
+                fingerprint: "x86_64/avx2+fma/1c@2.10GHz".to_string(),
+                freq_ghz: Some(2.1),
+                mem_bw_gbps: Some(12.0),
+                threads_avail: 1,
+            },
+            tier: "avx2".to_string(),
+            smoke: false,
+            results: vec![rec],
+            extra,
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let r = sample_report();
+        let j = r.to_json();
+        let text = j.to_string();
+        let back =
+            BenchReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r, "serialize -> parse -> decode is lossless");
+        // the unknown-key channel survives too
+        assert!(back.extra.contains_key("deltas"));
+    }
+
+    #[test]
+    fn parser_is_lenient_about_optional_fields() {
+        // a minimal v2 document: only schema_version, results, and the
+        // per-record id/timing.median_s are truly required
+        let j = Json::parse(
+            r#"{"schema_version":2,
+                "results":[{"id":"x","timing":{"median_s":0.001}}],
+                "from_the_future":{"anything":true}}"#,
+        )
+        .unwrap();
+        let r = BenchReport::from_json(&j).unwrap();
+        assert_eq!(r.results.len(), 1);
+        assert_eq!(r.results[0].timing.median_s, 0.001);
+        assert_eq!(r.results[0].timing.p90_s, 0.001,
+                   "percentiles default to the median");
+        assert_eq!(r.host.fingerprint, "unknown");
+        assert!(r.extra.contains_key("from_the_future"),
+                "foreign keys preserved, not dropped");
+    }
+
+    #[test]
+    fn parser_rejects_structurally_broken_documents() {
+        let no_results = Json::parse(r#"{"schema_version":2}"#).unwrap();
+        assert!(BenchReport::from_json(&no_results).is_err());
+        let no_version =
+            Json::parse(r#"{"results":[]}"#).unwrap();
+        assert!(BenchReport::from_json(&no_version).is_err());
+        let bad_record = Json::parse(
+            r#"{"schema_version":2,"results":[{"timing":{}}]}"#,
+        )
+        .unwrap();
+        assert!(BenchReport::from_json(&bad_record).is_err(),
+                "a record without an id cannot be compared");
+    }
+
+    #[test]
+    fn git_sha_is_well_formed() {
+        let sha = git_sha();
+        assert!(!sha.is_empty());
+        // either "unknown" or a hex-ish short sha, optionally +dirty
+        if sha != "unknown" {
+            let base = sha.strip_suffix("+dirty").unwrap_or(&sha);
+            assert!(base.len() >= 6,
+                    "short sha should be at least 6 chars: {sha}");
+            assert!(base.chars().all(|c| c.is_ascii_hexdigit()),
+                    "sha should be hex: {sha}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! The per-cell measurement protocol: obs-counter hygiene, one
+//! instrumented run for work totals, then clean timed sampling.
+//!
+//! Cell protocol (the order matters and is pinned by tests):
+//!
+//!   1. **flush** — `obs::drain_counters()` discards whatever warmup,
+//!      setup, or the previous cell charged to the process-wide meters;
+//!   2. **zero check** — a second drain must read zero on every work
+//!      counter (FLOPs, bytes). A nonzero reading means something is
+//!      still running between cells and every number after it would be
+//!      cross-charged — that is a harness bug, so the runner panics
+//!      rather than emitting a poisoned record. Pinned as a regression
+//!      test in `rust/tests/obs_trace.rs`;
+//!   3. **counted run** — tracing force-enabled for exactly one
+//!      iteration; the drained deltas are the cell's per-iteration
+//!      FLOPs and bytes moved (kernel-reported, not formula-derived);
+//!   4. **timed runs** — tracing forced *off* so the sampled series
+//!      measures the kernel, not the meters; `stats::sample` +
+//!      `stats::robust` produce the timing block;
+//!   5. **restore** — the pre-cell tracing state comes back and the
+//!      meters are left drained for the next cell.
+
+use crate::bench::stats::{self, Policy, Robust};
+use crate::obs::{self, Counter, N_COUNTERS};
+
+/// Sum of the per-tier FLOP counters in a drained counter block.
+pub fn flops_of(c: &[u64; N_COUNTERS]) -> u64 {
+    c[Counter::FlopsScalar as usize]
+        + c[Counter::FlopsAvx2 as usize]
+        + c[Counter::FlopsNeon as usize]
+}
+
+/// Sum of the byte-traffic counters in a drained counter block: GEMM
+/// packed-panel traffic plus quantize/pack output — the roofline
+/// bandwidth numerator.
+pub fn bytes_of(c: &[u64; N_COUNTERS]) -> u64 {
+    c[Counter::BytesQuantized as usize]
+        + c[Counter::BytesPacked as usize]
+        + c[Counter::BytesPanels as usize]
+}
+
+/// Everything `run_cell` measured for one cell.
+#[derive(Debug, Clone)]
+pub struct Measured {
+    pub timing: Robust,
+    /// raw kept+rejected sample series (seconds), for callers that
+    /// derive extra figures (e.g. steps/s)
+    pub samples: Vec<f64>,
+    /// per-iteration FLOPs from the instrumented run
+    pub flops: u64,
+    /// per-iteration bytes moved from the instrumented run
+    pub bytes_moved: u64,
+    /// the full drained counter block of the instrumented run
+    pub counters: [u64; N_COUNTERS],
+}
+
+impl Measured {
+    /// flops / median, in GFLOP/s (0 when the cell did no counted work)
+    pub fn gflops(&self) -> f64 {
+        if self.flops > 0 && self.timing.median_s > 0.0 {
+            self.flops as f64 / self.timing.median_s / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run one bench cell under the drain-to-zero protocol. See the
+/// module docs for the five steps. `f` is one iteration of the cell's
+/// workload.
+pub fn run_cell<F: FnMut()>(policy: &Policy, mut f: F) -> Measured {
+    // 1. flush anything charged since the last drain
+    obs::drain_counters();
+    // 2. the meter must now read zero — anything else means work is
+    //    leaking across cell boundaries
+    let z = obs::drain_counters();
+    assert!(
+        flops_of(&z) == 0 && bytes_of(&z) == 0,
+        "obs work counters not drained to zero at cell start \
+         (flops={}, bytes={}): work is leaking across bench cells",
+        flops_of(&z),
+        bytes_of(&z),
+    );
+    // 3. one instrumented iteration for the work totals
+    let was_on = obs::enabled();
+    obs::set_trace_enabled(true);
+    f();
+    let counters = obs::drain_counters();
+    // 4. timed sampling with the meters off
+    obs::set_trace_enabled(false);
+    let samples = stats::sample(policy, &mut f);
+    let timing = stats::robust(&samples);
+    // 5. restore and leave the meters drained
+    obs::set_trace_enabled(was_on);
+    obs::drain_counters();
+    Measured {
+        timing,
+        samples,
+        flops: flops_of(&counters),
+        bytes_moved: bytes_of(&counters),
+        counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+
+    #[test]
+    fn cell_protocol_counts_work_and_restores_state() {
+        let _gate = crate::kernels::pool::test_serial();
+        let was_on = obs::enabled();
+        let n = 16;
+        let a = vec![1.0f32; n * n];
+        let b = vec![0.5f32; n * n];
+        let m = run_cell(&Policy::fixed(3), || {
+            std::hint::black_box(kernels::gemm_f32_nn(&a, &b, n, n, n));
+        });
+        assert_eq!(obs::enabled(), was_on, "tracing state restored");
+        assert_eq!(m.timing.iters + m.timing.rejected, 3);
+        // `>=`: the counted run briefly enables the process-global
+        // tracing gate, and lib tests run concurrently — a neighboring
+        // GEMM test may add its own flops to the window. The cell's own
+        // work is the guaranteed floor.
+        assert!(m.flops >= 2 * (n * n * n) as u64,
+                "counter-derived FLOPs for one iteration: {}", m.flops);
+        assert!(m.bytes_moved > 0, "panel traffic counted");
+        assert!(m.gflops() > 0.0);
+    }
+
+    #[test]
+    fn zero_work_cell_keeps_the_meters_clean() {
+        let _gate = crate::kernels::pool::test_serial();
+        let m = run_cell(&Policy::fixed(2), || {
+            std::hint::black_box((0..64).sum::<u64>());
+        });
+        // no concurrent test can charge this window unless tracing is
+        // enabled, and only run_cell enables it under the gate
+        if !obs::enabled() {
+            assert_eq!(m.flops, 0);
+            assert_eq!(m.gflops(), 0.0);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Sampling methodology and robust statistics for the bench harness.
+//!
+//! Every bench cell in the repo runs through `sample` + `robust`, so
+//! methodology is owned here once instead of hand-rolled per binary:
+//!
+//!   * **warmup detection** — unmeasured iterations run until the
+//!     per-iteration time stops improving markedly (caches hot, arenas
+//!     grown, plan cache populated), bounded by `max_warmup`;
+//!   * **sampling** — timed iterations until a wall budget elapses or
+//!     an iteration cap is hit, never fewer than `min_iters` samples
+//!     (`Policy::fixed` pins an exact count instead — the
+//!     deterministic-length mode the e2e suite uses for step series);
+//!   * **robust reporting** — median / mean / min / p10 / p90 plus the
+//!     median absolute deviation, with MAD-based outlier rejection
+//!     (a timer interrupt or scheduler preemption must not move the
+//!     cell's number; a genuinely bimodal distribution must not be
+//!     trimmed to one mode).
+//!
+//! All timing is `Instant`-based (monotonic); wall-clock never enters.
+
+use std::time::{Duration, Instant};
+
+/// Reject a sample when its deviation from the median exceeds
+/// `MAD_K × MAD`. 5 normalized MADs ≈ 7.4σ for Gaussian noise — far
+/// past jitter, but inside a 100× scheduler spike.
+const MAD_K: f64 = 5.0;
+
+/// When MAD is (near) zero — a constant-looking series — fall back to
+/// rejecting only samples more than this fraction away from the
+/// median, so a lone spike over an otherwise constant series is still
+/// dropped while a truly constant series loses nothing.
+const REL_FLOOR: f64 = 0.25;
+
+/// Robust summary of one cell's timing samples (seconds). This struct
+/// is the `timing` block of a v2 `BenchRecord`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Robust {
+    /// samples kept after outlier rejection
+    pub iters: usize,
+    /// samples dropped by the MAD rule
+    pub rejected: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    /// min-of-k: the least-noise estimate of the cell's true cost
+    pub min_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    /// median absolute deviation of the kept samples — the dispersion
+    /// the baseline-compare tolerance is derived from
+    pub mad_s: f64,
+}
+
+/// Median of a sorted slice (upper median for even lengths, matching
+/// the repo's historical `samples[n / 2]` convention).
+fn median_sorted(sorted: &[f64]) -> f64 {
+    sorted[sorted.len() / 2]
+}
+
+/// Median absolute deviation around `center`.
+fn mad_about(samples: &[f64], center: f64) -> f64 {
+    let mut dev: Vec<f64> = samples.iter().map(|&x| (x - center).abs())
+        .collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    median_sorted(&dev)
+}
+
+/// Robust statistics with MAD outlier rejection. Panics on an empty
+/// input — a cell that produced no samples is a harness bug, not a
+/// statistics question.
+pub fn robust(samples: &[f64]) -> Robust {
+    assert!(!samples.is_empty(), "robust() needs at least one sample");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = median_sorted(&sorted);
+    let mad = mad_about(&sorted, med);
+    // threshold: MAD-scaled when the series has real dispersion, a
+    // relative floor when it is (near-)constant — see module docs
+    let thresh = (MAD_K * mad).max(REL_FLOOR * med.abs());
+    let kept: Vec<f64> = if thresh > 0.0 {
+        sorted.iter().copied().filter(|&x| (x - med).abs() <= thresh)
+            .collect()
+    } else {
+        sorted.clone()
+    };
+    let rejected = sorted.len() - kept.len();
+    // the median always survives its own threshold, so kept is
+    // non-empty whenever sorted is
+    let n = kept.len();
+    Robust {
+        iters: n,
+        rejected,
+        median_s: median_sorted(&kept),
+        mean_s: kept.iter().sum::<f64>() / n as f64,
+        min_s: kept[0],
+        p10_s: kept[n / 10],
+        p90_s: kept[(n * 9 / 10).min(n - 1)],
+        mad_s: mad_about(&kept, median_sorted(&kept)),
+    }
+}
+
+/// How a cell is sampled. Construct through `timed` or `fixed`.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    /// wall budget for the timed loop (ignored by `fixed`)
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// warmup iteration cap (0 = no warmup at all)
+    pub max_warmup: usize,
+}
+
+impl Policy {
+    /// Time-budgeted sampling: at least `min_iters` samples, then keep
+    /// sampling until `budget_ms` elapses, hard-capped at `max_iters`.
+    pub fn timed(budget_ms: u64, max_iters: usize) -> Policy {
+        Policy {
+            budget: Duration::from_millis(budget_ms),
+            min_iters: 5.min(max_iters.max(1)),
+            max_iters: max_iters.max(1),
+            max_warmup: 8,
+        }
+    }
+
+    /// Fixed-iteration-count sampling: exactly `iters` timed samples
+    /// (plus warmup). Deterministic work per cell — the CI smoke mode.
+    pub fn fixed(iters: usize) -> Policy {
+        Policy {
+            budget: Duration::ZERO,
+            min_iters: iters.max(1),
+            max_iters: iters.max(1),
+            max_warmup: 2,
+        }
+    }
+}
+
+/// Run the warmup phase: unmeasured iterations until the time stops
+/// improving by >10% over the best seen, bounded by `max_warmup`.
+/// Returns how many warmup iterations ran.
+fn warm<F: FnMut()>(max_warmup: usize, f: &mut F) -> usize {
+    let mut best = f64::INFINITY;
+    for w in 0..max_warmup {
+        let t0 = Instant::now();
+        f();
+        let t = t0.elapsed().as_secs_f64();
+        if t >= best * 0.9 {
+            return w + 1; // stabilized: no marked improvement left
+        }
+        best = best.min(t);
+    }
+    max_warmup
+}
+
+/// Sample `f` under `policy`: warmup detection, then the timed loop.
+/// Returns the raw per-iteration seconds (feed to `robust`).
+pub fn sample<F: FnMut()>(policy: &Policy, mut f: F) -> Vec<f64> {
+    warm(policy.max_warmup, &mut f);
+    let mut samples = Vec::with_capacity(policy.min_iters);
+    let loop_start = Instant::now();
+    while samples.len() < policy.max_iters
+        && (samples.len() < policy.min_iters
+            || loop_start.elapsed() < policy.budget)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_series_is_reported_verbatim() {
+        let s = vec![2.0e-3; 17];
+        let r = robust(&s);
+        assert_eq!(r.iters, 17);
+        assert_eq!(r.rejected, 0, "a constant series loses nothing");
+        assert_eq!(r.median_s, 2.0e-3);
+        assert_eq!(r.mean_s, 2.0e-3);
+        assert_eq!(r.min_s, 2.0e-3);
+        assert_eq!(r.p10_s, 2.0e-3);
+        assert_eq!(r.p90_s, 2.0e-3);
+        assert_eq!(r.mad_s, 0.0);
+    }
+
+    #[test]
+    fn bimodal_series_keeps_both_modes() {
+        // ten fast samples, ten slow: the rejection rule must not trim
+        // the series down to one mode (that would hide real bimodality
+        // — e.g. a cell alternating between two code paths)
+        let mut s = vec![1.0e-3; 10];
+        s.extend(vec![2.0e-3; 10]);
+        let r = robust(&s);
+        assert_eq!(r.rejected, 0, "bimodal modes are data, not outliers");
+        assert_eq!(r.iters, 20);
+        assert_eq!(r.min_s, 1.0e-3);
+        // upper median of the sorted 20-sample series: the slow mode
+        assert_eq!(r.median_s, 2.0e-3);
+        assert!((r.mean_s - 1.5e-3).abs() < 1e-12);
+        assert_eq!(r.mad_s, 1.0e-3, "bimodal dispersion must be visible");
+    }
+
+    #[test]
+    fn single_spike_is_rejected() {
+        // nineteen identical samples and one 100x scheduler spike: the
+        // spike is dropped (counted), the median untouched
+        let mut s = vec![1.0e-3; 19];
+        s.push(100.0e-3);
+        let r = robust(&s);
+        assert_eq!(r.rejected, 1, "the spike must be rejected");
+        assert_eq!(r.iters, 19);
+        assert_eq!(r.median_s, 1.0e-3);
+        assert_eq!(r.mean_s, 1.0e-3, "mean no longer polluted");
+        assert_eq!(r.p90_s, 1.0e-3);
+    }
+
+    #[test]
+    fn spike_survives_when_dispersion_is_real() {
+        // the same 3x sample is NOT an outlier when the series is
+        // genuinely noisy at that scale
+        let s = vec![1.0, 2.0, 3.0, 1.5, 2.5, 0.5, 2.0, 1.0, 3.0, 2.2];
+        let r = robust(&s);
+        assert_eq!(r.rejected, 0, "wide series: everything within MADs");
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-4).collect();
+        let r = robust(&s);
+        assert!(r.min_s <= r.p10_s);
+        assert!(r.p10_s <= r.median_s);
+        assert!(r.median_s <= r.p90_s);
+        assert!(r.mad_s > 0.0);
+    }
+
+    #[test]
+    fn fixed_policy_pins_the_sample_count() {
+        let mut n = 0u32;
+        let s = sample(&Policy::fixed(7), || {
+            n += 1;
+            std::hint::black_box((0..50).sum::<u64>());
+        });
+        assert_eq!(s.len(), 7);
+        // warmup ran too (up to the cap), so total calls exceed samples
+        assert!(n >= 8 && n <= 7 + 2, "warmup {} outside cap", n - 7);
+    }
+
+    #[test]
+    fn timed_policy_respects_min_and_cap() {
+        let s = sample(&Policy::timed(5, 10_000), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.len() >= 5, "min_iters floor");
+        assert!(s.len() <= 10_000, "max_iters cap");
+        assert!(s.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_input_is_a_harness_bug() {
+        robust(&[]);
+    }
+}

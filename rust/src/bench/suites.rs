@@ -1,0 +1,357 @@
+//! The bench suites themselves: which cells each suite runs and how
+//! their records are assembled. Shared by the `hot bench` subcommand
+//! and the `cargo bench` shim binaries (`benches/kernel_gemm.rs`,
+//! `benches/e2e_throughput.rs`), so a committed `BENCH_*.json` is
+//! harness-produced no matter which entry point wrote it.
+//!
+//! Each suite returns a schema-v2 `BenchReport`; callers decide where
+//! to write it and whether to diff it against a baseline
+//! (`bench::compare`). Suites print their traditional terminal tables
+//! as they go — the human-readable view the bench binaries always had.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::backend::Executor;
+use crate::bench::record::{BenchRecord, BenchReport, git_sha,
+                           PROVENANCE_MEASURED, SCHEMA_VERSION};
+use crate::bench::stats::{self, Policy};
+use crate::bench::{roofline, runner};
+use crate::config::RunConfig;
+use crate::coordinator::{Mode, Trainer};
+use crate::kernels::{self, reference, Elem, Tier};
+use crate::util::json::Json;
+use crate::util::prng::Pcg32;
+use crate::util::timer::Table;
+
+/// Assemble the v2 provenance envelope around a suite's results.
+fn envelope(bench: &str, smoke: bool, detail: &str,
+            results: Vec<BenchRecord>,
+            extra: BTreeMap<String, Json>) -> BenchReport {
+    BenchReport {
+        bench: bench.to_string(),
+        schema_version: SCHEMA_VERSION,
+        provenance: PROVENANCE_MEASURED.to_string(),
+        provenance_detail: detail.to_string(),
+        git_sha: git_sha(),
+        host: roofline::host(smoke),
+        tier: kernels::active_tier().name().to_string(),
+        smoke,
+        results,
+        extra,
+    }
+}
+
+/// Run one kernel cell through the runner and attribute it.
+fn kernel_cell<F: FnMut()>(id: String, kind: &str, size: usize,
+                           imp: &str, threads: usize, tier: Tier,
+                           elem: Elem, policy: &Policy,
+                           peak_bw: Option<f64>, f: F) -> BenchRecord {
+    let m = runner::run_cell(policy, f);
+    let roof = roofline::attribute(m.flops, m.bytes_moved,
+                                   m.timing.median_s, tier, elem,
+                                   threads, peak_bw);
+    let mut params = BTreeMap::new();
+    params.insert("kind".to_string(), Json::Str(kind.to_string()));
+    params.insert("n".to_string(), Json::Num(size as f64));
+    params.insert("k".to_string(), Json::Num(size as f64));
+    params.insert("m".to_string(), Json::Num(size as f64));
+    params.insert("impl".to_string(), Json::Str(imp.to_string()));
+    params.insert("threads".to_string(), Json::Num(threads as f64));
+    let gflops = m.gflops();
+    BenchRecord {
+        id,
+        params,
+        timing: m.timing,
+        flops: m.flops,
+        bytes_moved: m.bytes_moved,
+        gflops,
+        roofline: Some(roof),
+    }
+}
+
+/// GEMM kernel throughput: naive oracle vs the scalar tier vs the SIMD
+/// tier, f32 and i8, across thread budgets. The successor of the old
+/// standalone `kernel_gemm` bench; cell ids are
+/// `{kind}/{size}/{impl}/{threads}t`.
+pub fn run_kernels(smoke: bool) -> BenchReport {
+    let tier = kernels::active_tier();
+    let simd_avail = tier != Tier::Scalar;
+    let peak_bw = roofline::mem_bw_gbps(smoke);
+    let sizes: &[(usize, u64)] = if smoke {
+        &[(64, 40), (128, 80)]
+    } else {
+        &[(64, 150), (128, 250), (256, 600), (512, 1500)]
+    };
+    let mut results: Vec<BenchRecord> = Vec::new();
+    for &(size, budget_ms) in sizes {
+        let mut rng = Pcg32::seeded(size as u64);
+        let a: Vec<f32> =
+            (0..size * size).map(|_| rng.normal()).collect();
+        let b: Vec<f32> =
+            (0..size * size).map(|_| rng.normal()).collect();
+        let qa: Vec<i8> = (0..size * size)
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let qb: Vec<i8> = (0..size * size)
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let policy = Policy::timed(budget_ms, 64);
+
+        // naive oracles (single-threaded by construction); skipped at
+        // large sizes where one naive iteration alone blows the budget
+        if size <= 256 {
+            results.push(kernel_cell(
+                format!("f32/{size}/naive/1t"), "f32", size, "naive", 1,
+                Tier::Scalar, Elem::F32, &policy, peak_bw, || {
+                    std::hint::black_box(reference::matmul(
+                        &a, &b, size, size, size));
+                }));
+            results.push(kernel_cell(
+                format!("i8/{size}/naive/1t"), "i8", size, "naive", 1,
+                Tier::Scalar, Elem::I8, &policy, peak_bw, || {
+                    std::hint::black_box(reference::matmul_i8_nn(
+                        &qa, &qb, size, size, size));
+                }));
+        }
+
+        // blocked kernels: scalar tier vs SIMD tier at 1 / 2 / 4
+        // threads
+        for (imp, simd) in [("scalar", false), ("simd", true)] {
+            if simd && !simd_avail {
+                continue;
+            }
+            kernels::set_simd_enabled(simd);
+            let cell_tier = if simd { tier } else { Tier::Scalar };
+            for threads in [1usize, 2, 4] {
+                kernels::set_num_threads(threads);
+                results.push(kernel_cell(
+                    format!("f32/{size}/{imp}/{threads}t"), "f32", size,
+                    imp, threads, cell_tier, Elem::F32, &policy,
+                    peak_bw, || {
+                        std::hint::black_box(kernels::gemm_f32_nn(
+                            &a, &b, size, size, size));
+                    }));
+                results.push(kernel_cell(
+                    format!("i8/{size}/{imp}/{threads}t"), "i8", size,
+                    imp, threads, cell_tier, Elem::I8, &policy,
+                    peak_bw, || {
+                        std::hint::black_box(kernels::gemm_i8_nn(
+                            &qa, &qb, size, size, size));
+                    }));
+            }
+        }
+        kernels::set_simd_enabled(true);
+        kernels::set_num_threads(0);
+    }
+
+    let find = |kind: &str, size: usize, imp: &str, threads: usize| {
+        let id = format!("{kind}/{size}/{imp}/{threads}t");
+        results.iter().find(|r| r.id == id).map(|r| r.gflops)
+    };
+    let mut t = Table::new(&["cell", "GFLOP/s", "median", "mad",
+                             "vs scalar@1t", "roofline"]);
+    for r in &results {
+        let kind =
+            r.params.get("kind").and_then(|v| v.as_str()).unwrap_or("?");
+        let size = r.params.get("n").and_then(|v| v.as_usize())
+            .unwrap_or(0);
+        let base = find(kind, size, "scalar", 1).unwrap_or(f64::NAN);
+        let roof = r.roofline.as_ref().map(|x| {
+            match x.frac_peak {
+                Some(fp) => format!("{} {:.0}%", x.bound, fp * 100.0),
+                None => x.bound.clone(),
+            }
+        }).unwrap_or_default();
+        t.row(&[r.id.clone(), format!("{:.2}", r.gflops),
+                format!("{:.3}ms", r.timing.median_s * 1e3),
+                format!("{:.1}us", r.timing.mad_s * 1e6),
+                format!("{:.2}x", r.gflops / base), roof]);
+    }
+    t.print(&format!("GEMM kernels: naive vs scalar vs simd (tier: {})",
+                     tier.name()));
+
+    // scalar-vs-SIMD deltas at 1 thread: the acceptance-gate numbers
+    let mut deltas: Vec<Json> = Vec::new();
+    if simd_avail {
+        for &(size, _) in sizes {
+            for kind in ["f32", "i8"] {
+                let (Some(s), Some(v)) = (find(kind, size, "scalar", 1),
+                                          find(kind, size, "simd", 1))
+                else {
+                    continue;
+                };
+                let mut m = BTreeMap::new();
+                m.insert("kind".to_string(),
+                         Json::Str(kind.to_string()));
+                m.insert("size".to_string(), Json::Num(size as f64));
+                m.insert("scalar_gflops".to_string(), Json::Num(s));
+                m.insert("simd_gflops".to_string(), Json::Num(v));
+                m.insert("speedup".to_string(), Json::Num(v / s));
+                deltas.push(Json::Obj(m));
+            }
+        }
+    }
+    let mut extra = BTreeMap::new();
+    extra.insert("deltas".to_string(), Json::Arr(deltas));
+    envelope(
+        "kernels", smoke,
+        "in-process timed run via the rust/src/bench harness: \
+         warmup-detected sampling, MAD outlier rejection; FLOPs and \
+         bytes from the kernels' own obs counters (one instrumented \
+         run per cell), bandwidth ceiling from a stream-copy probe",
+        results, extra)
+}
+
+/// End-to-end coordinator throughput: steady-state step time for
+/// fused / split / accum across presets and (threads, simd) cells.
+/// The per-step times ARE the samples — no hand-rolled wall loop; the
+/// successor of the old standalone `e2e_throughput` bench. Cell ids
+/// are `{preset}/{mode}/{threads}t/{simd|scalar}`.
+pub fn run_e2e(rt: Arc<dyn Executor>, smoke: bool,
+               steps: usize) -> Result<BenchReport> {
+    let steps = steps.max(4);
+    let presets: &[&str] =
+        if smoke { &["tiny"] } else { &["tiny", "small", "base"] };
+    let max_threads = kernels::num_threads();
+    // (threads, simd) cells: the kernel pool and SIMD tier only drive
+    // the native backend; sweeping them under PJRT would record
+    // duplicate rows as fake scaling signal. The (1, scalar) cell is
+    // the baseline the SIMD-tier step-time delta is read against.
+    let simd_avail = kernels::active_tier() != Tier::Scalar;
+    let mut cells = vec![(1usize, true)];
+    if rt.name() == "native" {
+        if simd_avail {
+            cells.push((1, false));
+        }
+        if max_threads > 1 {
+            cells.push((max_threads, true));
+        }
+    }
+    let peak_bw = roofline::mem_bw_gbps(smoke);
+    let mut results: Vec<BenchRecord> = Vec::new();
+    let mut t = Table::new(&["cell", "step time", "mad", "steps/s",
+                             "GFLOP/s", "data-gen share", "roofline"]);
+    for preset in presets {
+        for (mode_name, mode) in [("fused", Mode::Fused),
+                                  ("split", Mode::Split),
+                                  ("accum", Mode::Accum)] {
+            // base is heavy: fused only, so the bench stays bounded
+            if *preset == "base" && mode != Mode::Fused {
+                continue;
+            }
+            let needed = match mode {
+                Mode::Fused => format!("train_hot_{preset}"),
+                Mode::Split => format!("fwd_hot_{preset}"),
+                Mode::Accum => format!("grad_hot_{preset}"),
+            };
+            if !rt.supports(&needed) {
+                continue;
+            }
+            // base steps are ~100x tiny steps; fewer samples keep the
+            // bench bounded without losing the steady-state signal
+            let steps_here =
+                if *preset == "base" { steps.min(4) } else { steps };
+            for &(threads, simd) in &cells {
+                kernels::set_num_threads(threads);
+                kernels::set_simd_enabled(simd);
+                // record what actually ran, not what was requested: on
+                // scalar-only hardware (or under PJRT, which bypasses
+                // the kernel pool entirely) the row must not claim a
+                // SIMD tier it never had
+                let effective =
+                    simd && simd_avail && rt.name() == "native";
+                let mut cfg = RunConfig::default();
+                cfg.preset = preset.to_string();
+                cfg.variant = "hot".into();
+                cfg.steps = steps_here;
+                cfg.batch = 16;
+                cfg.calib_batches = 0;
+                if mode == Mode::Accum {
+                    // measure real accumulation, not a degenerate loop
+                    cfg.accum = 2;
+                }
+                let mut tr = Trainer::new(rt.clone(), cfg)?;
+                // the runner's warmup phase absorbs the first
+                // (compile/alloc-heavy) steps; each timed iteration is
+                // one training step, so the step series feeds the
+                // robust stats directly
+                let m = runner::run_cell(
+                    &Policy::fixed(steps_here.saturating_sub(1).max(3)),
+                    || {
+                        tr.step_once(mode).expect("step");
+                    });
+                // data-generation-only share, sampled the same way
+                let bsz = tr.batch_size();
+                let mut i = 0usize;
+                let data = stats::robust(&stats::sample(
+                    &Policy::fixed(20), || {
+                        std::hint::black_box(tr.data.batch(0, i, bsz));
+                        i += 1;
+                    }));
+                let step_s = m.timing.median_s;
+                let datagen_share =
+                    if step_s > 0.0 { data.median_s / step_s } else { 0.0 };
+                let tier_here = kernels::active_tier();
+                let roof = roofline::attribute(
+                    m.flops, m.bytes_moved, step_s, tier_here,
+                    Elem::F32, threads, peak_bw);
+                let id = format!(
+                    "{preset}/{mode_name}/{threads}t/{}",
+                    if effective { "simd" } else { "scalar" });
+                let mut params = BTreeMap::new();
+                params.insert("preset".to_string(),
+                              Json::Str(preset.to_string()));
+                params.insert("mode".to_string(),
+                              Json::Str(mode_name.to_string()));
+                params.insert("threads".to_string(),
+                              Json::Num(threads as f64));
+                params.insert("simd".to_string(), Json::Bool(effective));
+                params.insert("step_ms".to_string(),
+                              Json::Num(step_s * 1e3));
+                params.insert("steps_per_sec".to_string(),
+                              Json::Num(if step_s > 0.0 {
+                                  1.0 / step_s
+                              } else {
+                                  0.0
+                              }));
+                params.insert("datagen_share".to_string(),
+                              Json::Num(datagen_share));
+                t.row(&[id.clone(),
+                        format!("{:.1} ms", step_s * 1e3),
+                        format!("{:.2} ms", m.timing.mad_s * 1e3),
+                        format!("{:.2}", 1.0 / step_s.max(1e-12)),
+                        format!("{:.2}", m.gflops()),
+                        format!("{:.1}%", 100.0 * datagen_share),
+                        roof.bound.clone()]);
+                let gflops = m.gflops();
+                results.push(BenchRecord {
+                    id,
+                    params,
+                    timing: m.timing,
+                    flops: m.flops,
+                    bytes_moved: m.bytes_moved,
+                    gflops,
+                    roofline: Some(roof),
+                });
+            }
+        }
+    }
+    kernels::set_num_threads(0);
+    kernels::set_simd_enabled(true);
+    t.print(&format!("end-to-end throughput (HOT variant, {} backend)",
+                     rt.name()));
+    let mut extra = BTreeMap::new();
+    extra.insert("backend".to_string(),
+                 Json::Str(rt.name().to_string()));
+    extra.insert("steps".to_string(), Json::Num(steps as f64));
+    Ok(envelope(
+        "e2e", smoke,
+        "in-process timed run via the rust/src/bench harness: each \
+         sample is one real training step (warmup steps absorbed by \
+         the runner), FLOPs and bytes from obs counters over an \
+         instrumented step, bandwidth ceiling from a stream-copy probe",
+        results, extra))
+}

@@ -87,6 +87,111 @@ pub fn caps() -> CpuCaps {
     })
 }
 
+impl CpuCaps {
+    /// Stable machine identity for bench baselines: arch, best probed
+    /// tier, nominal frequency, and core count — e.g.
+    /// `x86_64/avx2+fma/1c@2.10GHz`. Two BenchReports are only
+    /// regression-comparable when their fingerprints match (the bench
+    /// `compare` degrades to a schema check otherwise).
+    pub fn fingerprint(&self) -> String {
+        let isa = if self.env_off {
+            "scalar(env)"
+        } else if self.avx2 {
+            "avx2+fma"
+        } else if self.neon {
+            "neon"
+        } else {
+            "scalar"
+        };
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        match cpu_freq_ghz() {
+            Some(f) => format!("{}/{}/{}c@{:.2}GHz",
+                               std::env::consts::ARCH, isa, cores, f),
+            None => format!("{}/{}/{}c", std::env::consts::ARCH, isa,
+                            cores),
+        }
+    }
+}
+
+/// Nominal CPU frequency in GHz for the peak-FLOP/s roofline estimate.
+/// `HOT_FREQ_GHZ` overrides; otherwise the linux `/proc/cpuinfo` model
+/// string ("... @ 2.10GHz") or, failing that, the live `cpu MHz` field.
+/// `None` when nothing is known (non-linux without the env override) —
+/// the roofline block then reports no peak rather than inventing one.
+pub fn cpu_freq_ghz() -> Option<f64> {
+    static FREQ: OnceLock<Option<f64>> = OnceLock::new();
+    *FREQ.get_or_init(|| {
+        if let Some(f) = std::env::var("HOT_FREQ_GHZ")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|f| *f > 0.0)
+        {
+            return Some(f);
+        }
+        let info = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+        // "model name : Intel(R) Xeon(R) Processor @ 2.10GHz"
+        for line in info.lines() {
+            if let Some(rest) = line.strip_prefix("model name") {
+                if let Some(ghz) = rest
+                    .rsplit_once('@')
+                    .and_then(|(_, s)| s.trim().strip_suffix("GHz"))
+                    .and_then(|s| s.trim().parse::<f64>().ok())
+                    .filter(|f| *f > 0.0)
+                {
+                    return Some(ghz);
+                }
+            }
+        }
+        for line in info.lines() {
+            if let Some(rest) = line.strip_prefix("cpu MHz") {
+                if let Some(mhz) = rest
+                    .split(':')
+                    .nth(1)
+                    .and_then(|s| s.trim().parse::<f64>().ok())
+                    .filter(|f| *f > 0.0)
+                {
+                    return Some(mhz / 1e3);
+                }
+            }
+        }
+        None
+    })
+}
+
+/// Peak useful operations per cycle per core for one kernel family at
+/// one tier — the FLOP/s numerator of the roofline estimate
+/// (frequency × SIMD width × FMA ports, the classic peak model).
+///
+/// f32: AVX2+FMA sustains two 8-lane FMAs per cycle = 32 FLOP/cycle;
+/// NEON two 4-lane FMAs = 16; the scalar tier is modeled at one
+/// mul + one add per cycle. i8 ops are counted like the FLOP counters
+/// count them (2 ops per MAC): `vpmaddwd`-class widening MACs move
+/// 2× the f32 lane count through the same two ports.
+pub fn peak_ops_per_cycle(tier: Tier, elem: Elem) -> f64 {
+    let f32_ops = match tier {
+        Tier::Scalar => 2.0,
+        Tier::Avx2 => 32.0,
+        Tier::Neon => 16.0,
+    };
+    match elem {
+        Elem::F32 => f32_ops,
+        Elem::I8 => match tier {
+            Tier::Scalar => f32_ops,
+            _ => 2.0 * f32_ops,
+        },
+    }
+}
+
+/// Estimated peak GFLOP/s (or int GOP/s) for `threads` cores at `tier`
+/// — `None` when the CPU frequency is unknown. The bench harness'
+/// roofline block reports achieved/peak against this.
+pub fn peak_gflops(tier: Tier, elem: Elem, threads: usize) -> Option<f64> {
+    let f = cpu_freq_ghz()?;
+    Some(f * peak_ops_per_cycle(tier, elem) * threads.max(1) as f64)
+}
+
 /// Runtime SIMD knob (`NativeBackend::with_simd`); defaults to on.
 /// `HOT_SIMD=0` in the environment wins over this.
 static SIMD_ON: AtomicBool = AtomicBool::new(true);
@@ -240,6 +345,26 @@ mod tests {
         // with the knob back on the plan mirrors whatever the probe
         // found (scalar on hardware without AVX2/NEON)
         assert_eq!(plan(128, 128, 128, Elem::F32).tier, active_tier());
+    }
+
+    #[test]
+    fn fingerprint_and_peaks_are_consistent() {
+        let fp = caps().fingerprint();
+        assert!(fp.starts_with(std::env::consts::ARCH), "{fp}");
+        assert!(fp.contains("c"), "core count missing: {fp}");
+        // wider tiers can never lower the modeled peak
+        assert!(peak_ops_per_cycle(Tier::Avx2, Elem::F32)
+                    > peak_ops_per_cycle(Tier::Scalar, Elem::F32));
+        assert!(peak_ops_per_cycle(Tier::Neon, Elem::I8)
+                    >= peak_ops_per_cycle(Tier::Neon, Elem::F32));
+        // peak scales linearly with threads whenever frequency is known
+        if let Some(p1) = peak_gflops(Tier::Scalar, Elem::F32, 1) {
+            let p4 = peak_gflops(Tier::Scalar, Elem::F32, 4).unwrap();
+            assert!((p4 - 4.0 * p1).abs() < 1e-9);
+            assert!(p1 > 0.0);
+        }
+        // freq probe is memoized: two calls agree
+        assert_eq!(cpu_freq_ghz(), cpu_freq_ghz());
     }
 
     #[test]

@@ -56,6 +56,16 @@ fn count_flops(tier: Tier, n: usize, k: usize, m: usize) {
                fl);
 }
 
+/// Bill packed-panel traffic — `read` source bytes in, `written` panel
+/// bytes out — against the bytes-moved counter the bench harness'
+/// roofline divides by cell time. Microkernel re-reads of the (cache-
+/// resident) panels are deliberately not billed; this counter is the
+/// compulsory DRAM-side traffic of the packing scheme.
+#[inline]
+fn count_panel_bytes(read: usize, written: usize) {
+    obs::count(obs::Counter::BytesPanels, (read + written) as u64);
+}
+
 /// Scalar-tier microkernel rows (register-tile height). SIMD tiers may
 /// use wider tiles — see `simd::f32_tile`.
 pub const MR: usize = 4;
@@ -248,8 +258,10 @@ fn gemm_f32(lhs: Lhs, a: &[f32], rhs: Rhs, b: &[f32], n: usize, k: usize,
     };
     if let Some(rows) = onehot {
         gather_rows(&rows, rhs, b, k, m, &mut out);
-        // the gather does n·m multiplies, not a dense contraction
+        // the gather does n·m multiplies, not a dense contraction —
+        // and moves one rhs row in + one output row out per lhs row
         count_flops(Tier::Scalar, n, 1, m);
+        count_panel_bytes(n * m * 4, n * m * 4);
         return out;
     }
     let plan = dispatch::plan(n, k, m, Elem::F32);
@@ -259,6 +271,7 @@ fn gemm_f32(lhs: Lhs, a: &[f32], rhs: Rhs, b: &[f32], n: usize, k: usize,
         {
             let _sp = obs::span(obs::Span::PackRhs);
             pack_rhs_f32(rhs, b, k, m, nr, pb);
+            count_panel_bytes(k * m * 4, pb.len() * 4);
         }
         let pb: &[f32] = pb;
         run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
@@ -422,6 +435,10 @@ fn task_f32(tier: Tier, lhs: Lhs, a: &[f32], pb: &[f32], n: usize, k: usize,
             {
                 let _sp = obs::span(obs::Span::PackLhs);
                 pack_lhs_f32(lhs, a, n, k, r0, r1, kbeg, kend, mr, ap);
+                // lhs slab in + panel out, plus the += writeback pass
+                // over this task's (rows, m) output tile for the block
+                count_panel_bytes(rows * kc * 4 + rows * m * 4,
+                                  ap.len() * 4 + rows * m * 4);
             }
             for s in 0..strips_m {
                 let bs = &pb[(s * k + kbeg) * nr..(s * k + kend) * nr];
@@ -476,6 +493,7 @@ fn gemm_int_i32(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize)
         {
             let _sp = obs::span(obs::Span::PackRhs);
             pack_rhs_i8(b, k, m, pb);
+            count_panel_bytes(k * m, pb.len());
         }
         let pb: &[i8] = pb;
         run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
@@ -523,6 +541,7 @@ fn gemm_int_deq(src: IntLhs, b: &[i8], n: usize, k: usize, m: usize,
         {
             let _sp = obs::span(obs::Span::PackRhs);
             pack_rhs_i8(b, k, m, pb);
+            count_panel_bytes(k * m, pb.len());
         }
         let pb: &[i8] = pb;
         run_rows(n, m, plan.tasks, &mut out, &|r0, r1, c| {
@@ -653,6 +672,12 @@ fn task_int(tier: Tier, src: IntLhs, pb: &[i8], n: usize, k: usize, m: usize,
             {
                 let _sp = obs::span(obs::Span::PackLhs);
                 pack_lhs_int(src, n, k, r0, r1, kbeg, kend, ap);
+                let src_bytes = match src {
+                    IntLhs::I4(_) => rows * kc / 2, // two codes per byte
+                    IntLhs::I8(..) => rows * kc,
+                };
+                count_panel_bytes(src_bytes + rows * m * 4,
+                                  ap.len() + rows * m * 4);
             }
             for s in 0..strips_m {
                 let bs = &pb[(s * k + kbeg) * NR..(s * k + kend) * NR];

@@ -44,7 +44,9 @@ pub mod reference;
 // intrinsics with an unprobed tier or short panels
 pub(crate) mod simd;
 
-pub use dispatch::{active_tier, set_simd_enabled, simd_enabled, Tier};
+pub use dispatch::{active_tier, caps, cpu_freq_ghz, peak_gflops,
+                   peak_ops_per_cycle, set_simd_enabled, simd_enabled,
+                   CpuCaps, Elem, Tier};
 pub use fused::{fwht_cols, fwht_cols_amax, fwht_quant_cols,
                 fwht_quant_rows, fwht_rows, fwht_rows_amax,
                 quant_pack_rows};

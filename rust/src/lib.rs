@@ -19,6 +19,7 @@
 //!     offline-built substrates.
 
 pub mod backend;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;

@@ -4,6 +4,10 @@
 //!   train       run a training job (fused / split / accum modes)
 //!   calibrate   run LQS calibration only and print the report
 //!   eval        evaluate a checkpoint (or the init params)
+//!   bench       run the statistical bench suites (kernels / e2e),
+//!               write schema-v2 BENCH_*.json, optionally --check
+//!               against committed baselines (nonzero exit on
+//!               regression)
 //!   memory      print the analytic memory model for a zoo architecture
 //!   latency     print the Table-6 latency simulation
 //!   info        list presets / step keys of the selected backend
@@ -30,19 +34,22 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("eval") => cmd_eval(&args),
+        Some("bench") => cmd_bench(&args),
         Some("memory") => cmd_memory(&args),
         Some("latency") => cmd_latency(&args),
         Some("info") => cmd_info(&args),
         Some("runhlo") => cmd_runhlo(&args),
         _ => {
             eprintln!(
-                "usage: hot <train|calibrate|eval|memory|latency|info> [--opts]\n\
+                "usage: hot <train|calibrate|eval|bench|memory|latency|info> [--opts]\n\
                  common: --backend native|pjrt|auto --artifacts DIR\n\
                          --preset NAME --variant V --steps N --batch N\n\
                          --lr F --mode fused|split|accum --accum N\n\
                          --threads N --seed N --config run.json\n\
                          --trace-out trace.json (Chrome-trace; HOT_TRACE=1\n\
-                         enables counters without the event dump)"
+                         enables counters without the event dump)\n\
+                 bench:  --suite kernels|e2e|all --smoke --out DIR\n\
+                         --check BASELINE_DIR --report report.md"
             );
             Ok(())
         }
@@ -175,6 +182,76 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     let (l, a) = tr.eval(args.usize_or("batches", 8))?;
     println!("eval: loss {l:.4} acc {a:.4}");
+    Ok(())
+}
+
+/// `hot bench`: run the statistical bench suites through the shared
+/// harness (`hot::bench`), write schema-v2 `BENCH_*.json`, and — with
+/// `--check DIR` — diff against committed baselines with noise-aware
+/// per-cell tolerances, exiting nonzero on regression or schema drift.
+/// `--smoke` (or the `HOT_BENCH_STEPS` env convention) selects the CI
+/// sizing: small shapes, fixed iteration counts, same schema.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let smoke =
+        args.flag("smoke") || std::env::var("HOT_BENCH_STEPS").is_ok();
+    let suite = args.str_or("suite", "all");
+    let out_dir = args.str_or("out", ".");
+    let check = args.get("check").map(String::from);
+    let report_path = args.get("report").map(String::from);
+    if !matches!(suite.as_str(), "kernels" | "e2e" | "all") {
+        bail!("--suite wants kernels|e2e|all, got {suite:?}");
+    }
+    hot::kernels::set_num_threads(args.threads());
+    let mut reports = Vec::new();
+    if suite == "kernels" || suite == "all" {
+        reports.push(hot::bench::suites::run_kernels(smoke));
+    }
+    if suite == "e2e" || suite == "all" {
+        let cfg = run_config(args)?;
+        let rt = executor(args, &cfg)?;
+        let steps = args.usize_or("steps", if smoke { 6 } else { 12 });
+        reports.push(hot::bench::suites::run_e2e(rt, smoke, steps)?);
+    }
+    let mut failed = false;
+    let mut md = String::new();
+    for rep in &reports {
+        let fname = format!("BENCH_{}.json", rep.bench);
+        let out_path = if out_dir == "." {
+            fname.clone()
+        } else {
+            std::fs::create_dir_all(&out_dir)?;
+            format!("{out_dir}/{fname}")
+        };
+        rep.save(&out_path)?;
+        println!("wrote {out_path}");
+        let Some(base_dir) = &check else { continue };
+        // --check PATH: a directory of baselines, or a single file
+        let base_path = if std::path::Path::new(base_dir).is_dir() {
+            format!("{base_dir}/{fname}")
+        } else {
+            base_dir.clone()
+        };
+        let base = match hot::bench::BenchReport::load(&base_path) {
+            Ok(b) => b,
+            Err(e) => {
+                hot::warn_!("no comparable baseline at {base_path}: {e}");
+                continue;
+            }
+        };
+        let outcome = hot::bench::compare(&base, rep);
+        print!("{}", outcome.render_terminal());
+        md.push_str(&outcome.render_markdown());
+        md.push('\n');
+        failed |= outcome.failed();
+    }
+    if let Some(p) = &report_path {
+        std::fs::write(p, &md)?;
+        println!("report -> {p}");
+    }
+    if failed {
+        bail!("bench check FAILED: regression or schema mismatch \
+               against the baseline (see report above)");
+    }
     Ok(())
 }
 

@@ -65,41 +65,63 @@ pub fn write_trace(path: &str, events: &[TraceEvent]) -> Result<()> {
         .with_context(|| format!("writing trace to {path}"))
 }
 
-/// Parse a trace document back into events, validating the schema —
-/// the self-validation half of the export round-trip (also exercised by
-/// the CI smoke step on a real training run).
-pub fn parse_trace(j: &Json) -> Result<Vec<TraceEvent>> {
+/// A lenient parse result: the events this tooling understood, plus a
+/// count of the ones it did not.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedTrace {
+    pub events: Vec<TraceEvent>,
+    /// Events skipped because their phase, span name, or fields were
+    /// not understood. Traces from newer writers (extra event types,
+    /// spans this build does not know) stay loadable — a nonzero count
+    /// tells the caller the view is partial rather than failing it.
+    pub skipped: usize,
+}
+
+/// Parse a trace document back into the events this build understands.
+///
+/// A structurally malformed document (no `traceEvents` array) is an
+/// error; an individually unknown event — a foreign `ph`, a span name
+/// outside this build's registry, missing or negative `ts`/`dur`/`tid`
+/// — is skipped and counted, so traces written by newer code remain
+/// loadable by older tooling. `ph == "M"` metadata is expected and not
+/// counted as skipped.
+pub fn parse_trace(j: &Json) -> Result<ParsedTrace> {
     let arr = j
         .get("traceEvents")
         .and_then(|v| v.as_arr())
         .context("trace: missing traceEvents array")?;
-    let mut out = Vec::new();
+    let mut out = ParsedTrace { events: Vec::new(), skipped: 0 };
     for ev in arr {
         let ph = ev.get("ph").and_then(|v| v.as_str()).unwrap_or("");
-        if ph != "X" {
-            continue; // metadata et al.
+        if ph == "M" {
+            continue; // expected metadata (process/thread names)
         }
-        let name =
-            ev.get("name").and_then(|v| v.as_str()).context("event name")?;
-        let span = crate::obs::SPAN_NAMES
-            .iter()
-            .position(|&n| n == name)
-            .with_context(|| format!("unknown span name {name:?}"))? as u8;
-        let tid = ev
-            .get("tid")
-            .and_then(|v| v.as_i64())
-            .context("event tid")? as u32;
-        let ts = ev.get("ts").and_then(|v| v.as_f64()).context("event ts")?;
-        let dur =
-            ev.get("dur").and_then(|v| v.as_f64()).context("event dur")?;
-        anyhow::ensure!(ts >= 0.0 && dur >= 0.0,
-                        "negative ts/dur on {name}: {ts} {dur}");
-        out.push(TraceEvent {
-            span,
-            tid,
-            start_ns: (ts * 1e3).round() as u64,
-            end_ns: ((ts + dur) * 1e3).round() as u64,
-        });
+        if ph != "X" {
+            out.skipped += 1; // foreign event type from a newer writer
+            continue;
+        }
+        let known = (|| {
+            let name = ev.get("name")?.as_str()?;
+            let span =
+                crate::obs::SPAN_NAMES.iter().position(|&n| n == name)?;
+            let tid = ev.get("tid")?.as_i64()?;
+            let ts = ev.get("ts")?.as_f64()?;
+            let dur = ev.get("dur")?.as_f64()?;
+            if tid < 0 || ts < 0.0 || dur < 0.0 || ts.is_nan() || dur.is_nan()
+            {
+                return None;
+            }
+            Some(TraceEvent {
+                span: span as u8,
+                tid: tid as u32,
+                start_ns: (ts * 1e3).round() as u64,
+                end_ns: ((ts + dur) * 1e3).round() as u64,
+            })
+        })();
+        match known {
+            Some(e) => out.events.push(e),
+            None => out.skipped += 1,
+        }
     }
     Ok(out)
 }
@@ -126,7 +148,8 @@ mod tests {
         let text = doc.to_string();
         let back = Json::parse(&text).unwrap();
         let got = parse_trace(&back).unwrap();
-        assert_eq!(got, events);
+        assert_eq!(got.events, events);
+        assert_eq!(got.skipped, 0, "own exports must parse losslessly");
         // schema essentials are present
         let arr = back.get("traceEvents").unwrap().as_arr().unwrap();
         assert!(arr.len() > events.len(), "metadata + span events");
@@ -141,15 +164,60 @@ mod tests {
     }
 
     #[test]
-    fn parser_rejects_unknown_spans_and_missing_fields() {
+    fn parser_skips_unknown_events_with_count() {
+        // unknown span name, foreign phase, and missing fields are each
+        // skipped and counted — never an error (forward compatibility
+        // with newer writers); a malformed document still errors
         let j = Json::parse(
-            r#"{"traceEvents":[{"name":"bogus","ph":"X","pid":1,"tid":0,
-                 "ts":0,"dur":1}]}"#,
+            r#"{"traceEvents":[
+                 {"name":"bogus","ph":"X","pid":1,"tid":0,"ts":0,"dur":1},
+                 {"name":"flow","ph":"s","pid":1,"tid":0,"ts":0,"id":7},
+                 {"name":"gemm_f32","ph":"X","pid":1,"tid":0,"ts":0},
+                 {"name":"gemm_f32","ph":"X","pid":1,"tid":0,"ts":-4,
+                  "dur":1},
+                 {"name":"gemm_f32","ph":"X","pid":1,"tid":0,"ts":2,
+                  "dur":3}]}"#,
         )
         .unwrap();
-        assert!(parse_trace(&j).is_err());
+        let got = parse_trace(&j).unwrap();
+        assert_eq!(got.skipped, 4,
+                   "unknown span + foreign ph + missing dur + negative ts");
+        assert_eq!(got.events.len(), 1);
+        assert_eq!(got.events[0].name(), "gemm_f32");
         let j = Json::parse(r#"{"notTraceEvents":[]}"#).unwrap();
-        assert!(parse_trace(&j).is_err());
+        assert!(parse_trace(&j).is_err(), "malformed document must error");
+    }
+
+    #[test]
+    fn roundtrip_survives_injected_foreign_event() {
+        // a trace written by a hypothetical newer writer: our events
+        // plus an event type (ph "C" counter sample) and a span name
+        // this build has never heard of
+        let events = vec![ev(Span::TrainStep, 0, 1_000, 9_000),
+                          ev(Span::GemmI8, 1, 2_000, 2_500)];
+        let doc = trace_json(&events);
+        let mut arr = doc.get("traceEvents").unwrap().as_arr().unwrap()
+            .to_vec();
+        let foreign = Json::parse(
+            r#"{"name":"gpu_mem","ph":"C","pid":1,"tid":0,"ts":5,
+                "args":{"bytes":123}}"#,
+        )
+        .unwrap();
+        let newer_span = Json::parse(
+            r#"{"name":"span_from_the_future","ph":"X","pid":1,"tid":0,
+                "ts":1,"dur":2}"#,
+        )
+        .unwrap();
+        arr.insert(1, foreign);
+        arr.push(newer_span);
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("traceEvents".to_string(), Json::Arr(arr));
+        let back =
+            Json::parse(&Json::Obj(root).to_string()).unwrap();
+        let got = parse_trace(&back).unwrap();
+        assert_eq!(got.events, events,
+                   "known events survive around foreign ones");
+        assert_eq!(got.skipped, 2, "both foreign events counted");
     }
 
     #[test]

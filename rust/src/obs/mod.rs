@@ -72,6 +72,13 @@ pub enum Counter {
     BytesQuantized,
     /// packed payload bytes produced by `quant_pack_rows`
     BytesPacked,
+    /// GEMM packed-panel traffic: source bytes read + panel bytes
+    /// written by the lhs/rhs packers, plus the output-tile writeback —
+    /// the bandwidth numerator the bench harness' roofline block
+    /// divides by cell time (panel re-reads inside the microkernel are
+    /// cache-resident and deliberately not billed; see DESIGN.md
+    /// §Benchmark methodology)
+    BytesPanels,
     PlanHits,
     PlanMisses,
     ArenaGrows,
@@ -83,11 +90,11 @@ pub enum Counter {
     EventsDropped,
 }
 
-pub const N_COUNTERS: usize = 11;
+pub const N_COUNTERS: usize = 12;
 pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "flops_scalar", "flops_avx2", "flops_neon", "bytes_quantized",
-    "bytes_packed", "plan_hits", "plan_misses", "arena_grows",
-    "pool_steals", "pool_parks", "events_dropped",
+    "bytes_packed", "bytes_panels", "plan_hits", "plan_misses",
+    "arena_grows", "pool_steals", "pool_parks", "events_dropped",
 ];
 
 // ---------------------------------------------------------------------------
@@ -313,6 +320,18 @@ pub fn flops_total() -> u64 {
     counter_total(Counter::FlopsScalar)
         + counter_total(Counter::FlopsAvx2)
         + counter_total(Counter::FlopsNeon)
+}
+
+/// Counter deltas since the previous drain (either flavor — this and
+/// `drain_step` share one baseline, so interleaving them never double-
+/// counts). The bench harness calls this at cell boundaries: once to
+/// flush whatever warmup or a previous cell charged, and again to
+/// assert the meter reads zero before the instrumented run starts —
+/// the "drained-to-zero at cell start" contract pinned in
+/// `rust/tests/obs_trace.rs`. Events and quant telemetry accumulated
+/// since the last drain are discarded alongside.
+pub fn drain_counters() -> [u64; N_COUNTERS] {
+    drain_step(false).counters
 }
 
 // ---------------------------------------------------------------------------

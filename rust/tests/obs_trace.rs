@@ -10,12 +10,16 @@
 //!      off (one relaxed atomic load each) times the number of calls a
 //!      step makes is under 1% of the measured step time.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use hot::backend::{Executor, NativeBackend};
 use hot::config::RunConfig;
 use hot::coordinator::{Mode, Trainer};
+
+/// The trace knob is process-global, so every test in this binary that
+/// toggles it (directly or through `bench::run_cell`) takes this lock.
+static TRACE_KNOB: Mutex<()> = Mutex::new(());
 
 const STEPS: usize = 6;
 
@@ -61,6 +65,7 @@ fn run(trace: bool) -> Run {
 
 #[test]
 fn trace_is_invisible_to_training() {
+    let _knob = TRACE_KNOB.lock().unwrap_or_else(|e| e.into_inner());
     let off = run(false);
     let on = run(true);
 
@@ -134,4 +139,54 @@ fn trace_is_invisible_to_training() {
              {:.0}, cost/call {:.1}ns, step {:.3}ms)",
             ratio * 100.0, events_per_step, per_pair * 1e9,
             step_time * 1e3);
+}
+
+/// Bench-cell counter hygiene (regression test for the harness's
+/// drain-to-zero protocol): work charged to the process-wide obs meters
+/// *before* a cell starts must never leak into that cell's FLOP/byte
+/// totals, consecutive cells must not cross-charge each other, and the
+/// meters must be left drained afterwards.
+#[test]
+fn bench_cells_drain_counters_to_zero() {
+    use hot::bench::{run_cell, Policy};
+    use hot::obs::{self, Counter};
+
+    let _knob = TRACE_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let was_on = obs::enabled();
+
+    // Dirty the meters and do NOT drain: stale work from "between
+    // cells" that the next cell must flush, not absorb.
+    obs::set_trace_enabled(true);
+    obs::count(Counter::FlopsScalar, 1_000_000);
+    obs::count(Counter::BytesQuantized, 64 << 10);
+
+    // Cell 1 charges a known amount inside the instrumented run. The
+    // closure runs once counted (tracing forced on) and then in timed
+    // iterations (tracing forced off, so those counts are no-ops).
+    let m1 = run_cell(&Policy::fixed(3), || {
+        obs::count(Counter::FlopsScalar, 42);
+        obs::count(Counter::BytesPacked, 7);
+    });
+    assert_eq!(m1.flops, 42,
+               "stale pre-cell flops leaked into the cell's total");
+    assert_eq!(m1.bytes_moved, 7,
+               "stale pre-cell bytes leaked into the cell's total");
+
+    // Cell 2 back-to-back: nothing from cell 1 may carry over.
+    let m2 = run_cell(&Policy::fixed(3), || {
+        obs::count(Counter::FlopsAvx2, 99);
+    });
+    assert_eq!(m2.flops, 99, "cell 1 work cross-charged into cell 2");
+    assert_eq!(m2.bytes_moved, 0);
+
+    // run_cell restored the tracing state we set before it...
+    assert!(obs::enabled(), "run_cell must restore the pre-cell state");
+    // ...and left the meters drained for whoever comes next.
+    let left = obs::drain_counters();
+    assert_eq!(hot::bench::runner::flops_of(&left), 0,
+               "meters not drained after the cell");
+    assert_eq!(hot::bench::runner::bytes_of(&left), 0,
+               "meters not drained after the cell");
+
+    obs::set_trace_enabled(was_on);
 }

@@ -1,0 +1,477 @@
+#!/usr/bin/env python3
+"""Assemble schema-v2 BENCH_kernels.json / BENCH_e2e.json from the raw
+per-iteration samples the C mirror emits.
+
+The split of responsibilities: the `mirror` binary owns *time* (it runs
+the same cells, op sequences, blocked-GEMM geometry, and sampling policy
+as `rust/src/bench`), this script owns everything deterministic — the
+robust statistics (an exact port of `bench::stats::robust`), the
+per-cell FLOP/byte work totals (computed from the same billing formulas
+the kernels' obs counters use), the roofline attribution (a port of
+`bench::roofline::attribute`), and the v2 report envelope
+(`bench::record`).
+
+Usage:
+    ./mirror probe   > probe.jsonl
+    ./mirror kernels > kernels.jsonl
+    ./mirror e2e     > e2e.jsonl
+    python3 assemble.py --probe probe.jsonl --kernels kernels.jsonl \
+        --e2e e2e.jsonl --out-dir ../..
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+
+# ---- host identity (matches CpuCaps on this runner) ----
+
+FREQ_GHZ = 2.10
+FINGERPRINT = "x86_64/avx2+fma/1c@2.10GHz"
+THREADS_AVAIL = 1
+TIER = "avx2"
+
+# peak ops/cycle per (tier, elem), from kernels::peak_ops_per_cycle
+OPS_PER_CYCLE = {
+    ("scalar", "f32"): 2.0,
+    ("avx2", "f32"): 32.0,
+    ("scalar", "i8"): 2.0,
+    ("avx2", "i8"): 64.0,
+}
+
+# ---- robust stats: exact port of bench::stats ----
+
+MAD_K = 5.0
+REL_FLOOR = 0.25
+
+
+def _median(sorted_xs):
+    return sorted_xs[len(sorted_xs) // 2]  # upper median, as stats.rs
+
+
+def robust(samples):
+    assert samples, "robust() needs at least one sample"
+    xs = sorted(samples)
+    med = _median(xs)
+    dev = sorted(abs(x - med) for x in xs)
+    mad = _median(dev)
+    thresh = max(MAD_K * mad, REL_FLOOR * abs(med))
+    if thresh > 0.0:
+        kept = [x for x in xs if abs(x - med) <= thresh]
+    else:
+        kept = list(xs)
+    if not kept:
+        kept = list(xs)
+    n = len(kept)
+    kmed = _median(kept)
+    kdev = sorted(abs(x - kmed) for x in kept)
+    return {
+        "iters": n,
+        "rejected": len(xs) - n,
+        "median_s": kmed,
+        "mean_s": sum(kept) / n,
+        "min_s": kept[0],
+        "p10_s": kept[n // 10],
+        "p90_s": kept[min(n * 9 // 10, n - 1)],
+        "mad_s": _median(kdev),
+    }
+
+
+# ---- work accounting: the kernels' obs billing formulas ----
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+PAR_MAC_FLOOR = 1 << 18
+SIMD_MAC_FLOOR = 1 << 9
+TASK_ROWS = 48
+KC_F32 = 256
+KC_I8 = 1024
+
+
+class Work:
+    """Accumulates the per-iteration FLOP and byte totals one cell's op
+    sequence would bill to the obs counters."""
+
+    def __init__(self, width, simd):
+        self.width = width
+        self.simd = simd
+        self.flops = 0
+        self.bytes = 0
+
+    def _plan(self, n, k, m):
+        macs = n * k * m
+        if self.width <= 1 or macs < PAR_MAC_FLOOR or n < 2:
+            tasks = 1
+        else:
+            tasks = max(1, min(ceil_div(n, TASK_ROWS), self.width * 4))
+        tier = "scalar" if macs < SIMD_MAC_FLOOR or not self.simd \
+            else "avx2"
+        return tasks, tier
+
+    def _task_rows(self, n, tasks):
+        rows_per = ceil_div(n, tasks)
+        rows = []
+        r0 = 0
+        while r0 < n:
+            r1 = min(r0 + rows_per, n)
+            rows.append(r1 - r0)
+            r0 = r1
+        return rows
+
+    def gemm_f32(self, n, k, m):
+        tasks, tier = self._plan(n, k, m)
+        mr, nr = (6, 16) if tier == "avx2" else (4, 8)
+        self.flops += 2 * n * k * m
+        pb_len = ceil_div(m, nr) * nr * k
+        self.bytes += k * m * 4 + pb_len * 4
+        for rows in self._task_rows(n, tasks):
+            k0 = 0
+            while k0 < k:
+                kc = min(KC_F32, k - k0)
+                ap_len = ceil_div(rows, mr) * mr * kc
+                self.bytes += (rows * kc * 4 + rows * m * 4) + \
+                    (ap_len * 4 + rows * m * 4)
+                k0 += kc
+
+    def gemm_i8(self, n, k, m):
+        tasks, _tier = self._plan(n, k, m)
+        self.flops += 2 * n * k * m
+        pb_len = ceil_div(m, 8) * 8 * k
+        self.bytes += k * m + pb_len
+        for rows in self._task_rows(n, tasks):
+            k0 = 0
+            while k0 < k:
+                kc = min(KC_I8, k - k0)
+                ap_len = ceil_div(rows, 4) * 4 * kc
+                self.bytes += (rows * kc + rows * m * 4) + \
+                    (ap_len + rows * m * 4)
+                k0 += kc
+
+    def naive(self, n, k, m):
+        self.flops += 2 * n * k * m  # reference.rs bills flops only
+
+    def fwht_quant(self, rows, cols):
+        self.bytes += rows * cols  # BytesQuantized
+
+    def pack_rows(self, rows, cols):
+        self.bytes += rows * cols  # BytesPacked (8-bit ctx codes)
+
+    # composite ops, mirroring quantizer.rs
+    def hq_matmul(self, n, o, i):
+        self.fwht_quant(n, o)
+        self.fwht_quant(o, i)
+        self.gemm_i8(n, o, i)
+
+    def hla_matmul(self, n, o, i):
+        # block-HLA + fake-quant bill nothing; the TN GEMM is
+        # (o, n/2) x (n/2, i)
+        self.gemm_f32(o, n // 2, i)
+
+    def hla_compress(self, n, cols):
+        self.pack_rows(n // 2, cols)
+
+
+# ---- e2e op sequences ----
+
+PRESETS = {
+    "tiny": dict(d=32, depth=2, heads=2, seq=16, in_dim=16, classes=4,
+                 d_mlp=64),
+    "small": dict(d=96, depth=4, heads=4, seq=32, in_dim=48, classes=16,
+                  d_mlp=384),
+    "base": dict(d=256, depth=8, heads=8, seq=64, in_dim=96, classes=32,
+                 d_mlp=1024),
+}
+BATCH = 16
+
+
+def e2e_step_work(preset, mode, simd):
+    """Bill one optimizer step of the HOT variant: forward with ABC ctx
+    compression, HQ/HLA backward, AdamW. Matches model.rs for the
+    `hot` variant (layernorm/gelu/attention/softmax/adamw internals and
+    int8 unpacks bill nothing)."""
+    p = PRESETS[preset]
+    d, depth, m = p["d"], p["depth"], p["d_mlp"]
+    seq, in_dim, classes = p["seq"], p["in_dim"], p["classes"]
+    n = BATCH * seq
+    w = Work(1, simd)
+    micro = 2 if mode == "accum" else 1
+    for _ in range(micro):
+        # forward
+        w.gemm_f32(n, in_dim, d)          # embed
+        w.hla_compress(n, in_dim)
+        for _b in range(depth):
+            w.pack_rows(n, d)             # ln1 xhat
+            w.gemm_f32(n, d, 3 * d)       # qkv
+            w.hla_compress(n, d)
+            w.pack_rows(n, d)             # attn kh
+            w.pack_rows(BATCH * p["heads"] * seq, seq)  # attn p
+            w.pack_rows(n, d)             # attn qh
+            w.pack_rows(n, d)             # attn vh
+            w.gemm_f32(n, d, d)           # proj
+            w.hla_compress(n, d)
+            w.pack_rows(n, d)             # ln2 xhat
+            w.gemm_f32(n, d, m)           # fc1
+            w.hla_compress(n, d)
+            w.pack_rows(n, m)             # gelu x
+            w.gemm_f32(n, m, d)           # fc2
+            w.hla_compress(n, m)
+        w.pack_rows(n, d)                 # final LN xhat
+        w.gemm_f32(BATCH, d, classes)     # head
+        w.hla_compress(BATCH, d)
+        w.pack_rows(BATCH, classes)       # softmax probs
+        # backward
+        if classes % 16 != 0:
+            w.gemm_f32(BATCH, classes, d)  # tiny head: f32 fallback
+        else:
+            w.hq_matmul(BATCH, classes, d)
+        w.hla_matmul(BATCH, classes, d)
+        for _b in range(depth):
+            w.hq_matmul(n, d, m)          # fc2 g_x
+            w.hla_matmul(n, d, m)         # fc2 g_w
+            w.hq_matmul(n, m, d)          # fc1 g_x
+            w.hla_matmul(n, m, d)         # fc1 g_w
+            w.hq_matmul(n, d, d)          # proj g_x
+            w.hla_matmul(n, d, d)         # proj g_w
+            w.hq_matmul(n, 3 * d, d)      # qkv g_x
+            w.hla_matmul(n, 3 * d, d)     # qkv g_w
+        w.hla_matmul(n, d, in_dim)        # embed g_w (no g_x)
+    return w
+
+
+def kernel_cell_work(kind, size, imp, width, simd):
+    w = Work(width, simd and imp == "simd")
+    if imp == "naive":
+        w.naive(size, size, size)
+    elif kind == "f32":
+        w.gemm_f32(size, size, size)
+    else:
+        w.gemm_i8(size, size, size)
+    return w
+
+
+# ---- roofline: port of bench::roofline::attribute ----
+
+
+def attribute(flops, nbytes, median_s, tier, elem, threads, peak_gbps):
+    opc = OPS_PER_CYCLE.get((tier, elem))
+    peak_gflops = FREQ_GHZ * opc * max(threads, 1) if opc else None
+    achieved_gflops = flops / median_s / 1e9 \
+        if median_s > 0 and flops > 0 else None
+    achieved_gbps = nbytes / median_s / 1e9 \
+        if median_s > 0 and nbytes > 0 else None
+    roof = {}
+    if peak_gflops is not None:
+        roof["peak_gflops"] = peak_gflops
+    if achieved_gflops is not None and peak_gflops:
+        roof["frac_peak"] = achieved_gflops / peak_gflops
+    if achieved_gbps is not None:
+        roof["achieved_gbps"] = achieved_gbps
+    if peak_gbps is not None:
+        roof["peak_gbps"] = peak_gbps
+        if achieved_gbps is not None and peak_gbps > 0:
+            roof["frac_bw"] = achieved_gbps / peak_gbps
+    intensity = flops / nbytes if flops > 0 and nbytes > 0 else None
+    if intensity is not None:
+        roof["intensity_flops_per_byte"] = intensity
+    if intensity is not None and peak_gflops and peak_gbps:
+        roof["bound"] = "memory-bound" \
+            if intensity < peak_gflops / peak_gbps else "compute-bound"
+    else:
+        roof["bound"] = "unknown"
+    return roof
+
+
+# ---- report assembly ----
+
+
+def load_jsonl(path):
+    out = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            if "cell" in obj:
+                out[obj["cell"]] = obj["samples"]
+            else:
+                out.update(obj)
+    return out
+
+
+def git_sha():
+    def run(args):
+        try:
+            r = subprocess.run(["git"] + args, capture_output=True,
+                               text=True, check=True)
+            return r.stdout.strip()
+        except Exception:
+            return None
+
+    sha = run(["rev-parse", "--short", "HEAD"])
+    if not sha:
+        return "unknown"
+    dirty = run(["status", "--porcelain"])
+    return sha + "+dirty" if dirty else sha
+
+
+def record(cell_id, params, timing, work, roof):
+    gflops = work.flops / timing["median_s"] / 1e9 \
+        if work.flops > 0 and timing["median_s"] > 0 else 0.0
+    return {
+        "id": cell_id,
+        "params": params,
+        "timing": timing,
+        "flops": work.flops,
+        "bytes_moved": work.bytes,
+        "gflops": gflops,
+        "roofline": roof,
+    }
+
+
+def envelope(bench, detail, results, extra, peak_gbps, sha):
+    rep = {
+        "bench": bench,
+        "schema_version": 2,
+        "provenance": "measured",
+        "provenance_detail": detail,
+        "git_sha": sha,
+        "host": {
+            "fingerprint": FINGERPRINT,
+            "freq_ghz": FREQ_GHZ,
+            "mem_bw_gbps": peak_gbps,
+            "threads_avail": THREADS_AVAIL,
+        },
+        "tier": TIER,
+        "smoke": False,
+        "results": results,
+    }
+    rep.update(extra)
+    return rep
+
+
+KERNELS_DETAIL = (
+    "timed run of tools/bench_mirror (a C mirror of the rust/src/bench "
+    "harness for hosts without a Rust toolchain): identical cells, "
+    "blocked-GEMM geometry, thread fan-out, warmup-detected sampling "
+    "and MAD outlier rejection; FLOPs and bytes computed from the "
+    "kernels' obs-counter billing formulas for each cell's op "
+    "sequence; bandwidth ceiling from a stream-copy probe. "
+    "Quantize/FWHT epilogues are plain C (compiler-vectorized) rather "
+    "than the hand-written intrinsics, so epilogue-heavy numbers are "
+    "conservative."
+)
+
+E2E_DETAIL = (
+    "timed run of tools/bench_mirror (a C mirror of the rust/src/bench "
+    "harness for hosts without a Rust toolchain): each sample is one "
+    "real training step of the mirrored HOT-variant ViT (same op "
+    "sequence, presets, ctx compression, and step modes as the native "
+    "backend; warmup steps absorbed by the sampler), FLOPs and bytes "
+    "computed from the kernels' obs-counter billing formulas for the "
+    "step's op sequence; bandwidth ceiling from a stream-copy probe. "
+    "Quantize/FWHT epilogues are plain C (compiler-vectorized) rather "
+    "than the hand-written intrinsics, so step times are conservative."
+)
+
+
+def assemble_kernels(cells, peak_gbps, sha):
+    sizes = [64, 128, 256, 512]
+    results = []
+    gflops_by_id = {}
+    for size in sizes:
+        layout = []
+        if size <= 256:
+            layout += [("f32", "naive", 1), ("i8", "naive", 1)]
+        for imp in ("scalar", "simd"):
+            for threads in (1, 2, 4):
+                layout += [("f32", imp, threads), ("i8", imp, threads)]
+        for kind, imp, threads in layout:
+            cid = f"{kind}/{size}/{imp}/{threads}t"
+            if cid not in cells:
+                print(f"missing kernel cell {cid}", file=sys.stderr)
+                sys.exit(1)
+            timing = robust(cells[cid])
+            work = kernel_cell_work(kind, size, imp, threads,
+                                    imp == "simd")
+            tier = "avx2" if imp == "simd" else "scalar"
+            roof = attribute(work.flops, work.bytes, timing["median_s"],
+                             tier, kind, threads, peak_gbps)
+            params = {"kind": kind, "n": size, "k": size, "m": size,
+                      "impl": imp, "threads": threads}
+            rec = record(cid, params, timing, work, roof)
+            gflops_by_id[cid] = rec["gflops"]
+            results.append(rec)
+    deltas = []
+    for size in sizes:
+        for kind in ("f32", "i8"):
+            s = gflops_by_id.get(f"{kind}/{size}/scalar/1t")
+            v = gflops_by_id.get(f"{kind}/{size}/simd/1t")
+            if s and v:
+                deltas.append({"kind": kind, "size": size,
+                               "scalar_gflops": s, "simd_gflops": v,
+                               "speedup": v / s})
+    return envelope("kernels", KERNELS_DETAIL, results,
+                    {"deltas": deltas}, peak_gbps, sha)
+
+
+def assemble_e2e(cells, peak_gbps, sha):
+    results = []
+    for preset in ("tiny", "small", "base"):
+        for mode in ("fused", "split", "accum"):
+            if preset == "base" and mode != "fused":
+                continue
+            for simd in (True, False):
+                cid = f"{preset}/{mode}/1t/{'simd' if simd else 'scalar'}"
+                if cid not in cells or f"{cid}/datagen" not in cells:
+                    print(f"missing e2e cell {cid}", file=sys.stderr)
+                    sys.exit(1)
+                timing = robust(cells[cid])
+                data = robust(cells[f"{cid}/datagen"])
+                step_s = timing["median_s"]
+                work = e2e_step_work(preset, mode, simd)
+                tier = "avx2" if simd else "scalar"
+                roof = attribute(work.flops, work.bytes, step_s, tier,
+                                 "f32", 1, peak_gbps)
+                params = {
+                    "preset": preset, "mode": mode, "threads": 1,
+                    "simd": simd, "step_ms": step_s * 1e3,
+                    "steps_per_sec": 1.0 / step_s if step_s > 0 else 0.0,
+                    "datagen_share": data["median_s"] / step_s
+                    if step_s > 0 else 0.0,
+                }
+                results.append(record(cid, params, timing, work, roof))
+    return envelope("e2e", E2E_DETAIL, results,
+                    {"backend": "native", "steps": 12}, peak_gbps, sha)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probe", default="probe.jsonl")
+    ap.add_argument("--kernels", default="kernels.jsonl")
+    ap.add_argument("--e2e", default="e2e.jsonl")
+    ap.add_argument("--out-dir", default="../..")
+    args = ap.parse_args()
+
+    probe = load_jsonl(args.probe)
+    peak_gbps = 2.0 * probe["probe_bytes"] / probe["probe_best_s"] / 1e9
+    sha = git_sha()
+
+    kern = assemble_kernels(load_jsonl(args.kernels), peak_gbps, sha)
+    e2e = assemble_e2e(load_jsonl(args.e2e), peak_gbps, sha)
+
+    for name, rep in [("BENCH_kernels.json", kern),
+                      ("BENCH_e2e.json", e2e)]:
+        path = f"{args.out_dir}/{name}"
+        with open(path, "w") as f:
+            json.dump(rep, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}: {len(rep['results'])} cells, "
+              f"bw {peak_gbps:.2f} GB/s, sha {sha}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,571 @@
+/* End-to-end ViT training-step mirror: the same op sequence as
+ * backend/native/model.rs runs for the HOT variant (qlinear forward
+ * with ABC ctx compression, HQ/HLA backward, AdamW), the same presets
+ * (tiny/small/base, batch 16), and the same fused/split/accum step
+ * modes the e2e suite times. Data generation mirrors
+ * data/mod.rs::VisionDataset's per-batch work (PCG label + prototype
+ * plus Gaussian noise per element). */
+#include "mirror.h"
+
+typedef struct {
+    const char *name;
+    int d, depth, heads, seq, in_dim, classes, d_mlp;
+} Preset;
+
+static const Preset PRESETS[] = {
+    {"tiny", 32, 2, 2, 16, 16, 4, 64},
+    {"small", 96, 4, 4, 32, 48, 16, 384},
+    {"base", 256, 8, 8, 64, 96, 32, 1024},
+};
+
+#define BATCH 16
+#define ABC_RANK 8
+
+typedef struct {
+    float *p, *m, *v, *g;
+    int len, decay;
+} Param;
+
+typedef struct {
+    Param qkv_w, qkv_b, wo, bo, ln1_g, ln1_b, ln2_g, ln2_b, fc1_w,
+        fc1_b, fc2_w, fc2_b;
+} BlockParams;
+
+typedef struct {
+    /* ctx saved by forward, consumed by backward (arena-allocated) */
+    int8_t *ln1_xh;
+    float *ln1_s, *ln1_rstd;
+    int8_t *qkv_in;
+    float *qkv_in_s;
+    int8_t *kh, *pq, *qh, *vh;
+    float *kh_s, *pq_s, *qh_s, *vh_s;
+    int8_t *proj_in;
+    float *proj_in_s;
+    int8_t *ln2_xh;
+    float *ln2_s, *ln2_rstd;
+    int8_t *fc1_in;
+    float *fc1_in_s;
+    int8_t *gelu_x;
+    float *gelu_s;
+    int8_t *fc2_in;
+    float *fc2_in_s;
+} BlockCtx;
+
+typedef struct {
+    Preset ps;
+    int n; /* BATCH * seq tokens */
+    Param emb_w, emb_b, pos, lnf_g, lnf_b, head_w, head_b;
+    BlockParams *blk;
+    BlockCtx *bctx;
+    int8_t *emb_abc, *head_abc, *ce_p;
+    float *emb_abc_s, *head_abc_s, *ce_p_s;
+    int8_t *lnf_xh;
+    float *lnf_s, *lnf_rstd;
+    int32_t labels[BATCH];
+    float *x;            /* input batch (n, in_dim) */
+    float *proto;        /* classes x (seq*in_dim) prototypes */
+    Pcg32 init_rng;
+    int step_t;          /* optimizer timestep */
+    int data_idx;        /* batch index counter */
+    size_t ctx_bytes;    /* running flatten size for split mode */
+    unsigned char *store;/* split-mode ctx store */
+    size_t store_cap;
+    float loss_sink;
+} Model;
+
+static void param_init(Model *md, Param *p, int len, int decay,
+                       float scale) {
+    p->p = malloc((size_t)len * sizeof(float));
+    p->m = calloc(len, sizeof(float));
+    p->v = calloc(len, sizeof(float));
+    p->g = malloc((size_t)len * sizeof(float));
+    p->len = len;
+    p->decay = decay;
+    for (int i = 0; i < len; i++)
+        p->p[i] = scale == 0.0f ? 0.0f
+                                : scale * pcg_normal(&md->init_rng);
+}
+
+static void param_free(Param *p) {
+    free(p->p);
+    free(p->m);
+    free(p->v);
+    free(p->g);
+}
+
+static Model *model_new(const Preset *ps) {
+    Model *md = calloc(1, sizeof(Model));
+    md->ps = *ps;
+    md->n = BATCH * ps->seq;
+    pcg_seeded(&md->init_rng, 1234);
+    int d = ps->d, m = ps->d_mlp;
+    param_init(md, &md->emb_w, d * ps->in_dim, 1, 0.02f);
+    param_init(md, &md->emb_b, d, 0, 0.0f);
+    param_init(md, &md->pos, ps->seq * d, 0, 0.02f);
+    md->blk = calloc(ps->depth, sizeof(BlockParams));
+    md->bctx = calloc(ps->depth, sizeof(BlockCtx));
+    for (int b = 0; b < ps->depth; b++) {
+        BlockParams *bp = &md->blk[b];
+        param_init(md, &bp->ln1_g, d, 0, 0.0f);
+        param_init(md, &bp->ln1_b, d, 0, 0.0f);
+        for (int i = 0; i < d; i++) bp->ln1_g.p[i] = 1.0f;
+        param_init(md, &bp->qkv_w, 3 * d * d, 1, 0.02f);
+        param_init(md, &bp->qkv_b, 3 * d, 0, 0.0f);
+        param_init(md, &bp->wo, d * d, 1, 0.02f);
+        param_init(md, &bp->bo, d, 0, 0.0f);
+        param_init(md, &bp->ln2_g, d, 0, 0.0f);
+        param_init(md, &bp->ln2_b, d, 0, 0.0f);
+        for (int i = 0; i < d; i++) bp->ln2_g.p[i] = 1.0f;
+        param_init(md, &bp->fc1_w, m * d, 1, 0.02f);
+        param_init(md, &bp->fc1_b, m, 0, 0.0f);
+        param_init(md, &bp->fc2_w, d * m, 1, 0.02f);
+        param_init(md, &bp->fc2_b, d, 0, 0.0f);
+    }
+    param_init(md, &md->lnf_g, d, 0, 0.0f);
+    param_init(md, &md->lnf_b, d, 0, 0.0f);
+    for (int i = 0; i < d; i++) md->lnf_g.p[i] = 1.0f;
+    param_init(md, &md->head_w, ps->classes * d, 1, 0.02f);
+    param_init(md, &md->head_b, ps->classes, 0, 0.0f);
+    md->x = malloc((size_t)md->n * ps->in_dim * sizeof(float));
+    md->proto =
+        malloc((size_t)ps->classes * ps->seq * ps->in_dim * sizeof(float));
+    for (int i = 0; i < ps->classes * ps->seq * ps->in_dim; i++)
+        md->proto[i] = 1.5f * pcg_normal(&md->init_rng);
+    md->step_t = 0;
+    return md;
+}
+
+static void for_each_param(Model *md, void (*f)(Param *, void *),
+                           void *arg) {
+    f(&md->emb_w, arg);
+    f(&md->emb_b, arg);
+    f(&md->pos, arg);
+    for (int b = 0; b < md->ps.depth; b++) {
+        BlockParams *bp = &md->blk[b];
+        Param *ps[] = {&bp->ln1_g, &bp->ln1_b, &bp->qkv_w, &bp->qkv_b,
+                       &bp->wo,    &bp->bo,    &bp->ln2_g, &bp->ln2_b,
+                       &bp->fc1_w, &bp->fc1_b, &bp->fc2_w, &bp->fc2_b};
+        for (int i = 0; i < 12; i++) f(ps[i], arg);
+    }
+    f(&md->lnf_g, arg);
+    f(&md->lnf_b, arg);
+    f(&md->head_w, arg);
+    f(&md->head_b, arg);
+}
+
+static void p_zero_grad(Param *p, void *arg) {
+    (void)arg;
+    memset(p->g, 0, (size_t)p->len * sizeof(float));
+}
+
+static void p_free(Param *p, void *arg) {
+    (void)arg;
+    param_free(p);
+}
+
+static void p_adamw(Param *p, void *arg) {
+    Model *md = (Model *)arg;
+    adamw(p->p, p->m, p->v, p->g, p->len, p->decay, md->step_t, 3e-3f);
+}
+
+static void p_scale_grad(Param *p, void *arg) {
+    float s = *(float *)arg;
+    for (int i = 0; i < p->len; i++) p->g[i] *= s;
+}
+
+static void model_free(Model *md) {
+    for_each_param(md, p_free, NULL);
+    free(md->blk);
+    free(md->bctx);
+    free(md->x);
+    free(md->proto);
+    free(md->store);
+    free(md);
+}
+
+/* VisionDataset::batch work profile: per sample one Lemire draw for
+ * the label, then seq*in_dim prototype+noise elements */
+static void datagen(Model *md, int index) {
+    Pcg32 rng;
+    pcg_new(&rng, 42ULL ^ (0ULL * 0x9e3779b97f4a7c15ULL),
+            0x100 + (uint64_t)index);
+    int per = md->ps.seq * md->ps.in_dim;
+    for (int s = 0; s < BATCH; s++) {
+        uint32_t lab = pcg_below(&rng, (uint32_t)md->ps.classes);
+        md->labels[s] = (int32_t)lab;
+        const float *pr = md->proto + (size_t)lab * per;
+        float *xs = md->x + (size_t)s * per;
+        for (int j = 0; j < per; j++)
+            xs[j] = pr[j] + 0.5f * pcg_normal(&rng);
+    }
+}
+
+static float *falloc(Model *md, size_t count) {
+    return arena_alloc(count * sizeof(float));
+}
+
+static int8_t *ctx_q(Model *md, size_t count) {
+    md->ctx_bytes += count;
+    return arena_alloc(count);
+}
+
+static float *ctx_f(Model *md, size_t count) {
+    md->ctx_bytes += count * sizeof(float);
+    return arena_alloc(count * sizeof(float));
+}
+
+/* qlinear forward: y = x . W^T + b */
+static float *qlinear_y(Model *md, const float *x, int n, int k,
+                        const Param *w, int o, const Param *b) {
+    float *y = falloc(md, (size_t)n * o);
+    gemm_f32_nt(x, w->p, y, n, k, o);
+    for (int r = 0; r < n; r++) {
+        float *row = y + (size_t)r * o;
+        for (int c = 0; c < o; c++) row[c] += b->p[c];
+    }
+    return y;
+}
+
+/* ABC-compress x (rows % 16 == 0) into int8 ctx storage */
+static void abc_save(Model *md, const float *x, int rows, int cols,
+                     int8_t **q, float **s) {
+    int nc = rows / 16 * ABC_RANK;
+    *q = ctx_q(md, (size_t)nc * cols);
+    *s = ctx_f(md, (size_t)nc);
+    hla_compress(x, rows, cols, *q, *s);
+}
+
+static void pack_save(Model *md, const float *x, int rows, int cols,
+                      int8_t **q, float **s) {
+    *q = ctx_q(md, (size_t)rows * cols);
+    *s = ctx_f(md, (size_t)rows);
+    quant_pack_rows(x, rows, cols, *q, *s);
+}
+
+static void unpack_rows(const int8_t *q, const float *s, int rows,
+                        int cols, float *out) {
+    for (int r = 0; r < rows; r++) {
+        float sc = s[r];
+        const int8_t *qr = q + (size_t)r * cols;
+        float *orow = out + (size_t)r * cols;
+        for (int c = 0; c < cols; c++) orow[c] = (float)qr[c] * sc;
+    }
+}
+
+static float forward(Model *md, float **logits_out, float **pool_out) {
+    const Preset *ps = &md->ps;
+    int n = md->n, d = ps->d, m = ps->d_mlp, l = ps->seq;
+    int heads = ps->heads, dh = d / heads;
+    md->ctx_bytes = 0;
+
+    /* embed + ABC ctx of the raw patches */
+    float *h = qlinear_y(md, md->x, n, ps->in_dim, &md->emb_w, d,
+                         &md->emb_b);
+    abc_save(md, md->x, n, ps->in_dim, &md->emb_abc, &md->emb_abc_s);
+    for (int bi = 0; bi < BATCH; bi++)
+        for (int t = 0; t < l; t++) {
+            float *row = h + ((size_t)(bi * l + t)) * d;
+            const float *prow = md->pos.p + (size_t)t * d;
+            for (int c = 0; c < d; c++) row[c] += prow[c];
+        }
+
+    for (int b = 0; b < ps->depth; b++) {
+        BlockParams *bp = &md->blk[b];
+        BlockCtx *bc = &md->bctx[b];
+        /* ln1 -> qkv -> attention -> proj, residual */
+        float *hn = falloc(md, (size_t)n * d);
+        float *xhat = falloc(md, (size_t)n * d);
+        bc->ln1_rstd = ctx_f(md, n);
+        layernorm_fwd(h, n, d, bp->ln1_g.p, bp->ln1_b.p, hn, xhat,
+                      bc->ln1_rstd);
+        pack_save(md, xhat, n, d, &bc->ln1_xh, &bc->ln1_s);
+        float *qkv = qlinear_y(md, hn, n, d, &bp->qkv_w, 3 * d,
+                               &bp->qkv_b);
+        abc_save(md, hn, n, d, &bc->qkv_in, &bc->qkv_in_s);
+        float *q = falloc(md, (size_t)n * d);
+        float *k = falloc(md, (size_t)n * d);
+        float *v = falloc(md, (size_t)n * d);
+        for (int r = 0; r < n; r++) {
+            memcpy(q + (size_t)r * d, qkv + (size_t)r * 3 * d,
+                   (size_t)d * sizeof(float));
+            memcpy(k + (size_t)r * d, qkv + (size_t)r * 3 * d + d,
+                   (size_t)d * sizeof(float));
+            memcpy(v + (size_t)r * d, qkv + (size_t)r * 3 * d + 2 * d,
+                   (size_t)d * sizeof(float));
+        }
+        float *att = falloc(md, (size_t)n * d);
+        float *khf = falloc(md, (size_t)n * d);
+        float *pf = falloc(md, (size_t)BATCH * heads * l * l);
+        float *qhf = falloc(md, (size_t)n * d);
+        float *vhf = falloc(md, (size_t)n * d);
+        attention_fwd(q, k, v, BATCH, heads, l, dh, att, khf, pf, qhf,
+                      vhf);
+        pack_save(md, khf, BATCH * heads * l, dh, &bc->kh, &bc->kh_s);
+        pack_save(md, pf, BATCH * heads * l, l, &bc->pq, &bc->pq_s);
+        pack_save(md, qhf, BATCH * heads * l, dh, &bc->qh, &bc->qh_s);
+        pack_save(md, vhf, BATCH * heads * l, dh, &bc->vh, &bc->vh_s);
+        float *proj = qlinear_y(md, att, n, d, &bp->wo, d, &bp->bo);
+        abc_save(md, att, n, d, &bc->proj_in, &bc->proj_in_s);
+        for (size_t z = 0; z < (size_t)n * d; z++) h[z] += proj[z];
+
+        /* ln2 -> fc1 -> gelu -> fc2, residual */
+        float *hn2 = falloc(md, (size_t)n * d);
+        float *xhat2 = falloc(md, (size_t)n * d);
+        bc->ln2_rstd = ctx_f(md, n);
+        layernorm_fwd(h, n, d, bp->ln2_g.p, bp->ln2_b.p, hn2, xhat2,
+                      bc->ln2_rstd);
+        pack_save(md, xhat2, n, d, &bc->ln2_xh, &bc->ln2_s);
+        float *f1 = qlinear_y(md, hn2, n, d, &bp->fc1_w, m, &bp->fc1_b);
+        abc_save(md, hn2, n, d, &bc->fc1_in, &bc->fc1_in_s);
+        float *g1 = falloc(md, (size_t)n * m);
+        gelu_fwd(f1, n * m, g1);
+        pack_save(md, f1, n, m, &bc->gelu_x, &bc->gelu_s);
+        float *f2 = qlinear_y(md, g1, n, m, &bp->fc2_w, d, &bp->fc2_b);
+        abc_save(md, g1, n, m, &bc->fc2_in, &bc->fc2_in_s);
+        for (size_t z = 0; z < (size_t)n * d; z++) h[z] += f2[z];
+    }
+
+    /* final LN, mean-pool, head, softmax-xent */
+    float *hf = falloc(md, (size_t)n * d);
+    float *xhf = falloc(md, (size_t)n * d);
+    md->lnf_rstd = ctx_f(md, n);
+    layernorm_fwd(h, n, d, md->lnf_g.p, md->lnf_b.p, hf, xhf,
+                  md->lnf_rstd);
+    pack_save(md, xhf, n, d, &md->lnf_xh, &md->lnf_s);
+    float *pooled = falloc(md, (size_t)BATCH * d);
+    for (int bi = 0; bi < BATCH; bi++)
+        for (int c = 0; c < d; c++) {
+            float acc = 0.0f;
+            for (int t = 0; t < l; t++)
+                acc += hf[((size_t)(bi * l + t)) * d + c];
+            pooled[(size_t)bi * d + c] = acc / (float)l;
+        }
+    float *logits = qlinear_y(md, pooled, BATCH, d, &md->head_w,
+                              ps->classes, &md->head_b);
+    abc_save(md, pooled, BATCH, d, &md->head_abc, &md->head_abc_s);
+    float *p = falloc(md, (size_t)BATCH * ps->classes);
+    float loss =
+        softmax_xent_fwd(logits, md->labels, BATCH, ps->classes, p);
+    pack_save(md, p, BATCH, ps->classes, &md->ce_p, &md->ce_p_s);
+    md->ctx_bytes += BATCH * sizeof(int32_t); /* labels, stored raw */
+    *logits_out = logits;
+    *pool_out = hf;
+    return loss;
+}
+
+/* qlinear backward: bias colsums, HQ g_x (int4 FWHT), HLA g_w (ABC) */
+static float *qlinear_bwd(Model *md, const float *gy, int n, int o,
+                          int i, const Param *w, Param *b, Param *gw,
+                          const int8_t *abc, const float *abc_s,
+                          int need_gx) {
+    for (int r = 0; r < n; r++) {
+        const float *row = gy + (size_t)r * o;
+        for (int c = 0; c < o; c++) b->g[c] += row[c];
+    }
+    float *gwt = falloc(md, (size_t)o * i);
+    hla_matmul(gy, n, o, abc, abc_s, i, gwt);
+    for (size_t z = 0; z < (size_t)o * i; z++) gw->g[z] += gwt[z];
+    if (!need_gx) return NULL;
+    float *gx = falloc(md, (size_t)n * i);
+    if (o % 16 != 0)
+        gemm_f32_nn(gy, w->p, gx, n, o, i);
+    else
+        hq_matmul(gy, n, o, w->p, i, gx);
+    return gx;
+}
+
+static void backward(Model *md, const float *logits) {
+    const Preset *ps = &md->ps;
+    int n = md->n, d = ps->d, m = ps->d_mlp, l = ps->seq;
+    int heads = ps->heads, dh = d / heads;
+    (void)logits;
+
+    /* ce backward from the packed ctx */
+    float *p = falloc(md, (size_t)BATCH * ps->classes);
+    unpack_rows(md->ce_p, md->ce_p_s, BATCH, ps->classes, p);
+    float *gl = falloc(md, (size_t)BATCH * ps->classes);
+    for (int r = 0; r < BATCH; r++)
+        for (int c = 0; c < ps->classes; c++) {
+            float onehot = md->labels[r] == c ? 1.0f : 0.0f;
+            gl[(size_t)r * ps->classes + c] =
+                (p[(size_t)r * ps->classes + c] - onehot) /
+                (float)BATCH;
+        }
+
+    float *gpool =
+        qlinear_bwd(md, gl, BATCH, ps->classes, d, &md->head_w,
+                    &md->head_b, &md->head_w, md->head_abc,
+                    md->head_abc_s, 1);
+    /* pool backward: broadcast / l */
+    float *gh = falloc(md, (size_t)n * d);
+    for (int bi = 0; bi < BATCH; bi++)
+        for (int t = 0; t < l; t++) {
+            float *row = gh + ((size_t)(bi * l + t)) * d;
+            const float *prow = gpool + (size_t)bi * d;
+            for (int c = 0; c < d; c++) row[c] = prow[c] / (float)l;
+        }
+    /* final LN backward */
+    float *xhf = falloc(md, (size_t)n * d);
+    unpack_rows(md->lnf_xh, md->lnf_s, n, d, xhf);
+    float *gh2 = falloc(md, (size_t)n * d);
+    layernorm_bwd(gh, xhf, md->lnf_rstd, md->lnf_g.p, n, d, gh2,
+                  md->lnf_g.g, md->lnf_b.g);
+    gh = gh2;
+
+    for (int b = ps->depth - 1; b >= 0; b--) {
+        BlockParams *bp = &md->blk[b];
+        BlockCtx *bc = &md->bctx[b];
+        /* mlp branch */
+        float *gg1 = qlinear_bwd(md, gh, n, d, m, &bp->fc2_w,
+                                 &bp->fc2_b, &bp->fc2_w, bc->fc2_in,
+                                 bc->fc2_in_s, 1);
+        float *gx1 = falloc(md, (size_t)n * m);
+        float *xg = falloc(md, (size_t)n * m);
+        unpack_rows(bc->gelu_x, bc->gelu_s, n, m, xg);
+        gelu_bwd(gg1, xg, n * m, gx1);
+        float *gln2 = qlinear_bwd(md, gx1, n, m, d, &bp->fc1_w,
+                                  &bp->fc1_b, &bp->fc1_w, bc->fc1_in,
+                                  bc->fc1_in_s, 1);
+        float *xh2 = falloc(md, (size_t)n * d);
+        unpack_rows(bc->ln2_xh, bc->ln2_s, n, d, xh2);
+        float *gres = falloc(md, (size_t)n * d);
+        layernorm_bwd(gln2, xh2, bc->ln2_rstd, bp->ln2_g.p, n, d, gres,
+                      bp->ln2_g.g, bp->ln2_b.g);
+        for (size_t z = 0; z < (size_t)n * d; z++) gh[z] += gres[z];
+
+        /* attention branch */
+        float *gatt = qlinear_bwd(md, gh, n, d, d, &bp->wo, &bp->bo,
+                                  &bp->wo, bc->proj_in, bc->proj_in_s,
+                                  1);
+        float *khf = falloc(md, (size_t)n * d);
+        float *pf = falloc(md, (size_t)BATCH * heads * l * l);
+        float *qhf = falloc(md, (size_t)n * d);
+        float *vhf = falloc(md, (size_t)n * d);
+        unpack_rows(bc->kh, bc->kh_s, BATCH * heads * l, dh, khf);
+        unpack_rows(bc->pq, bc->pq_s, BATCH * heads * l, l, pf);
+        unpack_rows(bc->qh, bc->qh_s, BATCH * heads * l, dh, qhf);
+        unpack_rows(bc->vh, bc->vh_s, BATCH * heads * l, dh, vhf);
+        float *gq = falloc(md, (size_t)n * d);
+        float *gk = falloc(md, (size_t)n * d);
+        float *gv = falloc(md, (size_t)n * d);
+        attention_bwd(gatt, khf, pf, qhf, vhf, BATCH, heads, l, dh, gq,
+                      gk, gv);
+        float *gqkv = falloc(md, (size_t)n * 3 * d);
+        for (int r = 0; r < n; r++) {
+            memcpy(gqkv + (size_t)r * 3 * d, gq + (size_t)r * d,
+                   (size_t)d * sizeof(float));
+            memcpy(gqkv + (size_t)r * 3 * d + d, gk + (size_t)r * d,
+                   (size_t)d * sizeof(float));
+            memcpy(gqkv + (size_t)r * 3 * d + 2 * d,
+                   gv + (size_t)r * d, (size_t)d * sizeof(float));
+        }
+        float *gln1 = qlinear_bwd(md, gqkv, n, 3 * d, d, &bp->qkv_w,
+                                  &bp->qkv_b, &bp->qkv_w, bc->qkv_in,
+                                  bc->qkv_in_s, 1);
+        float *xh1 = falloc(md, (size_t)n * d);
+        unpack_rows(bc->ln1_xh, bc->ln1_s, n, d, xh1);
+        float *gres1 = falloc(md, (size_t)n * d);
+        layernorm_bwd(gln1, xh1, bc->ln1_rstd, bp->ln1_g.p, n, d,
+                      gres1, bp->ln1_g.g, bp->ln1_b.g);
+        for (size_t z = 0; z < (size_t)n * d; z++) gh[z] += gres1[z];
+    }
+
+    /* pos grad, then embed g_w only (need_gx = false) */
+    for (int bi = 0; bi < BATCH; bi++)
+        for (int t = 0; t < l; t++) {
+            const float *row = gh + ((size_t)(bi * l + t)) * d;
+            float *prow = md->pos.g + (size_t)t * d;
+            for (int c = 0; c < d; c++) prow[c] += row[c];
+        }
+    qlinear_bwd(md, gh, n, d, ps->in_dim, &md->emb_w, &md->emb_b,
+                &md->emb_w, md->emb_abc, md->emb_abc_s, 0);
+}
+
+/* ---- step modes ---- */
+
+static void ctx_roundtrip(Model *md) {
+    /* split mode: flatten -> store.put -> store.take -> parse. The
+     * store round-trip is memcpy-level in the Rust coordinator too. */
+    if (md->store_cap < md->ctx_bytes) {
+        free(md->store);
+        md->store = malloc(md->ctx_bytes);
+        md->store_cap = md->ctx_bytes;
+    }
+    unsigned char *scratch = arena_alloc(md->ctx_bytes);
+    memcpy(md->store, scratch, md->ctx_bytes);
+    memcpy(scratch, md->store, md->ctx_bytes);
+}
+
+typedef struct {
+    Model *md;
+    int mode; /* 0 fused, 1 split, 2 accum */
+} StepArg;
+
+static void step_once(void *argp) {
+    StepArg *sa = (StepArg *)argp;
+    Model *md = sa->md;
+    int micro = sa->mode == 2 ? 2 : 1;
+    for_each_param(md, p_zero_grad, NULL);
+    float *logits, *hf;
+    for (int u = 0; u < micro; u++) {
+        arena_reset();
+        datagen(md, md->data_idx++);
+        float loss = forward(md, &logits, &hf);
+        md->loss_sink += loss;
+        if (sa->mode == 1) ctx_roundtrip(md);
+        backward(md, logits);
+    }
+    if (micro > 1) {
+        float inv = 1.0f / (float)micro;
+        for_each_param(md, p_scale_grad, &inv);
+    }
+    md->step_t += 1;
+    for_each_param(md, p_adamw, md);
+}
+
+typedef struct {
+    Model *md;
+} DataArg;
+
+static void datagen_only(void *argp) {
+    DataArg *da = (DataArg *)argp;
+    datagen(da->md, da->md->data_idx++);
+}
+
+void run_e2e_suite(void) {
+    const char *modes[] = {"fused", "split", "accum"};
+    double samples[64];
+    for (int pi = 0; pi < 3; pi++) {
+        const Preset *ps = &PRESETS[pi];
+        int is_base = strcmp(ps->name, "base") == 0;
+        int steps = is_base ? 4 : 12;
+        for (int mo = 0; mo < 3; mo++) {
+            if (is_base && mo != 0) continue;
+            /* cells: (1t, simd) then (1t, scalar), as run_e2e builds
+             * them on a single-core host */
+            for (int simd = 1; simd >= 0; simd--) {
+                g_width = 1;
+                g_simd = simd;
+                Model *md = model_new(ps);
+                StepArg sa = {md, mo};
+                int fixed = steps - 1 > 3 ? steps - 1 : 3;
+                Policy pol = policy_fixed(fixed);
+                int ns = sample_cell(&pol, step_once, &sa, samples, 64);
+                char id[128];
+                snprintf(id, sizeof(id), "%s/%s/1t/%s", ps->name,
+                         modes[mo], simd ? "simd" : "scalar");
+                emit_samples(id, samples, ns);
+                /* data-generation-only share, sampled the same way */
+                DataArg da = {md};
+                Policy dp = policy_fixed(20);
+                int nd = sample_cell(&dp, datagen_only, &da, samples, 64);
+                char did[140];
+                snprintf(did, sizeof(did), "%s/datagen", id);
+                emit_samples(did, samples, nd);
+                fprintf(stderr, "done %s (loss sink %.3f)\n", id,
+                        md->loss_sink);
+                model_free(md);
+            }
+        }
+    }
+}

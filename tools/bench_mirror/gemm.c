@@ -1,0 +1,494 @@
+/* Blocked, packed GEMM mirror of rust/src/kernels/{gemm.rs,simd/avx2.rs}:
+ * same KC blocking (f32: 256, i8: 1024), same pack layouts (nr-wide rhs
+ * strips, mr-wide lhs strips per KC block), same microkernels (AVX2
+ * 6x16 f32 FMA, AVX2 4x8 i8 pmaddwd; scalar 4x8 fallbacks), same
+ * dispatch thresholds (PAR_MAC_FLOOR 2^18, SIMD_MAC_FLOOR 2^9,
+ * TASK_ROWS 48) and row-split task fan-out. */
+#include "mirror.h"
+#include <immintrin.h>
+
+int g_width = 1;
+int g_simd = 1;
+
+#define KC_F32 256
+#define KC_I8 1024
+#define TASK_ROWS 48
+#define PAR_MAC_FLOOR (1L << 18)
+#define SIMD_MAC_FLOOR (1L << 9)
+
+static inline int ceil_div(int a, int b) { return (a + b - 1) / b; }
+
+/* thread-local grow-only pack buffers, mirroring the Rust packing
+ * arenas: zero steady-state allocations once grown */
+static __thread unsigned char *tl_ap, *tl_pb;
+static __thread size_t tl_ap_cap, tl_pb_cap;
+
+static void *grow(unsigned char **buf, size_t *cap, size_t bytes) {
+    if (*cap < bytes) {
+        free(*buf);
+        *buf = malloc(bytes);
+        *cap = bytes;
+        if (!*buf) {
+            fprintf(stderr, "pack buffer alloc failed\n");
+            exit(1);
+        }
+    }
+    return *buf;
+}
+
+static void *ap_buf(size_t bytes) { return grow(&tl_ap, &tl_ap_cap, bytes); }
+static void *pb_buf(size_t bytes) { return grow(&tl_pb, &tl_pb_cap, bytes); }
+
+/* ---- thread pool: fixed workers, atomic task counter ---- */
+
+#define MAX_WORKERS 3
+typedef struct {
+    void (*fn)(int task, void *arg);
+    void *arg;
+    int n_tasks, participants;
+    atomic_int next, done;
+    atomic_uint gen;
+} PoolJob;
+
+static PoolJob job;
+static pthread_mutex_t pool_mu = PTHREAD_MUTEX_INITIALIZER;
+static pthread_cond_t pool_cv = PTHREAD_COND_INITIALIZER;
+static int pool_started;
+
+static void drain_tasks(void) {
+    int t;
+    while ((t = atomic_fetch_add(&job.next, 1)) < job.n_tasks) {
+        job.fn(t, job.arg);
+        atomic_fetch_add(&job.done, 1);
+    }
+}
+
+static void *worker_main(void *idp) {
+    int id = (int)(intptr_t)idp;
+    unsigned seen = 0;
+    for (;;) {
+        pthread_mutex_lock(&pool_mu);
+        while (atomic_load(&job.gen) == seen)
+            pthread_cond_wait(&pool_cv, &pool_mu);
+        seen = atomic_load(&job.gen);
+        pthread_mutex_unlock(&pool_mu);
+        if (id < job.participants - 1) drain_tasks();
+    }
+    return NULL;
+}
+
+void pool_init(void) {
+    if (pool_started) return;
+    pool_started = 1;
+    atomic_store(&job.gen, 0);
+    for (int i = 0; i < MAX_WORKERS; i++) {
+        pthread_t t;
+        pthread_create(&t, NULL, worker_main, (void *)(intptr_t)i);
+        pthread_detach(t);
+    }
+}
+
+static void run_tasks(int n_tasks, void (*fn)(int, void *), void *arg) {
+    if (n_tasks <= 1 || g_width <= 1) {
+        for (int t = 0; t < n_tasks; t++) fn(t, arg);
+        return;
+    }
+    job.fn = fn;
+    job.arg = arg;
+    job.n_tasks = n_tasks;
+    job.participants = g_width;
+    atomic_store(&job.next, 0);
+    atomic_store(&job.done, 0);
+    pthread_mutex_lock(&pool_mu);
+    atomic_fetch_add(&job.gen, 1);
+    pthread_cond_broadcast(&pool_cv);
+    pthread_mutex_unlock(&pool_mu);
+    drain_tasks();
+    while (atomic_load(&job.done) < job.n_tasks) sched_yield();
+}
+
+/* ---- dispatch plan ---- */
+
+typedef struct {
+    int tasks, avx2; /* avx2: effective tier for this shape */
+} Plan;
+
+static Plan plan(int n, int k, int m) {
+    long macs = (long)n * k * m;
+    Plan p;
+    if (g_width <= 1 || macs < PAR_MAC_FLOOR || n < 2) {
+        p.tasks = 1;
+    } else {
+        int t = ceil_div(n, TASK_ROWS);
+        int cap = g_width * 4;
+        p.tasks = t < cap ? t : cap;
+    }
+    p.avx2 = (macs < SIMD_MAC_FLOOR) ? 0 : g_simd;
+    return p;
+}
+
+/* ---- f32 path ---- */
+
+/* lhs layout selector: 0 = (n,k) row-major, 1 = transposed (k,n) */
+typedef struct {
+    const float *a, *b;
+    float *out;
+    int n, k, m, lhs_t, rhs_t, mr, nr, avx2, tasks, rows_per;
+    const float *pb; /* packed rhs, whole k x m */
+} F32Job;
+
+static void pack_rhs_f32(const float *b, float *pb, int k, int m,
+                         int nr, int rhs_t) {
+    int strips = ceil_div(m, nr);
+    for (int s = 0; s < strips; s++) {
+        for (int kk = 0; kk < k; kk++) {
+            float *dst = pb + ((size_t)s * k + kk) * nr;
+            for (int j = 0; j < nr; j++) {
+                int col = s * nr + j;
+                dst[j] = col < m
+                             ? (rhs_t ? b[(size_t)col * k + kk]
+                                      : b[(size_t)kk * m + col])
+                             : 0.0f;
+            }
+        }
+    }
+}
+
+static void pack_lhs_f32(const float *a, float *ap, int r0, int rows,
+                         int k0, int kc, int mr, int lhs_t, int k,
+                         int n) {
+    int strips = ceil_div(rows, mr);
+    for (int t = 0; t < strips; t++) {
+        for (int kk = 0; kk < kc; kk++) {
+            float *dst = ap + ((size_t)t * kc + kk) * mr;
+            for (int rr = 0; rr < mr; rr++) {
+                int r = r0 + t * mr + rr;
+                dst[rr] = (t * mr + rr) < rows
+                              ? (lhs_t ? a[(size_t)(k0 + kk) * n + r]
+                                       : a[(size_t)r * k + k0 + kk])
+                              : 0.0f;
+            }
+        }
+    }
+    (void)k;
+}
+
+static void tile_f32_6x16(const float *ap, const float *pb, float *acc,
+                          int kc) {
+    __m256 c[6][2];
+    for (int r = 0; r < 6; r++) {
+        c[r][0] = _mm256_setzero_ps();
+        c[r][1] = _mm256_setzero_ps();
+    }
+    for (int kk = 0; kk < kc; kk++) {
+        __m256 b0 = _mm256_loadu_ps(pb + (size_t)kk * 16);
+        __m256 b1 = _mm256_loadu_ps(pb + (size_t)kk * 16 + 8);
+        const float *arow = ap + (size_t)kk * 6;
+        for (int r = 0; r < 6; r++) {
+            __m256 av = _mm256_broadcast_ss(arow + r);
+            c[r][0] = _mm256_fmadd_ps(av, b0, c[r][0]);
+            c[r][1] = _mm256_fmadd_ps(av, b1, c[r][1]);
+        }
+    }
+    for (int r = 0; r < 6; r++) {
+        _mm256_storeu_ps(acc + r * 16, c[r][0]);
+        _mm256_storeu_ps(acc + r * 16 + 8, c[r][1]);
+    }
+}
+
+/* pinned to SSE2 codegen: the Rust scalar tier and naive oracles
+ * are built at the x86-64 baseline (rustc without target-cpu), so
+ * letting gcc auto-vectorize them with AVX2+FMA would misreport
+ * the scalar tier and the simd-vs-scalar deltas */
+__attribute__((target("sse2"), optimize("no-tree-vectorize")))
+static void tile_f32_4x8(const float *ap, const float *pb, float *acc,
+                         int kc) {
+    memset(acc, 0, 4 * 8 * sizeof(float));
+    for (int kk = 0; kk < kc; kk++) {
+        const float *brow = pb + (size_t)kk * 8;
+        const float *arow = ap + (size_t)kk * 4;
+        for (int r = 0; r < 4; r++) {
+            float av = arow[r];
+            for (int j = 0; j < 8; j++) acc[r * 8 + j] += av * brow[j];
+        }
+    }
+}
+
+static void f32_task(int t, void *argp) {
+    F32Job *jb = (F32Job *)argp;
+    int mr = jb->mr, nr = jb->nr;
+    int r0 = t * jb->rows_per;
+    int r1 = r0 + jb->rows_per;
+    if (r1 > jb->n) r1 = jb->n;
+    if (r0 >= r1) return;
+    int rows = r1 - r0;
+    int strips_m = ceil_div(jb->m, nr);
+    float *ap = ap_buf(
+        (size_t)ceil_div(rows, mr) * mr * KC_F32 * sizeof(float));
+    float acc[6 * 16];
+    for (int k0 = 0; k0 < jb->k; k0 += KC_F32) {
+        int kc = jb->k - k0 < KC_F32 ? jb->k - k0 : KC_F32;
+        pack_lhs_f32(jb->a, ap, r0, rows, k0, kc, mr, jb->lhs_t, jb->k,
+                     jb->n);
+        for (int s = 0; s < strips_m; s++) {
+            const float *pbs = jb->pb + ((size_t)s * jb->k + k0) * nr;
+            int cmax = jb->m - s * nr < nr ? jb->m - s * nr : nr;
+            for (int rt = 0; rt * mr < rows; rt++) {
+                const float *apt = ap + (size_t)rt * kc * mr;
+                if (jb->avx2)
+                    tile_f32_6x16(apt, pbs, acc, kc);
+                else
+                    tile_f32_4x8(apt, pbs, acc, kc);
+                int rmax = rows - rt * mr < mr ? rows - rt * mr : mr;
+                for (int rr = 0; rr < rmax; rr++) {
+                    float *orow =
+                        jb->out + (size_t)(r0 + rt * mr + rr) * jb->m +
+                        s * nr;
+                    const float *arow = acc + rr * nr;
+                    for (int j = 0; j < cmax; j++) orow[j] += arow[j];
+                }
+            }
+        }
+    }
+}
+
+static void gemm_f32(const float *a, const float *b, float *out, int n,
+                     int k, int m, int lhs_t, int rhs_t) {
+    Plan pl = plan(n, k, m);
+    F32Job jb;
+    jb.a = a;
+    jb.b = b;
+    jb.out = out;
+    jb.n = n;
+    jb.k = k;
+    jb.m = m;
+    jb.lhs_t = lhs_t;
+    jb.rhs_t = rhs_t;
+    jb.avx2 = pl.avx2;
+    jb.mr = pl.avx2 ? 6 : 4;
+    jb.nr = pl.avx2 ? 16 : 8;
+    jb.tasks = pl.tasks;
+    jb.rows_per = ceil_div(n, pl.tasks);
+    memset(out, 0, (size_t)n * m * sizeof(float));
+    float *pb =
+        pb_buf((size_t)ceil_div(m, jb.nr) * jb.nr * k * sizeof(float));
+    pack_rhs_f32(b, pb, k, m, jb.nr, rhs_t);
+    jb.pb = pb;
+    run_tasks(pl.tasks, f32_task, &jb);
+}
+
+void gemm_f32_nn(const float *a, const float *b, float *out, int n,
+                 int k, int m) {
+    gemm_f32(a, b, out, n, k, m, 0, 0);
+}
+void gemm_f32_nt(const float *a, const float *bt, float *out, int n,
+                 int k, int m) {
+    gemm_f32(a, bt, out, n, k, m, 0, 1);
+}
+void gemm_f32_tn(const float *at, const float *b, float *out, int n,
+                 int k, int m) {
+    gemm_f32(at, b, out, n, k, m, 1, 0);
+}
+
+/* ---- i8 path: mr=4, nr=8 on both tiers ---- */
+
+typedef struct {
+    const int8_t *a;
+    int32_t *out32;
+    float *outf;
+    const float *sa, *sb;
+    int n, k, m, avx2, rows_per;
+    const int8_t *pb;
+} I8Job;
+
+static void pack_rhs_i8(const int8_t *b, int8_t *pb, int k, int m) {
+    int strips = ceil_div(m, 8);
+    for (int s = 0; s < strips; s++)
+        for (int kk = 0; kk < k; kk++) {
+            int8_t *dst = pb + ((size_t)s * k + kk) * 8;
+            for (int j = 0; j < 8; j++) {
+                int col = s * 8 + j;
+                dst[j] = col < m ? b[(size_t)kk * m + col] : 0;
+            }
+        }
+}
+
+static void pack_lhs_i8(const int8_t *a, int8_t *ap, int r0, int rows,
+                        int k0, int kc, int k) {
+    int strips = ceil_div(rows, 4);
+    for (int t = 0; t < strips; t++)
+        for (int kk = 0; kk < kc; kk++) {
+            int8_t *dst = ap + ((size_t)t * kc + kk) * 4;
+            for (int rr = 0; rr < 4; rr++)
+                dst[rr] = (t * 4 + rr) < rows
+                              ? a[(size_t)(r0 + t * 4 + rr) * k + k0 + kk]
+                              : 0;
+        }
+}
+
+static void tile_i8_4x8_avx2(const int8_t *ap, const int8_t *pb,
+                             int32_t *acc, int kc) {
+    __m256i c[4];
+    for (int r = 0; r < 4; r++) c[r] = _mm256_setzero_si256();
+    int kk = 0;
+    for (; kk + 1 < kc; kk += 2) {
+        __m128i b0 =
+            _mm_loadl_epi64((const __m128i *)(pb + (size_t)kk * 8));
+        __m128i b1 = _mm_loadl_epi64(
+            (const __m128i *)(pb + (size_t)(kk + 1) * 8));
+        __m256i bw = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(b0, b1));
+        for (int r = 0; r < 4; r++) {
+            uint16_t a0 = (uint16_t)(int16_t)ap[(size_t)kk * 4 + r];
+            uint16_t a1 = (uint16_t)(int16_t)ap[(size_t)(kk + 1) * 4 + r];
+            __m256i aw =
+                _mm256_set1_epi32((int32_t)(((uint32_t)a1 << 16) | a0));
+            c[r] = _mm256_add_epi32(c[r], _mm256_madd_epi16(aw, bw));
+        }
+    }
+    int32_t tail[4][8];
+    memset(tail, 0, sizeof(tail));
+    if (kk < kc) /* odd-k tail */
+        for (int r = 0; r < 4; r++)
+            for (int j = 0; j < 8; j++)
+                tail[r][j] = (int32_t)ap[(size_t)kk * 4 + r] *
+                             (int32_t)pb[(size_t)kk * 8 + j];
+    for (int r = 0; r < 4; r++) {
+        _mm256_storeu_si256((__m256i *)(acc + r * 8), c[r]);
+        for (int j = 0; j < 8; j++) acc[r * 8 + j] += tail[r][j];
+    }
+}
+
+/* pinned to SSE2 codegen: the Rust scalar tier and naive oracles
+ * are built at the x86-64 baseline (rustc without target-cpu), so
+ * letting gcc auto-vectorize them with AVX2+FMA would misreport
+ * the scalar tier and the simd-vs-scalar deltas */
+__attribute__((target("sse2"), optimize("no-tree-vectorize")))
+static void tile_i8_4x8_scalar(const int8_t *ap, const int8_t *pb,
+                               int32_t *acc, int kc) {
+    memset(acc, 0, 4 * 8 * sizeof(int32_t));
+    for (int kk = 0; kk < kc; kk++) {
+        const int8_t *brow = pb + (size_t)kk * 8;
+        const int8_t *arow = ap + (size_t)kk * 4;
+        for (int r = 0; r < 4; r++) {
+            int32_t av = arow[r];
+            for (int j = 0; j < 8; j++)
+                acc[r * 8 + j] += av * (int32_t)brow[j];
+        }
+    }
+}
+
+static void i8_task(int t, void *argp) {
+    I8Job *jb = (I8Job *)argp;
+    int r0 = t * jb->rows_per;
+    int r1 = r0 + jb->rows_per;
+    if (r1 > jb->n) r1 = jb->n;
+    if (r0 >= r1) return;
+    int rows = r1 - r0;
+    int strips_m = ceil_div(jb->m, 8);
+    int8_t *ap = ap_buf((size_t)ceil_div(rows, 4) * 4 * KC_I8);
+    int32_t acc[4 * 8];
+    for (int k0 = 0; k0 < jb->k; k0 += KC_I8) {
+        int kc = jb->k - k0 < KC_I8 ? jb->k - k0 : KC_I8;
+        pack_lhs_i8(jb->a, ap, r0, rows, k0, kc, jb->k);
+        for (int s = 0; s < strips_m; s++) {
+            const int8_t *pbs = jb->pb + ((size_t)s * jb->k + k0) * 8;
+            int cmax = jb->m - s * 8 < 8 ? jb->m - s * 8 : 8;
+            for (int rt = 0; rt * 4 < rows; rt++) {
+                const int8_t *apt = ap + (size_t)rt * kc * 4;
+                if (jb->avx2)
+                    tile_i8_4x8_avx2(apt, pbs, acc, kc);
+                else
+                    tile_i8_4x8_scalar(apt, pbs, acc, kc);
+                int rmax = rows - rt * 4 < 4 ? rows - rt * 4 : 4;
+                for (int rr = 0; rr < rmax; rr++) {
+                    size_t row = (size_t)(r0 + rt * 4 + rr);
+                    if (jb->out32) {
+                        int32_t *orow = jb->out32 + row * jb->m + s * 8;
+                        for (int j = 0; j < cmax; j++)
+                            orow[j] += acc[rr * 8 + j];
+                    } else { /* single-block dequant write */
+                        float *orow = jb->outf + row * jb->m + s * 8;
+                        float srow = jb->sa[row];
+                        for (int j = 0; j < cmax; j++)
+                            orow[j] = (float)acc[rr * 8 + j] * srow *
+                                      jb->sb[s * 8 + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+static void gemm_i8(const int8_t *a, const int8_t *b, int32_t *out32,
+                    float *outf, const float *sa, const float *sb,
+                    int n, int k, int m) {
+    Plan pl = plan(n, k, m);
+    I8Job jb;
+    jb.a = a;
+    jb.out32 = out32;
+    jb.outf = outf;
+    jb.sa = sa;
+    jb.sb = sb;
+    jb.n = n;
+    jb.k = k;
+    jb.m = m;
+    jb.avx2 = pl.avx2;
+    jb.rows_per = ceil_div(n, pl.tasks);
+    if (out32) memset(out32, 0, (size_t)n * m * sizeof(int32_t));
+    int8_t *pb = pb_buf((size_t)ceil_div(m, 8) * 8 * k);
+    pack_rhs_i8(b, pb, k, m);
+    jb.pb = pb;
+    run_tasks(pl.tasks, i8_task, &jb);
+}
+
+void gemm_i8_nn(const int8_t *a, const int8_t *b, int32_t *out, int n,
+                int k, int m) {
+    gemm_i8(a, b, out, NULL, NULL, NULL, n, k, m);
+}
+
+void gemm_i8_nn_deq(const int8_t *a, const int8_t *b, float *out,
+                    int n, int k, int m, const float *sa,
+                    const float *sb) {
+    if (k > KC_I8) {
+        fprintf(stderr, "deq gemm k=%d > one KC block\n", k);
+        exit(1);
+    }
+    gemm_i8(a, b, NULL, out, sa, sb, n, k, m);
+}
+
+/* ---- naive oracles (reference.rs loop structure) ---- */
+
+/* pinned to SSE2 codegen: the Rust scalar tier and naive oracles
+ * are built at the x86-64 baseline (rustc without target-cpu), so
+ * letting gcc auto-vectorize them with AVX2+FMA would misreport
+ * the scalar tier and the simd-vs-scalar deltas */
+__attribute__((target("sse2"), optimize("no-tree-vectorize")))
+void naive_f32(const float *a, const float *b, float *out, int n,
+               int k, int m) {
+    memset(out, 0, (size_t)n * m * sizeof(float));
+    for (int r = 0; r < n; r++)
+        for (int p = 0; p < k; p++) {
+            float av = a[(size_t)r * k + p];
+            if (av == 0.0f) continue;
+            const float *brow = b + (size_t)p * m;
+            float *orow = out + (size_t)r * m;
+            for (int c = 0; c < m; c++) orow[c] += av * brow[c];
+        }
+}
+
+/* pinned to SSE2 codegen: the Rust scalar tier and naive oracles
+ * are built at the x86-64 baseline (rustc without target-cpu), so
+ * letting gcc auto-vectorize them with AVX2+FMA would misreport
+ * the scalar tier and the simd-vs-scalar deltas */
+__attribute__((target("sse2"), optimize("no-tree-vectorize")))
+void naive_i8(const int8_t *a, const int8_t *b, int32_t *out, int n,
+              int k, int m) {
+    for (int r = 0; r < n; r++)
+        for (int c = 0; c < m; c++) {
+            int32_t acc = 0;
+            for (int p = 0; p < k; p++)
+                acc += (int32_t)a[(size_t)r * k + p] *
+                       (int32_t)b[(size_t)p * m + c];
+            out[(size_t)r * m + c] = acc;
+        }
+}

@@ -1,0 +1,259 @@
+/* Driver: `./mirror kernels|e2e|probe|check`.
+ *
+ * kernels / e2e emit raw per-iteration seconds as JSONL on stdout
+ * (one {"cell":...,"samples":[...]} object per line); probe prints the
+ * stream-copy bandwidth measurement; check validates the blocked GEMMs
+ * against the naive oracles and exits nonzero on any mismatch. */
+#include "mirror.h"
+
+/* ---- kernel suite: mirrors bench::suites::run_kernels ---- */
+
+typedef struct {
+    const float *a, *b;
+    const int8_t *qa, *qb;
+    float *out;
+    int32_t *out32;
+    int size;
+} KernArg;
+
+static void cell_naive_f32(void *p) {
+    KernArg *k = (KernArg *)p;
+    naive_f32(k->a, k->b, k->out, k->size, k->size, k->size);
+}
+static void cell_naive_i8(void *p) {
+    KernArg *k = (KernArg *)p;
+    naive_i8(k->qa, k->qb, k->out32, k->size, k->size, k->size);
+}
+static void cell_f32(void *p) {
+    KernArg *k = (KernArg *)p;
+    gemm_f32_nn(k->a, k->b, k->out, k->size, k->size, k->size);
+}
+static void cell_i8(void *p) {
+    KernArg *k = (KernArg *)p;
+    gemm_i8_nn(k->qa, k->qb, k->out32, k->size, k->size, k->size);
+}
+
+void run_kernel_suite(void) {
+    static const struct { int size; uint64_t budget_ms; } SIZES[] = {
+        {64, 150}, {128, 250}, {256, 600}, {512, 1500}};
+    double samples[64];
+    for (int si = 0; si < 4; si++) {
+        int size = SIZES[si].size;
+        Pcg32 rng;
+        pcg_seeded(&rng, (uint64_t)size);
+        size_t nn = (size_t)size * size;
+        float *a = malloc(nn * sizeof(float));
+        float *b = malloc(nn * sizeof(float));
+        int8_t *qa = malloc(nn);
+        int8_t *qb = malloc(nn);
+        /* draw order matches run_kernels: a, b, qa, qb */
+        for (size_t i = 0; i < nn; i++) a[i] = pcg_normal(&rng);
+        for (size_t i = 0; i < nn; i++) b[i] = pcg_normal(&rng);
+        for (size_t i = 0; i < nn; i++)
+            qa[i] = (int8_t)((int32_t)pcg_below(&rng, 255) - 127);
+        for (size_t i = 0; i < nn; i++)
+            qb[i] = (int8_t)((int32_t)pcg_below(&rng, 255) - 127);
+        KernArg ka = {a, b, qa, qb, malloc(nn * sizeof(float)),
+                      malloc(nn * sizeof(int32_t)), size};
+        Policy pol = policy_timed(SIZES[si].budget_ms, 64);
+        char id[64];
+
+        if (size <= 256) {
+            g_width = 1;
+            g_simd = 0;
+            int n = sample_cell(&pol, cell_naive_f32, &ka, samples, 64);
+            snprintf(id, sizeof(id), "f32/%d/naive/1t", size);
+            emit_samples(id, samples, n);
+            n = sample_cell(&pol, cell_naive_i8, &ka, samples, 64);
+            snprintf(id, sizeof(id), "i8/%d/naive/1t", size);
+            emit_samples(id, samples, n);
+        }
+        for (int simd = 0; simd <= 1; simd++) {
+            static const int THREADS[] = {1, 2, 4};
+            for (int ti = 0; ti < 3; ti++) {
+                g_width = THREADS[ti];
+                g_simd = simd;
+                const char *imp = simd ? "simd" : "scalar";
+                int n = sample_cell(&pol, cell_f32, &ka, samples, 64);
+                snprintf(id, sizeof(id), "f32/%d/%s/%dt", size, imp,
+                         THREADS[ti]);
+                emit_samples(id, samples, n);
+                n = sample_cell(&pol, cell_i8, &ka, samples, 64);
+                snprintf(id, sizeof(id), "i8/%d/%s/%dt", size, imp,
+                         THREADS[ti]);
+                emit_samples(id, samples, n);
+            }
+        }
+        fprintf(stderr, "kernels: size %d done\n", size);
+        free(a);
+        free(b);
+        free(qa);
+        free(qb);
+        free(ka.out);
+        free(ka.out32);
+    }
+}
+
+/* ---- stream-copy probe: mirrors bench::roofline::mem_bw_gbps ---- */
+
+void run_probe(void) {
+    size_t words = (32UL << 20) / 8;
+    uint64_t *src = malloc(words * 8);
+    uint64_t *dst = malloc(words * 8);
+    for (size_t i = 0; i < words; i++) src[i] = i * 0x9e3779b97f4a7c15ULL;
+    memcpy(dst, src, words * 8); /* warm */
+    double best = INFINITY;
+    for (int p = 0; p < 5; p++) {
+        double t0 = now_s();
+        memcpy(dst, src, words * 8);
+        double t = now_s() - t0;
+        if (t < best) best = t;
+    }
+    if (dst[words - 1] == 0) fprintf(stderr, "impossible\n");
+    printf("{\"probe_best_s\":%.9e,\"probe_bytes\":%zu}\n", best,
+           words * 8);
+    free(src);
+    free(dst);
+}
+
+/* ---- correctness check: blocked kernels vs naive oracles ---- */
+
+static int check_f32(const char *what, const float *got,
+                     const float *want, size_t len) {
+    double worst = 0.0;
+    for (size_t i = 0; i < len; i++) {
+        double d = fabs((double)got[i] - (double)want[i]);
+        /* mixed tolerance: near-zero outputs of a cancelling f32 dot
+         * carry O(eps * sum|terms|) noise in BOTH operands, so a pure
+         * relative check false-positives on them */
+        double rel = d / (fabs((double)want[i]) + 1.0);
+        if (rel > worst) worst = rel;
+    }
+    int ok = worst < 1e-4;
+    fprintf(stderr, "%-28s rel err %.2e %s\n", what, worst,
+            ok ? "ok" : "FAIL");
+    return ok;
+}
+
+static int check_i32(const char *what, const int32_t *got,
+                     const int32_t *want, size_t len) {
+    for (size_t i = 0; i < len; i++)
+        if (got[i] != want[i]) {
+            fprintf(stderr, "%-28s mismatch at %zu: %d != %d FAIL\n",
+                    what, i, got[i], want[i]);
+            return 0;
+        }
+    fprintf(stderr, "%-28s exact ok\n", what);
+    return 1;
+}
+
+int run_check(void) {
+    /* odd shapes on purpose: tail rows/cols, odd k for the i8 pair
+     * loop, plus one multi-task shape */
+    static const int SHAPES[][3] = {
+        {7, 13, 9}, {33, 31, 17}, {64, 64, 64}, {130, 257, 96},
+        {512, 96, 64}};
+    int pass = 1;
+    for (int w = 1; w <= 4; w *= 4) {
+        for (int simd = 0; simd <= 1; simd++) {
+            g_width = w;
+            g_simd = simd;
+            for (int si = 0; si < 5; si++) {
+                int n = SHAPES[si][0], k = SHAPES[si][1],
+                    m = SHAPES[si][2];
+                Pcg32 rng;
+                pcg_seeded(&rng, 99 + si);
+                float *a = malloc((size_t)n * k * sizeof(float));
+                float *b = malloc((size_t)k * m * sizeof(float));
+                int8_t *qa = malloc((size_t)n * k);
+                int8_t *qb = malloc((size_t)k * m);
+                for (int i = 0; i < n * k; i++) a[i] = pcg_normal(&rng);
+                for (int i = 0; i < k * m; i++) b[i] = pcg_normal(&rng);
+                for (int i = 0; i < n * k; i++)
+                    qa[i] = (int8_t)((int32_t)pcg_below(&rng, 255) - 127);
+                for (int i = 0; i < k * m; i++)
+                    qb[i] = (int8_t)((int32_t)pcg_below(&rng, 255) - 127);
+                float *want = malloc((size_t)n * m * sizeof(float));
+                float *got = malloc((size_t)n * m * sizeof(float));
+                int32_t *want32 = malloc((size_t)n * m * 4);
+                int32_t *got32 = malloc((size_t)n * m * 4);
+                char tag[64];
+
+                naive_f32(a, b, want, n, k, m);
+                gemm_f32_nn(a, b, got, n, k, m);
+                snprintf(tag, sizeof(tag), "f32 nn %dx%dx%d w%d s%d", n,
+                         k, m, w, simd);
+                pass &= check_f32(tag, got, want, (size_t)n * m);
+
+                /* nt: bt is (m, k) = b transposed */
+                float *bt = malloc((size_t)k * m * sizeof(float));
+                for (int r = 0; r < k; r++)
+                    for (int c = 0; c < m; c++)
+                        bt[(size_t)c * k + r] = b[(size_t)r * m + c];
+                gemm_f32_nt(a, bt, got, n, k, m);
+                snprintf(tag, sizeof(tag), "f32 nt %dx%dx%d w%d s%d", n,
+                         k, m, w, simd);
+                pass &= check_f32(tag, got, want, (size_t)n * m);
+
+                /* tn: at is (k, n) = a transposed */
+                float *at = malloc((size_t)n * k * sizeof(float));
+                for (int r = 0; r < n; r++)
+                    for (int c = 0; c < k; c++)
+                        at[(size_t)c * n + r] = a[(size_t)r * k + c];
+                gemm_f32_tn(at, b, got, n, k, m);
+                snprintf(tag, sizeof(tag), "f32 tn %dx%dx%d w%d s%d", n,
+                         k, m, w, simd);
+                pass &= check_f32(tag, got, want, (size_t)n * m);
+
+                naive_i8(qa, qb, want32, n, k, m);
+                gemm_i8_nn(qa, qb, got32, n, k, m);
+                snprintf(tag, sizeof(tag), "i8 nn %dx%dx%d w%d s%d", n,
+                         k, m, w, simd);
+                pass &= check_i32(tag, got32, want32, (size_t)n * m);
+
+                if (k <= 1024) {
+                    float *sa = malloc(n * sizeof(float));
+                    float *sb = malloc(m * sizeof(float));
+                    for (int i = 0; i < n; i++)
+                        sa[i] = 0.01f + pcg_uniform(&rng);
+                    for (int i = 0; i < m; i++)
+                        sb[i] = 0.01f + pcg_uniform(&rng);
+                    gemm_i8_nn_deq(qa, qb, got, n, k, m, sa, sb);
+                    for (int r = 0; r < n; r++)
+                        for (int c = 0; c < m; c++)
+                            want[(size_t)r * m + c] =
+                                (float)want32[(size_t)r * m + c] *
+                                sa[r] * sb[c];
+                    snprintf(tag, sizeof(tag), "i8 deq %dx%dx%d w%d s%d",
+                             n, k, m, w, simd);
+                    pass &= check_f32(tag, got, want, (size_t)n * m);
+                    free(sa);
+                    free(sb);
+                }
+                free(a); free(b); free(qa); free(qb); free(bt);
+                free(at); free(want); free(got); free(want32);
+                free(got32);
+            }
+        }
+    }
+    fprintf(stderr, pass ? "CHECK PASS\n" : "CHECK FAIL\n");
+    return pass ? 0 : 1;
+}
+
+int main(int argc, char **argv) {
+    if (argc < 2) {
+        fprintf(stderr, "usage: %s kernels|e2e|probe|check\n", argv[0]);
+        return 2;
+    }
+    pool_init();
+    hla_init();
+    if (strcmp(argv[1], "kernels") == 0) run_kernel_suite();
+    else if (strcmp(argv[1], "e2e") == 0) run_e2e_suite();
+    else if (strcmp(argv[1], "probe") == 0) run_probe();
+    else if (strcmp(argv[1], "check") == 0) return run_check();
+    else {
+        fprintf(stderr, "unknown command %s\n", argv[1]);
+        return 2;
+    }
+    return 0;
+}

@@ -1,0 +1,155 @@
+/* C mirror of the rust/src/bench harness for hosts without a Rust
+ * toolchain. Times the same cells (same blocked-GEMM geometry, same
+ * FWHT/quant/HLA ops, same ViT step sequence, same sampling policy)
+ * and emits raw per-iteration seconds as JSONL; tools/bench_mirror/
+ * assemble.py turns that into the schema-v2 BENCH_*.json reports.
+ * See README.md in this directory for what is and is not mirrored. */
+#ifndef MIRROR_H
+#define MIRROR_H
+
+#define _GNU_SOURCE
+#include <math.h>
+#include <pthread.h>
+#include <sched.h>
+#include <stdatomic.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* ---- util.c ---- */
+
+typedef struct {
+    uint64_t state, inc;
+} Pcg32;
+
+void pcg_new(Pcg32 *r, uint64_t seed, uint64_t stream);
+void pcg_seeded(Pcg32 *r, uint64_t seed);
+uint32_t pcg_u32(Pcg32 *r);
+uint32_t pcg_below(Pcg32 *r, uint32_t n);
+float pcg_uniform(Pcg32 *r);
+float pcg_normal(Pcg32 *r);
+
+double now_s(void);
+
+/* sampling policy, mirroring bench::stats::Policy exactly */
+typedef struct {
+    double budget_s; /* 0 for fixed */
+    int min_iters, max_iters, max_warmup;
+} Policy;
+
+Policy policy_timed(uint64_t budget_ms, int max_iters);
+Policy policy_fixed(int iters);
+
+/* warmup + timed loop; returns number of samples written (<= cap) */
+int sample_cell(const Policy *p, void (*fn)(void *), void *arg,
+                double *out, int cap);
+void emit_samples(const char *id, const double *s, int n);
+
+/* grow-only bump arena: reset per step, like the Rust packing arenas +
+ * per-call Vec allocs collapsing into steady-state-alloc-free reuse */
+void *arena_alloc(size_t bytes);
+void arena_reset(void);
+
+/* ---- gemm.c ---- */
+
+/* process-global kernel knobs, mirroring kernels::set_num_threads /
+ * set_simd_enabled */
+extern int g_width;   /* pool width (1 = serial) */
+extern int g_simd;    /* 1 = avx2 tier, 0 = scalar tier */
+
+void pool_init(void);
+
+/* blocked, packed GEMMs (same KC/MR/NR geometry as rust kernels) */
+void gemm_f32_nn(const float *a, const float *b, float *out, int n,
+                 int k, int m);
+void gemm_f32_nt(const float *a, const float *bt, float *out, int n,
+                 int k, int m);
+void gemm_f32_tn(const float *at, const float *b, float *out, int n,
+                 int k, int m);
+void gemm_i8_nn(const int8_t *a, const int8_t *b, int32_t *out, int n,
+                int k, int m);
+/* single-KC-block int8 GEMM with fused dequant: out = acc*sa[r]*sb[c] */
+void gemm_i8_nn_deq(const int8_t *a, const int8_t *b, float *out,
+                    int n, int k, int m, const float *sa,
+                    const float *sb);
+
+/* naive oracles (reference.rs) */
+void naive_f32(const float *a, const float *b, float *out, int n,
+               int k, int m);
+void naive_i8(const int8_t *a, const int8_t *b, int32_t *out, int n,
+              int k, int m);
+
+/* ---- ops.c ---- */
+
+void fwht16(float *x);
+/* fused FWHT + per-row amax quant along rows of length o (o%16==0) */
+void fwht_quant_rows(const float *x, int n, int o, int qmax, int8_t *q,
+                     float *scales);
+/* fused FWHT down columns (o%16==0) + per-column amax quant */
+void fwht_quant_cols(const float *w, int o, int i, int qmax, int8_t *q,
+                     float *scales);
+/* per-row min-max int8 quantize-and-pack (ctx storage epilogue) */
+void quant_pack_rows(const float *x, int rows, int cols, int8_t *q,
+                     float *scales);
+
+void hla_init(void); /* sequency-ordered lowpass indices for rank 8 */
+void block_hla_axis0(const float *x, int rows, int cols, int rank,
+                     float *out);
+/* block-HLA + int8 pack: the ABC ctx compressor */
+void hla_compress(const float *x, int n, int cols, int8_t *q,
+                  float *scales);
+/* g_w = (H gy)^T . dequant(xa): block-HLA, int8 round-trip, f32 TN GEMM */
+void hla_matmul(const float *gy, int n, int o, const int8_t *xa,
+                const float *xa_scales, int i, float *gw);
+/* g_x = dequant(FWHT-INT4(gy) . FWHT-INT4(w)) */
+void hq_matmul(const float *gy, int n, int o, const float *w, int i,
+               float *gx);
+
+void layernorm_fwd(const float *x, int n, int d, const float *g,
+                   const float *b, float *y, float *xhat, float *rstd);
+void layernorm_bwd(const float *gy, const float *xhat,
+                   const float *rstd, const float *g, int n, int d,
+                   float *gx, float *gg, float *gb);
+void gelu_fwd(const float *x, int n, float *y);
+void gelu_bwd(const float *gy, const float *x, int n, float *gx);
+void attention_fwd(const float *q, const float *k, const float *v,
+                   int b, int h, int l, int dh, float *att, float *kh,
+                   float *p, float *qh, float *vh);
+void attention_bwd(const float *g_att, const float *kh, const float *p,
+                   const float *qh, const float *vh, int b, int h,
+                   int l, int dh, float *gq, float *gk, float *gv);
+float softmax_xent_fwd(const float *logits, const int32_t *labels,
+                       int n, int c, float *p);
+void adamw(float *p, float *m, float *v, const float *g, int len,
+           int decay, int t, float lr);
+
+static inline float pru(float x) {
+    uint32_t b;
+    memcpy(&b, &x, 4);
+    return (float)(b & 0x7FF) / 2048.0f;
+}
+
+static inline float q_ps(float x, float scale, int qmax) {
+    float v = x / scale;
+    float fl = floorf(v);
+    float r = (v - fl > pru(x)) ? fl + 1.0f : fl;
+    float qm = (float)qmax;
+    return r > qm ? qm : (r < -qm ? -qm : r);
+}
+
+static inline float minmax_scale(float amax, int qmax) {
+    return (amax > 1e-8f ? amax : 1e-8f) / (float)qmax;
+}
+
+/* ---- e2e.c ---- */
+
+void run_e2e_suite(void);
+
+/* ---- main.c helpers ---- */
+void run_kernel_suite(void);
+void run_probe(void);
+int run_check(void);
+
+#endif

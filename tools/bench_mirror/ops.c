@@ -1,0 +1,432 @@
+/* FWHT + stochastic-rounding quantizers, block-HLA (ABC) compression,
+ * and the naive-loop layer ops (layernorm / GELU / attention /
+ * softmax-xent / AdamW), mirroring rust/src/kernels/fused.rs,
+ * rust/src/hadamard/, and rust/src/backend/native/{layers,optim}.rs.
+ * The quantize/FWHT epilogues here are portable C (auto-vectorized at
+ * -O3) where the Rust AVX2 tier is hand-written — see README.md. */
+#include "mirror.h"
+
+#define FWHT_BLOCK 16
+#define FWHT_NORM 0.25f
+
+void fwht16(float *x) {
+    for (int half = 1; half < 16; half <<= 1)
+        for (int i = 0; i < 16; i += 2 * half)
+            for (int j = 0; j < half; j++) {
+                float a = x[i + j], b = x[i + j + half];
+                x[i + j] = a + b;
+                x[i + j + half] = a - b;
+            }
+    for (int i = 0; i < 16; i++) x[i] *= FWHT_NORM;
+}
+
+void fwht_quant_rows(const float *x, int n, int o, int qmax, int8_t *q,
+                     float *scales) {
+    float *scratch = arena_alloc((size_t)o * sizeof(float));
+    for (int r = 0; r < n; r++) {
+        const float *row = x + (size_t)r * o;
+        memcpy(scratch, row, (size_t)o * sizeof(float));
+        float amax = 0.0f;
+        for (int t = 0; t < o; t += FWHT_BLOCK) {
+            fwht16(scratch + t);
+            for (int j = 0; j < FWHT_BLOCK; j++) {
+                float a = fabsf(scratch[t + j]);
+                if (a > amax) amax = a;
+            }
+        }
+        float s = minmax_scale(amax, qmax);
+        scales[r] = s;
+        int8_t *qrow = q + (size_t)r * o;
+        for (int c = 0; c < o; c++)
+            qrow[c] = (int8_t)q_ps(scratch[c], s, qmax);
+    }
+}
+
+/* column transform in 16-row x 64-col gather tiles (the fused.rs
+ * cols_worker shape), then per-column amax + quantize */
+void fwht_quant_cols(const float *w, int o, int i, int qmax, int8_t *q,
+                     float *scales) {
+    float *scratch = arena_alloc((size_t)o * i * sizeof(float));
+    memcpy(scratch, w, (size_t)o * i * sizeof(float));
+    float tile[16][64];
+    for (int t = 0; t < o; t += FWHT_BLOCK) {
+        for (int c0 = 0; c0 < i; c0 += 64) {
+            int cw = i - c0 < 64 ? i - c0 : 64;
+            for (int r = 0; r < 16; r++)
+                memcpy(tile[r], scratch + (size_t)(t + r) * i + c0,
+                       (size_t)cw * sizeof(float));
+            for (int half = 1; half < 16; half <<= 1)
+                for (int r = 0; r < 16; r += 2 * half)
+                    for (int j = 0; j < half; j++)
+                        for (int c = 0; c < cw; c++) {
+                            float a = tile[r + j][c];
+                            float b = tile[r + j + half][c];
+                            tile[r + j][c] = a + b;
+                            tile[r + j + half][c] = a - b;
+                        }
+            for (int r = 0; r < 16; r++) {
+                float *dst = scratch + (size_t)(t + r) * i + c0;
+                for (int c = 0; c < cw; c++)
+                    dst[c] = tile[r][c] * FWHT_NORM;
+            }
+        }
+    }
+    for (int c = 0; c < i; c++) {
+        float amax = 0.0f;
+        for (int r = 0; r < o; r++) {
+            float a = fabsf(scratch[(size_t)r * i + c]);
+            if (a > amax) amax = a;
+        }
+        scales[c] = minmax_scale(amax, qmax);
+    }
+    for (int r = 0; r < o; r++)
+        for (int c = 0; c < i; c++)
+            q[(size_t)r * i + c] =
+                (int8_t)q_ps(scratch[(size_t)r * i + c], scales[c], qmax);
+}
+
+void quant_pack_rows(const float *x, int rows, int cols, int8_t *q,
+                     float *scales) {
+    for (int r = 0; r < rows; r++) {
+        const float *row = x + (size_t)r * cols;
+        float amax = 0.0f;
+        for (int c = 0; c < cols; c++) {
+            float a = fabsf(row[c]);
+            if (a > amax) amax = a;
+        }
+        float s = minmax_scale(amax, 127);
+        scales[r] = s;
+        int8_t *qrow = q + (size_t)r * cols;
+        for (int c = 0; c < cols; c++)
+            qrow[c] = (int8_t)q_ps(row[c], s, 127);
+    }
+}
+
+/* ---- block HLA (hadamard/mod.rs + lowpass.rs) ---- */
+
+#define HLA_RANK 8
+static int lowpass_idx[HLA_RANK];
+static float h16[16][16];
+
+void hla_init(void) {
+    for (int i = 0; i < 16; i++)
+        for (int j = 0; j < 16; j++)
+            h16[i][j] =
+                (__builtin_popcount(i & j) & 1) ? -0.25f : 0.25f;
+    /* sequency = sign changes along the row; stable sort natural
+     * indices by it, take the first `rank` */
+    int seq[16], idx[16];
+    for (int i = 0; i < 16; i++) {
+        int ch = 0;
+        for (int j = 1; j < 16; j++)
+            if ((h16[i][j] > 0) != (h16[i][j - 1] > 0)) ch++;
+        seq[i] = ch;
+        idx[i] = i;
+    }
+    for (int a = 1; a < 16; a++) { /* insertion sort = stable */
+        int v = idx[a], b = a;
+        while (b > 0 && seq[idx[b - 1]] > seq[v]) {
+            idx[b] = idx[b - 1];
+            b--;
+        }
+        idx[b] = v;
+    }
+    for (int r = 0; r < HLA_RANK; r++) lowpass_idx[r] = idx[r];
+}
+
+void block_hla_axis0(const float *x, int rows, int cols, int rank,
+                     float *out) {
+    int tiles = rows / FWHT_BLOCK;
+    for (int t = 0; t < tiles; t++)
+        for (int r = 0; r < rank; r++) {
+            const float *hrow = h16[lowpass_idx[r]];
+            float *orow = out + ((size_t)t * rank + r) * cols;
+            for (int c = 0; c < cols; c++) {
+                float acc = 0.0f;
+                for (int b = 0; b < FWHT_BLOCK; b++)
+                    acc += hrow[b] *
+                           x[((size_t)t * FWHT_BLOCK + b) * cols + c];
+                orow[c] = acc;
+            }
+        }
+}
+
+void hla_compress(const float *x, int n, int cols, int8_t *q,
+                  float *scales) {
+    int nc = n / FWHT_BLOCK * HLA_RANK;
+    float *xc = arena_alloc((size_t)nc * cols * sizeof(float));
+    block_hla_axis0(x, n, cols, HLA_RANK, xc);
+    quant_pack_rows(xc, nc, cols, q, scales);
+}
+
+void hla_matmul(const float *gy, int n, int o, const int8_t *xa,
+                const float *xa_scales, int i, float *gw) {
+    int nc = n / FWHT_BLOCK * HLA_RANK;
+    float *gc = arena_alloc((size_t)nc * o * sizeof(float));
+    block_hla_axis0(gy, n, o, HLA_RANK, gc);
+    /* int8 round-trip of the compressed gradient (fake-quant) */
+    float amax = 0.0f;
+    for (size_t z = 0; z < (size_t)nc * o; z++) {
+        float a = fabsf(gc[z]);
+        if (a > amax) amax = a;
+    }
+    float st = minmax_scale(amax, 127);
+    float *gdeq = arena_alloc((size_t)nc * o * sizeof(float));
+    for (size_t z = 0; z < (size_t)nc * o; z++)
+        gdeq[z] = q_ps(gc[z], st, 127) * st;
+    /* dequantized saved activation */
+    float *xf = arena_alloc((size_t)nc * i * sizeof(float));
+    for (int r = 0; r < nc; r++) {
+        float s = xa_scales[r];
+        const int8_t *qr = xa + (size_t)r * i;
+        float *xr = xf + (size_t)r * i;
+        for (int c = 0; c < i; c++) xr[c] = (float)qr[c] * s;
+    }
+    gemm_f32_tn(gdeq, xf, gw, o, nc, i);
+}
+
+void hq_matmul(const float *gy, int n, int o, const float *w, int i,
+               float *gx) {
+    int8_t *qg = arena_alloc((size_t)n * o);
+    float *sg = arena_alloc((size_t)n * sizeof(float));
+    fwht_quant_rows(gy, n, o, 7, qg, sg);
+    int8_t *qw = arena_alloc((size_t)o * i);
+    float *sw = arena_alloc((size_t)i * sizeof(float));
+    fwht_quant_cols(w, o, i, 7, qw, sw);
+    gemm_i8_nn_deq(qg, qw, gx, n, o, i, sg, sw);
+}
+
+/* ---- layer ops (naive loops, as in backend/native/layers.rs) ---- */
+
+#define LN_EPS 1e-5f
+
+void layernorm_fwd(const float *x, int n, int d, const float *g,
+                   const float *b, float *y, float *xhat, float *rstd) {
+    for (int r = 0; r < n; r++) {
+        const float *row = x + (size_t)r * d;
+        float mean = 0.0f;
+        for (int c = 0; c < d; c++) mean += row[c];
+        mean /= (float)d;
+        float var = 0.0f;
+        for (int c = 0; c < d; c++) {
+            float dv = row[c] - mean;
+            var += dv * dv;
+        }
+        var /= (float)d;
+        float rs = 1.0f / sqrtf(var + LN_EPS);
+        rstd[r] = rs;
+        float *xh = xhat + (size_t)r * d;
+        float *yr = y + (size_t)r * d;
+        for (int c = 0; c < d; c++) {
+            xh[c] = (row[c] - mean) * rs;
+            yr[c] = g[c] * xh[c] + b[c];
+        }
+    }
+}
+
+void layernorm_bwd(const float *gy, const float *xhat,
+                   const float *rstd, const float *g, int n, int d,
+                   float *gx, float *gg, float *gb) {
+    for (int r = 0; r < n; r++) {
+        const float *gyr = gy + (size_t)r * d;
+        const float *xh = xhat + (size_t)r * d;
+        float m1 = 0.0f, m2 = 0.0f;
+        for (int c = 0; c < d; c++) {
+            float dxh = gyr[c] * g[c];
+            m1 += dxh;
+            m2 += dxh * xh[c];
+            gg[c] += gyr[c] * xh[c];
+            gb[c] += gyr[c];
+        }
+        m1 /= (float)d;
+        m2 /= (float)d;
+        float *gxr = gx + (size_t)r * d;
+        for (int c = 0; c < d; c++)
+            gxr[c] = (gyr[c] * g[c] - m1 - xh[c] * m2) * rstd[r];
+    }
+}
+
+#define GELU_K0 0.79788456f
+#define GELU_K1 0.044715f
+
+void gelu_fwd(const float *x, int n, float *y) {
+    for (int z = 0; z < n; z++) {
+        float v = x[z];
+        float t = tanhf(GELU_K0 * (v + GELU_K1 * v * v * v));
+        y[z] = 0.5f * v * (1.0f + t);
+    }
+}
+
+void gelu_bwd(const float *gy, const float *x, int n, float *gx) {
+    for (int z = 0; z < n; z++) {
+        float v = x[z];
+        float t = tanhf(GELU_K0 * (v + GELU_K1 * v * v * v));
+        float dt = (1.0f - t * t) * GELU_K0 *
+                   (1.0f + 3.0f * GELU_K1 * v * v);
+        gx[z] = gy[z] * (0.5f * (1.0f + t) + 0.5f * v * dt);
+    }
+}
+
+/* split (n,d) token-major activations into (b,h,l,dh) head-major */
+static void split_heads(const float *x, int b, int h, int l, int dh,
+                        float *out) {
+    int d = h * dh;
+    for (int bi = 0; bi < b; bi++)
+        for (int hi = 0; hi < h; hi++)
+            for (int t = 0; t < l; t++)
+                memcpy(out + (((size_t)(bi * h + hi) * l) + t) * dh,
+                       x + ((size_t)(bi * l + t) * d) + hi * dh,
+                       (size_t)dh * sizeof(float));
+}
+
+static void merge_heads(const float *x, int b, int h, int l, int dh,
+                        float *out) {
+    int d = h * dh;
+    for (int bi = 0; bi < b; bi++)
+        for (int hi = 0; hi < h; hi++)
+            for (int t = 0; t < l; t++)
+                memcpy(out + ((size_t)(bi * l + t) * d) + hi * dh,
+                       x + (((size_t)(bi * h + hi) * l) + t) * dh,
+                       (size_t)dh * sizeof(float));
+}
+
+void attention_fwd(const float *q, const float *k, const float *v,
+                   int b, int h, int l, int dh, float *att, float *kh,
+                   float *p, float *qh, float *vh) {
+    split_heads(q, b, h, l, dh, qh);
+    split_heads(k, b, h, l, dh, kh);
+    split_heads(v, b, h, l, dh, vh);
+    float scale = 1.0f / sqrtf((float)dh);
+    float *ho = arena_alloc((size_t)b * h * l * dh * sizeof(float));
+    for (int g = 0; g < b * h; g++) {
+        const float *qg = qh + (size_t)g * l * dh;
+        const float *kg = kh + (size_t)g * l * dh;
+        const float *vg = vh + (size_t)g * l * dh;
+        float *pg = p + (size_t)g * l * l;
+        float *og = ho + (size_t)g * l * dh;
+        for (int r = 0; r < l; r++) {
+            float *prow = pg + (size_t)r * l;
+            for (int c = 0; c < l; c++) {
+                float acc = 0.0f;
+                for (int e = 0; e < dh; e++)
+                    acc += qg[(size_t)r * dh + e] * kg[(size_t)c * dh + e];
+                prow[c] = acc * scale;
+            }
+            float mx = prow[0];
+            for (int c = 1; c < l; c++)
+                if (prow[c] > mx) mx = prow[c];
+            float sum = 0.0f;
+            for (int c = 0; c < l; c++) {
+                prow[c] = expf(prow[c] - mx);
+                sum += prow[c];
+            }
+            float inv = 1.0f / sum;
+            for (int c = 0; c < l; c++) prow[c] *= inv;
+            float *orow = og + (size_t)r * dh;
+            for (int e = 0; e < dh; e++) orow[e] = 0.0f;
+            for (int c = 0; c < l; c++) {
+                float pv = prow[c];
+                const float *vrow = vg + (size_t)c * dh;
+                for (int e = 0; e < dh; e++) orow[e] += pv * vrow[e];
+            }
+        }
+    }
+    merge_heads(ho, b, h, l, dh, att);
+}
+
+void attention_bwd(const float *g_att, const float *kh, const float *p,
+                   const float *qh, const float *vh, int b, int h,
+                   int l, int dh, float *gq, float *gk, float *gv) {
+    float scale = 1.0f / sqrtf((float)dh);
+    float *go = arena_alloc((size_t)b * h * l * dh * sizeof(float));
+    float *gqh = arena_alloc((size_t)b * h * l * dh * sizeof(float));
+    float *gkh = arena_alloc((size_t)b * h * l * dh * sizeof(float));
+    float *gvh = arena_alloc((size_t)b * h * l * dh * sizeof(float));
+    float *gp = arena_alloc((size_t)l * l * sizeof(float));
+    split_heads(g_att, b, h, l, dh, go);
+    memset(gqh, 0, (size_t)b * h * l * dh * sizeof(float));
+    memset(gkh, 0, (size_t)b * h * l * dh * sizeof(float));
+    memset(gvh, 0, (size_t)b * h * l * dh * sizeof(float));
+    for (int g = 0; g < b * h; g++) {
+        const float *gog = go + (size_t)g * l * dh;
+        const float *pg = p + (size_t)g * l * l;
+        const float *qg = qh + (size_t)g * l * dh;
+        const float *kg = kh + (size_t)g * l * dh;
+        const float *vg = vh + (size_t)g * l * dh;
+        float *gqg = gqh + (size_t)g * l * dh;
+        float *gkg = gkh + (size_t)g * l * dh;
+        float *gvg = gvh + (size_t)g * l * dh;
+        /* g_v = p^T . g_out */
+        for (int c = 0; c < l; c++)
+            for (int r = 0; r < l; r++) {
+                float pv = pg[(size_t)r * l + c];
+                const float *grow = gog + (size_t)r * dh;
+                float *gvrow = gvg + (size_t)c * dh;
+                for (int e = 0; e < dh; e++) gvrow[e] += pv * grow[e];
+            }
+        for (int r = 0; r < l; r++) {
+            const float *prow = pg + (size_t)r * l;
+            const float *grow = gog + (size_t)r * dh;
+            float *gprow = gp + (size_t)r * l;
+            /* g_p = g_out . v^T, then softmax backward */
+            float dot = 0.0f;
+            for (int c = 0; c < l; c++) {
+                float acc = 0.0f;
+                const float *vrow = vg + (size_t)c * dh;
+                for (int e = 0; e < dh; e++) acc += grow[e] * vrow[e];
+                gprow[c] = acc;
+                dot += acc * prow[c];
+            }
+            for (int c = 0; c < l; c++) {
+                float gs = prow[c] * (gprow[c] - dot) * scale;
+                const float *krow = kg + (size_t)c * dh;
+                const float *qrow = qg + (size_t)r * dh;
+                float *gqrow = gqg + (size_t)r * dh;
+                float *gkrow = gkg + (size_t)c * dh;
+                for (int e = 0; e < dh; e++) {
+                    gqrow[e] += gs * krow[e];
+                    gkrow[e] += gs * qrow[e];
+                }
+            }
+        }
+    }
+    merge_heads(gqh, b, h, l, dh, gq);
+    merge_heads(gkh, b, h, l, dh, gk);
+    merge_heads(gvh, b, h, l, dh, gv);
+}
+
+float softmax_xent_fwd(const float *logits, const int32_t *labels,
+                       int n, int c, float *p) {
+    double loss = 0.0;
+    for (int r = 0; r < n; r++) {
+        const float *row = logits + (size_t)r * c;
+        float *prow = p + (size_t)r * c;
+        float mx = row[0];
+        for (int j = 1; j < c; j++)
+            if (row[j] > mx) mx = row[j];
+        double sum = 0.0;
+        for (int j = 0; j < c; j++) sum += exp((double)(row[j] - mx));
+        double lse = (double)mx + log(sum);
+        for (int j = 0; j < c; j++)
+            prow[j] = (float)exp((double)row[j] - lse);
+        loss += lse - (double)row[labels[r]];
+    }
+    return (float)(loss / (double)n);
+}
+
+/* optim.rs AdamW (decoupled decay, bias-corrected) */
+void adamw(float *p, float *m, float *v, const float *g, int len,
+           int decay, int t, float lr) {
+    const float b1 = 0.9f, b2 = 0.999f, eps = 1e-8f;
+    const float wd = decay ? 0.01f : 0.0f;
+    float bc1 = 1.0f - powf(b1, (float)t);
+    float bc2 = 1.0f - powf(b2, (float)t);
+    for (int z = 0; z < len; z++) {
+        float nm = b1 * m[z] + (1.0f - b1) * g[z];
+        float nv = b2 * v[z] + (1.0f - b2) * g[z] * g[z];
+        m[z] = nm;
+        v[z] = nv;
+        float upd = (nm / bc1) / (sqrtf(nv / bc2) + eps);
+        p[z] -= lr * (upd + wd * p[z]);
+    }
+}

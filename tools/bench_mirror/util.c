@@ -1,0 +1,135 @@
+/* PCG32, monotonic timing, the sampling policy (bench::stats mirror),
+ * and the bump arena. */
+#include "mirror.h"
+
+/* ---- Pcg32: exact mirror of rust/src/util/prng.rs ---- */
+
+#define PCG_MUL 6364136223846793005ULL
+
+static void pcg_step(Pcg32 *r) { r->state = r->state * PCG_MUL + r->inc; }
+
+void pcg_new(Pcg32 *r, uint64_t seed, uint64_t stream) {
+    r->state = 0;
+    r->inc = (stream << 1) | 1;
+    pcg_step(r);
+    r->state += seed;
+    pcg_step(r);
+}
+
+void pcg_seeded(Pcg32 *r, uint64_t seed) {
+    pcg_new(r, seed, 0xda3e39cb94b95bdbULL);
+}
+
+uint32_t pcg_u32(Pcg32 *r) {
+    uint64_t old = r->state;
+    pcg_step(r);
+    uint32_t xorshifted = (uint32_t)(((old >> 18) ^ old) >> 27);
+    uint32_t rot = (uint32_t)(old >> 59);
+    return (xorshifted >> rot) | (xorshifted << ((32 - rot) & 31));
+}
+
+uint32_t pcg_below(Pcg32 *r, uint32_t n) {
+    /* Lemire: (u32 * n) >> 32 */
+    return (uint32_t)(((uint64_t)pcg_u32(r) * (uint64_t)n) >> 32);
+}
+
+float pcg_uniform(Pcg32 *r) {
+    return (float)(pcg_u32(r) >> 8) / 16777216.0f;
+}
+
+float pcg_normal(Pcg32 *r) {
+    /* Box-Muller, cos branch, rejecting tiny u1 */
+    float u1;
+    do {
+        u1 = pcg_uniform(r);
+    } while (u1 <= 1e-7f);
+    float u2 = pcg_uniform(r);
+    return sqrtf(-2.0f * logf(u1)) *
+           cosf(2.0f * (float)M_PI * u2);
+}
+
+double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + (double)ts.tv_nsec * 1e-9;
+}
+
+/* ---- sampling policy: bench::stats::{Policy, warm, sample} ---- */
+
+Policy policy_timed(uint64_t budget_ms, int max_iters) {
+    Policy p;
+    if (max_iters < 1) max_iters = 1;
+    p.budget_s = (double)budget_ms * 1e-3;
+    p.min_iters = max_iters < 5 ? max_iters : 5;
+    p.max_iters = max_iters;
+    p.max_warmup = 8;
+    return p;
+}
+
+Policy policy_fixed(int iters) {
+    Policy p;
+    if (iters < 1) iters = 1;
+    p.budget_s = 0.0;
+    p.min_iters = iters;
+    p.max_iters = iters;
+    p.max_warmup = 2;
+    return p;
+}
+
+static void warm(int max_warmup, void (*fn)(void *), void *arg) {
+    double best = INFINITY;
+    for (int w = 0; w < max_warmup; w++) {
+        double t0 = now_s();
+        fn(arg);
+        double t = now_s() - t0;
+        if (t >= best * 0.9) return; /* stabilized */
+        if (t < best) best = t;
+    }
+}
+
+int sample_cell(const Policy *p, void (*fn)(void *), void *arg,
+                double *out, int cap) {
+    warm(p->max_warmup, fn, arg);
+    int n = 0;
+    double loop_start = now_s();
+    while (n < p->max_iters && n < cap &&
+           (n < p->min_iters || now_s() - loop_start < p->budget_s)) {
+        double t0 = now_s();
+        fn(arg);
+        out[n++] = now_s() - t0;
+    }
+    return n;
+}
+
+void emit_samples(const char *id, const double *s, int n) {
+    printf("{\"cell\":\"%s\",\"samples\":[", id);
+    for (int i = 0; i < n; i++)
+        printf("%s%.9e", i ? "," : "", s[i]);
+    printf("]}\n");
+    fflush(stdout);
+}
+
+/* ---- bump arena ---- */
+
+#define ARENA_BYTES (1536UL << 20) /* virtual; touched lazily */
+static unsigned char *arena_base;
+static size_t arena_off;
+
+void *arena_alloc(size_t bytes) {
+    if (!arena_base) {
+        arena_base = malloc(ARENA_BYTES);
+        if (!arena_base) {
+            fprintf(stderr, "arena alloc failed\n");
+            exit(1);
+        }
+    }
+    size_t off = (arena_off + 63) & ~(size_t)63;
+    if (off + bytes > ARENA_BYTES) {
+        fprintf(stderr, "arena overflow (%zu + %zu)\n", off, bytes);
+        exit(1);
+    }
+    arena_off = off + bytes;
+    return arena_base + off;
+}
+
+void arena_reset(void) { arena_off = 0; }
