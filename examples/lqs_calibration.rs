@@ -26,7 +26,7 @@ fn calib_with(rt: &Arc<dyn Executor>, tr: &Trainer, ds: &VisionDataset,
             Some((tok, gain)) => ds.batch_with_outlier(2, b, batch, tok, gain),
         };
         per_batch.push(rt.calib_step(&format!("calib_{}", tr.cfg.preset),
-                                     &tr.params, &x, &y)?);
+                                     &tr.weights, &x, &y)?);
     }
     CalibReport::from_batches(&tr.preset.qlinears, &per_batch, 0.5)
 }

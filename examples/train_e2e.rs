@@ -72,11 +72,11 @@ fn main() -> Result<()> {
     for _ in 0..8 {
         sp.step_once(Mode::Split)?;
     }
-    let st = sp.ctx.stats();
+    let st = sp.state.ctx.stats();
     println!("\nABC ctx (split mode, 8 steps): peak {} KiB, \
               fp32-equivalent {} KiB, compression {:.2}x",
              st.peak_bytes / 1024, st.fp32_equiv_bytes / 1024 / 8,
-             sp.ctx.compression_ratio());
+             sp.state.ctx.compression_ratio());
 
     if let Some(csv) = args.get("csv") {
         hot_tr.metrics.save_csv(csv)?;

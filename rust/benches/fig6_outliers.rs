@@ -27,7 +27,7 @@ fn calib(rt: &std::sync::Arc<dyn Executor>, tr: &Trainer,
             Some((tok, gain)) => ds.batch_with_outlier(2, b, batch, tok, gain),
         };
         let outs = rt.calib_step(&format!("calib_{}", tr.cfg.preset),
-                                 &tr.params, &x, &y)
+                                 &tr.weights, &x, &y)
             .expect("calib");
         per_batch.push(outs);
     }

@@ -63,8 +63,10 @@ fn bench_one(rt: Arc<dyn Executor>, preset: &str, variant: &str,
         }
         last = loss;
     }
-    assert_eq!(tr.ctx.stats().live_bytes, 0, "ctx leak after training");
-    (tr.ctx.stats().peak_bytes, tr.ctx.compression_ratio(), first, last)
+    assert_eq!(tr.state.ctx.stats().live_bytes, 0,
+               "ctx leak after training");
+    (tr.state.ctx.stats().peak_bytes, tr.state.ctx.compression_ratio(),
+     first, last)
 }
 
 fn main() {

@@ -11,7 +11,7 @@
 //!
 //! Both speak the same "artifact key" naming scheme
 //! (`train_{variant}_{preset}`, `fwd_…`, `bwd_…`, `grad_…`,
-//! `opt_{preset}`, `eval_{preset}`, `calib_{preset}`,
+//! `opt_{preset}`, `eval_{preset}`, `infer_{preset}`, `calib_{preset}`,
 //! `lora_{tag}_{preset}`, `kernel_*_demo`) so run configs, benches and
 //! checkpoints are portable across backends. See DESIGN.md §Backends for
 //! the execution matrix.
@@ -19,25 +19,17 @@
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod state;
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 pub use native::NativeBackend;
+pub use state::{AdapterSet, ParamId, TrainState, WeightStore};
 
 use crate::runtime::manifest::{CtxSpec, Preset, TensorSpec};
 use crate::runtime::value::Value;
-
-/// Output of a fused train / LoRA step: refreshed state + step metrics.
-#[derive(Debug)]
-pub struct StepOut {
-    pub params: Vec<Value>,
-    pub m: Vec<Value>,
-    pub v: Vec<Value>,
-    pub loss: f32,
-    pub acc: f32,
-}
 
 /// Output of a split-mode forward: metrics + the saved-for-backward ctx
 /// tensors (HOT+ABC entries arrive HLA+INT8 compressed) and their specs
@@ -66,9 +58,13 @@ pub struct LoraMeta {
     pub batch: Option<usize>,
 }
 
-/// One execution backend. All tensor traffic uses `Value` (the host
-/// format both backends share); parameter vectors are always in the
-/// preset's manifest order (sorted names).
+/// One execution backend. Model state arrives typed: frozen base
+/// weights as a `&WeightStore` (mutable only for the opt-applying
+/// steps), training-only state (AdamW moments, ctx store) as a
+/// `&mut TrainState`, per-tenant LoRA overlays as an `&mut AdapterSet`.
+/// Remaining tensor traffic (batches, ctx, grads) uses `Value`;
+/// parameter order is always the preset's manifest order (sorted
+/// names).
 ///
 /// Deliberately NOT `Send`/`Sync`: real PJRT clients hold `Rc`
 /// internals, so executors are single-threaded by contract (the
@@ -87,6 +83,13 @@ pub trait Executor {
     /// Initial parameter values for a preset (deterministic per backend).
     fn init_params(&self, preset: &str) -> Result<Vec<Value>>;
 
+    /// Initial parameters moved into an owned `WeightStore` (no extra
+    /// copy beyond the one into the `Arc` slabs).
+    fn init_store(&self, preset: &str) -> Result<WeightStore> {
+        let p = self.preset(preset)?;
+        WeightStore::from_values(p.params, self.init_params(preset)?)
+    }
+
     /// Batch size used when nothing pins it.
     fn default_batch(&self) -> usize;
 
@@ -97,48 +100,64 @@ pub trait Executor {
     /// shape-static). `None` means the caller picks (native backend).
     fn key_batch(&self, key: &str) -> Option<usize>;
 
-    /// Fused step: forward + backward + AdamW in one call.
+    /// Fused step: forward + backward + AdamW in one call. Weights and
+    /// moments update in place; returns (loss, acc).
     #[allow(clippy::too_many_arguments)]
-    fn train_step(&self, key: &str, params: &[Value], m: &[Value],
-                  v: &[Value], step: f32, lr: f32, lqs_mask: &[f32],
-                  x: &Value, y: &Value) -> Result<StepOut>;
+    fn train_step(&self, key: &str, weights: &mut WeightStore,
+                  state: &mut TrainState, step: f32, lr: f32,
+                  lqs_mask: &[f32], x: &Value, y: &Value)
+                  -> Result<(f32, f32)>;
 
     /// Split-mode forward: emits the saved ctx instead of applying it.
-    fn forward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
-                    x: &Value, y: &Value) -> Result<ForwardOut>;
+    fn forward_step(&self, key: &str, weights: &WeightStore,
+                    lqs_mask: &[f32], x: &Value, y: &Value)
+                    -> Result<ForwardOut>;
 
     /// Split-mode backward: consumes the ctx, returns grads (param order).
-    fn backward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
-                     x: &Value, ctx: Vec<Value>) -> Result<Vec<Value>>;
+    fn backward_step(&self, key: &str, weights: &WeightStore,
+                     lqs_mask: &[f32], x: &Value, ctx: Vec<Value>)
+                     -> Result<Vec<Value>>;
 
     /// Gradient-only step for microbatch accumulation.
-    fn grad_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+    fn grad_step(&self, key: &str, weights: &WeightStore, lqs_mask: &[f32],
                  x: &Value, y: &Value) -> Result<GradOut>;
 
-    /// AdamW: returns (params, m, v).
-    #[allow(clippy::too_many_arguments)]
-    fn opt_step(&self, key: &str, params: &[Value], grads: &[Value],
-                m: &[Value], v: &[Value], step: f32, lr: f32)
-                -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)>;
+    /// AdamW over the store's slabs + the state's moments, in place.
+    fn opt_step(&self, key: &str, weights: &mut WeightStore,
+                grads: &[Value], state: &mut TrainState, step: f32,
+                lr: f32) -> Result<()>;
 
-    /// FP forward over an eval batch: (loss, acc).
-    fn eval_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
-                 -> Result<(f32, f32)>;
+    /// FP forward over an eval batch: (loss, acc). Routes through the
+    /// inference walk — no backward ctx is built or quantized.
+    fn eval_step(&self, key: &str, weights: &WeightStore, x: &Value,
+                 y: &Value) -> Result<(f32, f32)>;
+
+    /// Inference-only forward: batched logits from frozen weights, no
+    /// `TrainState`, no ctx writes, no quant-for-backward epilogues.
+    /// Key grammar: `infer_{preset}`. Backends without an inference
+    /// path keep the default and report unsupported.
+    fn infer(&self, key: &str, weights: &WeightStore, x: &Value)
+             -> Result<Value> {
+        let _ = (weights, x);
+        bail!("backend {:?} has no inference path for {key:?}", self.name())
+    }
 
     /// LQS calibration: the 7 per-qlinear diagnostic vectors (model
     /// order) — mse_tensor, mse_token, outlier, gx_err_hq, gx_err_hla,
     /// gw_err_hq, gw_err_hla.
-    fn calib_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
-                  -> Result<Vec<Vec<f32>>>;
+    fn calib_step(&self, key: &str, weights: &WeightStore, x: &Value,
+                  y: &Value) -> Result<Vec<Vec<f32>>>;
 
     /// Trainable-set description for a LoRA step key.
     fn lora_meta(&self, key: &str) -> Result<LoraMeta>;
 
-    /// LoRA fused step (frozen base): returns refreshed trainable state.
+    /// LoRA fused step: the adapter overlay and moments update in
+    /// place, the shared base stays frozen; returns (loss, acc).
     #[allow(clippy::too_many_arguments)]
-    fn lora_step(&self, key: &str, base: &[Value], trainable: &[Value],
-                 m: &[Value], v: &[Value], step: f32, lr: f32,
-                 lqs_mask: &[f32], x: &Value, y: &Value) -> Result<StepOut>;
+    fn lora_step(&self, key: &str, adapters: &mut AdapterSet,
+                 state: &mut TrainState, step: f32, lr: f32,
+                 lqs_mask: &[f32], x: &Value, y: &Value)
+                 -> Result<(f32, f32)>;
 
     /// Raw execution for kernel demos / debug tooling. PJRT runs any
     /// artifact; native mirrors the `kernel_*_demo` entries.
@@ -159,6 +178,7 @@ pub enum StepKey {
     Grad { tag: String, preset: String },
     Opt { preset: String },
     Eval { preset: String },
+    Infer { preset: String },
     Calib { preset: String },
     Lora { tag: String, preset: String },
     Kernel { name: String },
@@ -207,6 +227,7 @@ impl StepKey {
             "grad" => StepKey::Grad { tag, preset },
             "opt" => StepKey::Opt { preset },
             "eval" => StepKey::Eval { preset },
+            "infer" => StepKey::Infer { preset },
             "calib" => StepKey::Calib { preset },
             "lora" => StepKey::Lora { tag, preset },
             other => bail!("unknown step kind {other:?} in key {key:?}"),
@@ -302,6 +323,9 @@ mod tests {
                    StepKey::Eval { preset: "lm_tiny".into() });
         assert_eq!(StepKey::parse("calib_small", &presets()).unwrap(),
                    StepKey::Calib { preset: "small".into() });
+        assert_eq!(StepKey::parse("infer_lm_tiny", &presets()).unwrap(),
+                   StepKey::Infer { preset: "lm_tiny".into() });
+        assert!(StepKey::parse("infer_nopreset", &presets()).is_err());
     }
 
     #[test]

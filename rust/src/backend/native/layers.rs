@@ -279,9 +279,13 @@ pub struct QlCtx {
     pub i: usize,
 }
 
-/// y = x w.T + b (exact FP32).
-fn qlinear_y(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
-             bias: &[f32]) -> Vec<f32> {
+/// y = x w.T + b (exact FP32). Public because the inference-only walk
+/// (`model::fwd_infer`, the LoRA merged-forward) computes the same
+/// activations without building any saved-for-backward ctx — HOT's
+/// forward is always exact, so inference and training forwards share
+/// this single GEMM + bias epilogue.
+pub fn qlinear_y(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
+                 bias: &[f32]) -> Vec<f32> {
     let mut y = gemm_f32_nt(x, w, n, i, o);
     for r in 0..n {
         let row = &mut y[r * o..(r + 1) * o];

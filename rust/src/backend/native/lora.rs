@@ -186,6 +186,9 @@ enum Saved {
 pub struct LoraStepOut {
     pub loss: f32,
     pub acc: f32,
+    /// Pre-softmax head outputs (b, classes) — kept so the merged-
+    /// adapter inference walk can be pinned bit-identical to training.
+    pub logits: Vec<f32>,
     pub grads: BTreeMap<String, Vec<f32>>,
 }
 
@@ -355,14 +358,14 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
                 Saved::QLora { wname, ctx } => (wname, ctx),
                 _ => bail!("lora walk: expected qlora"),
             };
-            let wv = merged.value(&wname)?;
-            let i = wv.shape()[1];
+            let wv = merged.t(&wname)?;
+            let i = wv.shape[1];
             ensure!(ctx.n == rows && ctx.i == i, "{wname}: ctx dims drifted");
             let a = lora.f(&format!("{wname}.lora_a"))?;
             let bm = lora.f(&format!("{wname}.lora_b"))?;
             crate::obs::set_layer(&wname);
             let (g_x, g_a, g_bm) = qlinear_lora_bwd(gy, rows, o,
-                                                    wv.as_f32()?, i, a, bm,
+                                                    wv.data, i, a, bm,
                                                     &ctx, cfg);
             grads.insert(format!("{wname}.lora_a"), g_a);
             grads.insert(format!("{wname}.lora_b"), g_bm);
@@ -421,7 +424,114 @@ pub fn lora_loss_and_grads(shape: &ModelShape, cfg: &LoraCfg,
     grads.insert("embed.w".into(), g_ew);
     grads.insert("embed.b".into(), g_eb);
 
-    Ok(LoraStepOut { loss, acc, grads })
+    Ok(LoraStepOut { loss, acc, logits, grads })
+}
+
+// ---------------------------------------------------------------------------
+// Inference-only LoRA forward (no saved state)
+// ---------------------------------------------------------------------------
+
+/// y = x wᵀ + scale · (x Aᵀ) Bᵀ + b — the adapted qlinear with no ctx.
+/// Same GEMMs in the same order as `qlinear_lora_fwd`, minus the
+/// compress-or-keep epilogue.
+#[allow(clippy::too_many_arguments)]
+fn qlinear_lora_y(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
+                  bias: &[f32], a: &[f32], bm: &[f32], r: usize)
+                  -> Vec<f32> {
+    let u = gemm_f32_nt(x, a, n, i, r);
+    let mut y = gemm_f32_nt(x, w, n, i, o);
+    let ub = gemm_f32_nt(&u, bm, n, r, o);
+    for row in 0..n {
+        for c in 0..o {
+            y[row * o + c] += LORA_SCALE * ub[row * o + c] + bias[c];
+        }
+    }
+    y
+}
+
+/// Merged-adapter inference walk: batched logits (b, classes) from the
+/// frozen base + one tenant's adapters, with zero saved-for-backward
+/// state. Bit-identical to `lora_loss_and_grads`'s logits (the forward
+/// is exact FP for every LoRA tag; pinned by the parity test below).
+pub fn lora_infer_logits(shape: &ModelShape, cfg: &LoraCfg, merged: &Params,
+                         lora: &Params, x: &Value) -> Result<Vec<f32>> {
+    ensure!(shape.arch == "vit", "LoRA fine-tuning targets the vit presets");
+    let (d, l, m) = (shape.d_model, shape.seq, shape.d_mlp());
+    let dims = x.shape();
+    ensure!(dims.len() == 3 && dims[1] == l && dims[2] == shape.in_dim,
+            "input must be (b, {l}, {}), got {dims:?}", shape.in_dim);
+    let b = dims[0];
+    let n = b * l;
+    let r = cfg.r_lora;
+
+    let mut h = layers::qlinear_y(x.as_f32()?, n, shape.in_dim,
+                                  merged.f("embed.w")?, d,
+                                  merged.f("embed.b")?);
+    let pos = merged.f("pos")?;
+    for row in 0..n {
+        let t = row % l;
+        for j in 0..d {
+            h[row * d + j] += pos[t * d + j];
+        }
+    }
+
+    for blk in 0..shape.depth {
+        let pre = format!("blk{blk}.");
+        let lora_y = |inp: &[f32], rows: usize, in_dim: usize,
+                      wname: String, bname: String, o: usize|
+                      -> Result<Vec<f32>> {
+            let a = lora.f(&format!("{wname}.lora_a"))?;
+            let bm = lora.f(&format!("{wname}.lora_b"))?;
+            Ok(qlinear_lora_y(inp, rows, in_dim, merged.f(&wname)?, o,
+                              merged.f(&bname)?, a, bm, r))
+        };
+        let (hn, _) = layers::layernorm_fwd(&h, n, d,
+                                            merged.f(&format!("{pre}ln1.g"))?,
+                                            merged.f(&format!("{pre}ln1.b"))?);
+        let qkv = lora_y(&hn, n, d, format!("{pre}attn.wqkv"),
+                         format!("{pre}attn.bqkv"), 3 * d)?;
+        let mut q = vec![0.0f32; n * d];
+        let mut k = vec![0.0f32; n * d];
+        let mut v = vec![0.0f32; n * d];
+        for row in 0..n {
+            for j in 0..d {
+                q[row * d + j] = qkv[row * 3 * d + j];
+                k[row * d + j] = qkv[row * 3 * d + d + j];
+                v[row * d + j] = qkv[row * 3 * d + 2 * d + j];
+            }
+        }
+        let (att, _) = layers::attention_fwd(&q, &k, &v, b, l, d,
+                                             shape.heads, false);
+        let proj = lora_y(&att, n, d, format!("{pre}attn.wo"),
+                          format!("{pre}attn.bo"), d)?;
+        for (hv, pv) in h.iter_mut().zip(&proj) {
+            *hv += pv;
+        }
+        let (hn, _) = layers::layernorm_fwd(&h, n, d,
+                                            merged.f(&format!("{pre}ln2.g"))?,
+                                            merged.f(&format!("{pre}ln2.b"))?);
+        let f1 = lora_y(&hn, n, d, format!("{pre}fc1.w"),
+                        format!("{pre}fc1.b"), m)?;
+        let (g1, _) = layers::gelu_fwd(f1);
+        let f2 = lora_y(&g1, n, m, format!("{pre}fc2.w"),
+                        format!("{pre}fc2.b"), d)?;
+        for (hv, fv) in h.iter_mut().zip(&f2) {
+            *hv += fv;
+        }
+    }
+
+    let (hn, _) = layers::layernorm_fwd(&h, n, d, merged.f("lnf.g")?,
+                                        merged.f("lnf.b")?);
+    let mut pooled = vec![0.0f32; b * d];
+    for bi in 0..b {
+        for t in 0..l {
+            for j in 0..d {
+                pooled[bi * d + j] += hn[(bi * l + t) * d + j] / l as f32;
+            }
+        }
+    }
+    Ok(layers::qlinear_y(&pooled, b, d, merged.f("head.w")?,
+                         shape.n_classes, merged.f("head.b")?))
 }
 
 #[cfg(test)]
@@ -535,6 +645,70 @@ mod tests {
                 .map(|v| v.abs())
                 .sum();
             assert!(gb > 0.0, "{tag}: lora_b grad must be nonzero");
+        }
+    }
+
+    #[test]
+    fn infer_logits_bit_identical_to_training_forward() {
+        // The merged-adapter inference walk is the fused LoRA forward
+        // minus the ctx writes — same GEMMs in the same order, so same
+        // bits. Nonzero A *and* B so the adapters actually steer the
+        // logits; all four tags cover LoRA x HOT on/off. One GEMM tier
+        // per comparison: hold the kernels gate.
+        let _gate = crate::kernels::pool::test_serial();
+        let shape = tiny_shape();
+        let base_specs = presets::param_specs(&shape);
+        let base = presets::init_values(&shape, 4);
+        for tag in ["fp", "hotfrozen", "hotdec", "hotboth"] {
+            let cfg = LoraCfg::parse(tag).unwrap();
+            let tspecs = trainable_specs(&shape, cfg.r_lora);
+            let mut rng = Pcg32::seeded(5);
+            let trainable: Vec<Value> = tspecs
+                .iter()
+                .map(|s| {
+                    if s.name.contains(".lora_") {
+                        let mut data = vec![0.0f32; s.numel()];
+                        rng.fill_normal(&mut data, 0.0, 0.1);
+                        Value::F32 { shape: s.shape.clone(), data }
+                    } else {
+                        let idx = base_specs
+                            .iter()
+                            .position(|b| b.name == s.name)
+                            .unwrap();
+                        base[idx].clone()
+                    }
+                })
+                .collect();
+            // merged/lora views exactly as the executor builds them
+            let mut merged = Params::new(&base_specs, &base).unwrap();
+            let mut lora = Params::from_pairs(std::iter::empty()).unwrap();
+            for (s, v) in tspecs.iter().zip(&trainable) {
+                if s.name.contains(".lora_") {
+                    lora.insert(s.name.as_str(), v).unwrap();
+                } else {
+                    merged.insert(s.name.as_str(), v).unwrap();
+                }
+            }
+            let mut drng = Pcg32::seeded(6);
+            let n = 3 * shape.seq * shape.in_dim;
+            let x = Value::F32 {
+                shape: vec![3, shape.seq, shape.in_dim],
+                data: (0..n).map(|_| drng.normal()).collect(),
+            };
+            let y = Value::I32 {
+                shape: vec![3],
+                data: (0..3).map(|_| drng.below(3) as i32).collect(),
+            };
+            let mask = vec![0.0f32; shape.n_qlinears()];
+            let out = lora_loss_and_grads(&shape, &cfg, &merged, &lora,
+                                          &mask, &x, &y).unwrap();
+            let il = lora_infer_logits(&shape, &cfg, &merged, &lora, &x)
+                .unwrap();
+            assert_eq!(out.logits.len(), il.len(), "{tag}");
+            for (i, (a, b)) in out.logits.iter().zip(&il).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "{tag} logit[{i}]: {a} vs {b}");
+            }
         }
     }
 }

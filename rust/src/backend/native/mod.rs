@@ -14,9 +14,9 @@ pub mod presets;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::backend::{Executor, ForwardOut, GradOut, LoraMeta, StepKey,
-                     StepOut};
-use crate::backend::native::layers::{BackwardCfg, Variant};
+use crate::backend::{AdapterSet, Executor, ForwardOut, GradOut, LoraMeta,
+                     StepKey, TrainState, WeightStore};
+use crate::backend::native::layers::BackwardCfg;
 use crate::backend::native::model::Params;
 use crate::backend::native::presets::ModelShape;
 use crate::runtime::manifest::Preset;
@@ -100,11 +100,12 @@ impl NativeBackend {
         Ok((self.entry(preset)?, BackwardCfg::parse(tag)?))
     }
 
-    fn run_forward_backward(&self, tag: &str, preset: &str, params: &[Value],
-                            lqs_mask: &[f32], x: &Value, y: &Value)
+    fn run_forward_backward(&self, tag: &str, preset: &str,
+                            weights: &WeightStore, lqs_mask: &[f32],
+                            x: &Value, y: &Value)
                             -> Result<(f32, f32, Vec<Value>)> {
         let (e, bcfg) = self.step_ctx(tag, preset)?;
-        let p = Params::new(&e.preset.params, params)?;
+        let p = Params::from_store(weights);
         let fwd = {
             let _sp = crate::obs::span(crate::obs::Span::Forward);
             model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?
@@ -115,6 +116,33 @@ impl NativeBackend {
         };
         Ok((fwd.loss, fwd.acc,
             model::grads_to_values(&e.preset.params, grads)?))
+    }
+
+    /// In-place AdamW over the store's slabs and the state's moments —
+    /// the native steady-state optimizer path. No slab is cloned; the
+    /// call fails if any slab is currently shared (frozen) or the grad/
+    /// moment arity disagrees with the preset.
+    fn apply_adamw(&self, preset: &str, weights: &mut WeightStore,
+                   grads: &[Value], state: &mut TrainState, step: f32,
+                   lr: f32) -> Result<()> {
+        let _sp = crate::obs::span(crate::obs::Span::OptStep);
+        let specs = &self.entry(preset)?.preset.params;
+        ensure!(weights.len() == specs.len() && grads.len() == specs.len()
+                && state.m.len() == specs.len()
+                && state.v.len() == specs.len(),
+                "adamw arity mismatch: {} specs vs {}/{}/{}/{}", specs.len(),
+                weights.len(), grads.len(), state.m.len(), state.v.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let id = weights
+                .id(&spec.name)
+                .with_context(|| format!("store has no slab for {}",
+                                         spec.name))?;
+            optim::adamw_inplace(&spec.name, weights.slab_mut(id)?,
+                                 grads[i].as_f32()?,
+                                 state.m[i].as_f32_mut()?,
+                                 state.v[i].as_f32_mut()?, step, lr)?;
+        }
+        Ok(())
     }
 }
 
@@ -155,7 +183,7 @@ impl Executor for NativeBackend {
             | Ok(StepKey::Bwd { tag, .. })
             | Ok(StepKey::Grad { tag, .. }) => BackwardCfg::parse(&tag).is_ok(),
             Ok(StepKey::Opt { .. }) | Ok(StepKey::Eval { .. })
-            | Ok(StepKey::Calib { .. }) => true,
+            | Ok(StepKey::Infer { .. }) | Ok(StepKey::Calib { .. }) => true,
             Ok(StepKey::Lora { tag, preset }) => {
                 lora::LoraCfg::parse(&tag).is_ok()
                     && self.entry(&preset)
@@ -172,29 +200,29 @@ impl Executor for NativeBackend {
         None // nothing is shape-static natively; the run config decides
     }
 
-    fn train_step(&self, key: &str, params: &[Value], m: &[Value],
-                  v: &[Value], step: f32, lr: f32, lqs_mask: &[f32],
-                  x: &Value, y: &Value) -> Result<StepOut> {
+    fn train_step(&self, key: &str, weights: &mut WeightStore,
+                  state: &mut TrainState, step: f32, lr: f32,
+                  lqs_mask: &[f32], x: &Value, y: &Value)
+                  -> Result<(f32, f32)> {
         let (tag, preset) = match self.parse(key)? {
             StepKey::Train { tag, preset } => (tag, preset),
             other => bail!("{key:?} is not a train step ({other:?})"),
         };
-        let (loss, acc, grads) =
-            self.run_forward_backward(&tag, &preset, params, lqs_mask, x, y)?;
-        let specs = &self.entry(&preset)?.preset.params;
-        let (params, m, v) = optim::adamw(specs, params, &grads, m, v, step,
-                                          lr)?;
-        Ok(StepOut { params, m, v, loss, acc })
+        let (loss, acc, grads) = self.run_forward_backward(
+            &tag, &preset, weights, lqs_mask, x, y)?;
+        self.apply_adamw(&preset, weights, &grads, state, step, lr)?;
+        Ok((loss, acc))
     }
 
-    fn forward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
-                    x: &Value, y: &Value) -> Result<ForwardOut> {
+    fn forward_step(&self, key: &str, weights: &WeightStore,
+                    lqs_mask: &[f32], x: &Value, y: &Value)
+                    -> Result<ForwardOut> {
         let (tag, preset) = match self.parse(key)? {
             StepKey::Fwd { tag, preset } => (tag, preset),
             other => bail!("{key:?} is not a fwd step ({other:?})"),
         };
         let (e, bcfg) = self.step_ctx(&tag, &preset)?;
-        let p = Params::new(&e.preset.params, params)?;
+        let p = Params::from_store(weights);
         let fwd = {
             let _sp = crate::obs::span(crate::obs::Span::Forward);
             model::forward(&e.shape, &bcfg, &p, lqs_mask, x, y)?
@@ -203,14 +231,15 @@ impl Executor for NativeBackend {
         Ok(ForwardOut { loss: fwd.loss, acc: fwd.acc, ctx, ctx_specs })
     }
 
-    fn backward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
-                     x: &Value, ctx: Vec<Value>) -> Result<Vec<Value>> {
+    fn backward_step(&self, key: &str, weights: &WeightStore,
+                     lqs_mask: &[f32], x: &Value, ctx: Vec<Value>)
+                     -> Result<Vec<Value>> {
         let (tag, preset) = match self.parse(key)? {
             StepKey::Bwd { tag, preset } => (tag, preset),
             other => bail!("{key:?} is not a bwd step ({other:?})"),
         };
         let (e, bcfg) = self.step_ctx(&tag, &preset)?;
-        let p = Params::new(&e.preset.params, params)?;
+        let p = Params::from_store(weights);
         ensure!(!x.shape().is_empty(), "model input must be batched");
         let b = x.shape()[0];
         let ctxs = model::parse_ctx(&e.shape, &bcfg, b, ctx)?;
@@ -221,50 +250,59 @@ impl Executor for NativeBackend {
         model::grads_to_values(&e.preset.params, grads)
     }
 
-    fn grad_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+    fn grad_step(&self, key: &str, weights: &WeightStore, lqs_mask: &[f32],
                  x: &Value, y: &Value) -> Result<GradOut> {
         let (tag, preset) = match self.parse(key)? {
             StepKey::Grad { tag, preset } => (tag, preset),
             other => bail!("{key:?} is not a grad step ({other:?})"),
         };
-        let (loss, acc, grads) =
-            self.run_forward_backward(&tag, &preset, params, lqs_mask, x, y)?;
+        let (loss, acc, grads) = self.run_forward_backward(
+            &tag, &preset, weights, lqs_mask, x, y)?;
         Ok(GradOut { grads, loss, acc })
     }
 
-    fn opt_step(&self, key: &str, params: &[Value], grads: &[Value],
-                m: &[Value], v: &[Value], step: f32, lr: f32)
-                -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)> {
+    fn opt_step(&self, key: &str, weights: &mut WeightStore,
+                grads: &[Value], state: &mut TrainState, step: f32,
+                lr: f32) -> Result<()> {
         let preset = match self.parse(key)? {
             StepKey::Opt { preset } => preset,
             other => bail!("{key:?} is not an opt step ({other:?})"),
         };
-        optim::adamw(&self.entry(&preset)?.preset.params, params, grads, m,
-                     v, step, lr)
+        self.apply_adamw(&preset, weights, grads, state, step, lr)
     }
 
-    fn eval_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
-                 -> Result<(f32, f32)> {
+    fn eval_step(&self, key: &str, weights: &WeightStore, x: &Value,
+                 y: &Value) -> Result<(f32, f32)> {
         let preset = match self.parse(key)? {
             StepKey::Eval { preset } => preset,
             other => bail!("{key:?} is not an eval step ({other:?})"),
         };
         let e = self.entry(&preset)?;
-        let p = Params::new(&e.preset.params, params)?;
-        let fp = BackwardCfg { variant: Variant::Fp, ..Default::default() };
-        let mask = vec![0.0f32; e.shape.n_qlinears()];
-        let fwd = model::forward(&e.shape, &fp, &p, &mask, x, y)?;
-        Ok((fwd.loss, fwd.acc))
+        // ctx-free inference walk: held-out passes build no backward
+        // state and run no quantize-for-backward epilogues
+        let p = Params::from_store(weights);
+        model::eval_infer(&e.shape, &p, x, y)
     }
 
-    fn calib_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
-                  -> Result<Vec<Vec<f32>>> {
+    fn infer(&self, key: &str, weights: &WeightStore, x: &Value)
+             -> Result<Value> {
+        let preset = match self.parse(key)? {
+            StepKey::Infer { preset } => preset,
+            other => bail!("{key:?} is not an infer step ({other:?})"),
+        };
+        let e = self.entry(&preset)?;
+        let p = Params::from_store(weights);
+        model::fwd_infer(&e.shape, &p, x)
+    }
+
+    fn calib_step(&self, key: &str, weights: &WeightStore, x: &Value,
+                  y: &Value) -> Result<Vec<Vec<f32>>> {
         let preset = match self.parse(key)? {
             StepKey::Calib { preset } => preset,
             other => bail!("{key:?} is not a calib step ({other:?})"),
         };
         let e = self.entry(&preset)?;
-        let p = Params::new(&e.preset.params, params)?;
+        let p = Params::from_store(weights);
         model::calibrate(&e.shape, &p, x, y)
     }
 
@@ -283,9 +321,10 @@ impl Executor for NativeBackend {
         })
     }
 
-    fn lora_step(&self, key: &str, base: &[Value], trainable: &[Value],
-                 m: &[Value], v: &[Value], step: f32, lr: f32,
-                 lqs_mask: &[f32], x: &Value, y: &Value) -> Result<StepOut> {
+    fn lora_step(&self, key: &str, adapters: &mut AdapterSet,
+                 state: &mut TrainState, step: f32, lr: f32,
+                 lqs_mask: &[f32], x: &Value, y: &Value)
+                 -> Result<(f32, f32)> {
         let (tag, preset) = match self.parse(key)? {
             StepKey::Lora { tag, preset } => (tag, preset),
             other => bail!("{key:?} is not a lora step ({other:?})"),
@@ -293,36 +332,45 @@ impl Executor for NativeBackend {
         let cfg = lora::LoraCfg::parse(&tag)?;
         let e = self.entry(&preset)?;
         let tspecs = lora::trainable_specs(&e.shape, cfg.r_lora);
-        ensure!(trainable.len() == tspecs.len(),
+        ensure!(adapters.trainable().len() == tspecs.len(),
                 "{} trainable tensors given, lora step wants {}",
-                trainable.len(), tspecs.len());
-        // merged view: frozen base + live embed/head overrides
-        let base_specs = &e.preset.params;
-        ensure!(base.len() == base_specs.len(), "base param arity mismatch");
-        let mut pairs: Vec<(&str, &Value)> = base_specs
-            .iter()
-            .zip(base)
-            .map(|(s, val)| (s.name.as_str(), val))
-            .collect();
-        let mut lora_pairs: Vec<(&str, &Value)> = Vec::new();
-        for (s, val) in tspecs.iter().zip(trainable) {
-            ensure!(val.shape() == s.shape.as_slice(),
-                    "trainable {}: shape {:?} != spec {:?}", s.name,
-                    val.shape(), s.shape);
-            if s.name.contains(".lora_") {
-                lora_pairs.push((s.name.as_str(), val));
-            } else {
-                pairs.push((s.name.as_str(), val)); // later pairs win
+                adapters.trainable().len(), tspecs.len());
+        ensure!(state.m.len() == tspecs.len()
+                && state.v.len() == tspecs.len(),
+                "lora moment arity mismatch");
+        let (loss, acc, grads) = {
+            // merged view: frozen base slabs + live embed/head overrides
+            // — the base store is never copied, only borrowed
+            ensure!(adapters.base().len() == e.preset.params.len(),
+                    "base param arity mismatch");
+            let mut merged = Params::from_store(adapters.base());
+            let mut lp = Params::from_pairs(std::iter::empty())?;
+            for (s, val) in tspecs.iter().zip(adapters.trainable()) {
+                ensure!(val.shape() == s.shape.as_slice(),
+                        "trainable {}: shape {:?} != spec {:?}", s.name,
+                        val.shape(), s.shape);
+                if s.name.contains(".lora_") {
+                    lp.insert(s.name.as_str(), val)?;
+                } else {
+                    merged.insert(s.name.as_str(), val)?; // override wins
+                }
             }
+            let out = lora::lora_loss_and_grads(&e.shape, &cfg, &merged,
+                                                &lp, lqs_mask, x, y)?;
+            let grads = model::grads_to_values(&tspecs, out.grads)?;
+            (out.loss, out.acc, grads)
+        };
+        // in-place AdamW over the tenant's overlay; the shared base
+        // stays untouched (and stays frozen if other sessions hold it)
+        let _sp = crate::obs::span(crate::obs::Span::OptStep);
+        for (i, spec) in tspecs.iter().enumerate() {
+            optim::adamw_inplace(&spec.name,
+                                 adapters.trainable_mut()[i].as_f32_mut()?,
+                                 grads[i].as_f32()?,
+                                 state.m[i].as_f32_mut()?,
+                                 state.v[i].as_f32_mut()?, step, lr)?;
         }
-        let merged = Params::from_pairs(pairs);
-        let lp = Params::from_pairs(lora_pairs);
-        let out = lora::lora_loss_and_grads(&e.shape, &cfg, &merged, &lp,
-                                            lqs_mask, x, y)?;
-        let grads = model::grads_to_values(&tspecs, out.grads)?;
-        let (params, m, v) = optim::adamw(&tspecs, trainable, &grads, m, v,
-                                          step, lr)?;
-        Ok(StepOut { params, m, v, loss: out.loss, acc: out.acc })
+        Ok((loss, acc))
     }
 
     fn execute_raw(&self, key: &str, args: &[Value]) -> Result<Vec<Value>> {
@@ -387,13 +435,14 @@ mod tests {
         for key in ["train_hot_tiny", "train_fp_small", "train_hot_r4_tiny",
                     "train_hot_lm_tiny", "fwd_hot_tiny", "bwd_hot_tiny",
                     "grad_hot_tiny", "opt_tiny", "eval_lm_tiny", "calib_small",
+                    "infer_tiny", "infer_lm_tiny",
                     "lora_hotfrozen_small", "lora_fp_small", "kernel_hq_demo",
                     "kernel_hla_demo", "train_gx_int_hla_tiny",
                     "train_hot_mlp_small"] {
             assert!(b.supports(key), "{key}");
         }
         for key in ["train_warp_tiny", "train_hot_nopreset", "kernel_nope",
-                    "lora_hotfrozen_lm_tiny"] {
+                    "infer_nopreset", "lora_hotfrozen_lm_tiny"] {
             assert!(!b.supports(key), "{key}");
         }
         assert_eq!(b.key_batch("train_hot_tiny"), None);
@@ -441,22 +490,16 @@ mod tests {
         let preset = b.preset("tiny").unwrap();
         let ds = VisionDataset::new(preset.model.seq, preset.model.in_dim,
                                     preset.model.n_classes, 0);
-        let mut params = b.init_params("tiny").unwrap();
-        let zeros: Vec<Value> = preset.params.iter()
-            .map(crate::runtime::value::Value::zeros_like_spec)
-            .collect();
-        let (mut m, mut v) = (zeros.clone(), zeros);
+        let mut weights = b.init_store("tiny").unwrap();
+        let mut state = TrainState::new(&preset.params, 0);
         let mask = vec![0.0f32; preset.qlinears.len()];
         let mut losses = Vec::new();
         for step in 0..12 {
             let (x, y) = ds.batch(0, step as u64, 8);
-            let out = b.train_step("train_hot_tiny", &params, &m, &v,
-                                   step as f32 + 1.0, 5e-3, &mask, &x, &y)
-                .unwrap();
-            losses.push(out.loss);
-            params = out.params;
-            m = out.m;
-            v = out.v;
+            let (loss, _) = b.train_step("train_hot_tiny", &mut weights,
+                                         &mut state, step as f32 + 1.0,
+                                         5e-3, &mask, &x, &y).unwrap();
+            losses.push(loss);
         }
         assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
         let tail: f32 = losses[9..].iter().sum::<f32>() / 3.0;
@@ -469,24 +512,39 @@ mod tests {
         let preset = b.preset("tiny").unwrap();
         let ds = VisionDataset::new(preset.model.seq, preset.model.in_dim,
                                     preset.model.n_classes, 1);
-        let params = b.init_params("tiny").unwrap();
-        let zeros: Vec<Value> = preset.params.iter()
-            .map(crate::runtime::value::Value::zeros_like_spec)
-            .collect();
+        let mut w1 = b.init_store("tiny").unwrap();
+        let mut s1 = TrainState::new(&preset.params, 0);
+        let mut w2 = b.init_store("tiny").unwrap();
+        let mut s2 = TrainState::new(&preset.params, 0);
         let mask = vec![0.0f32; preset.qlinears.len()];
         let (x, y) = ds.batch(0, 0, 8);
         // fp is deterministic and ctx-identical across paths
-        let fused = b.train_step("train_fp_tiny", &params, &zeros, &zeros,
-                                 1.0, 1e-3, &mask, &x, &y).unwrap();
-        let g = b.grad_step("grad_fp_tiny", &params, &mask, &x, &y).unwrap();
-        let (p2, _, _) = b.opt_step("opt_tiny", &params, &g.grads, &zeros,
-                                    &zeros, 1.0, 1e-3).unwrap();
-        assert!((fused.loss - g.loss).abs() < 1e-6);
-        for (a, bb) in fused.params.iter().zip(&p2) {
-            let (av, bv) = (a.as_f32().unwrap(), bb.as_f32().unwrap());
-            for (x0, x1) in av.iter().zip(bv) {
-                assert!((x0 - x1).abs() < 1e-6);
+        let (floss, _) = b.train_step("train_fp_tiny", &mut w1, &mut s1,
+                                      1.0, 1e-3, &mask, &x, &y).unwrap();
+        let g = b.grad_step("grad_fp_tiny", &w2, &mask, &x, &y).unwrap();
+        b.opt_step("opt_tiny", &mut w2, &g.grads, &mut s2, 1.0, 1e-3)
+            .unwrap();
+        assert!((floss - g.loss).abs() < 1e-6);
+        for ((s, a), (_, bb)) in w1.iter().zip(w2.iter()) {
+            for (x0, x1) in a.iter().zip(bb) {
+                assert!((x0 - x1).abs() < 1e-6, "{}", s.name);
             }
         }
+    }
+
+    #[test]
+    fn infer_serves_from_shared_frozen_store() {
+        let b = backend();
+        let preset = b.preset("tiny").unwrap();
+        let ds = VisionDataset::new(preset.model.seq, preset.model.in_dim,
+                                    preset.model.n_classes, 2);
+        let weights = b.init_store("tiny").unwrap();
+        // a serving handle: frozen, pointer-shared, still inferable
+        let serving = weights.share();
+        let (x, _) = ds.batch(1, 0, 4);
+        let logits = b.infer("infer_tiny", &serving, &x).unwrap();
+        assert_eq!(logits.shape(), &[4, preset.model.n_classes]);
+        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        assert!(b.infer("train_hot_tiny", &serving, &x).is_err());
     }
 }

@@ -28,39 +28,68 @@ use crate::runtime::value::Value;
 // Parameter view (sorted-spec order -> by-name access)
 // ---------------------------------------------------------------------------
 
+/// One parameter as the model walk sees it: a shape plus a borrowed f32
+/// slice. Deliberately storage-agnostic — the borrow can come from a
+/// `Value::F32`, a `WeightStore` slab, or any other f32 buffer, which is
+/// what lets one forward/backward serve both the training path (Values)
+/// and the Arc-shared serving path (slabs) without copies.
+#[derive(Clone, Copy)]
+pub struct PTensor<'a> {
+    pub shape: &'a [usize],
+    pub data: &'a [f32],
+}
+
 pub struct Params<'a> {
-    by_name: BTreeMap<&'a str, &'a Value>,
+    by_name: BTreeMap<&'a str, PTensor<'a>>,
 }
 
 impl<'a> Params<'a> {
     pub fn new(specs: &'a [TensorSpec], values: &'a [Value]) -> Result<Params<'a>> {
         ensure!(specs.len() == values.len(),
                 "{} params given, preset wants {}", values.len(), specs.len());
-        let mut by_name = BTreeMap::new();
+        let mut p = Params { by_name: BTreeMap::new() };
         for (s, v) in specs.iter().zip(values) {
             ensure!(v.shape() == s.shape.as_slice(),
                     "param {}: shape {:?} != spec {:?}", s.name, v.shape(),
                     s.shape);
-            by_name.insert(s.name.as_str(), v);
+            p.insert(s.name.as_str(), v)?;
         }
-        Ok(Params { by_name })
+        Ok(p)
     }
 
-    /// Build a view from explicit (name, value) pairs — later pairs win,
-    /// which is how the LoRA step overlays trainable embed/head tensors
-    /// on the frozen base.
-    pub fn from_pairs<I>(pairs: I) -> Params<'a>
-    where
-        I: IntoIterator<Item = (&'a str, &'a Value)>,
-    {
+    /// Borrow every slab of a `WeightStore` — the zero-copy serving
+    /// path. The store stays frozen; the view is read-only by type.
+    pub fn from_store(store: &'a crate::backend::state::WeightStore)
+                      -> Params<'a> {
         let mut by_name = BTreeMap::new();
-        for (name, v) in pairs {
-            by_name.insert(name, v);
+        for (s, d) in store.iter() {
+            by_name.insert(s.name.as_str(),
+                           PTensor { shape: &s.shape, data: d });
         }
         Params { by_name }
     }
 
-    pub fn value(&self, name: &str) -> Result<&'a Value> {
+    /// Insert or override one entry — how the LoRA step overlays
+    /// trainable embed/head tensors on the frozen base view.
+    pub fn insert(&mut self, name: &'a str, v: &'a Value) -> Result<()> {
+        self.by_name
+            .insert(name, PTensor { shape: v.shape(), data: v.as_f32()? });
+        Ok(())
+    }
+
+    /// Build a view from explicit (name, value) pairs — later pairs win.
+    pub fn from_pairs<I>(pairs: I) -> Result<Params<'a>>
+    where
+        I: IntoIterator<Item = (&'a str, &'a Value)>,
+    {
+        let mut p = Params { by_name: BTreeMap::new() };
+        for (name, v) in pairs {
+            p.insert(name, v)?;
+        }
+        Ok(p)
+    }
+
+    pub fn t(&self, name: &str) -> Result<PTensor<'a>> {
         self.by_name
             .get(name)
             .copied()
@@ -68,7 +97,7 @@ impl<'a> Params<'a> {
     }
 
     pub fn f(&self, name: &str) -> Result<&'a [f32]> {
-        self.value(name)?.as_f32()
+        Ok(self.t(name)?.data)
     }
 }
 
@@ -375,6 +404,10 @@ pub fn parse_ctx(shape: &ModelShape, cfg: &BackwardCfg, b: usize,
 pub struct FwdOut {
     pub loss: f32,
     pub acc: f32,
+    /// Pre-softmax head outputs, ((b*seq, c) lm / (b, c) otherwise) —
+    /// kept so the fwd_infer parity tests can pin bit-identity against
+    /// the training walk.
+    pub logits: Vec<f32>,
     pub ctxs: Vec<CtxEntry>,
 }
 
@@ -516,11 +549,12 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
 
     let c = shape.n_classes;
     crate::obs::set_layer("head");
-    let (loss, acc, ce) = if shape.arch == "lm" {
+    let (loss, acc, ce, logits) = if shape.arch == "lm" {
         let (logits, ql) = layers::qlinear_fwd(hn, n, d, p.f("head.w")?, c,
                                                p.f("head.b")?, cfg);
         ctxs.push(entry_ql("head".into(), ql));
-        layers::softmax_xent_fwd(&logits, n, c, &labels)
+        let (loss, acc, ce) = layers::softmax_xent_fwd(&logits, n, c, &labels);
+        (loss, acc, ce, logits)
     } else {
         let mut pooled = vec![0.0f32; b * d];
         for bi in 0..b {
@@ -535,11 +569,132 @@ pub fn forward(shape: &ModelShape, cfg: &BackwardCfg, p: &Params,
         let (logits, ql) = layers::qlinear_fwd(pooled, b, d, p.f("head.w")?,
                                                c, p.f("head.b")?, cfg);
         ctxs.push(entry_ql("head".into(), ql));
-        layers::softmax_xent_fwd(&logits, b, c, &labels)
+        let (loss, acc, ce) = layers::softmax_xent_fwd(&logits, b, c, &labels);
+        (loss, acc, ce, logits)
     };
     ctxs.push(entry_ce("loss".into(), ce, &labels,
                        if shape.arch == "lm" { n } else { b }, c, packed));
-    Ok(FwdOut { loss, acc, ctxs })
+    Ok(FwdOut { loss, acc, logits, ctxs })
+}
+
+// ---------------------------------------------------------------------------
+// Inference-only forward (no saved-for-backward state)
+// ---------------------------------------------------------------------------
+
+/// The forward walk with every ctx push and quantize-for-backward
+/// epilogue removed. HOT's forward is always exact FP32, so this is the
+/// *same* arithmetic as `forward` — same GEMM calls in the same order —
+/// and the logits are bit-identical to the training walk's for every
+/// variant (pinned by the parity property test below). What changes is
+/// what it *doesn't* do: no `hla_compress`, no `quantize_rows`, no ctx
+/// materialization, so obs quant counters stay flat and a serving
+/// session needs nothing but a frozen `WeightStore` view.
+///
+/// Returns (logits, b) with logits ((b*seq, c) lm / (b, c) otherwise).
+fn infer_logits(shape: &ModelShape, p: &Params, x: &Value)
+                -> Result<(Vec<f32>, usize)> {
+    let (d, l, m) = (shape.d_model, shape.seq, shape.d_mlp());
+    let (xf, b) = embed_input(shape, x)?;
+    let n = b * l;
+
+    // embed + positional encoding
+    let mut h = layers::qlinear_y(&xf, n, shape.in_dim, p.f("embed.w")?, d,
+                                  p.f("embed.b")?);
+    let pos = p.f("pos")?;
+    for r in 0..n {
+        let t = r % l;
+        let row = &mut h[r * d..(r + 1) * d];
+        for (v, pv) in row.iter_mut().zip(&pos[t * d..(t + 1) * d]) {
+            *v += pv;
+        }
+    }
+
+    for blk in 0..shape.depth {
+        let pre = format!("blk{blk}.");
+        if shape.has_attention() {
+            let (hn, _) = layers::layernorm_fwd(
+                &h, n, d, p.f(&format!("{pre}ln1.g"))?,
+                p.f(&format!("{pre}ln1.b"))?);
+            let qkv = layers::qlinear_y(
+                &hn, n, d, p.f(&format!("{pre}attn.wqkv"))?, 3 * d,
+                p.f(&format!("{pre}attn.bqkv"))?);
+            let mut q = vec![0.0f32; n * d];
+            let mut k = vec![0.0f32; n * d];
+            let mut v = vec![0.0f32; n * d];
+            for r in 0..n {
+                for j in 0..d {
+                    q[r * d + j] = qkv[r * 3 * d + j];
+                    k[r * d + j] = qkv[r * 3 * d + d + j];
+                    v[r * d + j] = qkv[r * 3 * d + 2 * d + j];
+                }
+            }
+            let (att, _) = layers::attention_fwd(
+                &q, &k, &v, b, l, d, shape.heads, shape.arch == "lm");
+            let proj = layers::qlinear_y(
+                &att, n, d, p.f(&format!("{pre}attn.wo"))?, d,
+                p.f(&format!("{pre}attn.bo"))?);
+            for (hv, pv) in h.iter_mut().zip(&proj) {
+                *hv += pv;
+            }
+        }
+        let (hn, _) = layers::layernorm_fwd(
+            &h, n, d, p.f(&format!("{pre}ln2.g"))?,
+            p.f(&format!("{pre}ln2.b"))?);
+        let f1 = layers::qlinear_y(&hn, n, d, p.f(&format!("{pre}fc1.w"))?,
+                                   m, p.f(&format!("{pre}fc1.b"))?);
+        let (g1, _) = layers::gelu_fwd(f1);
+        let f2 = layers::qlinear_y(&g1, n, m, p.f(&format!("{pre}fc2.w"))?,
+                                   d, p.f(&format!("{pre}fc2.b"))?);
+        for (hv, fv) in h.iter_mut().zip(&f2) {
+            *hv += fv;
+        }
+    }
+
+    let (hn, _) = layers::layernorm_fwd(&h, n, d, p.f("lnf.g")?,
+                                        p.f("lnf.b")?);
+    let c = shape.n_classes;
+    let logits = if shape.arch == "lm" {
+        layers::qlinear_y(&hn, n, d, p.f("head.w")?, c, p.f("head.b")?)
+    } else {
+        let mut pooled = vec![0.0f32; b * d];
+        for bi in 0..b {
+            for t in 0..l {
+                let row = &hn[(bi * l + t) * d..(bi * l + t + 1) * d];
+                let dst = &mut pooled[bi * d..(bi + 1) * d];
+                for (pv, hv) in dst.iter_mut().zip(row) {
+                    *pv += hv / l as f32;
+                }
+            }
+        }
+        layers::qlinear_y(&pooled, b, d, p.f("head.w")?, c, p.f("head.b")?)
+    };
+    Ok((logits, b))
+}
+
+/// Inference-only forward: batched logits from a frozen parameter view,
+/// zero saved-for-backward state. Output shape (b, seq, classes) for lm,
+/// (b, classes) otherwise.
+pub fn fwd_infer(shape: &ModelShape, p: &Params, x: &Value) -> Result<Value> {
+    let (logits, b) = infer_logits(shape, p, x)?;
+    let out_shape = if shape.arch == "lm" {
+        vec![b, shape.seq, shape.n_classes]
+    } else {
+        vec![b, shape.n_classes]
+    };
+    Ok(Value::F32 { shape: out_shape, data: logits })
+}
+
+/// Eval through the inference walk: (loss, acc) with no ctx writes and
+/// no quantization — what `eval_step` routes through so held-out passes
+/// stop paying (and stop *recording*) the quantize-for-backward tax.
+pub fn eval_infer(shape: &ModelShape, p: &Params, x: &Value, y: &Value)
+                  -> Result<(f32, f32)> {
+    let (logits, b) = infer_logits(shape, p, x)?;
+    let labels = labels_of(shape, y, b)?;
+    let rows = if shape.arch == "lm" { b * shape.seq } else { b };
+    let (loss, acc, _) =
+        layers::softmax_xent_fwd(&logits, rows, shape.n_classes, &labels);
+    Ok((loss, acc))
 }
 
 // ---------------------------------------------------------------------------
@@ -592,10 +747,10 @@ fn ql_backward(gy: &[f32], n: usize, o: usize, p: &Params, wname: &str,
                need_gx: bool, grads: &mut BTreeMap<String, Vec<f32>>,
                diag: &mut Option<&mut Vec<QlDiag>>)
                -> Result<Option<Vec<f32>>> {
-    let wv = p.value(wname)?;
-    ensure!(wv.shape().len() == 2 && wv.shape()[0] == o,
-            "{wname}: shape {:?} incompatible with gy cols {o}", wv.shape());
-    let i = wv.shape()[1];
+    let wv = p.t(wname)?;
+    ensure!(wv.shape.len() == 2 && wv.shape[0] == o,
+            "{wname}: shape {:?} incompatible with gy cols {o}", wv.shape);
+    let i = wv.shape[1];
     let ctx = ql_ctx_of(entry, cfg.rank)?;
     ensure!(ctx.n == n && ctx.i == i,
             "{wname}: ctx dims ({}, {}) != ({n}, {i})", ctx.n, ctx.i);
@@ -609,7 +764,7 @@ fn ql_backward(gy: &[f32], n: usize, o: usize, p: &Params, wname: &str,
     // backward may run on gy) to the same module name the forward used
     crate::obs::set_layer(&entry.module);
     let (gx, gw, gb) =
-        layers::qlinear_bwd(gy, n, o, wv.as_f32()?, i, &ctx, cfg, flag,
+        layers::qlinear_bwd(gy, n, o, wv.data, i, &ctx, cfg, flag,
                             need_gx);
     grads.insert(wname.to_string(), gw);
     grads.insert(bname.to_string(), gb);
@@ -1067,6 +1222,100 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_infer_logits_bit_identical_to_training_forward() {
+        // `fwd_infer` is the training forward minus the ctx writes —
+        // same GEMMs in the same order, so the logits must match bit
+        // for bit. The forward is variant-independent (HOT only touches
+        // gradients and storage), so the sweep covers every backward
+        // family, odd/prime dims, all three archs and both SIMD tiers.
+        // Bit-identity needs one GEMM tier per case: hold the kernels
+        // gate against concurrent set_simd_enabled togglers.
+        let _gate = crate::kernels::pool::test_serial();
+        let prev = crate::kernels::simd_enabled();
+        crate::util::proptest::check("infer/train forward parity", 12,
+                                     |case| {
+            let tag = ["fp", "lbp", "luq", "hot", "hot_noabc", "hot_abc4"]
+                [case.usize_in(0, 5)];
+            let cfg = BackwardCfg::parse(tag).map_err(|e| e.to_string())?;
+            let arch = ["vit", "mlp", "lm"][case.usize_in(0, 2)];
+            let in_dim = if arch == "lm" {
+                [13usize, 16, 17][case.usize_in(0, 2)]
+            } else {
+                [7usize, 11, 16][case.usize_in(0, 2)]
+            };
+            let b = [1usize, 3, 5][case.usize_in(0, 2)];
+            crate::kernels::set_simd_enabled(case.rng.uniform() < 0.5);
+            let simd = crate::kernels::simd_enabled();
+            let shape = ModelShape { arch, d_model: 16, depth: 1, heads: 2,
+                                     seq: 16, in_dim, n_classes: 3,
+                                     mlp_ratio: 2 };
+            let specs = presets::param_specs(&shape);
+            let values = presets::init_values(&shape, 21 + b as u64);
+            let p = Params::new(&specs, &values).map_err(|e| e.to_string())?;
+            let mask = vec![0.0f32; shape.n_qlinears()];
+            let (x, y) = batch(&shape, b, 50 + b as u64);
+            let fwd = forward(&shape, &cfg, &p, &mask, &x, &y)
+                .map_err(|e| e.to_string())?;
+            let iv = fwd_infer(&shape, &p, &x).map_err(|e| e.to_string())?;
+            let want: Vec<usize> = if arch == "lm" {
+                vec![b, shape.seq, shape.n_classes]
+            } else {
+                vec![b, shape.n_classes]
+            };
+            if iv.shape() != want.as_slice() {
+                return Err(format!("infer shape {:?}, want {want:?}",
+                                   iv.shape()));
+            }
+            let il = iv.as_f32().map_err(|e| e.to_string())?;
+            if il.len() != fwd.logits.len() {
+                return Err(format!("logit count {} != {}", il.len(),
+                                   fwd.logits.len()));
+            }
+            for (i, (a, bb)) in fwd.logits.iter().zip(il).enumerate() {
+                if a.to_bits() != bb.to_bits() {
+                    return Err(format!(
+                        "{arch} {tag} b{b} simd={simd} logit[{i}]: \
+                         {a} != {bb}"));
+                }
+            }
+            // eval through the infer walk reproduces the training loss
+            let (el, ea) = eval_infer(&shape, &p, &x, &y)
+                .map_err(|e| e.to_string())?;
+            if el.to_bits() != fwd.loss.to_bits()
+                || ea.to_bits() != fwd.acc.to_bits() {
+                return Err(format!(
+                    "{arch} {tag}: eval_infer ({el}, {ea}) != \
+                     fwd ({}, {})", fwd.loss, fwd.acc));
+            }
+            Ok(())
+        });
+        crate::kernels::set_simd_enabled(prev);
+    }
+
+    #[test]
+    fn store_view_forward_matches_value_view() {
+        // Params::from_store borrows WeightStore slabs; the walk must
+        // see the exact same bytes as through a Vec<Value> view.
+        let _gate = crate::kernels::pool::test_serial();
+        let shape = test_shape();
+        let specs = presets::param_specs(&shape);
+        let values = presets::init_values(&shape, 12);
+        let ws = crate::backend::state::WeightStore::from_values(
+            specs.clone(), values.clone()).unwrap();
+        let mask = vec![0.0; shape.n_qlinears()];
+        let (x, y) = batch(&shape, 3, 13);
+        let cfg = BackwardCfg::default();
+        let pv = Params::new(&specs, &values).unwrap();
+        let ps = Params::from_store(&ws);
+        let a = forward(&shape, &cfg, &pv, &mask, &x, &y).unwrap();
+        let b = forward(&shape, &cfg, &ps, &mask, &x, &y).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        for (u, v) in a.logits.iter().zip(&b.logits) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
     }
 
     #[test]

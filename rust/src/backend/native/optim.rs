@@ -22,7 +22,34 @@ fn decay_of(name: &str) -> f32 {
     }
 }
 
-/// One AdamW step over a flat state; returns (params, m, v).
+/// One AdamW update over a single tensor, in place — THE definition of
+/// the math. `weights.slab_mut` / `TrainState` moments route through
+/// here in steady state (no reallocation, no slab clones); the
+/// value-returning `adamw` below wraps it for callers that want fresh
+/// buffers.
+pub fn adamw_inplace(name: &str, p: &mut [f32], g: &[f32], m: &mut [f32],
+                     v: &mut [f32], step: f32, lr: f32) -> Result<()> {
+    ensure!(g.len() == p.len() && m.len() == p.len() && v.len() == p.len(),
+            "{name}: adamw tensor lens {}/{}/{}/{} disagree", p.len(),
+            g.len(), m.len(), v.len());
+    let bc1 = 1.0 - BETA1.powf(step);
+    let bc2 = 1.0 - BETA2.powf(step);
+    let decay = decay_of(name);
+    for j in 0..p.len() {
+        let nm = BETA1 * m[j] + (1.0 - BETA1) * g[j];
+        let nv = BETA2 * v[j] + (1.0 - BETA2) * g[j] * g[j];
+        let upd = (nm / bc1) / ((nv / bc2).sqrt() + EPS);
+        p[j] -= lr * (upd + decay * p[j]);
+        m[j] = nm;
+        v[j] = nv;
+    }
+    Ok(())
+}
+
+/// One AdamW step over a flat state; returns (params, m, v). Clones the
+/// inputs and defers to `adamw_inplace` — the boundary-path flavor
+/// (PJRT write-backs, tests); the trainer's native loop uses the
+/// in-place form directly.
 pub fn adamw(specs: &[TensorSpec], params: &[Value], grads: &[Value],
              m: &[Value], v: &[Value], step: f32, lr: f32)
              -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)> {
@@ -31,30 +58,15 @@ pub fn adamw(specs: &[TensorSpec], params: &[Value], grads: &[Value],
             && m.len() == specs.len() && v.len() == specs.len(),
             "adamw arity mismatch: {} specs vs {}/{}/{}/{}", specs.len(),
             params.len(), grads.len(), m.len(), v.len());
-    let bc1 = 1.0 - BETA1.powf(step);
-    let bc2 = 1.0 - BETA2.powf(step);
     let mut new_p = Vec::with_capacity(specs.len());
     let mut new_m = Vec::with_capacity(specs.len());
     let mut new_v = Vec::with_capacity(specs.len());
     for (i, spec) in specs.iter().enumerate() {
-        let p = params[i].as_f32()?;
+        let mut pd = params[i].as_f32()?.to_vec();
         let g = grads[i].as_f32()?;
-        let mm = m[i].as_f32()?;
-        let vv = v[i].as_f32()?;
-        ensure!(g.len() == p.len(), "{}: grad len {} != param {}", spec.name,
-                g.len(), p.len());
-        let decay = decay_of(&spec.name);
-        let mut pd = Vec::with_capacity(p.len());
-        let mut md = Vec::with_capacity(p.len());
-        let mut vd = Vec::with_capacity(p.len());
-        for j in 0..p.len() {
-            let nm = BETA1 * mm[j] + (1.0 - BETA1) * g[j];
-            let nv = BETA2 * vv[j] + (1.0 - BETA2) * g[j] * g[j];
-            let upd = (nm / bc1) / ((nv / bc2).sqrt() + EPS);
-            pd.push(p[j] - lr * (upd + decay * p[j]));
-            md.push(nm);
-            vd.push(nv);
-        }
+        let mut md = m[i].as_f32()?.to_vec();
+        let mut vd = v[i].as_f32()?.to_vec();
+        adamw_inplace(&spec.name, &mut pd, g, &mut md, &mut vd, step, lr)?;
         new_p.push(Value::F32 { shape: spec.shape.clone(), data: pd });
         new_m.push(Value::F32 { shape: spec.shape.clone(), data: md });
         new_v.push(Value::F32 { shape: spec.shape.clone(), data: vd });

@@ -2,10 +2,17 @@
 //! `pjrt` feature). The artifact calling conventions — flat argument
 //! lists in manifest order, outputs popped from the tail — live here, so
 //! the coordinator speaks only the semantic trait.
+//!
+//! The typed state (`WeightStore` / `TrainState` / `AdapterSet`) crosses
+//! this boundary as `Value` lists: device execution copies host buffers
+//! into literals anyway, so `WeightStore::to_values` at entry and
+//! `replace_from_values` on the way back are the natural conversion
+//! points. (The zero-copy slab path is a native-backend property.)
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::{Executor, ForwardOut, GradOut, LoraMeta, StepOut};
+use crate::backend::{AdapterSet, Executor, ForwardOut, GradOut, LoraMeta,
+                     TrainState, WeightStore};
 use crate::runtime::value::Value;
 use crate::runtime::{Preset, Runtime};
 
@@ -13,8 +20,10 @@ fn mask_value(lqs_mask: &[f32]) -> Value {
     Value::F32 { shape: vec![lqs_mask.len()], data: lqs_mask.to_vec() }
 }
 
-/// Pop `[state..., loss, acc]`-shaped outputs into a StepOut.
-fn pop_step_out(mut outs: Vec<Value>, np: usize, key: &str) -> Result<StepOut> {
+/// Pop `[params..., m..., v..., loss, acc]`-shaped outputs.
+#[allow(clippy::type_complexity)]
+fn pop_step_out(mut outs: Vec<Value>, np: usize, key: &str)
+                -> Result<(Vec<Value>, Vec<Value>, Vec<Value>, f32, f32)> {
     let acc = outs.pop().context("acc")?.scalar()?;
     let loss = outs.pop().context("loss")?.scalar()?;
     if outs.len() != 3 * np {
@@ -22,7 +31,7 @@ fn pop_step_out(mut outs: Vec<Value>, np: usize, key: &str) -> Result<StepOut> {
     }
     let v = outs.split_off(2 * np);
     let m = outs.split_off(np);
-    Ok(StepOut { params: outs, m, v, loss, acc })
+    Ok((outs, m, v, loss, acc))
 }
 
 impl Executor for Runtime {
@@ -74,24 +83,34 @@ impl Executor for Runtime {
             .unwrap_or(self.manifest.batch))
     }
 
-    fn train_step(&self, key: &str, params: &[Value], m: &[Value],
-                  v: &[Value], step: f32, lr: f32, lqs_mask: &[f32],
-                  x: &Value, y: &Value) -> Result<StepOut> {
+    fn train_step(&self, key: &str, weights: &mut WeightStore,
+                  state: &mut TrainState, step: f32, lr: f32,
+                  lqs_mask: &[f32], x: &Value, y: &Value)
+                  -> Result<(f32, f32)> {
+        let params = weights.to_values();
         let step_v = Value::scalar_f32(step);
         let lr_v = Value::scalar_f32(lr);
         let mask_v = mask_value(lqs_mask);
-        let mut args: Vec<&Value> = params.iter().chain(m).chain(v).collect();
+        let mut args: Vec<&Value> =
+            params.iter().chain(&state.m).chain(&state.v).collect();
         args.push(&step_v);
         args.push(&lr_v);
         args.push(&mask_v);
         args.push(x);
         args.push(y);
-        pop_step_out(self.execute_refs(key, &args)?, params.len(), key)
+        let (p, m, v, loss, acc) =
+            pop_step_out(self.execute_refs(key, &args)?, params.len(), key)?;
+        weights.replace_from_values(p)?;
+        state.m = m;
+        state.v = v;
+        Ok((loss, acc))
     }
 
-    fn forward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
-                    x: &Value, y: &Value) -> Result<ForwardOut> {
+    fn forward_step(&self, key: &str, weights: &WeightStore,
+                    lqs_mask: &[f32], x: &Value, y: &Value)
+                    -> Result<ForwardOut> {
         let meta = self.manifest.artifact(key)?.clone();
+        let params = weights.to_values();
         let mask_v = mask_value(lqs_mask);
         let mut args: Vec<&Value> = params.iter().collect();
         args.push(&mask_v);
@@ -115,8 +134,10 @@ impl Executor for Runtime {
         Ok(ForwardOut { loss, acc, ctx, ctx_specs })
     }
 
-    fn backward_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
-                     x: &Value, ctx: Vec<Value>) -> Result<Vec<Value>> {
+    fn backward_step(&self, key: &str, weights: &WeightStore,
+                     lqs_mask: &[f32], x: &Value, ctx: Vec<Value>)
+                     -> Result<Vec<Value>> {
+        let params = weights.to_values();
         let mask_v = mask_value(lqs_mask);
         let mut args: Vec<&Value> = params.iter().collect();
         args.push(&mask_v);
@@ -125,8 +146,9 @@ impl Executor for Runtime {
         self.execute_refs(key, &args)
     }
 
-    fn grad_step(&self, key: &str, params: &[Value], lqs_mask: &[f32],
+    fn grad_step(&self, key: &str, weights: &WeightStore, lqs_mask: &[f32],
                  x: &Value, y: &Value) -> Result<GradOut> {
+        let params = weights.to_values();
         let mask_v = mask_value(lqs_mask);
         let mut args: Vec<&Value> = params.iter().collect();
         args.push(&mask_v);
@@ -141,14 +163,19 @@ impl Executor for Runtime {
         Ok(GradOut { grads: outs, loss, acc })
     }
 
-    fn opt_step(&self, key: &str, params: &[Value], grads: &[Value],
-                m: &[Value], v: &[Value], step: f32, lr: f32)
-                -> Result<(Vec<Value>, Vec<Value>, Vec<Value>)> {
+    fn opt_step(&self, key: &str, weights: &mut WeightStore,
+                grads: &[Value], state: &mut TrainState, step: f32,
+                lr: f32) -> Result<()> {
+        let params = weights.to_values();
         let np = params.len();
         let step_v = Value::scalar_f32(step);
         let lr_v = Value::scalar_f32(lr);
-        let mut args: Vec<&Value> =
-            params.iter().chain(grads).chain(m).chain(v).collect();
+        let mut args: Vec<&Value> = params
+            .iter()
+            .chain(grads)
+            .chain(&state.m)
+            .chain(&state.v)
+            .collect();
         args.push(&step_v);
         args.push(&lr_v);
         let mut outs = self.execute_refs(key, &args)?;
@@ -157,11 +184,15 @@ impl Executor for Runtime {
         }
         let v = outs.split_off(2 * np);
         let m = outs.split_off(np);
-        Ok((outs, m, v))
+        weights.replace_from_values(outs)?;
+        state.m = m;
+        state.v = v;
+        Ok(())
     }
 
-    fn eval_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
-                 -> Result<(f32, f32)> {
+    fn eval_step(&self, key: &str, weights: &WeightStore, x: &Value,
+                 y: &Value) -> Result<(f32, f32)> {
+        let params = weights.to_values();
         let mut args: Vec<&Value> = params.iter().collect();
         args.push(x);
         args.push(y);
@@ -169,8 +200,12 @@ impl Executor for Runtime {
         Ok((outs[0].scalar()?, outs[1].scalar()?))
     }
 
-    fn calib_step(&self, key: &str, params: &[Value], x: &Value, y: &Value)
-                  -> Result<Vec<Vec<f32>>> {
+    // infer: default (unsupported) — no inference-only artifacts are
+    // lowered; PJRT serving would execute eval graphs instead.
+
+    fn calib_step(&self, key: &str, weights: &WeightStore, x: &Value,
+                  y: &Value) -> Result<Vec<Vec<f32>>> {
+        let params = weights.to_values();
         let mut args: Vec<&Value> = params.iter().collect();
         args.push(x);
         args.push(y);
@@ -189,20 +224,34 @@ impl Executor for Runtime {
         })
     }
 
-    fn lora_step(&self, key: &str, base: &[Value], trainable: &[Value],
-                 m: &[Value], v: &[Value], step: f32, lr: f32,
-                 lqs_mask: &[f32], x: &Value, y: &Value) -> Result<StepOut> {
+    fn lora_step(&self, key: &str, adapters: &mut AdapterSet,
+                 state: &mut TrainState, step: f32, lr: f32,
+                 lqs_mask: &[f32], x: &Value, y: &Value)
+                 -> Result<(f32, f32)> {
+        let base = adapters.base().to_values();
         let step_v = Value::scalar_f32(step);
         let lr_v = Value::scalar_f32(lr);
         let mask_v = mask_value(lqs_mask);
-        let mut args: Vec<&Value> =
-            base.iter().chain(trainable).chain(m).chain(v).collect();
+        let nt = adapters.trainable().len();
+        let mut args: Vec<&Value> = base
+            .iter()
+            .chain(adapters.trainable())
+            .chain(&state.m)
+            .chain(&state.v)
+            .collect();
         args.push(&step_v);
         args.push(&lr_v);
         args.push(&mask_v);
         args.push(x);
         args.push(y);
-        pop_step_out(self.execute_refs(key, &args)?, trainable.len(), key)
+        let (t, m, v, loss, acc) =
+            pop_step_out(self.execute_refs(key, &args)?, nt, key)?;
+        for (slot, nv) in adapters.trainable_mut().iter_mut().zip(t) {
+            *slot = nv;
+        }
+        state.m = m;
+        state.v = v;
+        Ok((loss, acc))
     }
 
     fn execute_raw(&self, key: &str, args: &[Value]) -> Result<Vec<Value>> {

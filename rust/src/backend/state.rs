@@ -1,0 +1,374 @@
+//! Model-state ownership, decoupled from execution (ISSUE 8).
+//!
+//! Three types split what the backends used to tangle into one
+//! `Vec<Value>` soup:
+//!
+//!   * [`WeightStore`] — the frozen base weights, one `Arc<[f32]>` slab
+//!     per parameter in sorted-spec order. Cheap to [`share`] across
+//!     sessions/tenants (slab refcount bumps, no copies); mutable only
+//!     while *unshared* (`Arc::get_mut`), which is exactly the training
+//!     loop's situation — the single `Trainer`-owned store updates in
+//!     place, and the moment a checkpoint or a serving session shares
+//!     it, the slabs freeze.
+//!   * [`AdapterSet`] — one tenant's trainable overlay (LoRA A/B pairs
+//!     plus full-rank embed/head overrides) referencing a shared base.
+//!     Two `AdapterSet`s over one base hold pointer-identical base
+//!     slabs (pinned by `Arc::ptr_eq` in tests).
+//!   * [`TrainState`] — everything training needs *besides* weights:
+//!     AdamW moments and the ABC ctx store. Inference needs none of it,
+//!     so "training = WeightStore + TrainState, inference = WeightStore
+//!     alone" falls out of the types.
+//!
+//! [`share`]: WeightStore::share
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::ctx::CtxStore;
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::value::Value;
+
+/// Typed index into a `WeightStore`'s sorted-spec registry. Stable for
+/// the lifetime of the store (and of every store `share`d from it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ParamId(pub usize);
+
+/// Frozen base weights behind `Arc<[f32]>` slabs, keyed by a typed
+/// `ParamId` registry in sorted-spec order (the repo-wide parameter
+/// flattening convention).
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    specs: Arc<Vec<TensorSpec>>,
+    slabs: Vec<Arc<[f32]>>,
+}
+
+impl WeightStore {
+    /// Move a flat value vector (sorted-spec order) into slabs. The
+    /// `Vec<f32>` buffers are consumed, not cloned — this is the one
+    /// construction-time copy into the `Arc` allocations; steady state
+    /// never copies a slab again.
+    pub fn from_values(specs: Vec<TensorSpec>, values: Vec<Value>)
+                       -> Result<WeightStore> {
+        ensure!(specs.len() == values.len(),
+                "weight store arity: {} specs vs {} values", specs.len(),
+                values.len());
+        let mut slabs = Vec::with_capacity(specs.len());
+        for (spec, v) in specs.iter().zip(values) {
+            v.check_spec(spec)?;
+            let (_, data) = v.into_f32()?;
+            slabs.push(Arc::<[f32]>::from(data));
+        }
+        let store = WeightStore { specs: Arc::new(specs), slabs };
+        crate::obs::count(crate::obs::Counter::WeightBytesShared,
+                          store.total_bytes() as u64);
+        Ok(store)
+    }
+
+    /// Build slabs straight from a raw little-endian f32 blob in
+    /// sorted-spec order (the checkpoint wire format) — one decode pass,
+    /// no intermediate `Vec<Value>` layer.
+    pub fn from_le_bytes(specs: Vec<TensorSpec>, bytes: &[u8])
+                         -> Result<WeightStore> {
+        let want: usize = specs.iter().map(|s| s.numel() * 4).sum();
+        ensure!(bytes.len() == want,
+                "weight blob is {} bytes, specs want {want}", bytes.len());
+        let mut slabs = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for s in &specs {
+            let n = s.numel();
+            let mut data = vec![0.0f32; n];
+            for (i, x) in data.iter_mut().enumerate() {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+            off += 4 * n;
+            slabs.push(Arc::<[f32]>::from(data));
+        }
+        let store = WeightStore { specs: Arc::new(specs), slabs };
+        crate::obs::count(crate::obs::Counter::WeightBytesShared,
+                          store.total_bytes() as u64);
+        Ok(store)
+    }
+
+    /// A second handle onto the same frozen slabs: refcount bumps only,
+    /// no weight bytes move. After this, neither handle can mutate in
+    /// place until the other is dropped ("frozen once shared").
+    pub fn share(&self) -> WeightStore {
+        WeightStore { specs: self.specs.clone(),
+                      slabs: self.slabs.clone() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slabs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slabs.is_empty()
+    }
+
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    /// Registry lookup (specs are sorted by name, so this is a binary
+    /// search).
+    pub fn id(&self, name: &str) -> Option<ParamId> {
+        self.specs
+            .binary_search_by(|s| s.name.as_str().cmp(name))
+            .ok()
+            .map(ParamId)
+    }
+
+    pub fn spec(&self, id: ParamId) -> &TensorSpec {
+        &self.specs[id.0]
+    }
+
+    /// Borrow one slab's data by id.
+    pub fn slab(&self, id: ParamId) -> &[f32] {
+        &self.slabs[id.0]
+    }
+
+    /// The raw `Arc` handle — what `Arc::ptr_eq` sharing assertions and
+    /// zero-copy session handoffs read.
+    pub fn slab_arc(&self, id: ParamId) -> &Arc<[f32]> {
+        &self.slabs[id.0]
+    }
+
+    /// Borrow a parameter's data by name.
+    pub fn f(&self, name: &str) -> Result<&[f32]> {
+        match self.id(name) {
+            Some(id) => Ok(self.slab(id)),
+            None => bail!("weight store has no param {name:?}"),
+        }
+    }
+
+    /// `(spec, data)` walk in sorted-spec order.
+    pub fn iter(&self) -> impl Iterator<Item = (&TensorSpec, &[f32])> {
+        self.specs.iter().zip(self.slabs.iter().map(|s| &**s))
+    }
+
+    /// In-place mutation — only possible while this store is the sole
+    /// owner of the slab (training-loop steady state). Errors once the
+    /// slab has been shared: shared weights are frozen by construction,
+    /// which is what keeps serving sessions immutable under a training
+    /// loop's feet.
+    pub fn slab_mut(&mut self, id: ParamId) -> Result<&mut [f32]> {
+        let name = &self.specs[id.0].name;
+        match Arc::get_mut(&mut self.slabs[id.0]) {
+            Some(s) => Ok(s),
+            None => bail!("param {name:?} is frozen (slab is shared); \
+                           in-place updates need sole ownership"),
+        }
+    }
+
+    /// Stored weight bytes (f32 slabs only — specs carry no payload).
+    pub fn total_bytes(&self) -> usize {
+        self.slabs.iter().map(|s| s.len() * 4).sum()
+    }
+
+    /// Materialize `Vec<Value>`s — a boundary conversion for backends
+    /// that must copy host buffers anyway (PJRT device literals). Never
+    /// on the native steady-state path.
+    pub fn to_values(&self) -> Vec<Value> {
+        self.iter()
+            .map(|(s, d)| Value::F32 { shape: s.shape.clone(),
+                                       data: d.to_vec() })
+            .collect()
+    }
+
+    /// Overwrite every slab from a returned value vector (the PJRT
+    /// boundary's write-back after a device-side optimizer step).
+    pub fn replace_from_values(&mut self, values: Vec<Value>) -> Result<()> {
+        ensure!(values.len() == self.slabs.len(),
+                "replace arity: {} values vs {} slabs", values.len(),
+                self.slabs.len());
+        for (i, v) in values.into_iter().enumerate() {
+            v.check_spec(&self.specs[i])?;
+            let (_, data) = v.into_f32()?;
+            self.slabs[i] = Arc::from(data);
+        }
+        Ok(())
+    }
+}
+
+/// One tenant's trainable overlay over a shared frozen base: LoRA A/B
+/// pairs plus the full-rank tensors the fine-tune recipe keeps
+/// trainable (embed/head). Holds its own `WeightStore` handle, so the
+/// base outlives any trainer/session shuffling.
+#[derive(Debug)]
+pub struct AdapterSet {
+    base: WeightStore,
+    specs: Vec<TensorSpec>,
+    trainable: Vec<Value>,
+}
+
+impl AdapterSet {
+    /// `base.share()` + the tenant's trainable tensors (sorted-spec
+    /// order, one value per spec).
+    pub fn new(base: &WeightStore, specs: Vec<TensorSpec>,
+               trainable: Vec<Value>) -> Result<AdapterSet> {
+        ensure!(specs.len() == trainable.len(),
+                "adapter arity: {} specs vs {} values", specs.len(),
+                trainable.len());
+        for (s, v) in specs.iter().zip(&trainable) {
+            v.check_spec(s)?;
+        }
+        let set = AdapterSet { base: base.share(), specs, trainable };
+        crate::obs::count(crate::obs::Counter::AdapterBytes,
+                          set.adapter_bytes() as u64);
+        Ok(set)
+    }
+
+    pub fn base(&self) -> &WeightStore {
+        &self.base
+    }
+
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    pub fn trainable(&self) -> &[Value] {
+        &self.trainable
+    }
+
+    pub fn trainable_mut(&mut self) -> &mut [Value] {
+        &mut self.trainable
+    }
+
+    /// Per-tenant bytes: the trainable overlay only — the shared base
+    /// is charged once to `WeightBytesShared`, not per adapter.
+    pub fn adapter_bytes(&self) -> usize {
+        self.trainable.iter().map(Value::bytes).sum()
+    }
+}
+
+/// Mutable training-only state: AdamW moments (sorted-spec order,
+/// matching the weights they track) and the ABC ctx store. A `Trainer`
+/// owns exactly one; inference paths never see it.
+#[derive(Debug)]
+pub struct TrainState {
+    pub m: Vec<Value>,
+    pub v: Vec<Value>,
+    pub ctx: CtxStore,
+}
+
+impl TrainState {
+    /// Zeroed moments for `specs` + a ctx store with `mem_budget` bytes
+    /// (0 = unlimited).
+    pub fn new(specs: &[TensorSpec], mem_budget: u64) -> TrainState {
+        let zeros: Vec<Value> =
+            specs.iter().map(Value::zeros_like_spec).collect();
+        TrainState { m: zeros.clone(), v: zeros,
+                     ctx: CtxStore::new(mem_budget) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::DType;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "a.w".into(), shape: vec![2, 2],
+                         dtype: DType::F32 },
+            TensorSpec { name: "b.w".into(), shape: vec![3],
+                         dtype: DType::F32 },
+        ]
+    }
+
+    fn values() -> Vec<Value> {
+        vec![
+            Value::F32 { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] },
+            Value::F32 { shape: vec![3], data: vec![5.0, 6.0, 7.0] },
+        ]
+    }
+
+    #[test]
+    fn registry_and_accessors() {
+        let ws = WeightStore::from_values(specs(), values()).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.total_bytes(), (4 + 3) * 4);
+        let id = ws.id("b.w").unwrap();
+        assert_eq!(ws.spec(id).name, "b.w");
+        assert_eq!(ws.slab(id), &[5.0, 6.0, 7.0]);
+        assert_eq!(ws.f("a.w").unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(ws.id("nope").is_none());
+        assert!(ws.f("nope").is_err());
+        let names: Vec<&str> =
+            ws.iter().map(|(s, _)| s.name.as_str()).collect();
+        assert_eq!(names, vec!["a.w", "b.w"]);
+    }
+
+    #[test]
+    fn arity_and_spec_mismatches_rejected() {
+        assert!(WeightStore::from_values(specs(), values()[..1].to_vec())
+            .is_err());
+        let mut bad = values();
+        bad[1] = Value::F32 { shape: vec![4], data: vec![0.0; 4] };
+        assert!(WeightStore::from_values(specs(), bad).is_err());
+    }
+
+    #[test]
+    fn sharing_is_by_pointer_and_freezes_slabs() {
+        let mut ws = WeightStore::from_values(specs(), values()).unwrap();
+        let id = ws.id("a.w").unwrap();
+        // sole owner: in-place mutation works
+        ws.slab_mut(id).unwrap()[0] = 9.0;
+        assert_eq!(ws.slab(id)[0], 9.0);
+        // share: pointer-identical slabs, both handles frozen
+        let other = ws.share();
+        assert!(Arc::ptr_eq(ws.slab_arc(id), other.slab_arc(id)));
+        assert!(ws.slab_mut(id).is_err(), "shared slab must freeze");
+        drop(other);
+        // sole owner again: thaws
+        ws.slab_mut(id).unwrap()[0] = 11.0;
+        assert_eq!(ws.slab(id)[0], 11.0);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let ws = WeightStore::from_values(specs(), values()).unwrap();
+        let mut blob = Vec::new();
+        for (_, d) in ws.iter() {
+            for x in d {
+                blob.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let back = WeightStore::from_le_bytes(specs(), &blob).unwrap();
+        for ((_, a), (_, b)) in ws.iter().zip(back.iter()) {
+            assert_eq!(a, b);
+        }
+        assert!(WeightStore::from_le_bytes(specs(), &blob[..4]).is_err());
+    }
+
+    #[test]
+    fn two_adapter_sets_share_one_base() {
+        let ws = WeightStore::from_values(specs(), values()).unwrap();
+        let aspecs = vec![TensorSpec { name: "a.w.lora_a".into(),
+                                       shape: vec![2, 2],
+                                       dtype: DType::F32 }];
+        let mk = || -> Vec<Value> {
+            vec![Value::F32 { shape: vec![2, 2], data: vec![0.0; 4] }]
+        };
+        let t0 = AdapterSet::new(&ws, aspecs.clone(), mk()).unwrap();
+        let t1 = AdapterSet::new(&ws, aspecs, mk()).unwrap();
+        // the acceptance assertion: per-tenant sets, one frozen base
+        for id in 0..ws.len() {
+            assert!(Arc::ptr_eq(t0.base().slab_arc(ParamId(id)),
+                                t1.base().slab_arc(ParamId(id))));
+        }
+        assert_eq!(t0.adapter_bytes(), 16);
+        // adapters are independent per tenant
+        assert_eq!(t0.trainable().len(), 1);
+    }
+
+    #[test]
+    fn train_state_moments_match_specs() {
+        let st = TrainState::new(&specs(), 0);
+        assert_eq!(st.m.len(), 2);
+        assert_eq!(st.v[1].numel(), 3);
+        assert_eq!(st.ctx.stats().live_bytes, 0);
+    }
+}

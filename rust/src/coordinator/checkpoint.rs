@@ -1,12 +1,18 @@
 //! Checkpointing: params + optimizer state as raw-f32 blobs with a JSON
 //! header (same byte format as aot.py's init blobs, so a checkpoint can
 //! seed any tool in the repo).
+//!
+//! The parameter blob loads *directly* into `WeightStore` slabs
+//! (`WeightStore::from_le_bytes`) — bytes decode once into the `Arc`
+//! allocations, with no intermediate `Vec<Value>` layer. Optimizer
+//! moments stay `Value`s: they are `TrainState` material, never shared.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::WeightStore;
 use crate::runtime::manifest::TensorSpec;
 use crate::runtime::value::Value;
 use crate::util::json::Json;
@@ -16,7 +22,7 @@ pub struct Checkpoint {
     pub step: usize,
     pub preset: String,
     pub variant: String,
-    pub params: Vec<Value>,
+    pub weights: WeightStore,
     pub m: Vec<Value>,
     pub v: Vec<Value>,
 }
@@ -25,6 +31,17 @@ fn write_f32_blob(values: &[Value], path: &Path) -> Result<()> {
     let mut bytes = Vec::new();
     for v in values {
         for x in v.as_f32()? {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+fn write_store_blob(weights: &WeightStore, path: &Path) -> Result<()> {
+    let mut bytes = Vec::with_capacity(weights.total_bytes());
+    for (_, d) in weights.iter() {
+        for x in d {
             bytes.extend_from_slice(&x.to_le_bytes());
         }
     }
@@ -54,12 +71,14 @@ fn read_f32_blob(specs: &[TensorSpec], path: &Path) -> Result<Vec<Value>> {
 }
 
 impl Checkpoint {
-    /// Writes `dir/ckpt_<step>.json` + three blobs alongside.
+    /// Writes `dir/ckpt_<step>.json` + three blobs alongside. The
+    /// param blob streams straight from the store's slabs.
     pub fn save(&self, dir: &str) -> Result<String> {
         std::fs::create_dir_all(dir)?;
         let base = format!("ckpt_{:06}", self.step);
         let dirp = Path::new(dir);
-        write_f32_blob(&self.params, &dirp.join(format!("{base}.params.bin")))?;
+        write_store_blob(&self.weights,
+                         &dirp.join(format!("{base}.params.bin")))?;
         write_f32_blob(&self.m, &dirp.join(format!("{base}.m.bin")))?;
         write_f32_blob(&self.v, &dirp.join(format!("{base}.v.bin")))?;
         let mut hdr = BTreeMap::new();
@@ -71,7 +90,8 @@ impl Checkpoint {
         Ok(hdr_path.to_string_lossy().into_owned())
     }
 
-    /// Load from a header path written by `save`.
+    /// Load from a header path written by `save`. The parameter bytes
+    /// decode once, directly into `WeightStore` slabs.
     pub fn load(header_path: &str, param_specs: &[TensorSpec]) -> Result<Checkpoint> {
         let text = std::fs::read_to_string(header_path)?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -79,11 +99,14 @@ impl Checkpoint {
         let preset = j.get("preset").and_then(Json::as_str).context("preset")?;
         let variant = j.get("variant").and_then(Json::as_str).context("variant")?;
         let base = header_path.strip_suffix(".json").context("header name")?;
+        let pbytes = std::fs::read(format!("{base}.params.bin"))
+            .with_context(|| format!("reading {base}.params.bin"))?;
         Ok(Checkpoint {
             step,
             preset: preset.into(),
             variant: variant.into(),
-            params: read_f32_blob(param_specs, Path::new(&format!("{base}.params.bin")))?,
+            weights: WeightStore::from_le_bytes(param_specs.to_vec(),
+                                                &pbytes)?,
             m: read_f32_blob(param_specs, Path::new(&format!("{base}.m.bin")))?,
             v: read_f32_blob(param_specs, Path::new(&format!("{base}.v.bin")))?,
         })
@@ -121,6 +144,10 @@ mod tests {
         ]
     }
 
+    fn store(offset: f32) -> WeightStore {
+        WeightStore::from_values(specs(), values(offset)).unwrap()
+    }
+
     #[test]
     fn roundtrip() {
         let dir = std::env::temp_dir().join("hot_ckpt_test");
@@ -130,7 +157,7 @@ mod tests {
             step: 42,
             preset: "small".into(),
             variant: "hot".into(),
-            params: values(0.5),
+            weights: store(0.5),
             m: values(1.5),
             v: values(2.5),
         };
@@ -138,8 +165,9 @@ mod tests {
         let back = Checkpoint::load(&hdr, &specs()).unwrap();
         assert_eq!(back.step, 42);
         assert_eq!(back.preset, "small");
-        assert_eq!(back.params[0].as_f32().unwrap(),
-                   ck.params[0].as_f32().unwrap());
+        for ((_, a), (_, b)) in ck.weights.iter().zip(back.weights.iter()) {
+            assert_eq!(a, b);
+        }
         assert_eq!(back.v[1].as_f32().unwrap(), ck.v[1].as_f32().unwrap());
     }
 
@@ -153,7 +181,7 @@ mod tests {
                 step,
                 preset: "p".into(),
                 variant: "hot".into(),
-                params: values(0.0),
+                weights: store(0.0),
                 m: values(0.0),
                 v: values(0.0),
             }
@@ -172,7 +200,7 @@ mod tests {
             step: 1,
             preset: "p".into(),
             variant: "hot".into(),
-            params: values(0.0),
+            weights: store(0.0),
             m: values(0.0),
             v: values(0.0),
         };

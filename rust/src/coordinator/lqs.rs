@@ -4,6 +4,10 @@
 //! the per-layer MSE statistics, applies the paper's 50%-difference rule,
 //! and hands the trainer its per-layer {0,1} mask. Also surfaces the
 //! Fig-4 (path error) and Fig-6/9 (outlier) diagnostics.
+//!
+//! Calibration reads weights but never writes them: the backend's
+//! `calib_step` takes the trainer's `WeightStore` by shared reference,
+//! so calibrating cannot perturb a store that serving sessions share.
 
 use anyhow::Result;
 

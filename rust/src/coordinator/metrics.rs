@@ -15,6 +15,10 @@ pub struct StepRecord {
     pub ctx_peak_bytes: u64,
     /// fp32-equivalent / stored bytes so far (1.0 when nothing stored)
     pub ctx_compression: f64,
+    /// bytes of frozen base weights behind `Arc` slabs (WeightStore)
+    pub weight_bytes_shared: u64,
+    /// bytes of per-tenant trainable overlay (AdapterSet; 0 outside LoRA)
+    pub adapter_bytes: u64,
     /// total nanoseconds attributed to spans this step (0 when obs off)
     pub prof_span_ns: u64,
     /// FLOPs executed this step, summed across kernel tiers (obs counters)
@@ -99,13 +103,14 @@ impl MetricsLog {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "step,loss,acc,lr,step_time_s,ctx_live_bytes,ctx_peak_bytes,\
-             ctx_compression,prof_span_ns,prof_flops,prof_bytes_quant,\
-             quant_top\n");
+             ctx_compression,weight_bytes_shared,adapter_bytes,\
+             prof_span_ns,prof_flops,prof_bytes_quant,quant_top\n");
         for r in &self.records {
-            s.push_str(&format!("{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            s.push_str(&format!("{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                                 r.step, r.loss, r.acc, r.lr, r.step_time_s,
                                 r.ctx_live_bytes, r.ctx_peak_bytes,
-                                r.ctx_compression, r.prof_span_ns,
+                                r.ctx_compression, r.weight_bytes_shared,
+                                r.adapter_bytes, r.prof_span_ns,
                                 r.prof_flops, r.prof_bytes_quant,
                                 r.quant_top));
         }
@@ -137,7 +142,8 @@ mod tests {
     fn rec(step: usize, loss: f32, t: f64) -> StepRecord {
         StepRecord { step, loss, acc: 0.5, lr: 1e-3, step_time_s: t,
                      ctx_live_bytes: 0, ctx_peak_bytes: 0,
-                     ctx_compression: 1.0, prof_span_ns: 0, prof_flops: 0,
+                     ctx_compression: 1.0, weight_bytes_shared: 0,
+                     adapter_bytes: 0, prof_span_ns: 0, prof_flops: 0,
                      prof_bytes_quant: 0, quant_top: String::new() }
     }
 
@@ -214,14 +220,18 @@ mod tests {
         let csv = m.to_csv();
         assert!(csv.starts_with("step,loss"));
         assert!(csv.contains("ctx_peak_bytes"));
+        assert!(csv.contains("weight_bytes_shared")
+                && csv.contains("adapter_bytes"));
         assert!(csv.contains("prof_flops") && csv.contains("quant_top"));
-        assert!(csv.contains("0,1.5,0.5,0.001,0.01,0,0,1"));
+        assert!(csv.contains("0,1.5,0.5,0.001,0.01,0,0,1,0,0"));
     }
 
     #[test]
     fn csv_prof_columns_round_trip() {
         let mut m = MetricsLog::new();
         let mut r = rec(0, 1.5, 0.01);
+        r.weight_bytes_shared = 4096;
+        r.adapter_bytes = 128;
         r.prof_span_ns = 123;
         r.prof_flops = 456;
         r.prof_bytes_quant = 789;
@@ -229,7 +239,7 @@ mod tests {
         m.push(r);
         let csv = m.to_csv();
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",123,456,789,head:1.0e-2;embed:5.0e-3"),
+        assert!(row.ends_with(",4096,128,123,456,789,head:1.0e-2;embed:5.0e-3"),
                 "{row}");
         // same number of cells in header and rows
         let ncols = csv.lines().next().unwrap().split(',').count();

@@ -9,16 +9,22 @@
 //!                microbatch, host-side summation, one opt call)
 //!
 //! plus LQS calibration before training and LoRA fine-tuning state.
+//!
+//! State ownership (DESIGN.md §Model state ownership): a `Trainer` holds
+//! exactly one `WeightStore` (the sole unshared handle, so in-place
+//! AdamW works) plus one `TrainState` (moments + ctx). Checkpointing
+//! `share()`s the store for the duration of the save — no slab clones
+//! in steady state. A `LoraTrainer` holds an `AdapterSet` over a shared
+//! frozen base instead.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::Executor;
+use crate::backend::{AdapterSet, Executor, TrainState, WeightStore};
 use crate::config::RunConfig;
 use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::ctx::CtxStore;
 use crate::coordinator::lqs::CalibReport;
 use crate::coordinator::metrics::{MetricsLog, StepRecord};
 use crate::data::{LmDataset, VisionDataset};
@@ -50,12 +56,13 @@ pub struct Trainer {
     pub rt: Arc<dyn Executor>,
     pub cfg: RunConfig,
     pub preset: Preset,
-    pub params: Vec<Value>,
-    pub m: Vec<Value>,
-    pub v: Vec<Value>,
+    /// Base weights — the training loop's single, unshared store; AdamW
+    /// mutates its slabs in place via the backend's `opt_step`.
+    pub weights: WeightStore,
+    /// Training-only state: AdamW moments + the ABC ctx store.
+    pub state: TrainState,
     pub lqs_mask: Vec<f32>,
     pub metrics: MetricsLog,
-    pub ctx: CtxStore,
     pub data: DataSource,
     pub step: usize,
     /// Execute a specific train-step key instead of the
@@ -85,12 +92,8 @@ fn prof_fields(p: Option<&crate::obs::StepProfile>)
 impl Trainer {
     pub fn new(rt: Arc<dyn Executor>, cfg: RunConfig) -> Result<Trainer> {
         let preset = rt.preset(&cfg.preset)?;
-        let params = rt.init_params(&cfg.preset)?;
-        let zeros: Vec<Value> = preset
-            .params
-            .iter()
-            .map(Value::zeros_like_spec)
-            .collect();
+        let weights = rt.init_store(&cfg.preset)?;
+        let state = TrainState::new(&preset.params, cfg.mem_budget);
         let data = match preset.model.arch.as_str() {
             "lm" => DataSource::Lm(LmDataset::new(preset.model.seq,
                                                   preset.model.in_dim, cfg.seed)),
@@ -102,12 +105,10 @@ impl Trainer {
         let nq = preset.qlinears.len();
         Ok(Trainer {
             rt,
-            ctx: CtxStore::new(cfg.mem_budget),
             cfg,
             lqs_mask: vec![0.0; nq],
-            params,
-            m: zeros.clone(),
-            v: zeros,
+            weights,
+            state,
             metrics: MetricsLog::new(),
             data,
             preset,
@@ -140,7 +141,7 @@ impl Trainer {
         let mut per_batch = Vec::new();
         for b in 0..self.cfg.calib_batches {
             let (x, y) = self.data.batch(2, b as u64, self.batch_size());
-            per_batch.push(self.rt.calib_step(&key, &self.params, &x, &y)?);
+            per_batch.push(self.rt.calib_step(&key, &self.weights, &x, &y)?);
         }
         let report = CalibReport::from_batches(&self.preset.qlinears,
                                                &per_batch,
@@ -169,35 +170,31 @@ impl Trainer {
     // step modes
     // ------------------------------------------------------------------
 
-    /// One fused train step; returns (loss, acc).
+    /// One fused train step; weights and moments update in place.
     pub fn fused_step(&mut self, x: Value, y: Value) -> Result<(f32, f32)> {
-        let out = self.rt.train_step(
-            &self.train_key(), &self.params, &self.m, &self.v,
+        self.rt.train_step(
+            &self.train_key(), &mut self.weights, &mut self.state,
             self.step as f32 + 1.0, self.cfg.lr_at(self.step),
-            &self.lqs_mask, &x, &y)?;
-        self.params = out.params;
-        self.m = out.m;
-        self.v = out.v;
-        Ok((out.loss, out.acc))
+            &self.lqs_mask, &x, &y)
     }
 
     /// Split mode: fwd -> ctx store -> bwd -> opt. Exercises ABC across
-    /// the backend boundary; the compressed buffers live in `self.ctx`
-    /// between the calls.
+    /// the backend boundary; the compressed buffers live in
+    /// `self.state.ctx` between the calls.
     pub fn split_step(&mut self, x: Value, y: Value) -> Result<(f32, f32)> {
         let fwd_key = format!("fwd_{}_{}", self.cfg.variant, self.cfg.preset);
         let bwd_key = format!("bwd_{}_{}", self.cfg.variant, self.cfg.preset);
         let opt_key = format!("opt_{}", self.cfg.preset);
 
-        let fwd = self.rt.forward_step(&fwd_key, &self.params,
+        let fwd = self.rt.forward_step(&fwd_key, &self.weights,
                                        &self.lqs_mask, &x, &y)?;
         let mb = self.step as u64;
-        self.ctx.put(mb, fwd.ctx, &fwd.ctx_specs)?;
+        self.state.ctx.put(mb, fwd.ctx, &fwd.ctx_specs)?;
 
         // ... in a real pipeline other microbatches' forwards would run
         // here while ctx is held; take it back for the backward:
-        let ctx_vals = self.ctx.take(mb)?;
-        let grads = self.rt.backward_step(&bwd_key, &self.params,
+        let ctx_vals = self.state.ctx.take(mb)?;
+        let grads = self.rt.backward_step(&bwd_key, &self.weights,
                                           &self.lqs_mask, &x, ctx_vals)?;
 
         self.apply_opt(&opt_key, grads)?;
@@ -215,13 +212,13 @@ impl Trainer {
             let (x, y) = self.data.batch(
                 0, base_index * self.cfg.accum as u64 + k as u64,
                 self.batch_size());
-            let out = self.rt.grad_step(&grad_key, &self.params,
+            let out = self.rt.grad_step(&grad_key, &self.weights,
                                         &self.lqs_mask, &x, &y)?;
             loss_s += out.loss;
             acc_s += out.acc;
-            if out.grads.len() != self.params.len() {
+            if out.grads.len() != self.weights.len() {
                 bail!("grad step arity {} != {}", out.grads.len(),
-                      self.params.len());
+                      self.weights.len());
             }
             match &mut sum {
                 None => sum = Some(out.grads),
@@ -252,13 +249,9 @@ impl Trainer {
     }
 
     fn apply_opt(&mut self, opt_key: &str, grads: Vec<Value>) -> Result<()> {
-        let (p, m, v) = self.rt.opt_step(
-            opt_key, &self.params, &grads, &self.m, &self.v,
-            self.step as f32 + 1.0, self.cfg.lr_at(self.step))?;
-        self.params = p;
-        self.m = m;
-        self.v = v;
-        Ok(())
+        self.rt.opt_step(
+            opt_key, &mut self.weights, &grads, &mut self.state,
+            self.step as f32 + 1.0, self.cfg.lr_at(self.step))
     }
 
     // ------------------------------------------------------------------
@@ -302,9 +295,11 @@ impl Trainer {
             acc,
             lr: self.cfg.lr_at(self.step),
             step_time_s: t0.elapsed().as_secs_f64(),
-            ctx_live_bytes: self.ctx.stats().live_bytes,
-            ctx_peak_bytes: self.ctx.stats().peak_bytes,
-            ctx_compression: self.ctx.compression_ratio(),
+            ctx_live_bytes: self.state.ctx.stats().live_bytes,
+            ctx_peak_bytes: self.state.ctx.stats().peak_bytes,
+            ctx_compression: self.state.ctx.compression_ratio(),
+            weight_bytes_shared: self.weights.total_bytes() as u64,
+            adapter_bytes: 0,
             prof_span_ns,
             prof_flops,
             prof_bytes_quant,
@@ -320,13 +315,15 @@ impl Trainer {
         crate::coordinator::lqs::QuantTelemetry::from_step(&self.last_quant)
     }
 
-    /// Mean (loss, acc) over `n` eval batches (FP forward).
+    /// Mean (loss, acc) over `n` eval batches. Routes through the
+    /// backend's ctx-free inference walk — nothing is saved or
+    /// quantized for backward (pinned by the obs-counter test).
     pub fn eval(&self, n: usize) -> Result<(f32, f32)> {
         let key = format!("eval_{}", self.cfg.preset);
         let (mut ls, mut as_) = (0.0f32, 0.0f32);
         for b in 0..n {
             let (x, y) = self.data.batch(1, b as u64, self.batch_size());
-            let (l, a) = self.rt.eval_step(&key, &self.params, &x, &y)?;
+            let (l, a) = self.rt.eval_step(&key, &self.weights, &x, &y)?;
             ls += l;
             as_ += a;
         }
@@ -359,13 +356,16 @@ impl Trainer {
             }
             if let Some(dir) = self.cfg.checkpoint_dir.clone() {
                 if self.step == self.cfg.steps {
+                    // share() freezes the slabs only for the lifetime of
+                    // this block — the extra handle drops after the save,
+                    // and no weight bytes are cloned
                     let ck = Checkpoint {
                         step: self.step,
                         preset: self.cfg.preset.clone(),
                         variant: self.cfg.variant.clone(),
-                        params: self.params.clone(),
-                        m: self.m.clone(),
-                        v: self.v.clone(),
+                        weights: self.weights.share(),
+                        m: self.state.m.clone(),
+                        v: self.state.v.clone(),
                     };
                     let p = ck.save(&dir)?;
                     crate::info!("checkpoint -> {p}");
@@ -387,9 +387,9 @@ impl Trainer {
             bail!("checkpoint preset {} != configured {}", ck.preset,
                   self.cfg.preset);
         }
-        self.params = ck.params;
-        self.m = ck.m;
-        self.v = ck.v;
+        self.weights = ck.weights;
+        self.state.m = ck.m;
+        self.state.v = ck.v;
         self.step = ck.step;
         Ok(())
     }
@@ -403,10 +403,12 @@ pub struct LoraTrainer {
     pub rt: Arc<dyn Executor>,
     pub cfg: RunConfig,
     pub key: String,
-    pub base: Vec<Value>,
-    pub trainable: Vec<Value>,
-    pub m: Vec<Value>,
-    pub v: Vec<Value>,
+    /// This tenant's trainable overlay + a shared handle to the frozen
+    /// base weights (`adapters.base()`).
+    pub adapters: AdapterSet,
+    /// AdamW moments for the trainable set (the ctx store is unused —
+    /// LoRA steps are fused).
+    pub state: TrainState,
     pub lqs_mask: Vec<f32>,
     pub metrics: MetricsLog,
     pub data: VisionDataset,
@@ -422,15 +424,9 @@ impl LoraTrainer {
     pub fn new(rt: Arc<dyn Executor>, cfg: RunConfig, key: &str) -> Result<Self> {
         let meta = rt.lora_meta(key)?;
         let preset = rt.preset(&meta.preset)?;
-        let base = rt.init_params(&meta.preset)?;
+        let base = rt.init_store(&meta.preset)?;
         // trainable init: lora_a ~ N(0, 1/r), lora_b = 0, embed/head copied
         let mut rng = crate::util::prng::Pcg32::seeded(cfg.seed ^ 0x10ae);
-        let by_name: std::collections::BTreeMap<&str, &Value> = preset
-            .params
-            .iter()
-            .map(|s| s.name.as_str())
-            .zip(base.iter())
-            .collect();
         let trainable: Vec<Value> = meta
             .trainable
             .iter()
@@ -439,28 +435,28 @@ impl LoraTrainer {
                     let r = s.shape[0] as f32;
                     let mut data = vec![0.0f32; s.numel()];
                     rng.fill_normal(&mut data, 0.0, 1.0 / r);
-                    Value::F32 { shape: s.shape.clone(), data }
+                    Ok(Value::F32 { shape: s.shape.clone(), data })
                 } else if s.name.ends_with(".lora_b") {
-                    Value::zeros_like_spec(s)
+                    Ok(Value::zeros_like_spec(s))
                 } else {
-                    (*by_name.get(s.name.as_str())
-                        .unwrap_or_else(|| panic!("no base param {}", s.name)))
-                    .clone()
+                    // full-rank trainable (embed/head): seeded from the
+                    // frozen base by name
+                    Ok(Value::F32 { shape: s.shape.clone(),
+                                    data: base.f(&s.name)?.to_vec() })
                 }
             })
-            .collect();
-        let zeros: Vec<Value> = meta.trainable.iter()
-            .map(Value::zeros_like_spec).collect();
+            .collect::<Result<_>>()?;
+        let adapters = AdapterSet::new(&base, meta.trainable.clone(),
+                                       trainable)?;
+        let state = TrainState::new(&meta.trainable, 0);
         let data = VisionDataset::new(preset.model.seq, preset.model.in_dim,
                                       preset.model.n_classes, cfg.seed);
         let batch = meta.batch.unwrap_or(cfg.batch).max(1);
         Ok(LoraTrainer {
             rt,
             key: key.to_string(),
-            base,
-            trainable,
-            m: zeros.clone(),
-            v: zeros,
+            adapters,
+            state,
             lqs_mask: vec![0.0; preset.qlinears.len()],
             metrics: MetricsLog::new(),
             data,
@@ -474,17 +470,13 @@ impl LoraTrainer {
 
     pub fn step_once(&mut self) -> Result<(f32, f32)> {
         let t0 = Instant::now();
-        let out = {
+        let (loss, acc) = {
             let _sp = crate::obs::span(crate::obs::Span::TrainStep);
             let (x, y) = self.data.batch(0, self.step as u64, self.batch);
-            let out = self.rt.lora_step(
-                &self.key, &self.base, &self.trainable, &self.m, &self.v,
+            self.rt.lora_step(
+                &self.key, &mut self.adapters, &mut self.state,
                 self.step as f32 + 1.0, self.cfg.lr_at(self.step),
-                &self.lqs_mask, &x, &y)?;
-            self.trainable = out.params;
-            self.m = out.m;
-            self.v = out.v;
-            out
+                &self.lqs_mask, &x, &y)?
         };
         let prof = crate::obs::enabled()
             .then(|| crate::obs::drain_step(self.keep_trace));
@@ -495,19 +487,21 @@ impl LoraTrainer {
         }
         self.metrics.push(StepRecord {
             step: self.step,
-            loss: out.loss,
-            acc: out.acc,
+            loss,
+            acc,
             lr: self.cfg.lr_at(self.step),
             step_time_s: t0.elapsed().as_secs_f64(),
             ctx_live_bytes: 0,
             ctx_peak_bytes: 0,
             ctx_compression: 1.0,
+            weight_bytes_shared: self.adapters.base().total_bytes() as u64,
+            adapter_bytes: self.adapters.adapter_bytes() as u64,
             prof_span_ns,
             prof_flops,
             prof_bytes_quant,
             quant_top,
         });
         self.step += 1;
-        Ok((out.loss, out.acc))
+        Ok((loss, acc))
     }
 }

@@ -4,6 +4,9 @@
 //!   train       run a training job (fused / split / accum modes)
 //!   calibrate   run LQS calibration only and print the report
 //!   eval        evaluate a checkpoint (or the init params)
+//!   infer       inference-only: load a checkpoint into a frozen
+//!               WeightStore and run batched logits (no TrainState,
+//!               no ctx writes, no quantization)
 //!   bench       run the statistical bench suites (kernels / e2e),
 //!               write schema-v2 BENCH_*.json, optionally --check
 //!               against committed baselines (nonzero exit on
@@ -34,6 +37,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("eval") => cmd_eval(&args),
+        Some("infer") => cmd_infer(&args),
         Some("bench") => cmd_bench(&args),
         Some("memory") => cmd_memory(&args),
         Some("latency") => cmd_latency(&args),
@@ -41,13 +45,15 @@ fn main() -> Result<()> {
         Some("runhlo") => cmd_runhlo(&args),
         _ => {
             eprintln!(
-                "usage: hot <train|calibrate|eval|bench|memory|latency|info> [--opts]\n\
+                "usage: hot <train|calibrate|eval|infer|bench|memory|latency|info> [--opts]\n\
                  common: --backend native|pjrt|auto --artifacts DIR\n\
                          --preset NAME --variant V --steps N --batch N\n\
                          --lr F --mode fused|split|accum --accum N\n\
                          --threads N --seed N --config run.json\n\
                          --trace-out trace.json (Chrome-trace; HOT_TRACE=1\n\
                          enables counters without the event dump)\n\
+                 infer:  hot infer CKPT.json | --resume CKPT.json |\n\
+                         --checkpoint-dir DIR (newest); --batches N\n\
                  bench:  --suite kernels|e2e|all --smoke --out DIR\n\
                          --check BASELINE_DIR --report report.md"
             );
@@ -132,8 +138,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("mean step time: {:.4}s ({:.2} steps/s)",
              tr.metrics.mean_step_time(), tr.metrics.throughput_steps_per_s());
     println!("ctx: peak {} B ({} B fp32-equivalent), compression {:.2}x",
-             tr.ctx.stats().peak_bytes, tr.ctx.stats().fp32_equiv_bytes,
-             tr.ctx.compression_ratio());
+             tr.state.ctx.stats().peak_bytes,
+             tr.state.ctx.stats().fp32_equiv_bytes,
+             tr.state.ctx.compression_ratio());
     if let Some(csv) = args.get("csv") {
         tr.metrics.save_csv(csv)?;
         println!("metrics -> {csv}");
@@ -182,6 +189,71 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     let (l, a) = tr.eval(args.usize_or("batches", 8))?;
     println!("eval: loss {l:.4} acc {a:.4}");
+    Ok(())
+}
+
+/// `hot infer`: the inference-only path. Loads a checkpoint straight
+/// into a frozen `WeightStore` (no optimizer moments, no ctx store) and
+/// runs batched logits through `Executor::infer` — the ctx-free forward
+/// walk. Checkpoint resolution: positional header path, `--resume`, or
+/// the newest header under `--checkpoint-dir`; with none of those it
+/// serves the backend's init weights.
+fn cmd_infer(args: &Args) -> Result<()> {
+    use hot::coordinator::{Checkpoint, DataSource};
+    use hot::data::{LmDataset, VisionDataset};
+    let cfg = run_config(args)?;
+    let rt = executor(args, &cfg)?;
+    let preset = rt.preset(&cfg.preset)?;
+    let key = format!("infer_{}", cfg.preset);
+    if !rt.supports(&key) {
+        bail!("backend {} has no inference path for preset {}",
+              rt.name(), cfg.preset);
+    }
+
+    let header = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.get("resume").map(String::from))
+        .or_else(|| cfg.checkpoint_dir.as_deref().and_then(Checkpoint::latest));
+    let weights = match header {
+        Some(h) => {
+            let ck = Checkpoint::load(&h, &preset.params)?;
+            if ck.preset != cfg.preset {
+                bail!("checkpoint preset {} != configured {}", ck.preset,
+                      cfg.preset);
+            }
+            hot::info!("weights <- {h} (step {})", ck.step);
+            ck.weights
+        }
+        None => {
+            hot::info!("no checkpoint given; serving init weights");
+            rt.init_store(&cfg.preset)?
+        }
+    };
+
+    let data = match preset.model.arch.as_str() {
+        "lm" => DataSource::Lm(LmDataset::new(preset.model.seq,
+                                              preset.model.in_dim, cfg.seed)),
+        _ => DataSource::Vision(VisionDataset::new(
+            preset.model.seq, preset.model.in_dim, preset.model.n_classes,
+            cfg.seed)),
+    };
+    let batches = args.usize_or("batches", 4);
+    let batch = rt.key_batch(&key).unwrap_or(cfg.batch).max(1);
+    let mut rows = 0usize;
+    for b in 0..batches {
+        let (x, _) = data.batch(1, b as u64, batch);
+        let logits = rt.infer(&key, &weights, &x)?;
+        let d = logits.as_f32()?;
+        if let Some(bad) = d.iter().find(|v| !v.is_finite()) {
+            bail!("non-finite logit {bad} in batch {b}");
+        }
+        rows += d.len() / logits.shape().last().copied().unwrap_or(1).max(1);
+    }
+    println!("infer: {batches} batches x {batch} ok \
+              ({rows} logit rows, all finite, {} weight bytes shared)",
+             weights.total_bytes());
     Ok(())
 }
 

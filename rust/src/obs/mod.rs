@@ -86,15 +86,22 @@ pub enum Counter {
     PoolSteals,
     /// worker condvar parks
     PoolParks,
+    /// frozen base-weight bytes held in `Arc`-shared `WeightStore` slabs
+    /// (charged once per store construction, not per step)
+    WeightBytesShared,
+    /// per-tenant trainable bytes held by `AdapterSet`s (LoRA A/B pairs
+    /// plus full-rank embed/head overrides)
+    AdapterBytes,
     /// events lost to a full ring (never blocks the hot path)
     EventsDropped,
 }
 
-pub const N_COUNTERS: usize = 12;
+pub const N_COUNTERS: usize = 14;
 pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "flops_scalar", "flops_avx2", "flops_neon", "bytes_quantized",
     "bytes_packed", "bytes_panels", "plan_hits", "plan_misses",
-    "arena_grows", "pool_steals", "pool_parks", "events_dropped",
+    "arena_grows", "pool_steals", "pool_parks", "weight_bytes_shared",
+    "adapter_bytes", "events_dropped",
 ];
 
 // ---------------------------------------------------------------------------

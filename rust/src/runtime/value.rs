@@ -120,6 +120,25 @@ impl Value {
         }
     }
 
+    /// Mutable f32 view — the in-place optimizer path (AdamW updates
+    /// moments and adapter tensors without reallocating them).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            v => bail!("expected f32 value, got {:?}", v.dtype()),
+        }
+    }
+
+    /// Consume the value into `(shape, data)` — the zero-copy handoff a
+    /// `WeightStore` uses to move freshly initialized parameters into
+    /// its `Arc<[f32]>` slabs without cloning the buffers.
+    pub fn into_f32(self) -> Result<(Vec<usize>, Vec<f32>)> {
+        match self {
+            Value::F32 { shape, data } => Ok((shape, data)),
+            v => bail!("expected f32 value, got {:?}", v.dtype()),
+        }
+    }
+
     pub fn as_i8(&self) -> Result<&[i8]> {
         match self {
             Value::I8 { data, .. } => Ok(data),

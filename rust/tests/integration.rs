@@ -63,6 +63,8 @@ fn native_suite() {
                  lora_trainer_learns_with_frozen_base_tiny));
     checks.push(("native_supports_every_table_family",
                  native_supports_every_table_family));
+    checks.push(("checkpoint_save_load_infer_bit_identity",
+                 checkpoint_save_load_infer_bit_identity));
     run_checks(rt, &checks);
 }
 
@@ -263,7 +265,7 @@ fn split_mode_matches_fused_statistically_and_fills_ctx(rt: Arc<dyn Executor>) {
                 ra.loss, rb.loss);
     }
     // ABC context flowed through the rust-side store
-    let stats = b.ctx.stats();
+    let stats = b.state.ctx.stats();
     assert_eq!(stats.allocs, 4);
     assert_eq!(stats.frees, 4);
     assert_eq!(stats.live_bytes, 0);
@@ -272,8 +274,8 @@ fn split_mode_matches_fused_statistically_and_fills_ctx(rt: Arc<dyn Executor>) {
     // the FP attention/gelu residuals (which HOT leaves uncompressed)
     // dominate, so the overall ratio is modest; the qlinear entries
     // themselves are 8x (asserted via split_fp comparison below).
-    assert!(b.ctx.compression_ratio() > 1.25,
-            "ratio {}", b.ctx.compression_ratio());
+    assert!(b.state.ctx.compression_ratio() > 1.25,
+            "ratio {}", b.state.ctx.compression_ratio());
 }
 
 fn split_fp_stores_bigger_ctx_than_hot(rt: Arc<dyn Executor>) {
@@ -281,8 +283,8 @@ fn split_fp_stores_bigger_ctx_than_hot(rt: Arc<dyn Executor>) {
     let mut fp_t = Trainer::new(rt, tiny_cfg("fp")).unwrap();
     hot_t.step_once(Mode::Split).unwrap();
     fp_t.step_once(Mode::Split).unwrap();
-    let hot_peak = hot_t.ctx.stats().peak_bytes;
-    let fp_peak = fp_t.ctx.stats().peak_bytes;
+    let hot_peak = hot_t.state.ctx.stats().peak_bytes;
+    let fp_peak = fp_t.state.ctx.stats().peak_bytes;
     assert!(hot_peak < fp_peak,
             "ABC must shrink the stored ctx: hot {hot_peak} vs fp {fp_peak}");
 }
@@ -336,8 +338,37 @@ fn checkpoint_roundtrip_through_trainer(rt: Arc<dyn Executor>) {
     let mut tr2 = Trainer::new(rt, cfg).unwrap();
     tr2.resume(&header).unwrap();
     assert_eq!(tr2.step, 3);
-    for (a, b) in tr.params.iter().zip(&tr2.params) {
-        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    for ((sa, a), (sb, b)) in tr.weights.iter().zip(tr2.weights.iter()) {
+        assert_eq!(sa.name, sb.name);
+        assert_eq!(a, b);
+    }
+}
+
+/// Satellite of the WeightStore refactor: the checkpoint bytes decode
+/// straight into `Arc` slabs, and serving from the loaded store must be
+/// bit-identical to serving from the live training store.
+fn checkpoint_save_load_infer_bit_identity(rt: Arc<dyn Executor>) {
+    let dir = std::env::temp_dir()
+        .join(format!("hot_int_infer_{}", rt.name()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = lm_cfg("hot");
+    cfg.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.steps = 2;
+    let mut tr = Trainer::new(rt.clone(), cfg).unwrap();
+    tr.train().unwrap();
+    let header = hot::coordinator::Checkpoint::latest(dir.to_str().unwrap())
+        .expect("ckpt written");
+    let ck = hot::coordinator::Checkpoint::load(&header, &tr.preset.params)
+        .unwrap();
+    let (x, _) = tr.data.batch(1, 0, 4);
+    let live = rt.infer("infer_lm_tiny", &tr.weights, &x).unwrap();
+    let loaded = rt.infer("infer_lm_tiny", &ck.weights, &x).unwrap();
+    assert_eq!(live.shape(), loaded.shape());
+    let (lv, ld) = (live.as_f32().unwrap(), loaded.as_f32().unwrap());
+    assert!(lv.iter().all(|v| v.is_finite()));
+    for (a, b) in lv.iter().zip(ld) {
+        assert_eq!(a.to_bits(), b.to_bits(),
+                   "save->load->infer must be bit-identical");
     }
 }
 
@@ -367,7 +398,7 @@ fn run_mode(rt: Arc<dyn Executor>, mut cfg: RunConfig, mode: Mode,
         let (loss, _) = tr.step_once(mode).unwrap();
         losses.push(loss);
     }
-    (losses, tr.ctx.stats().peak_bytes)
+    (losses, tr.state.ctx.stats().peak_bytes)
 }
 
 fn assert_learns(name: &str, losses: &[f32]) {
@@ -469,7 +500,7 @@ fn native_supports_every_table_family(rt: Arc<dyn Executor>) {
         "lora_hotboth_small", "train_gx_int_hla_tiny", "train_gw_hla_tiny",
         "train_hot_r4_tiny", "train_hot_lm_tiny", "train_hot_mlp_small",
         "train_hot_r2_tiny", "train_hot_r16_tiny", "train_hot_abc4_tiny",
-        "fwd_hot_abc4_lm_tiny",
+        "fwd_hot_abc4_lm_tiny", "infer_small", "infer_lm_tiny",
     ] {
         assert!(rt.supports(key), "native backend must support {key}");
     }
@@ -486,15 +517,17 @@ fn lora_learns(rt: Arc<dyn Executor>, key: &str, steps: usize, batch: usize) {
     cfg.batch = batch;
     cfg.warmup_steps = 2;
     let mut tr = LoraTrainer::new(rt, cfg, key).unwrap();
-    let base_before: Vec<f32> = tr.base[0].as_f32().unwrap().to_vec();
+    let (_, first_slab) = tr.adapters.base().iter().next().unwrap();
+    let base_before: Vec<f32> = first_slab.to_vec();
     let mut losses = Vec::new();
     for _ in 0..steps {
         let (loss, _) = tr.step_once().unwrap();
         losses.push(loss);
     }
     assert!(losses.iter().all(|l| l.is_finite()));
-    // base params never move; trainable did
-    assert_eq!(tr.base[0].as_f32().unwrap(), base_before.as_slice());
+    // the shared base never moves; only the adapter overlay trains
+    let (_, first_slab) = tr.adapters.base().iter().next().unwrap();
+    assert_eq!(first_slab, base_before.as_slice());
     assert!(*losses.last().unwrap() < losses[0] * 1.5);
 }
 

@@ -55,9 +55,9 @@ fn run(trace: bool) -> Run {
     }
     hot::obs::set_trace_enabled(false);
     let params = tr
-        .params
+        .weights
         .iter()
-        .map(|p| p.as_f32().unwrap().to_vec())
+        .map(|(_, d)| d.to_vec())
         .collect();
     let trace = std::mem::take(&mut tr.trace);
     Run { losses, params, trace, tr }
@@ -139,6 +139,42 @@ fn trace_is_invisible_to_training() {
              {:.0}, cost/call {:.1}ns, step {:.3}ms)",
             ratio * 100.0, events_per_step, per_pair * 1e9,
             step_time * 1e3);
+}
+
+/// Satellite of the inference-path refactor: `Trainer::eval` and
+/// `Executor::infer` route through the ctx-free forward walk, so they
+/// must not move the quantization meters at all — while a hot-variant
+/// training step demonstrably does. Also pins the WeightStore sharing
+/// meter charged at store construction.
+#[test]
+fn eval_and_infer_never_quantize() {
+    use hot::obs::{self, Counter};
+    let _knob = TRACE_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let was_on = obs::enabled();
+    obs::set_trace_enabled(true);
+
+    let rt: Arc<dyn Executor> = Arc::new(NativeBackend::with_threads(2));
+    let ws0 = obs::counter_total(Counter::WeightBytesShared);
+    let mut tr = Trainer::new(rt.clone(), cfg()).unwrap();
+    assert!(obs::counter_total(Counter::WeightBytesShared) > ws0,
+            "building the trainer's WeightStore must charge the meter");
+
+    let bq0 = obs::counter_total(Counter::BytesQuantized);
+    let bp0 = obs::counter_total(Counter::BytesPacked);
+    tr.eval(2).unwrap();
+    let (x, _) = tr.data.batch(1, 0, 8);
+    rt.infer("infer_tiny", &tr.weights, &x).unwrap();
+    assert_eq!(obs::counter_total(Counter::BytesQuantized), bq0,
+               "eval/infer must not quantize anything");
+    assert_eq!(obs::counter_total(Counter::BytesPacked), bp0,
+               "eval/infer must not pack ctx payloads");
+
+    // ...while a hot training step moves the same meter
+    tr.step_once(Mode::Fused).unwrap();
+    assert!(obs::counter_total(Counter::BytesQuantized) > bq0,
+            "a hot train step must quantize backward ctx");
+
+    obs::set_trace_enabled(was_on);
 }
 
 /// Bench-cell counter hygiene (regression test for the harness's
