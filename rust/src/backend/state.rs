@@ -177,6 +177,14 @@ impl WeightStore {
             .collect()
     }
 
+    /// Name of the first parameter containing a non-finite value, if
+    /// any — the resilience sentinel's weight guard.
+    pub fn first_non_finite(&self) -> Option<&str> {
+        self.iter()
+            .find(|(_, d)| d.iter().any(|x| !x.is_finite()))
+            .map(|(s, _)| s.name.as_str())
+    }
+
     /// Overwrite every slab from a returned value vector (the PJRT
     /// boundary's write-back after a device-side optimizer step).
     pub fn replace_from_values(&mut self, values: Vec<Value>) -> Result<()> {
@@ -261,6 +269,24 @@ impl TrainState {
             specs.iter().map(Value::zeros_like_spec).collect();
         TrainState { m: zeros.clone(), v: zeros,
                      ctx: CtxStore::new(mem_budget) }
+    }
+
+    /// Label of the first AdamW moment containing a non-finite value,
+    /// if any (`specs` names the tensors, in the moments' sorted-spec
+    /// order). A NaN gradient poisons `m` on the very step it appears,
+    /// so this is the sentinel's earliest divergence detector.
+    pub fn first_non_finite(&self, specs: &[TensorSpec]) -> Option<String> {
+        for (label, moments) in [("adamw m", &self.m), ("adamw v", &self.v)] {
+            for (i, mv) in moments.iter().enumerate() {
+                let Ok(d) = mv.as_f32() else { continue };
+                if d.iter().any(|x| !x.is_finite()) {
+                    let name = specs.get(i).map(|s| s.name.as_str())
+                        .unwrap_or("?");
+                    return Some(format!("{name} ({label})"));
+                }
+            }
+        }
+        None
     }
 }
 
@@ -370,5 +396,20 @@ mod tests {
         assert_eq!(st.m.len(), 2);
         assert_eq!(st.v[1].numel(), 3);
         assert_eq!(st.ctx.stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn non_finite_scans_name_the_tensor() {
+        let mut ws = WeightStore::from_values(specs(), values()).unwrap();
+        assert_eq!(ws.first_non_finite(), None);
+        let id = ws.id("b.w").unwrap();
+        ws.slab_mut(id).unwrap()[2] = f32::INFINITY;
+        assert_eq!(ws.first_non_finite(), Some("b.w"));
+
+        let mut st = TrainState::new(&specs(), 0);
+        assert_eq!(st.first_non_finite(&specs()), None);
+        st.v[0].as_f32_mut().unwrap()[3] = f32::NAN;
+        assert_eq!(st.first_non_finite(&specs()),
+                   Some("a.w (adamw v)".to_string()));
     }
 }

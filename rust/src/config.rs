@@ -32,6 +32,14 @@ pub struct RunConfig {
     pub checkpoint_dir: Option<String>,
     /// synthetic-vision noise level (task difficulty; default 0.5)
     pub data_noise: f64,
+    /// periodic checkpoint cadence in steps (0 = final step only)
+    pub checkpoint_every: usize,
+    /// retention: checkpoints kept besides the best-eval one
+    pub keep_last: usize,
+    /// numeric sentinels (finite loss/state, clip-rate watchdog)
+    pub sentinel: bool,
+    /// rollback budget before a sentinel trip aborts the run
+    pub max_rollbacks: usize,
 }
 
 impl Default for RunConfig {
@@ -53,6 +61,10 @@ impl Default for RunConfig {
             eval_every: 25,
             checkpoint_dir: None,
             data_noise: 0.5,
+            checkpoint_every: 0,
+            keep_last: 3,
+            sentinel: true,
+            max_rollbacks: 3,
         }
     }
 }
@@ -81,6 +93,14 @@ impl RunConfig {
                     c.checkpoint_dir = Some(v.as_str().context("checkpoint_dir")?.into())
                 }
                 "data_noise" => c.data_noise = v.as_f64().context("data_noise")?,
+                "checkpoint_every" => {
+                    c.checkpoint_every = v.as_usize().context("checkpoint_every")?
+                }
+                "keep_last" => c.keep_last = v.as_usize().context("keep_last")?,
+                "sentinel" => c.sentinel = v.as_bool().context("sentinel")?,
+                "max_rollbacks" => {
+                    c.max_rollbacks = v.as_usize().context("max_rollbacks")?
+                }
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -107,6 +127,9 @@ impl RunConfig {
         }
         if self.lr <= 0.0 {
             bail!("lr must be positive");
+        }
+        if self.keep_last == 0 {
+            bail!("keep_last must be >= 1");
         }
         Ok(())
     }

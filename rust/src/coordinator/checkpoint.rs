@@ -1,21 +1,30 @@
-//! Checkpointing: params + optimizer state as raw-f32 blobs with a JSON
-//! header (same byte format as aot.py's init blobs, so a checkpoint can
-//! seed any tool in the repo).
+//! Checkpointing: params + optimizer state as raw-f32 blobs with a
+//! signed JSON manifest (same blob byte format as aot.py's init blobs,
+//! so a checkpoint can seed any tool in the repo).
 //!
 //! The parameter blob loads *directly* into `WeightStore` slabs
 //! (`WeightStore::from_le_bytes`) — bytes decode once into the `Arc`
 //! allocations, with no intermediate `Vec<Value>` layer. Optimizer
 //! moments stay `Value`s: they are `TrainState` material, never shared.
+//!
+//! Crash safety (DESIGN.md §Resilience): every file goes through the
+//! atomic write protocol (tmp + fsync + rename), blobs land before the
+//! manifest, and the manifest carries per-blob and per-tensor CRC-32s
+//! plus a keyed signature — so a torn, truncated, bit-rotted, or
+//! shuffled checkpoint is detected with a typed reason instead of
+//! loading garbage into the weight slabs.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::backend::WeightStore;
+use crate::resilience::fault;
+use crate::resilience::manifest::{
+    write_atomic, BlobSum, CkptManifest, RejectReason, Schedule, CKPT_FORMAT,
+};
 use crate::runtime::manifest::TensorSpec;
 use crate::runtime::value::Value;
-use crate::util::json::Json;
 
 #[derive(Debug)]
 pub struct Checkpoint {
@@ -27,34 +36,42 @@ pub struct Checkpoint {
     pub v: Vec<Value>,
 }
 
-fn write_f32_blob(values: &[Value], path: &Path) -> Result<()> {
+/// Run context recorded in the manifest so `--resume` can replay the
+/// exact trajectory: data-PRNG cursor = (seed, step, accum), the LR
+/// schedule, the LQS selections, and the latest eval loss (retention's
+/// best-eval input). `Default` is for context-free saves (tools/tests).
+#[derive(Debug, Clone, Default)]
+pub struct SaveCtx {
+    pub seed: u64,
+    pub accum: usize,
+    pub schedule: Schedule,
+    pub lqs_mask: Vec<f32>,
+    pub eval_loss: Option<f64>,
+}
+
+fn values_bytes(values: &[Value]) -> Result<Vec<u8>> {
     let mut bytes = Vec::new();
     for v in values {
         for x in v.as_f32()? {
             bytes.extend_from_slice(&x.to_le_bytes());
         }
     }
-    std::fs::write(path, bytes)?;
-    Ok(())
+    Ok(bytes)
 }
 
-fn write_store_blob(weights: &WeightStore, path: &Path) -> Result<()> {
+fn store_bytes(weights: &WeightStore) -> Vec<u8> {
     let mut bytes = Vec::with_capacity(weights.total_bytes());
     for (_, d) in weights.iter() {
         for x in d {
             bytes.extend_from_slice(&x.to_le_bytes());
         }
     }
-    std::fs::write(path, bytes)?;
-    Ok(())
+    bytes
 }
 
-fn read_f32_blob(specs: &[TensorSpec], path: &Path) -> Result<Vec<Value>> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
-    let want: usize = specs.iter().map(|s| s.numel() * 4).sum();
-    if bytes.len() != want {
-        bail!("{path:?}: {} bytes, specs want {want}", bytes.len());
-    }
+/// Decode a verified blob into `Value`s (sorted-spec order). Lengths
+/// were already pinned by `BlobSum::verify`.
+fn decode_values(specs: &[TensorSpec], bytes: &[u8]) -> Vec<Value> {
     let mut out = Vec::with_capacity(specs.len());
     let mut off = 0;
     for s in specs {
@@ -67,52 +84,142 @@ fn read_f32_blob(specs: &[TensorSpec], path: &Path) -> Result<Vec<Value>> {
         off += 4 * n;
         out.push(Value::F32 { shape: s.shape.clone(), data });
     }
-    Ok(out)
+    out
 }
 
 impl Checkpoint {
-    /// Writes `dir/ckpt_<step>.json` + three blobs alongside. The
-    /// param blob streams straight from the store's slabs.
+    /// Context-free save (unit tests, tools): manifest carries zeros
+    /// for the run context. Training saves go through [`save_with`].
+    ///
+    /// [`save_with`]: Checkpoint::save_with
     pub fn save(&self, dir: &str) -> Result<String> {
-        std::fs::create_dir_all(dir)?;
+        self.save_with(dir, &SaveCtx::default())
+    }
+
+    /// Writes `dir/ckpt_<step>.json` + three blobs alongside, each via
+    /// the atomic write protocol, blobs first and the signed manifest
+    /// last — a crash at any point leaves either a complete checkpoint
+    /// or an unloadable torn one. The param blob streams straight from
+    /// the store's slabs.
+    pub fn save_with(&self, dir: &str, ctx: &SaveCtx) -> Result<String> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {dir}"))?;
         let base = format!("ckpt_{:06}", self.step);
         let dirp = Path::new(dir);
-        write_store_blob(&self.weights,
-                         &dirp.join(format!("{base}.params.bin")))?;
-        write_f32_blob(&self.m, &dirp.join(format!("{base}.m.bin")))?;
-        write_f32_blob(&self.v, &dirp.join(format!("{base}.v.bin")))?;
-        let mut hdr = BTreeMap::new();
-        hdr.insert("step".into(), Json::Num(self.step as f64));
-        hdr.insert("preset".into(), Json::Str(self.preset.clone()));
-        hdr.insert("variant".into(), Json::Str(self.variant.clone()));
+        let specs = self.weights.specs();
+
+        let blobs: Vec<(&str, String, Vec<u8>)> = vec![
+            ("params", format!("{base}.params.bin"),
+             store_bytes(&self.weights)),
+            ("m", format!("{base}.m.bin"), values_bytes(&self.m)?),
+            ("v", format!("{base}.v.bin"), values_bytes(&self.v)?),
+        ];
+        let man = CkptManifest {
+            format: CKPT_FORMAT,
+            step: self.step,
+            preset: self.preset.clone(),
+            variant: self.variant.clone(),
+            simd_tier: crate::kernels::active_tier().name().to_string(),
+            threads: crate::kernels::num_threads(),
+            seed: ctx.seed,
+            accum: ctx.accum,
+            schedule: ctx.schedule.clone(),
+            lqs_mask: ctx.lqs_mask.clone(),
+            eval_loss: ctx.eval_loss,
+            blobs: blobs
+                .iter()
+                .map(|(_, file, bytes)| BlobSum::of(file, specs, bytes))
+                .collect(),
+        };
+
+        // checksums above were taken from the true bytes; injected
+        // corruption lands *after*, modeling on-disk rot that the
+        // loader's CRC pass must catch
+        for (i, (kind, file, bytes)) in blobs.into_iter().enumerate() {
+            let mut bytes = bytes;
+            if let Some(desc) = fault::mutate_blob(kind, &mut bytes) {
+                crate::warn_!("{desc}");
+            }
+            write_atomic(&dirp.join(&file), &bytes, kind)?;
+            if i == 0 && fault::crash_between_blobs() {
+                bail!("simulated crash between blob writes (HOT_FAULT \
+                       crash-between-blobs): {base} left torn");
+            }
+        }
+        let mut text = man.to_signed_text().into_bytes();
+        if let Some(desc) = fault::mutate_blob("manifest", &mut text) {
+            crate::warn_!("{desc}");
+        }
         let hdr_path = dirp.join(format!("{base}.json"));
-        std::fs::write(&hdr_path, Json::Obj(hdr).to_string())?;
+        write_atomic(&hdr_path, &text, "manifest")?;
         Ok(hdr_path.to_string_lossy().into_owned())
     }
 
-    /// Load from a header path written by `save`. The parameter bytes
-    /// decode once, directly into `WeightStore` slabs.
-    pub fn load(header_path: &str, param_specs: &[TensorSpec]) -> Result<Checkpoint> {
-        let text = std::fs::read_to_string(header_path)?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let step = j.get("step").and_then(Json::as_usize).context("step")?;
-        let preset = j.get("preset").and_then(Json::as_str).context("preset")?;
-        let variant = j.get("variant").and_then(Json::as_str).context("variant")?;
-        let base = header_path.strip_suffix(".json").context("header name")?;
-        let pbytes = std::fs::read(format!("{base}.params.bin"))
-            .with_context(|| format!("reading {base}.params.bin"))?;
-        Ok(Checkpoint {
-            step,
-            preset: preset.into(),
-            variant: variant.into(),
-            weights: WeightStore::from_le_bytes(param_specs.to_vec(),
-                                                &pbytes)?,
-            m: read_f32_blob(param_specs, Path::new(&format!("{base}.m.bin")))?,
-            v: read_f32_blob(param_specs, Path::new(&format!("{base}.v.bin")))?,
-        })
+    /// Fully verified load: manifest signature, blob sizes, whole-blob
+    /// CRCs, per-tensor extent CRCs against the live `specs` — any
+    /// failure returns the typed [`RejectReason`] naming the offending
+    /// file or tensor. Returns the manifest too, so resume can restore
+    /// the data cursor / schedule / LQS selections it records.
+    pub fn load_verified(header_path: &str, specs: &[TensorSpec])
+                         -> Result<(Checkpoint, CkptManifest), RejectReason> {
+        let man = CkptManifest::read(header_path)?;
+        let dir = Path::new(header_path)
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_default();
+        let blob = |suffix: &str| {
+            man.blobs
+                .iter()
+                .find(|b| b.file.ends_with(suffix))
+                .ok_or_else(|| RejectReason::MissingField {
+                    path: header_path.to_string(),
+                    field: format!("blobs[*{suffix}]"),
+                })
+        };
+        let read = |sum: &BlobSum| -> Result<Vec<u8>, RejectReason> {
+            let p = dir.join(&sum.file);
+            let bytes =
+                std::fs::read(&p).map_err(|e| RejectReason::BlobIo {
+                    file: p.to_string_lossy().into_owned(),
+                    err: e.to_string(),
+                })?;
+            sum.verify(specs, &bytes)?;
+            Ok(bytes)
+        };
+        let pbytes = read(blob(".params.bin")?)?;
+        let mbytes = read(blob(".m.bin")?)?;
+        let vbytes = read(blob(".v.bin")?)?;
+        let weights = WeightStore::from_le_bytes(specs.to_vec(), &pbytes)
+            .map_err(|e| RejectReason::SpecMismatch {
+                detail: e.to_string(),
+            })?;
+        Ok((
+            Checkpoint {
+                step: man.step,
+                preset: man.preset.clone(),
+                variant: man.variant.clone(),
+                weights,
+                m: decode_values(specs, &mbytes),
+                v: decode_values(specs, &vbytes),
+            },
+            man,
+        ))
     }
 
-    /// Latest checkpoint header in a directory, if any.
+    /// Load from a header path written by `save`, with full
+    /// verification; errors name the offending file/tensor. The
+    /// parameter bytes decode once, directly into `WeightStore` slabs.
+    pub fn load(header_path: &str, param_specs: &[TensorSpec])
+                -> Result<Checkpoint> {
+        let (ck, _) = Self::load_verified(header_path, param_specs)
+            .map_err(anyhow::Error::new)
+            .with_context(|| format!("loading checkpoint {header_path}"))?;
+        Ok(ck)
+    }
+
+    /// Latest checkpoint header in a directory, if any. Purely
+    /// name-based; use `resilience::resume_latest_valid` to also walk
+    /// past corrupt or torn checkpoints.
     pub fn latest(dir: &str) -> Option<String> {
         let mut headers: Vec<String> = std::fs::read_dir(dir)
             .ok()?
@@ -128,6 +235,8 @@ impl Checkpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::resilience::fault::{self, FaultPlan};
+    use crate::resilience::store::resume_latest_valid;
     use crate::runtime::manifest::DType;
 
     fn specs() -> Vec<TensorSpec> {
@@ -148,19 +257,24 @@ mod tests {
         WeightStore::from_values(specs(), values(offset)).unwrap()
     }
 
+    fn ckpt(step: usize, offset: f32) -> Checkpoint {
+        Checkpoint {
+            step,
+            preset: "small".into(),
+            variant: "hot".into(),
+            weights: store(offset),
+            m: values(offset + 1.0),
+            v: values(offset + 2.0),
+        }
+    }
+
     #[test]
     fn roundtrip() {
+        let _g = fault::test_lock();
         let dir = std::env::temp_dir().join("hot_ckpt_test");
         let _ = std::fs::remove_dir_all(&dir);
         let dirs = dir.to_str().unwrap();
-        let ck = Checkpoint {
-            step: 42,
-            preset: "small".into(),
-            variant: "hot".into(),
-            weights: store(0.5),
-            m: values(1.5),
-            v: values(2.5),
-        };
+        let ck = ckpt(42, 0.5);
         let hdr = ck.save(dirs).unwrap();
         let back = Checkpoint::load(&hdr, &specs()).unwrap();
         assert_eq!(back.step, 42);
@@ -173,20 +287,12 @@ mod tests {
 
     #[test]
     fn latest_finds_newest() {
+        let _g = fault::test_lock();
         let dir = std::env::temp_dir().join("hot_ckpt_latest");
         let _ = std::fs::remove_dir_all(&dir);
         let dirs = dir.to_str().unwrap();
         for step in [5, 20, 10] {
-            Checkpoint {
-                step,
-                preset: "p".into(),
-                variant: "hot".into(),
-                weights: store(0.0),
-                m: values(0.0),
-                v: values(0.0),
-            }
-            .save(dirs)
-            .unwrap();
+            ckpt(step, 0.0).save(dirs).unwrap();
         }
         let latest = Checkpoint::latest(dirs).unwrap();
         assert!(latest.contains("ckpt_000020"), "{latest}");
@@ -194,19 +300,73 @@ mod tests {
 
     #[test]
     fn size_mismatch_rejected() {
+        let _g = fault::test_lock();
         let dir = std::env::temp_dir().join("hot_ckpt_bad");
         let _ = std::fs::remove_dir_all(&dir);
-        let ck = Checkpoint {
-            step: 1,
-            preset: "p".into(),
-            variant: "hot".into(),
-            weights: store(0.0),
-            m: values(0.0),
-            v: values(0.0),
-        };
-        let hdr = ck.save(dir.to_str().unwrap()).unwrap();
+        let hdr = ckpt(1, 0.0).save(dir.to_str().unwrap()).unwrap();
         let bad_specs = vec![TensorSpec { name: "a".into(), shape: vec![100],
                                           dtype: DType::F32 }];
-        assert!(Checkpoint::load(&hdr, &bad_specs).is_err());
+        let err = Checkpoint::load(&hdr, &bad_specs);
+        assert!(err.is_err());
+        // the verified path reports the typed reason
+        assert!(matches!(Checkpoint::load_verified(&hdr, &bad_specs),
+                         Err(RejectReason::SpecMismatch { .. })));
+    }
+
+    #[test]
+    fn corrupt_blob_rejected_with_crc_reason() {
+        let _g = fault::test_lock();
+        let dir = std::env::temp_dir().join("hot_ckpt_crc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let hdr = ckpt(3, 0.0).save(dir.to_str().unwrap()).unwrap();
+        let blob = hdr.replace(".json", ".m.bin");
+        let mut bytes = std::fs::read(&blob).unwrap();
+        bytes[5] ^= 0x01;
+        std::fs::write(&blob, &bytes).unwrap();
+        match Checkpoint::load_verified(&hdr, &specs()) {
+            Err(RejectReason::BlobCrc { file, .. }) => {
+                assert!(file.ends_with(".m.bin"), "{file}");
+            }
+            other => panic!("wanted BlobCrc, got {other:?}"),
+        }
+        // anyhow path names the file too
+        let msg = format!("{:#}", Checkpoint::load(&hdr, &specs())
+            .unwrap_err());
+        assert!(msg.contains(".m.bin"), "{msg}");
+    }
+
+    #[test]
+    fn crash_between_blobs_leaves_no_loadable_checkpoint() {
+        let _g = fault::test_lock();
+        let dir = std::env::temp_dir().join("hot_ckpt_crash");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_str().unwrap();
+        fault::arm(FaultPlan::CrashBetweenBlobs);
+        let err = ckpt(7, 0.0).save(dirs);
+        assert!(err.is_err(), "save must abort at the crash point");
+        assert!(Checkpoint::latest(dirs).is_none(), "no manifest on disk");
+        let scan = resume_latest_valid(dirs, &specs(), None);
+        assert!(scan.loaded.is_none());
+        assert!(matches!(scan.rejected[0].reason,
+                         RejectReason::ManifestMissing { step: 7 }));
+        // the fault fired once; the retry save is clean and loads
+        let hdr = ckpt(7, 0.0).save(dirs).unwrap();
+        assert!(Checkpoint::load(&hdr, &specs()).is_ok());
+        fault::disarm();
+    }
+
+    #[test]
+    fn tampered_manifest_rejected() {
+        let _g = fault::test_lock();
+        let dir = std::env::temp_dir().join("hot_ckpt_tamper");
+        let _ = std::fs::remove_dir_all(&dir);
+        let hdr = ckpt(2, 0.0).save(dir.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&hdr).unwrap();
+        // forge the step field without re-signing
+        let forged = text.replace("\"step\":2", "\"step\":9");
+        assert_ne!(forged, text);
+        std::fs::write(&hdr, forged).unwrap();
+        assert!(matches!(Checkpoint::load_verified(&hdr, &specs()),
+                         Err(RejectReason::BadSignature { .. })));
     }
 }

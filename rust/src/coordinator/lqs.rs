@@ -163,6 +163,21 @@ impl QuantTelemetry {
     }
 }
 
+/// The next-wider backward variant in the sentinel's quantizer
+/// escalation ladder (INT4 -> INT8 -> FP): `_abc4` configs widen to
+/// `_abc8`, any remaining quantized base falls back to full-precision
+/// `"fp"`, and `fp` itself has nowhere left to go (`None`).
+pub fn widen_variant(variant: &str) -> Option<String> {
+    if variant.contains("_abc4") {
+        return Some(variant.replace("_abc4", "_abc8"));
+    }
+    let base = variant.split('_').next().unwrap_or(variant);
+    if base != "fp" {
+        return Some("fp".to_string());
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +256,16 @@ mod tests {
         let refined = t.refine_mask(&names, &[0.0, 0.0, 1.0], 0.1);
         // l0 flipped per-token, l1 untouched, l2 keeps its calib choice
         assert_eq!(refined, vec![1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn widen_ladder() {
+        assert_eq!(widen_variant("hot_abc4").as_deref(), Some("hot_abc8"));
+        assert_eq!(widen_variant("hot_abc8").as_deref(), Some("fp"));
+        assert_eq!(widen_variant("hot").as_deref(), Some("fp"));
+        assert_eq!(widen_variant("lbp").as_deref(), Some("fp"));
+        assert_eq!(widen_variant("fp"), None);
+        assert_eq!(widen_variant("fp_abc4").as_deref(), Some("fp_abc8"));
     }
 
     #[test]

@@ -33,6 +33,10 @@ pub struct StepRecord {
 pub struct MetricsLog {
     pub records: Vec<StepRecord>,
     pub evals: Vec<(usize, f32, f32)>, // (step, loss, acc)
+    /// Out-of-band run events (sentinel trips, rollbacks, quantizer
+    /// widening) keyed by step. Kept off the CSV — its column set is a
+    /// stable interface — and surfaced in logs and abort reports.
+    pub notes: Vec<(usize, String)>,
 }
 
 impl MetricsLog {
@@ -46,6 +50,10 @@ impl MetricsLog {
 
     pub fn push_eval(&mut self, step: usize, loss: f32, acc: f32) {
         self.evals.push((step, loss, acc));
+    }
+
+    pub fn push_note(&mut self, step: usize, note: impl Into<String>) {
+        self.notes.push((step, note.into()));
     }
 
     pub fn last_loss(&self) -> Option<f32> {
@@ -244,6 +252,15 @@ mod tests {
         // same number of cells in header and rows
         let ncols = csv.lines().next().unwrap().split(',').count();
         assert_eq!(row.split(',').count(), ncols);
+    }
+
+    #[test]
+    fn notes_stay_off_the_csv() {
+        let mut m = MetricsLog::new();
+        m.push(rec(0, 1.5, 0.01));
+        m.push_note(0, "rollback to step 0");
+        assert_eq!(m.notes, vec![(0, "rollback to step 0".to_string())]);
+        assert!(!m.to_csv().contains("rollback"));
     }
 
     #[test]

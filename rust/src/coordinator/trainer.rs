@@ -24,10 +24,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::backend::{AdapterSet, Executor, TrainState, WeightStore};
 use crate::config::RunConfig;
-use crate::coordinator::checkpoint::Checkpoint;
-use crate::coordinator::lqs::CalibReport;
+use crate::coordinator::checkpoint::{Checkpoint, SaveCtx};
+use crate::coordinator::lqs::{widen_variant, CalibReport};
 use crate::coordinator::metrics::{MetricsLog, StepRecord};
 use crate::data::{LmDataset, VisionDataset};
+use crate::resilience::fault;
+use crate::resilience::manifest::Schedule;
+use crate::resilience::store::{resume_latest_valid, sweep_tmp, CkptStore};
+use crate::resilience::{Sentinel, SentinelCfg, Trip};
 use crate::runtime::value::Value;
 use crate::runtime::Preset;
 
@@ -75,6 +79,16 @@ pub struct Trainer {
     pub trace: Vec<crate::obs::TraceEvent>,
     /// Per-layer quantizer telemetry from the most recent step.
     pub last_quant: Vec<crate::obs::LayerQuant>,
+    /// Numeric sentinel + rollback/escalation state (DESIGN.md
+    /// §Resilience).
+    pub sentinel: Sentinel,
+    /// Retention manager for `cfg.checkpoint_dir`, when set.
+    pub store: Option<CkptStore>,
+    /// When true, `calibrate` keeps the current LQS mask instead of
+    /// re-deriving it — set after a resume (the manifest's mask wins)
+    /// and after a sentinel LQS fallback (recalibrating would clobber
+    /// the runtime widening).
+    pub mask_locked: bool,
 }
 
 /// Flatten an optional per-step profile into the StepRecord columns.
@@ -94,15 +108,15 @@ impl Trainer {
         let preset = rt.preset(&cfg.preset)?;
         let weights = rt.init_store(&cfg.preset)?;
         let state = TrainState::new(&preset.params, cfg.mem_budget);
-        let data = match preset.model.arch.as_str() {
-            "lm" => DataSource::Lm(LmDataset::new(preset.model.seq,
-                                                  preset.model.in_dim, cfg.seed)),
-            _ => DataSource::Vision(VisionDataset::new(
-                preset.model.seq, preset.model.in_dim,
-                preset.model.n_classes, cfg.seed)
-                .with_noise(cfg.data_noise as f32)),
-        };
+        let data = Self::make_data(&preset, &cfg);
         let nq = preset.qlinears.len();
+        let sentinel = Sentinel::new(SentinelCfg {
+            enabled: cfg.sentinel,
+            max_rollbacks: cfg.max_rollbacks,
+            ..SentinelCfg::default()
+        });
+        let store = cfg.checkpoint_dir.as_deref()
+            .map(|d| CkptStore::new(d, cfg.keep_last));
         Ok(Trainer {
             rt,
             cfg,
@@ -117,7 +131,24 @@ impl Trainer {
             keep_trace: false,
             trace: Vec::new(),
             last_quant: Vec::new(),
+            sentinel,
+            store,
+            mask_locked: false,
         })
+    }
+
+    /// Batches are pure functions of (seed, split, index), so rebuilding
+    /// the source from the (possibly checkpoint-adopted) seed replays the
+    /// exact sample order.
+    fn make_data(preset: &Preset, cfg: &RunConfig) -> DataSource {
+        match preset.model.arch.as_str() {
+            "lm" => DataSource::Lm(LmDataset::new(preset.model.seq,
+                                                  preset.model.in_dim, cfg.seed)),
+            _ => DataSource::Vision(VisionDataset::new(
+                preset.model.seq, preset.model.in_dim,
+                preset.model.n_classes, cfg.seed)
+                .with_noise(cfg.data_noise as f32)),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -134,6 +165,11 @@ impl Trainer {
     // ------------------------------------------------------------------
 
     pub fn calibrate(&mut self) -> Result<Option<CalibReport>> {
+        if self.mask_locked {
+            crate::info!("LQS mask locked (resume / sentinel fallback) — \
+                          skipping calibration");
+            return Ok(None);
+        }
         let key = format!("calib_{}", self.cfg.preset);
         if self.cfg.calib_batches == 0 || !self.rt.supports(&key) {
             return Ok(None);
@@ -263,7 +299,7 @@ impl Trainer {
         // batch generation stays outside the train_step span — the span
         // times backend work; each guard drops at the end of its arm, so
         // every event is pushed before drain_step sweeps the rings below
-        let (loss, acc) = match mode {
+        let (mut loss, acc) = match mode {
             Mode::Fused => {
                 let (x, y) = self.data.batch(0, self.step as u64,
                                              self.batch_size());
@@ -281,6 +317,20 @@ impl Trainer {
                 self.accum_step(self.step as u64)?
             }
         };
+        if fault::nan_in_grad(self.step) {
+            // what a NaN gradient leaves behind: the loss it came from
+            // and a poisoned first AdamW moment after the optimizer step
+            crate::warn_!("fault injection: NaN in gradient stream at \
+                           step {}", self.step);
+            loss = f32::NAN;
+            if let Some(m0) = self.state.m.first_mut() {
+                if let Ok(d) = m0.as_f32_mut() {
+                    if let Some(x0) = d.first_mut() {
+                        *x0 = f32::NAN;
+                    }
+                }
+            }
+        }
         let prof = crate::obs::enabled()
             .then(|| crate::obs::drain_step(self.keep_trace));
         let (prof_span_ns, prof_flops, prof_bytes_quant, quant_top) =
@@ -338,11 +388,39 @@ impl Trainer {
     /// Full training run per the RunConfig; returns final (eval loss, acc)
     /// if the backend can evaluate this preset.
     pub fn train(&mut self) -> Result<Option<(f32, f32)>> {
-        self.calibrate()?;
         let mode = if self.cfg.accum > 1 { Mode::Accum } else { Mode::Fused };
+        self.train_mode(mode)
+    }
+
+    /// The training loop proper, in an explicit step mode: calibrate,
+    /// anchor-checkpoint, then step until `cfg.steps` with the numeric
+    /// sentinel checking every completed step. A sentinel trip hands the
+    /// step to [`recover`] (rollback + escalation) and the loop re-runs
+    /// from the restored step; evals and checkpoints only happen on
+    /// steps the sentinel passed, so a poisoned state is never saved.
+    ///
+    /// [`recover`]: Trainer::recover
+    pub fn train_mode(&mut self, mode: Mode) -> Result<Option<(f32, f32)>> {
+        self.calibrate()?;
         let has_eval = self.rt.supports(&format!("eval_{}", self.cfg.preset));
-        for _ in 0..self.cfg.steps {
+        if self.cfg.sentinel && self.cfg.checkpoint_dir.is_some()
+            && self.step < self.cfg.steps
+        {
+            // anchor: rollback always has a last-good target, even
+            // before the first periodic checkpoint
+            self.checkpoint_now()?;
+        }
+        while self.step < self.cfg.steps {
             let (loss, acc) = self.step_once(mode)?;
+            if self.cfg.sentinel {
+                if let Some(trip) = self.sentinel.check(
+                    self.step - 1, loss, &self.weights, &self.state,
+                    &self.last_quant)
+                {
+                    self.recover(trip)?;
+                    continue;
+                }
+            }
             if self.step % 20 == 0 || self.step == 1 {
                 crate::info!("step {:>5} loss {:.4} acc {:.3} lr {:.2e}",
                              self.step, loss, acc, self.cfg.lr_at(self.step - 1));
@@ -352,22 +430,16 @@ impl Trainer {
             {
                 let (el, ea) = self.eval(4)?;
                 self.metrics.push_eval(self.step, el, ea);
+                if let Some(store) = &mut self.store {
+                    store.note_eval(self.step, el as f64);
+                }
                 crate::info!("  eval @ {}: loss {:.4} acc {:.3}", self.step, el, ea);
             }
-            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
-                if self.step == self.cfg.steps {
-                    // share() freezes the slabs only for the lifetime of
-                    // this block — the extra handle drops after the save,
-                    // and no weight bytes are cloned
-                    let ck = Checkpoint {
-                        step: self.step,
-                        preset: self.cfg.preset.clone(),
-                        variant: self.cfg.variant.clone(),
-                        weights: self.weights.share(),
-                        m: self.state.m.clone(),
-                        v: self.state.v.clone(),
-                    };
-                    let p = ck.save(&dir)?;
+            let due = self.step == self.cfg.steps
+                || (self.cfg.checkpoint_every > 0
+                    && self.step % self.cfg.checkpoint_every == 0);
+            if self.cfg.checkpoint_dir.is_some() && due {
+                if let Some(p) = self.checkpoint_now()? {
                     crate::info!("checkpoint -> {p}");
                 }
             }
@@ -381,16 +453,232 @@ impl Trainer {
         }
     }
 
+    // ------------------------------------------------------------------
+    // checkpoints + recovery
+    // ------------------------------------------------------------------
+
+    fn save_ctx(&self) -> SaveCtx {
+        SaveCtx {
+            seed: self.cfg.seed,
+            accum: self.cfg.accum,
+            schedule: self.schedule(),
+            lqs_mask: self.lqs_mask.clone(),
+            eval_loss: self.metrics.evals.last().map(|e| e.1 as f64),
+        }
+    }
+
+    fn schedule(&self) -> Schedule {
+        Schedule {
+            steps: self.cfg.steps,
+            warmup_steps: self.cfg.warmup_steps,
+            lr: self.cfg.lr,
+            lr_min_frac: self.cfg.lr_min_frac,
+        }
+    }
+
+    /// Save a checkpoint of the current state into `cfg.checkpoint_dir`
+    /// (no-op returning `None` when unset) and apply retention.
+    /// `share()` freezes the slabs only for the lifetime of the save —
+    /// the extra handle drops with the `Checkpoint`, and no weight
+    /// bytes are cloned.
+    pub fn checkpoint_now(&mut self) -> Result<Option<String>> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return Ok(None);
+        };
+        let ck = Checkpoint {
+            step: self.step,
+            preset: self.cfg.preset.clone(),
+            variant: self.cfg.variant.clone(),
+            weights: self.weights.share(),
+            m: self.state.m.clone(),
+            v: self.state.v.clone(),
+        };
+        let path = ck.save_with(&dir, &self.save_ctx())?;
+        if let Some(store) = &self.store {
+            let deleted = store.retain()?;
+            if !deleted.is_empty() {
+                crate::debug!("retention dropped checkpoint steps \
+                               {deleted:?}");
+            }
+        }
+        Ok(Some(path))
+    }
+
+    /// Bounded-retry recovery after a sentinel trip: roll back to the
+    /// newest valid checkpoint, then escalate — first a per-layer LQS
+    /// fallback (clip suspects forced per-token), then a wider
+    /// quantizer variant (INT4 -> INT8 -> FP) — and abort with the
+    /// sentinel's structured report once the rollback budget is spent
+    /// or no valid checkpoint remains.
+    fn recover(&mut self, trip: Trip) -> Result<()> {
+        crate::obs::count(crate::obs::Counter::SentinelTrips, 1);
+        crate::warn_!("sentinel trip: {trip}");
+        let tripped_step = self.step.saturating_sub(1);
+        self.metrics.push_note(tripped_step, format!("sentinel trip: {trip}"));
+        // grab the telemetry of the *tripped* step before rollback; it
+        // names the layer whose quantizer diverged
+        let telemetry = self.quant_telemetry();
+        self.sentinel.trips.push(trip);
+
+        if self.sentinel.rollbacks >= self.sentinel.cfg.max_rollbacks {
+            bail!("{}", self.sentinel.report());
+        }
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            bail!("sentinel tripped with no checkpoint_dir to roll back \
+                   to\n{}", self.sentinel.report());
+        };
+        let scan = resume_latest_valid(&dir, &self.preset.params,
+                                       Some(&self.cfg.preset));
+        for r in &scan.rejected {
+            crate::warn_!("rollback scan skipped {}: {}", r.label, r.reason);
+        }
+        let Some((ck, _man, header)) = scan.loaded else {
+            bail!("sentinel tripped but no valid checkpoint in {dir}\n{}",
+                  self.sentinel.report());
+        };
+        self.weights = ck.weights;
+        self.state.m = ck.m;
+        self.state.v = ck.v;
+        self.step = ck.step;
+        self.sentinel.rollbacks += 1;
+        crate::obs::count(crate::obs::Counter::Rollbacks, 1);
+        let act = format!("rollback {}/{} to step {} ({header})",
+                          self.sentinel.rollbacks,
+                          self.sentinel.cfg.max_rollbacks, self.step, );
+        crate::warn_!("{act}");
+        self.sentinel.actions.push(act.clone());
+        self.metrics.push_note(tripped_step, act);
+
+        // escalation 1: per-layer LQS fallback — clip suspects go
+        // per-token, which widens each token's own scale
+        if self.sentinel.rollbacks == 1 {
+            let refined = telemetry.refine_mask(&self.preset.qlinears,
+                                                &self.lqs_mask, 0.05);
+            if refined != self.lqs_mask {
+                self.lqs_mask = refined;
+                self.mask_locked = true;
+                let act = "LQS fallback: clip-suspect layers forced \
+                           per-token".to_string();
+                crate::warn_!("{act}");
+                self.sentinel.actions.push(act.clone());
+                self.metrics.push_note(tripped_step, act);
+                return Ok(());
+            }
+        }
+        // escalation 2: widen the quantizer (INT4 -> INT8 -> FP), when
+        // the backend has the wider train key for this preset
+        if let Some(wider) = widen_variant(&self.cfg.variant) {
+            let key = format!("train_{wider}_{}", self.cfg.preset);
+            if self.key_override.is_none() && self.rt.supports(&key) {
+                let act = format!("quantizer widened: variant {} -> {wider}",
+                                  self.cfg.variant);
+                crate::warn_!("{act}");
+                self.cfg.variant = wider;
+                self.sentinel.actions.push(act.clone());
+                self.metrics.push_note(tripped_step, act);
+            }
+        }
+        // rollback alone is a valid retry too: write-site faults fire
+        // once, and a transient NaN does not recur from a clean state
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // resume
+    // ------------------------------------------------------------------
+
+    /// Resume from an explicit checkpoint header (fully verified).
     pub fn resume(&mut self, header: &str) -> Result<()> {
-        let ck = Checkpoint::load(header, &self.preset.params)?;
+        let (ck, man) = Checkpoint::load_verified(header, &self.preset.params)
+            .map_err(anyhow::Error::new)
+            .with_context(|| format!("resuming from {header}"))?;
+        self.apply_checkpoint(ck, man, header)
+    }
+
+    /// Resume from the newest *valid* checkpoint in
+    /// `cfg.checkpoint_dir`, walking past corrupt or torn candidates
+    /// with a logged reason each. Returns `false` (fresh run) when the
+    /// directory holds nothing loadable.
+    pub fn resume_auto(&mut self) -> Result<bool> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            bail!("--resume needs --checkpoint-dir (nowhere to scan)");
+        };
+        let swept = sweep_tmp(&dir);
+        if swept > 0 {
+            crate::info!("swept {swept} stale .tmp file(s) from {dir}");
+        }
+        let scan = resume_latest_valid(&dir, &self.preset.params,
+                                       Some(&self.cfg.preset));
+        for r in &scan.rejected {
+            crate::warn_!("resume scan skipped {}: {}", r.label, r.reason);
+        }
+        match scan.loaded {
+            Some((ck, man, header)) => {
+                self.apply_checkpoint(ck, man, &header)?;
+                Ok(true)
+            }
+            None => {
+                crate::info!("no valid checkpoint in {dir}; starting fresh");
+                Ok(false)
+            }
+        }
+    }
+
+    /// Restore trainer state from a verified checkpoint + manifest,
+    /// reconciling the manifest's run context against the live config:
+    /// SIMD tier / thread mismatches degrade gracefully (warn +
+    /// redispatch), the data-PRNG seed and variant are adopted from the
+    /// manifest (they define the trajectory being resumed), and the LQS
+    /// mask is restored verbatim and locked against recalibration.
+    fn apply_checkpoint(&mut self, ck: Checkpoint,
+                        man: crate::resilience::CkptManifest,
+                        label: &str) -> Result<()> {
         if ck.preset != self.cfg.preset {
             bail!("checkpoint preset {} != configured {}", ck.preset,
                   self.cfg.preset);
+        }
+        let tier = crate::kernels::active_tier().name();
+        if man.simd_tier != tier {
+            crate::warn_!("resume {label}: checkpoint written under SIMD \
+                           tier {:?}, host runs {tier:?} — kernels \
+                           redispatch; results stay bit-identical",
+                          man.simd_tier);
+        }
+        if man.threads != crate::kernels::num_threads() {
+            crate::info!("resume {label}: thread count {} -> {}",
+                         man.threads, crate::kernels::num_threads());
+        }
+        if man.seed != self.cfg.seed {
+            crate::warn_!("resume {label}: adopting checkpoint data seed \
+                           {} (config said {})", man.seed, self.cfg.seed);
+            self.cfg.seed = man.seed;
+            self.data = Self::make_data(&self.preset, &self.cfg);
+        }
+        if man.schedule != self.schedule() {
+            crate::warn_!("resume {label}: LR schedule differs from the \
+                           checkpointed run ({:?} vs {:?}); the resumed \
+                           trajectory will diverge", man.schedule,
+                          self.schedule());
+        }
+        if man.variant != self.cfg.variant {
+            crate::warn_!("resume {label}: adopting checkpoint variant \
+                           {:?} (config said {:?})", man.variant,
+                          self.cfg.variant);
+            self.cfg.variant = man.variant.clone();
+        }
+        if man.lqs_mask.len() == self.lqs_mask.len() {
+            self.lqs_mask = man.lqs_mask.clone();
+            self.mask_locked = true;
+        } else {
+            crate::warn_!("resume {label}: manifest LQS mask arity {} != \
+                           {} qlinears; will recalibrate",
+                          man.lqs_mask.len(), self.lqs_mask.len());
         }
         self.weights = ck.weights;
         self.state.m = ck.m;
         self.state.v = ck.v;
         self.step = ck.step;
+        crate::info!("resumed {label} at step {}", self.step);
         Ok(())
     }
 }

@@ -29,6 +29,7 @@ pub mod kernels;
 pub mod latsim;
 pub mod obs;
 pub mod quant;
+pub mod resilience;
 pub mod runtime;
 pub mod tensor;
 pub mod util;

@@ -32,12 +32,14 @@ use hot::util::timer::Table;
 fn main() -> Result<()> {
     hot::util::log::init_from_env();
     hot::obs::init_from_env();
+    hot::resilience::fault::init_from_env()?;
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("eval") => cmd_eval(&args),
         Some("infer") => cmd_infer(&args),
+        Some("ckpt") => cmd_ckpt(&args),
         Some("bench") => cmd_bench(&args),
         Some("memory") => cmd_memory(&args),
         Some("latency") => cmd_latency(&args),
@@ -45,15 +47,20 @@ fn main() -> Result<()> {
         Some("runhlo") => cmd_runhlo(&args),
         _ => {
             eprintln!(
-                "usage: hot <train|calibrate|eval|infer|bench|memory|latency|info> [--opts]\n\
+                "usage: hot <train|calibrate|eval|infer|ckpt|bench|memory|latency|info> [--opts]\n\
                  common: --backend native|pjrt|auto --artifacts DIR\n\
                          --preset NAME --variant V --steps N --batch N\n\
                          --lr F --mode fused|split|accum --accum N\n\
                          --threads N --seed N --config run.json\n\
                          --trace-out trace.json (Chrome-trace; HOT_TRACE=1\n\
                          enables counters without the event dump)\n\
+                 train:  --checkpoint-dir DIR --checkpoint-every N\n\
+                         --keep-last K --max-rollbacks N --no-sentinel\n\
+                         --resume [CKPT.json] (bare --resume: newest valid\n\
+                         checkpoint in --checkpoint-dir)\n\
                  infer:  hot infer CKPT.json | --resume CKPT.json |\n\
                          --checkpoint-dir DIR (newest); --batches N\n\
+                 ckpt:   hot ckpt verify|list --checkpoint-dir DIR\n\
                  bench:  --suite kernels|e2e|all --smoke --out DIR\n\
                          --check BASELINE_DIR --report report.md"
             );
@@ -88,6 +95,13 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if let Some(d) = args.get("checkpoint-dir") {
         cfg.checkpoint_dir = Some(d.into());
     }
+    cfg.checkpoint_every = args.usize_or("checkpoint-every",
+                                         cfg.checkpoint_every);
+    cfg.keep_last = args.usize_or("keep-last", cfg.keep_last);
+    cfg.max_rollbacks = args.usize_or("max-rollbacks", cfg.max_rollbacks);
+    if args.flag("no-sentinel") {
+        cfg.sentinel = false;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -120,19 +134,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(ck) = args.get("resume") {
         tr.resume(ck)?;
-        hot::info!("resumed from {ck} at step {}", tr.step);
+    } else if args.flag("resume") {
+        // bare --resume: newest valid checkpoint in --checkpoint-dir,
+        // walking past corrupt/torn candidates; fresh run if none
+        tr.resume_auto()?;
     }
-    if mode == Mode::Fused && tr.cfg.accum == 1 {
-        let fin = tr.train()?;
-        if let Some((l, a)) = fin {
-            println!("final eval: loss {l:.4} acc {a:.4}");
-        }
-    } else {
-        tr.calibrate()?;
-        for _ in 0..tr.cfg.steps {
-            tr.step_once(mode)?;
-        }
-        let (l, a) = tr.eval(8)?;
+    let fin = tr.train_mode(mode)?;
+    if let Some((l, a)) = fin {
         println!("final eval: loss {l:.4} acc {a:.4}");
     }
     println!("mean step time: {:.4}s ({:.2} steps/s)",
@@ -254,6 +262,87 @@ fn cmd_infer(args: &Args) -> Result<()> {
     println!("infer: {batches} batches x {batch} ok \
               ({rows} logit rows, all finite, {} weight bytes shared)",
              weights.total_bytes());
+    Ok(())
+}
+
+/// `hot ckpt verify|list`: inspect a checkpoint directory. `list`
+/// prints each candidate's manifest status; `verify` additionally
+/// checks every blob (sizes, whole-blob CRCs, per-tensor extent CRCs
+/// against the preset's live specs) and prints a machine-readable
+/// `latest_valid_step=N` line — CI's kill/resume smoke parses it.
+/// Exits nonzero when `verify` finds no valid checkpoint at all.
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    use hot::coordinator::Checkpoint;
+    use hot::resilience::manifest::CkptManifest;
+    use hot::resilience::store::candidates;
+    let action = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "verify".to_string());
+    if !matches!(action.as_str(), "verify" | "list") {
+        bail!("hot ckpt wants verify|list, got {action:?}");
+    }
+    let cfg = run_config(args)?;
+    let Some(dir) = cfg.checkpoint_dir.clone() else {
+        bail!("hot ckpt needs --checkpoint-dir DIR");
+    };
+    let rt = executor(args, &cfg)?;
+    let cands = candidates(&dir);
+    if cands.is_empty() {
+        bail!("no checkpoint candidates in {dir}");
+    }
+    let mut t = Table::new(&["step", "preset", "status"]);
+    let mut latest_valid: Option<usize> = None;
+    for c in &cands {
+        let step = format!("{}", c.step);
+        let Some(header) = &c.header else {
+            t.row(&[step, "-".into(),
+                    "TORN: blobs without a manifest (crash during \
+                     save)".into()]);
+            continue;
+        };
+        let man = match CkptManifest::read(header) {
+            Ok(m) => m,
+            Err(r) => {
+                t.row(&[step, "-".into(), format!("REJECT: {r}")]);
+                continue;
+            }
+        };
+        if action == "list" {
+            t.row(&[step, man.preset.clone(),
+                    format!("manifest ok: variant {} tier {} seed {} \
+                             eval {}", man.variant, man.simd_tier, man.seed,
+                            man.eval_loss.map_or("-".into(),
+                                                 |l| format!("{l:.4}")))]);
+            continue;
+        }
+        let preset = match rt.preset(&man.preset) {
+            Ok(p) => p,
+            Err(e) => {
+                t.row(&[step, man.preset.clone(),
+                        format!("REJECT: unknown preset ({e})")]);
+                continue;
+            }
+        };
+        match Checkpoint::load_verified(header, &preset.params) {
+            Ok((_, m)) => {
+                latest_valid = Some(c.step);
+                t.row(&[step, m.preset.clone(),
+                        format!("ok: {} blobs verified, variant {} tier {}",
+                                m.blobs.len(), m.variant, m.simd_tier)]);
+            }
+            Err(r) => t.row(&[step, man.preset.clone(),
+                              format!("REJECT: {r}")]),
+        }
+    }
+    t.print(&format!("checkpoints in {dir}"));
+    if action == "verify" {
+        match latest_valid {
+            Some(s) => println!("latest_valid_step={s}"),
+            None => bail!("no valid checkpoint in {dir}"),
+        }
+    }
     Ok(())
 }
 

@@ -92,16 +92,20 @@ pub enum Counter {
     /// per-tenant trainable bytes held by `AdapterSet`s (LoRA A/B pairs
     /// plus full-rank embed/head overrides)
     AdapterBytes,
+    /// numeric sentinel trips (non-finite loss/state, clip runaway)
+    SentinelTrips,
+    /// rollbacks to a last-good checkpoint after a sentinel trip
+    Rollbacks,
     /// events lost to a full ring (never blocks the hot path)
     EventsDropped,
 }
 
-pub const N_COUNTERS: usize = 14;
+pub const N_COUNTERS: usize = 16;
 pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "flops_scalar", "flops_avx2", "flops_neon", "bytes_quantized",
     "bytes_packed", "bytes_panels", "plan_hits", "plan_misses",
     "arena_grows", "pool_steals", "pool_parks", "weight_bytes_shared",
-    "adapter_bytes", "events_dropped",
+    "adapter_bytes", "sentinel_trips", "rollbacks", "events_dropped",
 ];
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,101 @@
+//! Checksums for the checkpoint wire format.
+//!
+//! * [`crc32`] — the IEEE-802.3 reflected CRC-32 (polynomial
+//!   0xEDB88320), table-driven. Guards every checkpoint blob and every
+//!   per-tensor extent inside it: a single flipped byte anywhere in a
+//!   blob is guaranteed to change the CRC, which is exactly the
+//!   property the byte-flip rejection tests pin.
+//! * [`sign`] / [`verify`] — a keyed FNV-1a-64 over the manifest's
+//!   canonical JSON text. This is a *tamper-evidence* seal (a torn or
+//!   hand-edited manifest cannot slip through as valid), not a
+//!   cryptographic MAC: the key is fixed and public. DESIGN.md
+//!   §Resilience spells out the threat model.
+
+/// Byte-indexed CRC-32 table for the reflected IEEE polynomial, built
+/// at compile time.
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = build_table();
+
+/// CRC-32 (IEEE, reflected) of `bytes`. Matches zlib's `crc32`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Fixed signing key, mixed in ahead of the text. Versioned so a future
+/// manifest revision can rotate it and old signatures stop validating.
+const SIGN_KEY: &[u8] = b"hot-ckpt-manifest-v2";
+
+/// Keyed FNV-1a-64 over `text`, rendered as 16 lowercase hex chars.
+pub fn sign(text: &str) -> String {
+    let mut h = FNV_OFFSET;
+    for &b in SIGN_KEY.iter().chain(text.as_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    format!("{h:016x}")
+}
+
+/// Constant-shape check of a stored signature against `text`.
+pub fn verify(text: &str, sig: &str) -> bool {
+    sign(text) == sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // zlib.crc32 reference values
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        let ramp: Vec<u8> = (0u8..32).collect();
+        assert_eq!(crc32(&ramp), 0x9126_7E8A);
+    }
+
+    #[test]
+    fn crc32_detects_every_single_byte_flip() {
+        let base: Vec<u8> = (0u8..=255).cycle().take(1024).collect();
+        let c0 = crc32(&base);
+        let mut buf = base.clone();
+        for off in [0usize, 1, 511, 512, 1023] {
+            for bit in 0..8u8 {
+                buf[off] ^= 1 << bit;
+                assert_ne!(crc32(&buf), c0, "flip at {off} bit {bit}");
+                buf[off] ^= 1 << bit;
+            }
+        }
+        assert_eq!(crc32(&buf), c0);
+    }
+
+    #[test]
+    fn sign_is_stable_and_sensitive() {
+        let s = sign("{\"step\":3}");
+        assert_eq!(s.len(), 16);
+        assert_eq!(s, sign("{\"step\":3}"));
+        assert_ne!(s, sign("{\"step\":4}"));
+        assert!(verify("{\"step\":3}", &s));
+        assert!(!verify("{\"step\":3} ", &s));
+    }
+}

@@ -1,0 +1,287 @@
+//! Deterministic fault-injection harness (`HOT_FAULT=`).
+//!
+//! A fault *plan* names exactly one failure and where it strikes; the
+//! checkpoint writer and the trainer consult the hooks below at the
+//! natural fault points. Every plan is deterministic — no randomness,
+//! no timing dependence — so an integration test can arm a plan, run
+//! training, and assert the exact recovery trajectory.
+//!
+//! Grammar (one plan per run):
+//!
+//! ```text
+//! HOT_FAULT=corrupt-byte:<blob>:<offset>   flip one byte of the next
+//!                                          written <blob> after its
+//!                                          checksums were taken
+//! HOT_FAULT=truncate-blob:<blob>[:keep]    write only the first <keep>
+//!                                          bytes (default: half)
+//! HOT_FAULT=crash-between-blobs            abort the save after the
+//!                                          first blob, before the
+//!                                          manifest exists
+//! HOT_FAULT=nan-in-grad-at-step:<S>        poison the gradient stream
+//!                                          at training step S
+//! HOT_FAULT=io-error:<n>                   fail the next n blob writes
+//!                                          (exercises bounded retry)
+//! ```
+//!
+//! `<blob>` is one of `params`, `m`, `v`, `manifest`. Write-site plans
+//! fire once and disarm, so the *recovery* write after a rollback or a
+//! re-run is clean — which is what lets the fault matrix assert
+//! "train → fault → auto-resume converges".
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// One deterministic failure, parsed from the `HOT_FAULT` grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultPlan {
+    /// XOR 0x01 into byte `offset % len` of blob `blob` at write time,
+    /// after its manifest checksums were computed (on-disk rot).
+    CorruptByte { blob: String, offset: usize },
+    /// Write only the first `keep` bytes of blob `blob` (`None` =
+    /// half the blob) — a torn write the size check must catch.
+    TruncateBlob { blob: String, keep: Option<usize> },
+    /// Abort the save after the first blob and before the manifest —
+    /// the classic kill -9 window; no loadable checkpoint may remain.
+    CrashBetweenBlobs,
+    /// Poison loss + first AdamW moment at training step `step`
+    /// (what a NaN gradient leaves behind after the optimizer step).
+    NanInGradAtStep { step: usize },
+    /// Fail the next `failures` blob writes with a simulated I/O error.
+    IoError { failures: usize },
+}
+
+struct Armed {
+    plan: FaultPlan,
+    /// `IoError` counts down; every other plan fires once.
+    remaining: usize,
+}
+
+fn slot() -> &'static Mutex<Option<Armed>> {
+    static SLOT: Mutex<Option<Armed>> = Mutex::new(None);
+    &SLOT
+}
+
+fn blob_kind(s: &str) -> Result<String> {
+    match s {
+        "params" | "m" | "v" | "manifest" => Ok(s.to_string()),
+        other => bail!("HOT_FAULT: unknown blob {other:?} \
+                        (want params|m|v|manifest)"),
+    }
+}
+
+/// Parse one plan from the `HOT_FAULT` grammar.
+pub fn parse(plan: &str) -> Result<FaultPlan> {
+    let parts: Vec<&str> = plan.split(':').collect();
+    match parts.as_slice() {
+        ["corrupt-byte", blob, off] => Ok(FaultPlan::CorruptByte {
+            blob: blob_kind(blob)?,
+            offset: off.parse().map_err(|_| {
+                anyhow::anyhow!("HOT_FAULT: bad offset {off:?}")
+            })?,
+        }),
+        ["truncate-blob", blob] => Ok(FaultPlan::TruncateBlob {
+            blob: blob_kind(blob)?,
+            keep: None,
+        }),
+        ["truncate-blob", blob, keep] => Ok(FaultPlan::TruncateBlob {
+            blob: blob_kind(blob)?,
+            keep: Some(keep.parse().map_err(|_| {
+                anyhow::anyhow!("HOT_FAULT: bad keep {keep:?}")
+            })?),
+        }),
+        ["crash-between-blobs"] => Ok(FaultPlan::CrashBetweenBlobs),
+        ["nan-in-grad-at-step", s] | ["nan-in-grad-at-step-S", s] => {
+            Ok(FaultPlan::NanInGradAtStep {
+                step: s.parse().map_err(|_| {
+                    anyhow::anyhow!("HOT_FAULT: bad step {s:?}")
+                })?,
+            })
+        }
+        ["io-error", n] | ["io-error-with-retry", n] => {
+            Ok(FaultPlan::IoError {
+                failures: n.parse().map_err(|_| {
+                    anyhow::anyhow!("HOT_FAULT: bad count {n:?}")
+                })?,
+            })
+        }
+        _ => bail!("HOT_FAULT: unknown plan {plan:?}"),
+    }
+}
+
+/// Arm `plan` (replacing any armed plan).
+pub fn arm(plan: FaultPlan) {
+    let remaining = match &plan {
+        FaultPlan::IoError { failures } => *failures,
+        _ => 1,
+    };
+    *slot().lock().unwrap() = Some(Armed { plan, remaining });
+}
+
+/// Disarm whatever is armed.
+pub fn disarm() {
+    *slot().lock().unwrap() = None;
+}
+
+/// Arm from the `HOT_FAULT` env var, erroring loudly on a bad plan
+/// string (a silently ignored fault plan would fake test coverage).
+pub fn init_from_env() -> Result<()> {
+    if let Ok(s) = std::env::var("HOT_FAULT") {
+        if !s.is_empty() {
+            let plan = parse(&s)?;
+            crate::warn_!("fault injection armed: {plan:?}");
+            arm(plan);
+        }
+    }
+    Ok(())
+}
+
+/// The armed plan, if any (diagnostics).
+pub fn armed() -> Option<FaultPlan> {
+    slot().lock().unwrap().as_ref().map(|a| a.plan.clone())
+}
+
+/// Serializes unit tests that arm plans or drive write paths that
+/// consult the hooks — the slot is process-global and the cargo test
+/// harness is multi-threaded.
+#[cfg(test)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// hooks — called from the fault points
+// ---------------------------------------------------------------------------
+
+/// Checkpoint writer hook: mutate `bytes` of blob `kind` in place if a
+/// corruption plan targets it. Returns a description when it fired.
+pub fn mutate_blob(kind: &str, bytes: &mut Vec<u8>) -> Option<String> {
+    let mut g = slot().lock().unwrap();
+    let armed = g.as_ref()?;
+    let desc = match &armed.plan {
+        FaultPlan::CorruptByte { blob, offset } if blob == kind => {
+            if bytes.is_empty() {
+                return None;
+            }
+            let off = offset % bytes.len();
+            bytes[off] ^= 0x01;
+            format!("corrupt-byte fired: {kind} byte {off}")
+        }
+        FaultPlan::TruncateBlob { blob, keep } if blob == kind => {
+            let keep = keep.unwrap_or(bytes.len() / 2).min(bytes.len());
+            bytes.truncate(keep);
+            format!("truncate-blob fired: {kind} kept {keep} bytes")
+        }
+        _ => return None,
+    };
+    *g = None; // fired once
+    Some(desc)
+}
+
+/// Checkpoint writer hook between blob writes: `true` exactly once if
+/// `crash-between-blobs` is armed — the caller must abandon the save.
+pub fn crash_between_blobs() -> bool {
+    let mut g = slot().lock().unwrap();
+    if matches!(g.as_ref().map(|a| &a.plan),
+                Some(FaultPlan::CrashBetweenBlobs)) {
+        *g = None;
+        return true;
+    }
+    false
+}
+
+/// Blob-write hook: simulated I/O failure while the armed `io-error`
+/// budget lasts. Returns the error description to surface.
+pub fn io_error(label: &str) -> Option<String> {
+    let mut g = slot().lock().unwrap();
+    let armed = g.as_mut()?;
+    if !matches!(armed.plan, FaultPlan::IoError { .. }) {
+        return None;
+    }
+    if armed.remaining == 0 {
+        *g = None;
+        return None;
+    }
+    armed.remaining -= 1;
+    let left = armed.remaining;
+    if left == 0 {
+        *g = None;
+    }
+    Some(format!("injected io error writing {label} ({left} more)"))
+}
+
+/// Trainer hook: `true` exactly once when the armed plan poisons the
+/// gradient stream at `step`.
+pub fn nan_in_grad(step: usize) -> bool {
+    let mut g = slot().lock().unwrap();
+    if matches!(g.as_ref().map(|a| &a.plan),
+                Some(FaultPlan::NanInGradAtStep { step: s }) if *s == step) {
+        *g = None;
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses() {
+        assert_eq!(parse("corrupt-byte:params:64").unwrap(),
+                   FaultPlan::CorruptByte { blob: "params".into(),
+                                            offset: 64 });
+        assert_eq!(parse("truncate-blob:m").unwrap(),
+                   FaultPlan::TruncateBlob { blob: "m".into(), keep: None });
+        assert_eq!(parse("truncate-blob:v:17").unwrap(),
+                   FaultPlan::TruncateBlob { blob: "v".into(),
+                                             keep: Some(17) });
+        assert_eq!(parse("crash-between-blobs").unwrap(),
+                   FaultPlan::CrashBetweenBlobs);
+        assert_eq!(parse("nan-in-grad-at-step:3").unwrap(),
+                   FaultPlan::NanInGradAtStep { step: 3 });
+        assert_eq!(parse("io-error:2").unwrap(),
+                   FaultPlan::IoError { failures: 2 });
+        assert_eq!(parse("io-error-with-retry:2").unwrap(),
+                   FaultPlan::IoError { failures: 2 });
+        assert!(parse("corrupt-byte:weights:1").is_err());
+        assert!(parse("meteor-strike").is_err());
+    }
+
+    // Hook semantics share the process-global slot, so they run as one
+    // sequential test under the slot's test lock.
+    #[test]
+    fn hooks_fire_once_and_disarm() {
+        let _g = test_lock();
+        disarm();
+
+        arm(FaultPlan::CorruptByte { blob: "params".into(), offset: 1000 });
+        let mut b = vec![0u8; 8];
+        assert!(mutate_blob("m", &mut b).is_none(), "wrong blob untouched");
+        assert!(mutate_blob("params", &mut b).is_some());
+        assert_eq!(b[1000 % 8], 0x01, "offset wraps modulo len");
+        assert!(mutate_blob("params", &mut b).is_none(), "fired once");
+
+        arm(FaultPlan::TruncateBlob { blob: "v".into(), keep: None });
+        let mut b = vec![7u8; 10];
+        assert!(mutate_blob("v", &mut b).is_some());
+        assert_eq!(b.len(), 5, "default keep = half");
+
+        arm(FaultPlan::CrashBetweenBlobs);
+        assert!(crash_between_blobs());
+        assert!(!crash_between_blobs(), "fired once");
+
+        arm(FaultPlan::IoError { failures: 2 });
+        assert!(io_error("x").is_some());
+        assert!(io_error("x").is_some());
+        assert!(io_error("x").is_none(), "budget exhausted -> disarmed");
+
+        arm(FaultPlan::NanInGradAtStep { step: 3 });
+        assert!(!nan_in_grad(2));
+        assert!(nan_in_grad(3));
+        assert!(!nan_in_grad(3), "fired once");
+
+        disarm();
+    }
+}

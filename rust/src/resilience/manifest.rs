@@ -1,0 +1,571 @@
+//! Signed checkpoint manifest + the atomic write protocol.
+//!
+//! A checkpoint is three raw little-endian f32 blobs (params / m / v in
+//! sorted-spec order) plus `ckpt_<step>.json` — the *manifest*, written
+//! last. The manifest carries everything needed to (a) prove the blobs
+//! are the ones it describes (per-blob and per-tensor CRC-32s, byte
+//! counts) and (b) resume the exact trajectory (step, preset, variant,
+//! SIMD tier, thread count, data-PRNG cursor = (seed, step, accum), LR
+//! schedule, LQS selections). The whole JSON text is sealed with a
+//! keyed FNV-1a signature (`resilience::crc::sign`) so a torn or
+//! hand-edited header is detected before any blob is trusted.
+//!
+//! Atomic write protocol (every file): write to `<path>.tmp`, fsync,
+//! rename over `<path>`, fsync the directory. Blobs land before the
+//! manifest, so a crash at *any* point leaves either a complete
+//! checkpoint or a manifest-less torn one — and a torn checkpoint is
+//! unloadable by construction, because only the manifest makes blobs
+//! trustworthy.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::resilience::{crc, fault};
+use crate::runtime::manifest::TensorSpec;
+use crate::util::json::Json;
+
+/// Manifest format version; bumped on any wire-format change.
+pub const CKPT_FORMAT: i64 = 2;
+
+/// Why `resume_latest_valid` (or `hot ckpt verify`) refused one
+/// checkpoint candidate. Every variant names the offending file or
+/// tensor — the typed reason is the user-facing diagnosis.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RejectReason {
+    /// Blob files exist for this step but the manifest does not — the
+    /// signature of a crash between the blob writes and the manifest.
+    ManifestMissing { step: usize },
+    HeaderIo { path: String, err: String },
+    HeaderParse { path: String, err: String },
+    MissingField { path: String, field: String },
+    BadSignature { path: String },
+    FormatVersion { path: String, got: i64 },
+    PresetMismatch { got: String, want: String },
+    /// Manifest tensor table disagrees with the live parameter specs.
+    SpecMismatch { detail: String },
+    BlobIo { file: String, err: String },
+    BlobSize { file: String, got: usize, want: usize },
+    BlobCrc { file: String, got: u32, want: u32 },
+    /// Whole-blob CRC passed the impossible way or a sub-range check
+    /// tripped: the named tensor's bytes don't match its recorded CRC
+    /// (catches shuffled/concatenated blobs whose total bytes line up).
+    TensorCrc { file: String, tensor: String },
+    TensorExtent { file: String, tensor: String, got: usize, want: usize },
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use RejectReason::*;
+        match self {
+            ManifestMissing { step } => {
+                write!(f, "torn checkpoint at step {step}: blobs without \
+                           a manifest (crash during save)")
+            }
+            HeaderIo { path, err } => write!(f, "{path}: unreadable ({err})"),
+            HeaderParse { path, err } => {
+                write!(f, "{path}: manifest unparseable ({err})")
+            }
+            MissingField { path, field } => {
+                write!(f, "{path}: manifest missing field {field:?}")
+            }
+            BadSignature { path } => {
+                write!(f, "{path}: manifest signature mismatch (tampered \
+                           or truncated)")
+            }
+            FormatVersion { path, got } => {
+                write!(f, "{path}: manifest format {got} != {CKPT_FORMAT}")
+            }
+            PresetMismatch { got, want } => {
+                write!(f, "checkpoint preset {got:?} != configured {want:?}")
+            }
+            SpecMismatch { detail } => write!(f, "spec mismatch: {detail}"),
+            BlobIo { file, err } => write!(f, "{file}: unreadable ({err})"),
+            BlobSize { file, got, want } => {
+                write!(f, "{file}: {got} bytes on disk, manifest says {want}")
+            }
+            BlobCrc { file, got, want } => {
+                write!(f, "{file}: blob crc32 {got:08x} != manifest \
+                           {want:08x}")
+            }
+            TensorCrc { file, tensor } => {
+                write!(f, "{file}: tensor {tensor:?} fails its extent crc32")
+            }
+            TensorExtent { file, tensor, got, want } => {
+                write!(f, "{file}: tensor {tensor:?} extent {got} values, \
+                           specs want {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RejectReason {}
+
+/// One tensor's extent inside a blob: its sorted-spec position defines
+/// the byte range, `numel`/`crc32` pin length and content.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSum {
+    pub name: String,
+    pub numel: usize,
+    pub crc32: u32,
+}
+
+/// One blob file's identity: total bytes, whole-blob CRC, per-tensor
+/// extent sums.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlobSum {
+    pub file: String,
+    pub bytes: usize,
+    pub crc32: u32,
+    pub tensors: Vec<TensorSum>,
+}
+
+impl BlobSum {
+    /// Summarize `bytes` laid out per `specs` (sorted-spec order,
+    /// 4 bytes per value).
+    pub fn of(file: &str, specs: &[TensorSpec], bytes: &[u8]) -> BlobSum {
+        let mut tensors = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for s in specs {
+            let n = s.numel() * 4;
+            let end = (off + n).min(bytes.len());
+            tensors.push(TensorSum {
+                name: s.name.clone(),
+                numel: s.numel(),
+                crc32: crc::crc32(&bytes[off.min(bytes.len())..end]),
+            });
+            off += n;
+        }
+        BlobSum { file: file.to_string(), bytes: bytes.len(),
+                  crc32: crc::crc32(bytes), tensors }
+    }
+
+    /// Check `bytes` read back from disk against this sum and the live
+    /// `specs`. The per-tensor pass is what stops a shuffled or
+    /// concatenated blob whose *total* byte count happens to line up
+    /// from loading into the wrong `WeightStore` slabs.
+    pub fn verify(&self, specs: &[TensorSpec], bytes: &[u8])
+                  -> Result<(), RejectReason> {
+        if bytes.len() != self.bytes {
+            return Err(RejectReason::BlobSize {
+                file: self.file.clone(), got: bytes.len(), want: self.bytes,
+            });
+        }
+        let got = crc::crc32(bytes);
+        if got != self.crc32 {
+            return Err(RejectReason::BlobCrc {
+                file: self.file.clone(), got, want: self.crc32,
+            });
+        }
+        if self.tensors.len() != specs.len() {
+            return Err(RejectReason::SpecMismatch {
+                detail: format!("{}: {} tensors recorded, {} specs live",
+                                self.file, self.tensors.len(), specs.len()),
+            });
+        }
+        let mut off = 0usize;
+        for (t, s) in self.tensors.iter().zip(specs) {
+            if t.name != s.name || t.numel != s.numel() {
+                return Err(RejectReason::TensorExtent {
+                    file: self.file.clone(),
+                    tensor: format!("{} (recorded {})", s.name, t.name),
+                    got: t.numel, want: s.numel(),
+                });
+            }
+            let n = t.numel * 4;
+            if off + n > bytes.len() {
+                return Err(RejectReason::TensorExtent {
+                    file: self.file.clone(), tensor: s.name.clone(),
+                    got: (bytes.len() - off) / 4, want: t.numel,
+                });
+            }
+            if crc::crc32(&bytes[off..off + n]) != t.crc32 {
+                return Err(RejectReason::TensorCrc {
+                    file: self.file.clone(), tensor: s.name.clone(),
+                });
+            }
+            off += n;
+        }
+        Ok(())
+    }
+}
+
+/// The LR schedule the run was on — a resume replays the same
+/// trajectory only under the same schedule, so it is recorded and
+/// diffed loudly at resume.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Schedule {
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub lr: f64,
+    pub lr_min_frac: f64,
+}
+
+/// The signed checkpoint header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptManifest {
+    pub format: i64,
+    pub step: usize,
+    pub preset: String,
+    pub variant: String,
+    /// Kernel dispatch tier the checkpoint was written under
+    /// ("scalar" | "avx2" | "neon"). A mismatch at resume is a warning,
+    /// not a rejection: kernels redispatch to the host's tier and the
+    /// tier-agnostic bit-exactness contracts keep results identical.
+    pub simd_tier: String,
+    pub threads: usize,
+    /// Data-stream PRNG cursor: batches are pure functions of
+    /// (seed, split, index) with index = step, so (seed, step, accum)
+    /// replays the exact sample order.
+    pub seed: u64,
+    pub accum: usize,
+    pub schedule: Schedule,
+    /// Per-qlinear {0,1} per-token selections at save time — restored
+    /// verbatim at resume (recalibrating would clobber any runtime
+    /// widening the sentinel applied).
+    pub lqs_mask: Vec<f32>,
+    pub eval_loss: Option<f64>,
+    pub blobs: Vec<BlobSum>,
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+impl CkptManifest {
+    fn to_json_without_sig(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("format".into(), num(self.format as f64));
+        o.insert("step".into(), num(self.step as f64));
+        o.insert("preset".into(), Json::Str(self.preset.clone()));
+        o.insert("variant".into(), Json::Str(self.variant.clone()));
+        o.insert("simd_tier".into(), Json::Str(self.simd_tier.clone()));
+        o.insert("threads".into(), num(self.threads as f64));
+        o.insert("seed".into(), num(self.seed as f64));
+        o.insert("accum".into(), num(self.accum as f64));
+        let mut sch = BTreeMap::new();
+        sch.insert("steps".into(), num(self.schedule.steps as f64));
+        sch.insert("warmup_steps".into(),
+                   num(self.schedule.warmup_steps as f64));
+        sch.insert("lr".into(), num(self.schedule.lr));
+        sch.insert("lr_min_frac".into(), num(self.schedule.lr_min_frac));
+        o.insert("schedule".into(), Json::Obj(sch));
+        o.insert("lqs_mask".into(), Json::Arr(
+            self.lqs_mask.iter().map(|&m| num(m as f64)).collect()));
+        o.insert("eval_loss".into(), match self.eval_loss {
+            Some(l) => num(l),
+            None => Json::Null,
+        });
+        o.insert("blobs".into(), Json::Arr(self.blobs.iter().map(|b| {
+            let mut bo = BTreeMap::new();
+            bo.insert("file".into(), Json::Str(b.file.clone()));
+            bo.insert("bytes".into(), num(b.bytes as f64));
+            bo.insert("crc32".into(), num(b.crc32 as f64));
+            bo.insert("tensors".into(), Json::Arr(b.tensors.iter().map(|t| {
+                let mut to = BTreeMap::new();
+                to.insert("name".into(), Json::Str(t.name.clone()));
+                to.insert("numel".into(), num(t.numel as f64));
+                to.insert("crc32".into(), num(t.crc32 as f64));
+                Json::Obj(to)
+            }).collect()));
+            Json::Obj(bo)
+        }).collect()));
+        Json::Obj(o)
+    }
+
+    /// Canonical signed JSON text: the signature is the keyed hash of
+    /// the serialized object *without* the `sig` key (BTreeMap keys are
+    /// sorted and the writer emits no whitespace, so the text is
+    /// canonical by construction).
+    pub fn to_signed_text(&self) -> String {
+        let body = self.to_json_without_sig();
+        let sig = crc::sign(&body.to_string());
+        match body {
+            Json::Obj(mut o) => {
+                o.insert("sig".into(), Json::Str(sig));
+                Json::Obj(o).to_string()
+            }
+            _ => unreachable!("manifest body is an object"),
+        }
+    }
+
+    /// Parse + signature-verify a manifest read from `path`.
+    pub fn parse(text: &str, path: &str) -> Result<CkptManifest, RejectReason> {
+        let miss = |field: &str| RejectReason::MissingField {
+            path: path.to_string(), field: field.to_string(),
+        };
+        let j = Json::parse(text).map_err(|e| RejectReason::HeaderParse {
+            path: path.to_string(), err: e.to_string(),
+        })?;
+        let Json::Obj(mut o) = j else {
+            return Err(RejectReason::HeaderParse {
+                path: path.to_string(), err: "not an object".into(),
+            });
+        };
+        let sig = match o.remove("sig") {
+            Some(Json::Str(s)) => s,
+            _ => return Err(miss("sig")),
+        };
+        if !crc::verify(&Json::Obj(o.clone()).to_string(), &sig) {
+            return Err(RejectReason::BadSignature { path: path.to_string() });
+        }
+        let j = Json::Obj(o);
+        let format = j.get("format").and_then(Json::as_i64)
+            .ok_or_else(|| miss("format"))?;
+        if format != CKPT_FORMAT {
+            return Err(RejectReason::FormatVersion {
+                path: path.to_string(), got: format,
+            });
+        }
+        let sch = j.get("schedule").ok_or_else(|| miss("schedule"))?;
+        let mut blobs = Vec::new();
+        for b in j.get("blobs").and_then(Json::as_arr)
+            .ok_or_else(|| miss("blobs"))?
+        {
+            let mut tensors = Vec::new();
+            for t in b.get("tensors").and_then(Json::as_arr)
+                .ok_or_else(|| miss("blobs[].tensors"))?
+            {
+                tensors.push(TensorSum {
+                    name: t.get("name").and_then(Json::as_str)
+                        .ok_or_else(|| miss("tensors[].name"))?.to_string(),
+                    numel: t.get("numel").and_then(Json::as_usize)
+                        .ok_or_else(|| miss("tensors[].numel"))?,
+                    crc32: t.get("crc32").and_then(Json::as_i64)
+                        .ok_or_else(|| miss("tensors[].crc32"))? as u32,
+                });
+            }
+            blobs.push(BlobSum {
+                file: b.get("file").and_then(Json::as_str)
+                    .ok_or_else(|| miss("blobs[].file"))?.to_string(),
+                bytes: b.get("bytes").and_then(Json::as_usize)
+                    .ok_or_else(|| miss("blobs[].bytes"))?,
+                crc32: b.get("crc32").and_then(Json::as_i64)
+                    .ok_or_else(|| miss("blobs[].crc32"))? as u32,
+                tensors,
+            });
+        }
+        Ok(CkptManifest {
+            format,
+            step: j.get("step").and_then(Json::as_usize)
+                .ok_or_else(|| miss("step"))?,
+            preset: j.get("preset").and_then(Json::as_str)
+                .ok_or_else(|| miss("preset"))?.to_string(),
+            variant: j.get("variant").and_then(Json::as_str)
+                .ok_or_else(|| miss("variant"))?.to_string(),
+            simd_tier: j.get("simd_tier").and_then(Json::as_str)
+                .ok_or_else(|| miss("simd_tier"))?.to_string(),
+            threads: j.get("threads").and_then(Json::as_usize)
+                .ok_or_else(|| miss("threads"))?,
+            seed: j.get("seed").and_then(Json::as_i64)
+                .ok_or_else(|| miss("seed"))? as u64,
+            accum: j.get("accum").and_then(Json::as_usize)
+                .ok_or_else(|| miss("accum"))?,
+            schedule: Schedule {
+                steps: sch.get("steps").and_then(Json::as_usize)
+                    .ok_or_else(|| miss("schedule.steps"))?,
+                warmup_steps: sch.get("warmup_steps").and_then(Json::as_usize)
+                    .ok_or_else(|| miss("schedule.warmup_steps"))?,
+                lr: sch.get("lr").and_then(Json::as_f64)
+                    .ok_or_else(|| miss("schedule.lr"))?,
+                lr_min_frac: sch.get("lr_min_frac").and_then(Json::as_f64)
+                    .ok_or_else(|| miss("schedule.lr_min_frac"))?,
+            },
+            lqs_mask: j.get("lqs_mask").and_then(Json::as_arr)
+                .ok_or_else(|| miss("lqs_mask"))?
+                .iter()
+                .map(|m| m.as_f64().map(|x| x as f32)
+                    .ok_or_else(|| miss("lqs_mask[]")))
+                .collect::<Result<_, _>>()?,
+            eval_loss: j.get("eval_loss").and_then(Json::as_f64),
+            blobs,
+        })
+    }
+
+    /// Read + signature-verify the manifest at `path`.
+    pub fn read(path: &str) -> Result<CkptManifest, RejectReason> {
+        let text = fs::read_to_string(path)
+            .map_err(|e| RejectReason::HeaderIo {
+                path: path.to_string(), err: e.to_string(),
+            })?;
+        Self::parse(&text, path)
+    }
+
+    /// Re-sign and atomically (re)write this manifest — used by tests
+    /// and tools that edit a header in place (e.g. forcing a SIMD-tier
+    /// mismatch).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        write_atomic(path, self.to_signed_text().as_bytes(), "manifest")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// atomic write protocol
+// ---------------------------------------------------------------------------
+
+/// Bounded retry budget for transient write failures (the io-error
+/// fault plan exercises this; real transient errors get the same
+/// three chances before the save fails loudly).
+pub const WRITE_ATTEMPTS: usize = 3;
+
+/// Write `bytes` to `path` crash-safely: tmp file + fsync + rename +
+/// directory fsync, with up to [`WRITE_ATTEMPTS`] tries around
+/// (simulated or real) I/O failures. `label` names the blob kind for
+/// the fault hooks and error messages.
+pub fn write_atomic(path: &Path, bytes: &[u8], label: &str) -> Result<()> {
+    let mut last_err = None;
+    for attempt in 1..=WRITE_ATTEMPTS {
+        match try_write(path, bytes, label) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                crate::warn_!("write {} attempt {attempt}/{WRITE_ATTEMPTS} \
+                               failed: {e}", path.display());
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err.unwrap())
+        .with_context(|| format!("writing {label} blob {}", path.display()))
+}
+
+fn try_write(path: &Path, bytes: &[u8], label: &str) -> Result<()> {
+    if let Some(desc) = fault::io_error(label) {
+        anyhow::bail!("{desc}");
+    }
+    let tmp = path.with_extension(match path.extension() {
+        Some(e) => format!("{}.tmp", e.to_string_lossy()),
+        None => "tmp".to_string(),
+    });
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        // fsync before the rename: the rename must never become visible
+        // ahead of the data it points at
+        f.sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} -> {}", tmp.display(), path.display())
+    })?;
+    // best-effort directory fsync so the rename itself is durable;
+    // not all filesystems allow opening a directory for sync
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::DType;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "a".into(), shape: vec![2], dtype: DType::F32 },
+            TensorSpec { name: "b".into(), shape: vec![3], dtype: DType::F32 },
+        ]
+    }
+
+    fn blob_bytes() -> Vec<u8> {
+        [1.0f32, 2.0, 3.0, 4.0, 5.0]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect()
+    }
+
+    fn manifest() -> CkptManifest {
+        CkptManifest {
+            format: CKPT_FORMAT,
+            step: 7,
+            preset: "tiny".into(),
+            variant: "hot".into(),
+            simd_tier: "scalar".into(),
+            threads: 2,
+            seed: 42,
+            accum: 1,
+            schedule: Schedule { steps: 10, warmup_steps: 2, lr: 1e-3,
+                                 lr_min_frac: 0.1 },
+            lqs_mask: vec![0.0, 1.0],
+            eval_loss: Some(1.25),
+            blobs: vec![BlobSum::of("x.params.bin", &specs(), &blob_bytes())],
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        let m = manifest();
+        let text = m.to_signed_text();
+        let back = CkptManifest::parse(&text, "x.json").unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn any_text_edit_breaks_the_signature() {
+        let text = manifest().to_signed_text();
+        // flip every byte in turn; all must reject (parse error,
+        // missing field, or signature mismatch — never a clean parse)
+        let bytes = text.as_bytes();
+        for i in 0..bytes.len() {
+            let mut b = bytes.to_vec();
+            b[i] ^= 0x01;
+            let Ok(s) = String::from_utf8(b) else { continue };
+            assert!(CkptManifest::parse(&s, "x.json").is_err(),
+                    "byte {i} flip accepted: {s}");
+        }
+    }
+
+    #[test]
+    fn blob_verify_catches_shuffle_and_flip() {
+        let sum = BlobSum::of("b.bin", &specs(), &blob_bytes());
+        assert!(sum.verify(&specs(), &blob_bytes()).is_ok());
+
+        // single byte flip -> blob crc
+        let mut bad = blob_bytes();
+        bad[9] ^= 0x01;
+        assert!(matches!(sum.verify(&specs(), &bad),
+                         Err(RejectReason::BlobCrc { .. })));
+
+        // swapped tensor extents with identical total bytes: the blob
+        // crc already differs, but per-tensor verify must also name the
+        // culprit when only extents moved. Build a sum whose whole-blob
+        // crc matches but tensor layout lies:
+        let shuffled: Vec<u8> = {
+            let b = blob_bytes();
+            // rotate by one f32: "a" now starts with 2.0
+            [&b[4..], &b[..4]].concat()
+        };
+        let mut lying = BlobSum::of("b.bin", &specs(), &shuffled);
+        lying.tensors = sum.tensors.clone(); // claim the original extents
+        assert!(matches!(lying.verify(&specs(), &shuffled),
+                         Err(RejectReason::TensorCrc { .. })));
+
+        // wrong spec table
+        let other = vec![TensorSpec { name: "a".into(), shape: vec![5],
+                                      dtype: DType::F32 }];
+        assert!(sum.verify(&other, &blob_bytes()).is_err());
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp() {
+        let _g = fault::test_lock();
+        let dir = std::env::temp_dir().join("hot_res_atomic");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("blob.bin");
+        write_atomic(&p, b"hello", "params").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"hello");
+        assert!(!dir.join("blob.bin.tmp").exists());
+        // overwrite in place is atomic too
+        write_atomic(&p, b"world", "params").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"world");
+    }
+}

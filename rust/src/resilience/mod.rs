@@ -1,0 +1,34 @@
+//! Resilience subsystem (DESIGN.md §Resilience): crash-safe
+//! checkpointing, numeric sentinels with bounded rollback, and a
+//! deterministic fault-injection harness.
+//!
+//! Layering:
+//!
+//!   * [`crc`]      — CRC-32 (blobs, per-tensor extents) and the keyed
+//!                    manifest signature;
+//!   * [`manifest`] — the signed checkpoint header, typed
+//!                    [`RejectReason`]s, and the atomic write protocol
+//!                    (tmp + fsync + rename);
+//!   * [`store`]    — directory-level management: candidate discovery,
+//!                    [`resume_latest_valid`], retention (keep last K +
+//!                    best-eval);
+//!   * [`sentinel`] — per-step finite-loss/state guards and quantizer
+//!                    clip-rate watchdogs, plus the escalation state
+//!                    the trainer's rollback policy consumes;
+//!   * [`fault`]    — the `HOT_FAULT=` plan grammar and the
+//!                    deterministic hooks the write/train paths consult.
+//!
+//! The `coordinator::checkpoint` wire format builds on `crc` +
+//! `manifest`; the `Trainer` drives `store` + `sentinel`; integration
+//! tests drive everything through `fault`.
+
+pub mod crc;
+pub mod fault;
+pub mod manifest;
+pub mod sentinel;
+pub mod store;
+
+pub use fault::FaultPlan;
+pub use manifest::{BlobSum, CkptManifest, RejectReason, Schedule, TensorSum};
+pub use sentinel::{Sentinel, SentinelCfg, Trip};
+pub use store::{resume_latest_valid, CkptStore, ResumeScan};

@@ -1,0 +1,215 @@
+//! Numeric sentinels: per-step finite-loss/state guards and per-layer
+//! quantizer watchdogs.
+//!
+//! Low-bit training sits one bad amax away from clipping-induced
+//! divergence (HOT §5; Dithered Backprop makes the same point for
+//! stochastic quantizers), and a NaN that enters the AdamW moments
+//! never leaves on its own. The sentinel checks, after every training
+//! step:
+//!
+//!   1. the step loss is finite;
+//!   2. no weight slab and no AdamW moment contains a non-finite value
+//!      (a NaN gradient always poisons `m` on the same step);
+//!   3. no quantized layer's observed clip rate (obs quant telemetry)
+//!      exceeds the runaway threshold — per-tensor min-max scaling
+//!      clipping most of a tensor means the shared scale has collapsed.
+//!
+//! A trip hands control to the trainer's bounded-retry policy: roll
+//! back to the last-good checkpoint, then escalate per-layer LQS
+//! fallback -> wider quantizer (INT4 -> INT8 -> FP) -> abort with a
+//! structured report. The escalation *state* lives here; the rollback
+//! *mechanics* live in the trainer (it owns the weights and the store).
+
+use std::fmt;
+
+use crate::backend::{TrainState, WeightStore};
+use crate::obs::LayerQuant;
+
+/// Sentinel thresholds and retry budget.
+#[derive(Debug, Clone)]
+pub struct SentinelCfg {
+    pub enabled: bool,
+    /// Clip-rate watchdog threshold. Healthy amax-scaled quantization
+    /// clips (almost) nothing; most of a tensor clipping means the
+    /// shared scale collapsed. Only meaningful when obs telemetry is on.
+    pub clip_rate_max: f64,
+    /// Rollbacks allowed before the run aborts with a report.
+    pub max_rollbacks: usize,
+}
+
+impl Default for SentinelCfg {
+    fn default() -> Self {
+        SentinelCfg { enabled: true, clip_rate_max: 0.9, max_rollbacks: 3 }
+    }
+}
+
+/// One sentinel trip: what fired, where.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Trip {
+    NonFiniteLoss { step: usize, loss: f32 },
+    /// A weight slab or AdamW moment went non-finite.
+    NonFiniteState { step: usize, tensor: String },
+    ClipRunaway { step: usize, layer: String, clip_rate: f64 },
+}
+
+impl fmt::Display for Trip {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Trip::NonFiniteLoss { step, loss } => {
+                write!(f, "step {step}: non-finite loss {loss}")
+            }
+            Trip::NonFiniteState { step, tensor } => {
+                write!(f, "step {step}: non-finite value in {tensor:?}")
+            }
+            Trip::ClipRunaway { step, layer, clip_rate } => {
+                write!(f, "step {step}: quantizer clip runaway on \
+                           {layer:?} (clip rate {clip_rate:.2})")
+            }
+        }
+    }
+}
+
+/// Escalation state across a run: trips observed, rollbacks spent,
+/// actions taken (for the abort report and the metrics notes).
+#[derive(Debug, Default)]
+pub struct Sentinel {
+    pub cfg: SentinelCfg,
+    pub trips: Vec<Trip>,
+    pub rollbacks: usize,
+    pub actions: Vec<String>,
+}
+
+impl Sentinel {
+    pub fn new(cfg: SentinelCfg) -> Sentinel {
+        Sentinel { cfg, ..Sentinel::default() }
+    }
+
+    /// Inspect one completed step (`step` is the just-executed index).
+    /// Pure — recording the trip and deciding the response is the
+    /// trainer's call.
+    pub fn check(&self, step: usize, loss: f32, weights: &WeightStore,
+                 state: &TrainState, quant: &[LayerQuant]) -> Option<Trip> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        if !loss.is_finite() {
+            return Some(Trip::NonFiniteLoss { step, loss });
+        }
+        if let Some(name) = weights.first_non_finite() {
+            return Some(Trip::NonFiniteState { step,
+                                               tensor: name.to_string() });
+        }
+        if let Some(name) = state.first_non_finite(weights.specs()) {
+            return Some(Trip::NonFiniteState { step, tensor: name });
+        }
+        for l in quant {
+            if !l.amax.is_finite() {
+                return Some(Trip::NonFiniteState {
+                    step, tensor: format!("{} (quantizer amax)", l.name),
+                });
+            }
+            if l.clip_rate > self.cfg.clip_rate_max {
+                return Some(Trip::ClipRunaway {
+                    step, layer: l.name.clone(), clip_rate: l.clip_rate,
+                });
+            }
+        }
+        None
+    }
+
+    /// Structured abort report: every trip, every recovery action, and
+    /// the budget that ran out.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "sentinel abort: {} trip(s), {}/{} rollback(s) spent\n",
+            self.trips.len(), self.rollbacks, self.cfg.max_rollbacks);
+        for t in &self.trips {
+            s.push_str(&format!("  trip:   {t}\n"));
+        }
+        for a in &self.actions {
+            s.push_str(&format!("  action: {a}\n"));
+        }
+        s.push_str("  next:   inspect the checkpoint directory \
+                    (`hot ckpt verify`) and the quant telemetry \
+                    (quant_top CSV column) for the diverging layer");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, TensorSpec};
+    use crate::runtime::value::Value;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![TensorSpec { name: "w".into(), shape: vec![2],
+                          dtype: DType::F32 }]
+    }
+
+    fn store(vals: Vec<f32>) -> WeightStore {
+        WeightStore::from_values(
+            specs(), vec![Value::F32 { shape: vec![2], data: vals }]).unwrap()
+    }
+
+    fn lq(name: &str, amax: f32, clip: f64) -> LayerQuant {
+        LayerQuant { name: name.into(), amax, clip_rate: clip,
+                     mean_abs_err: 0.0, numel: 10 }
+    }
+
+    #[test]
+    fn clean_step_passes() {
+        let s = Sentinel::new(SentinelCfg::default());
+        let w = store(vec![1.0, 2.0]);
+        let st = TrainState::new(&specs(), 0);
+        assert_eq!(s.check(3, 0.5, &w, &st, &[lq("l0", 1.0, 0.0)]), None);
+    }
+
+    #[test]
+    fn trips_on_each_guard() {
+        let s = Sentinel::new(SentinelCfg::default());
+        let w = store(vec![1.0, 2.0]);
+        let mut st = TrainState::new(&specs(), 0);
+
+        assert!(matches!(s.check(1, f32::NAN, &w, &st, &[]),
+                         Some(Trip::NonFiniteLoss { step: 1, .. })));
+        assert!(matches!(s.check(1, f32::INFINITY, &w, &st, &[]),
+                         Some(Trip::NonFiniteLoss { .. })));
+
+        let bad_w = store(vec![1.0, f32::NAN]);
+        assert!(matches!(s.check(2, 0.5, &bad_w, &st, &[]),
+                         Some(Trip::NonFiniteState { step: 2, .. })));
+
+        st.m[0].as_f32_mut().unwrap()[1] = f32::NAN;
+        assert!(matches!(s.check(3, 0.5, &w, &st, &[]),
+                         Some(Trip::NonFiniteState { step: 3, .. })));
+        st.m[0].as_f32_mut().unwrap()[1] = 0.0;
+
+        assert!(matches!(s.check(4, 0.5, &w, &st, &[lq("l1", 1.0, 0.95)]),
+                         Some(Trip::ClipRunaway { step: 4, .. })));
+        assert!(matches!(s.check(4, 0.5, &w, &st,
+                                 &[lq("l1", f32::NAN, 0.0)]),
+                         Some(Trip::NonFiniteState { .. })));
+    }
+
+    #[test]
+    fn disabled_sentinel_never_trips() {
+        let s = Sentinel::new(SentinelCfg { enabled: false,
+                                            ..SentinelCfg::default() });
+        let w = store(vec![f32::NAN, 0.0]);
+        let st = TrainState::new(&specs(), 0);
+        assert_eq!(s.check(0, f32::NAN, &w, &st, &[]), None);
+    }
+
+    #[test]
+    fn report_names_trips_and_actions() {
+        let mut s = Sentinel::new(SentinelCfg::default());
+        s.trips.push(Trip::NonFiniteLoss { step: 7, loss: f32::NAN });
+        s.rollbacks = 1;
+        s.actions.push("rollback to step 4".into());
+        let r = s.report();
+        assert!(r.contains("step 7"));
+        assert!(r.contains("rollback to step 4"));
+        assert!(r.contains("1/3 rollback"));
+    }
+}

@@ -1,0 +1,271 @@
+//! Directory-level checkpoint management: candidate discovery, the
+//! walk-backwards `resume_latest_valid` scan, and the retention policy
+//! (keep last K + best-eval).
+//!
+//! A checkpoint *candidate* is any step number that left files behind —
+//! with or without a manifest. Torn saves (blobs but no header) are
+//! first-class candidates so the resume scan can report them with a
+//! typed [`RejectReason`] instead of silently ignoring the wreckage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::resilience::manifest::{CkptManifest, RejectReason};
+use crate::runtime::manifest::TensorSpec;
+
+/// One checkpoint-shaped step found in a directory.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub step: usize,
+    /// Path of `ckpt_<step>.json` when it exists; `None` = torn.
+    pub header: Option<String>,
+    /// Every file belonging to this step (blobs, header, stray tmps).
+    pub files: Vec<PathBuf>,
+}
+
+/// All candidates in `dir`, ascending by step. Files that merely look
+/// checkpoint-ish (`ckpt_` prefix) but carry no parseable step are
+/// ignored.
+pub fn candidates(dir: &str) -> Vec<Candidate> {
+    let mut by_step: BTreeMap<usize, Candidate> = BTreeMap::new();
+    let Ok(rd) = std::fs::read_dir(dir) else { return Vec::new() };
+    for e in rd.filter_map(|e| e.ok()) {
+        let path = e.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(rest) = name.strip_prefix("ckpt_") else { continue };
+        let digits: String =
+            rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        let Ok(step) = digits.parse::<usize>() else { continue };
+        let cand = by_step.entry(step).or_insert_with(|| Candidate {
+            step, header: None, files: Vec::new(),
+        });
+        if name.ends_with(".json") {
+            cand.header = Some(path.to_string_lossy().into_owned());
+        }
+        cand.files.push(path);
+    }
+    by_step.into_values().collect()
+}
+
+/// One rejected candidate from a resume scan.
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    /// Header path, or `ckpt_<step> (torn)` when no header exists.
+    pub label: String,
+    pub reason: RejectReason,
+}
+
+/// Outcome of [`resume_latest_valid`].
+#[derive(Debug)]
+pub struct ResumeScan {
+    /// The newest checkpoint that verified end to end, with its
+    /// manifest and header path.
+    pub loaded: Option<(Checkpoint, CkptManifest, String)>,
+    /// Every newer candidate that was walked past, with why.
+    pub rejected: Vec<Rejection>,
+}
+
+/// Walk the directory's candidates newest-first, fully verifying each
+/// (signature, blob sizes, blob + per-tensor CRCs, spec table, preset)
+/// and return the first that loads — plus a typed rejection for every
+/// corrupt, torn, or mismatched checkpoint skipped on the way.
+pub fn resume_latest_valid(dir: &str, specs: &[TensorSpec],
+                           want_preset: Option<&str>) -> ResumeScan {
+    let mut rejected = Vec::new();
+    for cand in candidates(dir).into_iter().rev() {
+        let Some(header) = cand.header else {
+            rejected.push(Rejection {
+                label: format!("ckpt_{:06} (torn)", cand.step),
+                reason: RejectReason::ManifestMissing { step: cand.step },
+            });
+            continue;
+        };
+        match Checkpoint::load_verified(&header, specs) {
+            Ok((ck, man)) => {
+                if let Some(want) = want_preset {
+                    if ck.preset != want {
+                        rejected.push(Rejection {
+                            label: header,
+                            reason: RejectReason::PresetMismatch {
+                                got: ck.preset.clone(),
+                                want: want.to_string(),
+                            },
+                        });
+                        continue;
+                    }
+                }
+                return ResumeScan { loaded: Some((ck, man, header)),
+                                    rejected };
+            }
+            Err(reason) => rejected.push(Rejection { label: header, reason }),
+        }
+    }
+    ResumeScan { loaded: None, rejected }
+}
+
+/// Retention manager for a checkpoint directory: keeps the last
+/// `keep_last` checkpoints plus the best-eval one, deletes the rest
+/// (and sweeps stray `.tmp` files from interrupted saves).
+#[derive(Debug)]
+pub struct CkptStore {
+    pub dir: String,
+    pub keep_last: usize,
+    /// (step -> eval loss) notes fed by the trainer; the minimum-loss
+    /// step is exempt from retention.
+    evals: BTreeMap<usize, f64>,
+}
+
+impl CkptStore {
+    pub fn new(dir: &str, keep_last: usize) -> CkptStore {
+        CkptStore { dir: dir.to_string(), keep_last: keep_last.max(1),
+                    evals: BTreeMap::new() }
+    }
+
+    /// Record an eval result so retention can protect the best step.
+    pub fn note_eval(&mut self, step: usize, loss: f64) {
+        if loss.is_finite() {
+            self.evals.insert(step, loss);
+        }
+    }
+
+    /// The step with the lowest recorded eval loss, if any.
+    pub fn best_step(&self) -> Option<usize> {
+        self.evals
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(s, _)| *s)
+    }
+
+    /// Apply the retention policy; returns the steps whose files were
+    /// deleted. Torn candidates older than the keep window are swept
+    /// too (their typed rejection has served its purpose once a newer
+    /// complete checkpoint exists).
+    pub fn retain(&self) -> Result<Vec<usize>> {
+        let cands = candidates(&self.dir);
+        let complete: Vec<usize> =
+            cands.iter().filter(|c| c.header.is_some()).map(|c| c.step)
+                 .collect();
+        if complete.len() <= self.keep_last {
+            return Ok(Vec::new());
+        }
+        let keep_from = complete[complete.len() - self.keep_last];
+        let best = self.best_step();
+        let mut deleted = Vec::new();
+        for c in &cands {
+            let keep = c.step >= keep_from || Some(c.step) == best;
+            if keep {
+                continue;
+            }
+            for f in &c.files {
+                std::fs::remove_file(f).with_context(|| {
+                    format!("retention: removing {}", f.display())
+                })?;
+            }
+            deleted.push(c.step);
+        }
+        Ok(deleted)
+    }
+}
+
+/// Sweep `.tmp` leftovers from interrupted atomic writes in `dir`.
+pub fn sweep_tmp(dir: &str) -> usize {
+    let Ok(rd) = std::fs::read_dir(dir) else { return 0 };
+    let mut n = 0;
+    for e in rd.filter_map(|e| e.ok()) {
+        let p = e.path();
+        if p.extension().map(|x| x == "tmp").unwrap_or(false)
+            && p.file_name()
+                .and_then(|f| f.to_str())
+                .map(|f| f.starts_with("ckpt_"))
+                .unwrap_or(false)
+            && std::fs::remove_file(&p).is_ok()
+        {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Is `path` inside a checkpoint directory structure this module owns?
+/// (Used by `hot ckpt` to sanity-check arguments.)
+pub fn looks_like_ckpt_dir(dir: &str) -> bool {
+    Path::new(dir).is_dir() && !candidates(dir).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn touch(dir: &Path, name: &str) {
+        std::fs::write(dir.join(name), b"x").unwrap();
+    }
+
+    #[test]
+    fn candidates_group_by_step_and_flag_torn() {
+        let dir = std::env::temp_dir().join("hot_res_cands");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        touch(&dir, "ckpt_000002.json");
+        touch(&dir, "ckpt_000002.params.bin");
+        touch(&dir, "ckpt_000005.params.bin"); // torn: no header
+        touch(&dir, "ckpt_000005.m.bin");
+        touch(&dir, "unrelated.txt");
+        let cs = candidates(dir.to_str().unwrap());
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].step, 2);
+        assert!(cs[0].header.is_some());
+        assert_eq!(cs[0].files.len(), 2);
+        assert_eq!(cs[1].step, 5);
+        assert!(cs[1].header.is_none());
+    }
+
+    #[test]
+    fn torn_candidate_rejected_with_typed_reason() {
+        let dir = std::env::temp_dir().join("hot_res_torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        touch(&dir, "ckpt_000009.params.bin");
+        let scan = resume_latest_valid(dir.to_str().unwrap(), &[], None);
+        assert!(scan.loaded.is_none());
+        assert_eq!(scan.rejected.len(), 1);
+        assert!(matches!(scan.rejected[0].reason,
+                         RejectReason::ManifestMissing { step: 9 }));
+    }
+
+    #[test]
+    fn retention_keeps_last_k_and_best() {
+        let dir = std::env::temp_dir().join("hot_res_retain");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for s in [1usize, 2, 3, 4, 5] {
+            touch(&dir, &format!("ckpt_{s:06}.json"));
+            touch(&dir, &format!("ckpt_{s:06}.params.bin"));
+        }
+        let mut st = CkptStore::new(dir.to_str().unwrap(), 2);
+        st.note_eval(2, 0.5); // best eval at an old step
+        st.note_eval(4, 0.9);
+        let deleted = st.retain().unwrap();
+        assert_eq!(deleted, vec![1, 3]);
+        let left: Vec<usize> = candidates(dir.to_str().unwrap())
+            .iter().map(|c| c.step).collect();
+        assert_eq!(left, vec![2, 4, 5]); // last 2 + best-eval
+        // under the keep budget -> no-op
+        assert!(st.retain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn tmp_sweep() {
+        let dir = std::env::temp_dir().join("hot_res_sweep");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        touch(&dir, "ckpt_000001.params.bin.tmp");
+        touch(&dir, "ckpt_000001.json");
+        assert_eq!(sweep_tmp(dir.to_str().unwrap()), 1);
+        assert!(dir.join("ckpt_000001.json").exists());
+    }
+}

@@ -1,0 +1,334 @@
+//! Resilience integration suite: crash-safe checkpoints, the numeric
+//! sentinel's rollback/escalation ladder, and the deterministic fault
+//! harness, driven end to end through the `Trainer` on the native
+//! backend.
+//!
+//! The fault slot is process-global, so this binary runs everything as
+//! ONE sequential `#[test]` — arming a plan in parallel tests would
+//! race. (Separate test binaries are separate processes; they cannot
+//! interfere.)
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use hot::backend::{Executor, NativeBackend};
+use hot::config::RunConfig;
+use hot::coordinator::{Checkpoint, Mode, Trainer};
+use hot::resilience::fault::{self, FaultPlan};
+use hot::resilience::manifest::{CkptManifest, RejectReason};
+use hot::resilience::store::{candidates, resume_latest_valid};
+use hot::util::prng::Pcg32;
+
+type Check = (&'static str, fn(Arc<dyn Executor>));
+
+#[test]
+fn resilience_suite() {
+    let rt: Arc<dyn Executor> = Arc::new(NativeBackend::new());
+    let checks: Vec<Check> = vec![
+        ("any_byte_flip_rejects_and_falls_back",
+         any_byte_flip_rejects_and_falls_back),
+        ("crash_between_blobs_through_trainer",
+         crash_between_blobs_through_trainer),
+        ("kill_resume_is_bit_identical", kill_resume_is_bit_identical),
+        ("nan_in_grad_rolls_back_and_finishes",
+         nan_in_grad_rolls_back_and_finishes),
+        ("scan_walks_past_multiple_bad_checkpoints",
+         scan_walks_past_multiple_bad_checkpoints),
+        ("io_error_retry_is_bounded", io_error_retry_is_bounded),
+        ("simd_tier_mismatch_resumes_gracefully",
+         simd_tier_mismatch_resumes_gracefully),
+        ("retention_through_trainer", retention_through_trainer),
+    ];
+    for (name, f) in checks {
+        let t0 = std::time::Instant::now();
+        fault::disarm(); // no plan leaks across checks
+        f(rt.clone());
+        eprintln!("  ok {name} ({:.1}s)", t0.elapsed().as_secs_f64());
+    }
+    fault::disarm();
+}
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hot_resil_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg_with_dir(dir: &Path, steps: usize, every: usize) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.preset = "tiny".into();
+    c.variant = "hot".into();
+    c.steps = steps;
+    c.batch = 16;
+    c.calib_batches = 1;
+    c.warmup_steps = 2;
+    c.lr = 3e-3;
+    c.eval_every = 0;
+    c.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    c.checkpoint_every = every;
+    c
+}
+
+fn weight_bits(tr: &Trainer) -> Vec<(String, Vec<u32>)> {
+    tr.weights
+        .iter()
+        .map(|(s, d)| {
+            (s.name.clone(), d.iter().map(|x| x.to_bits()).collect())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. property test: a single flipped byte in ANY checkpoint file makes
+//    the resume scan reject it and fall back to an older valid one
+// ---------------------------------------------------------------------------
+
+fn any_byte_flip_rejects_and_falls_back(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("flip");
+    let cfg = cfg_with_dir(&dir, 2, 0); // anchor at 0 + final at 2
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    tr.train().unwrap();
+    let dirs = dir.to_str().unwrap();
+    let specs = tr.preset.params.clone();
+
+    let cands = candidates(dirs);
+    let newest = cands.last().expect("final checkpoint written");
+    assert_eq!(newest.step, 2);
+    assert!(cands.iter().any(|c| c.step == 0), "anchor is the fallback");
+
+    let mut rng = Pcg32::seeded(0xf11b);
+    for file in &newest.files {
+        let orig = std::fs::read(file).unwrap();
+        assert!(!orig.is_empty(), "{}", file.display());
+        // first, last, and a PRNG sample of interior offsets
+        let mut offsets = vec![0usize, orig.len() - 1];
+        for _ in 0..6 {
+            offsets.push(rng.below(orig.len() as u32) as usize);
+        }
+        for off in offsets {
+            let mut bad = orig.clone();
+            bad[off] ^= 0x01;
+            std::fs::write(file, &bad).unwrap();
+            let scan = resume_latest_valid(dirs, &specs, None);
+            let loaded_step = scan.loaded.as_ref().map(|(ck, _, _)| ck.step);
+            assert_eq!(loaded_step, Some(0),
+                       "flip {}:{off} must reject step 2 and fall back",
+                       file.display());
+            assert!(scan.rejected.iter().any(|r| r.label.contains("000002")),
+                    "flip {}:{off} must produce a typed rejection",
+                    file.display());
+        }
+        std::fs::write(file, &orig).unwrap();
+    }
+    // pristine again: the newest loads
+    let scan = resume_latest_valid(dirs, &specs, None);
+    assert_eq!(scan.loaded.map(|(ck, _, _)| ck.step), Some(2));
+}
+
+// ---------------------------------------------------------------------------
+// 2. crash-between-blobs through the trainer's own save site
+// ---------------------------------------------------------------------------
+
+fn crash_between_blobs_through_trainer(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("crash");
+    let cfg = cfg_with_dir(&dir, 2, 0);
+    fault::arm(FaultPlan::CrashBetweenBlobs);
+    let mut tr = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    let err = tr.train().expect_err("anchor save must hit the crash");
+    assert!(format!("{err:#}").contains("crash"), "{err:#}");
+    // the torn step 0 is a typed rejection, never a load
+    let dirs = dir.to_str().unwrap();
+    let scan = resume_latest_valid(dirs, &tr.preset.params, None);
+    assert!(scan.loaded.is_none());
+    assert!(matches!(scan.rejected[0].reason,
+                     RejectReason::ManifestMissing { step: 0 }));
+    // the plan fired once: a rerun writes over the wreckage and finishes
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    tr.train().unwrap();
+    let scan = resume_latest_valid(dirs, &tr.preset.params, None);
+    assert_eq!(scan.loaded.map(|(ck, _, _)| ck.step), Some(2));
+}
+
+// ---------------------------------------------------------------------------
+// 3. the headline contract: train -> kill -> `--resume` converges
+//    bit-identically to the run that was never interrupted
+// ---------------------------------------------------------------------------
+
+fn kill_resume_is_bit_identical(rt: Arc<dyn Executor>) {
+    // run A: uninterrupted reference
+    let dir_a = fresh_dir("bitid_a");
+    let mut a = Trainer::new(rt.clone(), cfg_with_dir(&dir_a, 8, 2)).unwrap();
+    a.train().unwrap();
+
+    // run K: same config, killed after step 5 (last checkpoint: step 4)
+    let dir_b = fresh_dir("bitid_b");
+    let cfg_b = cfg_with_dir(&dir_b, 8, 2);
+    {
+        let mut k = Trainer::new(rt.clone(), cfg_b.clone()).unwrap();
+        k.calibrate().unwrap();
+        for _ in 0..5 {
+            k.step_once(Mode::Fused).unwrap();
+            if k.step % 2 == 0 {
+                k.checkpoint_now().unwrap();
+            }
+        }
+        assert_eq!(k.step, 5);
+        // trainer dropped here = the kill; step 5's progress is lost
+    }
+
+    // run B: auto-resume walks to step 4 and finishes the schedule
+    let mut b = Trainer::new(rt, cfg_b).unwrap();
+    assert!(b.resume_auto().unwrap(), "must find the step-4 checkpoint");
+    assert_eq!(b.step, 4);
+    assert!(b.mask_locked, "manifest LQS mask restored verbatim");
+    assert_eq!(b.lqs_mask, a.lqs_mask, "resumed mask == calibrated mask");
+    b.train().unwrap();
+    assert_eq!(b.step, 8);
+
+    // overlapping per-step losses are bit-equal...
+    for rb in &b.metrics.records {
+        let ra = a.metrics.records.iter().find(|r| r.step == rb.step)
+            .expect("reference ran the same step");
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(),
+                   "step {}: {} vs {}", rb.step, ra.loss, rb.loss);
+    }
+    // ...and so are the final weights
+    let (wa, wb) = (weight_bits(&a), weight_bits(&b));
+    assert_eq!(wa.len(), wb.len());
+    for ((na, da), (nb, db)) in wa.iter().zip(&wb) {
+        assert_eq!(na, nb);
+        assert_eq!(da, db, "weights diverged in {na}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. sentinel: a NaN gradient trips the finite-loss guard, rolls back
+//    to the last-good checkpoint, and the run still finishes cleanly
+// ---------------------------------------------------------------------------
+
+fn nan_in_grad_rolls_back_and_finishes(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("nan");
+    let cfg = cfg_with_dir(&dir, 6, 1);
+    fault::arm(FaultPlan::NanInGradAtStep { step: 3 });
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    tr.train().unwrap();
+    assert_eq!(tr.step, 6);
+    assert!(fault::armed().is_none(), "plan fires exactly once");
+    assert_eq!(tr.sentinel.rollbacks, 1);
+    assert!(!tr.sentinel.trips.is_empty());
+    assert!(tr.sentinel.actions.iter().any(|a| a.contains("rollback")));
+    assert!(tr.metrics.notes.iter().any(|(s, n)| *s == 3
+                                         && n.contains("sentinel trip")));
+    // the tripped step was re-run from the restored state: its batch
+    // index appears twice in the record stream, once poisoned, once good
+    let replays =
+        tr.metrics.records.iter().filter(|r| r.step == 3).count();
+    assert_eq!(replays, 2, "step 3 must be replayed after rollback");
+    let finite: Vec<&f32> = tr.metrics.records.iter().rev().take(3)
+        .map(|r| &r.loss).collect();
+    assert!(finite.iter().all(|l| l.is_finite()), "{finite:?}");
+    assert!(tr.weights.first_non_finite().is_none());
+}
+
+// ---------------------------------------------------------------------------
+// 5. the scan walks past MULTIPLE corrupt checkpoints, each with its
+//    own typed reason, before loading an older valid one
+// ---------------------------------------------------------------------------
+
+fn scan_walks_past_multiple_bad_checkpoints(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("walk");
+    let cfg = cfg_with_dir(&dir, 3, 1);
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    tr.train().unwrap();
+    let dirs = dir.to_str().unwrap();
+    let steps: Vec<usize> =
+        candidates(dirs).iter().map(|c| c.step).collect();
+    assert_eq!(steps, vec![1, 2, 3], "retention keeps the last 3");
+
+    // newest: truncated params blob; next: bit-rotted moment blob
+    let p3 = dir.join("ckpt_000003.params.bin");
+    let orig3 = std::fs::read(&p3).unwrap();
+    std::fs::write(&p3, &orig3[..16]).unwrap();
+    let p2 = dir.join("ckpt_000002.m.bin");
+    let mut b2 = std::fs::read(&p2).unwrap();
+    b2[7] ^= 0x01;
+    std::fs::write(&p2, &b2).unwrap();
+
+    let scan = resume_latest_valid(dirs, &tr.preset.params, Some("tiny"));
+    assert_eq!(scan.loaded.as_ref().map(|(ck, _, _)| ck.step), Some(1));
+    assert_eq!(scan.rejected.len(), 2);
+    assert!(matches!(scan.rejected[0].reason,
+                     RejectReason::BlobSize { .. }),
+            "{:?}", scan.rejected[0].reason);
+    assert!(matches!(scan.rejected[1].reason,
+                     RejectReason::BlobCrc { .. }),
+            "{:?}", scan.rejected[1].reason);
+}
+
+// ---------------------------------------------------------------------------
+// 6. io-error: transient failures are retried (bounded), persistent
+//    ones fail the save loudly
+// ---------------------------------------------------------------------------
+
+fn io_error_retry_is_bounded(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("ioerr");
+    let cfg = cfg_with_dir(&dir, 2, 0);
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    tr.step_once(Mode::Fused).unwrap();
+
+    // 2 failures < WRITE_ATTEMPTS: the retry loop absorbs them
+    fault::arm(FaultPlan::IoError { failures: 2 });
+    let hdr = tr.checkpoint_now().unwrap().expect("dir configured");
+    assert!(Path::new(&hdr).exists());
+
+    // a persistent failure exhausts the budget and surfaces
+    fault::arm(FaultPlan::IoError { failures: 50 });
+    let err = tr.checkpoint_now().expect_err("must fail past the budget");
+    assert!(format!("{err:#}").contains("io error"), "{err:#}");
+    fault::disarm();
+
+    // and a clean save still works afterwards
+    tr.checkpoint_now().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 7. SIMD-tier mismatch at resume degrades gracefully: warn +
+//    redispatch, never a rejection
+// ---------------------------------------------------------------------------
+
+fn simd_tier_mismatch_resumes_gracefully(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("tier");
+    let cfg = cfg_with_dir(&dir, 2, 0);
+    let mut tr = Trainer::new(rt.clone(), cfg.clone()).unwrap();
+    tr.train().unwrap();
+
+    let hdr = Checkpoint::latest(dir.to_str().unwrap()).unwrap();
+    let mut man = CkptManifest::read(&hdr).unwrap();
+    man.simd_tier = "some-other-isa".into();
+    man.write(Path::new(&hdr)).unwrap(); // re-signs
+
+    let mut tr2 = Trainer::new(rt, cfg).unwrap();
+    assert!(tr2.resume_auto().unwrap(),
+            "tier mismatch must not reject the checkpoint");
+    assert_eq!(tr2.step, 2);
+}
+
+// ---------------------------------------------------------------------------
+// 8. retention through the trainer: keep_last bounds the directory
+// ---------------------------------------------------------------------------
+
+fn retention_through_trainer(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("retain");
+    let mut cfg = cfg_with_dir(&dir, 5, 1);
+    cfg.keep_last = 2;
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    tr.train().unwrap();
+    let steps: Vec<usize> =
+        candidates(dir.to_str().unwrap()).iter().map(|c| c.step).collect();
+    assert_eq!(steps, vec![4, 5],
+               "anchor + early checkpoints must be retired");
+}
