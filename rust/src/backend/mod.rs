@@ -142,6 +142,21 @@ pub trait Executor {
         bail!("backend {:?} has no inference path for {key:?}", self.name())
     }
 
+    /// Degraded inference for serving under sustained overload: the
+    /// same walk as [`infer`] but with the GEMM weights through the
+    /// INT8 kernel tiers (per-tensor min-max scales, quantized once
+    /// per frozen store and cached by the backend). Logits are
+    /// approximate but deterministic — the rung of the serve
+    /// degradation ladder between full precision and load shedding.
+    ///
+    /// [`infer`]: Executor::infer
+    fn infer_degraded(&self, key: &str, weights: &WeightStore, x: &Value)
+                      -> Result<Value> {
+        let _ = (weights, x);
+        bail!("backend {:?} has no degraded inference path for {key:?}",
+              self.name())
+    }
+
     /// LQS calibration: the 7 per-qlinear diagnostic vectors (model
     /// order) — mse_tensor, mse_token, outlier, gx_err_hq, gx_err_hla,
     /// gw_err_hq, gw_err_hla.

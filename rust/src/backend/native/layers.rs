@@ -296,6 +296,30 @@ pub fn qlinear_y(x: &[f32], n: usize, i: usize, w: &[f32], o: usize,
     y
 }
 
+/// y = x w.T + b through the INT8 kernel tier — the serving
+/// degradation ladder's reduced-precision forward (DESIGN.md
+/// §Serving). `wq_t` is the weight pre-quantized *and* pre-transposed
+/// to (i, o): serving weights are frozen, so the quantize+transpose is
+/// paid once per store (`model::QuantParams`) while the activation is
+/// quantized per-tensor on the fly, exactly the gx_q4_noht recipe
+/// below but with the weight half hoisted out of the hot path. Output
+/// is approximate (per-tensor min-max scales) and deterministic — the
+/// pseudo-stochastic rounding is input-keyed, so a degraded request
+/// replayed against the same weights reproduces bit-identically.
+pub fn qlinear_y_i8(x: &[f32], n: usize, i: usize, wq_t: &[i8],
+                    w_scale: f32, o: usize, bias: &[f32]) -> Vec<f32> {
+    let s_x = quant::minmax_scale(x, 8);
+    let xq = quant::quantize_ps(x, s_x, 8);
+    let mut y = gemm_i8_nn_deq(&xq, wq_t, n, i, o, s_x * w_scale);
+    for r in 0..n {
+        let row = &mut y[r * o..(r + 1) * o];
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+    y
+}
+
 /// Shared forward core: the compress-or-keep ctx decision lives in ONE
 /// place; `Cow` carries whether the caller handed over ownership (the
 /// uncompressed ctx then keeps the buffer without copying) or only a

@@ -32,8 +32,20 @@ struct Entry {
     preset: Preset,
 }
 
+/// How many (store, preset) INT8 weight snapshots `infer_degraded`
+/// keeps before evicting the oldest — bounds memory under tenant churn.
+const QCACHE_CAP: usize = 64;
+
 pub struct NativeBackend {
     entries: Vec<Entry>,
+    /// INT8 weight snapshots for degraded serving, keyed by (first-slab
+    /// data pointer, preset): a frozen store is quantized once, then
+    /// every degraded request against it (including `share()`d views,
+    /// which alias the same slabs) reuses the snapshot. `RefCell`
+    /// because `Executor` methods take `&self`; the backend is
+    /// deliberately not `Sync` — each serve worker owns its own.
+    qcache: std::cell::RefCell<Vec<(usize, String,
+                                    std::rc::Rc<model::QuantParams>)>>,
 }
 
 impl Default for NativeBackend {
@@ -81,7 +93,32 @@ impl NativeBackend {
                 shape,
             })
             .collect();
-        NativeBackend { entries }
+        NativeBackend { entries, qcache: std::cell::RefCell::new(Vec::new()) }
+    }
+
+    /// The cached INT8 snapshot for (store, preset), built on first
+    /// use. Slab identity (the first slab's data pointer) is the cache
+    /// key: stores are immutable while shared, and serve tenants hold
+    /// `share()`d views of one base, so they all hit one entry.
+    fn quantized(&self, preset: &str, store: &WeightStore)
+                 -> std::rc::Rc<model::QuantParams> {
+        let key = store
+            .iter()
+            .next()
+            .map(|(_, d)| d.as_ptr() as usize)
+            .unwrap_or(0);
+        let mut cache = self.qcache.borrow_mut();
+        if let Some((_, _, qp)) =
+            cache.iter().find(|(k, p, _)| *k == key && p == preset)
+        {
+            return qp.clone();
+        }
+        let qp = std::rc::Rc::new(model::QuantParams::from_store(store));
+        if cache.len() >= QCACHE_CAP {
+            cache.remove(0);
+        }
+        cache.push((key, preset.to_string(), qp.clone()));
+        qp
     }
 
     fn entry(&self, name: &str) -> Result<&Entry> {
@@ -293,6 +330,18 @@ impl Executor for NativeBackend {
         let e = self.entry(&preset)?;
         let p = Params::from_store(weights);
         model::fwd_infer(&e.shape, &p, x)
+    }
+
+    fn infer_degraded(&self, key: &str, weights: &WeightStore, x: &Value)
+                      -> Result<Value> {
+        let preset = match self.parse(key)? {
+            StepKey::Infer { preset } => preset,
+            other => bail!("{key:?} is not an infer step ({other:?})"),
+        };
+        let e = self.entry(&preset)?;
+        let qp = self.quantized(&preset, weights);
+        let p = Params::from_store(weights);
+        model::fwd_infer_i8(&e.shape, &p, &qp, x)
     }
 
     fn calib_step(&self, key: &str, weights: &WeightStore, x: &Value,
@@ -546,5 +595,39 @@ mod tests {
         assert_eq!(logits.shape(), &[4, preset.model.n_classes]);
         assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
         assert!(b.infer("train_hot_tiny", &serving, &x).is_err());
+    }
+
+    #[test]
+    fn degraded_infer_is_finite_deterministic_and_tracks_f32() {
+        use crate::data::LmDataset;
+        let b = backend();
+        let preset = b.preset("lm_tiny").unwrap();
+        let ds = LmDataset::new(preset.model.seq, preset.model.in_dim, 3);
+        let weights = b.init_store("lm_tiny").unwrap();
+        let (x, _) = ds.batch(1, 0, 4);
+        let exact = b.infer("infer_lm_tiny", &weights, &x).unwrap();
+        let deg = b.infer_degraded("infer_lm_tiny", &weights, &x).unwrap();
+        assert_eq!(deg.shape(), exact.shape());
+        let (ef, df) = (exact.as_f32().unwrap(), deg.as_f32().unwrap());
+        assert!(df.iter().all(|v| v.is_finite()));
+        // approximate, but the INT8 tier must stay in the same ballpark
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, d) in ef.iter().zip(df) {
+            num += ((a - d) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+        assert!(num / den.max(1e-12) < 0.25,
+                "int8 rel err {}", num / den.max(1e-12));
+        // deterministic: replays bit-identically, including through a
+        // share()d view (which must hit the same cached snapshot)
+        let again = b.infer_degraded("infer_lm_tiny", &weights, &x).unwrap();
+        assert_eq!(again.as_f32().unwrap(), df);
+        let shared = weights.share();
+        let via_share =
+            b.infer_degraded("infer_lm_tiny", &shared, &x).unwrap();
+        assert_eq!(via_share.as_f32().unwrap(), df);
+        assert_eq!(b.qcache.borrow().len(), 1, "share() views share one \
+                                                snapshot");
+        assert!(b.infer_degraded("train_hot_tiny", &weights, &x).is_err());
     }
 }

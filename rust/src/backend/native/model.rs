@@ -698,6 +698,161 @@ pub fn eval_infer(shape: &ModelShape, p: &Params, x: &Value, y: &Value)
 }
 
 // ---------------------------------------------------------------------------
+// Degraded inference: INT8 weights through the int GEMM tiers
+// ---------------------------------------------------------------------------
+
+/// Per-tensor INT8 snapshot of a store's GEMM weights, pre-transposed
+/// to (i, o) so the int kernels run NN against row-major activations
+/// (there is no i8 NT kernel). Built once when serving degrades under
+/// sustained overload: the weights are frozen, so the quantize +
+/// transpose cost amortizes over every degraded request, and the
+/// backend caches the snapshot per (store, preset). Biases, LayerNorm
+/// parameters and the positional table stay exact f32 — they are
+/// vector adds, not GEMMs, and carry none of the FLOP cost.
+pub struct QuantParams {
+    /// name -> ((i, o)-layout INT8 codes, per-tensor min-max scale)
+    w: BTreeMap<String, (Vec<i8>, f32)>,
+}
+
+impl QuantParams {
+    /// The tensors that feed `qlinear_y` in the inference walk.
+    fn is_gemm_weight(name: &str) -> bool {
+        name.ends_with(".w") || name.ends_with(".wqkv")
+            || name.ends_with(".wo")
+    }
+
+    /// Quantize + transpose every GEMM weight of `store` (per-tensor
+    /// min-max 8-bit, the same scales `gx_q4_noht` uses on the
+    /// backward's int path).
+    pub fn from_store(store: &crate::backend::state::WeightStore)
+                      -> QuantParams {
+        let mut w = BTreeMap::new();
+        for (spec, data) in store.iter() {
+            if !Self::is_gemm_weight(&spec.name) || spec.shape.len() != 2 {
+                continue;
+            }
+            let (o, i) = (spec.shape[0], spec.shape[1]);
+            let s = quant::minmax_scale(data, 8);
+            let q = quant::quantize_ps(data, s, 8);
+            let mut qt = vec![0i8; i * o];
+            for r in 0..o {
+                for c in 0..i {
+                    qt[c * o + r] = q[r * i + c];
+                }
+            }
+            w.insert(spec.name.clone(), (qt, s));
+        }
+        QuantParams { w }
+    }
+
+    fn get(&self, name: &str) -> Result<(&[i8], f32)> {
+        self.w
+            .get(name)
+            .map(|(q, s)| (q.as_slice(), *s))
+            .with_context(|| format!("no quantized weight {name:?}"))
+    }
+}
+
+/// `infer_logits` with every `qlinear_y` routed through the INT8
+/// kernel tier (`layers::qlinear_y_i8`). Same walk, same non-GEMM ops
+/// in f32 — only the GEMMs trade precision for the int tier's
+/// throughput. Logits are approximate but deterministic.
+fn infer_logits_i8(shape: &ModelShape, p: &Params, qp: &QuantParams,
+                   x: &Value) -> Result<(Vec<f32>, usize)> {
+    let (d, l, m) = (shape.d_model, shape.seq, shape.d_mlp());
+    let (xf, b) = embed_input(shape, x)?;
+    let n = b * l;
+    let qy = |x: &[f32], n: usize, i: usize, name: &str, o: usize,
+              bias: &[f32]| -> Result<Vec<f32>> {
+        let (wq, s) = qp.get(name)?;
+        Ok(layers::qlinear_y_i8(x, n, i, wq, s, o, bias))
+    };
+
+    let mut h = qy(&xf, n, shape.in_dim, "embed.w", d, p.f("embed.b")?)?;
+    let pos = p.f("pos")?;
+    for r in 0..n {
+        let t = r % l;
+        let row = &mut h[r * d..(r + 1) * d];
+        for (v, pv) in row.iter_mut().zip(&pos[t * d..(t + 1) * d]) {
+            *v += pv;
+        }
+    }
+
+    for blk in 0..shape.depth {
+        let pre = format!("blk{blk}.");
+        if shape.has_attention() {
+            let (hn, _) = layers::layernorm_fwd(
+                &h, n, d, p.f(&format!("{pre}ln1.g"))?,
+                p.f(&format!("{pre}ln1.b"))?);
+            let qkv = qy(&hn, n, d, &format!("{pre}attn.wqkv"), 3 * d,
+                         p.f(&format!("{pre}attn.bqkv"))?)?;
+            let mut q = vec![0.0f32; n * d];
+            let mut k = vec![0.0f32; n * d];
+            let mut v = vec![0.0f32; n * d];
+            for r in 0..n {
+                for j in 0..d {
+                    q[r * d + j] = qkv[r * 3 * d + j];
+                    k[r * d + j] = qkv[r * 3 * d + d + j];
+                    v[r * d + j] = qkv[r * 3 * d + 2 * d + j];
+                }
+            }
+            let (att, _) = layers::attention_fwd(
+                &q, &k, &v, b, l, d, shape.heads, shape.arch == "lm");
+            let proj = qy(&att, n, d, &format!("{pre}attn.wo"), d,
+                          p.f(&format!("{pre}attn.bo"))?)?;
+            for (hv, pv) in h.iter_mut().zip(&proj) {
+                *hv += pv;
+            }
+        }
+        let (hn, _) = layers::layernorm_fwd(
+            &h, n, d, p.f(&format!("{pre}ln2.g"))?,
+            p.f(&format!("{pre}ln2.b"))?);
+        let f1 = qy(&hn, n, d, &format!("{pre}fc1.w"), m,
+                    p.f(&format!("{pre}fc1.b"))?)?;
+        let (g1, _) = layers::gelu_fwd(f1);
+        let f2 = qy(&g1, n, m, &format!("{pre}fc2.w"), d,
+                    p.f(&format!("{pre}fc2.b"))?)?;
+        for (hv, fv) in h.iter_mut().zip(&f2) {
+            *hv += fv;
+        }
+    }
+
+    let (hn, _) = layers::layernorm_fwd(&h, n, d, p.f("lnf.g")?,
+                                        p.f("lnf.b")?);
+    let c = shape.n_classes;
+    let logits = if shape.arch == "lm" {
+        qy(&hn, n, d, "head.w", c, p.f("head.b")?)?
+    } else {
+        let mut pooled = vec![0.0f32; b * d];
+        for bi in 0..b {
+            for t in 0..l {
+                let row = &hn[(bi * l + t) * d..(bi * l + t + 1) * d];
+                let dst = &mut pooled[bi * d..(bi + 1) * d];
+                for (pv, hv) in dst.iter_mut().zip(row) {
+                    *pv += hv / l as f32;
+                }
+            }
+        }
+        qy(&pooled, b, d, "head.w", c, p.f("head.b")?)?
+    };
+    Ok((logits, b))
+}
+
+/// Degraded inference-only forward: same contract as [`fwd_infer`] but
+/// the GEMMs run INT8 — the middle rung of the serving degradation
+/// ladder between full-precision service and load shedding.
+pub fn fwd_infer_i8(shape: &ModelShape, p: &Params, qp: &QuantParams,
+                    x: &Value) -> Result<Value> {
+    let (logits, b) = infer_logits_i8(shape, p, qp, x)?;
+    let out_shape = if shape.arch == "lm" {
+        vec![b, shape.seq, shape.n_classes]
+    } else {
+        vec![b, shape.n_classes]
+    };
+    Ok(Value::F32 { shape: out_shape, data: logits })
+}
+
+// ---------------------------------------------------------------------------
 // Backward (walks ctxs in reverse; mirrors forward exactly)
 // ---------------------------------------------------------------------------
 

@@ -31,5 +31,6 @@ pub mod obs;
 pub mod quant;
 pub mod resilience;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

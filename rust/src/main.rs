@@ -39,6 +39,7 @@ fn main() -> Result<()> {
         Some("calibrate") => cmd_calibrate(&args),
         Some("eval") => cmd_eval(&args),
         Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
         Some("ckpt") => cmd_ckpt(&args),
         Some("bench") => cmd_bench(&args),
         Some("memory") => cmd_memory(&args),
@@ -47,7 +48,7 @@ fn main() -> Result<()> {
         Some("runhlo") => cmd_runhlo(&args),
         _ => {
             eprintln!(
-                "usage: hot <train|calibrate|eval|infer|ckpt|bench|memory|latency|info> [--opts]\n\
+                "usage: hot <train|calibrate|eval|infer|serve|ckpt|bench|memory|latency|info> [--opts]\n\
                  common: --backend native|pjrt|auto --artifacts DIR\n\
                          --preset NAME --variant V --steps N --batch N\n\
                          --lr F --mode fused|split|accum --accum N\n\
@@ -60,8 +61,14 @@ fn main() -> Result<()> {
                          checkpoint in --checkpoint-dir)\n\
                  infer:  hot infer CKPT.json | --resume CKPT.json |\n\
                          --checkpoint-dir DIR (newest); --batches N\n\
+                 serve:  --checkpoint-dir DIR (newest; else init weights)\n\
+                         --tenants N --requests N --max-queue N\n\
+                         --deadline-ms N --max-batch N --window-ms N\n\
+                         --workers N (multi-tenant serving smoke: drives\n\
+                         synthetic traffic, prints p50/p99 + req/s, exits\n\
+                         nonzero on any non-finite logit)\n\
                  ckpt:   hot ckpt verify|list --checkpoint-dir DIR\n\
-                 bench:  --suite kernels|e2e|all --smoke --out DIR\n\
+                 bench:  --suite kernels|e2e|serve|all --smoke --out DIR\n\
                          --check BASELINE_DIR --report report.md"
             );
             Ok(())
@@ -70,35 +77,35 @@ fn main() -> Result<()> {
 }
 
 fn run_config(args: &Args) -> Result<RunConfig> {
-    let mut cfg = match args.get("config") {
+    let mut cfg = match args.get("config")? {
         Some(path) => RunConfig::load(path)?,
         None => RunConfig::default(),
     };
-    if let Some(v) = args.get("artifacts") {
+    if let Some(v) = args.get("artifacts")? {
         cfg.artifacts = v.into();
     }
-    if let Some(v) = args.get("preset") {
+    if let Some(v) = args.get("preset")? {
         cfg.preset = v.into();
     }
-    if let Some(v) = args.get("variant") {
+    if let Some(v) = args.get("variant")? {
         cfg.variant = v.into();
     }
-    cfg.steps = args.usize_or("steps", cfg.steps);
-    cfg.batch = args.usize_or("batch", cfg.batch);
-    cfg.lr = args.f64_or("lr", cfg.lr);
-    cfg.seed = args.u64_or("seed", cfg.seed);
-    cfg.accum = args.usize_or("accum", cfg.accum);
-    cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches);
-    cfg.mem_budget = args.u64_or("mem-budget", cfg.mem_budget);
-    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
-    cfg.data_noise = args.f64_or("data-noise", cfg.data_noise);
-    if let Some(d) = args.get("checkpoint-dir") {
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.lr = args.f64_or("lr", cfg.lr)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.accum = args.usize_or("accum", cfg.accum)?;
+    cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches)?;
+    cfg.mem_budget = args.u64_or("mem-budget", cfg.mem_budget)?;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every)?;
+    cfg.data_noise = args.f64_or("data-noise", cfg.data_noise)?;
+    if let Some(d) = args.get("checkpoint-dir")? {
         cfg.checkpoint_dir = Some(d.into());
     }
     cfg.checkpoint_every = args.usize_or("checkpoint-every",
-                                         cfg.checkpoint_every);
-    cfg.keep_last = args.usize_or("keep-last", cfg.keep_last);
-    cfg.max_rollbacks = args.usize_or("max-rollbacks", cfg.max_rollbacks);
+                                         cfg.checkpoint_every)?;
+    cfg.keep_last = args.usize_or("keep-last", cfg.keep_last)?;
+    cfg.max_rollbacks = args.usize_or("max-rollbacks", cfg.max_rollbacks)?;
     if args.flag("no-sentinel") {
         cfg.sentinel = false;
     }
@@ -107,10 +114,10 @@ fn run_config(args: &Args) -> Result<RunConfig> {
 }
 
 fn executor(args: &Args, cfg: &RunConfig) -> Result<Arc<dyn Executor>> {
-    let backend = args.str_or("backend", "auto");
+    let backend = args.str_or("backend", "auto")?;
     let rt =
         hot::backend::by_name_threaded(&backend, &cfg.artifacts,
-                                       args.threads())?;
+                                       args.threads()?)?;
     hot::info!("backend: {} ({} kernel threads)", rt.name(),
                hot::kernels::num_threads());
     Ok(rt)
@@ -118,7 +125,7 @@ fn executor(args: &Args, cfg: &RunConfig) -> Result<Arc<dyn Executor>> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    let mode = match args.str_or("mode", "fused").as_str() {
+    let mode = match args.str_or("mode", "fused")?.as_str() {
         "fused" => Mode::Fused,
         "split" => Mode::Split,
         "accum" => Mode::Accum,
@@ -126,13 +133,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let rt = executor(args, &cfg)?;
     let mut tr = Trainer::new(rt, cfg)?;
-    let trace_out = args.get("trace-out").map(String::from);
+    let trace_out = args.get("trace-out")?.map(String::from);
     if trace_out.is_some() {
         // --trace-out implies tracing and keeps the raw span events
         hot::obs::set_trace_enabled(true);
         tr.keep_trace = true;
     }
-    if let Some(ck) = args.get("resume") {
+    if let Some(ck) = args.get_optional("resume") {
         tr.resume(ck)?;
     } else if args.flag("resume") {
         // bare --resume: newest valid checkpoint in --checkpoint-dir,
@@ -149,7 +156,7 @@ fn cmd_train(args: &Args) -> Result<()> {
              tr.state.ctx.stats().peak_bytes,
              tr.state.ctx.stats().fp32_equiv_bytes,
              tr.state.ctx.compression_ratio());
-    if let Some(csv) = args.get("csv") {
+    if let Some(csv) = args.get("csv")? {
         tr.metrics.save_csv(csv)?;
         println!("metrics -> {csv}");
     }
@@ -192,10 +199,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     let rt = executor(args, &cfg)?;
     let mut tr = Trainer::new(rt, cfg)?;
-    if let Some(ck) = args.get("resume") {
+    if let Some(ck) = args.get("resume")? {
         tr.resume(ck)?;
     }
-    let (l, a) = tr.eval(args.usize_or("batches", 8))?;
+    let (l, a) = tr.eval(args.usize_or("batches", 8)?)?;
     println!("eval: loss {l:.4} acc {a:.4}");
     Ok(())
 }
@@ -222,7 +229,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         .positional
         .first()
         .cloned()
-        .or_else(|| args.get("resume").map(String::from))
+        .or_else(|| args.get_optional("resume").map(String::from))
         .or_else(|| cfg.checkpoint_dir.as_deref().and_then(Checkpoint::latest));
     let weights = match header {
         Some(h) => {
@@ -247,7 +254,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
             preset.model.seq, preset.model.in_dim, preset.model.n_classes,
             cfg.seed)),
     };
-    let batches = args.usize_or("batches", 4);
+    let batches = args.usize_or("batches", 4)?;
     let batch = rt.key_batch(&key).unwrap_or(cfg.batch).max(1);
     let mut rows = 0usize;
     for b in 0..batches {
@@ -262,6 +269,132 @@ fn cmd_infer(args: &Args) -> Result<()> {
     println!("infer: {batches} batches x {batch} ok \
               ({rows} logit rows, all finite, {} weight bytes shared)",
              weights.total_bytes());
+    Ok(())
+}
+
+/// `hot serve`: stand up the fail-safe multi-tenant server over the
+/// native backend and drive synthetic per-tenant traffic through it —
+/// the in-process serving smoke CI runs. Weights come from the newest
+/// checkpoint under `--checkpoint-dir` (manifest/CRC-verified) or the
+/// backend's init weights. Prints p50/p99 latency, req/s and the
+/// shed/expired/panic tallies; exits nonzero if any served logit is
+/// non-finite or every request failed. `HOT_FAULT` serve plans
+/// (slow-request/panic-in-batch/corrupt-adapter) apply — the chaos CI
+/// leg runs the fault matrix through exactly this entry point.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    use hot::coordinator::{Checkpoint, DataSource};
+    use hot::data::{LmDataset, VisionDataset};
+    use hot::serve::{Registry, ServeCfg, ServeError, Server};
+
+    let cfg = run_config(args)?;
+    let rt = executor(args, &cfg)?;
+    let preset = rt.preset(&cfg.preset)?;
+    let key = format!("infer_{}", cfg.preset);
+    if !rt.supports(&key) {
+        bail!("backend {} has no inference path for preset {}", rt.name(),
+              cfg.preset);
+    }
+    let tenants = args.usize_or("tenants", 2)?.max(1);
+    let requests = args.usize_or("requests", 64)?.max(1);
+    let serve_cfg = ServeCfg {
+        preset: cfg.preset.clone(),
+        max_queue: args.usize_or("max-queue", 256)?,
+        deadline: Duration::from_millis(args.u64_or("deadline-ms", 2000)?),
+        max_batch: args.usize_or("max-batch", 8)?,
+        window: Duration::from_millis(args.u64_or("window-ms", 2)?),
+        workers: args.usize_or("workers", 2)?,
+        ..ServeCfg::default()
+    };
+
+    let weights = match cfg.checkpoint_dir.as_deref()
+        .and_then(Checkpoint::latest)
+    {
+        Some(h) => {
+            let ck = Checkpoint::load(&h, &preset.params)?;
+            if ck.preset != cfg.preset {
+                bail!("checkpoint preset {} != configured {}", ck.preset,
+                      cfg.preset);
+            }
+            hot::info!("serving weights <- {h} (step {})", ck.step);
+            ck.weights
+        }
+        None => {
+            hot::info!("no checkpoint; serving init weights");
+            rt.init_store(&cfg.preset)?
+        }
+    };
+
+    let reg = Registry::new(weights, &cfg.preset);
+    for t in 0..tenants {
+        reg.register(&format!("tenant-{t}"))?;
+    }
+    let srv = Server::start(reg, serve_cfg);
+    let data = match preset.model.arch.as_str() {
+        "lm" => DataSource::Lm(LmDataset::new(preset.model.seq,
+                                              preset.model.in_dim,
+                                              cfg.seed)),
+        _ => DataSource::Vision(VisionDataset::new(
+            preset.model.seq, preset.model.in_dim, preset.model.n_classes,
+            cfg.seed)),
+    };
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let (x, _) = data.batch(1, i as u64, 1);
+        let sent = Instant::now();
+        let rx = srv.submit(&format!("tenant-{}", i % tenants), x);
+        pending.push((sent, rx));
+    }
+    let mut lat: Vec<f64> = Vec::new();
+    let (mut served, mut shed, mut expired, mut panicked, mut other) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    for (sent, rx) in pending {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(Ok(logits)) => {
+                if let Some(bad) =
+                    logits.as_f32()?.iter().find(|v| !v.is_finite())
+                {
+                    srv.shutdown();
+                    bail!("non-finite served logit {bad}");
+                }
+                served += 1;
+                lat.push(sent.elapsed().as_secs_f64());
+            }
+            Ok(Err(ServeError::Overloaded { .. }))
+            | Ok(Err(ServeError::ShuttingDown)) => shed += 1,
+            Ok(Err(ServeError::DeadlineExceeded { .. })) => expired += 1,
+            Ok(Err(ServeError::PanicInForward)) => panicked += 1,
+            Ok(Err(e)) => {
+                hot::warn_!("request refused: {e}");
+                other += 1;
+            }
+            Err(e) => {
+                srv.shutdown();
+                bail!("reply channel lost (worker died unreplaced?): {e}");
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    srv.shutdown();
+    let stats = srv.stats();
+    if served == 0 {
+        bail!("no request was served: {shed} shed, {expired} expired, \
+               {panicked} panicked, {other} refused");
+    }
+    lat.sort_by(f64::total_cmp);
+    let pct =
+        |q: f64| lat[((lat.len() - 1) as f64 * q).round() as usize] * 1e3;
+    println!("serve: {served}/{requests} ok across {tenants} tenants \
+              (p50 {:.2} ms, p99 {:.2} ms, {:.1} req/s; shed {shed}, \
+              expired {expired}, panicked {panicked}, refused {other}; \
+              max queue depth {}, {} batches, {} degraded, {} workers \
+              replaced); clean shutdown",
+             pct(0.50), pct(0.99), served as f64 / wall.max(1e-9),
+             stats.queue_max_depth, stats.batches, stats.degraded_batches,
+             stats.workers_replaced);
     Ok(())
 }
 
@@ -355,14 +488,14 @@ fn cmd_ckpt(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     let smoke =
         args.flag("smoke") || std::env::var("HOT_BENCH_STEPS").is_ok();
-    let suite = args.str_or("suite", "all");
-    let out_dir = args.str_or("out", ".");
-    let check = args.get("check").map(String::from);
-    let report_path = args.get("report").map(String::from);
-    if !matches!(suite.as_str(), "kernels" | "e2e" | "all") {
-        bail!("--suite wants kernels|e2e|all, got {suite:?}");
+    let suite = args.str_or("suite", "all")?;
+    let out_dir = args.str_or("out", ".")?;
+    let check = args.get("check")?.map(String::from);
+    let report_path = args.get("report")?.map(String::from);
+    if !matches!(suite.as_str(), "kernels" | "e2e" | "serve" | "all") {
+        bail!("--suite wants kernels|e2e|serve|all, got {suite:?}");
     }
-    hot::kernels::set_num_threads(args.threads());
+    hot::kernels::set_num_threads(args.threads()?);
     let mut reports = Vec::new();
     if suite == "kernels" || suite == "all" {
         reports.push(hot::bench::suites::run_kernels(smoke));
@@ -370,8 +503,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if suite == "e2e" || suite == "all" {
         let cfg = run_config(args)?;
         let rt = executor(args, &cfg)?;
-        let steps = args.usize_or("steps", if smoke { 6 } else { 12 });
+        let steps = args.usize_or("steps", if smoke { 6 } else { 12 })?;
         reports.push(hot::bench::suites::run_e2e(rt, smoke, steps)?);
+    }
+    if suite == "serve" || suite == "all" {
+        reports.push(hot::bench::suites::run_serve(smoke)?);
     }
     let mut failed = false;
     let mut md = String::new();
@@ -418,8 +554,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
 fn cmd_memory(args: &Args) -> Result<()> {
     use hot::costmodel::{breakdown, zoo, MemMethod};
-    let model = args.str_or("model", "vit_b");
-    let batch = args.usize_or("batch", 256);
+    let model = args.str_or("model", "vit_b")?;
+    let batch = args.usize_or("batch", 256)?;
     let spec = match model.as_str() {
         "vit_b" => zoo::vit_b(),
         "vit_s" => zoo::vit_s(),
@@ -478,7 +614,7 @@ fn cmd_runhlo(args: &Args) -> Result<()> {
     let exe = client
         .compile(&xla::XlaComputation::from_proto(&proto))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let mut rng = Pcg32::seeded(args.u64_or("seed", 0));
+    let mut rng = Pcg32::seeded(args.u64_or("seed", 0)?);
     let mut lits = Vec::new();
     for spec in &args.positional[1..] {
         let (ty, dims) = spec.split_once(':').expect("ty:dims");

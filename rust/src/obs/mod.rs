@@ -96,16 +96,32 @@ pub enum Counter {
     SentinelTrips,
     /// rollbacks to a last-good checkpoint after a sentinel trip
     Rollbacks,
+    /// serve: requests accepted into the bounded queue
+    ServeRequests,
+    /// serve: requests rejected at admission (queue above watermark)
+    ServeShed,
+    /// serve: requests dropped before the GEMM — deadline already past
+    ServeExpired,
+    /// serve: coalesced batches executed by the workers
+    ServeBatches,
+    /// serve: forward-walk panics caught by the request isolation wall
+    ServePanics,
+    /// serve: poisoned workers torn down and replaced after a panic
+    ServeWorkerReplaced,
+    /// serve: batches executed on a degraded (INT8) weight tier
+    ServeDegraded,
     /// events lost to a full ring (never blocks the hot path)
     EventsDropped,
 }
 
-pub const N_COUNTERS: usize = 16;
+pub const N_COUNTERS: usize = 23;
 pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "flops_scalar", "flops_avx2", "flops_neon", "bytes_quantized",
     "bytes_packed", "bytes_panels", "plan_hits", "plan_misses",
     "arena_grows", "pool_steals", "pool_parks", "weight_bytes_shared",
-    "adapter_bytes", "sentinel_trips", "rollbacks", "events_dropped",
+    "adapter_bytes", "sentinel_trips", "rollbacks", "serve_requests",
+    "serve_shed", "serve_expired", "serve_batches", "serve_panics",
+    "serve_worker_replaced", "serve_degraded", "events_dropped",
 ];
 
 // ---------------------------------------------------------------------------

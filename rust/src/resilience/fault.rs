@@ -21,6 +21,17 @@
 //!                                          at training step S
 //! HOT_FAULT=io-error:<n>                   fail the next n blob writes
 //!                                          (exercises bounded retry)
+//! HOT_FAULT=slow-request:<ms>              serve: stall one batch by
+//!                                          <ms> milliseconds (drives
+//!                                          deadline expiry + shedding)
+//! HOT_FAULT=panic-in-batch:<n>             serve: panic inside the
+//!                                          n-th executed batch
+//!                                          (exercises catch_unwind +
+//!                                          worker replacement)
+//! HOT_FAULT=corrupt-adapter:<tenant>       serve: flip a byte in that
+//!                                          tenant's adapter blob at
+//!                                          load time (CRC rejection +
+//!                                          tenant quarantine)
 //! ```
 //!
 //! `<blob>` is one of `params`, `m`, `v`, `manifest`. Write-site plans
@@ -49,6 +60,15 @@ pub enum FaultPlan {
     NanInGradAtStep { step: usize },
     /// Fail the next `failures` blob writes with a simulated I/O error.
     IoError { failures: usize },
+    /// Serve: stall one batch execution by `ms` milliseconds — long
+    /// enough to expire deadlines behind it and back the queue up.
+    SlowRequest { ms: u64 },
+    /// Serve: panic inside the `n`-th executed batch (1-based) — the
+    /// worker's `catch_unwind` wall must absorb it.
+    PanicInBatch { n: usize },
+    /// Serve: flip a byte in `tenant`'s adapter params at load time so
+    /// the manifest/CRC path rejects it and the tenant is quarantined.
+    CorruptAdapter { tenant: String },
 }
 
 struct Armed {
@@ -105,6 +125,19 @@ pub fn parse(plan: &str) -> Result<FaultPlan> {
                 })?,
             })
         }
+        ["slow-request", ms] => Ok(FaultPlan::SlowRequest {
+            ms: ms.parse().map_err(|_| {
+                anyhow::anyhow!("HOT_FAULT: bad millis {ms:?}")
+            })?,
+        }),
+        ["panic-in-batch", n] => Ok(FaultPlan::PanicInBatch {
+            n: n.parse().map_err(|_| {
+                anyhow::anyhow!("HOT_FAULT: bad batch index {n:?}")
+            })?,
+        }),
+        ["corrupt-adapter", tenant] => Ok(FaultPlan::CorruptAdapter {
+            tenant: tenant.to_string(),
+        }),
         _ => bail!("HOT_FAULT: unknown plan {plan:?}"),
     }
 }
@@ -113,6 +146,8 @@ pub fn parse(plan: &str) -> Result<FaultPlan> {
 pub fn arm(plan: FaultPlan) {
     let remaining = match &plan {
         FaultPlan::IoError { failures } => *failures,
+        // counts executed batches down to the one that panics
+        FaultPlan::PanicInBatch { n } => *n,
         _ => 1,
     };
     *slot().lock().unwrap() = Some(Armed { plan, remaining });
@@ -223,6 +258,48 @@ pub fn nan_in_grad(step: usize) -> bool {
     false
 }
 
+/// Serve worker hook: the stall in milliseconds, exactly once, when
+/// `slow-request` is armed. The caller sleeps; this only reports.
+pub fn slow_request() -> Option<u64> {
+    let mut g = slot().lock().unwrap();
+    if let Some(FaultPlan::SlowRequest { ms }) = g.as_ref().map(|a| &a.plan) {
+        let ms = *ms;
+        *g = None;
+        return Some(ms);
+    }
+    None
+}
+
+/// Serve worker hook, called once per executed batch: `true` exactly
+/// once, on the n-th call since arming — the caller must panic there
+/// (inside its `catch_unwind` wall).
+pub fn panic_in_batch() -> bool {
+    let mut g = slot().lock().unwrap();
+    let Some(armed) = g.as_mut() else { return false };
+    if !matches!(armed.plan, FaultPlan::PanicInBatch { .. }) {
+        return false;
+    }
+    armed.remaining = armed.remaining.saturating_sub(1);
+    if armed.remaining == 0 {
+        *g = None;
+        return true;
+    }
+    false
+}
+
+/// Adapter-load hook: `true` exactly once when `corrupt-adapter` is
+/// armed for `tenant` — the caller flips a byte in the adapter params
+/// *before* CRC validation, so the manifest path rejects the load.
+pub fn corrupt_adapter(tenant: &str) -> bool {
+    let mut g = slot().lock().unwrap();
+    if matches!(g.as_ref().map(|a| &a.plan),
+                Some(FaultPlan::CorruptAdapter { tenant: t }) if t == tenant) {
+        *g = None;
+        return true;
+    }
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,7 +322,15 @@ mod tests {
                    FaultPlan::IoError { failures: 2 });
         assert_eq!(parse("io-error-with-retry:2").unwrap(),
                    FaultPlan::IoError { failures: 2 });
+        assert_eq!(parse("slow-request:250").unwrap(),
+                   FaultPlan::SlowRequest { ms: 250 });
+        assert_eq!(parse("panic-in-batch:2").unwrap(),
+                   FaultPlan::PanicInBatch { n: 2 });
+        assert_eq!(parse("corrupt-adapter:tenant-7").unwrap(),
+                   FaultPlan::CorruptAdapter { tenant: "tenant-7".into() });
         assert!(parse("corrupt-byte:weights:1").is_err());
+        assert!(parse("slow-request:fast").is_err());
+        assert!(parse("panic-in-batch:maybe").is_err());
         assert!(parse("meteor-strike").is_err());
     }
 
@@ -281,6 +366,20 @@ mod tests {
         assert!(!nan_in_grad(2));
         assert!(nan_in_grad(3));
         assert!(!nan_in_grad(3), "fired once");
+
+        arm(FaultPlan::SlowRequest { ms: 40 });
+        assert_eq!(slow_request(), Some(40));
+        assert_eq!(slow_request(), None, "fired once");
+
+        arm(FaultPlan::PanicInBatch { n: 2 });
+        assert!(!panic_in_batch(), "batch 1 clean");
+        assert!(panic_in_batch(), "batch 2 panics");
+        assert!(!panic_in_batch(), "fired once");
+
+        arm(FaultPlan::CorruptAdapter { tenant: "t1".into() });
+        assert!(!corrupt_adapter("t0"), "wrong tenant untouched");
+        assert!(corrupt_adapter("t1"));
+        assert!(!corrupt_adapter("t1"), "fired once");
 
         disarm();
     }

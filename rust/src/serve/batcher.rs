@@ -1,0 +1,191 @@
+//! Deadline-aware dynamic batching.
+//!
+//! Same-tenant, same-shape requests coalesce along the leading (batch)
+//! dim into one forward walk — on the lm presets the kernels compute
+//! rows independently at a fixed k-blocking, so the coalesced logits
+//! split back into row-slices that are bit-identical to each request
+//! run alone (pinned by the test below; see DESIGN.md §Serving for the
+//! vision-preset caveat). The collection window is *deadline-aware*:
+//! it closes early when any already-collected request nears its
+//! deadline, so a full batch window can never starve a near-deadline
+//! request, and a request whose deadline has already passed is
+//! answered [`ServeError::DeadlineExceeded`] before any GEMM runs.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::obs::{self, Counter};
+use crate::runtime::value::Value;
+
+use super::{BoundedQueue, Request, ServeError};
+
+/// How close to a member's deadline the window is allowed to run.
+const DEADLINE_SLACK: Duration = Duration::from_millis(1);
+/// Poll interval while the window is open and the lane is dry.
+const POLL: Duration = Duration::from_micros(200);
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCfg {
+    /// Coalescing cap (requests per forward walk).
+    pub max_batch: usize,
+    /// How long the batcher may wait for same-shape followers.
+    pub window: Duration,
+}
+
+/// One coalescible unit: same tenant, same input shape, FIFO order.
+pub struct Batch {
+    pub tenant: String,
+    pub reqs: Vec<Request>,
+}
+
+/// Pull the next batch off the queue: one blocking pop for the head,
+/// then a bounded window of non-blocking same-shape coalescing.
+/// Requests already past their deadline are expired here, before any
+/// weight resolution or GEMM — they are answered directly and tallied
+/// in the returned count. A `None` batch means the pop timed out empty
+/// (caller re-checks shutdown).
+pub fn next_batch(q: &BoundedQueue, cfg: &BatchCfg)
+                  -> (usize, Option<Batch>) {
+    let mut n_expired = 0;
+    let head = loop {
+        let Some(r) = q.pop(Duration::from_millis(20)) else {
+            return (n_expired, None);
+        };
+        if r.deadline <= Instant::now() {
+            obs::count(Counter::ServeExpired, 1);
+            n_expired += 1;
+            r.reply(Err(ServeError::DeadlineExceeded { stage: "queued" }));
+            continue;
+        }
+        break r;
+    };
+    let shape = head.x.shape().to_vec();
+    let is_f32 = matches!(head.x, Value::F32 { .. });
+    let tenant = head.tenant.clone();
+    let mut reqs = vec![head];
+    let window_end = Instant::now() + cfg.window;
+    while reqs.len() < cfg.max_batch {
+        // the window closes early when the most urgent member is near
+        // its deadline — coalescing must never cost a member its SLO
+        let nearest = reqs.iter().map(|r| r.deadline).min().expect("nonempty");
+        let cutoff = window_end
+            .min(nearest.checked_sub(DEADLINE_SLACK).unwrap_or(nearest));
+        if Instant::now() >= cutoff {
+            break;
+        }
+        let more = q.pop_same(&tenant, &shape, is_f32,
+                              cfg.max_batch - reqs.len());
+        if more.is_empty() {
+            std::thread::sleep(POLL);
+        } else {
+            reqs.extend(more);
+        }
+    }
+    (n_expired, Some(Batch { tenant, reqs }))
+}
+
+/// Concatenate same-shape inputs along the leading dim.
+pub fn concat_rows(xs: &[&Value]) -> Result<Value> {
+    ensure!(!xs.is_empty(), "concat of zero inputs");
+    let head = xs[0].shape();
+    ensure!(!head.is_empty(), "batched inputs must have a leading dim");
+    for x in xs {
+        ensure!(x.shape() == head, "coalesced shapes diverge: {:?} vs {:?}",
+                x.shape(), head);
+    }
+    let mut shape = head.to_vec();
+    shape[0] = xs.iter().map(|x| x.shape()[0]).sum();
+    match xs[0] {
+        Value::F32 { .. } => {
+            let mut data = Vec::new();
+            for x in xs {
+                data.extend_from_slice(x.as_f32()?);
+            }
+            Ok(Value::F32 { shape, data })
+        }
+        Value::I32 { .. } => {
+            let mut data = Vec::new();
+            for x in xs {
+                data.extend_from_slice(x.as_i32()?);
+            }
+            Ok(Value::I32 { shape, data })
+        }
+        other => bail!("cannot coalesce {other:?} inputs"),
+    }
+}
+
+/// Undo `concat_rows` on the output side: slice `v` back into chunks of
+/// `counts[i]` leading rows each.
+pub fn split_rows(v: &Value, counts: &[usize]) -> Result<Vec<Value>> {
+    let shape = v.shape();
+    ensure!(!shape.is_empty(), "split of a scalar");
+    let total: usize = counts.iter().sum();
+    ensure!(total == shape[0], "split counts {counts:?} != leading dim {}",
+            shape[0]);
+    let row: usize = shape[1..].iter().product();
+    let data = v.as_f32()?;
+    let mut out = Vec::with_capacity(counts.len());
+    let mut off = 0;
+    for &c in counts {
+        let mut s = shape.to_vec();
+        s[0] = c;
+        out.push(Value::F32 {
+            shape: s,
+            data: data[off * row..(off + c) * row].to_vec(),
+        });
+        off += c;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::backend::{Executor, NativeBackend};
+    use crate::data::LmDataset;
+
+    use super::*;
+
+    #[test]
+    fn concat_split_round_trips_and_validates() {
+        let a = Value::F32 { shape: vec![1, 3], data: vec![1.0, 2.0, 3.0] };
+        let b = Value::F32 { shape: vec![2, 3], data: vec![4.0; 6] };
+        let cat = concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(cat.shape(), &[3, 3]);
+        let parts = split_rows(&cat, &[1, 2]).unwrap();
+        assert_eq!(parts[0].as_f32().unwrap(), a.as_f32().unwrap());
+        assert_eq!(parts[1].as_f32().unwrap(), b.as_f32().unwrap());
+        let odd = Value::F32 { shape: vec![1, 4], data: vec![0.0; 4] };
+        assert!(concat_rows(&[&a, &odd]).is_err());
+        assert!(split_rows(&cat, &[1, 1]).is_err());
+        let i = Value::I32 { shape: vec![1, 2], data: vec![5, 6] };
+        let j = Value::I32 { shape: vec![1, 2], data: vec![7, 8] };
+        assert_eq!(concat_rows(&[&i, &j]).unwrap().as_i32().unwrap(),
+                   &[5, 6, 7, 8]);
+    }
+
+    /// The property serving correctness rests on: a coalesced forward
+    /// equals each request's solo forward bit-for-bit (lm presets; the
+    /// kernels compute rows independently at fixed k-blocking).
+    #[test]
+    fn coalesced_lm_batch_is_bit_identical_to_solo_runs() {
+        let b = NativeBackend::new();
+        let preset = b.preset("lm_tiny").unwrap();
+        let ds = LmDataset::new(preset.model.seq, preset.model.in_dim, 11);
+        let weights = b.init_store("lm_tiny").unwrap();
+        let xs: Vec<Value> =
+            (0..6).map(|i| ds.batch(1, i as u64, 1).0).collect();
+        let cat = concat_rows(&xs.iter().collect::<Vec<_>>()).unwrap();
+        let batched = b.infer("infer_lm_tiny", &weights, &cat).unwrap();
+        let parts = split_rows(&batched, &[1; 6]).unwrap();
+        for (i, (x, part)) in xs.iter().zip(&parts).enumerate() {
+            let solo = b.infer("infer_lm_tiny", &weights, x).unwrap();
+            let (s, p) = (solo.as_f32().unwrap(), part.as_f32().unwrap());
+            assert_eq!(s.len(), p.len());
+            for (j, (a, c)) in s.iter().zip(p).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(),
+                           "request {i} logit {j}: {a} != {c}");
+            }
+        }
+    }
+}

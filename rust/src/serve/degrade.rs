@@ -1,0 +1,216 @@
+//! Graceful-degradation ladder under sustained overload.
+//!
+//! Mirrors the trainer sentinel's escalation ladder (rollback → refine
+//! → widen → abort), but for serving: each rung trades a little output
+//! quality or admission for staying alive, and the ladder climbs only
+//! on *sustained* pressure and descends only after *sustained* calm —
+//! a single burst never flips the serving mode back and forth.
+//!
+//! ```text
+//! depth > hi for escalate_after      depth ≤ lo for deescalate_after
+//!   Normal ──────▶ ShrunkWindow ──────▶ Int8 ──────▶ Shedding
+//!      ◀──────────────◀──────────────◀──────────────◀
+//!   full window      window/4       INT8 GEMM     admission
+//!   full precision                  tiers         watermark/4
+//! ```
+//!
+//! Time is passed in explicitly (`observe(..., now)`) so the ladder is
+//! deterministic under test — no hidden clock reads.
+
+use std::time::{Duration, Instant};
+
+/// The rungs, in escalation order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeLevel {
+    /// Full batch window, full-precision weights.
+    Normal,
+    /// Batch window cut to a quarter: lower latency per batch, less
+    /// coalescing throughput.
+    ShrunkWindow,
+    /// Weights served INT8 through the int GEMM tiers
+    /// (`Executor::infer_degraded`): approximate logits, real
+    /// throughput headroom.
+    Int8,
+    /// Admission watermark cut to a quarter: shed early rather than
+    /// queue deep.
+    Shedding,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct LadderCfg {
+    /// Depth above `hi_frac * watermark` counts as overload.
+    pub hi_frac: f64,
+    /// Depth at or below `lo_frac * watermark` counts as calm.
+    pub lo_frac: f64,
+    /// Overload must persist this long before climbing one rung.
+    pub escalate_after: Duration,
+    /// Calm must persist this long before stepping down one rung.
+    pub deescalate_after: Duration,
+}
+
+impl Default for LadderCfg {
+    fn default() -> Self {
+        LadderCfg {
+            hi_frac: 0.75,
+            lo_frac: 0.25,
+            escalate_after: Duration::from_millis(100),
+            deescalate_after: Duration::from_millis(500),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Ladder {
+    cfg: LadderCfg,
+    level: DegradeLevel,
+    over_since: Option<Instant>,
+    calm_since: Option<Instant>,
+}
+
+impl Ladder {
+    pub fn new(cfg: LadderCfg) -> Ladder {
+        Ladder { cfg, level: DegradeLevel::Normal, over_since: None,
+                 calm_since: None }
+    }
+
+    pub fn level(&self) -> DegradeLevel {
+        self.level
+    }
+
+    /// Feed one (depth, watermark) observation at `now`; returns the
+    /// (possibly changed) level. An observation in the hysteresis band
+    /// between lo and hi resets both timers — pressure must stay
+    /// *continuously* past a threshold for the ladder to move.
+    pub fn observe(&mut self, depth: usize, watermark: usize, now: Instant)
+                   -> DegradeLevel {
+        let hi = (watermark as f64 * self.cfg.hi_frac) as usize;
+        let lo = (watermark as f64 * self.cfg.lo_frac) as usize;
+        if depth > hi {
+            self.calm_since = None;
+            match self.over_since {
+                None => self.over_since = Some(now),
+                Some(t) if now.duration_since(t)
+                    >= self.cfg.escalate_after =>
+                {
+                    self.level = match self.level {
+                        DegradeLevel::Normal => DegradeLevel::ShrunkWindow,
+                        DegradeLevel::ShrunkWindow => DegradeLevel::Int8,
+                        _ => DegradeLevel::Shedding,
+                    };
+                    self.over_since = Some(now); // re-arm for the next rung
+                }
+                Some(_) => {}
+            }
+        } else if depth <= lo {
+            self.over_since = None;
+            match self.calm_since {
+                None => self.calm_since = Some(now),
+                Some(t) if now.duration_since(t)
+                    >= self.cfg.deescalate_after =>
+                {
+                    self.level = match self.level {
+                        DegradeLevel::Shedding => DegradeLevel::Int8,
+                        DegradeLevel::Int8 => DegradeLevel::ShrunkWindow,
+                        _ => DegradeLevel::Normal,
+                    };
+                    self.calm_since = Some(now);
+                }
+                Some(_) => {}
+            }
+        } else {
+            self.over_since = None;
+            self.calm_since = None;
+        }
+        self.level
+    }
+
+    /// The batch window at the current rung.
+    pub fn window(&self, base: Duration) -> Duration {
+        match self.level {
+            DegradeLevel::Normal => base,
+            _ => base / 4,
+        }
+    }
+
+    /// Whether batches should run the INT8 degraded forward.
+    pub fn int8(&self) -> bool {
+        self.level >= DegradeLevel::Int8
+    }
+
+    /// The admission watermark at the current rung.
+    pub fn effective_watermark(&self, watermark: usize) -> usize {
+        if self.level >= DegradeLevel::Shedding {
+            (watermark / 4).max(1)
+        } else {
+            watermark
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_ms(esc: u64, de: u64) -> LadderCfg {
+        LadderCfg {
+            hi_frac: 0.75,
+            lo_frac: 0.25,
+            escalate_after: Duration::from_millis(esc),
+            deescalate_after: Duration::from_millis(de),
+        }
+    }
+
+    #[test]
+    fn climbs_only_on_sustained_overload_and_steps_back_down() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut l = Ladder::new(cfg_ms(100, 200));
+        // a burst shorter than escalate_after does nothing
+        assert_eq!(l.observe(90, 100, at(0)), DegradeLevel::Normal);
+        assert_eq!(l.observe(90, 100, at(50)), DegradeLevel::Normal);
+        assert_eq!(l.observe(10, 100, at(60)), DegradeLevel::Normal);
+        // sustained overload climbs one rung per escalate_after
+        assert_eq!(l.observe(90, 100, at(100)), DegradeLevel::Normal);
+        assert_eq!(l.observe(90, 100, at(200)), DegradeLevel::ShrunkWindow);
+        assert_eq!(l.observe(90, 100, at(300)), DegradeLevel::Int8);
+        assert!(l.int8());
+        assert_eq!(l.observe(90, 100, at(400)), DegradeLevel::Shedding);
+        assert_eq!(l.effective_watermark(100), 25);
+        // top rung holds
+        assert_eq!(l.observe(90, 100, at(500)), DegradeLevel::Shedding);
+        // sustained calm descends, one rung per deescalate_after
+        assert_eq!(l.observe(5, 100, at(600)), DegradeLevel::Shedding);
+        assert_eq!(l.observe(5, 100, at(800)), DegradeLevel::Int8);
+        assert_eq!(l.observe(5, 100, at(1000)), DegradeLevel::ShrunkWindow);
+        assert_eq!(l.observe(5, 100, at(1200)), DegradeLevel::Normal);
+        assert_eq!(l.effective_watermark(100), 100);
+    }
+
+    #[test]
+    fn hysteresis_band_resets_both_timers() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut l = Ladder::new(cfg_ms(100, 100));
+        l.observe(90, 100, at(0));
+        // mid-band: neither overloaded nor calm — clears the pending
+        // overload timer, no climb no matter how long passes
+        assert_eq!(l.observe(50, 100, at(1000)), DegradeLevel::Normal);
+        assert_eq!(l.observe(90, 100, at(1010)), DegradeLevel::Normal);
+        // the overload timer restarted at 1010, so 1050 is too early...
+        assert_eq!(l.observe(90, 100, at(1050)), DegradeLevel::Normal);
+        // ...and 1110 is enough
+        assert_eq!(l.observe(90, 100, at(1110)), DegradeLevel::ShrunkWindow);
+    }
+
+    #[test]
+    fn window_shrinks_off_normal() {
+        let mut l = Ladder::new(cfg_ms(0, 1000));
+        let base = Duration::from_millis(8);
+        assert_eq!(l.window(base), base);
+        let t0 = Instant::now();
+        l.observe(100, 100, t0);
+        l.observe(100, 100, t0 + Duration::from_millis(1));
+        assert_eq!(l.level(), DegradeLevel::ShrunkWindow);
+        assert_eq!(l.window(base), base / 4);
+    }
+}

@@ -1,0 +1,125 @@
+//! Fail-safe multi-tenant serving over the `Executor::infer` path.
+//!
+//! Every edge of this subsystem is failure-aware (DESIGN.md §Serving):
+//!
+//! - [`queue`]: bounded MPMC request queue with round-robin per-tenant
+//!   fairness; above the watermark the newest request is shed with a
+//!   typed [`ServeError::Overloaded`] — depth never grows unbounded and
+//!   nothing is dropped silently.
+//! - [`batcher`]: deadline-aware dynamic batching. Same-tenant,
+//!   same-shape requests coalesce into one GEMM batch; the batch window
+//!   closes early when any collected request nears its deadline, and
+//!   expired requests are answered [`ServeError::DeadlineExceeded`]
+//!   *before* they reach a GEMM.
+//! - [`registry`]: tenant/adapter registry. Tenants share one
+//!   `share()`d base `WeightStore` (an `AdapterSet` proves the slabs
+//!   alias); hot-swap loads go through the checkpoint manifest/CRC
+//!   path, so a corrupt adapter blob quarantines the tenant with a
+//!   typed reason instead of killing the process.
+//! - [`degrade`]: graceful-degradation ladder under sustained overload
+//!   — shrink the batch window, then serve INT8-quantized weights
+//!   through the int GEMM tiers (`Executor::infer_degraded`), then
+//!   shed harder — mirroring the trainer sentinel's rollback ladder.
+//! - [`server`]: worker pool with per-request panic isolation
+//!   (`catch_unwind` around the forward walk; a panicked worker is
+//!   replaced, its batch answered [`ServeError::PanicInForward`]).
+//!
+//! Fault injection: the `HOT_FAULT` plans `slow-request:<ms>`,
+//! `panic-in-batch:<n>` and `corrupt-adapter:<tenant>` ride the same
+//! fire-once harness as the checkpoint faults (`resilience::fault`).
+
+pub mod batcher;
+pub mod degrade;
+pub mod queue;
+pub mod registry;
+pub mod server;
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::runtime::value::Value;
+
+pub use batcher::{concat_rows, split_rows, BatchCfg};
+pub use degrade::{DegradeLevel, Ladder, LadderCfg};
+pub use queue::BoundedQueue;
+pub use registry::{Registry, TenantState};
+pub use server::{ServeCfg, ServeStats, Server};
+
+/// What a request resolves to: logits, or a typed refusal. Every
+/// request submitted to the server receives exactly one `Reply` — shed,
+/// expired, quarantined and panicked requests all get their error
+/// through the same channel; nothing is silently dropped.
+pub type Reply = Result<Value, ServeError>;
+
+/// One queued inference request. The responder is the caller's half of
+/// a rendezvous channel; whoever consumes the request (worker, shed
+/// path, shutdown drain) must answer it.
+pub struct Request {
+    pub id: u64,
+    pub tenant: String,
+    pub x: Value,
+    /// Absolute deadline; past it the request is dropped before any
+    /// GEMM and answered `DeadlineExceeded`.
+    pub deadline: Instant,
+    pub responder: mpsc::Sender<Reply>,
+}
+
+impl Request {
+    /// Answer this request. A disconnected receiver (caller gave up)
+    /// is fine — the reply is dropped on the floor by the channel, not
+    /// by us.
+    pub fn reply(self, r: Reply) {
+        let _ = self.responder.send(r);
+    }
+}
+
+/// Typed serving failures. Every refusal the server can produce is one
+/// of these — the chaos soak asserts no other outcome exists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Queue depth hit the (possibly degraded) watermark; the newest
+    /// request is shed rather than growing the queue.
+    Overloaded { depth: usize, watermark: usize },
+    /// The deadline passed before the forward walk started. `stage`
+    /// says where it was caught (`"queued"` / `"pre-gemm"`).
+    DeadlineExceeded { stage: &'static str },
+    /// Tenant was never registered.
+    TenantUnknown { tenant: String },
+    /// Tenant's last adapter swap was rejected (manifest/CRC) and the
+    /// tenant is quarantined until a valid swap lands.
+    TenantQuarantined { tenant: String, reason: String },
+    /// The forward walk panicked; the batch was isolated and the
+    /// worker replaced.
+    PanicInForward,
+    /// Server is shutting down; the request was drained unserved.
+    ShuttingDown,
+    /// The backend refused the forward (shape/preset mismatch, ...).
+    Infer(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { depth, watermark } => {
+                write!(f, "overloaded: queue depth {depth} at watermark \
+                           {watermark}")
+            }
+            ServeError::DeadlineExceeded { stage } => {
+                write!(f, "deadline exceeded ({stage})")
+            }
+            ServeError::TenantUnknown { tenant } => {
+                write!(f, "unknown tenant {tenant:?}")
+            }
+            ServeError::TenantQuarantined { tenant, reason } => {
+                write!(f, "tenant {tenant:?} quarantined: {reason}")
+            }
+            ServeError::PanicInForward => {
+                write!(f, "forward walk panicked; worker replaced")
+            }
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+            ServeError::Infer(e) => write!(f, "inference failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

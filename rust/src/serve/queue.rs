@@ -1,0 +1,341 @@
+//! Bounded MPMC request queue with per-tenant fairness.
+//!
+//! One lane (FIFO `VecDeque`) per tenant; `pop` round-robins over the
+//! non-empty lanes so a tenant flooding requests cannot starve the
+//! others. Admission is watermark-gated: once total depth reaches the
+//! watermark the *newest* request is shed with a typed
+//! [`ServeError::Overloaded`] answered straight into its responder —
+//! depth is bounded by construction and nothing is dropped silently.
+//! The watermark each push checks is a parameter (not the stored
+//! capacity) because the degradation ladder shrinks it under sustained
+//! overload.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::obs::{self, Counter};
+
+use super::{Request, ServeError};
+
+struct Inner {
+    lanes: BTreeMap<String, VecDeque<Request>>,
+    depth: usize,
+    max_depth_seen: usize,
+    /// Round-robin position over the (sorted) non-empty lanes.
+    cursor: usize,
+    closed: bool,
+}
+
+pub struct BoundedQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    watermark: usize,
+}
+
+impl BoundedQueue {
+    pub fn new(watermark: usize) -> BoundedQueue {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                lanes: BTreeMap::new(),
+                depth: 0,
+                max_depth_seen: 0,
+                cursor: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            watermark: watermark.max(1),
+        }
+    }
+
+    /// Configured (full) watermark.
+    pub fn watermark(&self) -> usize {
+        self.watermark
+    }
+
+    /// Admit `req`, or shed it. `effective_watermark` is the ladder's
+    /// current admission limit (≤ the configured watermark; clamped to
+    /// it here so degradation can only tighten admission). A shed
+    /// request is answered `Overloaded` through its own responder
+    /// before this returns.
+    pub fn push(&self, req: Request, effective_watermark: usize)
+                -> Result<(), ServeError> {
+        let wm = effective_watermark.clamp(1, self.watermark);
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            drop(g);
+            let e = ServeError::ShuttingDown;
+            req.reply(Err(e.clone()));
+            return Err(e);
+        }
+        if g.depth >= wm {
+            let e = ServeError::Overloaded { depth: g.depth, watermark: wm };
+            drop(g);
+            obs::count(Counter::ServeShed, 1);
+            req.reply(Err(e.clone()));
+            return Err(e);
+        }
+        g.depth += 1;
+        g.max_depth_seen = g.max_depth_seen.max(g.depth);
+        g.lanes.entry(req.tenant.clone()).or_default().push_back(req);
+        drop(g);
+        obs::count(Counter::ServeRequests, 1);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Next request, round-robin across tenants; blocks up to `timeout`
+    /// when empty. `None` = timed out with nothing queued, or closed
+    /// and drained.
+    pub fn pop(&self, timeout: Duration) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = Self::take_next(&mut g) {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            let (ng, wait) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = ng;
+            if wait.timed_out() {
+                return Self::take_next(&mut g);
+            }
+        }
+    }
+
+    /// Non-blocking: up to `max` more requests from the *front* of
+    /// `tenant`'s lane whose inputs match `shape`/`f32ness` — the
+    /// batcher's coalescing feed. Taking only matching front entries
+    /// keeps per-tenant FIFO order intact.
+    pub fn pop_same(&self, tenant: &str, shape: &[usize], is_f32: bool,
+                    max: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut g = self.inner.lock().unwrap();
+        if let Some(lane) = g.lanes.get_mut(tenant) {
+            while out.len() < max {
+                let matches = lane
+                    .front()
+                    .map(|r| {
+                        r.x.shape() == shape
+                            && matches!(r.x, crate::runtime::value::Value::F32
+                                        { .. }) == is_f32
+                    })
+                    .unwrap_or(false);
+                if !matches {
+                    break;
+                }
+                out.push(lane.pop_front().expect("front just matched"));
+            }
+        }
+        g.depth -= out.len();
+        out
+    }
+
+    /// Stop admitting; wake every waiter. Queued requests remain for
+    /// `drain` (or for workers that race us to them).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Remove and return everything still queued (shutdown path: the
+    /// caller answers each with `ShuttingDown`).
+    pub fn drain(&self) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (_, lane) in g.lanes.iter_mut() {
+            out.extend(lane.drain(..));
+        }
+        g.depth = 0;
+        out
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().depth
+    }
+
+    /// High-water mark over the queue's lifetime — the chaos soak
+    /// asserts this never exceeded the watermark.
+    pub fn max_depth_seen(&self) -> usize {
+        self.inner.lock().unwrap().max_depth_seen
+    }
+
+    fn take_next(g: &mut Inner) -> Option<Request> {
+        let nonempty: Vec<String> = g
+            .lanes
+            .iter()
+            .filter(|(_, l)| !l.is_empty())
+            .map(|(t, _)| t.clone())
+            .collect();
+        if nonempty.is_empty() {
+            return None;
+        }
+        let t = &nonempty[g.cursor % nonempty.len()];
+        g.cursor = g.cursor.wrapping_add(1);
+        let r = g.lanes.get_mut(t).expect("lane exists").pop_front();
+        g.depth -= 1;
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::{self, Receiver};
+    use std::time::Instant;
+
+    use crate::runtime::value::Value;
+    use crate::util::prng::Pcg32;
+
+    use super::*;
+
+    /// A request whose payload encodes (tenant, sequence number) so
+    /// ordering properties are checkable after the fact.
+    fn req(tenant: &str, seq: usize) -> (Request, Receiver<super::super::Reply>) {
+        let (tx, rx) = mpsc::channel();
+        let r = Request {
+            id: seq as u64,
+            tenant: tenant.to_string(),
+            x: Value::F32 { shape: vec![1, 1], data: vec![seq as f32] },
+            deadline: Instant::now() + Duration::from_secs(60),
+            responder: tx,
+        };
+        (r, rx)
+    }
+
+    #[test]
+    fn per_tenant_fifo_under_random_interleavings() {
+        // property: however pushes interleave across tenants, each
+        // tenant's requests pop in push order
+        for seed in 0..8u64 {
+            let mut rng = Pcg32::seeded(seed);
+            let q = BoundedQueue::new(1024);
+            let tenants = ["a", "b", "c"];
+            let mut next_seq = [0usize; 3];
+            let mut rxs = Vec::new();
+            for _ in 0..90 {
+                let t = (rng.next_u32() % 3) as usize;
+                let (r, rx) = req(tenants[t], next_seq[t]);
+                next_seq[t] += 1;
+                q.push(r, 1024).unwrap();
+                rxs.push(rx);
+            }
+            let mut last_seen = [None::<u64>; 3];
+            while let Some(r) =
+                q.pop(Duration::from_millis(1))
+            {
+                let t = tenants.iter().position(|x| *x == r.tenant).unwrap();
+                if let Some(prev) = last_seen[t] {
+                    assert!(r.id > prev,
+                            "seed {seed}: tenant {} popped {} after {}",
+                            r.tenant, r.id, prev);
+                }
+                last_seen[t] = Some(r.id);
+            }
+            assert_eq!(q.depth(), 0);
+        }
+    }
+
+    #[test]
+    fn depth_never_exceeds_watermark_and_shed_is_typed() {
+        let wm = 16;
+        let q = BoundedQueue::new(wm);
+        let mut accepted = 0;
+        let mut shed_rxs = Vec::new();
+        for i in 0..3 * wm {
+            let (r, rx) = req("t", i);
+            match q.push(r, wm) {
+                Ok(()) => accepted += 1,
+                Err(ServeError::Overloaded { depth, watermark }) => {
+                    assert_eq!(watermark, wm);
+                    assert!(depth <= wm);
+                    shed_rxs.push(rx);
+                }
+                Err(e) => panic!("unexpected shed error {e}"),
+            }
+            assert!(q.depth() <= wm, "depth {} > watermark", q.depth());
+        }
+        assert_eq!(accepted, wm);
+        assert_eq!(q.max_depth_seen(), wm);
+        // never silent: every shed request already holds its typed error
+        for rx in shed_rxs {
+            match rx.try_recv() {
+                Ok(Err(ServeError::Overloaded { .. })) => {}
+                other => panic!("shed reply missing or wrong: {other:?}"),
+            }
+        }
+        // the ladder can only tighten admission, never widen past the cap
+        let (r, _rx) = req("t", 999);
+        assert!(matches!(q.push(r, 10 * wm),
+                         Err(ServeError::Overloaded { watermark, .. })
+                         if watermark == wm));
+    }
+
+    #[test]
+    fn round_robin_is_fair_across_three_tenants() {
+        let q = BoundedQueue::new(1024);
+        let mut rxs = Vec::new();
+        for i in 0..30 {
+            for t in ["a", "b", "c"] {
+                let (r, rx) = req(t, i);
+                q.push(r, 1024).unwrap();
+                rxs.push(rx);
+            }
+        }
+        // all three lanes stay non-empty until the tail, so pops must
+        // cycle: per-tenant served counts never diverge by more than 1
+        let mut served = BTreeMap::new();
+        for _ in 0..90 {
+            let r = q.pop(Duration::from_millis(1)).expect("queued");
+            *served.entry(r.tenant.clone()).or_insert(0usize) += 1;
+            let lo = served.values().copied().min().unwrap();
+            let hi = served.values().copied().max().unwrap();
+            assert!(hi - lo <= 1, "unfair window: {served:?}");
+        }
+        assert_eq!(served.len(), 3);
+        assert!(served.values().all(|n| *n == 30));
+    }
+
+    #[test]
+    fn pop_same_takes_only_matching_front_runs() {
+        let q = BoundedQueue::new(64);
+        let (r0, _k0) = req("t", 0);
+        let (r1, _k1) = req("t", 1);
+        q.push(r0, 64).unwrap();
+        q.push(r1, 64).unwrap();
+        // an odd-shaped request in the middle fences the run
+        let (tx, _rx) = mpsc::channel();
+        q.push(Request {
+            id: 2,
+            tenant: "t".into(),
+            x: Value::F32 { shape: vec![1, 2], data: vec![0.0; 2] },
+            deadline: Instant::now() + Duration::from_secs(60),
+            responder: tx,
+        }, 64).unwrap();
+        let (r3, _k3) = req("t", 3);
+        q.push(r3, 64).unwrap();
+        let run = q.pop_same("t", &[1, 1], true, 8);
+        assert_eq!(run.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.depth(), 2, "fence and its successor stay queued");
+    }
+
+    #[test]
+    fn close_then_drain_hands_back_everything() {
+        let q = BoundedQueue::new(8);
+        let (r, _rx) = req("t", 0);
+        q.push(r, 8).unwrap();
+        q.close();
+        // closed queue sheds with ShuttingDown, typed as ever
+        let (r2, rx2) = req("t", 1);
+        assert!(matches!(q.push(r2, 8), Err(ServeError::ShuttingDown)));
+        assert!(matches!(rx2.try_recv(), Ok(Err(ServeError::ShuttingDown))));
+        let rest = q.drain();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(q.depth(), 0);
+        assert!(q.pop(Duration::from_millis(1)).is_none());
+    }
+}

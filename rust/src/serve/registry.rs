@@ -1,0 +1,266 @@
+//! Tenant/adapter registry: who may be served, and with which weights.
+//!
+//! Every tenant starts on a `share()`d view of one base `WeightStore`
+//! — registration builds an (empty-overlay) `AdapterSet` over the base,
+//! which proves the slabs alias (`Arc` bump, `AdapterBytes` accounting)
+//! rather than copy. A tenant can then *hot-swap* to its own weights
+//! from a checkpoint: the load goes through the manifest/CRC
+//! verification path (`Checkpoint::load_verified`), so a corrupt blob
+//! yields a typed [`RejectReason`], the tenant is **quarantined** (its
+//! requests answered `TenantQuarantined` until a valid swap lands),
+//! and the process — and every other tenant — keeps serving.
+//!
+//! The `corrupt-adapter:<tenant>` fault plan injects rot at exactly
+//! this boundary: the hook flips one byte of the on-disk params blob
+//! before verification, which the CRC pass must catch.
+
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+use anyhow::{Context, Result};
+
+use crate::backend::state::{AdapterSet, WeightStore};
+use crate::coordinator::Checkpoint;
+use crate::resilience::fault;
+use crate::runtime::manifest::TensorSpec;
+
+use super::ServeError;
+
+/// A tenant as the serving fast-path sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TenantState {
+    Active,
+    Quarantined { reason: String },
+}
+
+struct TenantEntry {
+    /// Proof-of-sharing handle over the base (kept alive so the
+    /// adapter-byte accounting reflects the tenant's residency).
+    _adapter: AdapterSet,
+    /// What workers actually serve: the base share, or the tenant's
+    /// own verified weights after a hot-swap.
+    weights: WeightStore,
+    /// Bumped on every successful hot-swap.
+    generation: u64,
+    quarantined: Option<String>,
+}
+
+pub struct Registry {
+    base: WeightStore,
+    preset: String,
+    specs: Vec<TensorSpec>,
+    tenants: RwLock<BTreeMap<String, TenantEntry>>,
+}
+
+impl Registry {
+    /// `base` is the store every registered tenant initially shares;
+    /// `preset` pins which checkpoints are swappable in.
+    pub fn new(base: WeightStore, preset: &str) -> Registry {
+        let specs = base.specs().to_vec();
+        Registry {
+            base,
+            preset: preset.to_string(),
+            specs,
+            tenants: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn preset(&self) -> &str {
+        &self.preset
+    }
+
+    /// Register `tenant` on the shared base. The `AdapterSet` is the
+    /// sharing proof: its base is an `Arc` bump of ours, never a copy.
+    pub fn register(&self, tenant: &str) -> Result<()> {
+        let adapter = AdapterSet::new(&self.base, Vec::new(), Vec::new())
+            .with_context(|| format!("registering tenant {tenant:?}"))?;
+        self.tenants.write().unwrap().insert(tenant.to_string(),
+                                             TenantEntry {
+                                                 _adapter: adapter,
+                                                 weights: self.base.share(),
+                                                 generation: 0,
+                                                 quarantined: None,
+                                             });
+        Ok(())
+    }
+
+    /// Hot-swap `tenant` onto the checkpoint at `header`, fully
+    /// verified before it becomes visible to any worker. Rejection
+    /// (torn blob, CRC mismatch, preset mismatch, ...) quarantines the
+    /// tenant with the typed reason; the previous weights are gone
+    /// only on success. Returns the new generation.
+    pub fn swap_from_checkpoint(&self, tenant: &str, header: &str)
+                                -> Result<u64, ServeError> {
+        // ensure the tenant exists before touching the filesystem
+        if self.state(tenant).is_none() {
+            return Err(ServeError::TenantUnknown { tenant: tenant.into() });
+        }
+        // fault injection: rot one byte of the params blob on disk so
+        // the CRC pass below has something real to catch
+        if fault::corrupt_adapter(tenant) {
+            let blob = header.replace(".json", ".params.bin");
+            if let Ok(mut bytes) = std::fs::read(&blob) {
+                if !bytes.is_empty() {
+                    let mid = bytes.len() / 2;
+                    bytes[mid] ^= 0x01;
+                    let _ = std::fs::write(&blob, bytes);
+                }
+            }
+        }
+        let verdict = Checkpoint::load_verified(header, &self.specs);
+        let mut g = self.tenants.write().unwrap();
+        let e = g.get_mut(tenant).expect("existence checked above");
+        match verdict {
+            Ok((ck, _man)) if ck.preset == self.preset => {
+                e.weights = ck.weights;
+                e.generation += 1;
+                e.quarantined = None;
+                Ok(e.generation)
+            }
+            Ok((ck, _)) => {
+                let reason = format!("checkpoint preset {} != serving \
+                                      preset {}", ck.preset, self.preset);
+                e.quarantined = Some(reason.clone());
+                Err(ServeError::TenantQuarantined { tenant: tenant.into(),
+                                                    reason })
+            }
+            Err(reject) => {
+                let reason = reject.to_string();
+                e.quarantined = Some(reason.clone());
+                Err(ServeError::TenantQuarantined { tenant: tenant.into(),
+                                                    reason })
+            }
+        }
+    }
+
+    /// The weights to serve `tenant` with (a `share()`, never a copy)
+    /// plus their generation — or the typed reason there are none.
+    pub fn weights(&self, tenant: &str)
+                   -> Result<(WeightStore, u64), ServeError> {
+        let g = self.tenants.read().unwrap();
+        match g.get(tenant) {
+            None => Err(ServeError::TenantUnknown { tenant: tenant.into() }),
+            Some(e) => match &e.quarantined {
+                Some(reason) => {
+                    Err(ServeError::TenantQuarantined {
+                        tenant: tenant.into(),
+                        reason: reason.clone(),
+                    })
+                }
+                None => Ok((e.weights.share(), e.generation)),
+            },
+        }
+    }
+
+    pub fn state(&self, tenant: &str) -> Option<TenantState> {
+        self.tenants.read().unwrap().get(tenant).map(|e| {
+            match &e.quarantined {
+                Some(r) => TenantState::Quarantined { reason: r.clone() },
+                None => TenantState::Active,
+            }
+        })
+    }
+
+    pub fn tenants(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use crate::backend::{Executor, NativeBackend};
+    use crate::resilience::fault::FaultPlan;
+
+    use super::*;
+
+    fn fresh_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("hot_serve_reg_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn base_store() -> WeightStore {
+        NativeBackend::new().init_store("lm_tiny").unwrap()
+    }
+
+    fn save_ckpt(dir: &std::path::Path, weights: &WeightStore) -> String {
+        let specs = weights.specs().to_vec();
+        let zeros: Vec<_> = specs
+            .iter()
+            .map(|s| crate::runtime::value::Value::F32 {
+                shape: s.shape.clone(),
+                data: vec![0.0; s.numel()],
+            })
+            .collect();
+        let ck = Checkpoint {
+            step: 1,
+            preset: "lm_tiny".into(),
+            variant: "hot".into(),
+            weights: weights.share(),
+            m: zeros.clone(),
+            v: zeros,
+        };
+        ck.save(dir.to_str().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn tenants_share_one_base_without_copying() {
+        let base = base_store();
+        let id = base.id(base.specs()[0].name.as_str()).unwrap();
+        let reg = Registry::new(base.share(), "lm_tiny");
+        for t in ["a", "b", "c"] {
+            reg.register(t).unwrap();
+        }
+        for t in ["a", "b", "c"] {
+            let (w, g) = reg.weights(t).unwrap();
+            assert_eq!(g, 0);
+            assert!(Arc::ptr_eq(w.slab_arc(id), base.slab_arc(id)),
+                    "tenant {t} should alias the base slabs");
+        }
+        assert!(matches!(reg.weights("nobody"),
+                         Err(ServeError::TenantUnknown { .. })));
+    }
+
+    #[test]
+    fn hot_swap_verifies_and_corruption_quarantines_not_kills() {
+        let _l = fault::test_lock();
+        fault::disarm();
+        let base = base_store();
+        let dir = fresh_dir("swap");
+        let header = save_ckpt(&dir, &base);
+        let reg = Registry::new(base.share(), "lm_tiny");
+        reg.register("good").unwrap();
+        reg.register("victim").unwrap();
+
+        // clean swap: generation bumps, tenant stays active
+        assert_eq!(reg.swap_from_checkpoint("good", &header).unwrap(), 1);
+        assert_eq!(reg.state("good"), Some(TenantState::Active));
+
+        // corrupt swap: the fault hook rots the blob, CRC catches it,
+        // the tenant quarantines — and only that tenant
+        fault::arm(FaultPlan::CorruptAdapter { tenant: "victim".into() });
+        let err = reg.swap_from_checkpoint("victim", &header).unwrap_err();
+        assert!(matches!(err, ServeError::TenantQuarantined { .. }), "{err}");
+        assert!(matches!(reg.state("victim"),
+                         Some(TenantState::Quarantined { .. })));
+        assert!(matches!(reg.weights("victim"),
+                         Err(ServeError::TenantQuarantined { .. })));
+        assert!(reg.weights("good").is_ok(), "blast radius is one tenant");
+        fault::disarm();
+
+        // a later valid swap lifts the quarantine
+        let header2 = save_ckpt(&fresh_dir("swap2"), &base);
+        assert_eq!(reg.swap_from_checkpoint("victim", &header2).unwrap(), 1);
+        assert_eq!(reg.state("victim"), Some(TenantState::Active));
+    }
+
+    #[test]
+    fn swapping_an_unknown_tenant_is_typed() {
+        let base = base_store();
+        let reg = Registry::new(base, "lm_tiny");
+        assert!(matches!(reg.swap_from_checkpoint("ghost", "nope.json"),
+                         Err(ServeError::TenantUnknown { .. })));
+    }
+}

@@ -1,0 +1,594 @@
+//! The serving loop: a worker pool pulling deadline-aware batches off
+//! the bounded queue and answering every request with exactly one
+//! typed reply.
+//!
+//! Failure containment, per worker batch:
+//! - tenant resolution happens *after* expiry filtering, so a dead
+//!   request never costs a registry read, let alone a GEMM;
+//! - the forward walk runs under `catch_unwind`: a panic answers the
+//!   whole batch [`ServeError::PanicInForward`], then the worker
+//!   replaces itself with a fresh thread (fresh executor state, fresh
+//!   thread-locals) and retires — poisoned workers never serve again;
+//! - the degradation ladder is consulted on every loop: it shrinks the
+//!   batch window, flips batches onto `Executor::infer_degraded`
+//!   (INT8 GEMM tiers), and tightens the admission watermark, in that
+//!   order, under sustained overload.
+//!
+//! Each worker owns its own `NativeBackend` (the `Executor` trait is
+//! deliberately not `Sync`); model state shares across workers through
+//! the registry's `Arc`-slabbed `WeightStore`s, so N workers cost N
+//! preset tables, not N weight copies.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::{Executor, NativeBackend};
+use crate::obs::{self, Counter};
+use crate::resilience::fault;
+use crate::runtime::value::Value;
+
+use super::batcher::{self, Batch, BatchCfg};
+use super::degrade::{Ladder, LadderCfg};
+use super::queue::BoundedQueue;
+use super::registry::{Registry, TenantState};
+use super::{Reply, Request, ServeError};
+
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Preset every tenant serves (`infer_{preset}`).
+    pub preset: String,
+    /// Queue watermark: total queued requests never exceed this.
+    pub max_queue: usize,
+    /// Default per-request deadline (`submit`; `submit_with_deadline`
+    /// overrides per request).
+    pub deadline: Duration,
+    /// Coalescing cap per forward walk.
+    pub max_batch: usize,
+    /// Batch collection window at the Normal rung.
+    pub window: Duration,
+    /// Worker threads.
+    pub workers: usize,
+    pub ladder: LadderCfg,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            preset: "lm_tiny".into(),
+            max_queue: 256,
+            deadline: Duration::from_secs(1),
+            max_batch: 8,
+            window: Duration::from_millis(2),
+            workers: 2,
+            ladder: LadderCfg::default(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct AtomicStats {
+    submitted: AtomicU64,
+    served: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    refused: AtomicU64,
+    panics: AtomicU64,
+    batches: AtomicU64,
+    degraded_batches: AtomicU64,
+    replaced: AtomicU64,
+}
+
+/// A consistent snapshot of the server's counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    /// Requests answered with logits.
+    pub served: u64,
+    /// Requests shed at admission (`Overloaded` / `ShuttingDown`).
+    pub shed: u64,
+    /// Requests expired before reaching a GEMM.
+    pub expired: u64,
+    /// Requests refused for tenant reasons (unknown / quarantined).
+    pub refused: u64,
+    /// Batches lost to a forward-walk panic.
+    pub panics: u64,
+    pub batches: u64,
+    pub degraded_batches: u64,
+    pub workers_replaced: u64,
+    /// Queue high-water mark (≤ `max_queue` by construction).
+    pub queue_max_depth: usize,
+}
+
+struct Shared {
+    cfg: ServeCfg,
+    q: BoundedQueue,
+    reg: Registry,
+    ladder: Mutex<Ladder>,
+    next_id: AtomicU64,
+    shutting_down: AtomicBool,
+    stats: AtomicStats,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+pub struct Server {
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Spin up the worker pool. The registry decides who can be
+    /// served; the server only moves requests.
+    pub fn start(reg: Registry, cfg: ServeCfg) -> Server {
+        let shared = Arc::new(Shared {
+            q: BoundedQueue::new(cfg.max_queue),
+            ladder: Mutex::new(Ladder::new(cfg.ladder)),
+            reg,
+            next_id: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            stats: AtomicStats::default(),
+            workers: Mutex::new(Vec::new()),
+            cfg,
+        });
+        for i in 0..shared.cfg.workers.max(1) {
+            spawn_worker(&shared, i);
+        }
+        Server { shared }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.shared.reg
+    }
+
+    /// Submit with the configured default deadline.
+    pub fn submit(&self, tenant: &str, x: Value) -> mpsc::Receiver<Reply> {
+        self.submit_with_deadline(tenant, x, self.shared.cfg.deadline)
+    }
+
+    /// Submit a request; the receiver yields exactly one [`Reply`].
+    /// Refusals (unknown/quarantined tenant, overload, shutdown) are
+    /// answered immediately — the caller never hangs on a request that
+    /// was never admitted.
+    pub fn submit_with_deadline(&self, tenant: &str, x: Value,
+                                deadline: Duration)
+                                -> mpsc::Receiver<Reply> {
+        let sh = &self.shared;
+        let (tx, rx) = mpsc::channel();
+        sh.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        if sh.shutting_down.load(Ordering::SeqCst) {
+            sh.stats.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(ServeError::ShuttingDown));
+            return rx;
+        }
+        match sh.reg.state(tenant) {
+            Some(TenantState::Active) => {}
+            Some(TenantState::Quarantined { reason }) => {
+                sh.stats.refused.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Err(ServeError::TenantQuarantined {
+                    tenant: tenant.into(),
+                    reason,
+                }));
+                return rx;
+            }
+            None => {
+                sh.stats.refused.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Err(ServeError::TenantUnknown {
+                    tenant: tenant.into(),
+                }));
+                return rx;
+            }
+        }
+        let eff = {
+            let mut l = sh.ladder.lock().unwrap();
+            l.observe(sh.q.depth(), sh.q.watermark(), Instant::now());
+            l.effective_watermark(sh.q.watermark())
+        };
+        let req = Request {
+            id: sh.next_id.fetch_add(1, Ordering::Relaxed),
+            tenant: tenant.to_string(),
+            x,
+            deadline: Instant::now() + deadline,
+            responder: tx,
+        };
+        // a failed push already answered the request with its typed
+        // error; nothing to do here but account for it
+        if sh.q.push(req, eff).is_err() {
+            sh.stats.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        rx
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let s = &self.shared.stats;
+        ServeStats {
+            submitted: s.submitted.load(Ordering::Relaxed),
+            served: s.served.load(Ordering::Relaxed),
+            shed: s.shed.load(Ordering::Relaxed),
+            expired: s.expired.load(Ordering::Relaxed),
+            refused: s.refused.load(Ordering::Relaxed),
+            panics: s.panics.load(Ordering::Relaxed),
+            batches: s.batches.load(Ordering::Relaxed),
+            degraded_batches: s.degraded_batches.load(Ordering::Relaxed),
+            workers_replaced: s.replaced.load(Ordering::Relaxed),
+            queue_max_depth: self.shared.q.max_depth_seen(),
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.q.depth()
+    }
+
+    /// Stop admitting, answer everything still queued with
+    /// [`ServeError::ShuttingDown`], finish in-flight batches and join
+    /// every worker (including replacements spawned mid-shutdown).
+    pub fn shutdown(&self) {
+        let sh = &self.shared;
+        sh.shutting_down.store(true, Ordering::SeqCst);
+        sh.q.close();
+        for r in sh.q.drain() {
+            sh.stats.shed.fetch_add(1, Ordering::Relaxed);
+            r.reply(Err(ServeError::ShuttingDown));
+        }
+        loop {
+            let handles: Vec<JoinHandle<()>> = {
+                let mut g = sh.workers.lock().unwrap();
+                g.drain(..).collect()
+            };
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn spawn_worker(sh: &Arc<Shared>, idx: usize) {
+    let sh2 = Arc::clone(sh);
+    let h = std::thread::Builder::new()
+        .name(format!("hot-serve-{idx}"))
+        .spawn(move || worker_loop(sh2, idx))
+        .expect("spawning serve worker");
+    sh.workers.lock().unwrap().push(h);
+}
+
+fn worker_loop(sh: Arc<Shared>, idx: usize) {
+    let backend = NativeBackend::new();
+    let key = format!("infer_{}", sh.cfg.preset);
+    loop {
+        let window = {
+            let mut l = sh.ladder.lock().unwrap();
+            l.observe(sh.q.depth(), sh.q.watermark(), Instant::now());
+            l.window(sh.cfg.window)
+        };
+        let bcfg = BatchCfg { max_batch: sh.cfg.max_batch.max(1), window };
+        let (n_expired, maybe) = batcher::next_batch(&sh.q, &bcfg);
+        if n_expired > 0 {
+            sh.stats.expired.fetch_add(n_expired as u64, Ordering::Relaxed);
+        }
+        let Some(batch) = maybe else {
+            if sh.q.is_closed() {
+                return;
+            }
+            continue;
+        };
+        if serve_batch(&sh, &backend, &key, batch) {
+            // poisoned: hand the loop to a fresh thread (fresh executor,
+            // fresh thread-locals) and retire this one
+            obs::count(Counter::ServeWorkerReplaced, 1);
+            sh.stats.replaced.fetch_add(1, Ordering::Relaxed);
+            if !sh.q.is_closed() {
+                spawn_worker(&sh, idx);
+            }
+            return;
+        }
+    }
+}
+
+/// Serve one batch end to end; `true` means the forward walk panicked
+/// and this worker must be replaced.
+fn serve_batch(sh: &Shared, backend: &NativeBackend, key: &str,
+               batch: Batch) -> bool {
+    // expiry wall: nothing past its deadline reaches a GEMM
+    let now = Instant::now();
+    let (live, expired): (Vec<Request>, Vec<Request>) =
+        batch.reqs.into_iter().partition(|r| r.deadline > now);
+    for r in expired {
+        obs::count(Counter::ServeExpired, 1);
+        sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+        r.reply(Err(ServeError::DeadlineExceeded { stage: "pre-gemm" }));
+    }
+    if live.is_empty() {
+        return false;
+    }
+    let weights = match sh.reg.weights(&batch.tenant) {
+        Ok((w, _gen)) => w,
+        Err(e) => {
+            // tenant vanished or was quarantined after admission
+            sh.stats.refused.fetch_add(live.len() as u64, Ordering::Relaxed);
+            for r in live {
+                r.reply(Err(e.clone()));
+            }
+            return false;
+        }
+    };
+    if let Some(ms) = fault::slow_request() {
+        crate::warn_!("HOT_FAULT slow-request: stalling batch {ms}ms");
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+    let degraded = sh.ladder.lock().unwrap().int8();
+    let xs: Vec<&Value> = live.iter().map(|r| &r.x).collect();
+    let counts: Vec<usize> = live.iter().map(|r| r.x.shape()[0]).collect();
+    let x = match batcher::concat_rows(&xs) {
+        Ok(x) => x,
+        Err(e) => {
+            let msg = e.to_string();
+            for r in live {
+                r.reply(Err(ServeError::Infer(msg.clone())));
+            }
+            return false;
+        }
+    };
+    let out = catch_unwind(AssertUnwindSafe(|| {
+        if fault::panic_in_batch() {
+            panic!("HOT_FAULT panic-in-batch: injected forward panic");
+        }
+        if degraded {
+            backend.infer_degraded(key, &weights, &x)
+        } else {
+            backend.infer(key, &weights, &x)
+        }
+    }));
+    match out {
+        Ok(Ok(logits)) => match batcher::split_rows(&logits, &counts) {
+            Ok(parts) => {
+                obs::count(Counter::ServeBatches, 1);
+                sh.stats.batches.fetch_add(1, Ordering::Relaxed);
+                if degraded {
+                    obs::count(Counter::ServeDegraded, 1);
+                    sh.stats.degraded_batches.fetch_add(1, Ordering::Relaxed);
+                }
+                sh.stats.served.fetch_add(parts.len() as u64,
+                                          Ordering::Relaxed);
+                for (r, part) in live.into_iter().zip(parts) {
+                    r.reply(Ok(part));
+                }
+                false
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in live {
+                    r.reply(Err(ServeError::Infer(msg.clone())));
+                }
+                false
+            }
+        },
+        Ok(Err(e)) => {
+            let msg = e.to_string();
+            for r in live {
+                r.reply(Err(ServeError::Infer(msg.clone())));
+            }
+            false
+        }
+        Err(_) => {
+            // the panic payload already went to stderr via the hook;
+            // contain the blast radius to this batch + this worker
+            obs::count(Counter::ServePanics, 1);
+            sh.stats.panics.fetch_add(1, Ordering::Relaxed);
+            for r in live {
+                r.reply(Err(ServeError::PanicInForward));
+            }
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::LmDataset;
+    use crate::resilience::fault::FaultPlan;
+
+    use super::*;
+
+    const KEY: &str = "infer_lm_tiny";
+
+    fn registry(tenants: &[&str]) -> (NativeBackend, Registry) {
+        let b = NativeBackend::new();
+        let base = b.init_store("lm_tiny").unwrap();
+        let reg = Registry::new(base, "lm_tiny");
+        for t in tenants {
+            reg.register(t).unwrap();
+        }
+        (b, reg)
+    }
+
+    fn dataset() -> LmDataset {
+        let p = NativeBackend::new().preset("lm_tiny").unwrap();
+        LmDataset::new(p.model.seq, p.model.in_dim, 5)
+    }
+
+    fn recv(rx: &mpsc::Receiver<Reply>) -> Reply {
+        rx.recv_timeout(Duration::from_secs(20)).expect("reply within 20s")
+    }
+
+    #[test]
+    fn two_tenants_serve_bit_identically_and_shut_down_clean() {
+        let (b, reg) = registry(&["t0", "t1"]);
+        let base = b.init_store("lm_tiny").unwrap();
+        let ds = dataset();
+        let srv = Server::start(reg, ServeCfg {
+            workers: 2,
+            max_batch: 4,
+            window: Duration::from_millis(1),
+            ..ServeCfg::default()
+        });
+        let mut pending = Vec::new();
+        for i in 0..16u64 {
+            let (x, _) = ds.batch(1, i, 1);
+            let rx = srv.submit(if i % 2 == 0 { "t0" } else { "t1" },
+                                x.clone());
+            pending.push((x, rx));
+        }
+        for (x, rx) in &pending {
+            let got = recv(rx).expect("served");
+            let want = b.infer(KEY, &base, x).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            let (g, w) = (got.as_f32().unwrap(), want.as_f32().unwrap());
+            for (a, c) in g.iter().zip(w) {
+                assert_eq!(a.to_bits(), c.to_bits(),
+                           "served logits must be bit-identical");
+            }
+        }
+        let s = srv.stats();
+        assert_eq!(s.served, 16);
+        assert_eq!(s.shed + s.expired + s.panics + s.refused, 0);
+        srv.shutdown();
+        let (x, _) = ds.batch(1, 99, 1);
+        let rx = srv.submit("t0", x);
+        assert!(matches!(recv(&rx), Err(ServeError::ShuttingDown)));
+    }
+
+    #[test]
+    fn unknown_tenant_is_refused_typed() {
+        let (_b, reg) = registry(&["t0"]);
+        let srv = Server::start(reg, ServeCfg::default());
+        let (x, _) = dataset().batch(1, 0, 1);
+        let rx = srv.submit("ghost", x);
+        assert!(matches!(recv(&rx), Err(ServeError::TenantUnknown { .. })));
+        assert_eq!(srv.stats().refused, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_newest_with_typed_errors() {
+        let _l = fault::test_lock();
+        fault::disarm();
+        let (_b, reg) = registry(&["t"]);
+        let ds = dataset();
+        let srv = Server::start(reg, ServeCfg {
+            workers: 1,
+            max_queue: 2,
+            max_batch: 1,
+            ..ServeCfg::default()
+        });
+        // stall the worker on its first batch so the queue backs up
+        fault::arm(FaultPlan::SlowRequest { ms: 150 });
+        let mut pending = Vec::new();
+        let (x, _) = ds.batch(1, 0, 1);
+        pending.push(srv.submit("t", x));
+        std::thread::sleep(Duration::from_millis(60)); // worker is stalled
+        for i in 1..9u64 {
+            let (x, _) = ds.batch(1, i, 1);
+            pending.push(srv.submit("t", x));
+        }
+        let (mut ok, mut shed) = (0, 0);
+        for rx in &pending {
+            match recv(rx) {
+                Ok(v) => {
+                    assert!(v.as_f32().unwrap().iter()
+                            .all(|f| f.is_finite()));
+                    ok += 1;
+                }
+                Err(ServeError::Overloaded { depth, watermark }) => {
+                    assert!(depth <= 2 && watermark == 2);
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected refusal {e}"),
+            }
+        }
+        assert_eq!(ok + shed, 9);
+        assert!(shed >= 1, "watermark 2 must shed under a 150ms stall");
+        assert!(srv.stats().queue_max_depth <= 2);
+        fault::disarm();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_never_reach_a_gemm() {
+        let (_b, reg) = registry(&["t"]);
+        let srv = Server::start(reg, ServeCfg {
+            workers: 1,
+            max_batch: 1,
+            ..ServeCfg::default()
+        });
+        let (x, _) = dataset().batch(1, 0, 1);
+        let rx = srv.submit_with_deadline("t", x, Duration::ZERO);
+        assert!(matches!(recv(&rx),
+                         Err(ServeError::DeadlineExceeded { .. })));
+        let s = srv.stats();
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.served, 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn forward_panic_is_isolated_and_the_worker_replaced() {
+        let _l = fault::test_lock();
+        fault::disarm();
+        let (_b, reg) = registry(&["t"]);
+        let ds = dataset();
+        let srv = Server::start(reg, ServeCfg {
+            workers: 1,
+            max_batch: 1,
+            ..ServeCfg::default()
+        });
+        fault::arm(FaultPlan::PanicInBatch { n: 1 });
+        let (x, _) = ds.batch(1, 0, 1);
+        let rx = srv.submit("t", x);
+        assert!(matches!(recv(&rx), Err(ServeError::PanicInForward)));
+        // the replacement worker serves the next request normally
+        let (x, _) = ds.batch(1, 1, 1);
+        let rx = srv.submit("t", x);
+        assert!(recv(&rx).is_ok(), "replacement worker must serve");
+        let s = srv.stats();
+        assert_eq!(s.panics, 1);
+        assert_eq!(s.workers_replaced, 1);
+        fault::disarm();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn sustained_overload_degrades_to_int8_and_stays_alive() {
+        let _l = fault::test_lock();
+        fault::disarm();
+        let (_b, reg) = registry(&["t"]);
+        let ds = dataset();
+        let srv = Server::start(reg, ServeCfg {
+            workers: 1,
+            max_queue: 40,
+            max_batch: 1,
+            ladder: LadderCfg {
+                hi_frac: 0.0, // any depth is overload
+                lo_frac: 0.0,
+                escalate_after: Duration::ZERO,
+                deescalate_after: Duration::from_secs(60),
+            },
+            ..ServeCfg::default()
+        });
+        // stall the first batch, then pile on: every submit observes
+        // depth > 0 and climbs the ladder a rung
+        fault::arm(FaultPlan::SlowRequest { ms: 100 });
+        let mut pending = Vec::new();
+        for i in 0..12u64 {
+            let (x, _) = ds.batch(1, i, 1);
+            pending.push(srv.submit("t", x));
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        for rx in &pending {
+            match recv(rx) {
+                Ok(v) => assert!(v.as_f32().unwrap().iter()
+                                 .all(|f| f.is_finite()),
+                                 "degraded logits must stay finite"),
+                Err(ServeError::Overloaded { .. }) => {} // Shedding rung
+                Err(e) => panic!("unexpected refusal {e}"),
+            }
+        }
+        let s = srv.stats();
+        assert!(s.degraded_batches >= 1,
+                "sustained overload must reach the INT8 rung: {s:?}");
+        fault::disarm();
+        srv.shutdown();
+    }
+}

@@ -1,9 +1,17 @@
 //! Tiny CLI argument parser (clap is unavailable offline).
 //!
 //! Grammar: `prog SUBCOMMAND [--flag] [--key value] [positional...]`.
-//! Typed accessors with defaults; unknown-flag detection via `finish()`.
+//! Typed accessors with defaults; unknown-flag detection via `unused()`.
+//!
+//! A `--key` with no following value token parses as a bare flag; the
+//! value accessors turn that into a usage error naming the flag (so
+//! `hot train --threads` fails loudly instead of silently running with
+//! the default), and a malformed value (`--steps many`) is an error
+//! rather than a panic.
 
 use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -30,7 +38,8 @@ impl Args {
                 if let Some((k, v)) = key.split_once('=') {
                     out.kv.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.kv.insert(key.to_string(), it.next().unwrap());
+                    let v = it.next().expect("peeked");
+                    out.kv.insert(key.to_string(), v);
                 } else {
                     out.flags.push(key.to_string());
                 }
@@ -54,36 +63,61 @@ impl Args {
         self.flags.iter().any(|f| f == key)
     }
 
-    pub fn get(&self, key: &str) -> Option<&str> {
+    /// Value of `--key`. Usage error when `--key` was given bare (last
+    /// on the line, or directly followed by another `--flag`).
+    pub fn get(&self, key: &str) -> Result<Option<&str>> {
+        self.mark(key);
+        if let Some(v) = self.kv.get(key) {
+            return Ok(Some(v.as_str()));
+        }
+        if self.flags.iter().any(|f| f == key) {
+            bail!("usage: --{key} expects a value but none was given");
+        }
+        Ok(None)
+    }
+
+    /// Value of `--key` when one was given; `None` both when absent
+    /// and when `--key` appeared bare — for flags like `--resume`
+    /// where the bare form is itself meaningful.
+    pub fn get_optional(&self, key: &str) -> Option<&str> {
         self.mark(key);
         self.kv.get(key).map(|s| s.as_str())
     }
 
-    pub fn str_or(&self, key: &str, default: &str) -> String {
-        self.get(key).unwrap_or(default).to_string()
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        Ok(self.get(key)?.unwrap_or(default).to_string())
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key)? {
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("usage: --{key} wants an integer, got {v:?}")
+            }),
+            None => Ok(default),
+        }
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key)? {
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("usage: --{key} wants an integer, got {v:?}")
+            }),
+            None => Ok(default),
+        }
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number")))
-            .unwrap_or(default)
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key)? {
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("usage: --{key} wants a number, got {v:?}")
+            }),
+            None => Ok(default),
+        }
     }
 
     /// `--threads N` — the kernel-pool thread budget shared by every
     /// binary/bench (0 = one thread per available core).
-    pub fn threads(&self) -> usize {
+    pub fn threads(&self) -> Result<usize> {
         self.usize_or("threads", 0)
     }
 
@@ -111,8 +145,8 @@ mod tests {
     fn subcommand_and_kv() {
         let a = argv("train --steps 100 --preset small --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("train"));
-        assert_eq!(a.usize_or("steps", 1), 100);
-        assert_eq!(a.str_or("preset", "x"), "small");
+        assert_eq!(a.usize_or("steps", 1).unwrap(), 100);
+        assert_eq!(a.str_or("preset", "x").unwrap(), "small");
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
     }
@@ -120,28 +154,57 @@ mod tests {
     #[test]
     fn eq_form() {
         let a = argv("bench --lr=0.5 --steps=3");
-        assert_eq!(a.f64_or("lr", 0.0), 0.5);
-        assert_eq!(a.usize_or("steps", 0), 3);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 3);
     }
 
     #[test]
     fn positional() {
         let a = argv("run file1 file2 --n 2");
         assert_eq!(a.positional, vec!["file1", "file2"]);
-        assert_eq!(a.usize_or("n", 0), 2);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 2);
     }
 
     #[test]
     fn defaults() {
         let a = argv("x");
-        assert_eq!(a.usize_or("missing", 7), 7);
-        assert_eq!(a.str_or("missing", "d"), "d");
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.str_or("missing", "d").unwrap(), "d");
     }
 
     #[test]
     fn threads_knob() {
-        assert_eq!(argv("train --threads 3").threads(), 3);
-        assert_eq!(argv("train").threads(), 0);
+        assert_eq!(argv("train --threads 3").threads().unwrap(), 3);
+        assert_eq!(argv("train").threads().unwrap(), 0);
+    }
+
+    #[test]
+    fn dangling_value_flag_is_a_usage_error_naming_the_flag() {
+        // value-taking flag last on the command line
+        let err = argv("train --threads").threads().unwrap_err();
+        assert!(err.to_string().contains("--threads"), "{err}");
+        // value-taking flag swallowed by a following --flag
+        let a = argv("train --threads --verbose");
+        let err = a.threads().unwrap_err();
+        assert!(err.to_string().contains("--threads"), "{err}");
+        assert!(a.flag("verbose"), "following flag still parses");
+        // bare flags that never claim a value are untouched
+        assert!(argv("train --no-sentinel").flag("no-sentinel"));
+    }
+
+    #[test]
+    fn bad_value_is_an_error_not_a_panic() {
+        let err = argv("train --steps many").usize_or("steps", 1).unwrap_err();
+        assert!(err.to_string().contains("--steps"), "{err}");
+        assert!(argv("t --lr x").f64_or("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn optional_value_flag_allows_bare_form() {
+        assert_eq!(argv("train --resume ck.json").get_optional("resume"),
+                   Some("ck.json"));
+        assert_eq!(argv("train --resume").get_optional("resume"), None);
+        assert!(argv("train --resume").flag("resume"));
     }
 
     #[test]

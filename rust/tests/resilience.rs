@@ -32,6 +32,8 @@ fn resilience_suite() {
         ("kill_resume_is_bit_identical", kill_resume_is_bit_identical),
         ("nan_in_grad_rolls_back_and_finishes",
          nan_in_grad_rolls_back_and_finishes),
+        ("poisoned_checkpoint_yields_non_finite_logits",
+         poisoned_checkpoint_yields_non_finite_logits),
         ("scan_walks_past_multiple_bad_checkpoints",
          scan_walks_past_multiple_bad_checkpoints),
         ("io_error_retry_is_bounded", io_error_retry_is_bounded),
@@ -232,6 +234,40 @@ fn nan_in_grad_rolls_back_and_finishes(rt: Arc<dyn Executor>) {
         .map(|r| &r.loss).collect();
     assert!(finite.iter().all(|l| l.is_finite()), "{finite:?}");
     assert!(tr.weights.first_non_finite().is_none());
+}
+
+// ---------------------------------------------------------------------------
+// 4b. regression for `hot infer`'s non-finite guard: with the sentinel
+//     OFF, a nan-in-grad-at-step fault poisons AdamW state, the NaN
+//     walks into the weights over the following steps, and the final
+//     checkpoint reproduces it at inference time — exactly the
+//     condition `cmd_infer` turns into a nonzero exit (CI runs the
+//     binary form of this via HOT_FAULT)
+// ---------------------------------------------------------------------------
+
+fn poisoned_checkpoint_yields_non_finite_logits(rt: Arc<dyn Executor>) {
+    let dir = fresh_dir("poison");
+    let mut cfg = cfg_with_dir(&dir, 4, 0); // final checkpoint only
+    cfg.sentinel = false; // nothing rolls the poison back
+    fault::arm(FaultPlan::NanInGradAtStep { step: 2 });
+    let mut tr = Trainer::new(rt.clone(), cfg).unwrap();
+    tr.train().unwrap(); // steps 3..4 propagate NaN m into the weights
+    assert_eq!(tr.step, 4);
+    assert!(tr.weights.first_non_finite().is_some(),
+            "fault must leave a poisoned weight with the sentinel off");
+
+    let header = Checkpoint::latest(dir.to_str().unwrap())
+        .expect("final checkpoint written");
+    let ck = Checkpoint::load(&header, &tr.preset.params).unwrap();
+    let p = rt.preset("tiny").unwrap();
+    let ds = hot::data::VisionDataset::new(
+        p.model.seq, p.model.in_dim, p.model.n_classes, 5);
+    let logits = rt.infer("infer_tiny", &ck.weights, &ds.batch(1, 0, 4).0)
+        .unwrap();
+    let bad = logits.as_f32().unwrap().iter().find(|v| !v.is_finite());
+    assert!(bad.is_some(),
+            "poisoned checkpoint must surface a non-finite logit \
+             (the `hot infer` nonzero-exit condition)");
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,236 @@
+//! Chaos soak: hundreds of concurrent synthetic tenants driven through
+//! the serving stack under every serve-side `HOT_FAULT` plan, asserting
+//! the ISSUE-10 invariants end to end:
+//!
+//! - queue depth stays bounded by the watermark (high-water mark check)
+//! - every request gets exactly one reply, and every refusal is a
+//!   *typed* `ServeError` — nothing is silently dropped
+//! - served logits are bit-identical to an unloaded single-tenant run
+//!   (zero cross-tenant corruption)
+//! - a corrupt adapter blob quarantines one tenant, not the process
+//! - shutdown is clean: all workers join, late submits get
+//!   `ShuttingDown`
+//!
+//! The fault slot is process-global, so this binary runs everything as
+//! ONE sequential `#[test]` — arming a plan in parallel tests would
+//! race. (Separate test binaries are separate processes; they cannot
+//! interfere.)
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use hot::backend::{Executor, NativeBackend};
+use hot::coordinator::Checkpoint;
+use hot::data::LmDataset;
+use hot::resilience::fault::{self, FaultPlan};
+use hot::runtime::Value;
+use hot::serve::{LadderCfg, Registry, Reply, ServeCfg, ServeError, Server};
+
+const PRESET: &str = "lm_tiny";
+const KEY: &str = "infer_lm_tiny";
+const TENANTS: usize = 150;
+const PER_TENANT: usize = 2;
+const MAX_QUEUE: usize = 64;
+const SUBMITTERS: usize = 6;
+
+#[test]
+fn chaos_soak_under_every_serve_fault_plan() {
+    let plans: Vec<(&str, Option<FaultPlan>)> = vec![
+        ("none", None),
+        ("slow-request", Some(FaultPlan::SlowRequest { ms: 30 })),
+        ("panic-in-batch", Some(FaultPlan::PanicInBatch { n: 2 })),
+        ("corrupt-adapter",
+         Some(FaultPlan::CorruptAdapter { tenant: "tenant-3".into() })),
+    ];
+    for (name, plan) in plans {
+        let t0 = Instant::now();
+        fault::disarm();
+        let corrupt = name == "corrupt-adapter";
+        if let Some(p) = plan {
+            fault::arm(p);
+        }
+        soak(name, corrupt);
+        fault::disarm();
+        eprintln!("  ok chaos[{name}] ({:.1}s)",
+                  t0.elapsed().as_secs_f64());
+    }
+    zero_deadline_expires_before_any_gemm();
+    fault::disarm();
+}
+
+fn soak(plan: &str, corrupt: bool) {
+    let b = NativeBackend::new();
+    let base = b.init_store(PRESET).unwrap();
+    let p = b.preset(PRESET).unwrap();
+    let ds = LmDataset::new(p.model.seq, p.model.in_dim, 7);
+    let reg = Registry::new(base.share(), PRESET);
+    for t in 0..TENANTS {
+        reg.register(&format!("tenant-{t}")).unwrap();
+    }
+    let srv = Server::start(reg, ServeCfg {
+        preset: PRESET.into(),
+        max_queue: MAX_QUEUE,
+        deadline: Duration::from_secs(30),
+        max_batch: 8,
+        window: Duration::from_micros(500),
+        workers: 3,
+        // pin the ladder at Normal: the bit-identity assertion below
+        // compares against the full-precision walk
+        ladder: LadderCfg {
+            escalate_after: Duration::from_secs(120),
+            ..LadderCfg::default()
+        },
+    });
+
+    if corrupt {
+        // hot-swap tenant-3 through a checkpoint: the armed plan rots
+        // the on-disk blob, the CRC pass rejects it, and exactly this
+        // tenant quarantines — the process and every other tenant
+        // keep serving
+        let dir = std::env::temp_dir()
+            .join(format!("hot_chaos_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let zeros: Vec<Value> = base
+            .specs()
+            .iter()
+            .map(|s| Value::F32 { shape: s.shape.clone(),
+                                  data: vec![0.0; s.numel()] })
+            .collect();
+        let ck = Checkpoint {
+            step: 1,
+            preset: PRESET.into(),
+            variant: "hot".into(),
+            weights: base.share(),
+            m: zeros.clone(),
+            v: zeros,
+        };
+        let header = ck.save(dir.to_str().unwrap()).unwrap();
+        let err = srv
+            .registry()
+            .swap_from_checkpoint("tenant-3", &header)
+            .unwrap_err();
+        assert!(matches!(err, ServeError::TenantQuarantined { .. }),
+                "[{plan}] corrupt swap must quarantine, got {err}");
+    }
+
+    let n = TENANTS * PER_TENANT;
+    let xs: Vec<Value> =
+        (0..n).map(|i| ds.batch(1, (i % 64) as u64, 1).0).collect();
+
+    // hundreds of tenants submitting concurrently
+    let results: Vec<(usize, Instant, Receiver<Reply>)> =
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for chunk in 0..SUBMITTERS {
+                let (srv, xs) = (&srv, &xs);
+                handles.push(s.spawn(move || {
+                    let mut out = Vec::new();
+                    for t in (chunk..TENANTS).step_by(SUBMITTERS) {
+                        for r in 0..PER_TENANT {
+                            let i = t * PER_TENANT + r;
+                            let sent = Instant::now();
+                            let rx = srv.submit(&format!("tenant-{t}"),
+                                                xs[i].clone());
+                            out.push((i, sent, rx));
+                        }
+                    }
+                    out
+                }));
+            }
+            handles.into_iter()
+                .flat_map(|h| h.join().expect("submitter thread"))
+                .collect()
+        });
+    assert_eq!(results.len(), n);
+
+    let (mut served, mut shed, mut expired, mut panicked, mut quarantined) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    let mut lat: Vec<f64> = Vec::new();
+    for (i, sent, rx) in results {
+        let tenant = i / PER_TENANT;
+        // every request resolves — a lost reply fails the soak
+        let reply = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("[{plan}] reply {i} lost: {e}"));
+        match reply {
+            Ok(logits) => {
+                // zero cross-tenant corruption: bit-identical to the
+                // same input through an unloaded single-request run
+                let want = b.infer(KEY, &base, &xs[i]).unwrap();
+                assert_eq!(logits.shape(), want.shape());
+                for (g, w) in logits.as_f32().unwrap().iter()
+                    .zip(want.as_f32().unwrap())
+                {
+                    assert_eq!(g.to_bits(), w.to_bits(),
+                               "[{plan}] tenant-{tenant} req {i}: served \
+                                {g} != unloaded {w}");
+                }
+                served += 1;
+                lat.push(sent.elapsed().as_secs_f64());
+            }
+            Err(ServeError::Overloaded { depth, watermark }) => {
+                assert!(depth <= MAX_QUEUE && watermark <= MAX_QUEUE);
+                shed += 1;
+            }
+            Err(ServeError::DeadlineExceeded { .. }) => expired += 1,
+            Err(ServeError::PanicInForward) => {
+                assert_eq!(plan, "panic-in-batch",
+                           "panic reply outside the panic plan");
+                panicked += 1;
+            }
+            Err(ServeError::TenantQuarantined { tenant: qt, .. }) => {
+                assert!(corrupt && qt == "tenant-3",
+                        "[{plan}] unexpected quarantine of {qt:?}");
+                quarantined += 1;
+            }
+            Err(e) => panic!("[{plan}] untyped/unexpected refusal: {e}"),
+        }
+    }
+    // full accounting: every submission landed in exactly one bucket
+    assert_eq!(served + shed + expired + panicked + quarantined, n,
+               "[{plan}] replies unaccounted for");
+    assert!(served > 0, "[{plan}] nothing served");
+    if plan == "panic-in-batch" {
+        assert!(panicked >= 1, "armed panic never surfaced");
+        assert_eq!(srv.stats().workers_replaced, 1);
+    }
+    if corrupt {
+        assert_eq!(quarantined, PER_TENANT,
+                   "exactly tenant-3's requests are refused");
+    }
+
+    // bounded queue: the high-water mark never crossed the watermark
+    let stats = srv.stats();
+    assert!(stats.queue_max_depth <= MAX_QUEUE,
+            "[{plan}] depth {} > watermark {MAX_QUEUE}",
+            stats.queue_max_depth);
+
+    // p99 over served requests stays far inside the 30s deadline
+    lat.sort_by(f64::total_cmp);
+    let p99 = lat[((lat.len() - 1) as f64 * 0.99).round() as usize];
+    assert!(p99.is_finite() && p99 < 20.0, "[{plan}] p99 {p99}s");
+
+    // clean shutdown: workers join, late submits refused typed
+    srv.shutdown();
+    let rx = srv.submit("tenant-0", xs[0].clone());
+    assert!(matches!(rx.recv_timeout(Duration::from_secs(5)),
+                     Ok(Err(ServeError::ShuttingDown))));
+}
+
+fn zero_deadline_expires_before_any_gemm() {
+    let b = NativeBackend::new();
+    let base = b.init_store(PRESET).unwrap();
+    let p = b.preset(PRESET).unwrap();
+    let ds = LmDataset::new(p.model.seq, p.model.in_dim, 9);
+    let reg = Registry::new(base, PRESET);
+    reg.register("t").unwrap();
+    let srv = Server::start(reg, ServeCfg::default());
+    let (x, _) = ds.batch(1, 0, 1);
+    let rx = srv.submit_with_deadline("t", x, Duration::ZERO);
+    assert!(matches!(rx.recv_timeout(Duration::from_secs(5)),
+                     Ok(Err(ServeError::DeadlineExceeded { .. }))));
+    let s = srv.stats();
+    assert_eq!(s.expired, 1);
+    assert_eq!(s.served, 0, "an expired request must never reach a GEMM");
+    srv.shutdown();
+}
